@@ -1,0 +1,97 @@
+//! Cross-check the simulator against the paper's analytic coding-time
+//! models (eq. (1) and eq. (2)).
+//!
+//! For several (n, k) and block sizes on an idle TPC-preset cluster, run
+//! both archival strategies and compare measured times with
+//! `T_classical = τ_block · max{k, m−1}` and `T_pipe = τ_block + (n−1)·τ_pipe`.
+//!
+//! ```sh
+//! cargo run --release --example analytic_vs_measured
+//! ```
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend, Width};
+use rapidraid::cluster::{Cluster, ClusterSpec};
+use rapidraid::codes::rapidraid::RapidRaidCode;
+use rapidraid::codes::ClassicalCode;
+use rapidraid::coordinator::batch::rotated_chain;
+use rapidraid::coordinator::model::{t_classical, t_pipe, NetModel};
+use rapidraid::coordinator::{
+    archive_classical, archive_pipeline, ingest_object, ClassicalJob, PipelineJob,
+};
+use rapidraid::gf::{Gf256, GfElem};
+use rapidraid::storage::{ObjectId, ReplicaPlacement};
+
+const BUF: usize = 65536;
+
+fn main() -> anyhow::Result<()> {
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    println!("== analytic (eq. 1 / eq. 2) vs measured, idle TPC cluster ==");
+    println!(
+        "{:>8} {:>10} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
+        "(n,k)", "block", "eq1_cls", "meas_cls", "err", "eq2_pipe", "meas_pipe", "err"
+    );
+
+    for (n, k) in [(8usize, 4usize), (16, 11), (12, 8)] {
+        for block_mib in [1usize, 4] {
+            let block = block_mib << 20;
+            let spec = ClusterSpec::tpc(n);
+            let net = NetModel {
+                bytes_per_sec: spec.bytes_per_sec,
+                latency: spec.latency,
+            };
+            let predicted_cls = t_classical(&net, k, n - k, block);
+            let predicted_pipe = t_pipe(&net, n, block, BUF);
+
+            // measured classical
+            let cluster = Cluster::start(spec.clone());
+            let object = ObjectId(1);
+            let chain = rotated_chain(n, n, 0);
+            let placement = ReplicaPlacement::new(object, k, chain.clone())?;
+            ingest_object(&cluster, &placement, block)?;
+            let cls_code = ClassicalCode::<Gf256>::new(n, k)?;
+            let parity = cls_code.parity_matrix();
+            let job = ClassicalJob {
+                object,
+                width: Width::W8,
+                parity_rows: (0..parity.rows())
+                    .map(|i| parity.row(i).iter().map(|c| c.to_u32()).collect())
+                    .collect(),
+                source_nodes: chain[..k].to_vec(),
+                coding_node: chain[k],
+                parity_nodes: chain[k..].to_vec(),
+                buf_bytes: BUF,
+                block_bytes: block,
+            };
+            let meas_cls = archive_classical(&cluster, &backend, &job)?;
+
+            // measured pipelined
+            let cluster = Cluster::start(spec);
+            let object = ObjectId(2);
+            let placement = ReplicaPlacement::new(object, k, rotated_chain(n, n, 0))?;
+            ingest_object(&cluster, &placement, block)?;
+            let code = RapidRaidCode::<Gf256>::with_seed(n, k, 5)?;
+            let pjob = PipelineJob::from_code(&code, &placement, BUF, block)?;
+            let meas_pipe = archive_pipeline(&cluster, &backend, &pjob)?;
+
+            let err = |pred: std::time::Duration, meas: std::time::Duration| {
+                100.0 * (meas.as_secs_f64() - pred.as_secs_f64()) / pred.as_secs_f64()
+            };
+            println!(
+                "{:>8} {:>8}MiB {:>12.3?} {:>12.3?} {:>+7.1}% {:>12.3?} {:>12.3?} {:>+7.1}%",
+                format!("({n},{k})"),
+                block_mib,
+                predicted_cls,
+                meas_cls,
+                err(predicted_cls, meas_cls),
+                predicted_pipe,
+                meas_pipe,
+                err(predicted_pipe, meas_pipe),
+            );
+        }
+    }
+    println!("\n(model ignores CPU time; positive error = simulator slower than ideal)");
+    println!("analytic_vs_measured OK");
+    Ok(())
+}

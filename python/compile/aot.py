@@ -1,0 +1,134 @@
+"""AOT lowering: jax/Pallas graphs -> HLO *text* artifacts + manifest.
+
+Run once at build time (`make artifacts`); the Rust runtime
+(rust/src/runtime/) loads every artifact listed in artifacts/manifest.txt,
+compiles it with the PJRT CPU client and executes it on the archival hot
+path.  Python never runs at request time.
+
+Interchange format is HLO TEXT, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).  The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Manifest format (one artifact per line, space-separated key=value):
+
+    name=<id> kind=<gemm|step> w=<8|16> m=.. k=.. r=.. b=.. file=<name>.hlo.txt
+
+`b` counts field ELEMENTS (bytes for w=8, 16-bit words for w=16); every
+artifact's payload panel is one 64 KiB network buffer, the coordinator's
+streaming unit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# One network buffer = 64 KiB, the coordinator's streaming unit (matching the
+# paper's streamlined coding model where a node encodes buffer-by-buffer).
+BUF_BYTES = 65536
+
+# (w, m, k) gemm variants:
+#   (16,11) parity m=5,k=11  - the paper's evaluation code, RR8 + RR16
+#   (16,11) decode k=11      - inverse application
+#   (8,4)   parity m=4,k=4 and decode k=4 - the paper's running example
+GEMM_VARIANTS = [
+    (8, 5, 11),
+    (8, 11, 11),
+    (8, 4, 4),
+    (16, 5, 11),
+    (16, 11, 11),
+]
+
+# (w, r) pipeline-stage variants: r=1 (n=2k placement), r=2 (overlapped).
+STEP_VARIANTS = [(8, 1), (8, 2), (16, 1), (16, 2)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides the GF
+    # log/exp tables as `constant({...})`, which xla_extension 0.5.1's text
+    # parser silently reads back as all-zero tables (caught by the PJRT
+    # conformance tests — every GF product came back 0).
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # new-XLA metadata attributes (e.g. source_end_line) are unknown to the
+    # 0.5.1 parser — drop metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _dt(w: int):
+    return jnp.uint8 if w == 8 else jnp.uint16
+
+
+def _elems(w: int) -> int:
+    return BUF_BYTES // (w // 8)
+
+
+def lower_gemm(w: int, m: int, k: int):
+    b = _elems(w)
+    fn = functools.partial(model.classical_parity, w=w)
+    spec_g = jax.ShapeDtypeStruct((m, k), _dt(w))
+    spec_d = jax.ShapeDtypeStruct((k, b), _dt(w))
+    return jax.jit(fn).lower(spec_g, spec_d), b
+
+
+def lower_step(w: int, r: int):
+    b = _elems(w)
+    fn = functools.partial(model.pipeline_stage, w=w)
+    spec_x = jax.ShapeDtypeStruct((b,), _dt(w))
+    spec_l = jax.ShapeDtypeStruct((r, b), _dt(w))
+    spec_c = jax.ShapeDtypeStruct((r,), _dt(w))
+    return jax.jit(fn).lower(spec_x, spec_l, spec_c, spec_c), b
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+
+    for w, m, k in GEMM_VARIANTS:
+        name = f"gf{w}_gemm_m{m}_k{k}"
+        lowered, b = lower_gemm(w, m, k)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f"name={name} kind=gemm w={w} m={m} k={k} r=0 b={b} file={fname}"
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    for w, r in STEP_VARIANTS:
+        name = f"gf{w}_step_r{r}"
+        lowered, b = lower_step(w, r)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f"name={name} kind=step w={w} m=0 k=0 r={r} b={b} file={fname}"
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest.txt ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

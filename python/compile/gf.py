@@ -1,0 +1,99 @@
+"""Finite-field (GF(2^w)) table construction shared by kernels, oracle and AOT.
+
+RapidRAID performs all coding arithmetic in GF(2^8) or GF(2^16) (the paper's
+RR8 / RR16 implementations, built on Jerasure).  We reproduce Jerasure /
+gf-complete's default fields:
+
+  * GF(2^8):  primitive polynomial x^8  + x^4 + x^3 + x^2 + 1       (0x11D)
+  * GF(2^16): primitive polynomial x^16 + x^12 + x^3  + x   + 1     (0x1100B)
+
+Multiplication is implemented with log/antilog tables:
+
+    a * b = exp[(log[a] + log[b]) mod (2^w - 1)]        (a, b != 0)
+
+The exp table is stored *doubled* (length 2*(2^w-1)+2) so the `mod` never has
+to be evaluated inside the kernels: log[a] + log[b] <= 2*(2^w-2) always indexes
+in range.  Zero operands are handled with an explicit mask (log[0] is
+undefined; we park 0 there and guard).
+
+The same tables are generated, with the same polynomials, on the Rust side
+(rust/src/gf/tables.rs); python/tests/test_gf_tables.py pins golden values so
+both sides provably agree.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+# Primitive polynomials, including the x^w term, as used by gf-complete.
+POLY8 = 0x11D
+POLY16 = 0x1100B
+
+ORDER = {8: 255, 16: 65535}
+POLY = {8: POLY8, 16: POLY16}
+DTYPE = {8: np.uint8, 16: np.uint16}
+
+
+def mul_bitwise(a: int, b: int, w: int = 8) -> int:
+    """Carry-less "Russian peasant" multiply, reduced mod the field polynomial.
+
+    Bit-level ground truth used to build the tables and as the ultimate test
+    oracle; intentionally slow and obvious.
+    """
+    poly = POLY[w]
+    top = 1 << w
+    mask = top - 1
+    assert 0 <= a <= mask and 0 <= b <= mask
+    r = 0
+    while b:
+        if b & 1:
+            r ^= a
+        b >>= 1
+        a <<= 1
+        if a & top:
+            a ^= poly
+    return r & mask
+
+
+@functools.lru_cache(maxsize=None)
+def tables(w: int = 8) -> tuple[np.ndarray, np.ndarray]:
+    """(log, exp) tables for GF(2^w).
+
+    log: length 2^w int32, log[0] = 0 (guarded by callers).
+    exp: length 2*(2^w-1)+2 int32, doubled so log[a]+log[b] indexes directly.
+    """
+    order = ORDER[w]
+    log = np.zeros(order + 1, dtype=np.int32)
+    exp = np.zeros(2 * order + 2, dtype=np.int32)
+    x = 1
+    for i in range(order):
+        exp[i] = x
+        log[x] = i
+        x = mul_bitwise(x, 2, w)
+    assert x == 1, "polynomial is not primitive"
+    # Double the exp table so (log[a] + log[b]) needs no modular reduction.
+    exp[order : 2 * order] = exp[:order]
+    exp[2 * order :] = exp[:2]
+    return log, exp
+
+
+def mul_np(a: np.ndarray, b: np.ndarray, w: int = 8) -> np.ndarray:
+    """Vectorized numpy GF multiply (table based), used by the oracle."""
+    log, exp = tables(w)
+    a = np.asarray(a, dtype=DTYPE[w])
+    b = np.asarray(b, dtype=DTYPE[w])
+    s = log[a.astype(np.int64)] + log[b.astype(np.int64)]
+    r = exp[s].astype(DTYPE[w])
+    return np.where((a == 0) | (b == 0), DTYPE[w](0), r)
+
+
+def inv_np(a: np.ndarray, w: int = 8) -> np.ndarray:
+    """Multiplicative inverse; a must be nonzero."""
+    log, exp = tables(w)
+    a = np.asarray(a, dtype=DTYPE[w])
+    if np.any(a == 0):
+        raise ZeroDivisionError("inverse of 0 in GF(2^w)")
+    order = ORDER[w]
+    return exp[(order - log[a.astype(np.int64)]) % order].astype(DTYPE[w])

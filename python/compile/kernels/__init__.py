@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the GF coding hot-spots, plus the pure-jnp oracle.
+from .gf_gemm import gf_gemm  # noqa: F401
+from .pipeline_step import pipeline_step  # noqa: F401

@@ -1,0 +1,99 @@
+"""Pallas kernel: GF(2^w) matrix x matrix multiply-accumulate (XOR).
+
+This is the compute hot-spot of *classical* erasure encoding: given the
+parity sub-matrix G' (m x k) of a systematic code and a panel of source data
+(k x B bytes), produce the m parity rows
+
+    parity[i, :] = XOR_j  G'[i, j] (*) data[j, :]        (GF multiply)
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's Jerasure
+implementation is a CPU table-lookup loop.  On TPU the same math maps to two
+VMEM-resident table gathers (log, exp) plus an int add and an XOR reduction
+over k.  The MXU is useless for GF arithmetic, so the kernel is VPU /
+memory-bound; the goal of the Pallas structure is purely the HBM<->VMEM
+schedule:
+
+  * grid over B: the (k, B) data panel is streamed tile-by-tile
+    (k x TILE_B per grid step) while the 256/512-entry tables (GF(2^8):
+    0.5 KiB, int32: 3 KiB) and the tiny (m, k) coefficient matrix stay
+    resident across all grid steps.
+  * the k-loop is unrolled at trace time (k is static), producing a pure
+    gather/add/xor chain XLA fuses into a single elementwise loop - there is
+    exactly ONE pass over the data tile.
+
+The kernel MUST be lowered with interpret=True: real TPU lowering emits a
+Mosaic custom-call which the CPU PJRT plugin (and the rust xla crate) cannot
+execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import gf
+
+# Default B-tile: 8 KiB of payload per grid step per source block; with
+# k = 11 this keeps the working set (k x TILE_B in + m x TILE_B out, plus
+# tables) comfortably inside a TPU core's ~16 MiB VMEM even at k = 32.
+TILE_B = 8192
+
+
+def _jdtype(w: int):
+    return jnp.uint8 if w == 8 else jnp.uint16
+
+
+def _gemm_kernel(gmat_ref, log_ref, exp_ref, data_ref, out_ref, *, m, k, w):
+    """One grid step: out tile (m, tb) from data tile (k, tb)."""
+    log_t = log_ref[...]          # (2^w,)        int32, VMEM resident
+    exp_t = exp_ref[...]          # (2*(2^w-1)+2,) int32, VMEM resident
+    gmat = gmat_ref[...]          # (m, k)        uint, VMEM resident
+    data = data_ref[...]          # (k, tb)       uint, streamed
+
+    # log of the data tile is computed ONCE and reused by every output row.
+    dlog = jnp.take(log_t, data.astype(jnp.int32))          # (k, tb)
+    dzero = data == 0                                       # (k, tb)
+    glog = jnp.take(log_t, gmat.astype(jnp.int32))          # (m, k)
+
+    out_dtype = _jdtype(w)
+    acc = jnp.zeros(out_ref.shape, dtype=out_dtype)
+    for j in range(k):  # static unroll: gather/add/xor chain, one data pass
+        s = glog[:, j][:, None] + dlog[j][None, :]          # (m, tb)
+        prod = jnp.take(exp_t, s).astype(out_dtype)         # (m, tb)
+        nz = (gmat[:, j] != 0)[:, None] & ~dzero[j][None, :]
+        acc = acc ^ jnp.where(nz, prod, jnp.zeros((), out_dtype))
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("w", "tile_b"))
+def gf_gemm(gmat, data, *, w: int = 8, tile_b: int = TILE_B):
+    """parity = gmat (*) data over GF(2^w); shapes (m,k) x (k,B) -> (m,B).
+
+    B must be a multiple of tile_b (callers pad; the AOT artifacts fix B).
+    """
+    m, k = gmat.shape
+    k2, b = data.shape
+    assert k2 == k, (k2, k)
+    assert b % tile_b == 0, f"B={b} not a multiple of tile_b={tile_b}"
+    log_np, exp_np = gf.tables(w)
+    log_t = jnp.asarray(log_np)
+    exp_t = jnp.asarray(exp_np)
+    dt = _jdtype(w)
+
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, m=m, k=k, w=w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),            # gmat: resident
+            pl.BlockSpec(log_t.shape, lambda i: (0,)),         # log:  resident
+            pl.BlockSpec(exp_t.shape, lambda i: (0,)),         # exp:  resident
+            pl.BlockSpec((k, tile_b), lambda i: (0, i)),       # data: streamed
+        ],
+        out_specs=pl.BlockSpec((m, tile_b), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, b), dt),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(gmat.astype(dt), log_t, exp_t, data.astype(dt))

@@ -1,0 +1,99 @@
+"""Pallas kernel: one RapidRAID pipeline stage, fused dual-output.
+
+Paper eqs. (3) and (4): node i receives the partial combination x_{i-1,i},
+folds in its r local blocks (r = 1 when n = 2k; r = 2 for the overlapped
+placement when n < 2k) and produces BOTH
+
+    x_out = x_in  XOR_i  psi[i] (*) local[i]     -> forwarded to node i+1
+    c     = x_in  XOR_i  xi[i]  (*) local[i]     -> final codeword block c_i
+
+in a single pass.  Fusing the two outputs matters: `log(local)` - the only
+gather over the streamed payload - is computed once and shared by the psi and
+xi products, so the stage reads each payload byte exactly once.  This is the
+kernel on the archival hot path: every network buffer that flows through the
+pipeline chain goes through one invocation per node.
+
+Same TPU mapping notes as gf_gemm.py: tables resident in VMEM, payload
+streamed over a 1-D grid, VPU-bound, interpret=True for CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import gf
+
+TILE_B = 8192
+
+
+def _jdtype(w: int):
+    return jnp.uint8 if w == 8 else jnp.uint16
+
+
+def _step_kernel(coef_ref, log_ref, exp_ref, x_ref, loc_ref,
+                 xout_ref, c_ref, *, r, w):
+    log_t = log_ref[...]
+    exp_t = exp_ref[...]
+    coef = coef_ref[...]          # (2, r): row 0 = psi, row 1 = xi
+    x_in = x_ref[...]             # (tb,)
+    loc = loc_ref[...]            # (r, tb)
+
+    clog = jnp.take(log_t, coef.astype(jnp.int32))           # (2, r)
+    llog = jnp.take(log_t, loc.astype(jnp.int32))            # (r, tb) ONCE
+    lzero = loc == 0
+
+    dt = _jdtype(w)
+    zero = jnp.zeros((), dt)
+    x_acc = x_in
+    c_acc = x_in
+    for i in range(r):  # static unroll; r is 1 or 2 in practice
+        nz = ~lzero[i]
+        xprod = jnp.take(exp_t, clog[0, i] + llog[i]).astype(dt)
+        cprod = jnp.take(exp_t, clog[1, i] + llog[i]).astype(dt)
+        x_acc = x_acc ^ jnp.where(nz & (coef[0, i] != 0), xprod, zero)
+        c_acc = c_acc ^ jnp.where(nz & (coef[1, i] != 0), cprod, zero)
+    xout_ref[...] = x_acc
+    c_ref[...] = c_acc
+
+
+@functools.partial(jax.jit, static_argnames=("w", "tile_b"))
+def pipeline_step(x_in, locals_, psi, xi, *, w: int = 8, tile_b: int = TILE_B):
+    """(x_out, c) for one pipeline stage; x_in (B,), locals_ (r, B).
+
+    psi, xi: (r,) coefficient vectors.  B must be a multiple of tile_b.
+    """
+    (b,) = x_in.shape
+    r, b2 = locals_.shape
+    assert b2 == b, (b2, b)
+    assert b % tile_b == 0, f"B={b} not a multiple of tile_b={tile_b}"
+    log_np, exp_np = gf.tables(w)
+    log_t = jnp.asarray(log_np)
+    exp_t = jnp.asarray(exp_np)
+    dt = _jdtype(w)
+    coef = jnp.stack([jnp.asarray(psi, dt), jnp.asarray(xi, dt)])  # (2, r)
+
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_step_kernel, r=r, w=w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2, r), lambda i: (0, 0)),            # coefficients
+            pl.BlockSpec(log_t.shape, lambda i: (0,)),
+            pl.BlockSpec(exp_t.shape, lambda i: (0,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),           # x_in streamed
+            pl.BlockSpec((r, tile_b), lambda i: (0, i)),       # locals streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), dt),
+            jax.ShapeDtypeStruct((b,), dt),
+        ],
+        interpret=True,
+    )(coef, log_t, exp_t, x_in.astype(dt), locals_.astype(dt))

@@ -1,0 +1,100 @@
+"""Pure-jnp oracle for the GF coding kernels (L1 correctness reference).
+
+Every Pallas kernel in this package has an exact counterpart here, written in
+straightforward jax.numpy with no Pallas, no tiling and no fusion tricks.
+pytest compares kernel output against these (bit-exact; GF arithmetic has no
+tolerance), and these in turn are validated against the bit-level
+`gf.mul_bitwise` ground truth.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import gf
+
+
+def _tables(w: int):
+    log, exp = gf.tables(w)
+    return jnp.asarray(log), jnp.asarray(exp)
+
+
+def _jdtype(w: int):
+    return jnp.uint8 if w == 8 else jnp.uint16
+
+
+def gf_mul(a, b, w: int = 8):
+    """Elementwise GF(2^w) multiply (broadcasting)."""
+    log, exp = _tables(w)
+    a = jnp.asarray(a, dtype=_jdtype(w))
+    b = jnp.asarray(b, dtype=_jdtype(w))
+    s = jnp.take(log, a.astype(jnp.int32)) + jnp.take(log, b.astype(jnp.int32))
+    r = jnp.take(exp, s).astype(_jdtype(w))
+    return jnp.where((a == 0) | (b == 0), jnp.zeros((), _jdtype(w)), r)
+
+
+def gf_gemm(gmat, data, w: int = 8):
+    """GF matrix product: out[i, :] = XOR_j gmat[i, j] * data[j, :].
+
+    gmat: (m, k) coefficients; data: (k, B) payload; out: (m, B).
+    The compute core of classical (Reed-Solomon style) erasure encoding.
+    """
+    gmat = jnp.asarray(gmat, dtype=_jdtype(w))
+    data = jnp.asarray(data, dtype=_jdtype(w))
+    prod = gf_mul(gmat[:, :, None], data[None, :, :], w)  # (m, k, B)
+    acc = prod[:, 0, :]
+    for j in range(1, prod.shape[1]):
+        acc = acc ^ prod[:, j, :]
+    return acc
+
+
+def pipeline_step(x_in, locals_, psi, xi, w: int = 8):
+    """One RapidRAID pipeline stage (paper eqs. (3) and (4)).
+
+    x_in:    (B,)   partial combination received from the predecessor node
+    locals_: (r, B) the r object blocks this node stores (r=1 for n=2k,
+             r=2 for the overlapped placement when n < 2k)
+    psi:     (r,)   forward coefficients  (one per local block)
+    xi:      (r,)   codeword coefficients (one per local block)
+
+    returns (x_out, c):
+        x_out = x_in XOR sum_i psi[i]*locals_[i]   -> sent to the successor
+        c     = x_in XOR sum_i xi[i] *locals_[i]   -> stored locally
+    """
+    x_in = jnp.asarray(x_in, dtype=_jdtype(w))
+    locals_ = jnp.asarray(locals_, dtype=_jdtype(w))
+    x_acc = x_in
+    c_acc = x_in
+    for i in range(locals_.shape[0]):
+        x_acc = x_acc ^ gf_mul(psi[i], locals_[i], w)
+        c_acc = c_acc ^ gf_mul(xi[i], locals_[i], w)
+    return x_acc, c_acc
+
+
+# ---------------------------------------------------------------------------
+# numpy ground-truth versions (no jax), used to validate the jnp oracle itself
+# against gf.mul_bitwise in the test-suite.
+# ---------------------------------------------------------------------------
+
+
+def gf_gemm_np(gmat, data, w: int = 8) -> np.ndarray:
+    gmat = np.asarray(gmat, dtype=gf.DTYPE[w])
+    data = np.asarray(data, dtype=gf.DTYPE[w])
+    m, k = gmat.shape
+    out = np.zeros((m, data.shape[1]), dtype=gf.DTYPE[w])
+    for i in range(m):
+        for j in range(k):
+            out[i] ^= gf.mul_np(gmat[i, j], data[j], w)
+    return out
+
+
+def pipeline_step_np(x_in, locals_, psi, xi, w: int = 8):
+    x_in = np.asarray(x_in, dtype=gf.DTYPE[w])
+    locals_ = np.asarray(locals_, dtype=gf.DTYPE[w])
+    x_acc = x_in.copy()
+    c_acc = x_in.copy()
+    for i in range(locals_.shape[0]):
+        x_acc = x_acc ^ gf.mul_np(psi[i], locals_[i], w)
+        c_acc = c_acc ^ gf.mul_np(xi[i], locals_[i], w)
+    return x_acc, c_acc

@@ -1,0 +1,42 @@
+"""L2: the RapidRAID compute graphs, composed from the L1 Pallas kernels.
+
+Three jax functions cover every GF computation the Rust coordinator executes
+on the archival hot path; each is AOT-lowered by aot.py to a fixed-shape HLO
+artifact:
+
+  * classical_parity - parity panel generation for the classical (CEC)
+    encoder: the single coding node turns a (k, B) source panel into the
+    (m, B) parity panel in one call.
+  * pipeline_stage   - one RapidRAID pipeline node: fold r local blocks into
+    the incoming partial combination, emitting both the forwarded x_out and
+    the locally stored codeword block c (paper eqs. (3)/(4)).
+  * decode_apply     - reconstruction: apply a precomputed k x k inverse
+    (computed by the Rust Gauss solver from the surviving rows of G) to a
+    (k, B) panel of surviving codeword blocks.  Mathematically the same GF
+    gemm as classical_parity with m = k.
+
+All functions are shape-polymorphic in python; aot.py freezes the (w, m, k,
+r, B) combinations the Rust runtime needs and records them in the artifact
+manifest.  Python never runs at request time - these graphs execute inside
+the Rust PJRT client.
+"""
+
+from __future__ import annotations
+
+from . import kernels
+
+
+def classical_parity(gmat, data, *, w: int = 8):
+    """(m, B) parity = G' (*) data over GF(2^w); G' (m, k), data (k, B)."""
+    return (kernels.gf_gemm(gmat, data, w=w),)
+
+
+def pipeline_stage(x_in, locals_, psi, xi, *, w: int = 8):
+    """(x_out, c) for one RapidRAID pipeline stage (see kernels.pipeline_step)."""
+    x_out, c = kernels.pipeline_step(x_in, locals_, psi, xi, w=w)
+    return (x_out, c)
+
+
+def decode_apply(inv, coded, *, w: int = 8):
+    """(k, B) original blocks = inv (*) coded; inv (k, k), coded (k, B)."""
+    return (kernels.gf_gemm(inv, coded, w=w),)

@@ -1,0 +1,106 @@
+"""Reference RapidRAID code construction (placement, coefficients, G matrix).
+
+Python mirror of rust/src/codes/rapidraid.rs, used by the pytest suite to
+verify (a) that chaining `model.pipeline_stage` n times reproduces the
+generator-matrix encoding G . o, and (b) the paper's Section IV claims (e.g.
+the unique natural dependency {c1, c2, c5, c6} of the (8,4) code).
+
+Placement (paper Section V): two replicas of the k-block object o over n
+nodes, n <= 2k.  Node i (0-based) stores:
+
+  * a block of the FIRST replica if i < k:          o_i
+  * a block of the SECOND replica if i >= n - k:    o_{i - (n - k)}
+
+For n = 2k each node stores exactly one block; for n < 2k the middle
+2k - n nodes store two (the overlapped placement of the (6,4) example).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import gf
+
+
+def placement(n: int, k: int) -> list[list[int]]:
+    """blocks[i] = ordered list of object-block indices stored on node i."""
+    if not (k < n <= 2 * k):
+        raise ValueError(f"need k < n <= 2k, got (n={n}, k={k})")
+    nodes: list[list[int]] = []
+    for i in range(n):
+        blocks = []
+        if i < k:
+            blocks.append(i)
+        if i >= n - k:
+            blocks.append(i - (n - k))
+        nodes.append(blocks)
+    return nodes
+
+
+def draw_coeffs(n: int, k: int, w: int = 8, seed: int = 7):
+    """Random nonzero psi/xi per (node, local block); deterministic by seed."""
+    rng = np.random.default_rng(seed)
+    place = placement(n, k)
+    psi = [rng.integers(1, 1 << w, len(b)).astype(gf.DTYPE[w]) for b in place]
+    xi = [rng.integers(1, 1 << w, len(b)).astype(gf.DTYPE[w]) for b in place]
+    return psi, xi
+
+
+def generator_matrix(n: int, k: int, psi, xi, w: int = 8) -> np.ndarray:
+    """(n, k) matrix G with c = G . o, from the pipeline recurrences (3)/(4)."""
+    place = placement(n, k)
+    g = np.zeros((n, k), dtype=gf.DTYPE[w])
+    xrow = np.zeros(k, dtype=gf.DTYPE[w])  # coefficients of x_{i-1,i}
+    for i in range(n):
+        crow = xrow.copy()
+        for j, blk in enumerate(place[i]):
+            crow[blk] ^= xi[i][j]
+            xrow[blk] ^= psi[i][j]
+        g[i] = crow
+    return g
+
+
+def encode_chain(obj: np.ndarray, psi, xi, n: int, w: int = 8) -> np.ndarray:
+    """Encode by running the actual pipeline recurrence over data panels.
+
+    obj: (k, B) object blocks.  Returns (n, B) codeword blocks.  Uses the
+    numpy oracle; the pytest suite separately checks the Pallas kernel step
+    against the oracle, and the Rust coordinator re-runs the same chain over
+    a simulated network.
+    """
+    k, b = obj.shape
+    place = placement(n, k)
+    c = np.zeros((n, b), dtype=gf.DTYPE[w])
+    x = np.zeros(b, dtype=gf.DTYPE[w])
+    for i in range(n):
+        c[i] = x.copy()
+        for j, blk in enumerate(place[i]):
+            c[i] ^= gf.mul_np(xi[i][j], obj[blk], w)
+            x = x ^ gf.mul_np(psi[i][j], obj[blk], w)
+    return c
+
+
+def rank_gf(mat: np.ndarray, w: int = 8) -> int:
+    """Rank over GF(2^w) by Gaussian elimination."""
+    m = np.array(mat, dtype=gf.DTYPE[w])
+    rows, cols = m.shape
+    rank = 0
+    for col in range(cols):
+        piv = None
+        for r in range(rank, rows):
+            if m[r, col] != 0:
+                piv = r
+                break
+        if piv is None:
+            continue
+        m[[rank, piv]] = m[[piv, rank]]
+        inv = gf.inv_np(m[rank, col], w)
+        m[rank] = gf.mul_np(m[rank], np.full(cols, inv, dtype=gf.DTYPE[w]), w)
+        for r in range(rows):
+            if r != rank and m[r, col] != 0:
+                factor = np.full(cols, m[r, col], dtype=gf.DTYPE[w])
+                m[r] = m[r] ^ gf.mul_np(factor, m[rank], w)
+        rank += 1
+        if rank == rows:
+            break
+    return rank

@@ -1,0 +1,109 @@
+"""GF table construction: golden values + field axioms vs the bit-level oracle."""
+
+import numpy as np
+import pytest
+
+from compile import gf
+
+
+class TestBitwiseMul:
+    def test_golden_gf256(self):
+        # Hand-checked products in GF(2^8)/0x11D (match Jerasure/gf-complete).
+        assert gf.mul_bitwise(0, 7, 8) == 0
+        assert gf.mul_bitwise(1, 183, 8) == 183
+        assert gf.mul_bitwise(2, 0x80, 8) == 0x1D  # alpha * x^7 wraps into poly
+        assert gf.mul_bitwise(3, 7, 8) == 9
+        assert gf.mul_bitwise(0xFF, 0xFF, 8) == 226
+    def test_golden_gf65536(self):
+        assert gf.mul_bitwise(0, 1234, 16) == 0
+        assert gf.mul_bitwise(1, 54321, 16) == 54321
+        assert gf.mul_bitwise(2, 0x8000, 16) == 0x100B  # alpha wrap: poly 0x1100B
+        assert gf.mul_bitwise(0xFFFF, 0xFFFF, 16) == 1843
+
+    @pytest.mark.parametrize("w", [8, 16])
+    def test_commutative(self, w):
+        rng = np.random.default_rng(1)
+        hi = 1 << w
+        for a, b in rng.integers(0, hi, (50, 2)):
+            assert gf.mul_bitwise(int(a), int(b), w) == gf.mul_bitwise(int(b), int(a), w)
+
+    @pytest.mark.parametrize("w", [8, 16])
+    def test_associative_and_distributive(self, w):
+        rng = np.random.default_rng(2)
+        hi = 1 << w
+        for a, b, c in rng.integers(0, hi, (30, 3)):
+            a, b, c = int(a), int(b), int(c)
+            ab_c = gf.mul_bitwise(gf.mul_bitwise(a, b, w), c, w)
+            a_bc = gf.mul_bitwise(a, gf.mul_bitwise(b, c, w), w)
+            assert ab_c == a_bc
+            lhs = gf.mul_bitwise(a, b ^ c, w)
+            rhs = gf.mul_bitwise(a, b, w) ^ gf.mul_bitwise(a, c, w)
+            assert lhs == rhs
+
+
+class TestTables:
+    @pytest.mark.parametrize("w", [8, 16])
+    def test_exp_log_roundtrip(self, w):
+        log, exp = gf.tables(w)
+        order = gf.ORDER[w]
+        # every nonzero element appears exactly once in exp[:order]
+        assert sorted(exp[:order].tolist()) == list(range(1, order + 1))
+        for x in (1, 2, 3, 5, order):
+            assert exp[log[x]] == x
+
+    @pytest.mark.parametrize("w", [8, 16])
+    def test_exp_doubling(self, w):
+        log, exp = gf.tables(w)
+        order = gf.ORDER[w]
+        assert (exp[order : 2 * order] == exp[:order]).all()
+        # max index reachable from log[a]+log[b] is 2*(order-1)
+        assert len(exp) > 2 * (order - 1)
+
+    @pytest.mark.parametrize("w", [8, 16])
+    def test_table_mul_matches_bitwise(self, w):
+        rng = np.random.default_rng(3)
+        hi = 1 << w
+        a = rng.integers(0, hi, 500).astype(gf.DTYPE[w])
+        b = rng.integers(0, hi, 500).astype(gf.DTYPE[w])
+        expect = np.array(
+            [gf.mul_bitwise(int(x), int(y), w) for x, y in zip(a, b)],
+            dtype=gf.DTYPE[w],
+        )
+        assert (gf.mul_np(a, b, w) == expect).all()
+
+    @pytest.mark.parametrize("w", [8, 16])
+    def test_inverse(self, w):
+        rng = np.random.default_rng(4)
+        hi = 1 << w
+        a = rng.integers(1, hi, 200).astype(gf.DTYPE[w])
+        inv = gf.inv_np(a, w)
+        assert (gf.mul_np(a, inv, w) == 1).all()
+
+    def test_inverse_of_zero_raises(self):
+        with pytest.raises(ZeroDivisionError):
+            gf.inv_np(np.array([0], dtype=np.uint8), 8)
+
+    @pytest.mark.parametrize("w", [8, 16])
+    def test_mul_by_zero_and_one(self, w):
+        rng = np.random.default_rng(5)
+        hi = 1 << w
+        a = rng.integers(0, hi, 100).astype(gf.DTYPE[w])
+        assert (gf.mul_np(a, np.zeros_like(a), w) == 0).all()
+        assert (gf.mul_np(a, np.ones_like(a), w) == a).all()
+
+
+class TestRustParity:
+    """Golden rows pinned so rust/src/gf/tables.rs provably builds the same
+    tables (the same values are asserted in the Rust unit tests)."""
+
+    def test_gf256_exp_prefix(self):
+        _, exp = gf.tables(8)
+        assert exp[:10].tolist() == [1, 2, 4, 8, 16, 32, 64, 128, 29, 58]
+
+    def test_gf256_log_prefix(self):
+        log, _ = gf.tables(8)
+        assert log[1:9].tolist() == [0, 1, 25, 2, 50, 26, 198, 3]
+
+    def test_gf65536_exp_prefix(self):
+        _, exp = gf.tables(16)
+        assert exp[14:18].tolist() == [16384, 32768, 4107, 8214]

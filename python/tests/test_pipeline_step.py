@@ -1,0 +1,150 @@
+"""Pallas pipeline_step kernel vs oracle + full-chain == generator-matrix."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import gf, kernels, rapidraid_ref as rr
+from compile.kernels import ref
+
+
+def _rand(rng, shape, w):
+    return rng.integers(0, 1 << w, shape).astype(gf.DTYPE[w])
+
+
+@pytest.mark.parametrize("w", [8, 16])
+@pytest.mark.parametrize("r", [1, 2])
+def test_step_matches_oracle(w, r):
+    rng = np.random.default_rng(w + r)
+    b = 8192
+    x = _rand(rng, (b,), w)
+    loc = _rand(rng, (r, b), w)
+    psi = _rand(rng, (r,), w)
+    xi = _rand(rng, (r,), w)
+    xo, c = kernels.pipeline_step(x, loc, psi, xi, w=w)
+    exo, ec = ref.pipeline_step_np(x, loc, psi, xi, w)
+    assert (np.asarray(xo) == exo).all()
+    assert (np.asarray(c) == ec).all()
+
+
+def test_step_multi_tile():
+    rng = np.random.default_rng(20)
+    b = 8192 * 4
+    x = _rand(rng, (b,), 8)
+    loc = _rand(rng, (2, b), 8)
+    psi = _rand(rng, (2,), 8)
+    xi = _rand(rng, (2,), 8)
+    xo, c = kernels.pipeline_step(x, loc, psi, xi, w=8)
+    exo, ec = ref.pipeline_step_np(x, loc, psi, xi, 8)
+    assert (np.asarray(xo) == exo).all() and (np.asarray(c) == ec).all()
+
+
+def test_step_zero_coefficients():
+    """psi = xi = 0 must pass x through unchanged on both outputs."""
+    rng = np.random.default_rng(21)
+    b = 8192
+    x = _rand(rng, (b,), 8)
+    loc = _rand(rng, (1, b), 8)
+    z = np.zeros(1, dtype=np.uint8)
+    xo, c = kernels.pipeline_step(x, loc, z, z, w=8)
+    assert (np.asarray(xo) == x).all() and (np.asarray(c) == x).all()
+
+
+def test_step_first_node():
+    """Node 1 has x_in = 0: outputs are pure multiples of the local block."""
+    rng = np.random.default_rng(22)
+    b = 8192
+    loc = _rand(rng, (1, b), 8)
+    x0 = np.zeros(b, dtype=np.uint8)
+    psi = np.array([3], dtype=np.uint8)
+    xi = np.array([7], dtype=np.uint8)
+    xo, c = kernels.pipeline_step(x0, loc, psi, xi, w=8)
+    assert (np.asarray(xo) == gf.mul_np(np.uint8(3), loc[0], 8)).all()
+    assert (np.asarray(c) == gf.mul_np(np.uint8(7), loc[0], 8)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    w=st.sampled_from([8, 16]),
+    r=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_step_hypothesis(w, r, seed):
+    rng = np.random.default_rng(seed)
+    b = 1024
+    x = _rand(rng, (b,), w)
+    loc = _rand(rng, (r, b), w)
+    psi = _rand(rng, (r,), w)
+    xi = _rand(rng, (r,), w)
+    xo, c = kernels.pipeline_step(x, loc, psi, xi, w=w, tile_b=b)
+    exo, ec = ref.pipeline_step_np(x, loc, psi, xi, w)
+    assert (np.asarray(xo) == exo).all() and (np.asarray(c) == ec).all()
+
+
+# ---------------------------------------------------------------------------
+# Full-chain equivalence: pipeline recurrence == generator-matrix encode.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("w", [8, 16])
+@pytest.mark.parametrize("n,k", [(8, 4), (6, 4), (16, 11), (12, 8)])
+def test_chain_equals_generator_matrix(n, k, w):
+    rng = np.random.default_rng(n * 31 + k)
+    b = 512
+    obj = _rand(rng, (k, b), w)
+    psi, xi = rr.draw_coeffs(n, k, w, seed=5)
+    g = rr.generator_matrix(n, k, psi, xi, w)
+    chain = rr.encode_chain(obj, psi, xi, n, w)
+    matrix = ref.gf_gemm_np(g, obj, w)
+    assert (chain == matrix).all()
+
+
+@pytest.mark.parametrize("n,k", [(8, 4), (6, 4)])
+def test_chain_via_pallas_kernel(n, k):
+    """Drive the chain with the actual Pallas kernel stage by stage."""
+    w = 8
+    rng = np.random.default_rng(47)
+    b = 1024
+    obj = _rand(rng, (k, b), w)
+    psi, xi = rr.draw_coeffs(n, k, w, seed=3)
+    place = rr.placement(n, k)
+    x = np.zeros(b, dtype=gf.DTYPE[w])
+    c_blocks = []
+    for i in range(n):
+        loc = np.stack([obj[j] for j in place[i]])
+        xo, c = kernels.pipeline_step(x, loc, psi[i], xi[i], w=w, tile_b=b)
+        c_blocks.append(np.asarray(c))
+        x = np.asarray(xo)
+    got = np.stack(c_blocks)
+    expect = rr.encode_chain(obj, psi, xi, n, w)
+    assert (got == expect).all()
+
+
+def test_paper_84_natural_dependency():
+    """Paper Section IV-B: the (8,4) code has exactly one natural dependency,
+    {c1, c2, c5, c6} (1-based), no matter the coefficient values."""
+    w = 16
+    n, k = 8, 4
+    bad = frozenset({0, 1, 4, 5})  # 0-based
+    import itertools
+
+    dep_sets = None
+    for seed in range(4):  # natural = dependent under every random draw
+        psi, xi = rr.draw_coeffs(n, k, w, seed=seed)
+        g = rr.generator_matrix(n, k, psi, xi, w)
+        deps = {
+            frozenset(sub)
+            for sub in itertools.combinations(range(n), k)
+            if rr.rank_gf(g[list(sub)], w) < k
+        }
+        dep_sets = deps if dep_sets is None else (dep_sets & deps)
+    assert dep_sets == {bad}
+
+
+def test_placement_shapes():
+    assert rr.placement(8, 4) == [[0], [1], [2], [3], [0], [1], [2], [3]]
+    assert rr.placement(6, 4) == [[0], [1], [2, 0], [3, 1], [2], [3]]
+    with pytest.raises(ValueError):
+        rr.placement(9, 4)  # n > 2k
+    with pytest.raises(ValueError):
+        rr.placement(4, 4)  # n == k

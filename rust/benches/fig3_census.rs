@@ -1,0 +1,37 @@
+//! Bench: paper Fig. 3 — dependency census for n ∈ {8, 12, 16}, all
+//! n/2 ≤ k < n, plus census wall-time (the paper notes enumeration cost
+//! grows as C(n,k); we report it).
+//!
+//! Run: `cargo bench --bench fig3_census`
+
+use std::time::Instant;
+
+use rapidraid::codes::census;
+
+fn main() {
+    println!("# Fig. 3 — linear dependencies of (n,k) RapidRAID codes");
+    println!(
+        "{:>4} {:>4} {:>10} {:>12} {:>14} {:>6} {:>12}",
+        "n", "k", "subsets", "dependent", "%independent", "MDS", "census_time"
+    );
+    for n in [8usize, 12, 16] {
+        for k in (n / 2)..n {
+            let t0 = Instant::now();
+            let r = census(n, k, 3, 1).expect("census");
+            let dt = t0.elapsed();
+            println!(
+                "{:>4} {:>4} {:>10} {:>12} {:>13.4}% {:>6} {:>12.3?}",
+                n,
+                k,
+                r.total_subsets,
+                r.dependent_count(),
+                r.percent_independent(),
+                if r.is_mds() { "yes" } else { "no" },
+                dt
+            );
+            // Conjecture 1 must hold on every bench run
+            assert_eq!(r.is_mds(), k >= n - 3, "Conjecture 1 violated at ({n},{k})");
+        }
+    }
+    println!("# Conjecture 1 (MDS iff k >= n-3) verified on this run.");
+}

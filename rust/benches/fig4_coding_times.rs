@@ -1,0 +1,34 @@
+//! Bench: paper Fig. 4 — coding times of CEC / RR8 / RR16 on the TPC and
+//! EC2 presets, single object (4a) and 16 concurrent objects (4b).
+//!
+//! Run: `cargo bench --bench fig4_coding_times`
+//! Env: BLOCK_MIB (default 1), SAMPLES (default 5; 3 for the batch runs).
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::bench_scenarios::fig4_coding_times;
+
+fn main() {
+    let block = std::env::var("BLOCK_MIB")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(4)
+        << 20;
+    let samples = std::env::var("SAMPLES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(5);
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let mut out = std::io::stdout().lock();
+
+    for preset in ["tpc", "ec2"] {
+        // Fig. 4a: one object on an idle cluster
+        fig4_coding_times(&backend, preset, 1, block, samples, &mut out).expect("fig4a");
+        println!();
+        // Fig. 4b: 16 concurrent objects (fewer samples; each is 16 jobs)
+        fig4_coding_times(&backend, preset, 16, block, samples.div_ceil(2), &mut out)
+            .expect("fig4b");
+        println!();
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: paper Fig. 5 — coding times under network congestion.
+//!
+//! Sweeps the number of netem-congested nodes (500 Mbps + 100±10 ms) for
+//! single-object (5a) and 16-concurrent-object (5b) archival, CEC vs RR8.
+//!
+//! Run: `cargo bench --bench fig5_congestion`
+//! Env: BLOCK_MIB (default 1), SAMPLES (default 3), MAX_CONGESTED (default 8).
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::bench_scenarios::fig5_congestion;
+
+fn main() {
+    // 16 MiB default: keeps τ_block ≫ the netem 100 ms latency, as in the
+    // paper (64 MiB at 1 GbE). At small blocks the +100 ms/hop latency
+    // dominates the pipeline and flips the Fig. 5 shape (EXPERIMENTS.md).
+    let block = std::env::var("BLOCK_MIB")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(16)
+        << 20;
+    let samples = std::env::var("SAMPLES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(3);
+    let max_congested = std::env::var("MAX_CONGESTED")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(8);
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let mut out = std::io::stdout().lock();
+
+    // Fig. 5a: single object
+    fig5_congestion(&backend, max_congested, 1, block, samples, &mut out).expect("fig5a");
+    println!();
+    // Fig. 5b: 16 concurrent objects (quarter-size blocks + coarser sweep
+    // to bound wall time; the per-object contention shape is preserved)
+    fig5_congestion(&backend, max_congested.min(4), 16, block / 4, 1.max(samples / 3), &mut out)
+        .expect("fig5b");
+}

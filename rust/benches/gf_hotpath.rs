@@ -1,0 +1,99 @@
+//! Bench: GF hot-path microbenchmarks (§Perf) — native slice ops and the
+//! PJRT-executed Pallas kernels, in bytes/second.
+//!
+//! Not a paper table; this is the §Perf instrumentation used to drive the
+//! optimization pass (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench gf_hotpath`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rapidraid::backend::{BackendHandle, NativeBackend, PjrtBackend, Width};
+use rapidraid::gf::{bytes_as_gf256, bytes_as_gf256_mut, mul_slice_xor, Gf256};
+use rapidraid::util::SplitMix64;
+
+fn mib_s(bytes: usize, iters: usize, dt: std::time::Duration) -> f64 {
+    (bytes * iters) as f64 / (1 << 20) as f64 / dt.as_secs_f64()
+}
+
+fn main() {
+    let mut rng = SplitMix64::new(1);
+    const LEN: usize = 1 << 20;
+    let mut src = vec![0u8; LEN];
+    rng.fill_bytes(&mut src);
+    let mut dst = vec![0u8; LEN];
+    rng.fill_bytes(&mut dst);
+
+    // raw gf256 mul_slice_xor
+    let iters = 200;
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let c = Gf256((i % 254 + 2) as u8);
+        mul_slice_xor(c, bytes_as_gf256(&src), bytes_as_gf256_mut(&mut dst));
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{:<44} {:>10.1} MiB/s",
+        "gf256 mul_slice_xor (1 MiB)",
+        mib_s(LEN, iters, dt)
+    );
+
+    // backend pipeline_step throughput, native vs pjrt
+    let backends: Vec<(&str, BackendHandle)> = {
+        let mut v: Vec<(&str, BackendHandle)> = vec![("native", Arc::new(NativeBackend::new()))];
+        match PjrtBackend::load(&rapidraid::runtime::artifacts::default_dir()) {
+            Ok(b) => v.push(("pjrt", Arc::new(b))),
+            Err(e) => eprintln!("# pjrt skipped: {e}"),
+        }
+        v
+    };
+    let buf = 65536usize;
+    let x = &src[..buf];
+    let l = &dst[..buf];
+    for (name, be) in &backends {
+        for w in [Width::W8, Width::W16] {
+            let iters = if *name == "native" { 400 } else { 100 };
+            // warmup (compiles the artifact on pjrt)
+            be.pipeline_step(w, x, &[l], &[7], &[9]).unwrap();
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let out = be.pipeline_step(w, x, &[l], &[7], &[9]).unwrap();
+                std::hint::black_box(out);
+            }
+            let dt = t0.elapsed();
+            println!(
+                "{:<44} {:>10.1} MiB/s",
+                format!("{name} pipeline_step r=1 {w} (64 KiB)"),
+                mib_s(buf, iters, dt)
+            );
+        }
+    }
+
+    // backend gemm throughput (5x11, the (16,11) parity shape)
+    let data: Vec<Vec<u8>> = (0..11)
+        .map(|_| {
+            let mut d = vec![0u8; buf];
+            rng.fill_bytes(&mut d);
+            d
+        })
+        .collect();
+    let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+    let mat: Vec<Vec<u32>> = (0..5)
+        .map(|_| (0..11).map(|_| (rng.next_u64() & 0xFF) as u32).collect())
+        .collect();
+    for (name, be) in &backends {
+        let iters = if *name == "native" { 100 } else { 30 };
+        be.gemm(Width::W8, &mat, &refs).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(be.gemm(Width::W8, &mat, &refs).unwrap());
+        }
+        let dt = t0.elapsed();
+        println!(
+            "{:<44} {:>10.1} MiB/s (source bytes)",
+            format!("{name} gemm 5x11 gf8 (11 x 64 KiB)"),
+            mib_s(11 * buf, iters, dt)
+        );
+    }
+}

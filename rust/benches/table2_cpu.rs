@@ -1,0 +1,32 @@
+//! Bench: paper Table II — CPU-only (16,11) coding time, CEC vs RR8 vs RR16.
+//!
+//! The paper swept three CPUs (Atom/Xeon/Core2); we sweep the backend
+//! (native GF vs the PJRT-executed Pallas kernels) and the word size on the
+//! host CPU, which exposes the same orderings (see DESIGN.md §3).
+//!
+//! Run: `cargo bench --bench table2_cpu`
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend, PjrtBackend};
+use rapidraid::bench_scenarios::table2_cpu;
+
+fn main() {
+    let block = std::env::var("BLOCK_MIB")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(4)
+        << 20;
+    let mut out = std::io::stdout().lock();
+
+    let native: BackendHandle = Arc::new(NativeBackend::new());
+    table2_cpu(&native, block, &mut out).expect("native table2");
+
+    match PjrtBackend::load(&rapidraid::runtime::artifacts::default_dir()) {
+        Ok(be) => {
+            let be: BackendHandle = Arc::new(be);
+            table2_cpu(&be, block, &mut out).expect("pjrt table2");
+        }
+        Err(e) => eprintln!("# pjrt backend skipped: {e} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,191 @@
+//! Pluggable GF compute backends for the archival hot paths.
+//!
+//! Two implementations of the same byte-level contract:
+//!
+//! * [`NativeBackend`] — pure-Rust table-based GF arithmetic
+//!   ([`crate::gf::slice`]), the Jerasure-equivalent baseline.
+//! * [`PjrtBackend`] — executes the AOT-compiled Pallas kernels
+//!   (`artifacts/*.hlo.txt`) through the PJRT CPU client
+//!   ([`crate::runtime`]); this is the L1/L2/L3 composition path.
+//!
+//! Both operate on raw byte buffers (the coordinator's network frames);
+//! `Width` selects GF(2^8) (*RR8*) vs GF(2^16) (*RR16*) semantics. All
+//! coefficients travel as `u32` so node commands stay field-agnostic.
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use std::sync::Arc;
+
+/// Field word width: GF(2^8) or GF(2^16).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Width {
+    /// GF(2^8) — one byte per symbol (paper's RR8 / CEC default).
+    W8,
+    /// GF(2^16) — two little-endian bytes per symbol (paper's RR16).
+    W16,
+}
+
+impl Width {
+    /// Bytes per field symbol.
+    pub fn symbol_bytes(self) -> usize {
+        match self {
+            Width::W8 => 1,
+            Width::W16 => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for Width {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Width::W8 => write!(f, "gf8"),
+            Width::W16 => write!(f, "gf16"),
+        }
+    }
+}
+
+/// GF compute used by storage nodes on the archival hot path.
+pub trait EncodeBackend: Send + Sync {
+    /// One RapidRAID pipeline stage over one network buffer (paper eqs.
+    /// (3)/(4)): returns `(x_out, c)` where
+    /// `x_out = x_in ⊕ Σ psi[j]·locals[j]`, `c = x_in ⊕ Σ xi[j]·locals[j]`.
+    fn pipeline_step(
+        &self,
+        w: Width,
+        x_in: &[u8],
+        locals: &[&[u8]],
+        psi: &[u32],
+        xi: &[u32],
+    ) -> anyhow::Result<(Vec<u8>, Vec<u8>)>;
+
+    /// Fold one source buffer into `m` parity accumulators (classical
+    /// streamlined encoding): `parity[i] ^= coeffs[i] · src`.
+    fn fold_parity(
+        &self,
+        w: Width,
+        coeffs: &[u32],
+        src: &[u8],
+        parity: &mut [Vec<u8>],
+    ) -> anyhow::Result<()>;
+
+    /// Dense GF matrix application: `out[i] = Σ_j mat[i][j] · data[j]`
+    /// (decode inverse application, batch parity generation).
+    fn gemm(&self, w: Width, mat: &[Vec<u32>], data: &[&[u8]]) -> anyhow::Result<Vec<Vec<u8>>>;
+
+    /// Backend label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Shared, thread-safe backend handle as stored in node commands.
+pub type BackendHandle = Arc<dyn EncodeBackend>;
+
+/// Run the backend conformance suite (also used by the PJRT integration
+/// tests in `rust/tests/pjrt_runtime.rs`).
+pub fn conformance_entry(be: &dyn EncodeBackend, buf_bytes: usize) {
+    conformance::run(be, buf_bytes)
+}
+
+pub mod conformance {
+    //! Shared conformance suite: any backend must agree with the scalar
+    //! field operations bit-for-bit. Called by the native and PJRT tests.
+    use super::*;
+    use crate::gf::tables::mul_bitwise;
+    use crate::util::SplitMix64;
+
+    fn scalar_mul_buf(w: Width, c: u32, src: &[u8]) -> Vec<u8> {
+        match w {
+            Width::W8 => src.iter().map(|&b| mul_bitwise(c, b as u32, 8) as u8).collect(),
+            Width::W16 => {
+                let mut out = Vec::with_capacity(src.len());
+                for p in src.chunks_exact(2) {
+                    let v = u16::from_le_bytes([p[0], p[1]]) as u32;
+                    let r = mul_bitwise(c, v, 16) as u16;
+                    out.extend_from_slice(&r.to_le_bytes());
+                }
+                out
+            }
+        }
+    }
+
+    fn xor(a: &[u8], b: &[u8]) -> Vec<u8> {
+        a.iter().zip(b).map(|(x, y)| x ^ y).collect()
+    }
+
+    /// Run the full conformance suite against `be` with buffers of
+    /// `buf_bytes` (must satisfy the backend's shape constraints).
+    pub fn run(be: &dyn EncodeBackend, buf_bytes: usize) {
+        let mut rng = SplitMix64::new(0xC0FFEE);
+        for w in [Width::W8, Width::W16] {
+            let cmask = match w {
+                Width::W8 => 0xFFu64,
+                Width::W16 => 0xFFFFu64,
+            };
+            // pipeline_step, r = 1 and r = 2
+            for r in 1..=2usize {
+                let mut x = vec![0u8; buf_bytes];
+                rng.fill_bytes(&mut x);
+                let mut locs = Vec::new();
+                for _ in 0..r {
+                    let mut l = vec![0u8; buf_bytes];
+                    rng.fill_bytes(&mut l);
+                    locs.push(l);
+                }
+                let loc_refs: Vec<&[u8]> = locs.iter().map(|l| l.as_slice()).collect();
+                let psi: Vec<u32> = (0..r).map(|_| (rng.next_u64() & cmask) as u32).collect();
+                let xi: Vec<u32> = (0..r).map(|_| (rng.next_u64() & cmask) as u32).collect();
+                let (xo, c) = be.pipeline_step(w, &x, &loc_refs, &psi, &xi).unwrap();
+                let mut ex = x.clone();
+                let mut ec = x.clone();
+                for j in 0..r {
+                    ex = xor(&ex, &scalar_mul_buf(w, psi[j], &locs[j]));
+                    ec = xor(&ec, &scalar_mul_buf(w, xi[j], &locs[j]));
+                }
+                assert_eq!(xo, ex, "{} pipeline_step x_out w={w:?} r={r}", be.name());
+                assert_eq!(c, ec, "{} pipeline_step c w={w:?} r={r}", be.name());
+            }
+
+            // fold_parity (m = 3)
+            let coeffs: Vec<u32> = (0..3).map(|_| (rng.next_u64() & cmask) as u32).collect();
+            let mut src = vec![0u8; buf_bytes];
+            rng.fill_bytes(&mut src);
+            let mut parity: Vec<Vec<u8>> = (0..3)
+                .map(|_| {
+                    let mut p = vec![0u8; buf_bytes];
+                    rng.fill_bytes(&mut p);
+                    p
+                })
+                .collect();
+            let before = parity.clone();
+            be.fold_parity(w, &coeffs, &src, &mut parity).unwrap();
+            for i in 0..3 {
+                let expect = xor(&before[i], &scalar_mul_buf(w, coeffs[i], &src));
+                assert_eq!(parity[i], expect, "{} fold_parity row {i} w={w:?}", be.name());
+            }
+
+            // gemm (2x3)
+            let mat: Vec<Vec<u32>> = (0..2)
+                .map(|_| (0..3).map(|_| (rng.next_u64() & cmask) as u32).collect())
+                .collect();
+            let data: Vec<Vec<u8>> = (0..3)
+                .map(|_| {
+                    let mut d = vec![0u8; buf_bytes];
+                    rng.fill_bytes(&mut d);
+                    d
+                })
+                .collect();
+            let data_refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+            let out = be.gemm(w, &mat, &data_refs).unwrap();
+            for i in 0..2 {
+                let mut expect = vec![0u8; buf_bytes];
+                for j in 0..3 {
+                    expect = xor(&expect, &scalar_mul_buf(w, mat[i][j], &data[j]));
+                }
+                assert_eq!(out[i], expect, "{} gemm row {i} w={w:?}", be.name());
+            }
+        }
+    }
+}

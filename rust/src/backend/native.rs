@@ -1,0 +1,269 @@
+//! Native Rust GF backend — table-based slice operations, the
+//! Jerasure-equivalent baseline the paper's implementation uses.
+
+use super::{EncodeBackend, Width};
+use crate::gf::field::{Gf65536, GfElem};
+use crate::gf::slice::{bytes_as_gf256, bytes_as_gf256_mut, SliceOps};
+use crate::gf::Gf256;
+
+/// Pure-Rust GF compute (no PJRT).
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    /// New native backend.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+/// `dst ^= c * src` over GF(2^16) on raw little-endian byte buffers.
+///
+/// Works on unaligned `&[u8]` (payloads come straight off network frames);
+/// uses the same split-table method as `gf::slice` — two 256-entry tables
+/// per coefficient, two lookups + XOR per 16-bit word.
+fn mul_slice_xor16_bytes(c: u16, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(src.len(), dst.len());
+    assert_eq!(src.len() % 2, 0, "GF(2^16) payload must have even length");
+    if c == 0 {
+        return;
+    }
+    if c == 1 {
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d ^= s;
+        }
+        return;
+    }
+    let t = Gf65536::tables();
+    let lc = t.log[c as usize];
+    let mut lo = [0u16; 256];
+    let mut hi = [0u16; 256];
+    for b in 1usize..256 {
+        lo[b] = t.exp[(lc + t.log[b]) as usize] as u16;
+        hi[b] = t.exp[(lc + t.log[b << 8]) as usize] as u16;
+    }
+    for (d, s) in dst.chunks_exact_mut(2).zip(src.chunks_exact(2)) {
+        let p = lo[s[0] as usize] ^ hi[s[1] as usize];
+        let v = u16::from_le_bytes([d[0], d[1]]) ^ p;
+        d.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// `dst ^= c * src` dispatched on width, on raw byte buffers.
+pub fn mul_xor_bytes(w: Width, c: u32, src: &[u8], dst: &mut [u8]) {
+    match w {
+        Width::W8 => {
+            Gf256::mul_slice_xor(Gf256(c as u8), bytes_as_gf256(src), bytes_as_gf256_mut(dst))
+        }
+        Width::W16 => mul_slice_xor16_bytes(c as u16, src, dst),
+    }
+}
+
+/// Fused dual product table pass for GF(2^8): one read of each local byte
+/// feeds BOTH the ψ and ξ lookups (`x ^= tp[s]; c ^= tq[s]`) — mirrors the
+/// fused Pallas `pipeline_step` kernel and halves memory traffic vs two
+/// `mul_slice_xor` passes (§Perf: 440 → ~900 MiB/s on the bench host).
+fn fused_step8(p: u8, q: u8, loc: &[u8], x_out: &mut [u8], c: &mut [u8]) {
+    let t8 = crate::gf::field::Gf256::tables();
+    let build = |coef: u8| -> [u8; 256] {
+        let mut t = [0u8; 256];
+        if coef != 0 {
+            let lc = t8.log[coef as usize];
+            for (s, slot) in t.iter_mut().enumerate().skip(1) {
+                *slot = t8.exp[(lc + t8.log[s]) as usize] as u8;
+            }
+        }
+        t
+    };
+    let tp = build(p);
+    let tq = build(q);
+    for ((l, x), cc) in loc.iter().zip(x_out.iter_mut()).zip(c.iter_mut()) {
+        let s = *l as usize;
+        *x ^= tp[s];
+        *cc ^= tq[s];
+    }
+}
+
+/// Fused dual split-table pass for GF(2^16) (two 256-entry tables per
+/// coefficient; one read of each 16-bit word feeds both products).
+fn fused_step16(p: u16, q: u16, loc: &[u8], x_out: &mut [u8], c: &mut [u8]) {
+    let t16 = Gf65536::tables();
+    let build = |coef: u16| -> ([u16; 256], [u16; 256]) {
+        let mut lo = [0u16; 256];
+        let mut hi = [0u16; 256];
+        if coef != 0 {
+            let lc = t16.log[coef as usize];
+            for b in 1usize..256 {
+                lo[b] = t16.exp[(lc + t16.log[b]) as usize] as u16;
+                hi[b] = t16.exp[(lc + t16.log[b << 8]) as usize] as u16;
+            }
+        }
+        (lo, hi)
+    };
+    let (plo, phi) = build(p);
+    let (qlo, qhi) = build(q);
+    for ((l, x), cc) in loc
+        .chunks_exact(2)
+        .zip(x_out.chunks_exact_mut(2))
+        .zip(c.chunks_exact_mut(2))
+    {
+        let (b0, b1) = (l[0] as usize, l[1] as usize);
+        let xp = plo[b0] ^ phi[b1];
+        let xq = qlo[b0] ^ qhi[b1];
+        let xv = u16::from_le_bytes([x[0], x[1]]) ^ xp;
+        x.copy_from_slice(&xv.to_le_bytes());
+        let cv = u16::from_le_bytes([cc[0], cc[1]]) ^ xq;
+        cc.copy_from_slice(&cv.to_le_bytes());
+    }
+}
+
+impl EncodeBackend for NativeBackend {
+    fn pipeline_step(
+        &self,
+        w: Width,
+        x_in: &[u8],
+        locals: &[&[u8]],
+        psi: &[u32],
+        xi: &[u32],
+    ) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
+        anyhow::ensure!(
+            locals.len() == psi.len() && locals.len() == xi.len(),
+            "coefficient arity mismatch"
+        );
+        let mut x_out = x_in.to_vec();
+        let mut c = x_in.to_vec();
+        for (j, loc) in locals.iter().enumerate() {
+            anyhow::ensure!(loc.len() == x_in.len(), "local block length mismatch");
+            match w {
+                Width::W8 => {
+                    fused_step8(psi[j] as u8, xi[j] as u8, loc, &mut x_out, &mut c)
+                }
+                Width::W16 => {
+                    anyhow::ensure!(loc.len() % 2 == 0, "GF(2^16) length must be even");
+                    fused_step16(psi[j] as u16, xi[j] as u16, loc, &mut x_out, &mut c)
+                }
+            }
+        }
+        Ok((x_out, c))
+    }
+
+    fn fold_parity(
+        &self,
+        w: Width,
+        coeffs: &[u32],
+        src: &[u8],
+        parity: &mut [Vec<u8>],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(coeffs.len() == parity.len(), "coefficient arity mismatch");
+        for (c, p) in coeffs.iter().zip(parity.iter_mut()) {
+            anyhow::ensure!(p.len() == src.len(), "parity buffer length mismatch");
+            mul_xor_bytes(w, *c, src, p);
+        }
+        Ok(())
+    }
+
+    fn gemm(&self, w: Width, mat: &[Vec<u32>], data: &[&[u8]]) -> anyhow::Result<Vec<Vec<u8>>> {
+        let k = data.len();
+        anyhow::ensure!(mat.iter().all(|r| r.len() == k), "matrix/data shape mismatch");
+        let len = data.first().map_or(0, |d| d.len());
+        anyhow::ensure!(data.iter().all(|d| d.len() == len), "ragged data blocks");
+        let mut out = vec![vec![0u8; len]; mat.len()];
+        match w {
+            // Row-fused GF(2^8) path (§Perf): per output row, keep the k
+            // product tables L1-resident and accumulate in a register —
+            // one write per output byte instead of k read-modify-writes.
+            Width::W8 => {
+                for (row, o) in mat.iter().zip(out.iter_mut()) {
+                    let t8 = crate::gf::field::Gf256::tables();
+                    let tables: Vec<[u8; 256]> = row
+                        .iter()
+                        .map(|&coef| {
+                            let mut t = [0u8; 256];
+                            if coef != 0 {
+                                let lc = t8.log[coef as usize];
+                                for (s, slot) in t.iter_mut().enumerate().skip(1) {
+                                    *slot = t8.exp[(lc + t8.log[s]) as usize] as u8;
+                                }
+                            }
+                            t
+                        })
+                        .collect();
+                    // L1-blocked accumulation: per 4 KiB chunk, one
+                    // sequential table pass per source keeps the chunk
+                    // accumulator cache-hot and lets the compiler elide
+                    // bounds checks on the zipped slices.
+                    const CHUNK: usize = 4096;
+                    let mut start = 0;
+                    while start < len {
+                        let end = (start + CHUNK).min(len);
+                        let oc = &mut o[start..end];
+                        for (t, d) in tables.iter().zip(data) {
+                            for (ob, s) in oc.iter_mut().zip(&d[start..end]) {
+                                *ob ^= t[*s as usize];
+                            }
+                        }
+                        start = end;
+                    }
+                }
+            }
+            Width::W16 => {
+                for (row, o) in mat.iter().zip(out.iter_mut()) {
+                    for (c, d) in row.iter().zip(data) {
+                        mul_xor_bytes(w, *c, d, o);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::conformance;
+
+    #[test]
+    fn conformance_suite() {
+        conformance::run(&NativeBackend::new(), 4096);
+    }
+
+    #[test]
+    fn conformance_odd_small_buffer() {
+        // W8 path also works on odd lengths; the suite uses even sizes so
+        // W16 stays valid — check W8 separately at odd length.
+        let be = NativeBackend::new();
+        let x = vec![7u8; 33];
+        let l = vec![9u8; 33];
+        let (xo, c) = be
+            .pipeline_step(Width::W8, &x, &[&l], &[1], &[1])
+            .unwrap();
+        assert_eq!(xo, c);
+        assert_eq!(xo[0], 7 ^ 9);
+    }
+
+    #[test]
+    fn arity_errors() {
+        let be = NativeBackend::new();
+        let x = vec![0u8; 16];
+        let l = vec![0u8; 16];
+        assert!(be.pipeline_step(Width::W8, &x, &[&l], &[1, 2], &[1]).is_err());
+        let mut p = vec![vec![0u8; 16]];
+        assert!(be.fold_parity(Width::W8, &[1, 2], &x, &mut p).is_err());
+        assert!(be.gemm(Width::W8, &[vec![1, 2]], &[&x]).is_err());
+    }
+
+    #[test]
+    fn gf16_identity_and_zero() {
+        let be = NativeBackend::new();
+        let src = vec![0xAB; 64];
+        let mut parity = vec![vec![0u8; 64], vec![0x11; 64]];
+        be.fold_parity(Width::W16, &[1, 0], &src, &mut parity).unwrap();
+        assert_eq!(parity[0], src);
+        assert_eq!(parity[1], vec![0x11; 64]);
+    }
+}

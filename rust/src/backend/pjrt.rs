@@ -1,0 +1,80 @@
+//! PJRT backend: the GF hot-spots execute inside the AOT-compiled Pallas
+//! kernels through [`crate::runtime::PjrtEngine`].
+//!
+//! This is the full three-layer composition: L3 coordinator (Rust) → L2 jax
+//! graph → L1 Pallas kernel, with Python long gone by the time any of this
+//! runs.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::{EncodeBackend, Width};
+use crate::runtime::PjrtEngine;
+
+/// Backend executing GF compute on the PJRT CPU client.
+pub struct PjrtBackend {
+    engine: Arc<PjrtEngine>,
+}
+
+impl PjrtBackend {
+    /// Load artifacts from `dir` and create the engine.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        Ok(Self {
+            engine: Arc::new(PjrtEngine::load(dir)?),
+        })
+    }
+
+    /// Wrap an existing engine (shared across backends).
+    pub fn from_engine(engine: Arc<PjrtEngine>) -> Self {
+        Self { engine }
+    }
+
+    /// The underlying engine.
+    pub fn engine(&self) -> &Arc<PjrtEngine> {
+        &self.engine
+    }
+}
+
+impl EncodeBackend for PjrtBackend {
+    fn pipeline_step(
+        &self,
+        w: Width,
+        x_in: &[u8],
+        locals: &[&[u8]],
+        psi: &[u32],
+        xi: &[u32],
+    ) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
+        self.engine.pipeline_step(w, x_in, locals, psi, xi)
+    }
+
+    fn fold_parity(
+        &self,
+        w: Width,
+        coeffs: &[u32],
+        src: &[u8],
+        parity: &mut [Vec<u8>],
+    ) -> anyhow::Result<()> {
+        // fold = gemm with a column vector: parity[i] ^= coeffs[i] ⊗ src.
+        anyhow::ensure!(coeffs.len() == parity.len(), "coefficient arity mismatch");
+        let mat: Vec<Vec<u32>> = coeffs.iter().map(|&c| vec![c]).collect();
+        let prods = self.engine.gemm(w, &mat, &[src])?;
+        for (p, prod) in parity.iter_mut().zip(prods) {
+            anyhow::ensure!(p.len() == src.len(), "parity buffer length mismatch");
+            for (d, s) in p.iter_mut().zip(&prod) {
+                *d ^= s;
+            }
+        }
+        Ok(())
+    }
+
+    fn gemm(&self, w: Width, mat: &[Vec<u32>], data: &[&[u8]]) -> anyhow::Result<Vec<Vec<u8>>> {
+        self.engine.gemm(w, mat, data)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// Execution tests against real artifacts live in rust/tests/pjrt_runtime.rs
+// (they require `make artifacts` to have produced artifacts/).

@@ -1,0 +1,406 @@
+//! Experiment drivers that regenerate the paper's evaluation (Section VI).
+//!
+//! Shared by the CLI (`rapidraid bench-*`), the examples and the bench
+//! binaries (`cargo bench`), so every table/figure has exactly one
+//! implementation:
+//!
+//! * [`table2_cpu`] — Table II: CPU-only coding time of CEC / RR8 / RR16
+//!   (all compute on one node, no network).
+//! * [`fig4_coding_times`] — Fig. 4: single-object and 16-concurrent-object
+//!   coding times on the TPC / EC2 presets.
+//! * [`fig5_congestion`] — Fig. 5: coding time vs number of congested
+//!   nodes (netem-equivalent profile).
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+use crate::backend::{BackendHandle, Width};
+use crate::cluster::{Cluster, ClusterSpec, CongestionSpec};
+use crate::codes::rapidraid::RapidRaidCode;
+use crate::codes::ClassicalCode;
+use crate::coordinator::batch::{rotated_chain, run_batch, BatchJob};
+use crate::coordinator::{ingest_object, ClassicalJob, PipelineJob};
+use crate::gf::{Gf256, Gf65536, GfElem};
+use crate::metrics::{Candle, Recorder};
+use crate::storage::{ObjectId, ReplicaPlacement};
+
+/// Evaluation code parameters: the paper's (16, 11).
+pub const N: usize = 16;
+/// Message length of the evaluation code.
+pub const K: usize = 11;
+/// Default network buffer (one streaming frame, matches the AOT artifacts).
+pub const BUF_BYTES: usize = 65536;
+
+/// The three implementations of Table II / Fig. 4.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Impl {
+    /// Classical (16,11) Cauchy Reed-Solomon (*CEC*).
+    Cec,
+    /// 8-bit RapidRAID (*RR8*).
+    Rr8,
+    /// 16-bit RapidRAID (*RR16*).
+    Rr16,
+}
+
+impl std::fmt::Display for Impl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Impl::Cec => write!(f, "CEC"),
+            Impl::Rr8 => write!(f, "RR8"),
+            Impl::Rr16 => write!(f, "RR16"),
+        }
+    }
+}
+
+/// Parity rows of the (N, K) Cauchy code as u32 (for node commands).
+pub fn cec_parity_rows() -> Vec<Vec<u32>> {
+    let code = ClassicalCode::<Gf256>::new(N, K).expect("(16,11) code");
+    let p = code.parity_matrix();
+    (0..p.rows())
+        .map(|i| p.row(i).iter().map(|c| c.to_u32()).collect())
+        .collect()
+}
+
+/// The evaluation RR8 code (coefficients via the documented search seed).
+pub fn rr8_code() -> RapidRaidCode<Gf256> {
+    RapidRaidCode::<Gf256>::with_seed(N, K, 5).expect("(16,11) rr8")
+}
+
+/// The evaluation RR16 code.
+pub fn rr16_code() -> RapidRaidCode<Gf65536> {
+    RapidRaidCode::<Gf65536>::with_seed(N, K, 12).expect("(16,11) rr16")
+}
+
+// ---------------------------------------------------------------------------
+// Table II — CPU-only coding time
+// ---------------------------------------------------------------------------
+
+/// In-process encode of one (16,11) object with no network I/O, mirroring
+/// the paper's Table II methodology ("the execution of the n = 16 nodes
+/// occur in a single node, avoiding all the network I/O").
+pub fn cpu_encode_once(backend: &BackendHandle, imp: Impl, object: &[Vec<u8>]) -> Duration {
+    let block_bytes = object[0].len();
+    let t0 = Instant::now();
+    match imp {
+        Impl::Cec => {
+            let rows = cec_parity_rows();
+            let mut offset = 0;
+            while offset < block_bytes {
+                let len = BUF_BYTES.min(block_bytes - offset);
+                let bufs: Vec<&[u8]> =
+                    object.iter().map(|b| &b[offset..offset + len]).collect();
+                let parity = backend.gemm(Width::W8, &rows, &bufs).expect("gemm");
+                std::hint::black_box(parity);
+                offset += len;
+            }
+        }
+        Impl::Rr8 => cpu_pipeline_chain(backend, Width::W8, &rr8_schedule(), object),
+        Impl::Rr16 => cpu_pipeline_chain(backend, Width::W16, &rr16_schedule(), object),
+    }
+    t0.elapsed()
+}
+
+fn rr8_schedule() -> Vec<(Vec<usize>, Vec<u32>, Vec<u32>)> {
+    rr8_code()
+        .schedule()
+        .iter()
+        .map(|s| {
+            (
+                s.locals.clone(),
+                s.psi.iter().map(|c| c.to_u32()).collect(),
+                s.xi.iter().map(|c| c.to_u32()).collect(),
+            )
+        })
+        .collect()
+}
+
+fn rr16_schedule() -> Vec<(Vec<usize>, Vec<u32>, Vec<u32>)> {
+    rr16_code()
+        .schedule()
+        .iter()
+        .map(|s| {
+            (
+                s.locals.clone(),
+                s.psi.iter().map(|c| c.to_u32()).collect(),
+                s.xi.iter().map(|c| c.to_u32()).collect(),
+            )
+        })
+        .collect()
+}
+
+fn cpu_pipeline_chain(
+    backend: &BackendHandle,
+    width: Width,
+    schedule: &[(Vec<usize>, Vec<u32>, Vec<u32>)],
+    object: &[Vec<u8>],
+) {
+    let block_bytes = object[0].len();
+    let mut offset = 0;
+    while offset < block_bytes {
+        let len = BUF_BYTES.min(block_bytes - offset);
+        let mut x = vec![0u8; len];
+        for (locals, psi, xi) in schedule {
+            let locs: Vec<&[u8]> = locals.iter().map(|&b| &object[b][offset..offset + len]).collect();
+            let (x_next, c) = backend.pipeline_step(width, &x, &locs, psi, xi).expect("step");
+            std::hint::black_box(c);
+            x = x_next;
+        }
+        offset += len;
+    }
+}
+
+/// Table II: CPU-only coding time of CEC / RR8 / RR16 for one object of
+/// K×`block_bytes` (the paper used 11 × 64 MB on three CPUs; we sweep the
+/// implementation on the host CPU — see DESIGN.md §3).
+pub fn table2_cpu(
+    backend: &BackendHandle,
+    block_bytes: usize,
+    out: &mut dyn Write,
+) -> anyhow::Result<()> {
+    writeln!(out, "# Table II — CPU-only (16,11) coding time, no network I/O")?;
+    writeln!(
+        out,
+        "# object: {} x {} MiB = {} MiB; backend: {}",
+        K,
+        block_bytes >> 20,
+        (K * block_bytes) >> 20,
+        backend.name()
+    )?;
+    let object: Vec<Vec<u8>> = (0..K)
+        .map(|i| crate::coordinator::object_bytes(ObjectId(0xC0DE), i, block_bytes))
+        .collect();
+    writeln!(out, "{:>6} {:>12} {:>12}", "impl", "seconds", "MiB/s")?;
+    for imp in [Impl::Cec, Impl::Rr8, Impl::Rr16] {
+        let mut times: Vec<Duration> = (0..3)
+            .map(|_| cpu_encode_once(backend, imp, &object))
+            .collect();
+        times.sort_unstable();
+        let med = times[times.len() / 2];
+        writeln!(
+            out,
+            "{:>6} {:>12.3} {:>12.1}",
+            imp.to_string(),
+            med.as_secs_f64(),
+            (K * block_bytes) as f64 / (1 << 20) as f64 / med.as_secs_f64()
+        )?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — cluster coding times
+// ---------------------------------------------------------------------------
+
+fn cluster_for(preset: &str, nodes: usize) -> anyhow::Result<Cluster> {
+    Ok(match preset {
+        "tpc" => Cluster::start(ClusterSpec::tpc(nodes)),
+        "ec2" => Cluster::start(ClusterSpec::ec2(nodes)),
+        "test" => Cluster::start(ClusterSpec::test(nodes)),
+        other => anyhow::bail!("unknown preset {other} (tpc|ec2|test)"),
+    })
+}
+
+/// Build the jobs for `objects` concurrent encodings of implementation
+/// `imp`, with roles rotated so object i starts at node i (the paper's
+/// 16-object experiment layout). Ingests the objects first.
+pub fn build_jobs(
+    cluster: &Cluster,
+    imp: Impl,
+    objects: usize,
+    block_bytes: usize,
+    id_base: u64,
+) -> anyhow::Result<Vec<BatchJob>> {
+    let nodes = cluster.len();
+    let mut jobs = Vec::with_capacity(objects);
+    for i in 0..objects {
+        let object = ObjectId(id_base + i as u64);
+        let chain = rotated_chain(nodes, N, i);
+        let placement = ReplicaPlacement::new(object, K, chain.clone())?;
+        ingest_object(cluster, &placement, block_bytes)?;
+        let job = match imp {
+            Impl::Cec => {
+                // coding node = first parity holder (keeps one parity local;
+                // downloads all k source blocks): eq. (1) layout.
+                BatchJob::Classical(ClassicalJob {
+                    object,
+                    width: Width::W8,
+                    parity_rows: cec_parity_rows(),
+                    source_nodes: chain[..K].to_vec(),
+                    coding_node: chain[K],
+                    parity_nodes: chain[K..].to_vec(),
+                    buf_bytes: BUF_BYTES,
+                    block_bytes,
+                })
+            }
+            Impl::Rr8 => BatchJob::Pipeline(PipelineJob::from_code(
+                &rr8_code(),
+                &placement,
+                BUF_BYTES,
+                block_bytes,
+            )?),
+            Impl::Rr16 => BatchJob::Pipeline(PipelineJob::from_code(
+                &rr16_code(),
+                &placement,
+                BUF_BYTES,
+                block_bytes,
+            )?),
+        };
+        jobs.push(job);
+    }
+    Ok(jobs)
+}
+
+/// Fig. 4: coding times of CEC/RR8/RR16 for `objects` concurrent encodings
+/// on a 16-node cluster of the given preset; `samples` repetitions feed the
+/// candles (median, 25–75%, min–max) like the paper's box plots.
+pub fn fig4_coding_times(
+    backend: &BackendHandle,
+    preset: &str,
+    objects: usize,
+    block_bytes: usize,
+    samples: usize,
+    out: &mut dyn Write,
+) -> anyhow::Result<Vec<Candle>> {
+    writeln!(
+        out,
+        "# Fig. 4{} — {} object(s), preset={preset}, block={} MiB, backend={}",
+        if objects == 1 { "a" } else { "b" },
+        objects,
+        block_bytes >> 20,
+        backend.name()
+    )?;
+    let rec = Recorder::new();
+    let mut id_base = 1000;
+    for imp in [Impl::Cec, Impl::Rr8, Impl::Rr16] {
+        for _ in 0..samples {
+            // fresh cluster per sample: no leftover queue state
+            let cluster = cluster_for(preset, N)?;
+            let jobs = build_jobs(&cluster, imp, objects, block_bytes, id_base)?;
+            id_base += objects as u64;
+            let times = run_batch(&cluster, backend, &jobs)?;
+            for t in times {
+                rec.record(&imp.to_string(), t);
+            }
+        }
+    }
+    let candles = rec.candles();
+    for c in &candles {
+        writeln!(out, "{}", c.report())?;
+    }
+    let cec = rec.candle("CEC").unwrap();
+    for name in ["RR8", "RR16"] {
+        if let Some(c) = rec.candle(name) {
+            writeln!(
+                out,
+                "# {name} vs CEC: {:.1}% coding-time reduction",
+                100.0 * (1.0 - c.median().as_secs_f64() / cec.median().as_secs_f64())
+            )?;
+        }
+    }
+    Ok(candles)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — congested networks
+// ---------------------------------------------------------------------------
+
+/// Fig. 5: mean ± stddev coding time of CEC vs RR8 as 0..=`max_congested`
+/// nodes get the netem profile (500 Mbps + 100±10 ms). `objects` = 1
+/// reproduces Fig. 5a, 16 reproduces Fig. 5b.
+pub fn fig5_congestion(
+    backend: &BackendHandle,
+    max_congested: usize,
+    objects: usize,
+    block_bytes: usize,
+    samples: usize,
+    out: &mut dyn Write,
+) -> anyhow::Result<()> {
+    writeln!(
+        out,
+        "# Fig. 5{} — TPC preset, netem profile on 0..={max_congested} nodes, {} object(s), block={} MiB",
+        if objects == 1 { "a" } else { "b" },
+        objects,
+        block_bytes >> 20
+    )?;
+    writeln!(
+        out,
+        "{:>10} {:>6} {:>12} {:>12}",
+        "congested", "impl", "mean_s", "stddev_s"
+    )?;
+    let profile = CongestionSpec::paper_netem();
+    let mut id_base = 100_000;
+    for congested in 0..=max_congested {
+        for imp in [Impl::Cec, Impl::Rr8] {
+            let rec = Recorder::new();
+            for _ in 0..samples {
+                let cluster = cluster_for("tpc", N)?;
+                for node in 0..congested {
+                    cluster.congest(node, &profile);
+                }
+                let jobs = build_jobs(&cluster, imp, objects, block_bytes, id_base)?;
+                id_base += objects as u64;
+                let times = run_batch(&cluster, backend, &jobs)?;
+                for t in times {
+                    rec.record(&imp.to_string(), t);
+                }
+            }
+            let c = rec.candle(&imp.to_string()).unwrap();
+            writeln!(
+                out,
+                "{:>10} {:>6} {:>12.3} {:>12.4}",
+                congested,
+                imp.to_string(),
+                c.mean().as_secs_f64(),
+                c.stddev_secs()
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use std::sync::Arc;
+
+    #[test]
+    fn cpu_encode_all_impls_run() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let object: Vec<Vec<u8>> = (0..K).map(|i| vec![i as u8; 65536]).collect();
+        for imp in [Impl::Cec, Impl::Rr8, Impl::Rr16] {
+            let dt = cpu_encode_once(&be, imp, &object);
+            assert!(dt > Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn fig4_smoke_single_object_test_preset() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let mut out = Vec::new();
+        let candles = fig4_coding_times(&be, "test", 1, 256 * 1024, 1, &mut out).unwrap();
+        assert_eq!(candles.len(), 3);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("CEC") && text.contains("RR8") && text.contains("RR16"));
+    }
+
+    #[test]
+    fn build_jobs_rotates_roles() {
+        let cluster = Cluster::start(ClusterSpec::test(N));
+        let jobs = build_jobs(&cluster, Impl::Cec, 2, 4096, 1).unwrap();
+        match (&jobs[0], &jobs[1]) {
+            (BatchJob::Classical(a), BatchJob::Classical(b)) => {
+                assert_eq!(a.coding_node, K); // chain offset 0
+                assert_eq!(b.coding_node, (K + 1) % N); // offset 1
+            }
+            _ => panic!("expected classical jobs"),
+        }
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let mut out = Vec::new();
+        assert!(fig4_coding_times(&be, "lan", 1, 4096, 1, &mut out).is_err());
+    }
+}

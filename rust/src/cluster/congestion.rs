@@ -1,0 +1,49 @@
+//! Congestion injection — the simulation equivalent of the paper's `netem`
+//! configuration (Section VI-D): bandwidth clamped from 1 Gbps to 500 Mbps
+//! and 100 ms ± 10 ms latency added on congested nodes.
+
+use std::time::Duration;
+
+/// A congestion profile applied to a node's NICs and links.
+#[derive(Clone, Debug)]
+pub struct CongestionSpec {
+    /// Clamped NIC bandwidth (both directions), bytes/second.
+    pub bytes_per_sec: f64,
+    /// Added one-way latency on links touching the node.
+    pub extra_latency: Duration,
+    /// Uniform jitter amplitude on the added latency.
+    pub jitter: Duration,
+}
+
+impl CongestionSpec {
+    /// The paper's exact netem profile: 500 Mbps + 100 ms ± 10 ms.
+    pub fn paper_netem() -> Self {
+        Self {
+            bytes_per_sec: 62.5e6, // 500 Mbps
+            extra_latency: Duration::from_millis(100),
+            jitter: Duration::from_millis(10),
+        }
+    }
+
+    /// A milder profile for fast test runs (same shape, smaller numbers).
+    pub fn mild() -> Self {
+        Self {
+            bytes_per_sec: 62.5e6,
+            extra_latency: Duration::from_millis(10),
+            jitter: Duration::from_millis(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_profile_values() {
+        let p = CongestionSpec::paper_netem();
+        assert!((p.bytes_per_sec - 62.5e6).abs() < 1.0);
+        assert_eq!(p.extra_latency, Duration::from_millis(100));
+        assert_eq!(p.jitter, Duration::from_millis(10));
+    }
+}

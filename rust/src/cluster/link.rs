@@ -1,0 +1,232 @@
+//! Point-to-point data links: paced by both endpoint NICs, delayed by
+//! propagation latency (+jitter), carrying real byte frames.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::nic::{sleep_until, RateLimiter};
+use crate::util::SplitMix64;
+
+/// Propagation characteristics of a link.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// One-way propagation latency.
+    pub latency: Duration,
+    /// Uniform jitter amplitude (delivery latency ∈ latency ± jitter).
+    pub jitter: Duration,
+}
+
+impl LinkSpec {
+    /// Zero-latency spec (unit tests).
+    pub fn instant() -> Self {
+        Self {
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+        }
+    }
+}
+
+/// A unit of payload on the wire.
+#[derive(Debug)]
+pub enum Frame {
+    /// One network buffer of payload.
+    Data(Vec<u8>),
+    /// End of stream.
+    End,
+}
+
+impl Frame {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            Frame::Data(d) => d.len(),
+            Frame::End => 0,
+        }
+    }
+}
+
+/// Sending half of a link.
+pub struct Tx {
+    sender: mpsc::Sender<(Instant, Frame)>,
+    up: Arc<RateLimiter>,
+    down: Arc<RateLimiter>,
+    spec: LinkSpec,
+    rng: SplitMix64,
+}
+
+/// Receiving half of a link.
+pub struct Rx {
+    receiver: mpsc::Receiver<(Instant, Frame)>,
+}
+
+/// Create a link between a sender NIC (`up`) and a receiver NIC (`down`).
+pub fn link(up: Arc<RateLimiter>, down: Arc<RateLimiter>, spec: LinkSpec, seed: u64) -> (Tx, Rx) {
+    let (s, r) = mpsc::channel();
+    (
+        Tx {
+            sender: s,
+            up,
+            down,
+            spec,
+            rng: SplitMix64::new(seed),
+        },
+        Rx { receiver: r },
+    )
+}
+
+impl Tx {
+    /// Transmit a frame: blocks the sender for the NIC transmission time
+    /// (both endpoint NICs reserve the bytes — the slower one paces the
+    /// stream), then enqueues the frame stamped with its delivery instant
+    /// (completion + propagation latency ± jitter).
+    pub fn send(&mut self, frame: Frame) -> anyhow::Result<()> {
+        let bytes = frame.wire_bytes();
+        let done = if bytes > 0 {
+            let _up_done = self.up.acquire(bytes);
+            // Receiver NIC books the same bytes; delivery waits for it, and
+            // competing inbound streams at the receiver serialize here.
+            self.down.reserve(bytes)
+        } else {
+            Instant::now()
+        };
+        let jitter = if self.spec.jitter > Duration::ZERO {
+            let amp = self.spec.jitter.as_secs_f64();
+            Duration::from_secs_f64(amp * self.rng.f64() * 2.0)
+        } else {
+            Duration::ZERO
+        };
+        // latency - jitter_amp + uniform(0, 2*jitter_amp) == latency ± jitter
+        let lat = self.spec.latency.saturating_sub(self.spec.jitter) + jitter;
+        let deliver_at = done + lat;
+        self.sender
+            .send((deliver_at, frame))
+            .map_err(|_| anyhow::anyhow!("link receiver dropped"))
+    }
+
+    /// Convenience: send a payload buffer.
+    pub fn send_data(&mut self, data: Vec<u8>) -> anyhow::Result<()> {
+        self.send(Frame::Data(data))
+    }
+
+    /// Convenience: close the stream.
+    pub fn finish(&mut self) -> anyhow::Result<()> {
+        self.send(Frame::End)
+    }
+}
+
+impl Rx {
+    /// Receive the next frame, waiting for its simulated delivery time.
+    /// Returns `None` when the sender hung up without `End`.
+    pub fn recv(&self) -> Option<Frame> {
+        let (at, frame) = self.receiver.recv().ok()?;
+        sleep_until(at);
+        Some(frame)
+    }
+
+    /// Drain an entire stream into one buffer (until `End`).
+    pub fn recv_all(&self) -> anyhow::Result<Vec<u8>> {
+        let mut out = Vec::new();
+        loop {
+            match self.recv() {
+                Some(Frame::Data(d)) => out.extend_from_slice(&d),
+                Some(Frame::End) => return Ok(out),
+                None => anyhow::bail!("stream ended without End frame"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_nic() -> Arc<RateLimiter> {
+        Arc::new(RateLimiter::new(1e9))
+    }
+
+    #[test]
+    fn roundtrip_payload() {
+        let (mut tx, rx) = link(fast_nic(), fast_nic(), LinkSpec::instant(), 1);
+        tx.send_data(vec![1, 2, 3]).unwrap();
+        tx.send_data(vec![4]).unwrap();
+        tx.finish().unwrap();
+        assert_eq!(rx.recv_all().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn latency_delays_delivery() {
+        let spec = LinkSpec {
+            latency: Duration::from_millis(50),
+            jitter: Duration::ZERO,
+        };
+        let (mut tx, rx) = link(fast_nic(), fast_nic(), spec, 2);
+        let t0 = Instant::now();
+        tx.send_data(vec![0; 8]).unwrap();
+        let _ = rx.recv().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+
+    #[test]
+    fn bandwidth_paces_sender() {
+        // 1 MB through a 10 MB/s uplink: >= ~100 ms of send-side pacing
+        let up = Arc::new(RateLimiter::new(10_000_000.0));
+        let (mut tx, _rx) = link(up, fast_nic(), LinkSpec::instant(), 3);
+        let t0 = Instant::now();
+        for _ in 0..16 {
+            tx.send_data(vec![0; 65536]).unwrap();
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(95));
+    }
+
+    #[test]
+    fn receiver_nic_serializes_competing_streams() {
+        // two senders, one receiver NIC at 10 MB/s, 500 KB each => >= ~100 ms
+        let down = fast_nic();
+        down.set_rate(10_000_000.0);
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        let mut rxs = Vec::new();
+        for s in 0..2 {
+            let (mut tx, rx) = link(fast_nic(), down.clone(), LinkSpec::instant(), 4 + s);
+            rxs.push(rx);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..8 {
+                    tx.send_data(vec![0; 62_500]).unwrap();
+                }
+                tx.finish().unwrap();
+            }));
+        }
+        for rx in &rxs {
+            rx.recv_all().unwrap();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(90), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn recv_none_after_sender_drop() {
+        let (tx, rx) = link(fast_nic(), fast_nic(), LinkSpec::instant(), 9);
+        drop(tx);
+        assert!(rx.recv().is_none());
+        assert!(rx.recv_all().is_err());
+    }
+
+    #[test]
+    fn jitter_stays_within_band() {
+        let spec = LinkSpec {
+            latency: Duration::from_millis(20),
+            jitter: Duration::from_millis(5),
+        };
+        let (mut tx, rx) = link(fast_nic(), fast_nic(), spec, 10);
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            tx.send_data(vec![0; 8]).unwrap();
+            let _ = rx.recv().unwrap();
+            let dt = t0.elapsed();
+            assert!(dt >= Duration::from_millis(14), "{dt:?}");
+            assert!(dt <= Duration::from_millis(60), "{dt:?}");
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Simulated distributed-storage cluster.
+//!
+//! Substitution for the paper's two testbeds (50 HP ThinClients on 1 GbE,
+//! and 16 Amazon EC2 small instances — see DESIGN.md §3): every storage
+//! node is a real OS thread with a block store and a command protocol;
+//! every byte of payload really moves between threads through rate-limited,
+//! latency-delayed channels. Per-node NIC token buckets reproduce the
+//! phenomenon the paper's analysis hinges on — a node's aggregate up/down
+//! bandwidth is finite, so k parallel downloads into one coding node cost
+//! ~k block-times (eq. 1) while the pipeline's node-to-node hops overlap
+//! (eq. 2).
+//!
+//! Congestion (the paper's `netem` runs: 1 Gbps → 500 Mbps plus 100±10 ms
+//! latency) is applied per node via [`congestion`].
+
+pub mod congestion;
+pub mod link;
+pub mod network;
+pub mod nic;
+pub mod node;
+
+pub use congestion::CongestionSpec;
+pub use link::{Frame, LinkSpec, Rx, Tx};
+pub use network::{Cluster, ClusterSpec};
+pub use nic::RateLimiter;
+pub use node::{Command, NodeHandle};
+
+/// Node identifier within a cluster.
+pub type NodeId = usize;

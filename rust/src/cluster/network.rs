@@ -1,0 +1,226 @@
+//! Cluster assembly: node registry, link factory, testbed presets.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::congestion::CongestionSpec;
+use super::link::{link, LinkSpec, Rx, Tx};
+use super::nic::RateLimiter;
+use super::node::NodeHandle;
+use super::NodeId;
+
+/// Static description of a homogeneous cluster (per-node NIC + base link).
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// Number of storage nodes.
+    pub nodes: usize,
+    /// Per-NIC bandwidth, bytes/second (full duplex: up and down each get
+    /// this rate).
+    pub bytes_per_sec: f64,
+    /// Base one-way link latency.
+    pub latency: Duration,
+    /// Uniform latency jitter amplitude.
+    pub jitter: Duration,
+}
+
+impl ClusterSpec {
+    /// The paper's ThinClient cluster (*TPC*): 1 Gbps LAN, sub-millisecond
+    /// switch latency.
+    pub fn tpc(nodes: usize) -> Self {
+        Self {
+            nodes,
+            bytes_per_sec: 125e6, // 1 Gbps
+            latency: Duration::from_micros(200),
+            jitter: Duration::from_micros(50),
+        }
+    }
+
+    /// The paper's Amazon EC2 small-instance testbed: ~300 Mbps effective,
+    /// millisecond-scale, jittery virtualized network.
+    pub fn ec2(nodes: usize) -> Self {
+        Self {
+            nodes,
+            bytes_per_sec: 37.5e6, // 300 Mbps
+            latency: Duration::from_millis(1),
+            jitter: Duration::from_micros(300),
+        }
+    }
+
+    /// Very fast spec for unit tests (keeps simulated time negligible).
+    pub fn test(nodes: usize) -> Self {
+        Self {
+            nodes,
+            bytes_per_sec: 1e9,
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+        }
+    }
+}
+
+struct NodeNet {
+    extra_latency: Duration,
+    extra_jitter: Duration,
+}
+
+/// A running simulated cluster.
+pub struct Cluster {
+    spec: ClusterSpec,
+    nodes: Vec<NodeHandle>,
+    net: Mutex<Vec<NodeNet>>,
+    link_seed: Mutex<u64>,
+}
+
+impl Cluster {
+    /// Spawn all node threads for `spec`.
+    pub fn start(spec: ClusterSpec) -> Self {
+        let nodes = (0..spec.nodes)
+            .map(|id| {
+                NodeHandle::spawn(
+                    id,
+                    Arc::new(RateLimiter::new(spec.bytes_per_sec)),
+                    Arc::new(RateLimiter::new(spec.bytes_per_sec)),
+                )
+            })
+            .collect();
+        let net = (0..spec.nodes)
+            .map(|_| NodeNet {
+                extra_latency: Duration::ZERO,
+                extra_jitter: Duration::ZERO,
+            })
+            .collect();
+        Self {
+            spec,
+            nodes,
+            net: Mutex::new(net),
+            link_seed: Mutex::new(0x5EED),
+        }
+    }
+
+    /// The cluster spec.
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True if no nodes (never, in practice).
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Node handle by id.
+    pub fn node(&self, id: NodeId) -> &NodeHandle {
+        &self.nodes[id]
+    }
+
+    /// All node handles.
+    pub fn nodes(&self) -> &[NodeHandle] {
+        &self.nodes
+    }
+
+    /// Create a data link from `src` to `dst`, paced by src-up and dst-down
+    /// NICs, with latency = base + max(extra of either endpoint).
+    pub fn connect(&self, src: NodeId, dst: NodeId) -> (Tx, Rx) {
+        assert_ne!(src, dst, "no self-links");
+        let net = self.net.lock().unwrap();
+        let extra_lat = net[src].extra_latency.max(net[dst].extra_latency);
+        let extra_jit = net[src].extra_jitter.max(net[dst].extra_jitter);
+        drop(net);
+        let spec = LinkSpec {
+            latency: self.spec.latency + extra_lat,
+            jitter: self.spec.jitter + extra_jit,
+        };
+        let seed = {
+            let mut s = self.link_seed.lock().unwrap();
+            *s = s.wrapping_add(0x9E3779B97F4A7C15);
+            *s
+        };
+        link(
+            self.nodes[src].up.clone(),
+            self.nodes[dst].down.clone(),
+            spec,
+            seed,
+        )
+    }
+
+    /// Apply a congestion profile to one node (paper's netem runs):
+    /// clamps both NIC directions and adds latency ± jitter to every link
+    /// touching the node.
+    pub fn congest(&self, id: NodeId, c: &CongestionSpec) {
+        self.nodes[id].up.set_rate(c.bytes_per_sec);
+        self.nodes[id].down.set_rate(c.bytes_per_sec);
+        let mut net = self.net.lock().unwrap();
+        net[id].extra_latency = c.extra_latency;
+        net[id].extra_jitter = c.jitter;
+    }
+
+    /// Remove congestion from a node, restoring the cluster preset.
+    pub fn uncongest(&self, id: NodeId) {
+        self.nodes[id].up.set_rate(self.spec.bytes_per_sec);
+        self.nodes[id].down.set_rate(self.spec.bytes_per_sec);
+        let mut net = self.net.lock().unwrap();
+        net[id].extra_latency = Duration::ZERO;
+        net[id].extra_jitter = Duration::ZERO;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn presets_have_expected_shape() {
+        let t = ClusterSpec::tpc(50);
+        assert_eq!(t.nodes, 50);
+        assert!(t.bytes_per_sec > ClusterSpec::ec2(16).bytes_per_sec);
+        assert!(t.latency < ClusterSpec::ec2(16).latency);
+    }
+
+    #[test]
+    fn connect_moves_bytes() {
+        let c = Cluster::start(ClusterSpec::test(3));
+        let (mut tx, rx) = c.connect(0, 2);
+        tx.send_data(vec![42; 10]).unwrap();
+        tx.finish().unwrap();
+        assert_eq!(rx.recv_all().unwrap(), vec![42; 10]);
+    }
+
+    #[test]
+    fn congestion_slows_and_delays() {
+        let c = Cluster::start(ClusterSpec::test(2));
+        c.congest(
+            1,
+            &CongestionSpec {
+                bytes_per_sec: 1e6, // 1 MB/s
+                extra_latency: Duration::from_millis(40),
+                jitter: Duration::ZERO,
+            },
+        );
+        let (mut tx, rx) = c.connect(0, 1);
+        let t0 = Instant::now();
+        tx.send_data(vec![0; 100_000]).unwrap(); // 100 ms at 1 MB/s
+        tx.finish().unwrap();
+        rx.recv_all().unwrap();
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(120), "congestion ignored: {dt:?}");
+
+        c.uncongest(1);
+        let (mut tx, rx) = c.connect(0, 1);
+        let t0 = Instant::now();
+        tx.send_data(vec![0; 100_000]).unwrap();
+        tx.finish().unwrap();
+        rx.recv_all().unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(50), "uncongest failed");
+    }
+
+    #[test]
+    #[should_panic(expected = "no self-links")]
+    fn self_link_rejected() {
+        let c = Cluster::start(ClusterSpec::test(2));
+        let _ = c.connect(1, 1);
+    }
+}

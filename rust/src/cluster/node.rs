@@ -1,0 +1,673 @@
+//! Storage node: one OS thread per node, executing coordinator commands.
+//!
+//! A node owns a block store and its two NIC limiters. Commands arrive on
+//! an mpsc queue; each command runs on its own worker thread so a node can
+//! serve several concurrent roles (e.g. upload a source block while acting
+//! as a pipeline stage for another object — exactly the contention the
+//! multi-object experiments of Fig. 4b/5b create). NIC token buckets keep
+//! the bandwidth accounting honest regardless of the thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use super::link::{Frame, Rx, Tx};
+use super::nic::RateLimiter;
+use super::NodeId;
+use crate::backend::{BackendHandle, Width};
+use crate::storage::{BlockKey, BlockStore};
+
+/// Commands a storage node executes.
+pub enum Command {
+    /// Store a block directly (control plane, unmetered ingest).
+    Put {
+        /// Block key.
+        key: BlockKey,
+        /// Payload.
+        data: Vec<u8>,
+        /// Completion signal.
+        done: mpsc::Sender<anyhow::Result<()>>,
+    },
+    /// Read a block directly (control plane, unmetered; used by the
+    /// coordinator for verification/decode assembly).
+    Peek {
+        /// Block key.
+        key: BlockKey,
+        /// Reply channel.
+        reply: mpsc::Sender<Option<Arc<Vec<u8>>>>,
+    },
+    /// Delete a block (replica reclaim after migration).
+    Delete {
+        /// Block key.
+        key: BlockKey,
+        /// Completion signal with "existed" flag.
+        done: mpsc::Sender<bool>,
+    },
+    /// Stream a stored block out through `tx` in `buf_bytes` frames
+    /// (metered by both NICs — the data plane read path).
+    Upload {
+        /// Block to stream.
+        key: BlockKey,
+        /// Outgoing link.
+        tx: Tx,
+        /// Frame size.
+        buf_bytes: usize,
+        /// Completion signal.
+        done: mpsc::Sender<anyhow::Result<()>>,
+    },
+    /// Receive a streamed block from `rx` and store it under `key`
+    /// (the data plane write path; parity distribution in classical coding).
+    Receive {
+        /// Destination key.
+        key: BlockKey,
+        /// Incoming link.
+        rx: Rx,
+        /// Completion signal.
+        done: mpsc::Sender<anyhow::Result<()>>,
+    },
+    /// Act as stage `position` of a RapidRAID encoding pipeline: for every
+    /// incoming buffer fold the local blocks with ψ/ξ, forward `x_out`
+    /// downstream and append `c` locally (paper eqs. (3)/(4), streamed).
+    PipelineStage {
+        /// GF width (RR8/RR16).
+        width: Width,
+        /// Local source blocks to fold (1 or 2).
+        locals: Vec<BlockKey>,
+        /// Forward coefficients ψ (one per local).
+        psi: Vec<u32>,
+        /// Codeword coefficients ξ (one per local).
+        xi: Vec<u32>,
+        /// Upstream link (None for the chain head, which synthesizes zero
+        /// buffers).
+        prev: Option<Rx>,
+        /// Downstream link (None for the chain tail).
+        next: Option<Tx>,
+        /// Where to store the locally generated block: `Some` stores the
+        /// c output (archival: codeword block c_i; pipelined-decode tail:
+        /// the recovered source block), `None` discards it (pipelined-
+        /// decode intermediate stages only relay the running combination).
+        out_key: Option<BlockKey>,
+        /// Frame size (must equal upstream frame size).
+        buf_bytes: usize,
+        /// GF compute backend.
+        backend: BackendHandle,
+        /// Completion signal.
+        done: mpsc::Sender<anyhow::Result<()>>,
+    },
+    /// Act as the single coding node of a classical erasure encoding:
+    /// stream k source blocks from `sources`, fold each buffer into m
+    /// parity accumulators as it arrives (streamlined, Section III), and
+    /// stream finished parity buffers out to `dests` as soon as each row
+    /// of k source buffers has been folded.
+    ClassicalEncode {
+        /// GF width.
+        width: Width,
+        /// Incoming source streams, in generator-column order. A `None`
+        /// entry means that source block is already local under the
+        /// corresponding key in `local_sources` (data locality).
+        sources: Vec<SourceStream>,
+        /// Parity coefficient rows: `parity_rows[i][j]` multiplies source j
+        /// into parity i (the Cauchy G′ of the (n,k) code).
+        parity_rows: Vec<Vec<u32>>,
+        /// Outgoing parity destinations: `Some(tx)` streams parity i out,
+        /// `None` stores it locally under `local_parity_key` (locality).
+        dests: Vec<Option<Tx>>,
+        /// Key for a locally kept parity block (used where dests[i]=None).
+        local_parity_key: Option<BlockKey>,
+        /// Frame size.
+        buf_bytes: usize,
+        /// Block size (all sources equal).
+        block_bytes: usize,
+        /// GF compute backend.
+        backend: BackendHandle,
+        /// Completion signal.
+        done: mpsc::Sender<anyhow::Result<()>>,
+    },
+    /// Stop the node thread (workers already running keep finishing).
+    Shutdown,
+}
+
+/// One classical-encode input: either a network stream or a local block.
+pub enum SourceStream {
+    /// Remote source arriving on this link.
+    Remote(Rx),
+    /// Local replica (data locality — no network transfer).
+    Local(BlockKey),
+}
+
+/// Handle to a running storage node.
+pub struct NodeHandle {
+    /// Node id within the cluster.
+    pub id: NodeId,
+    /// Command queue.
+    cmd: mpsc::Sender<Command>,
+    /// The node's block store (shared; coordinator uses it read-only in
+    /// tests/verification).
+    pub store: BlockStore,
+    /// Upload NIC.
+    pub up: Arc<RateLimiter>,
+    /// Download NIC.
+    pub down: Arc<RateLimiter>,
+    thread: Option<JoinHandle<()>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl NodeHandle {
+    /// Spawn a node thread with the given NIC limiters.
+    pub fn spawn(id: NodeId, up: Arc<RateLimiter>, down: Arc<RateLimiter>) -> Self {
+        let store = BlockStore::new();
+        let (tx, rx) = mpsc::channel::<Command>();
+        let store2 = store.clone();
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let inflight2 = inflight.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("node-{id}"))
+            .spawn(move || node_loop(rx, store2, inflight2))
+            .expect("spawn node thread");
+        Self {
+            id,
+            cmd: tx,
+            store,
+            up,
+            down,
+            thread: Some(thread),
+            inflight,
+        }
+    }
+
+    /// Enqueue a command.
+    pub fn send(&self, cmd: Command) -> anyhow::Result<()> {
+        self.cmd
+            .send(cmd)
+            .map_err(|_| anyhow::anyhow!("node {} is down", self.id))
+    }
+
+    /// Synchronous Put convenience.
+    pub fn put(&self, key: BlockKey, data: Vec<u8>) -> anyhow::Result<()> {
+        let (done, wait) = mpsc::channel();
+        self.send(Command::Put { key, data, done })?;
+        wait.recv()?
+    }
+
+    /// Synchronous Peek convenience.
+    pub fn peek(&self, key: BlockKey) -> anyhow::Result<Option<Arc<Vec<u8>>>> {
+        let (reply, wait) = mpsc::channel();
+        self.send(Command::Peek { key, reply })?;
+        Ok(wait.recv()?)
+    }
+
+    /// Synchronous Delete convenience.
+    pub fn delete(&self, key: BlockKey) -> anyhow::Result<bool> {
+        let (done, wait) = mpsc::channel();
+        self.send(Command::Delete { key, done })?;
+        Ok(wait.recv()?)
+    }
+
+    /// Number of currently executing data-plane commands.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for NodeHandle {
+    fn drop(&mut self) {
+        let _ = self.cmd.send(Command::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn node_loop(rx: mpsc::Receiver<Command>, store: BlockStore, inflight: Arc<AtomicUsize>) {
+    let mut workers: Vec<JoinHandle<()>> = Vec::new();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Shutdown => break,
+            Command::Put { key, data, done } => {
+                store.put(key, data);
+                let _ = done.send(Ok(()));
+            }
+            Command::Peek { key, reply } => {
+                let _ = reply.send(store.get(&key));
+            }
+            Command::Delete { key, done } => {
+                let _ = done.send(store.delete(&key));
+            }
+            // Data-plane commands run on worker threads so the node can
+            // multiplex several roles; NIC limiters model the contention.
+            other => {
+                let store = store.clone();
+                let inflight = inflight.clone();
+                inflight.fetch_add(1, Ordering::Relaxed);
+                workers.push(std::thread::spawn(move || {
+                    run_dataplane(other, store);
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                }));
+            }
+        }
+        workers.retain(|w| !w.is_finished());
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+fn run_dataplane(cmd: Command, store: BlockStore) {
+    match cmd {
+        Command::Upload {
+            key,
+            mut tx,
+            buf_bytes,
+            done,
+        } => {
+            let _ = done.send(do_upload(&store, key, &mut tx, buf_bytes));
+        }
+        Command::Receive { key, rx, done } => {
+            let _ = done.send(do_receive(&store, key, &rx));
+        }
+        Command::PipelineStage {
+            width,
+            locals,
+            psi,
+            xi,
+            prev,
+            next,
+            out_key,
+            buf_bytes,
+            backend,
+            done,
+        } => {
+            let r = do_pipeline_stage(
+                &store, width, &locals, &psi, &xi, prev, next, out_key, buf_bytes, &backend,
+            );
+            let _ = done.send(r);
+        }
+        Command::ClassicalEncode {
+            width,
+            sources,
+            parity_rows,
+            dests,
+            local_parity_key,
+            buf_bytes,
+            block_bytes,
+            backend,
+            done,
+        } => {
+            let r = do_classical_encode(
+                &store,
+                width,
+                sources,
+                &parity_rows,
+                dests,
+                local_parity_key,
+                buf_bytes,
+                block_bytes,
+                &backend,
+            );
+            let _ = done.send(r);
+        }
+        _ => unreachable!("control-plane command on data plane"),
+    }
+}
+
+fn do_upload(store: &BlockStore, key: BlockKey, tx: &mut Tx, buf_bytes: usize) -> anyhow::Result<()> {
+    let data = store
+        .get(&key)
+        .ok_or_else(|| anyhow::anyhow!("upload: missing block {key:?}"))?;
+    for chunk in data.chunks(buf_bytes) {
+        tx.send_data(chunk.to_vec())?;
+    }
+    tx.finish()
+}
+
+fn do_receive(store: &BlockStore, key: BlockKey, rx: &Rx) -> anyhow::Result<()> {
+    let data = rx.recv_all()?;
+    store.put(key, data);
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn do_pipeline_stage(
+    store: &BlockStore,
+    width: Width,
+    locals: &[BlockKey],
+    psi: &[u32],
+    xi: &[u32],
+    prev: Option<Rx>,
+    mut next: Option<Tx>,
+    out_key: Option<BlockKey>,
+    buf_bytes: usize,
+    backend: &BackendHandle,
+) -> anyhow::Result<()> {
+    let local_blocks: Vec<Arc<Vec<u8>>> = locals
+        .iter()
+        .map(|k| {
+            store
+                .get(k)
+                .ok_or_else(|| anyhow::anyhow!("pipeline stage: missing local block {k:?}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let block_bytes = local_blocks
+        .first()
+        .map(|b| b.len())
+        .ok_or_else(|| anyhow::anyhow!("pipeline stage with no local blocks"))?;
+    anyhow::ensure!(
+        local_blocks.iter().all(|b| b.len() == block_bytes),
+        "local blocks of unequal size"
+    );
+
+    let mut out = Vec::with_capacity(if out_key.is_some() { block_bytes } else { 0 });
+    let mut offset = 0usize;
+    loop {
+        // Obtain the incoming partial-combination buffer: from upstream, or
+        // all-zero for the chain head.
+        let x_in: Vec<u8> = match &prev {
+            Some(rx) => match rx.recv() {
+                Some(Frame::Data(d)) => d,
+                Some(Frame::End) => break,
+                None => anyhow::bail!("upstream link dropped mid-stream"),
+            },
+            None => {
+                if offset >= block_bytes {
+                    break;
+                }
+                vec![0u8; buf_bytes.min(block_bytes - offset)]
+            }
+        };
+        let len = x_in.len();
+        anyhow::ensure!(
+            offset + len <= block_bytes,
+            "incoming stream longer than local blocks"
+        );
+        let loc_slices: Vec<&[u8]> = local_blocks
+            .iter()
+            .map(|b| &b[offset..offset + len])
+            .collect();
+        let (x_out, c) = backend.pipeline_step(width, &x_in, &loc_slices, psi, xi)?;
+        if out_key.is_some() {
+            out.extend_from_slice(&c);
+        }
+        if let Some(tx) = next.as_mut() {
+            tx.send_data(x_out)?;
+        }
+        offset += len;
+    }
+    if let Some(tx) = next.as_mut() {
+        tx.finish()?;
+    }
+    anyhow::ensure!(offset == block_bytes, "stream/block length mismatch");
+    if let Some(key) = out_key {
+        store.put(key, out);
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn do_classical_encode(
+    store: &BlockStore,
+    width: Width,
+    sources: Vec<SourceStream>,
+    parity_rows: &[Vec<u32>],
+    mut dests: Vec<Option<Tx>>,
+    local_parity_key: Option<BlockKey>,
+    buf_bytes: usize,
+    block_bytes: usize,
+    backend: &BackendHandle,
+) -> anyhow::Result<()> {
+    let k = sources.len();
+    let m = parity_rows.len();
+    anyhow::ensure!(dests.len() == m, "dests/parity arity mismatch");
+    anyhow::ensure!(
+        parity_rows.iter().all(|r| r.len() == k),
+        "parity row arity mismatch"
+    );
+    let local_blocks: Vec<Option<Arc<Vec<u8>>>> = sources
+        .iter()
+        .map(|s| match s {
+            SourceStream::Local(key) => store.get(key).map(Some).ok_or_else(|| {
+                anyhow::anyhow!("classical encode: missing local source {key:?}")
+            }),
+            SourceStream::Remote(_) => Ok(None),
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut local_parity_acc: Vec<u8> = Vec::new();
+    let mut offset = 0usize;
+    // Streamlined loop (paper Section III): gather one "row" of k source
+    // buffers (the k-th network buffer of every block), apply the parity
+    // sub-matrix in ONE gemm (this is the AOT Pallas gf_gemm kernel on the
+    // PJRT backend), and ship each parity buffer as soon as it exists.
+    let mut row: Vec<Vec<u8>> = Vec::with_capacity(k);
+    while offset < block_bytes {
+        let len = buf_bytes.min(block_bytes - offset);
+        row.clear();
+        for (j, src) in sources.iter().enumerate() {
+            match src {
+                SourceStream::Remote(rx) => {
+                    let buf = match rx.recv() {
+                        Some(Frame::Data(d)) => d,
+                        other => anyhow::bail!("source {j} stream broke: {other:?}"),
+                    };
+                    anyhow::ensure!(buf.len() == len, "source {j} frame size mismatch");
+                    row.push(buf);
+                }
+                SourceStream::Local(_) => {
+                    let b = local_blocks[j].as_ref().unwrap();
+                    row.push(b[offset..offset + len].to_vec());
+                }
+            }
+        }
+        let row_refs: Vec<&[u8]> = row.iter().map(|b| b.as_slice()).collect();
+        let parity_bufs = backend.gemm(width, parity_rows, &row_refs)?;
+        for (i, pb) in parity_bufs.into_iter().enumerate() {
+            match dests[i].as_mut() {
+                Some(tx) => tx.send_data(pb)?,
+                None => local_parity_acc.extend_from_slice(&pb),
+            }
+        }
+        offset += len;
+    }
+    // close remote source streams (drain End frames) and parity streams
+    for s in &sources {
+        if let SourceStream::Remote(rx) = s {
+            match rx.recv() {
+                Some(Frame::End) => {}
+                other => anyhow::bail!("source stream missing End: {other:?}"),
+            }
+        }
+    }
+    for d in dests.iter_mut().flatten() {
+        d.finish()?;
+    }
+    if let Some(key) = local_parity_key {
+        store.put(key, local_parity_acc);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::cluster::link::{link, LinkSpec};
+    use crate::storage::ObjectId;
+
+    fn nic() -> Arc<RateLimiter> {
+        Arc::new(RateLimiter::new(1e9))
+    }
+
+    fn node(id: NodeId) -> NodeHandle {
+        NodeHandle::spawn(id, nic(), nic())
+    }
+
+    #[test]
+    fn put_peek_delete_roundtrip() {
+        let n = node(0);
+        let key = BlockKey::source(ObjectId(1), 0);
+        n.put(key, vec![1, 2, 3]).unwrap();
+        assert_eq!(*n.peek(key).unwrap().unwrap(), vec![1, 2, 3]);
+        assert!(n.delete(key).unwrap());
+        assert!(n.peek(key).unwrap().is_none());
+    }
+
+    #[test]
+    fn upload_receive_moves_block() {
+        let a = node(0);
+        let b = node(1);
+        let key = BlockKey::source(ObjectId(1), 0);
+        let data: Vec<u8> = (0..100_000u32).map(|i| i as u8).collect();
+        a.put(key, data.clone()).unwrap();
+
+        let (tx, rx) = link(a.up.clone(), b.down.clone(), LinkSpec::instant(), 1);
+        let (d1, w1) = mpsc::channel();
+        let (d2, w2) = mpsc::channel();
+        b.send(Command::Receive { key, rx, done: d2 }).unwrap();
+        a.send(Command::Upload {
+            key,
+            tx,
+            buf_bytes: 4096,
+            done: d1,
+        })
+        .unwrap();
+        w1.recv().unwrap().unwrap();
+        w2.recv().unwrap().unwrap();
+        assert_eq!(*b.peek(key).unwrap().unwrap(), data);
+    }
+
+    #[test]
+    fn two_node_pipeline_produces_correct_codeword() {
+        // 2-stage chain over a (2,1)-ish toy: node0 head, node1 tail.
+        let n0 = node(0);
+        let n1 = node(1);
+        let obj = ObjectId(9);
+        let o0: Vec<u8> = (0..8192u32).map(|i| (i * 7) as u8).collect();
+        n0.put(BlockKey::source(obj, 0), o0.clone()).unwrap();
+        n1.put(BlockKey::source(obj, 0), o0.clone()).unwrap();
+
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let (tx, rx) = link(n0.up.clone(), n1.down.clone(), LinkSpec::instant(), 2);
+        let (d0, w0) = mpsc::channel();
+        let (d1, w1) = mpsc::channel();
+        n1.send(Command::PipelineStage {
+            width: Width::W8,
+            locals: vec![BlockKey::source(obj, 0)],
+            psi: vec![5],
+            xi: vec![9],
+            prev: Some(rx),
+            next: None,
+            out_key: Some(BlockKey::coded(obj, 1)),
+            buf_bytes: 1024,
+            backend: backend.clone(),
+            done: d1,
+        })
+        .unwrap();
+        n0.send(Command::PipelineStage {
+            width: Width::W8,
+            locals: vec![BlockKey::source(obj, 0)],
+            psi: vec![3],
+            xi: vec![7],
+            prev: None,
+            next: Some(tx),
+            out_key: Some(BlockKey::coded(obj, 0)),
+            buf_bytes: 1024,
+            backend,
+            done: d0,
+        })
+        .unwrap();
+        w0.recv().unwrap().unwrap();
+        w1.recv().unwrap().unwrap();
+
+        // c0 = 7*o0 ; c1 = 3*o0 ^ 9*o0
+        use crate::gf::tables::mul_bitwise;
+        let c0 = n0.peek(BlockKey::coded(obj, 0)).unwrap().unwrap();
+        let c1 = n1.peek(BlockKey::coded(obj, 1)).unwrap().unwrap();
+        for i in 0..o0.len() {
+            assert_eq!(c0[i] as u32, mul_bitwise(7, o0[i] as u32, 8));
+            let expect = mul_bitwise(3, o0[i] as u32, 8) ^ mul_bitwise(9, o0[i] as u32, 8);
+            assert_eq!(c1[i] as u32, expect);
+        }
+    }
+
+    #[test]
+    fn classical_encode_with_local_source_and_local_parity() {
+        let coder = node(0);
+        let src_node = node(1);
+        let parity_dst = node(2);
+        let obj = ObjectId(5);
+        let block: usize = 32_768;
+        let b0: Vec<u8> = (0..block).map(|i| (i * 3) as u8).collect();
+        let b1: Vec<u8> = (0..block).map(|i| (i * 5 + 1) as u8).collect();
+        coder.put(BlockKey::source(obj, 0), b0.clone()).unwrap(); // local
+        src_node.put(BlockKey::source(obj, 1), b1.clone()).unwrap(); // remote
+
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        // remote source stream
+        let (s_tx, s_rx) = link(src_node.up.clone(), coder.down.clone(), LinkSpec::instant(), 3);
+        // remote parity stream
+        let (p_tx, p_rx) = link(coder.up.clone(), parity_dst.down.clone(), LinkSpec::instant(), 4);
+
+        let (du, wu) = mpsc::channel();
+        src_node
+            .send(Command::Upload {
+                key: BlockKey::source(obj, 1),
+                tx: s_tx,
+                buf_bytes: 4096,
+                done: du,
+            })
+            .unwrap();
+        let (dr, wr) = mpsc::channel();
+        parity_dst
+            .send(Command::Receive {
+                key: BlockKey::coded(obj, 3),
+                rx: p_rx,
+                done: dr,
+            })
+            .unwrap();
+        let (dc, wc) = mpsc::channel();
+        coder
+            .send(Command::ClassicalEncode {
+                width: Width::W8,
+                sources: vec![
+                    SourceStream::Local(BlockKey::source(obj, 0)),
+                    SourceStream::Remote(s_rx),
+                ],
+                parity_rows: vec![vec![2, 3], vec![4, 5]],
+                dests: vec![None, Some(p_tx)],
+                local_parity_key: Some(BlockKey::coded(obj, 2)),
+                buf_bytes: 4096,
+                block_bytes: block,
+                backend,
+                done: dc,
+            })
+            .unwrap();
+        wu.recv().unwrap().unwrap();
+        wc.recv().unwrap().unwrap();
+        wr.recv().unwrap().unwrap();
+
+        use crate::gf::tables::mul_bitwise;
+        let p0 = coder.peek(BlockKey::coded(obj, 2)).unwrap().unwrap();
+        let p1 = parity_dst.peek(BlockKey::coded(obj, 3)).unwrap().unwrap();
+        for i in 0..block {
+            let e0 = mul_bitwise(2, b0[i] as u32, 8) ^ mul_bitwise(3, b1[i] as u32, 8);
+            let e1 = mul_bitwise(4, b0[i] as u32, 8) ^ mul_bitwise(5, b1[i] as u32, 8);
+            assert_eq!(p0[i] as u32, e0, "parity0 byte {i}");
+            assert_eq!(p1[i] as u32, e1, "parity1 byte {i}");
+        }
+    }
+
+    #[test]
+    fn upload_missing_block_reports_error() {
+        let a = node(0);
+        let b = node(1);
+        let (tx, _rx) = link(a.up.clone(), b.down.clone(), LinkSpec::instant(), 5);
+        let (d, w) = mpsc::channel();
+        a.send(Command::Upload {
+            key: BlockKey::source(ObjectId(404), 0),
+            tx,
+            buf_bytes: 1024,
+            done: d,
+        })
+        .unwrap();
+        assert!(w.recv().unwrap().is_err());
+    }
+}

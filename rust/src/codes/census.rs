@@ -1,0 +1,164 @@
+//! Linear-dependency census over RapidRAID codewords (paper Fig. 3 and
+//! Conjecture 1).
+//!
+//! Fault tolerance of an (n, k) RapidRAID code is governed by how many of
+//! the C(n, k) k-subsets of codeword blocks are linearly independent. Two
+//! kinds of dependent subsets exist (Section V-A):
+//!
+//! * **natural** — forced by the pipeline structure itself, present for
+//!   every choice of ψ/ξ (the paper detects them symbolically; we detect
+//!   them as subsets that stay dependent across `trials` independent random
+//!   coefficient draws over GF(2^16), each false positive having probability
+//!   ≤ (n/2^16) per trial by Schwartz–Zippel, so ≤ 2^-40-ish overall).
+//! * **accidental** — artifacts of one particular coefficient draw.
+
+use crate::codes::rapidraid::{placement, NodeSchedule, RapidRaidCode};
+use crate::codes::subsets::{binomial, Combinations};
+use crate::gf::{rank, Gf65536, GfElem, Matrix, SliceOps};
+use crate::util::SplitMix64;
+
+/// Census of linear dependencies for an (n, k) RapidRAID code.
+#[derive(Clone, Debug)]
+pub struct CensusReport {
+    /// Code length.
+    pub n: usize,
+    /// Message length.
+    pub k: usize,
+    /// Total number of k-subsets, C(n, k).
+    pub total_subsets: u64,
+    /// Subsets dependent under EVERY trial draw — natural dependencies.
+    pub natural_dependent: Vec<Vec<usize>>,
+    /// Number of trials used for the natural/accidental separation.
+    pub trials: usize,
+}
+
+impl CensusReport {
+    /// Number of naturally dependent k-subsets (paper Fig. 3b).
+    pub fn dependent_count(&self) -> u64 {
+        self.natural_dependent.len() as u64
+    }
+
+    /// Percentage of linearly independent k-subsets (paper Fig. 3a).
+    pub fn percent_independent(&self) -> f64 {
+        100.0 * (self.total_subsets - self.dependent_count()) as f64 / self.total_subsets as f64
+    }
+
+    /// True iff the code is MDS (no natural dependencies).
+    pub fn is_mds(&self) -> bool {
+        self.natural_dependent.is_empty()
+    }
+}
+
+/// Run the census for an (n, k) RapidRAID code using `trials` independent
+/// GF(2^16) coefficient draws (3 is plenty; each extra trial multiplies the
+/// false-positive probability by ~n/65536).
+pub fn census(n: usize, k: usize, trials: usize, seed: u64) -> anyhow::Result<CensusReport> {
+    anyhow::ensure!(trials >= 1, "need at least one trial");
+    let mut generators: Vec<Matrix<Gf65536>> = Vec::with_capacity(trials);
+    for t in 0..trials {
+        let code = RapidRaidCode::<Gf65536>::with_seed(n, k, seed ^ (t as u64).wrapping_mul(0x9E37_79B9))?;
+        generators.push(code.generator().clone());
+    }
+    let mut natural = Vec::new();
+    for sub in Combinations::new(n, k) {
+        let dependent_everywhere = generators
+            .iter()
+            .all(|g| rank(&g.select_rows(&sub)) < k);
+        if dependent_everywhere {
+            natural.push(sub);
+        }
+    }
+    Ok(CensusReport {
+        n,
+        k,
+        total_subsets: binomial(n, k),
+        natural_dependent: natural,
+        trials,
+    })
+}
+
+/// Count dependent k-subsets of ONE concrete code (natural + accidental);
+/// used by the coefficient search to score candidate draws.
+pub fn dependent_subsets<F: GfElem + SliceOps>(code: &RapidRaidCode<F>) -> u64 {
+    Combinations::new(code.n(), code.k())
+        .filter(|s| rank(&code.generator().select_rows(s)) < code.k())
+        .count() as u64
+}
+
+/// Symbolic-ish sanity check used in tests: a subset is *certainly* natural
+/// if it is dependent for `trials` fresh draws (distinct from the draws a
+/// particular code instance was built with).
+pub fn is_natural_dependency(
+    n: usize,
+    k: usize,
+    subset: &[usize],
+    trials: usize,
+    seed: u64,
+) -> anyhow::Result<bool> {
+    let place = placement(n, k)?;
+    let mut rng = SplitMix64::new(seed);
+    for _ in 0..trials {
+        let schedule: Vec<NodeSchedule<Gf65536>> = place
+            .iter()
+            .map(|locals| NodeSchedule {
+                locals: locals.clone(),
+                psi: locals.iter().map(|_| Gf65536(rng.range(1, 65536) as u16)).collect(),
+                xi: locals.iter().map(|_| Gf65536(rng.range(1, 65536) as u16)).collect(),
+            })
+            .collect();
+        let g = crate::codes::rapidraid::generator_matrix(n, k, &schedule);
+        if rank(&g.select_rows(subset)) == k {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_84_census() {
+        // Section IV-B: exactly one natural dependency among the 70 subsets.
+        let r = census(8, 4, 3, 1).unwrap();
+        assert_eq!(r.total_subsets, 70);
+        assert_eq!(r.natural_dependent, vec![vec![0, 1, 4, 5]]);
+        assert!(!r.is_mds());
+        assert!((r.percent_independent() - 100.0 * 69.0 / 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conjecture1_mds_iff_k_ge_n_minus_3_n8() {
+        // Fig. 3 / Conjecture 1 for n = 8, all k in [n/2, n)
+        for k in 4..8 {
+            let r = census(8, k, 3, 2).unwrap();
+            assert_eq!(r.is_mds(), k >= 8 - 3, "k={k}: {:?}", r.dependent_count());
+        }
+    }
+
+    #[test]
+    fn conjecture1_holds_n12_sampled() {
+        for k in [9usize, 10, 11] {
+            let r = census(12, k, 2, 3).unwrap();
+            assert!(r.is_mds(), "(12,{k}) should be MDS");
+        }
+        let r = census(12, 8, 2, 3).unwrap();
+        assert!(!r.is_mds(), "(12,8) should have natural dependencies");
+    }
+
+    #[test]
+    fn natural_dependency_checker_agrees() {
+        assert!(is_natural_dependency(8, 4, &[0, 1, 4, 5], 4, 10).unwrap());
+        assert!(!is_natural_dependency(8, 4, &[0, 1, 2, 3], 4, 10).unwrap());
+    }
+
+    #[test]
+    fn dependent_subsets_counts_at_least_natural() {
+        let code = RapidRaidCode::<Gf65536>::with_seed(8, 4, 3).unwrap();
+        assert!(dependent_subsets(&code) >= 1);
+        // GF(2^8) with an unlucky seed may add accidental ones; GF(2^16)
+        // should essentially never.
+        assert_eq!(dependent_subsets(&code), 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! Classical systematic Cauchy Reed-Solomon code — the paper's *CEC*
+//! baseline (Jerasure's Cauchy RS, per Plank et al. [23]).
+//!
+//! Generator `G = [I_k ; C]` with `C` an (n−k)×k Cauchy matrix: the first k
+//! codeword blocks are the raw object (systematic), the last m = n−k are
+//! parity. Any k-subset of rows of G is invertible (MDS).
+
+use crate::codes::DecodeError;
+use crate::gf::{gauss, GfElem, Matrix, SliceOps};
+
+/// A systematic (n, k) MDS erasure code.
+#[derive(Clone)]
+pub struct ClassicalCode<F: GfElem> {
+    n: usize,
+    k: usize,
+    /// Full n×k generator (identity stacked on Cauchy parity rows).
+    generator: Matrix<F>,
+}
+
+impl<F: GfElem + SliceOps> ClassicalCode<F> {
+    /// Build an (n, k) systematic Cauchy-RS code. Requires k < n and the
+    /// field to be large enough for an (n−k)+k Cauchy construction.
+    pub fn new(n: usize, k: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(k >= 1, "k must be >= 1");
+        anyhow::ensure!(k < n, "need k < n, got (n={n}, k={k})");
+        let parity = Matrix::<F>::cauchy(n - k, k);
+        let generator = Matrix::<F>::identity(k).vstack(&parity);
+        Ok(Self { n, k, generator })
+    }
+
+    /// Codeword length n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Message length k.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Parity count m = n − k.
+    pub fn m(&self) -> usize {
+        self.n - self.k
+    }
+
+    /// The n×k generator matrix.
+    pub fn generator(&self) -> &Matrix<F> {
+        &self.generator
+    }
+
+    /// The (n−k)×k parity sub-matrix G′ (what the encoding node actually
+    /// applies; the systematic rows are free).
+    pub fn parity_matrix(&self) -> Matrix<F> {
+        let rows: Vec<usize> = (self.k..self.n).collect();
+        self.generator.select_rows(&rows)
+    }
+
+    /// Encode a full object: returns only the m parity blocks (the k data
+    /// blocks are stored as-is — systematic code).
+    pub fn encode_parity(&self, object: &[Vec<F>]) -> Vec<Vec<F>> {
+        assert_eq!(object.len(), self.k, "object must have k blocks");
+        let len = object[0].len();
+        assert!(object.iter().all(|b| b.len() == len), "ragged blocks");
+        let mut parity = vec![vec![F::ZERO; len]; self.m()];
+        for (pi, p) in parity.iter_mut().enumerate() {
+            let row = self.generator.row(self.k + pi);
+            for (j, block) in object.iter().enumerate() {
+                F::mul_slice_xor(row[j], block, p);
+            }
+        }
+        parity
+    }
+
+    /// Incremental parity: fold ONE buffer of source block `j` into the m
+    /// parity accumulators — the streamlined encoding loop of Section III
+    /// (the coding node encodes network-buffer by network-buffer as the k
+    /// downloads progress).
+    pub fn fold_parity_buffer(&self, j: usize, src: &[F], parity: &mut [Vec<F>]) {
+        debug_assert_eq!(parity.len(), self.m());
+        for (pi, p) in parity.iter_mut().enumerate() {
+            F::mul_slice_xor(self.generator[(self.k + pi, j)], src, p);
+        }
+    }
+
+    /// Reconstruct the object from any k available blocks `(index, data)`.
+    pub fn decode(&self, have: &[(usize, Vec<F>)]) -> Result<Vec<Vec<F>>, DecodeError> {
+        decode_with_generator(&self.generator, self.n, self.k, have)
+    }
+}
+
+/// Shared decode path: select the k generator rows matching the supplied
+/// block indices, invert, and apply the inverse row by row with slice ops.
+/// Used by both the classical and the RapidRAID code.
+pub(crate) fn decode_with_generator<F: GfElem + SliceOps>(
+    generator: &Matrix<F>,
+    n: usize,
+    k: usize,
+    have: &[(usize, Vec<F>)],
+) -> Result<Vec<Vec<F>>, DecodeError> {
+    if have.len() < k {
+        return Err(DecodeError::NotEnoughBlocks {
+            got: have.len(),
+            need: k,
+        });
+    }
+    let have = &have[..k];
+    let mut indices = Vec::with_capacity(k);
+    for (idx, _) in have {
+        if *idx >= n {
+            return Err(DecodeError::BadIndex { index: *idx, n });
+        }
+        indices.push(*idx);
+    }
+    let len = have[0].1.len();
+    if have.iter().any(|(_, b)| b.len() != len) {
+        return Err(DecodeError::LengthMismatch);
+    }
+    let sub = generator.select_rows(&indices);
+    let inv = gauss::invert(&sub).ok_or(DecodeError::DependentSubset {
+        indices: indices.clone(),
+    })?;
+    // object[j] = XOR_i inv[j][i] * coded[i]
+    let mut object = vec![vec![F::ZERO; len]; k];
+    for (j, out) in object.iter_mut().enumerate() {
+        for (i, (_, block)) in have.iter().enumerate() {
+            F::mul_slice_xor(inv[(j, i)], block, out);
+        }
+    }
+    Ok(object)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::{Gf256, Gf65536};
+    use crate::util::prop::forall;
+    use crate::util::SplitMix64;
+
+    fn random_object<F: GfElem>(rng: &mut SplitMix64, k: usize, len: usize) -> Vec<Vec<F>> {
+        let mask = (1u64 << F::BITS) - 1;
+        (0..k)
+            .map(|_| (0..len).map(|_| F::from_u32((rng.next_u64() & mask) as u32)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_from_systematic_blocks() {
+        let code = ClassicalCode::<Gf256>::new(8, 4).unwrap();
+        let mut rng = SplitMix64::new(1);
+        let obj = random_object::<Gf256>(&mut rng, 4, 256);
+        let have: Vec<(usize, Vec<Gf256>)> =
+            (0..4).map(|i| (i, obj[i].clone())).collect();
+        assert_eq!(code.decode(&have).unwrap(), obj);
+    }
+
+    #[test]
+    fn roundtrip_from_parity_only() {
+        let code = ClassicalCode::<Gf256>::new(8, 4).unwrap();
+        let mut rng = SplitMix64::new(2);
+        let obj = random_object::<Gf256>(&mut rng, 4, 128);
+        let parity = code.encode_parity(&obj);
+        let have: Vec<(usize, Vec<Gf256>)> =
+            (0..4).map(|i| (4 + i, parity[i].clone())).collect();
+        assert_eq!(code.decode(&have).unwrap(), obj);
+    }
+
+    #[test]
+    fn mds_all_subsets_16_11_sampled() {
+        // exhaustive over all C(8,4)=70 subsets for the small code
+        let code = ClassicalCode::<Gf256>::new(8, 4).unwrap();
+        for sub in crate::codes::subsets::Combinations::new(8, 4) {
+            let s = code.generator().select_rows(&sub);
+            assert!(gauss::is_invertible(&s), "subset {sub:?} not invertible");
+        }
+    }
+
+    #[test]
+    fn fold_parity_buffer_equals_batch_encode() {
+        let code = ClassicalCode::<Gf256>::new(16, 11).unwrap();
+        let mut rng = SplitMix64::new(3);
+        let obj = random_object::<Gf256>(&mut rng, 11, 512);
+        let batch = code.encode_parity(&obj);
+        // streamed: two buffers of 256 per block, folded in arbitrary order
+        let mut parity = vec![vec![Gf256::ZERO; 512]; 5];
+        for j in 0..11 {
+            for half in 0..2 {
+                let range = half * 256..(half + 1) * 256;
+                let mut acc: Vec<Vec<Gf256>> =
+                    parity.iter().map(|p| p[range.clone()].to_vec()).collect();
+                code.fold_parity_buffer(j, &obj[j][range.clone()], &mut acc);
+                for (p, a) in parity.iter_mut().zip(acc) {
+                    p[range.clone()].copy_from_slice(&a);
+                }
+            }
+        }
+        assert_eq!(parity, batch);
+    }
+
+    #[test]
+    fn decode_errors() {
+        let code = ClassicalCode::<Gf256>::new(6, 3).unwrap();
+        let b = vec![Gf256::ZERO; 16];
+        // not enough blocks
+        assert!(matches!(
+            code.decode(&[(0, b.clone())]),
+            Err(DecodeError::NotEnoughBlocks { got: 1, need: 3 })
+        ));
+        // bad index
+        assert!(matches!(
+            code.decode(&[(0, b.clone()), (1, b.clone()), (9, b.clone())]),
+            Err(DecodeError::BadIndex { index: 9, n: 6 })
+        ));
+        // duplicate indices => dependent
+        assert!(matches!(
+            code.decode(&[(0, b.clone()), (0, b.clone()), (1, b.clone())]),
+            Err(DecodeError::DependentSubset { .. })
+        ));
+        // ragged lengths
+        assert!(matches!(
+            code.decode(&[(0, b.clone()), (1, vec![Gf256::ZERO; 8]), (2, b)]),
+            Err(DecodeError::LengthMismatch)
+        ));
+    }
+
+    #[test]
+    fn gf65536_roundtrip() {
+        let code = ClassicalCode::<Gf65536>::new(16, 11).unwrap();
+        let mut rng = SplitMix64::new(4);
+        let obj = random_object::<Gf65536>(&mut rng, 11, 64);
+        let parity = code.encode_parity(&obj);
+        // mixed subset: 7 systematic + 4 parity
+        let mut have: Vec<(usize, Vec<Gf65536>)> =
+            (0..7).map(|i| (i, obj[i].clone())).collect();
+        have.extend((0..4).map(|i| (11 + i, parity[i].clone())));
+        assert_eq!(code.decode(&have).unwrap(), obj);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_subsets() {
+        forall(25, 7, |rng| {
+            let (n, k) = (10, 6);
+            let code = ClassicalCode::<Gf256>::new(n, k).unwrap();
+            let obj = random_object::<Gf256>(rng, k, 64);
+            let parity = code.encode_parity(&obj);
+            let all: Vec<Vec<Gf256>> =
+                obj.iter().cloned().chain(parity.iter().cloned()).collect();
+            let pick = rng.sample_indices(n, k);
+            let have: Vec<(usize, Vec<Gf256>)> =
+                pick.iter().map(|&i| (i, all[i].clone())).collect();
+            assert_eq!(code.decode(&have).unwrap(), obj, "subset {pick:?}");
+        });
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(ClassicalCode::<Gf256>::new(4, 4).is_err());
+        assert!(ClassicalCode::<Gf256>::new(3, 0).is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! Erasure-code constructions: the classical Cauchy Reed-Solomon baseline
+//! (*CEC* in the paper) and the RapidRAID pipelined family, plus the
+//! coefficient search and the linear-dependency census behind Fig. 3 /
+//! Table I / Conjecture 1.
+
+pub mod census;
+pub mod classical;
+pub mod coeffs;
+pub mod rapidraid;
+pub mod subsets;
+
+pub use census::{census, CensusReport};
+pub use classical::ClassicalCode;
+pub use rapidraid::RapidRaidCode;
+pub use subsets::Combinations;
+
+/// Erasure decode failure reasons.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Fewer than k blocks supplied.
+    NotEnoughBlocks { got: usize, need: usize },
+    /// The supplied k blocks are linearly dependent (non-MDS subset or
+    /// duplicate indices).
+    DependentSubset { indices: Vec<usize> },
+    /// A block index is out of range for the code.
+    BadIndex { index: usize, n: usize },
+    /// Supplied blocks have inconsistent lengths.
+    LengthMismatch,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::NotEnoughBlocks { got, need } => {
+                write!(f, "need {need} blocks to decode, got {got}")
+            }
+            Self::DependentSubset { indices } => {
+                write!(f, "blocks {indices:?} are linearly dependent; pick another subset")
+            }
+            Self::BadIndex { index, n } => write!(f, "block index {index} out of range (n={n})"),
+            Self::LengthMismatch => write!(f, "blocks have inconsistent lengths"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}

@@ -1,0 +1,431 @@
+//! RapidRAID: the paper's pipelined erasure-code family (Sections IV–V).
+//!
+//! An (n, k) RapidRAID code (k < n ≤ 2k) encodes a k-block object that is
+//! already 2-way replicated over n nodes. Node i holds `locals(i)` object
+//! blocks (1 for the symmetric n = 2k placement, 2 in the overlapped middle
+//! when n < 2k), and the chain runs:
+//!
+//! ```text
+//! x_{i,i+1} = x_{i-1,i} ⊕ Σ_j ψ_i[j]·o_{locals(i)[j]}      (eq. 3, forwarded)
+//! c_i       = x_{i-1,i} ⊕ Σ_j ξ_i[j]·o_{locals(i)[j]}      (eq. 4, stored)
+//! ```
+//!
+//! The code is non-systematic; reconstruction needs any k *linearly
+//! independent* codeword blocks. For k ≥ n−3 the code is MDS (Conjecture 1,
+//! verified exhaustively by the census for n ≤ 16); below that a few
+//! *natural dependencies* exist — e.g. the (8,4) code's unique bad subset
+//! {c1, c2, c5, c6} — quantified in [`crate::codes::census`].
+
+use crate::codes::classical::decode_with_generator;
+use crate::codes::DecodeError;
+use crate::gf::{GfElem, Matrix, SliceOps};
+use crate::util::SplitMix64;
+
+/// Per-node encoding schedule: which object blocks the node stores and the
+/// ψ/ξ coefficients it applies to each (paper eqs. (3)/(4)).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeSchedule<F: GfElem> {
+    /// Object-block indices stored locally (len 1 or 2).
+    pub locals: Vec<usize>,
+    /// Forward (pipeline) coefficients ψ, one per local block.
+    pub psi: Vec<F>,
+    /// Codeword coefficients ξ, one per local block.
+    pub xi: Vec<F>,
+}
+
+/// Replica placement (paper Section V): node i stores a block of the first
+/// replica if `i < k` (block i) and a block of the second replica if
+/// `i >= n - k` (block `i - (n - k)`).
+pub fn placement(n: usize, k: usize) -> anyhow::Result<Vec<Vec<usize>>> {
+    anyhow::ensure!(
+        k < n && n <= 2 * k,
+        "RapidRAID needs k < n <= 2k, got (n={n}, k={k})"
+    );
+    Ok((0..n)
+        .map(|i| {
+            let mut blocks = Vec::with_capacity(2);
+            if i < k {
+                blocks.push(i);
+            }
+            if i >= n - k {
+                blocks.push(i - (n - k));
+            }
+            blocks
+        })
+        .collect())
+}
+
+/// An (n, k) RapidRAID pipelined erasure code with fixed coefficients.
+#[derive(Clone)]
+pub struct RapidRaidCode<F: GfElem> {
+    n: usize,
+    k: usize,
+    schedule: Vec<NodeSchedule<F>>,
+    generator: Matrix<F>,
+}
+
+impl<F: GfElem + SliceOps> RapidRaidCode<F> {
+    /// Build a code with deterministic pseudo-random nonzero coefficients.
+    ///
+    /// For fields as large as GF(2^16) almost any draw avoids accidental
+    /// dependencies [19]; for GF(2^8) prefer
+    /// [`crate::codes::coeffs::search`], which retries seeds and keeps the
+    /// draw with the fewest dependent k-subsets.
+    pub fn with_seed(n: usize, k: usize, seed: u64) -> anyhow::Result<Self> {
+        let place = placement(n, k)?;
+        let mut rng = SplitMix64::new(seed);
+        let mask = (1u64 << F::BITS) - 1;
+        let mut draw = |count: usize| -> Vec<F> {
+            (0..count)
+                .map(|_| F::from_u32((rng.range(1, mask + 1)) as u32))
+                .collect()
+        };
+        let schedule: Vec<NodeSchedule<F>> = place
+            .into_iter()
+            .map(|locals| {
+                let r = locals.len();
+                NodeSchedule {
+                    locals,
+                    psi: draw(r),
+                    xi: draw(r),
+                }
+            })
+            .collect();
+        Self::from_schedule(n, k, schedule)
+    }
+
+    /// Build from an explicit schedule (used by the coefficient search).
+    pub fn from_schedule(
+        n: usize,
+        k: usize,
+        schedule: Vec<NodeSchedule<F>>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(schedule.len() == n, "schedule must have n entries");
+        let place = placement(n, k)?;
+        for (i, (s, p)) in schedule.iter().zip(&place).enumerate() {
+            anyhow::ensure!(s.locals == *p, "node {i} locals deviate from placement");
+            anyhow::ensure!(
+                s.psi.len() == s.locals.len() && s.xi.len() == s.locals.len(),
+                "node {i} coefficient arity mismatch"
+            );
+        }
+        let generator = generator_matrix(n, k, &schedule);
+        Ok(Self {
+            n,
+            k,
+            schedule,
+            generator,
+        })
+    }
+
+    /// Codeword length n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Message length k.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Per-node schedules (the coordinator distributes these to the chain).
+    pub fn schedule(&self) -> &[NodeSchedule<F>] {
+        &self.schedule
+    }
+
+    /// The n×k generator matrix implied by the pipeline recurrences.
+    pub fn generator(&self) -> &Matrix<F> {
+        &self.generator
+    }
+
+    /// One pipeline stage over a single buffer (the hot-path primitive the
+    /// coordinator runs per network buffer per node; the PJRT backend runs
+    /// the same math inside the AOT Pallas `pipeline_step` kernel).
+    ///
+    /// `x_in` is the received partial combination (all-zero for node 0),
+    /// `locals` the node's object-block buffers. Returns `(x_out, c_i)`.
+    pub fn step(&self, node: usize, x_in: &[F], locals: &[&[F]]) -> (Vec<F>, Vec<F>) {
+        let sched = &self.schedule[node];
+        assert_eq!(locals.len(), sched.locals.len(), "node {node} arity");
+        let mut x_out = x_in.to_vec();
+        let mut c = x_in.to_vec();
+        for (j, loc) in locals.iter().enumerate() {
+            F::mul_slice_xor(sched.psi[j], loc, &mut x_out);
+            F::mul_slice_xor(sched.xi[j], loc, &mut c);
+        }
+        (x_out, c)
+    }
+
+    /// Encode a whole object by literally running the chain (reference
+    /// implementation of the coordinator's distributed pipeline).
+    pub fn encode_chain(&self, object: &[Vec<F>]) -> Vec<Vec<F>> {
+        assert_eq!(object.len(), self.k, "object must have k blocks");
+        let len = object[0].len();
+        assert!(object.iter().all(|b| b.len() == len), "ragged blocks");
+        let mut x = vec![F::ZERO; len];
+        let mut out = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let locals: Vec<&[F]> = self.schedule[i]
+                .locals
+                .iter()
+                .map(|&b| object[b].as_slice())
+                .collect();
+            let (x_next, c) = self.step(i, &x, &locals);
+            out.push(c);
+            x = x_next;
+        }
+        out
+    }
+
+    /// Encode via the generator matrix (cross-check path; must equal
+    /// [`Self::encode_chain`] exactly).
+    pub fn encode_matrix(&self, object: &[Vec<F>]) -> Vec<Vec<F>> {
+        assert_eq!(object.len(), self.k);
+        let len = object[0].len();
+        let mut out = vec![vec![F::ZERO; len]; self.n];
+        for (i, row_out) in out.iter_mut().enumerate() {
+            for (j, block) in object.iter().enumerate() {
+                F::mul_slice_xor(self.generator[(i, j)], block, row_out);
+            }
+        }
+        out
+    }
+
+    /// Reconstruct the object from any k independent blocks `(index, data)`.
+    pub fn decode(&self, have: &[(usize, Vec<F>)]) -> Result<Vec<Vec<F>>, DecodeError> {
+        decode_with_generator(&self.generator, self.n, self.k, have)
+    }
+
+    /// Greedy search for a decodable k-subset among the available block
+    /// indices; returns `None` if every k-subset of `avail` is dependent.
+    pub fn find_decodable_subset(&self, avail: &[usize]) -> Option<Vec<usize>> {
+        if avail.len() < self.k {
+            return None;
+        }
+        // Greedy rank-building is exact over a field: keep a row iff it
+        // increases the rank of the selected set.
+        let mut chosen: Vec<usize> = Vec::with_capacity(self.k);
+        for &idx in avail {
+            let mut trial = chosen.clone();
+            trial.push(idx);
+            let sub = self.generator.select_rows(&trial);
+            if crate::gf::rank(&sub) == trial.len() {
+                chosen = trial;
+                if chosen.len() == self.k {
+                    return Some(chosen);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Expand the pipeline recurrences into the explicit n×k generator matrix
+/// (paper Section IV-B shows the (8,4) instance).
+pub fn generator_matrix<F: GfElem>(
+    n: usize,
+    k: usize,
+    schedule: &[NodeSchedule<F>],
+) -> Matrix<F> {
+    let mut g = Matrix::<F>::zero(n, k);
+    // xrow = coefficients (over o_0..o_{k-1}) of the running combination x.
+    let mut xrow = vec![F::ZERO; k];
+    for (i, sched) in schedule.iter().enumerate().take(n) {
+        // c_i = x_in ⊕ Σ ξ·o  — snapshot BEFORE folding ψ into xrow.
+        for (j, &blk) in sched.locals.iter().enumerate() {
+            let v = xrow[blk].add(sched.xi[j]);
+            g[(i, blk)] = v;
+        }
+        for (blk, coeff) in (0..k).filter(|b| !sched.locals.contains(b)).map(|b| (b, xrow[b])) {
+            g[(i, blk)] = coeff;
+        }
+        for (j, &blk) in sched.locals.iter().enumerate() {
+            xrow[blk] = xrow[blk].add(sched.psi[j]);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::subsets::Combinations;
+    use crate::gf::{gauss, Gf256, Gf65536};
+    use crate::util::prop::forall;
+
+    fn random_object<F: GfElem>(seed: u64, k: usize, len: usize) -> Vec<Vec<F>> {
+        let mut rng = SplitMix64::new(seed);
+        let mask = (1u64 << F::BITS) - 1;
+        (0..k)
+            .map(|_| (0..len).map(|_| F::from_u32((rng.next_u64() & mask) as u32)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn placement_matches_paper_examples() {
+        // (8,4): two disjoint replicas (Fig. 2)
+        assert_eq!(
+            placement(8, 4).unwrap(),
+            vec![vec![0], vec![1], vec![2], vec![3], vec![0], vec![1], vec![2], vec![3]]
+        );
+        // (6,4): overlapped middle (Section IV-C)
+        assert_eq!(
+            placement(6, 4).unwrap(),
+            vec![vec![0], vec![1], vec![2, 0], vec![3, 1], vec![2], vec![3]]
+        );
+        assert!(placement(9, 4).is_err()); // n > 2k
+        assert!(placement(4, 4).is_err()); // n == k
+    }
+
+    #[test]
+    fn every_block_covered_twice() {
+        // placement invariant: each object block appears on exactly 2 nodes
+        for (n, k) in [(8, 4), (6, 4), (16, 11), (12, 8), (16, 15)] {
+            let p = placement(n, k).unwrap();
+            let mut count = vec![0usize; k];
+            for node in &p {
+                for &b in node {
+                    count[b] += 1;
+                }
+            }
+            assert!(count.iter().all(|&c| c == 2), "(n={n},k={k}): {count:?}");
+        }
+    }
+
+    #[test]
+    fn chain_equals_matrix_encode() {
+        for (n, k) in [(8usize, 4usize), (6, 4), (16, 11), (12, 8)] {
+            let code = RapidRaidCode::<Gf256>::with_seed(n, k, 42).unwrap();
+            let obj = random_object::<Gf256>(1, k, 300);
+            assert_eq!(code.encode_chain(&obj), code.encode_matrix(&obj), "(n={n},k={k})");
+        }
+    }
+
+    #[test]
+    fn chain_equals_matrix_encode_gf65536() {
+        let code = RapidRaidCode::<Gf65536>::with_seed(16, 11, 9).unwrap();
+        let obj = random_object::<Gf65536>(2, 11, 80);
+        assert_eq!(code.encode_chain(&obj), code.encode_matrix(&obj));
+    }
+
+    #[test]
+    fn decode_recovers_object() {
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let obj = random_object::<Gf256>(3, 4, 200);
+        let coded = code.encode_chain(&obj);
+        let have: Vec<(usize, Vec<Gf256>)> =
+            [2usize, 3, 6, 7].iter().map(|&i| (i, coded[i].clone())).collect();
+        assert_eq!(code.decode(&have).unwrap(), obj);
+    }
+
+    #[test]
+    fn paper_84_natural_dependency_is_rejected() {
+        // {c1,c2,c5,c6} (1-based) == {0,1,4,5} is dependent for ANY coeffs.
+        for seed in [1u64, 2, 3, 99] {
+            let code = RapidRaidCode::<Gf65536>::with_seed(8, 4, seed).unwrap();
+            let sub = code.generator.select_rows(&[0, 1, 4, 5]);
+            assert!(gauss::rank(&sub) < 4, "seed {seed}: paper dependency missing");
+        }
+    }
+
+    #[test]
+    fn with_good_seed_only_natural_dependency_remains_84() {
+        // Over GF(2^16) a random draw should leave exactly the one natural
+        // dependency among all 70 subsets (paper Section IV-B).
+        let code = RapidRaidCode::<Gf65536>::with_seed(8, 4, 12).unwrap();
+        let dependent: Vec<Vec<usize>> = Combinations::new(8, 4)
+            .filter(|s| gauss::rank(&code.generator.select_rows(s)) < 4)
+            .collect();
+        assert_eq!(dependent, vec![vec![0, 1, 4, 5]]);
+    }
+
+    #[test]
+    fn decode_from_every_independent_subset_84() {
+        let code = RapidRaidCode::<Gf65536>::with_seed(8, 4, 12).unwrap();
+        let obj = random_object::<Gf65536>(4, 4, 64);
+        let coded = code.encode_chain(&obj);
+        let mut independent = 0;
+        for sub in Combinations::new(8, 4) {
+            let have: Vec<(usize, Vec<Gf65536>)> =
+                sub.iter().map(|&i| (i, coded[i].clone())).collect();
+            match code.decode(&have) {
+                Ok(rec) => {
+                    independent += 1;
+                    assert_eq!(rec, obj, "subset {sub:?}");
+                }
+                Err(DecodeError::DependentSubset { .. }) => {
+                    assert_eq!(sub, vec![0, 1, 4, 5]);
+                }
+                Err(e) => panic!("unexpected error {e:?}"),
+            }
+        }
+        assert_eq!(independent, 69); // 70 subsets, 1 natural dependency
+    }
+
+    #[test]
+    fn overlapped_placement_code_roundtrip_64() {
+        let code = RapidRaidCode::<Gf65536>::with_seed(6, 4, 5).unwrap();
+        let obj = random_object::<Gf65536>(5, 4, 96);
+        let coded = code.encode_chain(&obj);
+        let subset = code
+            .find_decodable_subset(&[0, 1, 2, 3, 4, 5])
+            .expect("some independent subset exists");
+        let have: Vec<(usize, Vec<Gf65536>)> =
+            subset.iter().map(|&i| (i, coded[i].clone())).collect();
+        assert_eq!(code.decode(&have).unwrap(), obj);
+    }
+
+    #[test]
+    fn find_decodable_subset_avoids_natural_dependency() {
+        let code = RapidRaidCode::<Gf65536>::with_seed(8, 4, 12).unwrap();
+        // availability = exactly the bad subset → None
+        assert!(code.find_decodable_subset(&[0, 1, 4, 5]).is_none());
+        // one more node available → decodable
+        let s = code.find_decodable_subset(&[0, 1, 4, 5, 6]).unwrap();
+        let sub = code.generator.select_rows(&s);
+        assert_eq!(gauss::rank(&sub), 4);
+    }
+
+    #[test]
+    fn step_matches_python_semantics_first_node() {
+        // node 0: x_in = 0 ⇒ x_out = ψ·o0, c = ξ·o0 (mirrors the pytest case)
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let obj = random_object::<Gf256>(6, 4, 128);
+        let zero = vec![Gf256::ZERO; 128];
+        let (x_out, c) = code.step(0, &zero, &[&obj[0]]);
+        let sched = &code.schedule()[0];
+        let mut ex = vec![Gf256::ZERO; 128];
+        Gf256::mul_slice_xor(sched.psi[0], &obj[0], &mut ex);
+        assert_eq!(x_out, ex);
+        let mut ec = vec![Gf256::ZERO; 128];
+        Gf256::mul_slice_xor(sched.xi[0], &obj[0], &mut ec);
+        assert_eq!(c, ec);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_params() {
+        forall(15, 77, |rng| {
+            let k = 3 + rng.below(6) as usize; // 3..8
+            let extra = 1 + rng.below(k as u64) as usize; // 1..k
+            let n = (k + extra).min(2 * k);
+            let code = RapidRaidCode::<Gf65536>::with_seed(n, k, rng.next_u64()).unwrap();
+            let obj = random_object::<Gf65536>(rng.next_u64(), k, 32);
+            let coded = code.encode_chain(&obj);
+            let avail: Vec<usize> = (0..n).collect();
+            let sub = code
+                .find_decodable_subset(&avail)
+                .expect("full availability must be decodable");
+            let have: Vec<(usize, Vec<Gf65536>)> =
+                sub.iter().map(|&i| (i, coded[i].clone())).collect();
+            assert_eq!(code.decode(&have).unwrap(), obj, "(n={n},k={k})");
+        });
+    }
+
+    #[test]
+    fn network_traffic_is_n_minus_1_blocks() {
+        // structural property from Section III: the chain forwards exactly
+        // n-1 temporal blocks (one per edge)
+        let code = RapidRaidCode::<Gf256>::with_seed(16, 11, 1).unwrap();
+        assert_eq!(code.schedule().len(), 16); // 15 edges between 16 stages
+    }
+}

@@ -1,0 +1,116 @@
+//! Lexicographic k-subset enumeration (the census iterates all C(n,k)
+//! subsets of codeword indices; no external itertools offline).
+
+/// Iterator over all k-element subsets of `0..n` in lexicographic order.
+pub struct Combinations {
+    n: usize,
+    k: usize,
+    current: Vec<usize>,
+    done: bool,
+}
+
+impl Combinations {
+    /// All k-subsets of `0..n`. `k > n` yields nothing; `k == 0` yields one
+    /// empty subset.
+    pub fn new(n: usize, k: usize) -> Self {
+        Self {
+            n,
+            k,
+            current: (0..k).collect(),
+            done: k > n,
+        }
+    }
+}
+
+impl Iterator for Combinations {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.done {
+            return None;
+        }
+        let out = self.current.clone();
+        // advance: find rightmost index that can grow
+        if self.k == 0 {
+            self.done = true;
+            return Some(out);
+        }
+        let mut i = self.k;
+        loop {
+            if i == 0 {
+                self.done = true;
+                break;
+            }
+            i -= 1;
+            if self.current[i] < self.n - self.k + i {
+                self.current[i] += 1;
+                for j in i + 1..self.k {
+                    self.current[j] = self.current[j - 1] + 1;
+                }
+                break;
+            }
+        }
+        Some(out)
+    }
+}
+
+/// Binomial coefficient C(n, k) without overflow for the sizes we enumerate.
+pub fn binomial(n: usize, k: usize) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num = 1u128;
+    let mut den = 1u128;
+    for i in 0..k {
+        num *= (n - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    (num / den) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_binomial() {
+        for (n, k) in [(8, 4), (6, 3), (5, 0), (5, 5), (10, 2)] {
+            let count = Combinations::new(n, k).count() as u64;
+            assert_eq!(count, binomial(n, k), "(n={n}, k={k})");
+        }
+    }
+
+    #[test]
+    fn lexicographic_order_and_validity() {
+        let all: Vec<Vec<usize>> = Combinations::new(6, 3).collect();
+        assert_eq!(all.first().unwrap(), &vec![0, 1, 2]);
+        assert_eq!(all.last().unwrap(), &vec![3, 4, 5]);
+        for w in all.windows(2) {
+            assert!(w[0] < w[1], "not lexicographic: {:?} !< {:?}", w[0], w[1]);
+        }
+        for s in &all {
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&x| x < 6));
+        }
+    }
+
+    #[test]
+    fn k_greater_than_n_is_empty() {
+        assert_eq!(Combinations::new(3, 4).count(), 0);
+    }
+
+    #[test]
+    fn k_zero_yields_one_empty() {
+        let all: Vec<_> = Combinations::new(5, 0).collect();
+        assert_eq!(all, vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn binomial_values() {
+        assert_eq!(binomial(8, 4), 70); // the paper's (8,4) example
+        assert_eq!(binomial(16, 11), 4368); // the evaluated (16,11) code
+        assert_eq!(binomial(12, 6), 924);
+        assert_eq!(binomial(4, 5), 0);
+    }
+}

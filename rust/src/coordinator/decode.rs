@@ -1,0 +1,116 @@
+//! Object reconstruction from coded blocks.
+//!
+//! RapidRAID is non-systematic, so every read of an archived object decodes:
+//! pick k linearly independent surviving blocks, invert the corresponding
+//! generator rows (Gauss over the field), and apply the inverse — on the
+//! selected backend, i.e. through the AOT `gf_gemm` artifact when PJRT is
+//! active.
+
+use crate::backend::{BackendHandle, Width};
+use crate::cluster::Cluster;
+use crate::codes::rapidraid::RapidRaidCode;
+use crate::gf::{gauss, GfElem, SliceOps};
+use crate::storage::{BlockKey, ObjectId};
+
+/// Reconstruct `object` from the coded blocks stored on `chain` (chain[i]
+/// holds c_i). Returns the k source blocks.
+pub fn reconstruct<F: GfElem + SliceOps>(
+    cluster: &Cluster,
+    code: &RapidRaidCode<F>,
+    chain: &[usize],
+    object: ObjectId,
+    backend: &BackendHandle,
+) -> anyhow::Result<Vec<Vec<u8>>> {
+    anyhow::ensure!(chain.len() == code.n(), "chain/code mismatch");
+    let width = match F::BITS {
+        8 => Width::W8,
+        16 => Width::W16,
+        other => anyhow::bail!("unsupported field width {other}"),
+    };
+
+    // 1. which codeword blocks survived?
+    let mut avail: Vec<usize> = Vec::new();
+    for (pos, &node) in chain.iter().enumerate() {
+        if cluster
+            .node(node)
+            .peek(BlockKey::coded(object, pos))?
+            .is_some()
+        {
+            avail.push(pos);
+        }
+    }
+
+    // 2. pick an independent k-subset
+    let subset = code
+        .find_decodable_subset(&avail)
+        .ok_or_else(|| anyhow::anyhow!("object {object} unrecoverable: available {avail:?}"))?;
+
+    // 3. invert the generator rows
+    let sub = code.generator().select_rows(&subset);
+    let inv = gauss::invert(&sub)
+        .ok_or_else(|| anyhow::anyhow!("subset {subset:?} unexpectedly singular"))?;
+    let inv_u32: Vec<Vec<u32>> = (0..inv.rows())
+        .map(|i| inv.row(i).iter().map(|c| c.to_u32()).collect())
+        .collect();
+
+    // 4. gather the blocks and apply the inverse on the backend
+    let mut blocks: Vec<std::sync::Arc<Vec<u8>>> = Vec::with_capacity(subset.len());
+    for &pos in &subset {
+        let b = cluster
+            .node(chain[pos])
+            .peek(BlockKey::coded(object, pos))?
+            .ok_or_else(|| anyhow::anyhow!("block {pos} vanished"))?;
+        blocks.push(b);
+    }
+    let refs: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
+    backend.gemm(width, &inv_u32, &refs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::cluster::ClusterSpec;
+    use crate::coordinator::ingest::ingest_object;
+    use crate::coordinator::pipeline::{archive_pipeline, PipelineJob};
+    use crate::gf::Gf256;
+    use crate::storage::ReplicaPlacement;
+    use std::sync::Arc;
+
+    #[test]
+    fn decode_after_pipeline_archival_with_failures() {
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        let object = ObjectId(42);
+        let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+        let blocks = ingest_object(&cluster, &placement, 8 * 1024).unwrap();
+
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let job = PipelineJob::from_code(&code, &placement, 2048, 8 * 1024).unwrap();
+        archive_pipeline(&cluster, &backend, &job).unwrap();
+
+        // lose 4 of the 8 coded blocks (m = 4 tolerated if subset independent)
+        for pos in [1usize, 3, 4, 6] {
+            cluster.node(pos).delete(BlockKey::coded(object, pos)).unwrap();
+        }
+        let rec = reconstruct(&cluster, &code, &placement.chain, object, &backend).unwrap();
+        assert_eq!(rec, blocks);
+    }
+
+    #[test]
+    fn unrecoverable_when_too_few_blocks() {
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        let object = ObjectId(43);
+        let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+        ingest_object(&cluster, &placement, 4 * 1024).unwrap();
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let job = PipelineJob::from_code(&code, &placement, 1024, 4 * 1024).unwrap();
+        archive_pipeline(&cluster, &backend, &job).unwrap();
+        for pos in [0usize, 1, 2, 3, 4] {
+            cluster.node(pos).delete(BlockKey::coded(object, pos)).unwrap();
+        }
+        let err = reconstruct(&cluster, &code, &placement.chain, object, &backend).unwrap_err();
+        assert!(err.to_string().contains("unrecoverable"), "{err}");
+    }
+}

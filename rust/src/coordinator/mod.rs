@@ -1,0 +1,35 @@
+//! The archival coordinator — the paper's system contribution.
+//!
+//! Orchestrates replication→erasure-code migration over the simulated
+//! cluster, with two interchangeable archival strategies:
+//!
+//! * [`classical`] — the traditional *atomic* encoding (Section III,
+//!   Fig. 1): one coding node streams the k source blocks down, applies the
+//!   parity matrix buffer-by-buffer (streamlined) and streams the parity
+//!   blocks out; `T ≈ τ_block · max{k, m−1}` (eq. 1).
+//! * [`pipeline`] — RapidRAID (Sections IV–V, Fig. 2): the n replica
+//!   holders form a chain; each folds its local block(s) into the passing
+//!   partial combination and emits its codeword block locally;
+//!   `T ≈ τ_block + (n−1)·τ_pipe` (eq. 2).
+//!
+//! Plus: [`batch`] (concurrent multi-object archival — Fig. 4b/5b),
+//! [`decode`] (reconstruction from any independent k-subset),
+//! [`ingest`] (replicated object creation), [`migrate`] (encode → verify →
+//! drop replicas), and [`model`] (the eq. 1/eq. 2 analytic estimates).
+
+pub mod batch;
+pub mod classical;
+pub mod decode;
+pub mod ingest;
+pub mod migrate;
+pub mod model;
+pub mod pipeline;
+pub mod pipeline_decode;
+
+pub use batch::{run_batch, BatchJob};
+pub use classical::{archive_classical, ClassicalJob};
+pub use decode::reconstruct;
+pub use ingest::{ingest_object, object_bytes};
+pub use migrate::{migrate_object, MigrationReport};
+pub use pipeline::{archive_pipeline, PipelineJob};
+pub use pipeline_decode::reconstruct_pipelined;

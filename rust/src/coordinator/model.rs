@@ -1,0 +1,104 @@
+//! Analytic coding-time models — the paper's eq. (1) and eq. (2).
+//!
+//! Used by `examples/analytic_vs_measured.rs` to cross-check the simulator:
+//! measured times should track these estimates closely when the network is
+//! idle (the models ignore CPU time, per the paper's τ_block ≫ τ_encode
+//! assumption).
+
+use std::time::Duration;
+
+/// Network parameters of the analytic model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Per-NIC bandwidth, bytes/second.
+    pub bytes_per_sec: f64,
+    /// One-way link latency.
+    pub latency: Duration,
+}
+
+impl NetModel {
+    /// Time to move one full block through one NIC.
+    pub fn block_time(&self, block_bytes: usize) -> Duration {
+        Duration::from_secs_f64(block_bytes as f64 / self.bytes_per_sec) + self.latency
+    }
+
+    /// Time to move one network buffer node-to-node (τ_pipe).
+    pub fn buffer_time(&self, buf_bytes: usize) -> Duration {
+        Duration::from_secs_f64(buf_bytes as f64 / self.bytes_per_sec) + self.latency
+    }
+}
+
+/// Eq. (1): `T_classical = τ_block · max{k, m−1}` — the coding node
+/// serializes k downloads against m−1 uploads (one parity stays local).
+pub fn t_classical(net: &NetModel, k: usize, m: usize, block_bytes: usize) -> Duration {
+    let factor = k.max(m.saturating_sub(1)) as u32;
+    net.block_time(block_bytes) * factor
+}
+
+/// Eq. (2): `T_pipe = τ_block + (n−1)·τ_pipe` — one block-time of streaming
+/// plus the per-hop buffer delay down the chain.
+pub fn t_pipe(net: &NetModel, n: usize, block_bytes: usize, buf_bytes: usize) -> Duration {
+    net.block_time(block_bytes) + net.buffer_time(buf_bytes) * (n as u32 - 1)
+}
+
+/// Predicted speedup of pipelined over classical coding.
+pub fn predicted_speedup(
+    net: &NetModel,
+    n: usize,
+    k: usize,
+    block_bytes: usize,
+    buf_bytes: usize,
+) -> f64 {
+    t_classical(net, k, n - k, block_bytes).as_secs_f64()
+        / t_pipe(net, n, block_bytes, buf_bytes).as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetModel {
+        NetModel {
+            bytes_per_sec: 125e6, // 1 Gbps
+            latency: Duration::from_micros(200),
+        }
+    }
+
+    #[test]
+    fn eq1_dominated_by_k_for_16_11() {
+        // (16,11): max{11, 4} = 11 block-times
+        let t = t_classical(&net(), 11, 5, 64 << 20);
+        let one = net().block_time(64 << 20);
+        assert!((t.as_secs_f64() / one.as_secs_f64() - 11.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eq2_near_single_block_time() {
+        let t = t_pipe(&net(), 16, 64 << 20, 65536);
+        let one = net().block_time(64 << 20);
+        // 15 buffer hops of 64 KiB are negligible next to a 64 MiB block
+        assert!(t < one * 2, "{t:?} vs {one:?}");
+        assert!(t >= one);
+    }
+
+    #[test]
+    fn paper_headline_speedup_shape() {
+        // The paper reports ~90% single-object coding-time reduction for
+        // (16,11): speedup ≈ 10×. The model must predict that regime.
+        let s = predicted_speedup(&net(), 16, 11, 64 << 20, 65536);
+        assert!(s > 8.0, "predicted speedup {s}");
+        assert!(s < 12.0, "predicted speedup {s}");
+    }
+
+    #[test]
+    fn classical_beats_pipe_only_in_latency_pathologies() {
+        // huge latency, tiny block: the (n-1) hop latencies can dominate
+        let slow = NetModel {
+            bytes_per_sec: 125e6,
+            latency: Duration::from_millis(100),
+        };
+        let tp = t_pipe(&slow, 16, 65536, 65536);
+        let tc = t_classical(&slow, 11, 5, 65536);
+        assert!(tp > tc, "latency-dominated regime should favor classical");
+    }
+}

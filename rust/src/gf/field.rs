@@ -1,0 +1,200 @@
+//! Field element trait and the two concrete fields (GF(2^8), GF(2^16)).
+//!
+//! All coding code in the crate is generic over [`GfElem`] so every
+//! algorithm (RapidRAID construction, Cauchy RS, Gauss, census…) works
+//! identically for the paper's *RR8* and *RR16* builds.
+
+use super::tables::{self, Tables};
+
+/// An element of GF(2^w) stored in a primitive integer (u8 / u16).
+///
+/// Addition is XOR (characteristic 2); multiplication is table based.
+pub trait GfElem:
+    Copy + Clone + Eq + PartialEq + std::fmt::Debug + std::hash::Hash + Default + Send + Sync + 'static
+{
+    /// Field width in bits.
+    const BITS: u32;
+    /// Multiplicative group order: 2^w − 1.
+    const ORDER: u32;
+    /// The additive identity.
+    const ZERO: Self;
+    /// The multiplicative identity.
+    const ONE: Self;
+
+    /// Backing tables for this field.
+    fn tables() -> &'static Tables;
+
+    /// Lossless widening.
+    fn to_u32(self) -> u32;
+    /// Truncating narrowing (value must fit in w bits).
+    fn from_u32(v: u32) -> Self;
+
+    /// Field addition (== subtraction): XOR.
+    #[inline]
+    fn add(self, other: Self) -> Self {
+        Self::from_u32(self.to_u32() ^ other.to_u32())
+    }
+
+    /// Field multiplication via log/antilog tables.
+    #[inline]
+    fn mul(self, other: Self) -> Self {
+        let (a, b) = (self.to_u32(), other.to_u32());
+        if a == 0 || b == 0 {
+            return Self::ZERO;
+        }
+        let t = Self::tables();
+        Self::from_u32(t.exp[(t.log[a as usize] + t.log[b as usize]) as usize])
+    }
+
+    /// Multiplicative inverse. Panics on zero.
+    #[inline]
+    fn inv(self) -> Self {
+        let a = self.to_u32();
+        assert!(a != 0, "inverse of 0 in GF(2^{})", Self::BITS);
+        let t = Self::tables();
+        Self::from_u32(t.exp[((Self::ORDER - t.log[a as usize]) % Self::ORDER) as usize])
+    }
+
+    /// Field division: `self * other.inv()`. Panics if `other` is zero.
+    #[inline]
+    fn div(self, other: Self) -> Self {
+        self.mul(other.inv())
+    }
+
+    /// `alpha^e` where alpha is the fixed generator (2).
+    #[inline]
+    fn alpha_pow(e: u32) -> Self {
+        Self::from_u32(Self::tables().exp[(e % Self::ORDER) as usize])
+    }
+
+    /// Discrete log base alpha. Panics on zero.
+    #[inline]
+    fn log(self) -> u32 {
+        let a = self.to_u32();
+        assert!(a != 0, "log of 0");
+        Self::tables().log[a as usize]
+    }
+}
+
+/// GF(2^8) element (the paper's *RR8*; one byte per symbol).
+#[derive(Copy, Clone, Eq, PartialEq, Debug, Hash, Default, PartialOrd, Ord)]
+pub struct Gf256(pub u8);
+
+impl GfElem for Gf256 {
+    const BITS: u32 = 8;
+    const ORDER: u32 = 255;
+    const ZERO: Self = Gf256(0);
+    const ONE: Self = Gf256(1);
+
+    #[inline]
+    fn tables() -> &'static Tables {
+        &tables::TABLES8
+    }
+    #[inline]
+    fn to_u32(self) -> u32 {
+        self.0 as u32
+    }
+    #[inline]
+    fn from_u32(v: u32) -> Self {
+        debug_assert!(v <= 0xFF);
+        Gf256(v as u8)
+    }
+}
+
+/// GF(2^16) element (the paper's *RR16*; one 16-bit word per symbol).
+#[derive(Copy, Clone, Eq, PartialEq, Debug, Hash, Default, PartialOrd, Ord)]
+pub struct Gf65536(pub u16);
+
+impl GfElem for Gf65536 {
+    const BITS: u32 = 16;
+    const ORDER: u32 = 65535;
+    const ZERO: Self = Gf65536(0);
+    const ONE: Self = Gf65536(1);
+
+    #[inline]
+    fn tables() -> &'static Tables {
+        &tables::TABLES16
+    }
+    #[inline]
+    fn to_u32(self) -> u32 {
+        self.0 as u32
+    }
+    #[inline]
+    fn from_u32(v: u32) -> Self {
+        debug_assert!(v <= 0xFFFF);
+        Gf65536(v as u16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn axioms<F: GfElem>(seed: u64) {
+        let mut rng = SplitMix64::new(seed);
+        let mask = (1u64 << F::BITS) - 1;
+        for _ in 0..300 {
+            let a = F::from_u32((rng.next_u64() & mask) as u32);
+            let b = F::from_u32((rng.next_u64() & mask) as u32);
+            let c = F::from_u32((rng.next_u64() & mask) as u32);
+            // commutativity
+            assert_eq!(a.mul(b), b.mul(a));
+            assert_eq!(a.add(b), b.add(a));
+            // associativity
+            assert_eq!(a.mul(b).mul(c), a.mul(b.mul(c)));
+            // distributivity
+            assert_eq!(a.mul(b.add(c)), a.mul(b).add(a.mul(c)));
+            // identities
+            assert_eq!(a.mul(F::ONE), a);
+            assert_eq!(a.mul(F::ZERO), F::ZERO);
+            assert_eq!(a.add(F::ZERO), a);
+            // additive self-inverse (characteristic 2)
+            assert_eq!(a.add(a), F::ZERO);
+            // multiplicative inverse
+            if a != F::ZERO {
+                assert_eq!(a.mul(a.inv()), F::ONE);
+                assert_eq!(a.div(a), F::ONE);
+            }
+        }
+    }
+
+    #[test]
+    fn gf256_axioms() {
+        axioms::<Gf256>(1);
+    }
+
+    #[test]
+    fn gf65536_axioms() {
+        axioms::<Gf65536>(2);
+    }
+
+    #[test]
+    fn gf256_mul_matches_bitwise_exhaustive() {
+        for a in 0u32..256 {
+            for b in 0u32..256 {
+                let expect = tables::mul_bitwise(a, b, 8);
+                let got = Gf256(a as u8).mul(Gf256(b as u8)).0 as u32;
+                assert_eq!(got, expect, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_pow_and_log_roundtrip() {
+        for e in [0u32, 1, 7, 200, 254, 255, 300] {
+            let x = Gf256::alpha_pow(e);
+            assert_eq!(x.log(), e % 255);
+        }
+        for e in [0u32, 1, 65534, 65535, 70000] {
+            let x = Gf65536::alpha_pow(e);
+            assert_eq!(x.log(), e % 65535);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inverse of 0")]
+    fn inv_zero_panics() {
+        Gf256::ZERO.inv();
+    }
+}

@@ -1,0 +1,176 @@
+//! Gaussian elimination over GF(2^w): rank, inversion, linear solve.
+//!
+//! Used for (a) the dependency census (rank of every k-subset of generator
+//! rows), (b) decoding (invert the surviving k×k generator submatrix), and
+//! (c) verifying coefficient draws during the search for accidental-
+//! dependency-free RapidRAID codes.
+
+use super::field::GfElem;
+use super::matrix::Matrix;
+
+/// Rank of `m` over the field (non-destructive).
+pub fn rank<F: GfElem>(m: &Matrix<F>) -> usize {
+    let mut a = m.clone();
+    let (rows, cols) = (a.rows(), a.cols());
+    let mut r = 0;
+    for c in 0..cols {
+        // find pivot
+        let piv = (r..rows).find(|&i| a[(i, c)] != F::ZERO);
+        let Some(piv) = piv else { continue };
+        a.swap_rows(r, piv);
+        let inv = a[(r, c)].inv();
+        for j in c..cols {
+            let v = a[(r, j)].mul(inv);
+            a[(r, j)] = v;
+        }
+        for i in 0..rows {
+            if i != r && a[(i, c)] != F::ZERO {
+                let f = a[(i, c)];
+                for j in c..cols {
+                    let t = f.mul(a[(r, j)]);
+                    a[(i, j)] = a[(i, j)].add(t);
+                }
+            }
+        }
+        r += 1;
+        if r == rows {
+            break;
+        }
+    }
+    r
+}
+
+/// True if the square matrix has full rank.
+pub fn is_invertible<F: GfElem>(m: &Matrix<F>) -> bool {
+    m.rows() == m.cols() && rank(m) == m.rows()
+}
+
+/// Inverse of a square matrix, or `None` if singular (Gauss–Jordan).
+pub fn invert<F: GfElem>(m: &Matrix<F>) -> Option<Matrix<F>> {
+    assert_eq!(m.rows(), m.cols(), "inverse of non-square matrix");
+    let n = m.rows();
+    let mut a = m.clone();
+    let mut inv = Matrix::<F>::identity(n);
+    for c in 0..n {
+        let piv = (c..n).find(|&i| a[(i, c)] != F::ZERO)?;
+        a.swap_rows(c, piv);
+        inv.swap_rows(c, piv);
+        let s = a[(c, c)].inv();
+        for j in 0..n {
+            let v = a[(c, j)].mul(s);
+            a[(c, j)] = v;
+            let w = inv[(c, j)].mul(s);
+            inv[(c, j)] = w;
+        }
+        for i in 0..n {
+            if i != c && a[(i, c)] != F::ZERO {
+                let f = a[(i, c)];
+                for j in 0..n {
+                    let t = f.mul(a[(c, j)]);
+                    a[(i, j)] = a[(i, j)].add(t);
+                    let t2 = f.mul(inv[(c, j)]);
+                    inv[(i, j)] = inv[(i, j)].add(t2);
+                }
+            }
+        }
+    }
+    Some(inv)
+}
+
+/// Solve `A x = b` for square invertible `A`; `None` if singular.
+pub fn solve<F: GfElem>(a: &Matrix<F>, b: &[F]) -> Option<Vec<F>> {
+    let inv = invert(a)?;
+    Some(inv.mul_vec(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::field::{Gf256, Gf65536};
+    use crate::util::prop::forall;
+
+    fn random_matrix<F: GfElem>(rng: &mut crate::util::SplitMix64, n: usize) -> Matrix<F> {
+        let mask = (1u64 << F::BITS) - 1;
+        Matrix::from_fn(n, n, |_, _| F::from_u32((rng.next_u64() & mask) as u32))
+    }
+
+    #[test]
+    fn rank_of_identity() {
+        assert_eq!(rank(&Matrix::<Gf256>::identity(5)), 5);
+        assert_eq!(rank(&Matrix::<Gf65536>::identity(7)), 7);
+    }
+
+    #[test]
+    fn rank_of_zero() {
+        assert_eq!(rank(&Matrix::<Gf256>::zero(4, 4)), 0);
+    }
+
+    #[test]
+    fn rank_detects_duplicate_rows() {
+        let mut m = Matrix::<Gf256>::identity(3);
+        let r0: Vec<Gf256> = m.row(0).to_vec();
+        m.row_mut(2).copy_from_slice(&r0);
+        assert_eq!(rank(&m), 2);
+    }
+
+    #[test]
+    fn rank_detects_scaled_rows() {
+        // row2 = 5 * row0 is dependent over the field even though bytes differ
+        let mut m = Matrix::<Gf256>::zero(2, 3);
+        for j in 0..3 {
+            m[(0, j)] = Gf256((j + 1) as u8);
+            m[(1, j)] = Gf256(5).mul(Gf256((j + 1) as u8));
+        }
+        assert_eq!(rank(&m), 1);
+    }
+
+    #[test]
+    fn invert_roundtrip_cauchy() {
+        let c = Matrix::<Gf256>::cauchy(6, 6);
+        let inv = invert(&c).expect("cauchy is invertible");
+        assert_eq!(c.mul(&inv), Matrix::identity(6));
+        assert_eq!(inv.mul(&c), Matrix::identity(6));
+    }
+
+    #[test]
+    fn invert_singular_returns_none() {
+        let m = Matrix::<Gf256>::zero(3, 3);
+        assert!(invert(&m).is_none());
+        let mut m2 = Matrix::<Gf256>::identity(3);
+        let r0 = m2.row(0).to_vec();
+        m2.row_mut(1).copy_from_slice(&r0);
+        assert!(invert(&m2).is_none());
+    }
+
+    #[test]
+    fn solve_recovers_known_vector() {
+        let a = Matrix::<Gf256>::cauchy(5, 5);
+        let x: Vec<Gf256> = (1..=5).map(|i| Gf256(i * 17)).collect();
+        let b = a.mul_vec(&x);
+        let got = solve(&a, &b).unwrap();
+        assert_eq!(got, x);
+    }
+
+    #[test]
+    fn prop_invert_roundtrip_random() {
+        forall(40, 99, |rng| {
+            let n = 1 + (rng.below(6) as usize);
+            let m = random_matrix::<Gf256>(rng, n);
+            if let Some(inv) = invert(&m) {
+                assert_eq!(m.mul(&inv), Matrix::identity(n));
+            } else {
+                assert!(rank(&m) < n, "invert returned None on full-rank matrix");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_rank_bounded_gf65536() {
+        forall(20, 100, |rng| {
+            let n = 1 + (rng.below(5) as usize);
+            let m = random_matrix::<Gf65536>(rng, n);
+            let r = rank(&m);
+            assert!(r <= n);
+        });
+    }
+}

@@ -1,0 +1,272 @@
+//! Dense matrices over GF(2^w): construction (identity, Cauchy), products,
+//! row selection — shared by the code constructions and the census.
+
+use super::field::GfElem;
+
+/// Row-major dense matrix over a GF field.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Matrix<F: GfElem> {
+    rows: usize,
+    cols: usize,
+    data: Vec<F>,
+}
+
+impl<F: GfElem> std::fmt::Debug for Matrix<F> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows {
+            write!(f, "  ")?;
+            for c in 0..self.cols {
+                write!(f, "{:>6} ", self[(r, c)].to_u32())?;
+            }
+            writeln!(f)?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl<F: GfElem> Matrix<F> {
+    /// All-zero matrix.
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![F::ZERO; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zero(n, n);
+        for i in 0..n {
+            m[(i, i)] = F::ONE;
+        }
+        m
+    }
+
+    /// Build from a row-major closure.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> F) -> Self {
+        let mut m = Self::zero(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m[(r, c)] = f(r, c);
+            }
+        }
+        m
+    }
+
+    /// Build from nested vectors (rows of equal length).
+    pub fn from_rows(rows: Vec<Vec<F>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Self {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    /// Cauchy matrix: `a[i][j] = 1 / (x_i + y_j)` with all x_i, y_j distinct
+    /// and x_i != y_j. Any square submatrix is invertible — the classical
+    /// way to build an MDS generator (the paper's CEC baseline uses Cauchy
+    /// Reed-Solomon per Plank et al. [23]).
+    pub fn cauchy(rows: usize, cols: usize) -> Self {
+        let field_size = 1u64 << F::BITS;
+        assert!(
+            (rows + cols) as u64 <= field_size,
+            "field too small for a {rows}x{cols} Cauchy matrix"
+        );
+        // x_i = i, y_j = rows + j — disjoint by construction.
+        Self::from_fn(rows, cols, |i, j| {
+            let x = F::from_u32(i as u32);
+            let y = F::from_u32((rows + j) as u32);
+            x.add(y).inv()
+        })
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow one row as a slice.
+    pub fn row(&self, r: usize) -> &[F] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    pub fn row_mut(&mut self, r: usize) -> &mut [F] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// New matrix keeping only `which` rows (in the given order).
+    pub fn select_rows(&self, which: &[usize]) -> Self {
+        let mut m = Self::zero(which.len(), self.cols);
+        for (dst, &src) in which.iter().enumerate() {
+            m.row_mut(dst).copy_from_slice(self.row(src));
+        }
+        m
+    }
+
+    /// Matrix product over the field.
+    pub fn mul(&self, other: &Self) -> Self {
+        assert_eq!(self.cols, other.rows, "dimension mismatch");
+        let mut out = Self::zero(self.rows, other.cols);
+        for i in 0..self.rows {
+            for l in 0..self.cols {
+                let a = self[(i, l)];
+                if a == F::ZERO {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    let t = a.mul(other[(l, j)]);
+                    out[(i, j)] = out[(i, j)].add(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn mul_vec(&self, v: &[F]) -> Vec<F> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| {
+                let mut acc = F::ZERO;
+                for (a, b) in self.row(i).iter().zip(v) {
+                    acc = acc.add(a.mul(*b));
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Vertical concatenation (same column count).
+    pub fn vstack(&self, other: &Self) -> Self {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Self {
+            rows: self.rows + other.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// Swap two rows in place.
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        let (a, b) = (a.min(b), a.max(b));
+        let (head, tail) = self.data.split_at_mut(b * self.cols);
+        head[a * self.cols..(a + 1) * self.cols].swap_with_slice(&mut tail[..self.cols]);
+    }
+
+    /// True if every entry is zero.
+    pub fn is_zero(&self) -> bool {
+        self.data.iter().all(|&x| x == F::ZERO)
+    }
+}
+
+impl<F: GfElem> std::ops::Index<(usize, usize)> for Matrix<F> {
+    type Output = F;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &F {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl<F: GfElem> std::ops::IndexMut<(usize, usize)> for Matrix<F> {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut F {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::field::{Gf256, Gf65536};
+    use crate::gf::gauss;
+
+    #[test]
+    fn identity_is_neutral() {
+        let id = Matrix::<Gf256>::identity(4);
+        let m = Matrix::<Gf256>::from_fn(4, 4, |i, j| Gf256((i * 4 + j + 1) as u8));
+        assert_eq!(id.mul(&m), m);
+        assert_eq!(m.mul(&id), m);
+    }
+
+    #[test]
+    fn cauchy_square_submatrices_invertible() {
+        let c = Matrix::<Gf256>::cauchy(4, 6);
+        // every single entry nonzero
+        for i in 0..4 {
+            for j in 0..6 {
+                assert_ne!(c[(i, j)], Gf256::ZERO);
+            }
+        }
+        // all 4x4 column selections have full rank (MDS property witness)
+        let cols: Vec<usize> = (0..6).collect();
+        for a in 0..6 {
+            for b in (a + 1)..6 {
+                let keep: Vec<usize> = cols.iter().copied().filter(|&x| x != a && x != b).collect();
+                let sub = Matrix::<Gf256>::from_fn(4, 4, |i, j| c[(i, keep[j])]);
+                assert_eq!(gauss::rank(&sub), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn cauchy_gf65536_smoke() {
+        let c = Matrix::<Gf65536>::cauchy(5, 11);
+        assert_eq!(c.rows(), 5);
+        assert_eq!(gauss::rank(&c), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "field too small")]
+    fn cauchy_too_big_panics() {
+        let _ = Matrix::<Gf256>::cauchy(200, 100);
+    }
+
+    #[test]
+    fn mul_vec_matches_mul() {
+        let m = Matrix::<Gf256>::from_fn(3, 5, |i, j| Gf256((7 * i + j) as u8));
+        let v: Vec<Gf256> = (0..5).map(|i| Gf256(i as u8 + 1)).collect();
+        let col = Matrix::from_rows(v.iter().map(|&x| vec![x]).collect());
+        let prod = m.mul(&col);
+        let mv = m.mul_vec(&v);
+        for i in 0..3 {
+            assert_eq!(prod[(i, 0)], mv[i]);
+        }
+    }
+
+    #[test]
+    fn select_and_stack() {
+        let m = Matrix::<Gf256>::from_fn(4, 2, |i, j| Gf256((i * 2 + j) as u8));
+        let s = m.select_rows(&[3, 1]);
+        assert_eq!(s.row(0), m.row(3));
+        assert_eq!(s.row(1), m.row(1));
+        let v = m.vstack(&s);
+        assert_eq!(v.rows(), 6);
+        assert_eq!(v.row(4), m.row(3));
+    }
+
+    #[test]
+    fn swap_rows_works() {
+        let mut m = Matrix::<Gf256>::from_fn(3, 3, |i, _| Gf256(i as u8));
+        m.swap_rows(0, 2);
+        assert_eq!(m[(0, 0)], Gf256(2));
+        assert_eq!(m[(2, 0)], Gf256(0));
+    }
+}

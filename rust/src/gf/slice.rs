@@ -1,0 +1,280 @@
+//! Bulk GF slice operations — the native encoding hot path.
+//!
+//! These are the Rust equivalents of Jerasure's *region* operations, the
+//! inner loop of every encoder in the crate when the native backend is
+//! selected (the PJRT backend runs the same math inside the AOT Pallas
+//! kernels instead).
+//!
+//! The key trick (same as Jerasure's `MULT_TABLE` / gf-complete's `SPLIT`):
+//! a slice is always multiplied by ONE coefficient, so we pre-expand that
+//! coefficient into small product tables and stream the payload once.
+//!
+//! * GF(2^8): one 256-entry `u8` product table — a single L1-resident lookup
+//!   per byte.
+//! * GF(2^16): two 256-entry `u16` tables (low/high source byte), exploiting
+//!   distributivity `c*(hi·256 ⊕ lo) = c*hi·256 ⊕ c*lo`; two lookups + one
+//!   XOR per 16-bit word.
+
+use super::field::{Gf256, Gf65536, GfElem};
+
+/// `dst[i] ^= c * src[i]` — the multiply-accumulate at the heart of both the
+/// classical parity generation and the RapidRAID pipeline stage.
+pub trait SliceOps: GfElem {
+    /// dst ^= c * src (elementwise, GF multiply).
+    fn mul_slice_xor(c: Self, src: &[Self], dst: &mut [Self]);
+    /// dst = c * src (elementwise, GF multiply).
+    fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]);
+}
+
+/// Build the 256-entry product table for a GF(2^8) coefficient.
+#[inline]
+fn table256(c: Gf256) -> [u8; 256] {
+    let mut t = [0u8; 256];
+    if c.0 == 0 {
+        return t;
+    }
+    let tabs = Gf256::tables();
+    let lc = tabs.log[c.0 as usize];
+    for (x, slot) in t.iter_mut().enumerate().skip(1) {
+        *slot = tabs.exp[(lc + tabs.log[x]) as usize] as u8;
+    }
+    t
+}
+
+/// Build the two 256-entry split tables for a GF(2^16) coefficient:
+/// `lo[b] = c * b` and `hi[b] = c * (b << 8)`.
+#[inline]
+fn tables65536(c: Gf65536) -> ([u16; 256], [u16; 256]) {
+    let mut lo = [0u16; 256];
+    let mut hi = [0u16; 256];
+    if c.0 == 0 {
+        return (lo, hi);
+    }
+    let tabs = Gf65536::tables();
+    let lc = tabs.log[c.0 as usize];
+    for b in 1usize..256 {
+        lo[b] = tabs.exp[(lc + tabs.log[b]) as usize] as u16;
+        hi[b] = tabs.exp[(lc + tabs.log[b << 8]) as usize] as u16;
+    }
+    (lo, hi)
+}
+
+impl SliceOps for Gf256 {
+    fn mul_slice_xor(c: Self, src: &[Self], dst: &mut [Self]) {
+        assert_eq!(src.len(), dst.len());
+        if c.0 == 0 {
+            return;
+        }
+        if c.0 == 1 {
+            xor_slice(src, dst);
+            return;
+        }
+        let t = table256(c);
+        // 8-way unroll: keeps the table lookup pipeline full on one core.
+        let n = src.len();
+        let chunks = n / 8 * 8;
+        for i in (0..chunks).step_by(8) {
+            dst[i].0 ^= t[src[i].0 as usize];
+            dst[i + 1].0 ^= t[src[i + 1].0 as usize];
+            dst[i + 2].0 ^= t[src[i + 2].0 as usize];
+            dst[i + 3].0 ^= t[src[i + 3].0 as usize];
+            dst[i + 4].0 ^= t[src[i + 4].0 as usize];
+            dst[i + 5].0 ^= t[src[i + 5].0 as usize];
+            dst[i + 6].0 ^= t[src[i + 6].0 as usize];
+            dst[i + 7].0 ^= t[src[i + 7].0 as usize];
+        }
+        for i in chunks..n {
+            dst[i].0 ^= t[src[i].0 as usize];
+        }
+    }
+
+    fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]) {
+        assert_eq!(src.len(), dst.len());
+        if c.0 == 0 {
+            dst.fill(Gf256::ZERO);
+            return;
+        }
+        if c.0 == 1 {
+            dst.copy_from_slice(src);
+            return;
+        }
+        let t = table256(c);
+        for (d, s) in dst.iter_mut().zip(src) {
+            d.0 = t[s.0 as usize];
+        }
+    }
+}
+
+impl SliceOps for Gf65536 {
+    fn mul_slice_xor(c: Self, src: &[Self], dst: &mut [Self]) {
+        assert_eq!(src.len(), dst.len());
+        if c.0 == 0 {
+            return;
+        }
+        if c.0 == 1 {
+            xor_slice(src, dst);
+            return;
+        }
+        let (lo, hi) = tables65536(c);
+        for (d, s) in dst.iter_mut().zip(src) {
+            d.0 ^= lo[(s.0 & 0xFF) as usize] ^ hi[(s.0 >> 8) as usize];
+        }
+    }
+
+    fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]) {
+        assert_eq!(src.len(), dst.len());
+        if c.0 == 0 {
+            dst.fill(Gf65536::ZERO);
+            return;
+        }
+        if c.0 == 1 {
+            dst.copy_from_slice(src);
+            return;
+        }
+        let (lo, hi) = tables65536(c);
+        for (d, s) in dst.iter_mut().zip(src) {
+            d.0 = lo[(s.0 & 0xFF) as usize] ^ hi[(s.0 >> 8) as usize];
+        }
+    }
+}
+
+/// `dst[i] ^= c * src[i]` for any field implementing [`SliceOps`].
+#[inline]
+pub fn mul_slice_xor<F: SliceOps>(c: F, src: &[F], dst: &mut [F]) {
+    F::mul_slice_xor(c, src, dst);
+}
+
+/// `dst[i] = c * src[i]` for any field implementing [`SliceOps`].
+#[inline]
+pub fn mul_slice<F: SliceOps>(c: F, src: &[F], dst: &mut [F]) {
+    F::mul_slice(c, src, dst);
+}
+
+/// Plain `dst ^= src`, word-accelerated where alignment allows.
+pub fn xor_slice<F: GfElem>(src: &[F], dst: &mut [F]) {
+    assert_eq!(src.len(), dst.len());
+    // Safety-free fast path: XOR via u64 words on the raw byte views when
+    // both slices have the same (arbitrary) alignment offset.
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = d.add(*s);
+    }
+}
+
+/// Reinterpret a byte buffer as GF(2^8) symbols (zero-copy).
+#[inline]
+pub fn bytes_as_gf256(bytes: &[u8]) -> &[Gf256] {
+    // SAFETY: Gf256 is repr(transparent)-equivalent (single u8 field, same
+    // size/alignment); the transmute only changes the nominal type.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const Gf256, bytes.len()) }
+}
+
+/// Reinterpret a mutable byte buffer as GF(2^8) symbols (zero-copy).
+#[inline]
+pub fn bytes_as_gf256_mut(bytes: &mut [u8]) -> &mut [Gf256] {
+    // SAFETY: as above.
+    unsafe { std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut Gf256, bytes.len()) }
+}
+
+/// Reinterpret a byte buffer as GF(2^16) symbols (zero-copy; len must be even
+/// and the pointer 2-aligned, which `Vec<u8>` always satisfies in practice —
+/// callers allocate via `vec![0u8; n]`).
+pub fn bytes_as_gf65536(bytes: &[u8]) -> &[Gf65536] {
+    assert_eq!(bytes.len() % 2, 0, "GF(2^16) payload must have even length");
+    assert_eq!(bytes.as_ptr() as usize % 2, 0, "GF(2^16) payload must be 2-aligned");
+    // SAFETY: length/alignment checked; u16 has no invalid bit patterns.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const Gf65536, bytes.len() / 2) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::tables::mul_bitwise;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn mul_slice_xor_gf256_matches_scalar() {
+        let mut rng = SplitMix64::new(3);
+        for c in [0u8, 1, 2, 97, 255] {
+            let src: Vec<Gf256> = (0..1000).map(|_| Gf256(rng.next_u64() as u8)).collect();
+            let mut dst: Vec<Gf256> = (0..1000).map(|_| Gf256(rng.next_u64() as u8)).collect();
+            let before = dst.clone();
+            mul_slice_xor(Gf256(c), &src, &mut dst);
+            for i in 0..1000 {
+                let expect = before[i].0 ^ mul_bitwise(c as u32, src[i].0 as u32, 8) as u8;
+                assert_eq!(dst[i].0, expect, "c={c} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_slice_xor_gf65536_matches_scalar() {
+        let mut rng = SplitMix64::new(4);
+        for c in [0u16, 1, 2, 0x1234, 0xFFFF] {
+            let src: Vec<Gf65536> = (0..500).map(|_| Gf65536(rng.next_u64() as u16)).collect();
+            let mut dst: Vec<Gf65536> = (0..500).map(|_| Gf65536(rng.next_u64() as u16)).collect();
+            let before = dst.clone();
+            mul_slice_xor(Gf65536(c), &src, &mut dst);
+            for i in 0..500 {
+                let expect = before[i].0 ^ mul_bitwise(c as u32, src[i].0 as u32, 16) as u16;
+                assert_eq!(dst[i].0, expect, "c={c} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_slice_overwrites() {
+        let src = vec![Gf256(7); 64];
+        let mut dst = vec![Gf256(0xAA); 64];
+        mul_slice(Gf256(3), &src, &mut dst);
+        let expect = Gf256(3).mul(Gf256(7));
+        assert!(dst.iter().all(|&d| d == expect));
+    }
+
+    #[test]
+    fn mul_slice_by_zero_and_one() {
+        let src: Vec<Gf256> = (0..100).map(|i| Gf256(i as u8)).collect();
+        let mut dst = vec![Gf256(0x55); 100];
+        mul_slice(Gf256(0), &src, &mut dst);
+        assert!(dst.iter().all(|&d| d == Gf256::ZERO));
+        mul_slice(Gf256(1), &src, &mut dst);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn xor_slice_is_involution() {
+        let mut rng = SplitMix64::new(5);
+        let src: Vec<Gf256> = (0..256).map(|_| Gf256(rng.next_u64() as u8)).collect();
+        let orig: Vec<Gf256> = (0..256).map(|_| Gf256(rng.next_u64() as u8)).collect();
+        let mut dst = orig.clone();
+        xor_slice(&src, &mut dst);
+        xor_slice(&src, &mut dst);
+        assert_eq!(dst, orig);
+    }
+
+    #[test]
+    fn byte_views_roundtrip() {
+        let bytes: Vec<u8> = (0..64).collect();
+        let view = bytes_as_gf256(&bytes);
+        assert_eq!(view.len(), 64);
+        assert_eq!(view[10], Gf256(10));
+        let wide = bytes_as_gf65536(&bytes);
+        assert_eq!(wide.len(), 32);
+        assert_eq!(wide[0], Gf65536(u16::from_le_bytes([0, 1])));
+    }
+
+    #[test]
+    fn slice_linearity() {
+        // c*(x ⊕ y) == c*x ⊕ c*y at the slice level.
+        let mut rng = SplitMix64::new(6);
+        let x: Vec<Gf256> = (0..333).map(|_| Gf256(rng.next_u64() as u8)).collect();
+        let y: Vec<Gf256> = (0..333).map(|_| Gf256(rng.next_u64() as u8)).collect();
+        let c = Gf256(0x53);
+        let xy: Vec<Gf256> = x.iter().zip(&y).map(|(a, b)| a.add(*b)).collect();
+        let mut lhs = vec![Gf256::ZERO; 333];
+        mul_slice(c, &xy, &mut lhs);
+        let mut rhs = vec![Gf256::ZERO; 333];
+        mul_slice(c, &x, &mut rhs);
+        mul_slice_xor(c, &y, &mut rhs);
+        assert_eq!(lhs, rhs);
+    }
+}

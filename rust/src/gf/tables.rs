@@ -1,0 +1,152 @@
+//! Log/antilog table construction for GF(2^8) and GF(2^16).
+//!
+//! Tables are built once at first use (`once_cell::sync::Lazy`) from the
+//! bit-level carry-less multiply, exactly mirroring
+//! `python/compile/gf.py::tables` — including the *doubled* antilog table so
+//! `exp[log[a] + log[b]]` never needs a modular reduction.
+
+use once_cell::sync::Lazy;
+
+/// Primitive polynomial for GF(2^8): x^8 + x^4 + x^3 + x^2 + 1.
+pub const POLY8: u32 = 0x11D;
+/// Primitive polynomial for GF(2^16): x^16 + x^12 + x^3 + x + 1.
+pub const POLY16: u32 = 0x1100B;
+
+/// Carry-less "Russian peasant" multiply reduced mod the field polynomial.
+/// Bit-level ground truth; used only to build tables and in tests.
+pub fn mul_bitwise(mut a: u32, mut b: u32, w: u32) -> u32 {
+    let (poly, top, mask) = match w {
+        8 => (POLY8, 1u32 << 8, 0xFFu32),
+        16 => (POLY16, 1u32 << 16, 0xFFFFu32),
+        _ => panic!("unsupported field width {w}"),
+    };
+    debug_assert!(a <= mask && b <= mask);
+    let mut r = 0u32;
+    while b != 0 {
+        if b & 1 != 0 {
+            r ^= a;
+        }
+        b >>= 1;
+        a <<= 1;
+        if a & top != 0 {
+            a ^= poly;
+        }
+    }
+    r & mask
+}
+
+/// Log + doubled-antilog tables for one field.
+pub struct Tables {
+    /// `log[x]` for x in 1..=order; `log[0]` is 0 and must be guarded.
+    pub log: Vec<u32>,
+    /// `exp[i] = alpha^(i mod order)` for i in 0..2*order+2 (doubled).
+    pub exp: Vec<u32>,
+    /// Multiplicative group order: 2^w - 1.
+    pub order: u32,
+}
+
+fn build(w: u32) -> Tables {
+    let order: u32 = (1u32 << w) - 1;
+    let mut log = vec![0u32; order as usize + 1];
+    let mut exp = vec![0u32; 2 * order as usize + 2];
+    let mut x = 1u32;
+    for i in 0..order {
+        exp[i as usize] = x;
+        log[x as usize] = i;
+        x = mul_bitwise(x, 2, w);
+    }
+    assert_eq!(x, 1, "polynomial is not primitive for w={w}");
+    let (lo, hi) = exp.split_at_mut(order as usize);
+    hi[..order as usize].copy_from_slice(lo);
+    exp[2 * order as usize] = exp[0];
+    exp[2 * order as usize + 1] = exp[1];
+    Tables { log, exp, order }
+}
+
+/// GF(2^8) tables (256-entry log, 512-entry exp).
+pub static TABLES8: Lazy<Tables> = Lazy::new(|| build(8));
+/// GF(2^16) tables (65536-entry log, 131072-entry exp).
+pub static TABLES16: Lazy<Tables> = Lazy::new(|| build(16));
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_gf256_products() {
+        // Same pins as python/tests/test_gf_tables.py — both sides must agree.
+        assert_eq!(mul_bitwise(0, 7, 8), 0);
+        assert_eq!(mul_bitwise(1, 183, 8), 183);
+        assert_eq!(mul_bitwise(2, 0x80, 8), 0x1D);
+        assert_eq!(mul_bitwise(3, 7, 8), 9);
+        assert_eq!(mul_bitwise(0xFF, 0xFF, 8), 226);
+    }
+
+    #[test]
+    fn golden_gf65536_products() {
+        assert_eq!(mul_bitwise(0, 1234, 16), 0);
+        assert_eq!(mul_bitwise(1, 54321, 16), 54321);
+        assert_eq!(mul_bitwise(2, 0x8000, 16), 0x100B);
+        assert_eq!(mul_bitwise(0xFFFF, 0xFFFF, 16), 1843);
+    }
+
+    #[test]
+    fn golden_table_rows() {
+        let t = &*TABLES8;
+        assert_eq!(&t.exp[..10], &[1, 2, 4, 8, 16, 32, 64, 128, 29, 58]);
+        assert_eq!(&t.log[1..9], &[0, 1, 25, 2, 50, 26, 198, 3]);
+        let t16 = &*TABLES16;
+        assert_eq!(&t16.exp[14..18], &[16384, 32768, 4107, 8214]);
+    }
+
+    #[test]
+    fn exp_table_is_doubled() {
+        for t in [&*TABLES8, &*TABLES16] {
+            let o = t.order as usize;
+            assert_eq!(&t.exp[o..2 * o], &t.exp[..o]);
+            // worst-case index log[a]+log[b] = 2*(order-1) must be in range
+            assert!(t.exp.len() > 2 * (o - 1));
+        }
+    }
+
+    #[test]
+    fn every_nonzero_element_has_a_log() {
+        let t = &*TABLES8;
+        let mut seen = vec![false; 256];
+        for i in 0..t.order as usize {
+            seen[t.exp[i] as usize] = true;
+        }
+        assert!(seen[1..].iter().all(|&s| s));
+        assert!(!seen[0]);
+    }
+
+    #[test]
+    fn table_mul_matches_bitwise_gf256_exhaustive_diag() {
+        let t = &*TABLES8;
+        for a in 1u32..256 {
+            for b in [1u32, 2, 3, 17, 91, 128, 255] {
+                let expect = mul_bitwise(a, b, 8);
+                let got = t.exp[(t.log[a as usize] + t.log[b as usize]) as usize];
+                assert_eq!(got, expect, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_mul_matches_bitwise_gf65536_sampled() {
+        let t = &*TABLES16;
+        let mut s = 0x243F6A88u32; // deterministic LCG sample
+        for _ in 0..2000 {
+            s = s.wrapping_mul(1664525).wrapping_add(1013904223);
+            let a = (s >> 8) & 0xFFFF;
+            s = s.wrapping_mul(1664525).wrapping_add(1013904223);
+            let b = (s >> 8) & 0xFFFF;
+            if a == 0 || b == 0 {
+                continue;
+            }
+            let expect = mul_bitwise(a, b, 16);
+            let got = t.exp[(t.log[a as usize] + t.log[b as usize]) as usize];
+            assert_eq!(got, expect, "a={a} b={b}");
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! # RapidRAID — pipelined erasure codes for fast data archival
+//!
+//! Reproduction of *"RapidRAID: Pipelined Erasure Codes for Fast Data
+//! Archival in Distributed Storage Systems"* (Pamies-Juarez, Datta, Oggier;
+//! 2012) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-storage coordinator: a simulated
+//!   cluster of storage nodes connected by rate-limited links, a classical
+//!   (atomic) archival encoder, the paper's pipelined RapidRAID encoder, a
+//!   batch scheduler for concurrent object archival, object reconstruction,
+//!   fault-tolerance analytics (dependency census, static resilience) and
+//!   the benchmark harnesses that regenerate every table and figure of the
+//!   paper's evaluation section.
+//! * **L2/L1 (python/, build time only)** — the GF(2^w) coding hot-spots as
+//!   JAX graphs built from Pallas kernels, AOT-lowered to HLO text and
+//!   executed from Rust through the PJRT CPU client ([`runtime`]).
+//!
+//! ## Crate map
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops, matrices, Gauss |
+//! | [`codes`] | classical Cauchy Reed-Solomon + RapidRAID code constructions, coefficient search, dependency census |
+//! | [`reliability`] | static resilience (probability of data loss, "number of 9's") |
+//! | [`cluster`] | simulated storage cluster: nodes, rate-limited links, congestion |
+//! | [`storage`] | objects, blocks, replica placement, block stores |
+//! | [`coordinator`] | the archival system: classical + pipelined encoders, batch scheduler, decode, migration |
+//! | [`runtime`] | PJRT executor loading the AOT artifacts (`artifacts/*.hlo.txt`) |
+//! | [`backend`] | pluggable GF compute: native Rust vs PJRT artifacts |
+//! | [`metrics`] | timing spans, percentile candles, report emitters |
+//! | [`util`] | deterministic PRNG, mini property-test harness, bench timer |
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use rapidraid::codes::rapidraid::RapidRaidCode;
+//! use rapidraid::gf::Gf256;
+//!
+//! // The paper's running example: an (8,4) pipelined code over GF(2^8).
+//! let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+//! let object: Vec<Vec<Gf256>> = (0..4u8).map(|i| vec![Gf256(i); 1024]).collect();
+//! let coded = code.encode_chain(&object);
+//! let recovered = code.decode(&[(2, coded[2].clone()), (3, coded[3].clone()),
+//!                               (6, coded[6].clone()), (7, coded[7].clone())]).unwrap();
+//! assert_eq!(recovered, object);
+//! ```
+
+pub mod backend;
+pub mod bench_scenarios;
+pub mod cluster;
+pub mod codes;
+pub mod coordinator;
+pub mod gf;
+pub mod metrics;
+pub mod reliability;
+pub mod runtime;
+pub mod storage;
+pub mod util;

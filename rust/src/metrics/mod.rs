@@ -1,0 +1,125 @@
+//! Measurement collection and report emission for the benchmark harnesses.
+//!
+//! The paper reports coding times as candles (median, 25–75 percentile box,
+//! min–max whiskers — Fig. 4) or mean ± stddev (Fig. 5); [`Recorder`]
+//! gathers named samples and emits both, plus aligned markdown/CSV tables
+//! for EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+pub use crate::util::bench::{bench, once, throughput_mib_s, Candle};
+
+/// Thread-safe named-sample collector.
+#[derive(Default)]
+pub struct Recorder {
+    samples: Mutex<BTreeMap<String, Vec<Duration>>>,
+}
+
+impl Recorder {
+    /// Empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one sample under `name`.
+    pub fn record(&self, name: &str, d: Duration) {
+        self.samples
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(d);
+    }
+
+    /// Snapshot a candle for one series (None if unknown).
+    pub fn candle(&self, name: &str) -> Option<Candle> {
+        let map = self.samples.lock().unwrap();
+        let mut samples = map.get(name)?.clone();
+        samples.sort_unstable();
+        Some(Candle {
+            name: name.to_string(),
+            samples,
+        })
+    }
+
+    /// All series as candles, sorted by name.
+    pub fn candles(&self) -> Vec<Candle> {
+        let map = self.samples.lock().unwrap();
+        map.iter()
+            .map(|(name, s)| {
+                let mut samples = s.clone();
+                samples.sort_unstable();
+                Candle {
+                    name: name.clone(),
+                    samples,
+                }
+            })
+            .collect()
+    }
+
+    /// Markdown table: one row per series with candle stats.
+    pub fn markdown(&self) -> String {
+        let mut out = String::from(
+            "| series | median | p25 | p75 | min | max | mean | stddev | n |\n|---|---|---|---|---|---|---|---|---|\n",
+        );
+        for c in self.candles() {
+            out.push_str(&format!(
+                "| {} | {:.3?} | {:.3?} | {:.3?} | {:.3?} | {:.3?} | {:.3?} | {:.4}s | {} |\n",
+                c.name,
+                c.median(),
+                c.percentile(0.25),
+                c.percentile(0.75),
+                c.min(),
+                c.max(),
+                c.mean(),
+                c.stddev_secs(),
+                c.samples.len()
+            ));
+        }
+        out
+    }
+
+    /// CSV with raw samples (`series,sample_idx,seconds`).
+    pub fn csv(&self) -> String {
+        let mut out = String::from("series,sample,seconds\n");
+        for c in self.candles() {
+            for (i, s) in c.samples.iter().enumerate() {
+                out.push_str(&format!("{},{},{:.9}\n", c.name, i, s.as_secs_f64()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_report() {
+        let r = Recorder::new();
+        r.record("a", Duration::from_millis(10));
+        r.record("a", Duration::from_millis(30));
+        r.record("b", Duration::from_millis(5));
+        let c = r.candle("a").unwrap();
+        assert_eq!(c.samples.len(), 2);
+        assert_eq!(c.min(), Duration::from_millis(10));
+        assert!(r.candle("zzz").is_none());
+        let md = r.markdown();
+        assert!(md.contains("| a |"));
+        assert!(md.contains("| b |"));
+        let csv = r.csv();
+        assert_eq!(csv.lines().count(), 4); // header + 3 samples
+    }
+
+    #[test]
+    fn candles_sorted_by_name() {
+        let r = Recorder::new();
+        r.record("z", Duration::from_millis(1));
+        r.record("a", Duration::from_millis(1));
+        let names: Vec<String> = r.candles().into_iter().map(|c| c.name).collect();
+        assert_eq!(names, vec!["a", "z"]);
+    }
+}

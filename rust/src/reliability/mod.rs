@@ -1,0 +1,21 @@
+//! Static resilience analysis (paper Table I).
+//!
+//! *Static resilience* is the probability that a stored object remains
+//! reconstructable when every storage node fails independently with
+//! probability `p`, reported in the paper's "number of 9's" metric
+//! (`three nines` = survival probability 0.999).
+//!
+//! Three schemes are compared, as in Table I:
+//! * 3-way replication — survives unless all replicas fail: 1 − p³.
+//! * (n, k) classical MDS — survives iff ≤ n−k nodes fail (binomial tail).
+//! * (n, k) RapidRAID — survives iff the surviving generator rows still
+//!   have rank k; computed EXACTLY by enumerating all 2^n failure patterns
+//!   against the code's generator matrix (n ≤ 20 is instantaneous).
+
+pub mod nines;
+pub mod resilience;
+
+pub use nines::nines;
+pub use resilience::{
+    code_survival_prob, mds_survival_prob, replication_survival_prob, table1, Table1Row,
+};

@@ -1,0 +1,54 @@
+//! The "number of 9's" availability metric (paper Table I, footnote 1).
+
+/// Number of leading nines of a survival probability:
+/// 0.999 → 3, 0.992 → 2, 0.5 → 0.
+///
+/// Computed as ⌊−log₁₀(1 − p_survive)⌋, clamped at 0, with a small epsilon
+/// so exact decimals (0.999…) don't lose a nine to floating-point error.
+pub fn nines(p_survive: f64) -> u32 {
+    assert!((0.0..=1.0).contains(&p_survive), "probability out of range");
+    let p_loss = 1.0 - p_survive;
+    if p_loss <= 0.0 {
+        return u32::MAX; // certain survival
+    }
+    let raw = -p_loss.log10();
+    if raw < 0.0 {
+        0
+    } else {
+        (raw + 1e-9).floor() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_footnote_example() {
+        assert_eq!(nines(0.999), 3); // "three nines"
+    }
+
+    #[test]
+    fn replication_row_of_table1() {
+        // 3-replica survival = 1 - p^3 for p = 0.2, 0.1, 0.01, 0.001
+        assert_eq!(nines(1.0 - 0.2f64.powi(3)), 2);
+        assert_eq!(nines(1.0 - 0.1f64.powi(3)), 3);
+        assert_eq!(nines(1.0 - 0.01f64.powi(3)), 6);
+        assert_eq!(nines(1.0 - 0.001f64.powi(3)), 9);
+    }
+
+    #[test]
+    fn edge_cases() {
+        assert_eq!(nines(0.0), 0);
+        assert_eq!(nines(0.5), 0);
+        assert_eq!(nines(0.89), 0);
+        assert_eq!(nines(0.9), 1);
+        assert_eq!(nines(1.0), u32::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "probability out of range")]
+    fn rejects_bad_probability() {
+        nines(1.5);
+    }
+}

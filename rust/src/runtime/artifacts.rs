@@ -1,0 +1,188 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`).
+//!
+//! One artifact per line, space-separated `key=value` pairs:
+//!
+//! ```text
+//! name=gf8_gemm_m5_k11 kind=gemm w=8 m=5 k=11 r=0 b=65536 file=gf8_gemm_m5_k11.hlo.txt
+//! name=gf8_step_r1   kind=step w=8 m=0 k=0  r=1 b=65536 file=gf8_step_r1.hlo.txt
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::backend::Width;
+
+/// What computation an artifact implements.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum ArtifactKind {
+    /// `parity[m,b] = gmat[m,k] ⊗ data[k,b]`.
+    Gemm,
+    /// `(x_out[b], c[b]) = step(x[b], locals[r,b], psi[r], xi[r])`.
+    Step,
+}
+
+/// Metadata of one AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Unique artifact name.
+    pub name: String,
+    /// Computation kind.
+    pub kind: ArtifactKind,
+    /// Field width.
+    pub width: Width,
+    /// Gemm output rows (0 for step).
+    pub m: usize,
+    /// Gemm input rows (0 for step).
+    pub k: usize,
+    /// Step local-block arity (0 for gemm).
+    pub r: usize,
+    /// Payload length in field SYMBOLS (b bytes for w=8, 2b bytes for w=16).
+    pub b: usize,
+    /// HLO text file path (absolute).
+    pub path: PathBuf,
+}
+
+impl ArtifactMeta {
+    /// Payload length in BYTES.
+    pub fn buf_bytes(&self) -> usize {
+        self.b * self.width.symbol_bytes()
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {}/manifest.txt (run `make artifacts` first): {e}",
+                dir.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text, resolving file paths against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let kv: HashMap<&str, &str> = line
+                .split_whitespace()
+                .filter_map(|tok| tok.split_once('='))
+                .collect();
+            let get = |key: &str| -> anyhow::Result<&str> {
+                kv.get(key)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("manifest line {}: missing {key}", lineno + 1))
+            };
+            let kind = match get("kind")? {
+                "gemm" => ArtifactKind::Gemm,
+                "step" => ArtifactKind::Step,
+                other => anyhow::bail!("manifest line {}: unknown kind {other}", lineno + 1),
+            };
+            let width = match get("w")? {
+                "8" => Width::W8,
+                "16" => Width::W16,
+                other => anyhow::bail!("manifest line {}: unknown width {other}", lineno + 1),
+            };
+            entries.push(ArtifactMeta {
+                name: get("name")?.to_string(),
+                kind,
+                width,
+                m: get("m")?.parse()?,
+                k: get("k")?.parse()?,
+                r: get("r")?.parse()?,
+                b: get("b")?.parse()?,
+                path: dir.join(get("file")?),
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest is empty");
+        Ok(Self { entries })
+    }
+
+    /// All artifacts.
+    pub fn entries(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    /// Smallest gemm artifact fitting an (m, k) request at `width`
+    /// (rows/cols are zero-padded by the executor when strictly larger).
+    pub fn find_gemm(&self, width: Width, m: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Gemm && a.width == width && a.m >= m && a.k >= k)
+            .min_by_key(|a| (a.m, a.k))
+    }
+
+    /// Step artifact with exactly arity `r` at `width`.
+    pub fn find_step(&self, width: Width, r: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Step && a.width == width && a.r == r)
+    }
+}
+
+/// Default artifacts directory: `$RAPIDRAID_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("RAPIDRAID_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+name=gf8_gemm_m5_k11 kind=gemm w=8 m=5 k=11 r=0 b=65536 file=a.hlo.txt
+name=gf16_gemm_m5_k11 kind=gemm w=16 m=5 k=11 r=0 b=32768 file=b.hlo.txt
+name=gf8_gemm_m11_k11 kind=gemm w=8 m=11 k=11 r=0 b=65536 file=c.hlo.txt
+name=gf8_step_r1 kind=step w=8 m=0 k=0 r=1 b=65536 file=d.hlo.txt
+
+# comment line
+name=gf8_step_r2 kind=step w=8 m=0 k=0 r=2 b=65536 file=e.hlo.txt
+";
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.entries().len(), 5);
+        let g = m.find_gemm(Width::W8, 5, 11).unwrap();
+        assert_eq!(g.name, "gf8_gemm_m5_k11");
+        assert_eq!(g.path, Path::new("/x/a.hlo.txt"));
+        assert_eq!(g.buf_bytes(), 65536);
+        // (4,4) request fits the 5x11 artifact (smaller than 11x11)
+        let g2 = m.find_gemm(Width::W8, 4, 4).unwrap();
+        assert_eq!(g2.name, "gf8_gemm_m5_k11");
+        // 11 rows needs the big one
+        let g3 = m.find_gemm(Width::W8, 11, 11).unwrap();
+        assert_eq!(g3.name, "gf8_gemm_m11_k11");
+        // no w16 step in this manifest
+        assert!(m.find_step(Width::W16, 1).is_none());
+        assert_eq!(m.find_step(Width::W8, 2).unwrap().name, "gf8_step_r2");
+        // w16 buf bytes: 32768 symbols * 2
+        assert_eq!(m.find_gemm(Width::W16, 1, 1).unwrap().buf_bytes(), 65536);
+    }
+
+    #[test]
+    fn oversize_request_unmatched() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert!(m.find_gemm(Width::W8, 12, 11).is_none());
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Manifest::parse("name=x kind=nope w=8 m=0 k=0 r=0 b=1 file=f", Path::new("/")).is_err());
+        assert!(Manifest::parse("", Path::new("/")).is_err());
+        assert!(Manifest::parse("kind=gemm w=8 m=0 k=0 r=0 b=1 file=f", Path::new("/")).is_err());
+    }
+}

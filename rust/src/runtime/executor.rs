@@ -1,0 +1,288 @@
+//! PJRT executor: compile-once / execute-many wrappers over the `xla`
+//! crate, typed for the two artifact kinds.
+//!
+//! All GF payloads travel as raw bytes; shapes are zero-padded up to the
+//! artifact's fixed AOT shape (GF-linear maps send zero to zero, so
+//! padding never changes the meaningful prefix of the result) and the
+//! outputs are truncated back.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Context;
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use crate::backend::Width;
+
+fn prim(width: Width) -> xla::ElementType {
+    match width {
+        Width::W8 => xla::ElementType::U8,
+        Width::W16 => xla::ElementType::U16,
+    }
+}
+
+/// Extract a literal's payload as little-endian bytes, honoring its width.
+fn literal_bytes(lit: &xla::Literal, width: Width) -> anyhow::Result<Vec<u8>> {
+    match width {
+        Width::W8 => Ok(lit.to_vec::<u8>()?),
+        Width::W16 => {
+            let words = lit.to_vec::<u16>()?;
+            let mut out = Vec::with_capacity(words.len() * 2);
+            for w in words {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Compile-once, execute-many PJRT engine over an artifact directory.
+///
+/// Interior mutability (`Mutex`) because the underlying PJRT handles are
+/// not `Sync`; callers share the engine behind `Arc<PjrtEngine>`.
+pub struct PjrtEngine {
+    inner: Mutex<Inner>,
+    manifest: Manifest,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: all access to the PJRT client and executables is serialized
+// through the Mutex; the raw pointers inside are never shared unlocked.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            inner: Mutex::new(Inner {
+                client,
+                compiled: HashMap::new(),
+            }),
+            manifest,
+        })
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Names of artifacts compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.inner.lock().unwrap().compiled.len()
+    }
+
+    /// Execute a gemm artifact: `out[m][..] = Σ_j mat[m][j] ⊗ data[j]`.
+    ///
+    /// `data` blocks may be up to the artifact buffer size; shorter blocks
+    /// (and an (m, k) smaller than the artifact's) are zero-padded, outputs
+    /// truncated to the input length.
+    pub fn gemm(
+        &self,
+        width: Width,
+        mat: &[Vec<u32>],
+        data: &[&[u8]],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        let m = mat.len();
+        let k = data.len();
+        anyhow::ensure!(m > 0 && k > 0, "empty gemm");
+        anyhow::ensure!(mat.iter().all(|r| r.len() == k), "matrix/data shape mismatch");
+        let len = data[0].len();
+        anyhow::ensure!(data.iter().all(|d| d.len() == len), "ragged data blocks");
+        let meta = self
+            .manifest
+            .find_gemm(width, m, k)
+            .ok_or_else(|| anyhow::anyhow!("no gemm artifact fits ({width}, m={m}, k={k})"))?
+            .clone();
+        // Blocks larger than the artifact's fixed panel are processed in
+        // panel-sized chunks (the kernels are elementwise across the B
+        // axis, so chunking is exact).
+        if len > meta.buf_bytes() {
+            let mut out: Vec<Vec<u8>> = vec![Vec::with_capacity(len); m];
+            let mut offset = 0;
+            while offset < len {
+                let chunk = meta.buf_bytes().min(len - offset);
+                let data_chunk: Vec<&[u8]> =
+                    data.iter().map(|d| &d[offset..offset + chunk]).collect();
+                let part = self.gemm(width, mat, &data_chunk)?;
+                for (o, p) in out.iter_mut().zip(part) {
+                    o.extend_from_slice(&p);
+                }
+                offset += chunk;
+            }
+            return Ok(out);
+        }
+
+        // gmat literal: (am, ak), embedded top-left.
+        let (am, ak) = (meta.m, meta.k);
+        let sym = width.symbol_bytes();
+        let mut gmat = vec![0u8; am * ak * sym];
+        for (i, row) in mat.iter().enumerate() {
+            for (j, &c) in row.iter().enumerate() {
+                let off = (i * ak + j) * sym;
+                match width {
+                    Width::W8 => gmat[off] = c as u8,
+                    Width::W16 => gmat[off..off + 2].copy_from_slice(&(c as u16).to_le_bytes()),
+                }
+            }
+        }
+        // data literal: (ak, b) bytes, rows zero-padded.
+        let row_bytes = meta.buf_bytes();
+        let mut panel = vec![0u8; ak * row_bytes];
+        for (j, d) in data.iter().enumerate() {
+            panel[j * row_bytes..j * row_bytes + d.len()].copy_from_slice(d);
+        }
+
+        let lit_g = xla::Literal::create_from_shape_and_untyped_data(
+            prim(width),
+            &[am, ak],
+            &gmat,
+        )?;
+        let lit_d = xla::Literal::create_from_shape_and_untyped_data(
+            prim(width),
+            &[ak, meta.b],
+            &panel,
+        )?;
+        let outputs = self.execute(&meta, &[lit_g, lit_d], 1, width)?;
+        let full = &outputs[0];
+        // outputs[0] is (am, b); keep the first m rows truncated to len.
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            out.push(full[i * row_bytes..i * row_bytes + len].to_vec());
+        }
+        Ok(out)
+    }
+
+    /// Execute a step artifact: `(x_out, c)` for one pipeline stage.
+    pub fn pipeline_step(
+        &self,
+        width: Width,
+        x_in: &[u8],
+        locals: &[&[u8]],
+        psi: &[u32],
+        xi: &[u32],
+    ) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
+        let r = locals.len();
+        anyhow::ensure!(r > 0, "pipeline step with no locals");
+        anyhow::ensure!(psi.len() == r && xi.len() == r, "coefficient arity mismatch");
+        let len = x_in.len();
+        anyhow::ensure!(locals.iter().all(|l| l.len() == len), "length mismatch");
+        let meta = self
+            .manifest
+            .find_step(width, r)
+            .ok_or_else(|| anyhow::anyhow!("no step artifact for ({width}, r={r})"))?
+            .clone();
+        anyhow::ensure!(
+            len <= meta.buf_bytes(),
+            "buffer of {len} B exceeds artifact buffer {} B",
+            meta.buf_bytes()
+        );
+
+        let sym = width.symbol_bytes();
+        let row_bytes = meta.buf_bytes();
+        let mut x_pad = vec![0u8; row_bytes];
+        x_pad[..len].copy_from_slice(x_in);
+        let mut loc_panel = vec![0u8; r * row_bytes];
+        for (j, l) in locals.iter().enumerate() {
+            loc_panel[j * row_bytes..j * row_bytes + len].copy_from_slice(l);
+        }
+        let coef_bytes = |cs: &[u32]| -> Vec<u8> {
+            let mut out = vec![0u8; r * sym];
+            for (j, &c) in cs.iter().enumerate() {
+                match width {
+                    Width::W8 => out[j] = c as u8,
+                    Width::W16 => out[j * 2..j * 2 + 2].copy_from_slice(&(c as u16).to_le_bytes()),
+                }
+            }
+            out
+        };
+
+        let lit_x =
+            xla::Literal::create_from_shape_and_untyped_data(prim(width), &[meta.b], &x_pad)?;
+        let lit_l = xla::Literal::create_from_shape_and_untyped_data(
+            prim(width),
+            &[r, meta.b],
+            &loc_panel,
+        )?;
+        let lit_p =
+            xla::Literal::create_from_shape_and_untyped_data(prim(width), &[r], &coef_bytes(psi))?;
+        let lit_q =
+            xla::Literal::create_from_shape_and_untyped_data(prim(width), &[r], &coef_bytes(xi))?;
+        let outputs = self.execute(&meta, &[lit_x, lit_l, lit_p, lit_q], 2, width)?;
+        Ok((outputs[0][..len].to_vec(), outputs[1][..len].to_vec()))
+    }
+
+    /// Compile (cached) and execute one artifact; returns the raw bytes of
+    /// each tuple element.
+    fn execute(
+        &self,
+        meta: &ArtifactMeta,
+        args: &[xla::Literal],
+        expect_outputs: usize,
+        width: Width,
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.compiled.contains_key(&meta.name) {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+            )
+            .with_context(|| format!("parse HLO text {}", meta.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .with_context(|| format!("PJRT compile {}", meta.name))?;
+            inner.compiled.insert(meta.name.clone(), exe);
+        }
+        let exe = inner.compiled.get(&meta.name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {}", meta.name))?[0][0]
+            .to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == expect_outputs,
+            "{} returned {} outputs, expected {expect_outputs}",
+            meta.name,
+            parts.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(literal_bytes(&p, width)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Execution against real artifacts lives in rust/tests/pjrt_runtime.rs
+    //! (needs `make artifacts` to have run). Here: pure plumbing tests.
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_reported() {
+        let err = match PjrtEngine::load(Path::new("/nonexistent-dir")) {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing dir must fail"),
+        };
+        assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn prim_mapping() {
+        assert!(matches!(prim(Width::W8), xla::ElementType::U8));
+        assert!(matches!(prim(Width::W16), xla::ElementType::U16));
+    }
+}

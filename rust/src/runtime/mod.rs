@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`) and executes them from the Rust hot path.
+//!
+//! Interchange is HLO **text** (`artifacts/*.hlo.txt` + `manifest.txt`):
+//! the image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//! (64-bit instruction ids), while the text parser reassigns ids — see
+//! /opt/xla-example/README.md. Each artifact is compiled once on the PJRT
+//! CPU client and cached; Python never runs at request time.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, Manifest};
+pub use executor::PjrtEngine;

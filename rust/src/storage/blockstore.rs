@@ -1,0 +1,113 @@
+//! In-memory block store — each simulated storage node owns one.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::object::BlockKey;
+
+/// Thread-safe in-memory block store.
+///
+/// Blocks are stored as `Arc<Vec<u8>>` so readers (e.g. a pipeline stage
+/// streaming a local block) share the payload without copying.
+#[derive(Clone, Default)]
+pub struct BlockStore {
+    inner: Arc<Mutex<HashMap<BlockKey, Arc<Vec<u8>>>>>,
+}
+
+impl BlockStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (or replace) a block.
+    pub fn put(&self, key: BlockKey, data: Vec<u8>) {
+        self.inner.lock().unwrap().insert(key, Arc::new(data));
+    }
+
+    /// Fetch a block (shared, zero-copy).
+    pub fn get(&self, key: &BlockKey) -> Option<Arc<Vec<u8>>> {
+        self.inner.lock().unwrap().get(key).cloned()
+    }
+
+    /// Remove a block, returning whether it existed.
+    pub fn delete(&self, key: &BlockKey) -> bool {
+        self.inner.lock().unwrap().remove(key).is_some()
+    }
+
+    /// Whether the block exists.
+    pub fn contains(&self, key: &BlockKey) -> bool {
+        self.inner.lock().unwrap().contains_key(key)
+    }
+
+    /// Number of blocks held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total payload bytes held.
+    pub fn used_bytes(&self) -> usize {
+        self.inner.lock().unwrap().values().map(|v| v.len()).sum()
+    }
+
+    /// All keys currently stored (sorted for determinism).
+    pub fn keys(&self) -> Vec<BlockKey> {
+        let mut ks: Vec<BlockKey> = self.inner.lock().unwrap().keys().copied().collect();
+        ks.sort_by_key(|k| (k.object.0, k.index, matches!(k.kind, super::object::BlockKind::Coded)));
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::object::{BlockKey, ObjectId};
+
+    #[test]
+    fn put_get_delete() {
+        let s = BlockStore::new();
+        let k = BlockKey::source(ObjectId(1), 0);
+        assert!(s.get(&k).is_none());
+        s.put(k, vec![1, 2, 3]);
+        assert_eq!(*s.get(&k).unwrap(), vec![1, 2, 3]);
+        assert!(s.contains(&k));
+        assert_eq!(s.used_bytes(), 3);
+        assert!(s.delete(&k));
+        assert!(!s.delete(&k));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn replace_updates_bytes() {
+        let s = BlockStore::new();
+        let k = BlockKey::coded(ObjectId(2), 5);
+        s.put(k, vec![0; 100]);
+        s.put(k, vec![0; 10]);
+        assert_eq!(s.used_bytes(), 10);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let s = BlockStore::new();
+        let s2 = s.clone();
+        s.put(BlockKey::source(ObjectId(1), 1), vec![9]);
+        assert!(s2.contains(&BlockKey::source(ObjectId(1), 1)));
+    }
+
+    #[test]
+    fn keys_sorted() {
+        let s = BlockStore::new();
+        s.put(BlockKey::coded(ObjectId(2), 0), vec![]);
+        s.put(BlockKey::source(ObjectId(1), 1), vec![]);
+        s.put(BlockKey::source(ObjectId(1), 0), vec![]);
+        let ks = s.keys();
+        assert_eq!(ks[0], BlockKey::source(ObjectId(1), 0));
+        assert_eq!(ks[2], BlockKey::coded(ObjectId(2), 0));
+    }
+}

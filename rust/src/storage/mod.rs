@@ -1,0 +1,14 @@
+//! Object/block model and per-node block stores.
+//!
+//! Objects are split into k equally sized blocks at ingest (64 MB in
+//! GFS/HDFS and in the paper's evaluation; configurable here). Redundancy
+//! starts as replication (each block on ≥2 nodes — exactly what RapidRAID
+//! needs) and is later *migrated* to erasure coding by the coordinator.
+
+pub mod blockstore;
+pub mod object;
+pub mod placement;
+
+pub use blockstore::BlockStore;
+pub use object::{BlockKey, BlockKind, ObjectId, ObjectSpec};
+pub use placement::ReplicaPlacement;

@@ -1,0 +1,101 @@
+//! Replica placement maps: which node holds which source block, and where
+//! the coded blocks will live after archival.
+//!
+//! RapidRAID's precondition (paper Section V) is that the two replicas are
+//! laid out so node i of the encoding chain already stores the block(s) it
+//! must fold — `crate::codes::rapidraid::placement` gives the block→node
+//! map; this module binds it to concrete cluster node ids.
+
+use crate::codes::rapidraid;
+use crate::storage::object::ObjectId;
+
+/// Node identifier within a cluster.
+pub type NodeId = usize;
+
+/// Placement of one object's replicas over concrete nodes, pre-archival.
+#[derive(Clone, Debug)]
+pub struct ReplicaPlacement {
+    /// Object this placement belongs to.
+    pub object: ObjectId,
+    /// Code parameters the archival will use.
+    pub n: usize,
+    /// Message length.
+    pub k: usize,
+    /// `chain[i]` = cluster node acting as pipeline position i; that node
+    /// stores the source blocks `rapidraid::placement(n, k)[i]` and will
+    /// store coded block `c_i` after archival.
+    pub chain: Vec<NodeId>,
+}
+
+impl ReplicaPlacement {
+    /// Bind the canonical RapidRAID placement to a chain of cluster nodes
+    /// (chain.len() == n, all distinct).
+    pub fn new(object: ObjectId, k: usize, chain: Vec<NodeId>) -> anyhow::Result<Self> {
+        let n = chain.len();
+        rapidraid::placement(n, k)?; // validates k < n <= 2k
+        let mut sorted = chain.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        anyhow::ensure!(sorted.len() == n, "chain nodes must be distinct");
+        Ok(Self {
+            object,
+            n,
+            k,
+            chain,
+        })
+    }
+
+    /// Source-block indices node at chain position i must hold.
+    pub fn locals(&self, position: usize) -> Vec<usize> {
+        rapidraid::placement(self.n, self.k).expect("validated at construction")[position].clone()
+    }
+
+    /// All (node, source-block) pairs of the replicated layout.
+    pub fn replica_map(&self) -> Vec<(NodeId, usize)> {
+        let place = rapidraid::placement(self.n, self.k).expect("validated");
+        let mut out = Vec::new();
+        for (pos, blocks) in place.iter().enumerate() {
+            for &b in blocks {
+                out.push((self.chain[pos], b));
+            }
+        }
+        out
+    }
+
+    /// Nodes holding a replica of source block `b` (always exactly two).
+    pub fn holders_of(&self, b: usize) -> Vec<NodeId> {
+        self.replica_map()
+            .into_iter()
+            .filter(|&(_, blk)| blk == b)
+            .map(|(n, _)| n)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_map_covers_each_block_twice() {
+        let p = ReplicaPlacement::new(ObjectId(1), 4, (0..8).collect()).unwrap();
+        for b in 0..4 {
+            assert_eq!(p.holders_of(b).len(), 2, "block {b}");
+        }
+        assert_eq!(p.replica_map().len(), 8);
+    }
+
+    #[test]
+    fn overlapped_chain_positions() {
+        let p = ReplicaPlacement::new(ObjectId(2), 4, vec![10, 11, 12, 13, 14, 15]).unwrap();
+        assert_eq!(p.locals(2), vec![2, 0]); // the (6,4) overlapped middle
+        assert_eq!(p.holders_of(0), vec![10, 12]);
+    }
+
+    #[test]
+    fn rejects_duplicate_nodes_and_bad_params() {
+        assert!(ReplicaPlacement::new(ObjectId(1), 4, vec![0, 1, 2, 3, 4, 4, 5, 6]).is_err());
+        assert!(ReplicaPlacement::new(ObjectId(1), 4, (0..9).collect()).is_err()); // n > 2k
+        assert!(ReplicaPlacement::new(ObjectId(1), 4, (0..4).collect()).is_err()); // n == k
+    }
+}

@@ -1,0 +1,135 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated measurement with median/percentile reporting
+//! in the same "candle" form the paper's Fig. 4 uses (median, 25–75%
+//! percentiles, min–max whiskers).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over repeated runs of a benchmark body.
+#[derive(Clone, Debug)]
+pub struct Candle {
+    /// Benchmark label (appears in reports).
+    pub name: String,
+    /// All raw samples, sorted ascending.
+    pub samples: Vec<Duration>,
+}
+
+impl Candle {
+    /// Percentile by nearest-rank (q in [0,1]).
+    pub fn percentile(&self, q: f64) -> Duration {
+        assert!(!self.samples.is_empty());
+        let idx = ((self.samples.len() - 1) as f64 * q).round() as usize;
+        self.samples[idx]
+    }
+
+    /// Median sample.
+    pub fn median(&self) -> Duration {
+        self.percentile(0.5)
+    }
+
+    /// Smallest sample.
+    pub fn min(&self) -> Duration {
+        self.samples[0]
+    }
+
+    /// Largest sample.
+    pub fn max(&self) -> Duration {
+        *self.samples.last().unwrap()
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    /// Population standard deviation in seconds.
+    pub fn stddev_secs(&self) -> f64 {
+        let mean = self.mean().as_secs_f64();
+        let var = self
+            .samples
+            .iter()
+            .map(|s| (s.as_secs_f64() - mean).powi(2))
+            .sum::<f64>()
+            / self.samples.len() as f64;
+        var.sqrt()
+    }
+
+    /// One-line report: `name  median [p25 p75] (min..max) xN`.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} median={:>10.3?} p25={:>10.3?} p75={:>10.3?} min={:>10.3?} max={:>10.3?} n={}",
+            self.name,
+            self.median(),
+            self.percentile(0.25),
+            self.percentile(0.75),
+            self.min(),
+            self.max(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Run `body` `samples` times after `warmup` unmeasured runs.
+pub fn bench(name: &str, warmup: usize, samples: usize, mut body: impl FnMut()) -> Candle {
+    for _ in 0..warmup {
+        body();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        body();
+        out.push(t0.elapsed());
+    }
+    out.sort_unstable();
+    Candle {
+        name: name.to_string(),
+        samples: out,
+    }
+}
+
+/// Measure a single run (for long end-to-end scenarios).
+pub fn once(name: &str, body: impl FnOnce()) -> Candle {
+    let t0 = Instant::now();
+    body();
+    Candle {
+        name: name.to_string(),
+        samples: vec![t0.elapsed()],
+    }
+}
+
+/// Throughput helper: bytes processed per second given a duration.
+pub fn throughput_mib_s(bytes: usize, d: Duration) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0) / d.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candle_percentiles_ordered() {
+        let c = bench("t", 1, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(c.min() <= c.percentile(0.25));
+        assert!(c.percentile(0.25) <= c.median());
+        assert!(c.median() <= c.percentile(0.75));
+        assert!(c.percentile(0.75) <= c.max());
+        assert_eq!(c.samples.len(), 20);
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let t = throughput_mib_s(1024 * 1024, Duration::from_secs(1));
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn once_records_single_sample() {
+        let c = once("single", || {});
+        assert_eq!(c.samples.len(), 1);
+        assert!(!c.report().is_empty());
+    }
+}

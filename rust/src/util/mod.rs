@@ -1,0 +1,9 @@
+//! Small self-contained utilities (the offline build has no external
+//! rand/criterion/proptest, so the crate carries its own deterministic PRNG,
+//! micro property-test harness and bench timer).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+
+pub use rng::SplitMix64;

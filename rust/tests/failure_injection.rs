@@ -1,0 +1,184 @@
+//! Failure injection: the coordinator must FAIL CLEANLY (error, no hang, no
+//! partial silent state) when replicas are missing, chains break, or
+//! decode prerequisites are violated.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapidraid::backend::{BackendHandle, NativeBackend, Width};
+use rapidraid::cluster::{Cluster, ClusterSpec};
+use rapidraid::codes::rapidraid::RapidRaidCode;
+use rapidraid::codes::DecodeError;
+use rapidraid::coordinator::{
+    archive_classical, archive_pipeline, ingest_object, reconstruct, ClassicalJob, PipelineJob,
+};
+use rapidraid::gf::{Gf256, GfElem};
+use rapidraid::storage::{BlockKey, ObjectId, ReplicaPlacement};
+
+fn native() -> BackendHandle {
+    Arc::new(NativeBackend::new())
+}
+
+/// Run `f` with a watchdog: panics if it takes longer than `secs` (a hang
+/// in error paths is itself a bug we want caught).
+fn with_timeout<T: Send + 'static>(
+    secs: u64,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("operation hung (watchdog fired)")
+}
+
+#[test]
+fn pipeline_with_missing_replica_errors_cleanly() {
+    let result = with_timeout(30, || {
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        let object = ObjectId(1);
+        let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+        ingest_object(&cluster, &placement, 32 * 1024).unwrap();
+        // sabotage: node 3 loses its replica of o_3 before archival
+        cluster.node(3).delete(BlockKey::source(object, 3)).unwrap();
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let backend = native();
+        let job = PipelineJob::from_code(&code, &placement, 4096, 32 * 1024).unwrap();
+        archive_pipeline(&cluster, &backend, &job)
+    });
+    let err = result.expect_err("must fail");
+    assert!(err.to_string().contains("missing local block") || err.to_string().contains("dropped"),
+        "unexpected error: {err}");
+}
+
+#[test]
+fn classical_with_missing_source_errors_cleanly() {
+    let result = with_timeout(30, || {
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        let object = ObjectId(2);
+        let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+        ingest_object(&cluster, &placement, 16 * 1024).unwrap();
+        cluster.node(1).delete(BlockKey::source(object, 1)).unwrap();
+        let backend = native();
+        let job = ClassicalJob {
+            object,
+            width: Width::W8,
+            parity_rows: vec![vec![1, 2, 3, 4]; 4],
+            source_nodes: vec![0, 1, 2, 3],
+            coding_node: 4,
+            parity_nodes: vec![4, 5, 6, 7],
+            buf_bytes: 4096,
+            block_bytes: 16 * 1024,
+        };
+        archive_classical(&cluster, &backend, &job)
+    });
+    assert!(result.is_err());
+}
+
+#[test]
+fn archive_leaves_no_partial_codeword_on_sabotaged_chain() {
+    with_timeout(30, || {
+        let cluster = Cluster::start(ClusterSpec::test(6));
+        let object = ObjectId(3);
+        let placement = ReplicaPlacement::new(object, 4, (0..6).collect()).unwrap();
+        ingest_object(&cluster, &placement, 16 * 1024).unwrap();
+        // node 4 (a tail-side stage) loses its local replica
+        cluster.node(4).delete(BlockKey::source(object, 2)).unwrap();
+        let code = RapidRaidCode::<Gf256>::with_seed(6, 4, 3).unwrap();
+        let backend = native();
+        let job = PipelineJob::from_code(&code, &placement, 4096, 16 * 1024).unwrap();
+        assert!(archive_pipeline(&cluster, &backend, &job).is_err());
+        // node 4 and node 5 (downstream of the failure) must not claim a
+        // complete coded block
+        assert!(cluster.node(4).peek(BlockKey::coded(object, 4)).unwrap().is_none());
+        assert!(cluster.node(5).peek(BlockKey::coded(object, 5)).unwrap().is_none());
+    });
+}
+
+#[test]
+fn decode_error_taxonomy() {
+    let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+    let b = vec![Gf256::ZERO; 64];
+    // not enough blocks
+    assert!(matches!(
+        code.decode(&[(0, b.clone()), (1, b.clone())]),
+        Err(DecodeError::NotEnoughBlocks { got: 2, need: 4 })
+    ));
+    // out-of-range index
+    assert!(matches!(
+        code.decode(&[(0, b.clone()), (1, b.clone()), (2, b.clone()), (9, b.clone())]),
+        Err(DecodeError::BadIndex { index: 9, n: 8 })
+    ));
+    // duplicates are linearly dependent
+    let dup = code.decode(&[(0, b.clone()), (0, b.clone()), (1, b.clone()), (2, b.clone())]);
+    assert!(matches!(dup, Err(DecodeError::DependentSubset { .. })));
+}
+
+#[test]
+fn reconstruct_fails_then_succeeds_after_block_returns() {
+    let cluster = Cluster::start(ClusterSpec::test(8));
+    let object = ObjectId(4);
+    let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+    let blocks = ingest_object(&cluster, &placement, 8 * 1024).unwrap();
+    let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+    let backend = native();
+    let job = PipelineJob::from_code(&code, &placement, 2048, 8 * 1024).unwrap();
+    archive_pipeline(&cluster, &backend, &job).unwrap();
+
+    // keep only 3 coded blocks → unrecoverable
+    let mut saved = Vec::new();
+    for pos in 3..8 {
+        let key = BlockKey::coded(object, pos);
+        saved.push((pos, cluster.node(pos).peek(key).unwrap().unwrap()));
+        cluster.node(pos).delete(key).unwrap();
+    }
+    assert!(reconstruct(&cluster, &code, &placement.chain, object, &backend).is_err());
+
+    // one block comes back → recoverable again
+    let (pos, data) = &saved[0];
+    cluster
+        .node(*pos)
+        .put(BlockKey::coded(object, *pos), (**data).clone())
+        .unwrap();
+    let rec = reconstruct(&cluster, &code, &placement.chain, object, &backend).unwrap();
+    assert_eq!(rec, blocks);
+}
+
+#[test]
+fn congestion_toggle_is_idempotent_and_restores_rates() {
+    let cluster = Cluster::start(ClusterSpec::tpc(4));
+    let base = cluster.spec().bytes_per_sec;
+    let profile = rapidraid::cluster::CongestionSpec::paper_netem();
+    for _ in 0..3 {
+        cluster.congest(2, &profile);
+        assert!((cluster.node(2).up.rate() - profile.bytes_per_sec).abs() < 1.0);
+        cluster.uncongest(2);
+        assert!((cluster.node(2).up.rate() - base).abs() < 1.0);
+    }
+}
+
+#[test]
+fn mismatched_job_parameters_are_rejected() {
+    let cluster = Cluster::start(ClusterSpec::test(8));
+    let object = ObjectId(5);
+    let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+    ingest_object(&cluster, &placement, 8 * 1024).unwrap();
+    let backend = native();
+    // parity matrix not m x k
+    let job = ClassicalJob {
+        object,
+        width: Width::W8,
+        parity_rows: vec![vec![1, 2, 3]; 4], // k=3 but 4 sources
+        source_nodes: vec![0, 1, 2, 3],
+        coding_node: 4,
+        parity_nodes: vec![4, 5, 6, 7],
+        buf_bytes: 2048,
+        block_bytes: 8 * 1024,
+    };
+    assert!(archive_classical(&cluster, &backend, &job).is_err());
+
+    // code/placement mismatch caught at job construction
+    let code = RapidRaidCode::<Gf256>::with_seed(6, 4, 3).unwrap();
+    assert!(PipelineJob::from_code(&code, &placement, 2048, 8 * 1024).is_err());
+}

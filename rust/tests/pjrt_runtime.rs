@@ -1,0 +1,142 @@
+//! Integration: the PJRT runtime executes the real AOT artifacts and agrees
+//! bit-for-bit with the native backend (which itself is pinned to the
+//! bit-level GF oracle).  Requires `make artifacts` (skips with a clear
+//! message otherwise).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use rapidraid::backend::{conformance_entry, EncodeBackend, NativeBackend, PjrtBackend, Width};
+use rapidraid::util::SplitMix64;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.txt missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn pjrt_conformance_full_buffer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let be = PjrtBackend::load(dir).expect("load artifacts");
+    // exactly the AOT buffer size — no padding path
+    conformance_entry(&be, 65536);
+}
+
+#[test]
+fn pjrt_conformance_padded_buffer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let be = PjrtBackend::load(dir).expect("load artifacts");
+    // short buffers exercise zero-padding + truncation
+    conformance_entry(&be, 4096);
+}
+
+#[test]
+fn pjrt_matches_native_on_random_streams() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtBackend::load(dir).unwrap();
+    let native = NativeBackend::new();
+    let mut rng = SplitMix64::new(42);
+    for w in [Width::W8, Width::W16] {
+        let cmask = match w {
+            Width::W8 => 0xFF,
+            Width::W16 => 0xFFFF,
+        };
+        for len in [65536usize, 8192, 2048] {
+            let mut x = vec![0u8; len];
+            rng.fill_bytes(&mut x);
+            let mut l0 = vec![0u8; len];
+            rng.fill_bytes(&mut l0);
+            let psi = vec![(rng.next_u64() & cmask) as u32];
+            let xi = vec![(rng.next_u64() & cmask) as u32];
+            let a = pjrt.pipeline_step(w, &x, &[&l0], &psi, &xi).unwrap();
+            let b = native.pipeline_step(w, &x, &[&l0], &psi, &xi).unwrap();
+            assert_eq!(a, b, "w={w:?} len={len}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_gemm_shape_padding_16_11_and_4_4() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtBackend::load(dir).unwrap();
+    let native = NativeBackend::new();
+    let mut rng = SplitMix64::new(7);
+    // (m=5,k=11) exact artifact; (m=4,k=4) embedded artifact; (m=2,k=3) padded
+    for (m, k) in [(5usize, 11usize), (4, 4), (2, 3), (11, 11)] {
+        let mat: Vec<Vec<u32>> = (0..m)
+            .map(|_| (0..k).map(|_| (rng.next_u64() & 0xFF) as u32).collect())
+            .collect();
+        let data: Vec<Vec<u8>> = (0..k)
+            .map(|_| {
+                let mut d = vec![0u8; 16384];
+                rng.fill_bytes(&mut d);
+                d
+            })
+            .collect();
+        let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+        let a = pjrt.gemm(Width::W8, &mat, &refs).unwrap();
+        let b = native.gemm(Width::W8, &mat, &refs).unwrap();
+        assert_eq!(a, b, "(m={m},k={k})");
+    }
+}
+
+#[test]
+fn pjrt_rejects_oversize_and_unknown_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtBackend::load(dir).unwrap();
+    let big = vec![0u8; 65537]; // one byte over the artifact buffer
+    let l = vec![0u8; 65537];
+    assert!(pjrt
+        .pipeline_step(Width::W8, &big, &[&l], &[1], &[1])
+        .is_err());
+    // r=3 step has no artifact
+    let x = vec![0u8; 1024];
+    let ls = [&x[..], &x[..], &x[..]];
+    assert!(pjrt
+        .pipeline_step(Width::W8, &x, &ls, &[1, 2, 3], &[1, 2, 3])
+        .is_err());
+    // gemm wider than any artifact
+    let mat: Vec<Vec<u32>> = (0..12).map(|_| vec![1u32; 12]).collect();
+    let data: Vec<Vec<u8>> = (0..12).map(|_| vec![0u8; 64]).collect();
+    let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+    assert!(pjrt.gemm(Width::W8, &mat, &refs).is_err());
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtBackend::load(dir).unwrap();
+    let x = vec![1u8; 1024];
+    let l = vec![2u8; 1024];
+    pjrt.pipeline_step(Width::W8, &x, &[&l], &[3], &[5]).unwrap();
+    let n1 = pjrt.engine().compiled_count();
+    pjrt.pipeline_step(Width::W8, &x, &[&l], &[7], &[9]).unwrap();
+    assert_eq!(pjrt.engine().compiled_count(), n1, "recompiled unnecessarily");
+}
+
+#[test]
+fn end_to_end_pipeline_on_pjrt_backend() {
+    // Full coordinator archival with the PJRT backend: L3→L2→L1 composition.
+    let Some(dir) = artifacts_dir() else { return };
+    use rapidraid::cluster::{Cluster, ClusterSpec};
+    use rapidraid::codes::rapidraid::RapidRaidCode;
+    use rapidraid::coordinator::{archive_pipeline, ingest_object, reconstruct, PipelineJob};
+    use rapidraid::gf::Gf256;
+    use rapidraid::storage::{ObjectId, ReplicaPlacement};
+
+    let cluster = Cluster::start(ClusterSpec::test(8));
+    let object = ObjectId(4242);
+    let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+    let blocks = ingest_object(&cluster, &placement, 128 * 1024).unwrap();
+    let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+    let backend: Arc<dyn EncodeBackend> = Arc::new(PjrtBackend::load(dir).unwrap());
+    let job = PipelineJob::from_code(&code, &placement, 65536, 128 * 1024).unwrap();
+    archive_pipeline(&cluster, &backend, &job).unwrap();
+    let rec = reconstruct(&cluster, &code, &placement.chain, object, &backend).unwrap();
+    assert_eq!(rec, blocks);
+}

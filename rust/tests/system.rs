@@ -1,0 +1,238 @@
+//! System-level integration tests: both archival strategies over the
+//! simulated cluster, cross-checked against the pure library encoders, plus
+//! cross-cutting invariants (byte conservation, congestion monotonicity,
+//! batch completeness).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapidraid::backend::{BackendHandle, NativeBackend, Width};
+use rapidraid::bench_scenarios::{build_jobs, cec_parity_rows, rr8_code, Impl, K, N};
+use rapidraid::cluster::{Cluster, ClusterSpec, CongestionSpec};
+use rapidraid::codes::rapidraid::RapidRaidCode;
+use rapidraid::codes::ClassicalCode;
+use rapidraid::coordinator::batch::{rotated_chain, run_batch};
+use rapidraid::coordinator::{
+    archive_classical, archive_pipeline, ingest_object, reconstruct, ClassicalJob, PipelineJob,
+};
+use rapidraid::gf::{Gf256, GfElem};
+use rapidraid::storage::{BlockKey, ObjectId, ReplicaPlacement};
+use rapidraid::util::prop::forall;
+
+fn native() -> BackendHandle {
+    Arc::new(NativeBackend::new())
+}
+
+#[test]
+fn classical_and_pipeline_archive_the_same_object_consistently() {
+    // Same object archived with both strategies on two clusters; each coded
+    // form must decode back to the identical source bytes.
+    let block = 64 * 1024;
+    let backend = native();
+
+    // pipeline
+    let cluster = Cluster::start(ClusterSpec::test(16));
+    let object = ObjectId(1);
+    let placement = ReplicaPlacement::new(object, K, (0..N).collect()).unwrap();
+    let blocks = ingest_object(&cluster, &placement, block).unwrap();
+    let code = rr8_code();
+    let job = PipelineJob::from_code(&code, &placement, 65536, block).unwrap();
+    archive_pipeline(&cluster, &backend, &job).unwrap();
+    let via_pipeline = reconstruct(&cluster, &code, &placement.chain, object, &backend).unwrap();
+    assert_eq!(via_pipeline, blocks);
+
+    // classical on a fresh cluster
+    let cluster2 = Cluster::start(ClusterSpec::test(16));
+    let placement2 = ReplicaPlacement::new(object, K, (0..N).collect()).unwrap();
+    let blocks2 = ingest_object(&cluster2, &placement2, block).unwrap();
+    assert_eq!(blocks2, blocks, "deterministic ingest must agree");
+    let cjob = ClassicalJob {
+        object,
+        width: Width::W8,
+        parity_rows: cec_parity_rows(),
+        source_nodes: (0..K).collect(),
+        coding_node: K,
+        parity_nodes: (K..N).collect(),
+        buf_bytes: 65536,
+        block_bytes: block,
+    };
+    archive_classical(&cluster2, &backend, &cjob).unwrap();
+    // classical decode: systematic part is the source itself; check parity
+    // against the library encoder.
+    let cls = ClassicalCode::<Gf256>::new(N, K).unwrap();
+    let obj_gf: Vec<Vec<Gf256>> = blocks
+        .iter()
+        .map(|b| b.iter().map(|&x| Gf256(x)).collect())
+        .collect();
+    let parity = cls.encode_parity(&obj_gf);
+    for i in 0..(N - K) {
+        let got = cluster2
+            .node(K + i)
+            .peek(BlockKey::coded(object, K + i))
+            .unwrap()
+            .unwrap();
+        let expect: Vec<u8> = parity[i].iter().map(|g| g.0).collect();
+        assert_eq!(*got, expect, "parity {i}");
+    }
+}
+
+#[test]
+fn pipelined_beats_classical_on_idle_network() {
+    // The headline claim at (16,11) scale. 50 MB/s keeps the experiment
+    // network-bound: on this 1-CPU host all 16 "distributed" stages share
+    // one core, so at high bandwidth compute (which the paper's 16 real
+    // nodes did in parallel) would cap the speedup — a testbed artifact,
+    // not a property of the codes (see DESIGN.md §3).
+    let mut spec = ClusterSpec::test(N);
+    spec.bytes_per_sec = 50e6;
+    let block = 1 << 20;
+    let backend = native();
+
+    let cluster = Cluster::start(spec.clone());
+    let cjobs = build_jobs(&cluster, Impl::Cec, 1, block, 10).unwrap();
+    let t_cls = run_batch(&cluster, &backend, &cjobs).unwrap()[0];
+
+    let cluster = Cluster::start(spec);
+    let pjobs = build_jobs(&cluster, Impl::Rr8, 1, block, 20).unwrap();
+    let t_pipe = run_batch(&cluster, &backend, &pjobs).unwrap()[0];
+
+    // paper: ~90% reduction. Accept anything better than 60% on this host.
+    let reduction = 1.0 - t_pipe.as_secs_f64() / t_cls.as_secs_f64();
+    assert!(
+        reduction > 0.6,
+        "expected >60% reduction, got {:.1}% (cls {t_cls:?}, pipe {t_pipe:?})",
+        reduction * 100.0
+    );
+}
+
+#[test]
+fn batch_archival_completes_every_block_exactly_once() {
+    let block = 32 * 1024;
+    let backend = native();
+    let cluster = Cluster::start(ClusterSpec::test(N));
+    let jobs = build_jobs(&cluster, Impl::Rr8, 8, block, 300).unwrap();
+    let times = run_batch(&cluster, &backend, &jobs).unwrap();
+    assert_eq!(times.len(), 8);
+    // every object: n coded blocks, each exactly on its chain node
+    for i in 0..8u64 {
+        let object = ObjectId(300 + i);
+        let chain = rotated_chain(N, N, i as usize);
+        for (pos, &node) in chain.iter().enumerate() {
+            assert!(
+                cluster
+                    .node(node)
+                    .peek(BlockKey::coded(object, pos))
+                    .unwrap()
+                    .is_some(),
+                "{object} block {pos} missing on node {node}"
+            );
+        }
+        // block count conservation: coded blocks on the cluster for this
+        // object == n (no duplicates anywhere else)
+        let mut count = 0;
+        for node in cluster.nodes() {
+            for key in node.store.keys() {
+                if key.object == object
+                    && matches!(key.kind, rapidraid::storage::BlockKind::Coded)
+                {
+                    count += 1;
+                }
+            }
+        }
+        assert_eq!(count, N, "{object} coded-block count");
+    }
+}
+
+#[test]
+fn congestion_slows_archival_monotonically() {
+    // More congested nodes must never make coding meaningfully FASTER.
+    let block = 256 * 1024;
+    let backend = native();
+    let mild = CongestionSpec {
+        bytes_per_sec: 50e6,
+        extra_latency: Duration::from_millis(5),
+        jitter: Duration::ZERO,
+    };
+    let mut last = Duration::ZERO;
+    for congested in [0usize, 4, 8] {
+        let mut spec = ClusterSpec::test(N);
+        spec.bytes_per_sec = 500e6;
+        let cluster = Cluster::start(spec);
+        for node in 0..congested {
+            cluster.congest(node, &mild);
+        }
+        let jobs = build_jobs(&cluster, Impl::Rr8, 1, block, 500 + congested as u64).unwrap();
+        let t = run_batch(&cluster, &backend, &jobs).unwrap()[0];
+        assert!(
+            t + Duration::from_millis(10) >= last,
+            "congested={congested}: {t:?} faster than previous {last:?}"
+        );
+        last = t;
+    }
+}
+
+#[test]
+fn prop_pipeline_roundtrip_over_params_on_cluster() {
+    // Property: for random (n, k) and block sizes, archive+decode over the
+    // cluster is the identity.
+    let backend = native();
+    forall(6, 1234, |rng| {
+        let k = 3 + rng.below(4) as usize; // 3..=6
+        let extra = 1 + rng.below(k as u64) as usize;
+        let n = (k + extra).min(2 * k);
+        let block = 1024 * (1 + rng.below(8) as usize);
+        let cluster = Cluster::start(ClusterSpec::test(n));
+        let object = ObjectId(rng.next_u64());
+        let placement = ReplicaPlacement::new(object, k, (0..n).collect()).unwrap();
+        let blocks = ingest_object(&cluster, &placement, block).unwrap();
+        let code = RapidRaidCode::<Gf256>::with_seed(n, k, rng.next_u64()).unwrap();
+        let job = PipelineJob::from_code(&code, &placement, 2048, block).unwrap();
+        archive_pipeline(&cluster, &backend, &job).unwrap();
+        let rec = reconstruct(&cluster, &code, &placement.chain, object, &backend).unwrap();
+        assert_eq!(rec, blocks, "(n={n},k={k},block={block})");
+    });
+}
+
+#[test]
+fn classical_respects_source_locality() {
+    // If the coding node already holds a source block, that block must not
+    // be transferred: with all sources local, coding time collapses to the
+    // upload side only.
+    let block = 512 * 1024;
+    let backend = native();
+    let mut spec = ClusterSpec::test(6);
+    spec.bytes_per_sec = 50e6; // 10.5 ms per block side
+    let cluster = Cluster::start(spec);
+    let object = ObjectId(9);
+    // put ALL k=3 source blocks on the coding node 0
+    for j in 0..3 {
+        let data = rapidraid::coordinator::object_bytes(object, j, block);
+        cluster.node(0).put(BlockKey::source(object, j), data).unwrap();
+    }
+    let cls = ClassicalCode::<Gf256>::new(6, 3).unwrap();
+    let parity = cls.parity_matrix();
+    let job = ClassicalJob {
+        object,
+        width: Width::W8,
+        parity_rows: (0..parity.rows())
+            .map(|i| parity.row(i).iter().map(|c| c.to_u32()).collect())
+            .collect(),
+        source_nodes: vec![0, 0, 0],
+        coding_node: 0,
+        parity_nodes: vec![0, 1, 2],
+        buf_bytes: 65536,
+        block_bytes: block,
+    };
+    let dt = archive_classical(&cluster, &backend, &job).unwrap();
+    // 2 remote parity uploads through a 50 MB/s NIC = ~21 ms + compute;
+    // with downloads it would be ≥ 31 ms.
+    assert!(dt < Duration::from_millis(120), "locality ignored: {dt:?}");
+    for i in 0..3 {
+        let holder = [0usize, 1, 2][i];
+        assert!(cluster
+            .node(holder)
+            .peek(BlockKey::coded(object, 3 + i))
+            .unwrap()
+            .is_some());
+    }
+}
