@@ -18,7 +18,7 @@ use crate::backend::{BackendHandle, Width};
 use crate::cluster::{Cluster, ClusterSpec, CongestionSpec};
 use crate::codes::rapidraid::RapidRaidCode;
 use crate::codes::ClassicalCode;
-use crate::coordinator::batch::{rotated_chain, run_batch, BatchJob};
+use crate::coordinator::batch::{rotated_chain, run_batch_recorded, BatchJob};
 use crate::coordinator::{ingest_object, ClassicalJob, PipelineJob};
 use crate::gf::{Gf256, Gf65536, GfElem};
 use crate::metrics::{Candle, Recorder};
@@ -270,6 +270,9 @@ pub fn fig4_coding_times(
         backend.name()
     )?;
     let rec = Recorder::new();
+    // Separate recorder for the executor's per-step spans so the stage
+    // breakdown never pollutes the end-to-end candle series.
+    let stages = Recorder::new();
     let mut id_base = 1000;
     for imp in [Impl::Cec, Impl::Rr8, Impl::Rr16] {
         for _ in 0..samples {
@@ -277,7 +280,8 @@ pub fn fig4_coding_times(
             let cluster = cluster_for(preset, N)?;
             let jobs = build_jobs(&cluster, imp, objects, block_bytes, id_base)?;
             id_base += objects as u64;
-            let times = run_batch(&cluster, backend, &jobs)?;
+            let prefix = format!("{imp}/");
+            let times = run_batch_recorded(&cluster, backend, &jobs, Some((&stages, &prefix)))?;
             for t in times {
                 rec.record(&imp.to_string(), t);
             }
@@ -286,6 +290,13 @@ pub fn fig4_coding_times(
     let candles = rec.candles();
     for c in &candles {
         writeln!(out, "{}", c.report())?;
+    }
+    writeln!(
+        out,
+        "# per-stage spans (dispatch → step completion; concurrent steps overlap):"
+    )?;
+    for c in stages.candles() {
+        writeln!(out, "# {}", c.report())?;
     }
     let cec = rec.candle("CEC").unwrap();
     for name in ["RR8", "RR16"] {
@@ -324,14 +335,15 @@ pub fn fig5_congestion(
     )?;
     writeln!(
         out,
-        "{:>10} {:>6} {:>12} {:>12}",
-        "congested", "impl", "mean_s", "stddev_s"
+        "{:>10} {:>6} {:>12} {:>12} {:>11} {:>11} {:>11}",
+        "congested", "impl", "mean_s", "stddev_s", "transfer_s", "encode_s", "store_s"
     )?;
     let profile = CongestionSpec::paper_netem();
     let mut id_base = 100_000;
     for congested in 0..=max_congested {
         for imp in [Impl::Cec, Impl::Rr8] {
             let rec = Recorder::new();
+            let stages = Recorder::new();
             for _ in 0..samples {
                 let cluster = cluster_for("tpc", N)?;
                 for node in 0..congested {
@@ -339,19 +351,36 @@ pub fn fig5_congestion(
                 }
                 let jobs = build_jobs(&cluster, imp, objects, block_bytes, id_base)?;
                 id_base += objects as u64;
-                let times = run_batch(&cluster, backend, &jobs)?;
+                let prefix = format!("{imp}/");
+                let times =
+                    run_batch_recorded(&cluster, backend, &jobs, Some((&stages, &prefix)))?;
                 for t in times {
                     rec.record(&imp.to_string(), t);
                 }
             }
+            // Mean span per stage: transfers/stores exist only for the
+            // classical plan; the pipelined plan is pure folds.
+            let stage_mean = |name: &str| -> String {
+                match stages.candle(&format!("{imp}/{name}")) {
+                    Some(c) => format!("{:.3}", c.mean().as_secs_f64()),
+                    None => "-".into(),
+                }
+            };
+            let encode = match imp {
+                Impl::Cec => stage_mean("gemm"),
+                _ => stage_mean("fold"),
+            };
             let c = rec.candle(&imp.to_string()).unwrap();
             writeln!(
                 out,
-                "{:>10} {:>6} {:>12.3} {:>12.4}",
+                "{:>10} {:>6} {:>12.3} {:>12.4} {:>11} {:>11} {:>11}",
                 congested,
                 imp.to_string(),
                 c.mean().as_secs_f64(),
-                c.stddev_secs()
+                c.stddev_secs(),
+                stage_mean("transfer"),
+                encode,
+                stage_mean("store")
             )?;
         }
     }

@@ -23,7 +23,9 @@ pub use congestion::CongestionSpec;
 pub use link::{Frame, LinkSpec, Rx, Tx};
 pub use network::{Cluster, ClusterSpec};
 pub use nic::RateLimiter;
-pub use node::{Command, NodeHandle};
+pub use node::{
+    Command, NodeHandle, ParityDest, SourceStream, DEFAULT_MAX_WORKERS, QUEUE_STALL_OVERFLOW,
+};
 
 /// Node identifier within a cluster.
 pub type NodeId = usize;

@@ -6,7 +6,7 @@ use std::time::Duration;
 use super::congestion::CongestionSpec;
 use super::link::{link, LinkSpec, Rx, Tx};
 use super::nic::RateLimiter;
-use super::node::NodeHandle;
+use super::node::{NodeHandle, DEFAULT_MAX_WORKERS};
 use super::NodeId;
 
 /// Static description of a homogeneous cluster (per-node NIC + base link).
@@ -21,6 +21,10 @@ pub struct ClusterSpec {
     pub latency: Duration,
     /// Uniform latency jitter amplitude.
     pub jitter: Duration,
+    /// Per-node soft cap on concurrently executing data-plane worker
+    /// threads; commands beyond the cap queue FIFO on the node, with an
+    /// anti-deadlock stall overflow (see `cluster::node` docs).
+    pub max_workers: usize,
 }
 
 impl ClusterSpec {
@@ -32,6 +36,7 @@ impl ClusterSpec {
             bytes_per_sec: 125e6, // 1 Gbps
             latency: Duration::from_micros(200),
             jitter: Duration::from_micros(50),
+            max_workers: DEFAULT_MAX_WORKERS,
         }
     }
 
@@ -43,6 +48,7 @@ impl ClusterSpec {
             bytes_per_sec: 37.5e6, // 300 Mbps
             latency: Duration::from_millis(1),
             jitter: Duration::from_micros(300),
+            max_workers: DEFAULT_MAX_WORKERS,
         }
     }
 
@@ -53,6 +59,7 @@ impl ClusterSpec {
             bytes_per_sec: 1e9,
             latency: Duration::ZERO,
             jitter: Duration::ZERO,
+            max_workers: DEFAULT_MAX_WORKERS,
         }
     }
 }
@@ -79,6 +86,7 @@ impl Cluster {
                     id,
                     Arc::new(RateLimiter::new(spec.bytes_per_sec)),
                     Arc::new(RateLimiter::new(spec.bytes_per_sec)),
+                    spec.max_workers,
                 )
             })
             .collect();

@@ -1,21 +1,47 @@
 //! Storage node: one OS thread per node, executing coordinator commands.
 //!
 //! A node owns a block store and its two NIC limiters. Commands arrive on
-//! an mpsc queue; each command runs on its own worker thread so a node can
-//! serve several concurrent roles (e.g. upload a source block while acting
-//! as a pipeline stage for another object — exactly the contention the
-//! multi-object experiments of Fig. 4b/5b create). NIC token buckets keep
-//! the bandwidth accounting honest regardless of the thread count.
+//! an mpsc queue; data-plane commands run on worker threads drawn from a
+//! bounded per-node pool (cap set by `ClusterSpec::max_workers`) so a node
+//! can serve several concurrent roles (e.g. upload a source block while
+//! acting as a pipeline stage for another object — exactly the contention
+//! the multi-object experiments of Fig. 4b/5b create) without unbounded
+//! thread spawning. Commands beyond the cap queue FIFO and start as workers
+//! free up. NIC token buckets keep the bandwidth accounting honest
+//! regardless of the worker count.
+//!
+//! The cap is a *soft* bound: streaming commands block while waiting for
+//! peer data, so running commands can depend (transitively, across nodes)
+//! on commands still sitting in a queue — a hard cap could deadlock such a
+//! workload. Whenever a command has been queued for
+//! [`QUEUE_STALL_OVERFLOW`] without any worker finishing, the node runs
+//! one queued command beyond the cap, guaranteeing progress. Two guards
+//! keep that overflow from quietly unbounding the pool when workers are
+//! merely slow (long transfers) rather than deadlocked: consecutive stall
+//! spawns back off exponentially (doubling up to 20× the base timeout),
+//! and completions reclaim overflow slots before any queued command is
+//! refilled. In the steady state (the paper's 16-object batch puts ≤ 16
+//! commands on each node, default cap 32) the overflow never triggers.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use super::link::{Frame, Rx, Tx};
 use super::nic::RateLimiter;
 use super::NodeId;
 use crate::backend::{BackendHandle, Width};
 use crate::storage::{BlockKey, BlockStore};
+
+/// Default per-node worker-thread cap (see the module docs for sizing).
+pub const DEFAULT_MAX_WORKERS: usize = 32;
+
+/// How long a queued data-plane command may wait with no worker finishing
+/// before the cap is exceeded by one to guarantee progress (anti-deadlock
+/// overflow — see the module docs).
+pub const QUEUE_STALL_OVERFLOW: std::time::Duration = std::time::Duration::from_millis(100);
 
 /// Commands a storage node executes.
 pub enum Command {
@@ -65,7 +91,7 @@ pub enum Command {
         /// Completion signal.
         done: mpsc::Sender<anyhow::Result<()>>,
     },
-    /// Act as stage `position` of a RapidRAID encoding pipeline: for every
+    /// Act as one stage of a RapidRAID encoding pipeline: for every
     /// incoming buffer fold the local blocks with ψ/ξ, forward `x_out`
     /// downstream and append `c` locally (paper eqs. (3)/(4), streamed).
     PipelineStage {
@@ -97,23 +123,20 @@ pub enum Command {
     /// Act as the single coding node of a classical erasure encoding:
     /// stream k source blocks from `sources`, fold each buffer into m
     /// parity accumulators as it arrives (streamlined, Section III), and
-    /// stream finished parity buffers out to `dests` as soon as each row
-    /// of k source buffers has been folded.
+    /// stream finished parity buffers out (or keep them locally) as soon as
+    /// each row of k source buffers has been folded.
     ClassicalEncode {
         /// GF width.
         width: Width,
-        /// Incoming source streams, in generator-column order. A `None`
-        /// entry means that source block is already local under the
-        /// corresponding key in `local_sources` (data locality).
+        /// Incoming source streams, in generator-column order. A `Local`
+        /// entry reads the block from this node's store (data locality).
         sources: Vec<SourceStream>,
         /// Parity coefficient rows: `parity_rows[i][j]` multiplies source j
-        /// into parity i (the Cauchy G′ of the (n,k) code).
+        /// into parity i (the Cauchy G′ of the (n,k) code — or any full
+        /// generator when the plan lowers a non-systematic code atomically).
         parity_rows: Vec<Vec<u32>>,
-        /// Outgoing parity destinations: `Some(tx)` streams parity i out,
-        /// `None` stores it locally under `local_parity_key` (locality).
-        dests: Vec<Option<Tx>>,
-        /// Key for a locally kept parity block (used where dests[i]=None).
-        local_parity_key: Option<BlockKey>,
+        /// Per-parity destination: stream out, or store locally (locality).
+        dests: Vec<ParityDest>,
         /// Frame size.
         buf_bytes: usize,
         /// Block size (all sources equal).
@@ -123,7 +146,8 @@ pub enum Command {
         /// Completion signal.
         done: mpsc::Sender<anyhow::Result<()>>,
     },
-    /// Stop the node thread (workers already running keep finishing).
+    /// Stop the node thread (workers already running keep finishing; any
+    /// still-queued data-plane commands are started before the loop exits).
     Shutdown,
 }
 
@@ -135,12 +159,27 @@ pub enum SourceStream {
     Local(BlockKey),
 }
 
+/// One classical-encode output: stream it out or keep it on this node.
+pub enum ParityDest {
+    /// Stream this output over the link (remote destination).
+    Stream(Tx),
+    /// Accumulate locally and store under the key (data locality).
+    Store(BlockKey),
+}
+
+/// Internal node-thread message: an external command or a worker-slot
+/// release from a finished data-plane worker.
+enum Msg {
+    Cmd(Command),
+    WorkerDone,
+}
+
 /// Handle to a running storage node.
 pub struct NodeHandle {
     /// Node id within the cluster.
     pub id: NodeId,
     /// Command queue.
-    cmd: mpsc::Sender<Command>,
+    cmd: mpsc::Sender<Msg>,
     /// The node's block store (shared; coordinator uses it read-only in
     /// tests/verification).
     pub store: BlockStore,
@@ -153,16 +192,23 @@ pub struct NodeHandle {
 }
 
 impl NodeHandle {
-    /// Spawn a node thread with the given NIC limiters.
-    pub fn spawn(id: NodeId, up: Arc<RateLimiter>, down: Arc<RateLimiter>) -> Self {
+    /// Spawn a node thread with the given NIC limiters and worker cap
+    /// (`max_workers` is clamped to ≥ 1).
+    pub fn spawn(
+        id: NodeId,
+        up: Arc<RateLimiter>,
+        down: Arc<RateLimiter>,
+        max_workers: usize,
+    ) -> Self {
         let store = BlockStore::new();
-        let (tx, rx) = mpsc::channel::<Command>();
+        let (tx, rx) = mpsc::channel::<Msg>();
         let store2 = store.clone();
         let inflight = Arc::new(AtomicUsize::new(0));
         let inflight2 = inflight.clone();
+        let loopback = tx.clone();
         let thread = std::thread::Builder::new()
             .name(format!("node-{id}"))
-            .spawn(move || node_loop(rx, store2, inflight2))
+            .spawn(move || node_loop(rx, loopback, store2, inflight2, max_workers))
             .expect("spawn node thread");
         Self {
             id,
@@ -178,7 +224,7 @@ impl NodeHandle {
     /// Enqueue a command.
     pub fn send(&self, cmd: Command) -> anyhow::Result<()> {
         self.cmd
-            .send(cmd)
+            .send(Msg::Cmd(cmd))
             .map_err(|_| anyhow::anyhow!("node {} is down", self.id))
     }
 
@@ -203,7 +249,8 @@ impl NodeHandle {
         Ok(wait.recv()?)
     }
 
-    /// Number of currently executing data-plane commands.
+    /// Number of data-plane commands currently executing or queued —
+    /// the load signal congestion-aware chain policies rank nodes by.
     pub fn inflight(&self) -> usize {
         self.inflight.load(Ordering::Relaxed)
     }
@@ -211,38 +258,121 @@ impl NodeHandle {
 
 impl Drop for NodeHandle {
     fn drop(&mut self) {
-        let _ = self.cmd.send(Command::Shutdown);
+        let _ = self.cmd.send(Msg::Cmd(Command::Shutdown));
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
     }
 }
 
-fn node_loop(rx: mpsc::Receiver<Command>, store: BlockStore, inflight: Arc<AtomicUsize>) {
+fn node_loop(
+    rx: mpsc::Receiver<Msg>,
+    loopback: mpsc::Sender<Msg>,
+    store: BlockStore,
+    inflight: Arc<AtomicUsize>,
+    max_workers: usize,
+) {
+    let max_workers = max_workers.max(1);
     let mut workers: Vec<JoinHandle<()>> = Vec::new();
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Command::Shutdown => break,
-            Command::Put { key, data, done } => {
+    let mut pending: VecDeque<Command> = VecDeque::new();
+    let mut active = 0usize;
+    let spawn_worker = |cmd: Command, workers: &mut Vec<JoinHandle<()>>| {
+        let store = store.clone();
+        let inflight = inflight.clone();
+        let loopback = loopback.clone();
+        workers.push(std::thread::spawn(move || {
+            run_dataplane(cmd, store);
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            // Release the worker slot; the node loop may have shut down
+            // already, in which case nobody is waiting for the slot.
+            let _ = loopback.send(Msg::WorkerDone);
+        }));
+    };
+    // Stall-overflow state: the deadline is anchored to the last PROGRESS
+    // event (a worker finishing), not to message arrival — otherwise
+    // steady control-plane traffic (peeks, new commands) would push the
+    // window forever and defeat the progress guarantee. Backoff doubles on
+    // consecutive overflow spawns, resets when a worker finishes.
+    let mut stall = QUEUE_STALL_OVERFLOW;
+    let max_stall = QUEUE_STALL_OVERFLOW * 20;
+    let mut stall_deadline: Option<Instant> = None;
+    // The loop holds a loopback sender, so `recv` can only end via Shutdown.
+    loop {
+        let msg = if pending.is_empty() {
+            stall_deadline = None;
+            match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            }
+        } else {
+            // With commands queued, wait bounded: if nothing completes by
+            // the stall deadline, the running workers may be blocked on a
+            // queued command (mutual streaming dependencies can cross
+            // nodes) — run one beyond the cap to guarantee progress, then
+            // back off so slow-but-progressing workloads erode the cap at
+            // a decaying rate instead of linearly.
+            let deadline = *stall_deadline.get_or_insert_with(|| Instant::now() + stall);
+            let now = Instant::now();
+            if now >= deadline {
+                if let Some(cmd) = pending.pop_front() {
+                    active += 1;
+                    spawn_worker(cmd, &mut workers);
+                }
+                stall = (stall * 2).min(max_stall);
+                stall_deadline = Some(Instant::now() + stall);
+                continue;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(m) => m,
+                // Deadline hit with no message: loop around to fire the
+                // overflow branch above.
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        match msg {
+            Msg::WorkerDone => {
+                stall = QUEUE_STALL_OVERFLOW;
+                stall_deadline = None;
+                active -= 1;
+                // Reclaim overflow slots first: refill from the queue only
+                // while under the cap, so stall overshoot drains away.
+                if active < max_workers {
+                    if let Some(cmd) = pending.pop_front() {
+                        active += 1;
+                        spawn_worker(cmd, &mut workers);
+                    }
+                }
+            }
+            Msg::Cmd(Command::Shutdown) => {
+                // Flush the queue (briefly exceeding the cap) so every
+                // dispatched command still completes and signals `done`.
+                while let Some(cmd) = pending.pop_front() {
+                    spawn_worker(cmd, &mut workers);
+                }
+                break;
+            }
+            Msg::Cmd(Command::Put { key, data, done }) => {
                 store.put(key, data);
                 let _ = done.send(Ok(()));
             }
-            Command::Peek { key, reply } => {
+            Msg::Cmd(Command::Peek { key, reply }) => {
                 let _ = reply.send(store.get(&key));
             }
-            Command::Delete { key, done } => {
+            Msg::Cmd(Command::Delete { key, done }) => {
                 let _ = done.send(store.delete(&key));
             }
-            // Data-plane commands run on worker threads so the node can
-            // multiplex several roles; NIC limiters model the contention.
-            other => {
-                let store = store.clone();
-                let inflight = inflight.clone();
+            // Data-plane commands run on pooled worker threads so the node
+            // can multiplex several roles; NIC limiters model the
+            // bandwidth contention between them.
+            Msg::Cmd(other) => {
                 inflight.fetch_add(1, Ordering::Relaxed);
-                workers.push(std::thread::spawn(move || {
-                    run_dataplane(other, store);
-                    inflight.fetch_sub(1, Ordering::Relaxed);
-                }));
+                if active < max_workers {
+                    active += 1;
+                    spawn_worker(other, &mut workers);
+                } else {
+                    pending.push_back(other);
+                }
             }
         }
         workers.retain(|w| !w.is_finished());
@@ -287,7 +417,6 @@ fn run_dataplane(cmd: Command, store: BlockStore) {
             sources,
             parity_rows,
             dests,
-            local_parity_key,
             buf_bytes,
             block_bytes,
             backend,
@@ -299,7 +428,6 @@ fn run_dataplane(cmd: Command, store: BlockStore) {
                 sources,
                 &parity_rows,
                 dests,
-                local_parity_key,
                 buf_bytes,
                 block_bytes,
                 &backend,
@@ -408,8 +536,7 @@ fn do_classical_encode(
     width: Width,
     sources: Vec<SourceStream>,
     parity_rows: &[Vec<u32>],
-    mut dests: Vec<Option<Tx>>,
-    local_parity_key: Option<BlockKey>,
+    mut dests: Vec<ParityDest>,
     buf_bytes: usize,
     block_bytes: usize,
     backend: &BackendHandle,
@@ -431,7 +558,13 @@ fn do_classical_encode(
         })
         .collect::<anyhow::Result<_>>()?;
 
-    let mut local_parity_acc: Vec<u8> = Vec::new();
+    let mut local_acc: Vec<Vec<u8>> = dests
+        .iter()
+        .map(|d| match d {
+            ParityDest::Store(_) => Vec::with_capacity(block_bytes),
+            ParityDest::Stream(_) => Vec::new(),
+        })
+        .collect();
     let mut offset = 0usize;
     // Streamlined loop (paper Section III): gather one "row" of k source
     // buffers (the k-th network buffer of every block), apply the parity
@@ -460,9 +593,9 @@ fn do_classical_encode(
         let row_refs: Vec<&[u8]> = row.iter().map(|b| b.as_slice()).collect();
         let parity_bufs = backend.gemm(width, parity_rows, &row_refs)?;
         for (i, pb) in parity_bufs.into_iter().enumerate() {
-            match dests[i].as_mut() {
-                Some(tx) => tx.send_data(pb)?,
-                None => local_parity_acc.extend_from_slice(&pb),
+            match dests[i] {
+                ParityDest::Stream(ref mut tx) => tx.send_data(pb)?,
+                ParityDest::Store(_) => local_acc[i].extend_from_slice(&pb),
             }
         }
         offset += len;
@@ -476,11 +609,11 @@ fn do_classical_encode(
             }
         }
     }
-    for d in dests.iter_mut().flatten() {
-        d.finish()?;
-    }
-    if let Some(key) = local_parity_key {
-        store.put(key, local_parity_acc);
+    for (i, d) in dests.iter_mut().enumerate() {
+        match d {
+            ParityDest::Stream(tx) => tx.finish()?,
+            ParityDest::Store(key) => store.put(*key, std::mem::take(&mut local_acc[i])),
+        }
     }
     Ok(())
 }
@@ -497,7 +630,7 @@ mod tests {
     }
 
     fn node(id: NodeId) -> NodeHandle {
-        NodeHandle::spawn(id, nic(), nic())
+        NodeHandle::spawn(id, nic(), nic(), DEFAULT_MAX_WORKERS)
     }
 
     #[test]
@@ -532,6 +665,79 @@ mod tests {
         w1.recv().unwrap().unwrap();
         w2.recv().unwrap().unwrap();
         assert_eq!(*b.peek(key).unwrap().unwrap(), data);
+    }
+
+    #[test]
+    fn worker_cap_queues_then_completes_all() {
+        // A cap of 1 forces the second/third uploads to queue; all three
+        // must still complete and deliver correct bytes.
+        let a = NodeHandle::spawn(0, nic(), nic(), 1);
+        let sinks: Vec<NodeHandle> = (1..4).map(node).collect();
+        let data: Vec<u8> = (0..50_000u32).map(|i| (i * 3) as u8).collect();
+        for i in 0..3 {
+            a.put(BlockKey::source(ObjectId(7), i), data.clone()).unwrap();
+        }
+        let mut waits = Vec::new();
+        for (i, sink) in sinks.iter().enumerate() {
+            let key = BlockKey::source(ObjectId(7), i);
+            let (tx, rx) = link(a.up.clone(), sink.down.clone(), LinkSpec::instant(), 10 + i as u64);
+            let (dr, wr) = mpsc::channel();
+            sink.send(Command::Receive { key, rx, done: dr }).unwrap();
+            let (du, wu) = mpsc::channel();
+            a.send(Command::Upload {
+                key,
+                tx,
+                buf_bytes: 4096,
+                done: du,
+            })
+            .unwrap();
+            waits.push(wu);
+            waits.push(wr);
+        }
+        // With cap 1 at most one upload runs at a time, but every queued one
+        // eventually runs and finishes.
+        for w in waits {
+            w.recv().unwrap().unwrap();
+        }
+        for (i, sink) in sinks.iter().enumerate() {
+            assert_eq!(
+                *sink.peek(BlockKey::source(ObjectId(7), i)).unwrap().unwrap(),
+                data,
+                "sink {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn queue_stall_overflow_prevents_dependency_deadlock() {
+        use std::time::Duration;
+        // cap = 1: a running Receive waits on an Upload queued behind it on
+        // the SAME node. A hard cap would deadlock; the stall overflow must
+        // run the Upload after ~QUEUE_STALL_OVERFLOW and complete both.
+        let a = NodeHandle::spawn(0, nic(), nic(), 1);
+        let key = BlockKey::source(ObjectId(8), 0);
+        let out_key = BlockKey::source(ObjectId(8), 1);
+        let data = vec![7u8; 10_000];
+        a.put(key, data.clone()).unwrap();
+        let (tx, rx) = link(a.up.clone(), a.down.clone(), LinkSpec::instant(), 77);
+        let (dr, wr) = mpsc::channel();
+        a.send(Command::Receive {
+            key: out_key,
+            rx,
+            done: dr,
+        })
+        .unwrap();
+        let (du, wu) = mpsc::channel();
+        a.send(Command::Upload {
+            key,
+            tx,
+            buf_bytes: 1024,
+            done: du,
+        })
+        .unwrap();
+        wr.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        wu.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        assert_eq!(*a.peek(out_key).unwrap().unwrap(), data);
     }
 
     #[test]
@@ -632,8 +838,10 @@ mod tests {
                     SourceStream::Remote(s_rx),
                 ],
                 parity_rows: vec![vec![2, 3], vec![4, 5]],
-                dests: vec![None, Some(p_tx)],
-                local_parity_key: Some(BlockKey::coded(obj, 2)),
+                dests: vec![
+                    ParityDest::Store(BlockKey::coded(obj, 2)),
+                    ParityDest::Stream(p_tx),
+                ],
                 buf_bytes: 4096,
                 block_bytes: block,
                 backend,
@@ -652,6 +860,44 @@ mod tests {
             let e1 = mul_bitwise(4, b0[i] as u32, 8) ^ mul_bitwise(5, b1[i] as u32, 8);
             assert_eq!(p0[i] as u32, e0, "parity0 byte {i}");
             assert_eq!(p1[i] as u32, e1, "parity1 byte {i}");
+        }
+    }
+
+    #[test]
+    fn classical_encode_multiple_local_parities() {
+        // The generalized ParityDest allows several locally kept outputs —
+        // the atomic lowering of a full non-systematic generator needs it.
+        let coder = node(0);
+        let obj = ObjectId(6);
+        let block: usize = 8192;
+        let b0: Vec<u8> = (0..block).map(|i| (i * 7) as u8).collect();
+        coder.put(BlockKey::source(obj, 0), b0.clone()).unwrap();
+
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let (dc, wc) = mpsc::channel();
+        coder
+            .send(Command::ClassicalEncode {
+                width: Width::W8,
+                sources: vec![SourceStream::Local(BlockKey::source(obj, 0))],
+                parity_rows: vec![vec![1], vec![3]],
+                dests: vec![
+                    ParityDest::Store(BlockKey::coded(obj, 0)),
+                    ParityDest::Store(BlockKey::coded(obj, 1)),
+                ],
+                buf_bytes: 1024,
+                block_bytes: block,
+                backend,
+                done: dc,
+            })
+            .unwrap();
+        wc.recv().unwrap().unwrap();
+
+        use crate::gf::tables::mul_bitwise;
+        let c0 = coder.peek(BlockKey::coded(obj, 0)).unwrap().unwrap();
+        let c1 = coder.peek(BlockKey::coded(obj, 1)).unwrap().unwrap();
+        assert_eq!(*c0, b0);
+        for i in 0..block {
+            assert_eq!(c1[i] as u32, mul_bitwise(3, b0[i] as u32, 8), "byte {i}");
         }
     }
 

@@ -1,18 +1,23 @@
 //! Concurrent multi-object archival (the paper's Fig. 4b / Fig. 5b runs:
 //! 16 objects encoded simultaneously on 16 nodes).
 //!
-//! Each job runs on its own coordinator thread; contention happens where it
-//! should — at the simulated NICs. Roles rotate round-robin so every node
-//! carries the same mix of source/coding/parity duties, as in the paper's
-//! experiment where node i starts the encoding of object i.
+//! Jobs of either strategy lower to [`ArchivalPlan`]s and run through the
+//! one shared [`PlanExecutor`] (`run_many`); contention happens where it
+//! should — at the simulated NICs and the bounded per-node worker pools.
+//! Roles rotate round-robin so every node carries the same mix of
+//! source/coding/parity duties, as in the paper's experiment where node i
+//! starts the encoding of object i.
 
 use std::time::Duration;
 
 use crate::backend::BackendHandle;
 use crate::cluster::Cluster;
+use crate::metrics::Recorder;
 
-use super::classical::{archive_classical, ClassicalJob};
-use super::pipeline::{archive_pipeline, PipelineJob};
+use super::classical::ClassicalJob;
+use super::engine::PlanExecutor;
+use super::pipeline::PipelineJob;
+use super::plan::ArchivalPlan;
 
 /// One archival job of either strategy.
 #[derive(Clone, Debug)]
@@ -23,28 +28,40 @@ pub enum BatchJob {
     Pipeline(PipelineJob),
 }
 
+impl BatchJob {
+    /// Lower the job onto the plan IR (strategy-specific builder).
+    pub fn plan(&self) -> anyhow::Result<ArchivalPlan> {
+        match self {
+            BatchJob::Classical(j) => j.plan(),
+            BatchJob::Pipeline(j) => j.plan(),
+        }
+    }
+}
+
 /// Run all jobs concurrently; returns per-job coding times (same order).
 pub fn run_batch(
     cluster: &Cluster,
     backend: &BackendHandle,
     jobs: &[BatchJob],
 ) -> anyhow::Result<Vec<Duration>> {
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = jobs
-            .iter()
-            .map(|job| {
-                let backend = backend.clone();
-                scope.spawn(move || match job {
-                    BatchJob::Classical(j) => archive_classical(cluster, &backend, j),
-                    BatchJob::Pipeline(j) => archive_pipeline(cluster, &backend, j),
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().map_err(|_| anyhow::anyhow!("job thread panicked"))?)
-            .collect()
-    })
+    run_batch_recorded(cluster, backend, jobs, None)
+}
+
+/// [`run_batch`] with optional per-stage span recording: spans land in the
+/// recorder under `<prefix>transfer` / `<prefix>fold` / `<prefix>gemm` /
+/// `<prefix>store` series (see [`PlanExecutor::with_spans`]).
+pub fn run_batch_recorded(
+    cluster: &Cluster,
+    backend: &BackendHandle,
+    jobs: &[BatchJob],
+    spans: Option<(&Recorder, &str)>,
+) -> anyhow::Result<Vec<Duration>> {
+    let plans: Vec<ArchivalPlan> = jobs.iter().map(|j| j.plan()).collect::<anyhow::Result<_>>()?;
+    let mut exec = PlanExecutor::new(cluster, backend.clone());
+    if let Some((rec, prefix)) = spans {
+        exec = exec.with_spans(rec, prefix);
+    }
+    exec.run_many(&plans)
 }
 
 /// Rotate a chain of `n` positions over `nodes` starting at `offset`
@@ -107,5 +124,23 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn recorded_batch_collects_fold_spans() {
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let object = ObjectId(200);
+        let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+        ingest_object(&cluster, &placement, 8 * 1024).unwrap();
+        let jobs = vec![BatchJob::Pipeline(
+            PipelineJob::from_code(&code, &placement, 2048, 8 * 1024).unwrap(),
+        )];
+        let rec = Recorder::new();
+        run_batch_recorded(&cluster, &backend, &jobs, Some((&rec, "RR8/"))).unwrap();
+        // one span per chain stage
+        assert_eq!(rec.candle("RR8/fold").unwrap().samples.len(), 8);
+        assert!(rec.candle("RR8/transfer").is_none()); // pure chain: no transfers
     }
 }

@@ -2,18 +2,25 @@
 //!
 //! One coding node downloads the k source blocks in parallel streams,
 //! applies the parity sub-matrix buffer-by-buffer as data arrives
-//! (streamlined), keeps one parity block locally (data locality) and
-//! uploads the remaining m−1 — hence eq. (1):
+//! (streamlined), keeps parity blocks mapped to itself locally (data
+//! locality) and uploads the rest — hence eq. (1):
 //! `T_classical ≈ τ_block · max{k, m−1}` — the coding node's NIC serializes
 //! everything.
+//!
+//! This module is a *plan builder*: [`ClassicalJob::plan`] lowers the job
+//! onto the [`ArchivalPlan`] IR (one [`StepKind::Gemm`] on the coding node,
+//! a [`StepKind::Source`] per remote source, a [`StepKind::Store`] per
+//! remote parity) and [`archive_classical`] hands the plan to the shared
+//! [`PlanExecutor`]. No node-command plumbing lives here.
 
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::backend::{BackendHandle, Width};
-use crate::cluster::node::{Command, SourceStream};
 use crate::cluster::{Cluster, NodeId};
 use crate::storage::{BlockKey, ObjectId};
+
+use super::engine::PlanExecutor;
+use super::plan::{ArchivalPlan, GemmInput, GemmOutput, StepKind};
 
 /// One classical archival job.
 #[derive(Clone, Debug)]
@@ -29,8 +36,8 @@ pub struct ClassicalJob {
     pub source_nodes: Vec<NodeId>,
     /// The node that performs the encoding.
     pub coding_node: NodeId,
-    /// Destination node of each parity block (len m). An entry equal to
-    /// `coding_node` keeps that parity local (saves one upload).
+    /// Destination node of each parity block (len m). Entries equal to
+    /// `coding_node` keep that parity local (no upload).
     pub parity_nodes: Vec<NodeId>,
     /// Network buffer size.
     pub buf_bytes: usize,
@@ -48,84 +55,84 @@ impl ClassicalJob {
     pub fn m(&self) -> usize {
         self.parity_nodes.len()
     }
+
+    /// Lower the job onto the plan IR: one gemm step on the coding node,
+    /// plus source/store transfer steps for every remote endpoint.
+    pub fn plan(&self) -> anyhow::Result<ArchivalPlan> {
+        let k = self.k();
+        let m = self.m();
+        anyhow::ensure!(
+            self.parity_rows.len() == m && self.parity_rows.iter().all(|r| r.len() == k),
+            "parity matrix must be m x k"
+        );
+        let mut plan = ArchivalPlan::new(self.object, self.width, self.buf_bytes, self.block_bytes);
+
+        let inputs: Vec<GemmInput> = self
+            .source_nodes
+            .iter()
+            .enumerate()
+            .map(|(j, &src)| {
+                if src == self.coding_node {
+                    GemmInput::Local(BlockKey::source(self.object, j))
+                } else {
+                    GemmInput::Stream
+                }
+            })
+            .collect();
+        let outputs: Vec<GemmOutput> = self
+            .parity_nodes
+            .iter()
+            .enumerate()
+            .map(|(i, &dst)| {
+                if dst == self.coding_node {
+                    GemmOutput::Store(BlockKey::coded(self.object, k + i))
+                } else {
+                    GemmOutput::Stream
+                }
+            })
+            .collect();
+        let gemm = plan.add_step(
+            self.coding_node,
+            StepKind::Gemm {
+                rows: self.parity_rows.clone(),
+                inputs,
+                outputs,
+            },
+        );
+        for (j, &src) in self.source_nodes.iter().enumerate() {
+            if src != self.coding_node {
+                let s = plan.add_step(
+                    src,
+                    StepKind::Source {
+                        key: BlockKey::source(self.object, j),
+                    },
+                );
+                plan.connect(s, 0, gemm, j);
+            }
+        }
+        for (i, &dst) in self.parity_nodes.iter().enumerate() {
+            if dst != self.coding_node {
+                let t = plan.add_step(
+                    dst,
+                    StepKind::Store {
+                        key: BlockKey::coded(self.object, k + i),
+                    },
+                );
+                plan.connect(gemm, i, t, 0);
+            }
+        }
+        Ok(plan)
+    }
 }
 
-/// Execute one classical archival; returns the coding time (dispatch →
-/// all parity blocks durable on their destination nodes).
+/// Execute one classical archival through the shared engine; returns the
+/// coding time (dispatch → all parity blocks durable on their nodes).
 pub fn archive_classical(
     cluster: &Cluster,
     backend: &BackendHandle,
     job: &ClassicalJob,
 ) -> anyhow::Result<Duration> {
-    let k = job.k();
-    let m = job.m();
-    anyhow::ensure!(
-        job.parity_rows.len() == m && job.parity_rows.iter().all(|r| r.len() == k),
-        "parity matrix must be m x k"
-    );
-    let start = Instant::now();
-    let mut waits: Vec<mpsc::Receiver<anyhow::Result<()>>> = Vec::new();
-
-    // 1. source streams into the coding node
-    let mut sources: Vec<SourceStream> = Vec::with_capacity(k);
-    for (j, &src) in job.source_nodes.iter().enumerate() {
-        let key = BlockKey::source(job.object, j);
-        if src == job.coding_node {
-            sources.push(SourceStream::Local(key));
-        } else {
-            let (tx, rx) = cluster.connect(src, job.coding_node);
-            let (done, wait) = mpsc::channel();
-            cluster.node(src).send(Command::Upload {
-                key,
-                tx,
-                buf_bytes: job.buf_bytes,
-                done,
-            })?;
-            waits.push(wait);
-            sources.push(SourceStream::Remote(rx));
-        }
-    }
-
-    // 2. parity destinations
-    let mut dests = Vec::with_capacity(m);
-    let mut local_parity_key = None;
-    for (i, &dst) in job.parity_nodes.iter().enumerate() {
-        let key = BlockKey::coded(job.object, k + i);
-        if dst == job.coding_node {
-            anyhow::ensure!(
-                local_parity_key.is_none(),
-                "at most one parity block can stay on the coding node"
-            );
-            local_parity_key = Some(key);
-            dests.push(None);
-        } else {
-            let (tx, rx) = cluster.connect(job.coding_node, dst);
-            let (done, wait) = mpsc::channel();
-            cluster.node(dst).send(Command::Receive { key, rx, done })?;
-            waits.push(wait);
-            dests.push(Some(tx));
-        }
-    }
-
-    // 3. the encoding itself
-    let (done, wait) = mpsc::channel();
-    cluster.node(job.coding_node).send(Command::ClassicalEncode {
-        width: job.width,
-        sources,
-        parity_rows: job.parity_rows.clone(),
-        dests,
-        local_parity_key,
-        buf_bytes: job.buf_bytes,
-        block_bytes: job.block_bytes,
-        backend: backend.clone(),
-        done,
-    })?;
-    waits.push(wait);
-
-    for w in waits {
-        w.recv()??;
-    }
-    Ok(start.elapsed())
+    PlanExecutor::new(cluster, backend.clone()).run(&job.plan()?)
 }
 
 #[cfg(test)]
@@ -144,6 +151,28 @@ mod tests {
         (0..p.rows())
             .map(|i| p.row(i).iter().map(|c| c.to_u32()).collect())
             .collect()
+    }
+
+    #[test]
+    fn plan_shape_matches_job_topology() {
+        // k=4 sources (one local), m=4 parities (one local): 1 gemm +
+        // 3 sources + 3 stores, 6 edges.
+        let code = ClassicalCode::<Gf256>::new(8, 4).unwrap();
+        let job = ClassicalJob {
+            object: ObjectId(50),
+            width: Width::W8,
+            parity_rows: parity_rows_u32(&code),
+            source_nodes: vec![0, 1, 2, 4],
+            coding_node: 4,
+            parity_nodes: vec![4, 5, 6, 7],
+            buf_bytes: 4096,
+            block_bytes: 16 * 1024,
+        };
+        let plan = job.plan().unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 1 + 3 + 3);
+        assert_eq!(plan.edges.len(), 6);
+        assert!(matches!(plan.steps[0].kind, StepKind::Gemm { .. }));
     }
 
     #[test]

@@ -1,0 +1,426 @@
+//! The **PlanExecutor**: one execution engine for every archival strategy.
+//!
+//! Takes any [`ArchivalPlan`], lowers its edges onto rate-limited cluster
+//! links, its steps onto node commands (`Upload`/`Receive`/`PipelineStage`/
+//! `ClassicalEncode`), dispatches everything and collects completions.
+//! All the mpsc/command plumbing the classical, pipelined, batch and
+//! decode drivers used to hand-roll lives here exactly once.
+//!
+//! Concurrency is bounded at two levels: per node by the worker pool cap
+//! (`ClusterSpec::max_workers`), and across plans by
+//! [`PlanExecutor::run_many_bounded`], which runs at most `max_concurrent`
+//! plans at a time off a shared work queue.
+//!
+//! Every step is wrapped in a [`Span`] (dispatch → step completion) so an
+//! attached [`Recorder`] receives per-stage series — `<prefix>transfer`,
+//! `<prefix>fold`, `<prefix>gemm`, `<prefix>store` — which the Fig. 4/5
+//! harnesses turn into stage breakdowns. Spans of concurrent streaming
+//! steps overlap by design: they measure critical-path occupancy, not
+//! exclusive CPU time.
+//!
+//! Chain selection is pluggable via [`ChainPolicy`]: [`FifoPolicy`] keeps
+//! the caller's order; [`CongestionAwarePolicy`] ranks candidate nodes by
+//! current load (queued + running data-plane commands) and NIC rate, so
+//! plan builders can route new chains around congested nodes
+//! (`cluster::congestion`) before replicas are even placed.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::BackendHandle;
+use crate::cluster::node::{Command, ParityDest, SourceStream};
+use crate::cluster::{Cluster, NodeId, Rx, Tx};
+use crate::metrics::{Recorder, Span};
+
+use super::plan::{ArchivalPlan, GemmInput, GemmOutput, StepKind};
+
+/// Orders candidate nodes for chain construction, most preferred first.
+pub trait ChainPolicy: Send + Sync {
+    /// Rank `candidates` (a permutation of the input), best first.
+    fn rank(&self, cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId>;
+}
+
+/// Keep the caller's order (the paper's fixed rotated chains).
+pub struct FifoPolicy;
+
+impl ChainPolicy for FifoPolicy {
+    fn rank(&self, _cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId> {
+        candidates.to_vec()
+    }
+}
+
+/// Prefer idle, fast nodes: ascending in-flight command count, then
+/// descending effective NIC rate (min of up/down — a congested node's
+/// clamped direction is what throttles a chain hop).
+pub struct CongestionAwarePolicy;
+
+impl ChainPolicy for CongestionAwarePolicy {
+    fn rank(&self, cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId> {
+        let mut scored: Vec<(usize, f64, NodeId)> = candidates
+            .iter()
+            .map(|&id| {
+                let n = cluster.node(id);
+                (n.inflight(), n.up.rate().min(n.down.rate()), id)
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        scored.into_iter().map(|(_, _, id)| id).collect()
+    }
+}
+
+/// Pick the `n` most preferred of `candidates` under `policy`.
+pub fn select_chain(
+    cluster: &Cluster,
+    policy: &dyn ChainPolicy,
+    candidates: &[NodeId],
+    n: usize,
+) -> anyhow::Result<Vec<NodeId>> {
+    anyhow::ensure!(
+        candidates.len() >= n,
+        "need {n} chain nodes, only {} candidates",
+        candidates.len()
+    );
+    let mut ranked = policy.rank(cluster, candidates);
+    ranked.truncate(n);
+    Ok(ranked)
+}
+
+/// Executes [`ArchivalPlan`]s against a cluster with one backend.
+pub struct PlanExecutor<'a> {
+    cluster: &'a Cluster,
+    backend: BackendHandle,
+    recorder: Option<&'a Recorder>,
+    prefix: String,
+    policy: Arc<dyn ChainPolicy>,
+}
+
+impl<'a> PlanExecutor<'a> {
+    /// Executor without span recording, FIFO chain policy.
+    pub fn new(cluster: &'a Cluster, backend: BackendHandle) -> Self {
+        Self {
+            cluster,
+            backend,
+            recorder: None,
+            prefix: String::new(),
+            policy: Arc::new(FifoPolicy),
+        }
+    }
+
+    /// Record per-step spans into `rec` under `<prefix><stage>` series.
+    pub fn with_spans(mut self, rec: &'a Recorder, prefix: impl Into<String>) -> Self {
+        self.recorder = Some(rec);
+        self.prefix = prefix.into();
+        self
+    }
+
+    /// Substitute the chain-selection policy.
+    pub fn with_policy(mut self, policy: Arc<dyn ChainPolicy>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Pick `n` chain nodes from `candidates` under this executor's policy.
+    pub fn select_chain(&self, candidates: &[NodeId], n: usize) -> anyhow::Result<Vec<NodeId>> {
+        select_chain(self.cluster, self.policy.as_ref(), candidates, n)
+    }
+
+    /// Execute one plan to completion; returns the wall-clock time from
+    /// dispatch to the last step's completion.
+    pub fn run(&self, plan: &ArchivalPlan) -> anyhow::Result<Duration> {
+        plan.validate()?;
+        // The cluster-dependent half of validation: node ids must exist
+        // (validate() alone can't know the cluster size).
+        for (id, step) in plan.steps.iter().enumerate() {
+            anyhow::ensure!(
+                step.node < self.cluster.len(),
+                "plan step {id} targets node {} but the cluster has {} nodes",
+                step.node,
+                self.cluster.len()
+            );
+        }
+        let start = Instant::now();
+
+        // Lower every edge onto a cluster link.
+        let mut txs: HashMap<(usize, usize), Tx> = HashMap::new();
+        let mut rxs: HashMap<(usize, usize), Rx> = HashMap::new();
+        for e in &plan.edges {
+            let (tx, rx) = self
+                .cluster
+                .connect(plan.steps[e.from].node, plan.steps[e.to].node);
+            txs.insert((e.from, e.from_port), tx);
+            rxs.insert((e.to, e.to_port), rx);
+        }
+
+        // Lower every step onto one node command and dispatch it.
+        struct InFlight<'r> {
+            span: Span<'r>,
+            wait: mpsc::Receiver<anyhow::Result<()>>,
+        }
+        let mut inflight: Vec<InFlight<'_>> = Vec::with_capacity(plan.steps.len());
+        for (id, step) in plan.steps.iter().enumerate() {
+            let (done, wait) = mpsc::channel();
+            let span = Span::start(
+                self.recorder,
+                format!("{}{}", self.prefix, step.kind.stage()),
+            );
+            let cmd = match &step.kind {
+                StepKind::Source { key } => Command::Upload {
+                    key: *key,
+                    tx: txs.remove(&(id, 0)).expect("validated: source bound"),
+                    buf_bytes: plan.buf_bytes,
+                    done,
+                },
+                StepKind::Store { key } => Command::Receive {
+                    key: *key,
+                    rx: rxs.remove(&(id, 0)).expect("validated: store bound"),
+                    done,
+                },
+                StepKind::Fold {
+                    locals,
+                    psi,
+                    xi,
+                    store,
+                } => Command::PipelineStage {
+                    width: plan.width,
+                    locals: locals.clone(),
+                    psi: psi.clone(),
+                    xi: xi.clone(),
+                    prev: rxs.remove(&(id, 0)),
+                    next: txs.remove(&(id, 0)),
+                    out_key: *store,
+                    buf_bytes: plan.buf_bytes,
+                    backend: self.backend.clone(),
+                    done,
+                },
+                StepKind::Gemm {
+                    rows,
+                    inputs,
+                    outputs,
+                } => {
+                    let sources = inputs
+                        .iter()
+                        .enumerate()
+                        .map(|(j, inp)| match inp {
+                            GemmInput::Stream => SourceStream::Remote(
+                                rxs.remove(&(id, j)).expect("validated: gemm input bound"),
+                            ),
+                            GemmInput::Local(key) => SourceStream::Local(*key),
+                        })
+                        .collect();
+                    let dests = outputs
+                        .iter()
+                        .enumerate()
+                        .map(|(i, out)| match out {
+                            GemmOutput::Stream => ParityDest::Stream(
+                                txs.remove(&(id, i)).expect("validated: gemm output bound"),
+                            ),
+                            GemmOutput::Store(key) => ParityDest::Store(*key),
+                        })
+                        .collect();
+                    Command::ClassicalEncode {
+                        width: plan.width,
+                        sources,
+                        parity_rows: rows.clone(),
+                        dests,
+                        buf_bytes: plan.buf_bytes,
+                        block_bytes: plan.block_bytes,
+                        backend: self.backend.clone(),
+                        done,
+                    }
+                }
+            };
+            self.cluster.node(step.node).send(cmd)?;
+            inflight.push(InFlight { span, wait });
+        }
+
+        // Collect completions on one blocking collector thread per step
+        // (std mpsc has no select; OS threads are this simulator's
+        // currency), so each span closes at its step's true completion
+        // instant with no polling skew. Broken links propagate failure to
+        // every dependent step, so every receiver completes even on error;
+        // the first error in step order is reported after all finish.
+        let results: Vec<anyhow::Result<()>> = std::thread::scope(|scope| {
+            let collectors: Vec<_> = inflight
+                .into_iter()
+                .enumerate()
+                .map(|(i, f)| {
+                    scope.spawn(move || {
+                        let res = f.wait.recv().unwrap_or_else(|_| {
+                            Err(anyhow::anyhow!("plan step {i} worker vanished"))
+                        });
+                        f.span.finish();
+                        res
+                    })
+                })
+                .collect();
+            collectors
+                .into_iter()
+                .map(|c| match c.join() {
+                    Ok(res) => res,
+                    Err(_) => Err(anyhow::anyhow!("plan collector thread panicked")),
+                })
+                .collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(start.elapsed())
+    }
+
+    /// Execute all plans concurrently (one coordinator thread each) and
+    /// return per-plan times in input order.
+    pub fn run_many(&self, plans: &[ArchivalPlan]) -> anyhow::Result<Vec<Duration>> {
+        self.run_many_bounded(plans, plans.len().max(1))
+    }
+
+    /// Execute plans with at most `max_concurrent` running at a time
+    /// (FIFO over the input order).
+    pub fn run_many_bounded(
+        &self,
+        plans: &[ArchivalPlan],
+        max_concurrent: usize,
+    ) -> anyhow::Result<Vec<Duration>> {
+        anyhow::ensure!(max_concurrent >= 1, "need at least one plan worker");
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<anyhow::Result<Duration>>>> =
+            plans.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..max_concurrent.min(plans.len()) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= plans.len() {
+                        break;
+                    }
+                    *slots[i].lock().unwrap() = Some(self.run(&plans[i]));
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .expect("plan worker panicked")
+                    .expect("every slot filled")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{NativeBackend, Width};
+    use crate::cluster::{ClusterSpec, CongestionSpec};
+    use crate::storage::{BlockKey, ObjectId};
+
+    fn native() -> BackendHandle {
+        Arc::new(NativeBackend::new())
+    }
+
+    #[test]
+    fn transfer_plan_moves_block_and_records_spans() {
+        let cluster = Cluster::start(ClusterSpec::test(2));
+        let object = ObjectId(1);
+        let key = BlockKey::source(object, 0);
+        let data: Vec<u8> = (0..32_768u32).map(|i| (i * 11) as u8).collect();
+        cluster.node(0).put(key, data.clone()).unwrap();
+
+        let mut plan = ArchivalPlan::new(object, Width::W8, 4096, data.len());
+        let s = plan.add_step(0, StepKind::Source { key });
+        let t = plan.add_step(1, StepKind::Store { key });
+        plan.connect(s, 0, t, 0);
+
+        let rec = Recorder::new();
+        let exec = PlanExecutor::new(&cluster, native()).with_spans(&rec, "x/");
+        let dt = exec.run(&plan).unwrap();
+        assert!(dt > Duration::ZERO);
+        assert_eq!(*cluster.node(1).peek(key).unwrap().unwrap(), data);
+        assert_eq!(rec.candle("x/transfer").unwrap().samples.len(), 1);
+        assert_eq!(rec.candle("x/store").unwrap().samples.len(), 1);
+    }
+
+    #[test]
+    fn empty_plan_runs_instantly() {
+        let cluster = Cluster::start(ClusterSpec::test(1));
+        let plan = ArchivalPlan::new(ObjectId(9), Width::W8, 1024, 1024);
+        let exec = PlanExecutor::new(&cluster, native());
+        exec.run(&plan).unwrap();
+    }
+
+    #[test]
+    fn plan_targeting_missing_node_errors_cleanly() {
+        let cluster = Cluster::start(ClusterSpec::test(2));
+        let mut plan = ArchivalPlan::new(ObjectId(3), Width::W8, 1024, 2048);
+        plan.add_step(
+            5,
+            StepKind::Fold {
+                locals: vec![BlockKey::source(ObjectId(3), 0)],
+                psi: vec![1],
+                xi: vec![1],
+                store: None,
+            },
+        );
+        let exec = PlanExecutor::new(&cluster, native());
+        let err = exec.run(&plan).unwrap_err();
+        assert!(err.to_string().contains("node 5"), "{err}");
+    }
+
+    #[test]
+    fn failing_step_reports_error() {
+        // Upload of a block that was never ingested must fail the plan and
+        // fail it cleanly (the paired Store errors out too, not hangs).
+        let cluster = Cluster::start(ClusterSpec::test(2));
+        let object = ObjectId(404);
+        let key = BlockKey::source(object, 0);
+        let mut plan = ArchivalPlan::new(object, Width::W8, 1024, 4096);
+        let s = plan.add_step(0, StepKind::Source { key });
+        let t = plan.add_step(1, StepKind::Store { key });
+        plan.connect(s, 0, t, 0);
+        let exec = PlanExecutor::new(&cluster, native());
+        assert!(exec.run(&plan).is_err());
+    }
+
+    #[test]
+    fn run_many_bounded_completes_all_in_order() {
+        let cluster = Cluster::start(ClusterSpec::test(4));
+        let object = ObjectId(5);
+        let data: Vec<u8> = (0..8192u32).map(|i| i as u8).collect();
+        let mut plans = Vec::new();
+        for i in 0..3usize {
+            let key = BlockKey::source(object, i);
+            cluster.node(0).put(key, data.clone()).unwrap();
+            let mut plan = ArchivalPlan::new(object, Width::W8, 1024, data.len());
+            let s = plan.add_step(0, StepKind::Source { key });
+            let t = plan.add_step(1 + i % 3, StepKind::Store { key });
+            plan.connect(s, 0, t, 0);
+            plans.push(plan);
+        }
+        let exec = PlanExecutor::new(&cluster, native());
+        let times = exec.run_many_bounded(&plans, 2).unwrap();
+        assert_eq!(times.len(), 3);
+        for i in 0..3usize {
+            assert!(cluster
+                .node(1 + i % 3)
+                .peek(BlockKey::source(object, i))
+                .unwrap()
+                .is_some());
+        }
+    }
+
+    #[test]
+    fn congestion_aware_policy_ranks_congested_node_last() {
+        let cluster = Cluster::start(ClusterSpec::test(3));
+        cluster.congest(1, &CongestionSpec::mild());
+        let ranked = CongestionAwarePolicy.rank(&cluster, &[0, 1, 2]);
+        assert_eq!(*ranked.last().unwrap(), 1, "{ranked:?}");
+
+        let chain = select_chain(&cluster, &CongestionAwarePolicy, &[0, 1, 2], 2).unwrap();
+        assert!(!chain.contains(&1), "{chain:?}");
+        assert!(select_chain(&cluster, &FifoPolicy, &[0, 1], 3).is_err());
+    }
+}

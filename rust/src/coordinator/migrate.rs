@@ -4,6 +4,10 @@
 //! down, run the pipelined encode, prove the coded form can reproduce the
 //! object bit-exactly, then reclaim the replicated storage (2× object size
 //! replicated → n/k ≈ 1.45× coded).
+//!
+//! Like every coordinator driver, migration is a thin *plan builder*: it
+//! lowers the encode through [`PipelineJob::plan`] and executes it on the
+//! shared [`PlanExecutor`]; verification and reclaim are control-plane.
 
 use std::time::Duration;
 
@@ -53,7 +57,8 @@ pub fn migrate_object<F: GfElem + SliceOps>(
         .ok_or_else(|| anyhow::anyhow!("empty object"))?;
     let bytes_before = 2 * placement.k * block_bytes;
 
-    // 1. encode
+    // 1. encode — archive_pipeline lowers the job onto the plan IR and
+    // executes it on the shared engine (one entry point for all callers)
     let job = PipelineJob::from_code(code, placement, buf_bytes, block_bytes)?;
     let coding_time = archive_pipeline(cluster, backend, &job)?;
 

@@ -1,35 +1,50 @@
-//! The archival coordinator — the paper's system contribution.
+//! The archival coordinator — the paper's system contribution, split into
+//! a declarative **plan layer** and one **execution engine**.
 //!
-//! Orchestrates replication→erasure-code migration over the simulated
-//! cluster, with two interchangeable archival strategies:
+//! [`plan`] defines the ArchivalPlan IR: a DAG of `Source`/`Fold`/`Gemm`/
+//! `Store` steps with field-erased `u32` coefficients, connected by stream
+//! edges. [`engine`] provides the single [`PlanExecutor`] that lowers any
+//! plan onto the simulated cluster (links + node commands), collects
+//! completions, emits per-stage [`crate::metrics::Span`]s and offers
+//! pluggable chain-selection policies ([`engine::ChainPolicy`]).
+//!
+//! Every archival strategy is a thin *plan builder* over that IR:
 //!
 //! * [`classical`] — the traditional *atomic* encoding (Section III,
-//!   Fig. 1): one coding node streams the k source blocks down, applies the
-//!   parity matrix buffer-by-buffer (streamlined) and streams the parity
-//!   blocks out; `T ≈ τ_block · max{k, m−1}` (eq. 1).
-//! * [`pipeline`] — RapidRAID (Sections IV–V, Fig. 2): the n replica
-//!   holders form a chain; each folds its local block(s) into the passing
-//!   partial combination and emits its codeword block locally;
+//!   Fig. 1): one `Gemm` step on the coding node fed by `Source` streams,
+//!   draining into `Store` steps; `T ≈ τ_block · max{k, m−1}` (eq. 1).
+//! * [`pipeline`] — RapidRAID (Sections IV–V, Fig. 2): a head→tail chain
+//!   of `Fold` steps over the n replica holders;
 //!   `T ≈ τ_block + (n−1)·τ_pipe` (eq. 2).
+//! * [`batch`] — concurrent multi-object archival (Fig. 4b/5b): every job
+//!   lowers to a plan, the engine runs them with bounded concurrency.
+//! * [`pipeline_decode`] — k concurrent decode chains (`Fold` steps over
+//!   inverse coefficients), plus the classical transfer-plan twin.
 //!
-//! Plus: [`batch`] (concurrent multi-object archival — Fig. 4b/5b),
-//! [`decode`] (reconstruction from any independent k-subset),
+//! Plus: [`decode`] (reconstruction from any independent k-subset),
 //! [`ingest`] (replicated object creation), [`migrate`] (encode → verify →
 //! drop replicas), and [`model`] (the eq. 1/eq. 2 analytic estimates).
+//! `ARCHITECTURE.md` walks one lowering end-to-end.
 
 pub mod batch;
 pub mod classical;
 pub mod decode;
+pub mod engine;
 pub mod ingest;
 pub mod migrate;
 pub mod model;
 pub mod pipeline;
 pub mod pipeline_decode;
+pub mod plan;
 
-pub use batch::{run_batch, BatchJob};
+pub use batch::{run_batch, run_batch_recorded, BatchJob};
 pub use classical::{archive_classical, ClassicalJob};
 pub use decode::reconstruct;
+pub use engine::{
+    select_chain, ChainPolicy, CongestionAwarePolicy, FifoPolicy, PlanExecutor,
+};
 pub use ingest::{ingest_object, object_bytes};
 pub use migrate::{migrate_object, MigrationReport};
 pub use pipeline::{archive_pipeline, PipelineJob};
 pub use pipeline_decode::reconstruct_pipelined;
+pub use plan::{ArchivalPlan, Edge, GemmInput, GemmOutput, Step, StepId, StepKind};

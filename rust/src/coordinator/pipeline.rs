@@ -4,16 +4,22 @@
 //! network buffer flows head→tail once while each node folds its local
 //! block(s) and stores its codeword block — eq. (2):
 //! `T_pipe ≈ τ_block + (n−1)·τ_pipe`.
+//!
+//! This module is a *plan builder*: [`PipelineJob::plan`] lowers the
+//! coefficient schedule onto the [`ArchivalPlan`] IR as a linear chain of
+//! [`StepKind::Fold`] steps, and [`archive_pipeline`] hands the plan to
+//! the shared [`PlanExecutor`]. No node-command plumbing lives here.
 
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::backend::{BackendHandle, Width};
-use crate::cluster::node::Command;
 use crate::cluster::Cluster;
 use crate::codes::rapidraid::RapidRaidCode;
 use crate::gf::{GfElem, SliceOps};
 use crate::storage::{BlockKey, ObjectId, ReplicaPlacement};
+
+use super::engine::PlanExecutor;
+use super::plan::{ArchivalPlan, StepKind};
 
 /// One pipelined archival job (field-erased: coefficients as u32).
 #[derive(Clone, Debug)]
@@ -74,57 +80,44 @@ impl PipelineJob {
     pub fn n(&self) -> usize {
         self.chain.len()
     }
+
+    /// Lower the job onto the plan IR: a head→tail chain of fold steps,
+    /// each storing its codeword block c_i in place.
+    pub fn plan(&self) -> anyhow::Result<ArchivalPlan> {
+        let n = self.n();
+        anyhow::ensure!(self.schedule.len() == n, "schedule/chain length mismatch");
+        let mut plan = ArchivalPlan::new(self.object, self.width, self.buf_bytes, self.block_bytes);
+        let mut prev = None;
+        for (pos, (locals, psi, xi)) in self.schedule.iter().enumerate() {
+            let id = plan.add_step(
+                self.chain[pos],
+                StepKind::Fold {
+                    locals: locals
+                        .iter()
+                        .map(|&b| BlockKey::source(self.object, b))
+                        .collect(),
+                    psi: psi.clone(),
+                    xi: xi.clone(),
+                    store: Some(BlockKey::coded(self.object, pos)),
+                },
+            );
+            if let Some(p) = prev {
+                plan.connect(p, 0, id, 0);
+            }
+            prev = Some(id);
+        }
+        Ok(plan)
+    }
 }
 
-/// Execute one pipelined archival; returns the coding time (dispatch →
-/// every codeword block durable on its node).
+/// Execute one pipelined archival through the shared engine; returns the
+/// coding time (dispatch → every codeword block durable on its node).
 pub fn archive_pipeline(
     cluster: &Cluster,
     backend: &BackendHandle,
     job: &PipelineJob,
 ) -> anyhow::Result<Duration> {
-    let n = job.n();
-    anyhow::ensure!(job.schedule.len() == n, "schedule/chain length mismatch");
-    anyhow::ensure!(
-        job.block_bytes % job.width.symbol_bytes() == 0,
-        "block size must be a multiple of the symbol size"
-    );
-    let start = Instant::now();
-
-    // Build the chain links first (node i sends to node i+1)…
-    let mut txs = Vec::with_capacity(n);
-    let mut rxs = Vec::with_capacity(n);
-    rxs.push(None); // head has no upstream
-    for i in 0..n - 1 {
-        let (tx, rx) = cluster.connect(job.chain[i], job.chain[i + 1]);
-        txs.push(Some(tx));
-        rxs.push(Some(rx));
-    }
-    txs.push(None); // tail has no downstream
-
-    // …then dispatch every stage.
-    let mut waits = Vec::with_capacity(n);
-    for (pos, (tx, rx)) in txs.into_iter().zip(rxs).enumerate().rev() {
-        let (locals, psi, xi) = &job.schedule[pos];
-        let (done, wait) = mpsc::channel();
-        cluster.node(job.chain[pos]).send(Command::PipelineStage {
-            width: job.width,
-            locals: locals.iter().map(|&b| BlockKey::source(job.object, b)).collect(),
-            psi: psi.clone(),
-            xi: xi.clone(),
-            prev: rx,
-            next: tx,
-            out_key: Some(BlockKey::coded(job.object, pos)),
-            buf_bytes: job.buf_bytes,
-            backend: backend.clone(),
-            done,
-        })?;
-        waits.push(wait);
-    }
-    for w in waits {
-        w.recv()??;
-    }
-    Ok(start.elapsed())
+    PlanExecutor::new(cluster, backend.clone()).run(&job.plan()?)
 }
 
 #[cfg(test)]
@@ -135,6 +128,21 @@ mod tests {
     use crate::coordinator::ingest::ingest_object;
     use crate::gf::Gf256;
     use std::sync::Arc;
+
+    #[test]
+    fn plan_is_a_linear_chain_of_folds() {
+        let placement = ReplicaPlacement::new(ObjectId(6), 4, (0..8).collect()).unwrap();
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let job = PipelineJob::from_code(&code, &placement, 4096, 32 * 1024).unwrap();
+        let plan = job.plan().unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 8);
+        assert_eq!(plan.edges.len(), 7); // n-1 hops
+        assert!(plan
+            .steps
+            .iter()
+            .all(|s| matches!(s.kind, StepKind::Fold { .. })));
+    }
 
     #[test]
     fn pipeline_archival_equals_library_encode() {

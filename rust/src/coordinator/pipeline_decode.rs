@@ -11,16 +11,23 @@
 //! starting offsets so every NIC carries a balanced share — per-node
 //! traffic ≈ k−1 block transmissions spread over k parallel chains instead
 //! of k serialized arrivals at one node.
+//!
+//! Both variants are *plan builders*: the k decode chains lower onto one
+//! [`ArchivalPlan`] of fold steps (the same IR the encoders use — repair
+//! pipelining and tree chains are further builders over it), and the
+//! classical twin lowers its block gathering onto source/store transfer
+//! steps. Execution is the shared [`PlanExecutor`] in both cases.
 
-use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::backend::{BackendHandle, Width};
-use crate::cluster::node::Command;
 use crate::cluster::Cluster;
 use crate::codes::rapidraid::RapidRaidCode;
 use crate::gf::{gauss, GfElem, SliceOps};
 use crate::storage::{BlockKey, ObjectId};
+
+use super::engine::PlanExecutor;
+use super::plan::{ArchivalPlan, StepKind};
 
 /// Reconstruct all k source blocks of `object` by running k concurrent
 /// decode pipelines over the surviving coded blocks. Returns the blocks
@@ -46,20 +53,17 @@ pub fn reconstruct_pipelined<F: GfElem + SliceOps>(
     };
 
     // survivors + an independent k-subset + the inverse of its rows
-    let mut avail = Vec::new();
-    for (pos, &node) in chain.iter().enumerate() {
-        if cluster.node(node).peek(BlockKey::coded(object, pos))?.is_some() {
-            avail.push(pos);
-        }
-    }
+    let (avail, block_bytes) = survey(cluster, chain, object)?;
     let subset = code
         .find_decodable_subset(&avail)
         .ok_or_else(|| anyhow::anyhow!("object {object} unrecoverable: available {avail:?}"))?;
     let inv = gauss::invert(&code.generator().select_rows(&subset))
         .ok_or_else(|| anyhow::anyhow!("subset {subset:?} unexpectedly singular"))?;
 
-    let start = Instant::now();
-    let mut waits = Vec::new();
+    // Lower the k decode chains onto one plan: chain j recovers o_j with
+    // fold coefficients taken from row j of the inverse; only its tail
+    // stores (ξ = coefficient there, ψ unused past the last hop).
+    let mut plan = ArchivalPlan::new(object, width, buf_bytes, block_bytes);
     let mut tails = Vec::with_capacity(k);
     for j in 0..k {
         // chain for o_j: the k holders, rotated by j to balance NIC load
@@ -67,46 +71,27 @@ pub fn reconstruct_pipelined<F: GfElem + SliceOps>(
         let tail_pos = *order.last().unwrap();
         tails.push((chain[tail_pos], BlockKey::source(object, j)));
 
-        // links between consecutive holders
-        let mut txs: Vec<Option<_>> = Vec::with_capacity(k);
-        let mut rxs: Vec<Option<_>> = Vec::with_capacity(k);
-        rxs.push(None);
-        for w in order.windows(2) {
-            let (tx, rx) = cluster.connect(chain[w[0]], chain[w[1]]);
-            txs.push(Some(tx));
-            rxs.push(Some(rx));
-        }
-        txs.push(None);
-
-        for (stage, (tx, rx)) in txs.into_iter().zip(rxs).enumerate().rev() {
-            let pos = order[stage];
-            // inv column for this holder: inv[(j, index of pos in subset)]
+        let mut prev = None;
+        for (stage, &pos) in order.iter().enumerate() {
             let col = subset.iter().position(|&p| p == pos).unwrap();
             let coeff = inv[(j, col)].to_u32();
             let is_tail = stage == k - 1;
-            let (done, wait) = mpsc::channel();
-            cluster.node(chain[pos]).send(Command::PipelineStage {
-                width,
-                locals: vec![BlockKey::coded(object, pos)],
-                // forward ψ = inv coefficient; at the tail the stored c
-                // output needs ξ = inv coefficient instead (ψ unused: no
-                // downstream link).
-                psi: vec![coeff],
-                xi: vec![if is_tail { coeff } else { 0 }],
-                prev: rx,
-                next: tx,
-                out_key: is_tail.then_some(BlockKey::source(object, j)),
-                buf_bytes,
-                backend: backend.clone(),
-                done,
-            })?;
-            waits.push(wait);
+            let id = plan.add_step(
+                chain[pos],
+                StepKind::Fold {
+                    locals: vec![BlockKey::coded(object, pos)],
+                    psi: vec![coeff],
+                    xi: vec![if is_tail { coeff } else { 0 }],
+                    store: is_tail.then_some(BlockKey::source(object, j)),
+                },
+            );
+            if let Some(p) = prev {
+                plan.connect(p, 0, id, 0);
+            }
+            prev = Some(id);
         }
     }
-    for w in waits {
-        w.recv()??;
-    }
-    let elapsed = start.elapsed();
+    let elapsed = PlanExecutor::new(cluster, backend.clone()).run(&plan)?;
 
     let mut out = Vec::with_capacity(k);
     for (node, key) in tails {
@@ -120,8 +105,9 @@ pub fn reconstruct_pipelined<F: GfElem + SliceOps>(
 }
 
 /// Classical decode timing twin: one node streams the k selected coded
-/// blocks down (metered), applies the inverse locally, stores the object.
-/// Used by tests/benches to compare against [`reconstruct_pipelined`].
+/// blocks down (a transfer plan, metered), applies the inverse locally,
+/// stores the object. Used by tests/benches to compare against
+/// [`reconstruct_pipelined`].
 pub fn reconstruct_classical_timed<F: GfElem + SliceOpsBound>(
     cluster: &Cluster,
     code: &RapidRaidCode<F>,
@@ -137,12 +123,7 @@ pub fn reconstruct_classical_timed<F: GfElem + SliceOpsBound>(
         16 => Width::W16,
         other => anyhow::bail!("unsupported field width {other}"),
     };
-    let mut avail = Vec::new();
-    for (pos, &node) in chain.iter().enumerate() {
-        if cluster.node(node).peek(BlockKey::coded(object, pos))?.is_some() {
-            avail.push(pos);
-        }
-    }
+    let (avail, block_bytes) = survey(cluster, chain, object)?;
     let subset = code
         .find_decodable_subset(&avail)
         .ok_or_else(|| anyhow::anyhow!("object {object} unrecoverable"))?;
@@ -153,34 +134,20 @@ pub fn reconstruct_classical_timed<F: GfElem + SliceOpsBound>(
         .collect();
 
     let start = Instant::now();
-    // stream the k blocks to the decode node (metered), one Receive each
-    let mut waits = Vec::new();
+    // transfer plan: stream each selected block to the decode node (metered)
+    let mut plan = ArchivalPlan::new(object, width, buf_bytes, block_bytes);
     for &pos in &subset {
         let src = chain[pos];
-        let key = BlockKey::coded(object, pos);
         if src == decode_node {
             continue;
         }
-        let (tx, rx) = cluster.connect(src, decode_node);
-        let (d_up, w_up) = mpsc::channel();
-        cluster.node(src).send(Command::Upload {
-            key,
-            tx,
-            buf_bytes,
-            done: d_up,
-        })?;
-        let (d_rx, w_rx) = mpsc::channel();
-        cluster.node(decode_node).send(Command::Receive {
-            key,
-            rx,
-            done: d_rx,
-        })?;
-        waits.push(w_up);
-        waits.push(w_rx);
+        let key = BlockKey::coded(object, pos);
+        let s = plan.add_step(src, StepKind::Source { key });
+        let t = plan.add_step(decode_node, StepKind::Store { key });
+        plan.connect(s, 0, t, 0);
     }
-    for w in waits {
-        w.recv()??;
-    }
+    PlanExecutor::new(cluster, backend.clone()).run(&plan)?;
+
     // local inverse application on the decode node's store
     let blocks: Vec<std::sync::Arc<Vec<u8>>> = subset
         .iter()
@@ -196,6 +163,25 @@ pub fn reconstruct_classical_timed<F: GfElem + SliceOpsBound>(
     let refs: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
     let out = backend.gemm(width, &inv_u32, &refs)?;
     Ok((out, start.elapsed()))
+}
+
+/// Which coded blocks of `object` survive on `chain`, and how large they
+/// are (every plan needs the block size up front).
+fn survey(
+    cluster: &Cluster,
+    chain: &[usize],
+    object: ObjectId,
+) -> anyhow::Result<(Vec<usize>, usize)> {
+    let mut avail = Vec::new();
+    let mut block_bytes = 0usize;
+    for (pos, &node) in chain.iter().enumerate() {
+        if let Some(b) = cluster.node(node).peek(BlockKey::coded(object, pos))? {
+            avail.push(pos);
+            block_bytes = b.len();
+        }
+    }
+    anyhow::ensure!(!avail.is_empty(), "object {object}: no coded blocks survive");
+    Ok((avail, block_bytes))
 }
 
 /// Bound alias so the classical twin shares the generic signature.

@@ -1,0 +1,461 @@
+//! The **ArchivalPlan IR**: a declarative dataflow description of one
+//! archival (or reconstruction) operation, decoupling *what* an encoding
+//! computes from *where* and *how* it runs.
+//!
+//! A plan is a DAG of [`Step`]s — [`StepKind::Source`] (stream a stored
+//! block out), [`StepKind::Fold`] (one GF multiply-accumulate pipeline
+//! stage, paper eqs. (3)/(4)), [`StepKind::Gemm`] (an m×k GF matrix applied
+//! to k streamed/local inputs) and [`StepKind::Store`] (persist an incoming
+//! stream) — connected by [`Edge`]s that lower onto rate-limited cluster
+//! links. Coefficients travel field-erased as `u32`, so one IR covers
+//! GF(2^8) and GF(2^16) and both compute backends.
+//!
+//! The classical (atomic) encoder, the RapidRAID pipelined encoder, the
+//! batch scheduler, migration and pipelined decode are all *plan builders*
+//! over this IR; a single [`crate::coordinator::engine::PlanExecutor`] runs
+//! any plan. Lowering examples live in `ARCHITECTURE.md`.
+//!
+//! Locality is expressed in the IR, not with self-links (the simulated
+//! cluster has none): a gemm input already on the coding node is
+//! [`GemmInput::Local`], an output kept there is [`GemmOutput::Store`],
+//! and a fold's block is always local by RapidRAID's placement
+//! precondition.
+
+use crate::backend::Width;
+use crate::cluster::NodeId;
+use crate::storage::{BlockKey, ObjectId};
+
+/// Index of a step within its plan.
+pub type StepId = usize;
+
+/// One gemm input: a stream bound by an edge, or a local block.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GemmInput {
+    /// Bound to exactly one incoming edge (port = input index).
+    Stream,
+    /// Read from the executing node's store (data locality).
+    Local(BlockKey),
+}
+
+/// One gemm output: a stream bound by an edge, or a locally stored block.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GemmOutput {
+    /// Bound to exactly one outgoing edge (port = output index).
+    Stream,
+    /// Stored on the executing node under this key (data locality).
+    Store(BlockKey),
+}
+
+/// What a plan step computes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    /// Stream the stored block `key` out on port 0 (a transfer's read side).
+    Source {
+        /// Block to stream.
+        key: BlockKey,
+    },
+    /// Receive the stream on port 0 and store it under `key`.
+    Store {
+        /// Destination key.
+        key: BlockKey,
+    },
+    /// One pipeline stage: consume the upstream partial combination on
+    /// in-port 0 (or synthesize zeros when no in-edge — the chain head),
+    /// fold the local blocks, forward `x ⊕ Σψ·local` on out-port 0 (absent
+    /// for the chain tail) and optionally store `x ⊕ Σξ·local`.
+    Fold {
+        /// Local blocks folded at this stage (1 or 2).
+        locals: Vec<BlockKey>,
+        /// Forward coefficients ψ, one per local.
+        psi: Vec<u32>,
+        /// Output coefficients ξ, one per local.
+        xi: Vec<u32>,
+        /// Where to store the ξ output (`None` relays only).
+        store: Option<BlockKey>,
+    },
+    /// Streamed GF matrix application `out[i] = Σ_j rows[i][j] · in[j]`:
+    /// the classical coding node, or any atomic lowering of a generator.
+    Gemm {
+        /// Coefficient rows (m×k).
+        rows: Vec<Vec<u32>>,
+        /// k inputs; `Stream` entries bind in-edges at port = input index.
+        inputs: Vec<GemmInput>,
+        /// m outputs; `Stream` entries bind out-edges at port = output index.
+        outputs: Vec<GemmOutput>,
+    },
+}
+
+impl StepKind {
+    /// Stage label used for metrics spans (`transfer`/`store`/`fold`/`gemm`).
+    pub fn stage(&self) -> &'static str {
+        match self {
+            StepKind::Source { .. } => "transfer",
+            StepKind::Store { .. } => "store",
+            StepKind::Fold { .. } => "fold",
+            StepKind::Gemm { .. } => "gemm",
+        }
+    }
+}
+
+/// One step of a plan, bound to the cluster node that executes it.
+#[derive(Clone, Debug)]
+pub struct Step {
+    /// Executing node.
+    pub node: NodeId,
+    /// The computation.
+    pub kind: StepKind,
+}
+
+/// A stream edge between two step ports; lowers onto one cluster link.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Edge {
+    /// Producing step.
+    pub from: StepId,
+    /// Producer port (0 for Source/Fold; gemm output index otherwise).
+    pub from_port: usize,
+    /// Consuming step.
+    pub to: StepId,
+    /// Consumer port (0 for Store/Fold; gemm input index otherwise).
+    pub to_port: usize,
+}
+
+/// A declarative archival operation over one object.
+#[derive(Clone, Debug)]
+pub struct ArchivalPlan {
+    /// Object the plan operates on (reporting/debugging).
+    pub object: ObjectId,
+    /// GF width of every coefficient in the plan.
+    pub width: Width,
+    /// Network frame size every stream uses.
+    pub buf_bytes: usize,
+    /// Size of every block entering the plan.
+    pub block_bytes: usize,
+    /// The steps, indexed by [`StepId`].
+    pub steps: Vec<Step>,
+    /// Stream edges between step ports.
+    pub edges: Vec<Edge>,
+}
+
+impl ArchivalPlan {
+    /// Empty plan with the given framing parameters.
+    pub fn new(object: ObjectId, width: Width, buf_bytes: usize, block_bytes: usize) -> Self {
+        Self {
+            object,
+            width,
+            buf_bytes,
+            block_bytes,
+            steps: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    /// Append a step on `node`; returns its id for wiring.
+    pub fn add_step(&mut self, node: NodeId, kind: StepKind) -> StepId {
+        self.steps.push(Step { node, kind });
+        self.steps.len() - 1
+    }
+
+    /// Add a stream edge `from:from_port → to:to_port`.
+    pub fn connect(&mut self, from: StepId, from_port: usize, to: StepId, to_port: usize) {
+        self.edges.push(Edge {
+            from,
+            from_port,
+            to,
+            to_port,
+        });
+    }
+
+    /// Number of steps.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// True when the plan has no steps.
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Structural validation: port/arity correctness, no dangling or
+    /// duplicated stream bindings, no self-node edges. The executor calls
+    /// this before dispatching anything.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.buf_bytes > 0, "buf_bytes must be positive");
+        anyhow::ensure!(self.block_bytes > 0, "block_bytes must be positive");
+        anyhow::ensure!(
+            self.block_bytes % self.width.symbol_bytes() == 0,
+            "block size must be a multiple of the symbol size"
+        );
+
+        // Per-step arity invariants.
+        for (id, step) in self.steps.iter().enumerate() {
+            if let StepKind::Fold { locals, psi, xi, .. } = &step.kind {
+                anyhow::ensure!(!locals.is_empty(), "step {id}: fold with no locals");
+                anyhow::ensure!(
+                    psi.len() == locals.len() && xi.len() == locals.len(),
+                    "step {id}: fold coefficient arity mismatch"
+                );
+            }
+            if let StepKind::Gemm { rows, inputs, outputs } = &step.kind {
+                anyhow::ensure!(!rows.is_empty() && !inputs.is_empty(), "step {id}: empty gemm");
+                anyhow::ensure!(
+                    rows.iter().all(|r| r.len() == inputs.len()),
+                    "step {id}: gemm row arity != input count"
+                );
+                anyhow::ensure!(
+                    outputs.len() == rows.len(),
+                    "step {id}: gemm output count != row count"
+                );
+            }
+        }
+
+        // Edge endpoint validity + binding uniqueness.
+        let mut out_bound = std::collections::HashSet::new();
+        let mut in_bound = std::collections::HashSet::new();
+        for (ei, e) in self.edges.iter().enumerate() {
+            anyhow::ensure!(
+                e.from < self.steps.len() && e.to < self.steps.len(),
+                "edge {ei}: step id out of range"
+            );
+            anyhow::ensure!(
+                self.steps[e.from].node != self.steps[e.to].node,
+                "edge {ei}: self-node edge (express locality as Local/Store instead)"
+            );
+            let from_ok = match &self.steps[e.from].kind {
+                StepKind::Source { .. } | StepKind::Fold { .. } => e.from_port == 0,
+                StepKind::Gemm { outputs, .. } => {
+                    matches!(outputs.get(e.from_port), Some(GemmOutput::Stream))
+                }
+                StepKind::Store { .. } => false,
+            };
+            anyhow::ensure!(from_ok, "edge {ei}: invalid producer port");
+            let to_ok = match &self.steps[e.to].kind {
+                StepKind::Store { .. } | StepKind::Fold { .. } => e.to_port == 0,
+                StepKind::Gemm { inputs, .. } => {
+                    matches!(inputs.get(e.to_port), Some(GemmInput::Stream))
+                }
+                StepKind::Source { .. } => false,
+            };
+            anyhow::ensure!(to_ok, "edge {ei}: invalid consumer port");
+            anyhow::ensure!(
+                out_bound.insert((e.from, e.from_port)),
+                "edge {ei}: producer port bound twice"
+            );
+            anyhow::ensure!(
+                in_bound.insert((e.to, e.to_port)),
+                "edge {ei}: consumer port bound twice"
+            );
+        }
+
+        // Completeness: every mandatory stream port is bound.
+        for (id, step) in self.steps.iter().enumerate() {
+            match &step.kind {
+                StepKind::Source { .. } => anyhow::ensure!(
+                    out_bound.contains(&(id, 0)),
+                    "step {id}: source stream unbound"
+                ),
+                StepKind::Store { .. } => anyhow::ensure!(
+                    in_bound.contains(&(id, 0)),
+                    "step {id}: store stream unbound"
+                ),
+                // A fold with no in-edge is a chain head, none out a tail.
+                StepKind::Fold { .. } => {}
+                StepKind::Gemm { inputs, outputs, .. } => {
+                    for (j, inp) in inputs.iter().enumerate() {
+                        if matches!(inp, GemmInput::Stream) {
+                            anyhow::ensure!(
+                                in_bound.contains(&(id, j)),
+                                "step {id}: gemm input {j} unbound"
+                            );
+                        }
+                    }
+                    for (i, out) in outputs.iter().enumerate() {
+                        if matches!(out, GemmOutput::Stream) {
+                            anyhow::ensure!(
+                                out_bound.contains(&(id, i)),
+                                "step {id}: gemm output {i} unbound"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // Reject cyclic stream dependencies (Kahn's algorithm): every stage
+        // blocks on its upstream's first frame, so a cycle of edges would
+        // hang the executor forever instead of erroring.
+        let n = self.steps.len();
+        let mut indegree = vec![0usize; n];
+        let mut adjacent: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            adjacent[e.from].push(e.to);
+            indegree[e.to] += 1;
+        }
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut ordered = 0usize;
+        while let Some(i) = ready.pop() {
+            ordered += 1;
+            for &j in &adjacent[i] {
+                indegree[j] -= 1;
+                if indegree[j] == 0 {
+                    ready.push(j);
+                }
+            }
+        }
+        anyhow::ensure!(ordered == n, "plan has a cyclic stream dependency");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ArchivalPlan {
+        ArchivalPlan::new(ObjectId(1), Width::W8, 1024, 4096)
+    }
+
+    fn fold(store: Option<BlockKey>) -> StepKind {
+        StepKind::Fold {
+            locals: vec![BlockKey::source(ObjectId(1), 0)],
+            psi: vec![3],
+            xi: vec![7],
+            store,
+        }
+    }
+
+    #[test]
+    fn valid_two_stage_chain() {
+        let mut p = base();
+        let a = p.add_step(0, fold(Some(BlockKey::coded(ObjectId(1), 0))));
+        let b = p.add_step(1, fold(Some(BlockKey::coded(ObjectId(1), 1))));
+        p.connect(a, 0, b, 0);
+        p.validate().unwrap();
+        assert_eq!(p.len(), 2);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn rejects_self_node_edge() {
+        let mut p = base();
+        let a = p.add_step(0, fold(None));
+        let b = p.add_step(0, fold(None));
+        p.connect(a, 0, b, 0);
+        let err = p.validate().unwrap_err();
+        assert!(err.to_string().contains("self-node"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unbound_source_and_store() {
+        let mut p = base();
+        p.add_step(0, StepKind::Source {
+            key: BlockKey::source(ObjectId(1), 0),
+        });
+        assert!(p.validate().unwrap_err().to_string().contains("unbound"));
+        let mut p = base();
+        p.add_step(0, StepKind::Store {
+            key: BlockKey::coded(ObjectId(1), 0),
+        });
+        assert!(p.validate().unwrap_err().to_string().contains("unbound"));
+    }
+
+    #[test]
+    fn rejects_double_binding_and_bad_gemm_port() {
+        let mut p = base();
+        let s = p.add_step(0, StepKind::Source {
+            key: BlockKey::source(ObjectId(1), 0),
+        });
+        let g = p.add_step(1, StepKind::Gemm {
+            rows: vec![vec![2]],
+            inputs: vec![GemmInput::Stream],
+            outputs: vec![GemmOutput::Store(BlockKey::coded(ObjectId(1), 0))],
+        });
+        p.connect(s, 0, g, 0);
+        p.validate().unwrap();
+
+        // double-bind the same consumer port
+        let mut bad = p.clone();
+        let s2 = bad.add_step(2, StepKind::Source {
+            key: BlockKey::source(ObjectId(1), 0),
+        });
+        bad.connect(s2, 0, g, 0);
+        assert!(bad.validate().unwrap_err().to_string().contains("bound twice"));
+
+        // edge into a Local (non-stream) gemm port
+        let mut bad = base();
+        let s = bad.add_step(0, StepKind::Source {
+            key: BlockKey::source(ObjectId(1), 0),
+        });
+        let g = bad.add_step(1, StepKind::Gemm {
+            rows: vec![vec![2]],
+            inputs: vec![GemmInput::Local(BlockKey::source(ObjectId(1), 0))],
+            outputs: vec![GemmOutput::Store(BlockKey::coded(ObjectId(1), 0))],
+        });
+        bad.connect(s, 0, g, 0);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_arity_mismatches() {
+        let mut p = base();
+        p.add_step(0, StepKind::Fold {
+            locals: vec![BlockKey::source(ObjectId(1), 0)],
+            psi: vec![1, 2], // arity mismatch
+            xi: vec![3],
+            store: None,
+        });
+        assert!(p.validate().is_err());
+
+        let mut p = base();
+        p.add_step(0, StepKind::Gemm {
+            rows: vec![vec![1, 2]], // 2 columns
+            inputs: vec![GemmInput::Local(BlockKey::source(ObjectId(1), 0))], // 1 input
+            outputs: vec![GemmOutput::Store(BlockKey::coded(ObjectId(1), 0))],
+        });
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_cyclic_stream_dependency() {
+        // a→b and b→a between fold steps: ports and nodes are all valid,
+        // but the executor would deadlock — validate must reject it.
+        let mut p = base();
+        let a = p.add_step(0, fold(None));
+        let b = p.add_step(1, fold(None));
+        p.connect(a, 0, b, 0);
+        p.connect(b, 0, a, 0);
+        let err = p.validate().unwrap_err();
+        assert!(err.to_string().contains("cyclic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_framing() {
+        let mut p = ArchivalPlan::new(ObjectId(1), Width::W16, 1024, 4097);
+        p.add_step(0, fold(None));
+        let err = p.validate().unwrap_err();
+        assert!(err.to_string().contains("symbol"), "{err}");
+        let p = ArchivalPlan::new(ObjectId(1), Width::W8, 0, 4096);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn stage_labels() {
+        assert_eq!(
+            StepKind::Source { key: BlockKey::source(ObjectId(1), 0) }.stage(),
+            "transfer"
+        );
+        assert_eq!(
+            StepKind::Store { key: BlockKey::coded(ObjectId(1), 0) }.stage(),
+            "store"
+        );
+        assert_eq!(fold(None).stage(), "fold");
+        assert_eq!(
+            StepKind::Gemm {
+                rows: vec![vec![1]],
+                inputs: vec![GemmInput::Stream],
+                outputs: vec![GemmOutput::Stream],
+            }
+            .stage(),
+            "gemm"
+        );
+    }
+}

@@ -88,7 +88,7 @@ impl GfElem for Gf256 {
 
     #[inline]
     fn tables() -> &'static Tables {
-        &tables::TABLES8
+        tables::tables8()
     }
     #[inline]
     fn to_u32(self) -> u32 {
@@ -113,7 +113,7 @@ impl GfElem for Gf65536 {
 
     #[inline]
     fn tables() -> &'static Tables {
-        &tables::TABLES16
+        tables::tables16()
     }
     #[inline]
     fn to_u32(self) -> u32 {

@@ -1,11 +1,11 @@
 //! Log/antilog table construction for GF(2^8) and GF(2^16).
 //!
-//! Tables are built once at first use (`once_cell::sync::Lazy`) from the
+//! Tables are built once at first use (`std::sync::OnceLock`) from the
 //! bit-level carry-less multiply, exactly mirroring
 //! `python/compile/gf.py::tables` — including the *doubled* antilog table so
 //! `exp[log[a] + log[b]]` never needs a modular reduction.
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 /// Primitive polynomial for GF(2^8): x^8 + x^4 + x^3 + x^2 + 1.
 pub const POLY8: u32 = 0x11D;
@@ -63,10 +63,18 @@ fn build(w: u32) -> Tables {
     Tables { log, exp, order }
 }
 
+static TABLES8_CELL: OnceLock<Tables> = OnceLock::new();
+static TABLES16_CELL: OnceLock<Tables> = OnceLock::new();
+
 /// GF(2^8) tables (256-entry log, 512-entry exp).
-pub static TABLES8: Lazy<Tables> = Lazy::new(|| build(8));
+pub fn tables8() -> &'static Tables {
+    TABLES8_CELL.get_or_init(|| build(8))
+}
+
 /// GF(2^16) tables (65536-entry log, 131072-entry exp).
-pub static TABLES16: Lazy<Tables> = Lazy::new(|| build(16));
+pub fn tables16() -> &'static Tables {
+    TABLES16_CELL.get_or_init(|| build(16))
+}
 
 #[cfg(test)]
 mod tests {
@@ -92,16 +100,16 @@ mod tests {
 
     #[test]
     fn golden_table_rows() {
-        let t = &*TABLES8;
+        let t = tables8();
         assert_eq!(&t.exp[..10], &[1, 2, 4, 8, 16, 32, 64, 128, 29, 58]);
         assert_eq!(&t.log[1..9], &[0, 1, 25, 2, 50, 26, 198, 3]);
-        let t16 = &*TABLES16;
+        let t16 = tables16();
         assert_eq!(&t16.exp[14..18], &[16384, 32768, 4107, 8214]);
     }
 
     #[test]
     fn exp_table_is_doubled() {
-        for t in [&*TABLES8, &*TABLES16] {
+        for t in [tables8(), tables16()] {
             let o = t.order as usize;
             assert_eq!(&t.exp[o..2 * o], &t.exp[..o]);
             // worst-case index log[a]+log[b] = 2*(order-1) must be in range
@@ -111,7 +119,7 @@ mod tests {
 
     #[test]
     fn every_nonzero_element_has_a_log() {
-        let t = &*TABLES8;
+        let t = tables8();
         let mut seen = vec![false; 256];
         for i in 0..t.order as usize {
             seen[t.exp[i] as usize] = true;
@@ -122,7 +130,7 @@ mod tests {
 
     #[test]
     fn table_mul_matches_bitwise_gf256_exhaustive_diag() {
-        let t = &*TABLES8;
+        let t = tables8();
         for a in 1u32..256 {
             for b in [1u32, 2, 3, 17, 91, 128, 255] {
                 let expect = mul_bitwise(a, b, 8);
@@ -134,7 +142,7 @@ mod tests {
 
     #[test]
     fn table_mul_matches_bitwise_gf65536_sampled() {
-        let t = &*TABLES16;
+        let t = tables16();
         let mut s = 0x243F6A88u32; // deterministic LCG sample
         for _ in 0..2000 {
             s = s.wrapping_mul(1664525).wrapping_add(1013904223);

@@ -5,9 +5,11 @@
 //! 2012) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the distributed-storage coordinator: a simulated
-//!   cluster of storage nodes connected by rate-limited links, a classical
-//!   (atomic) archival encoder, the paper's pipelined RapidRAID encoder, a
-//!   batch scheduler for concurrent object archival, object reconstruction,
+//!   cluster of storage nodes connected by rate-limited links, a declarative
+//!   archival-plan IR ([`coordinator::plan`]) with one unified execution
+//!   engine ([`coordinator::engine`]) beneath the classical (atomic)
+//!   encoder, the paper's pipelined RapidRAID encoder, the batch scheduler
+//!   for concurrent object archival and pipelined reconstruction, plus
 //!   fault-tolerance analytics (dependency census, static resilience) and
 //!   the benchmark harnesses that regenerate every table and figure of the
 //!   paper's evaluation section.
@@ -24,10 +26,10 @@
 //! | [`reliability`] | static resilience (probability of data loss, "number of 9's") |
 //! | [`cluster`] | simulated storage cluster: nodes, rate-limited links, congestion |
 //! | [`storage`] | objects, blocks, replica placement, block stores |
-//! | [`coordinator`] | the archival system: classical + pipelined encoders, batch scheduler, decode, migration |
-//! | [`runtime`] | PJRT executor loading the AOT artifacts (`artifacts/*.hlo.txt`) |
+//! | [`coordinator`] | the archival system: ArchivalPlan IR + PlanExecutor engine, with classical/pipelined/batch/decode/migration as plan builders |
+//! | [`runtime`] | PJRT executor loading the AOT artifacts (`artifacts/*.hlo.txt`); stubbed without the `pjrt` feature |
 //! | [`backend`] | pluggable GF compute: native Rust vs PJRT artifacts |
-//! | [`metrics`] | timing spans, percentile candles, report emitters |
+//! | [`metrics`] | timing spans ([`metrics::Span`]), percentile candles, report emitters |
 //! | [`util`] | deterministic PRNG, mini property-test harness, bench timer |
 //!
 //! ## Quickstart

@@ -12,6 +12,10 @@
 //! rapidraid demo         [--pjrt]                             # quick e2e
 //! ```
 //!
+//! `bench-coding` / `bench-congestion` report per-stage time breakdowns
+//! (transfer vs fold/gemm vs store) alongside the end-to-end candles —
+//! the spans come from the coordinator's PlanExecutor.
+//!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
 use std::collections::HashMap;

@@ -3,11 +3,15 @@
 //! The paper reports coding times as candles (median, 25–75 percentile box,
 //! min–max whiskers — Fig. 4) or mean ± stddev (Fig. 5); [`Recorder`]
 //! gathers named samples and emits both, plus aligned markdown/CSV tables
-//! for EXPERIMENTS.md.
+//! for EXPERIMENTS.md. [`Span`] is the timing primitive the plan executor
+//! wraps around every archival-plan step, feeding per-stage series
+//! (`<label>/transfer`, `<label>/fold`, `<label>/gemm`, `<label>/store`)
+//! into a recorder so the Fig. 4/5 harnesses can break end-to-end coding
+//! times down by stage.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 pub use crate::util::bench::{bench, once, throughput_mib_s, Candle};
 
@@ -93,9 +97,66 @@ impl Recorder {
     }
 }
 
+/// An in-flight timing span, optionally attached to a [`Recorder`].
+///
+/// `start` stamps the open instant; [`Span::finish`] measures the elapsed
+/// time, records it under the span's series name (when a recorder is
+/// attached) and returns it. Detached spans (`rec = None`) still measure —
+/// the executor uses them so timing logic never branches on whether a
+/// recorder is present.
+#[must_use = "a span measures nothing until finished"]
+pub struct Span<'a> {
+    rec: Option<&'a Recorder>,
+    series: String,
+    t0: Instant,
+}
+
+impl<'a> Span<'a> {
+    /// Open a span named `series`, recording into `rec` on finish.
+    pub fn start(rec: Option<&'a Recorder>, series: impl Into<String>) -> Self {
+        Self {
+            rec,
+            series: series.into(),
+            t0: Instant::now(),
+        }
+    }
+
+    /// The series this span records under.
+    pub fn series(&self) -> &str {
+        &self.series
+    }
+
+    /// Close the span: record the elapsed time (if attached) and return it.
+    pub fn finish(self) -> Duration {
+        let dt = self.t0.elapsed();
+        if let Some(rec) = self.rec {
+            rec.record(&self.series, dt);
+        }
+        dt
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn span_records_into_recorder() {
+        let r = Recorder::new();
+        let s = Span::start(Some(&r), "stage/fold");
+        assert_eq!(s.series(), "stage/fold");
+        let dt = s.finish();
+        let c = r.candle("stage/fold").unwrap();
+        assert_eq!(c.samples.len(), 1);
+        assert_eq!(c.samples[0], dt);
+    }
+
+    #[test]
+    fn detached_span_still_measures() {
+        let s = Span::start(None, "unrecorded");
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(s.finish() >= Duration::from_millis(1));
+    }
 
     #[test]
     fn record_and_report() {

@@ -8,6 +8,17 @@
 //! CPU client and cached; Python never runs at request time.
 
 pub mod artifacts;
+
+// The real executor drives the PJRT CPU client through the `xla` bindings
+// crate; that dependency is not available in the offline build, so it sits
+// behind the `pjrt` cargo feature. The default build substitutes an
+// uninhabited stub whose `load` explains how to enable the real path —
+// every caller already handles `load` errors (artifacts may be absent), so
+// the two builds are behaviorally identical until artifacts + xla exist.
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 
 pub use artifacts::{ArtifactKind, ArtifactMeta, Manifest};
