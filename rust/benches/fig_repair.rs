@@ -1,0 +1,39 @@
+//! Bench: single-block repair time — star (classical k-transfer) vs
+//! pipelined (Li et al. 2019) — under the paper's netem congestion sweep.
+//!
+//! Run: `cargo bench --bench fig_repair`
+//! Env: BLOCK_MIB (default 16), SAMPLES (default 3), MAX_CONGESTED
+//! (default 4). CI runs this in smoke mode (BLOCK_MIB=1, SAMPLES=1,
+//! MAX_CONGESTED=1) purely to keep the repair path from bitrotting; the
+//! star-vs-pipelined comparison is only meaningful at paper-faithful block
+//! sizes where bandwidth, not the netem latency, dominates.
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::bench_scenarios::fig_repair;
+
+fn main() {
+    let block = std::env::var("BLOCK_MIB")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(16)
+        << 20;
+    let samples = std::env::var("SAMPLES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(3);
+    let max_congested = std::env::var("MAX_CONGESTED")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(4);
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    fig_repair(
+        &backend,
+        max_congested,
+        block,
+        samples,
+        &mut std::io::stdout().lock(),
+    )
+    .expect("fig_repair");
+}

@@ -37,6 +37,16 @@ impl Width {
             Width::W16 => 2,
         }
     }
+
+    /// Width for a field's bit count (`F::BITS`) — how generic coordinator
+    /// code erases its field parameter into a plan width.
+    pub fn for_bits(bits: u32) -> anyhow::Result<Self> {
+        match bits {
+            8 => Ok(Width::W8),
+            16 => Ok(Width::W16),
+            other => anyhow::bail!("unsupported field width {other}"),
+        }
+    }
 }
 
 impl std::fmt::Display for Width {

@@ -10,6 +10,8 @@
 //!   coding times on the TPC / EC2 presets.
 //! * [`fig5_congestion`] — Fig. 5: coding time vs number of congested
 //!   nodes (netem-equivalent profile).
+//! * [`fig_repair`] — beyond the paper: single-block repair time, star vs
+//!   pipelined (Li et al. 2019), under the same netem congestion sweep.
 
 use std::io::Write;
 use std::time::{Duration, Instant};
@@ -387,6 +389,101 @@ pub fn fig5_congestion(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Fig. R — single-block repair, star vs pipelined
+// ---------------------------------------------------------------------------
+
+/// Single-block repair time of the evaluation (16,11) RR8 code on the TPC
+/// preset, star vs pipelined, as 0..=`max_congested` chain nodes get the
+/// paper's netem profile. A 17th node acts as the newcomer; the crashed
+/// node (and hence the repaired block) is the last chain position so the
+/// congested prefix stays among the survivors. Reports mean ± stddev per
+/// strategy plus the pipelined speedup.
+///
+/// Same caveat as Fig. 5: at small blocks the +100 ms/hop netem latency
+/// dominates the fold chain and can flip the comparison; the paper-faithful
+/// block sizes (≥ 16 MiB) keep it bandwidth-bound.
+pub fn fig_repair(
+    backend: &BackendHandle,
+    max_congested: usize,
+    block_bytes: usize,
+    samples: usize,
+    out: &mut dyn Write,
+) -> anyhow::Result<()> {
+    use crate::coordinator::survey_coded;
+    use crate::repair::{
+        run_pipelined_repair, run_star_repair, PipelinedRepairJob, RepairJob, StarRepairJob,
+    };
+
+    let samples = samples.max(1);
+    writeln!(
+        out,
+        "# Fig. R — (16,11) RR8 single-block repair, TPC preset, netem on 0..={max_congested} nodes, block={} MiB",
+        block_bytes >> 20
+    )?;
+    writeln!(
+        out,
+        "{:>10} {:>10} {:>12} {:>12} {:>9}",
+        "congested", "strategy", "mean_s", "stddev_s", "speedup"
+    )?;
+    let profile = CongestionSpec::paper_netem();
+    let code = rr8_code();
+    let lost = N - 1; // crash the chain tail; congested nodes are survivors
+    let newcomer = N; // the spare 17th node
+    let mut id_base = 900_000u64;
+    for congested in 0..=max_congested {
+        let rec = Recorder::new();
+        for _ in 0..samples {
+            // one archived object per sample; both strategies repair the
+            // SAME lost block on the same cluster state, so the comparison
+            // is paired.
+            let cluster = Cluster::start(ClusterSpec::tpc(N + 1));
+            for node in 0..congested.min(N - 1) {
+                cluster.congest(node, &profile);
+            }
+            let object = ObjectId(id_base);
+            id_base += 1;
+            let placement = ReplicaPlacement::new(object, K, (0..N).collect())?;
+            ingest_object(&cluster, &placement, block_bytes)?;
+            let job = PipelineJob::from_code(&code, &placement, BUF_BYTES, block_bytes)?;
+            crate::coordinator::archive_pipeline(&cluster, backend, &job)?;
+            cluster.fail_node(lost);
+            let (avail, bb) = survey_coded(&cluster, &placement.chain, object);
+            let rjob = RepairJob::from_code(
+                &code, object, &placement.chain, lost, newcomer, &avail, BUF_BYTES, bb,
+            )?;
+            let t = run_star_repair(&cluster, backend, &StarRepairJob::new(rjob.clone()))?;
+            rec.record("star", t);
+            cluster
+                .node(newcomer)
+                .delete(crate::storage::BlockKey::coded(object, lost))?;
+            let t = run_pipelined_repair(&cluster, backend, &PipelinedRepairJob::new(rjob))?;
+            rec.record("pipelined", t);
+        }
+        let star = rec.candle("star").expect("star samples");
+        let pipe = rec.candle("pipelined").expect("pipelined samples");
+        for (name, c) in [("star", &star), ("pipelined", &pipe)] {
+            let speedup = match name {
+                "pipelined" => format!(
+                    "{:.2}x",
+                    star.mean().as_secs_f64() / pipe.mean().as_secs_f64()
+                ),
+                _ => "-".into(),
+            };
+            writeln!(
+                out,
+                "{:>10} {:>10} {:>12.3} {:>12.4} {:>9}",
+                congested,
+                name,
+                c.mean().as_secs_f64(),
+                c.stddev_secs(),
+                speedup
+            )?;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -424,6 +521,15 @@ mod tests {
             }
             _ => panic!("expected classical jobs"),
         }
+    }
+
+    #[test]
+    fn fig_repair_smoke() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let mut out = Vec::new();
+        fig_repair(&be, 0, 256 * 1024, 1, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("star") && text.contains("pipelined"), "{text}");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Point-to-point data links: paced by both endpoint NICs, delayed by
 //! propagation latency (+jitter), carrying real byte frames.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -52,6 +53,9 @@ pub struct Tx {
     down: Arc<RateLimiter>,
     spec: LinkSpec,
     rng: SplitMix64,
+    /// Failure flags of the endpoint nodes (crash injection): when any is
+    /// set, further sends error instead of delivering. Empty for raw links.
+    guards: Vec<Arc<AtomicBool>>,
 }
 
 /// Receiving half of a link.
@@ -69,17 +73,31 @@ pub fn link(up: Arc<RateLimiter>, down: Arc<RateLimiter>, spec: LinkSpec, seed: 
             down,
             spec,
             rng: SplitMix64::new(seed),
+            guards: Vec::new(),
         },
         Rx { receiver: r },
     )
 }
 
 impl Tx {
+    /// Attach endpoint failure flags (crash injection): every subsequent
+    /// [`Tx::send`] errors while any flag is set, so a node failure breaks
+    /// in-flight streams instead of letting them complete silently. The
+    /// cluster's `connect` attaches both endpoints' flags; raw links built
+    /// with [`link`] carry none.
+    pub fn guard(mut self, flags: impl IntoIterator<Item = Arc<AtomicBool>>) -> Self {
+        self.guards.extend(flags);
+        self
+    }
+
     /// Transmit a frame: blocks the sender for the NIC transmission time
     /// (both endpoint NICs reserve the bytes — the slower one paces the
     /// stream), then enqueues the frame stamped with its delivery instant
     /// (completion + propagation latency ± jitter).
     pub fn send(&mut self, frame: Frame) -> anyhow::Result<()> {
+        if self.guards.iter().any(|g| g.load(Ordering::SeqCst)) {
+            anyhow::bail!("link endpoint node has failed");
+        }
         let bytes = frame.wire_bytes();
         let done = if bytes > 0 {
             let _up_done = self.up.acquire(bytes);
@@ -211,6 +229,21 @@ mod tests {
         drop(tx);
         assert!(rx.recv().is_none());
         assert!(rx.recv_all().is_err());
+    }
+
+    #[test]
+    fn guarded_link_breaks_when_endpoint_fails() {
+        let failed = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = link(fast_nic(), fast_nic(), LinkSpec::instant(), 11);
+        let mut tx = tx.guard([failed.clone()]);
+        tx.send_data(vec![1, 2]).unwrap();
+        failed.store(true, Ordering::SeqCst);
+        let err = tx.send_data(vec![3]).unwrap_err();
+        assert!(err.to_string().contains("failed"), "{err}");
+        // the receiver sees the already-delivered frame, then a broken stream
+        assert!(matches!(rx.recv(), Some(Frame::Data(_))));
+        drop(tx);
+        assert!(rx.recv().is_none());
     }
 
     #[test]

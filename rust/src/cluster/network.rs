@@ -131,8 +131,19 @@ impl Cluster {
 
     /// Create a data link from `src` to `dst`, paced by src-up and dst-down
     /// NICs, with latency = base + max(extra of either endpoint).
-    pub fn connect(&self, src: NodeId, dst: NodeId) -> (Tx, Rx) {
+    ///
+    /// Refuses to lower a link onto a failed endpoint, and guards the
+    /// returned sender with both endpoints' failure flags so a crash
+    /// mid-stream breaks the link with an error instead of hanging or
+    /// silently completing.
+    pub fn connect(&self, src: NodeId, dst: NodeId) -> anyhow::Result<(Tx, Rx)> {
         assert_ne!(src, dst, "no self-links");
+        for id in [src, dst] {
+            anyhow::ensure!(
+                !self.nodes[id].is_failed(),
+                "cannot lower link {src}->{dst}: node {id} has failed"
+            );
+        }
         let net = self.net.lock().unwrap();
         let extra_lat = net[src].extra_latency.max(net[dst].extra_latency);
         let extra_jit = net[src].extra_jitter.max(net[dst].extra_jitter);
@@ -146,12 +157,42 @@ impl Cluster {
             *s = s.wrapping_add(0x9E3779B97F4A7C15);
             *s
         };
-        link(
+        let (tx, rx) = link(
             self.nodes[src].up.clone(),
             self.nodes[dst].down.clone(),
             spec,
             seed,
-        )
+        );
+        let tx = tx.guard([
+            self.nodes[src].failure_flag(),
+            self.nodes[dst].failure_flag(),
+        ]);
+        Ok((tx, rx))
+    }
+
+    /// Crash-stop a node ([`crate::cluster::node::NodeHandle::fail`]):
+    /// commands to it error fast, its stored blocks are lost, links
+    /// touching it refuse lowering and break mid-stream.
+    pub fn fail_node(&self, id: NodeId) {
+        self.nodes[id].fail();
+    }
+
+    /// Bring a crashed node back as an empty newcomer; its pre-crash
+    /// blocks stay lost until repair regenerates them.
+    pub fn revive_node(&self, id: NodeId) {
+        self.nodes[id].revive();
+    }
+
+    /// Whether a node is currently crashed.
+    pub fn is_failed(&self, id: NodeId) -> bool {
+        self.nodes[id].is_failed()
+    }
+
+    /// Ids of all currently alive nodes (newcomer/chain candidates).
+    pub fn alive_nodes(&self) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&id| !self.nodes[id].is_failed())
+            .collect()
     }
 
     /// Apply a congestion profile to one node (paper's netem runs):
@@ -191,7 +232,7 @@ mod tests {
     #[test]
     fn connect_moves_bytes() {
         let c = Cluster::start(ClusterSpec::test(3));
-        let (mut tx, rx) = c.connect(0, 2);
+        let (mut tx, rx) = c.connect(0, 2).unwrap();
         tx.send_data(vec![42; 10]).unwrap();
         tx.finish().unwrap();
         assert_eq!(rx.recv_all().unwrap(), vec![42; 10]);
@@ -208,7 +249,7 @@ mod tests {
                 jitter: Duration::ZERO,
             },
         );
-        let (mut tx, rx) = c.connect(0, 1);
+        let (mut tx, rx) = c.connect(0, 1).unwrap();
         let t0 = Instant::now();
         tx.send_data(vec![0; 100_000]).unwrap(); // 100 ms at 1 MB/s
         tx.finish().unwrap();
@@ -217,12 +258,46 @@ mod tests {
         assert!(dt >= Duration::from_millis(120), "congestion ignored: {dt:?}");
 
         c.uncongest(1);
-        let (mut tx, rx) = c.connect(0, 1);
+        let (mut tx, rx) = c.connect(0, 1).unwrap();
         let t0 = Instant::now();
         tx.send_data(vec![0; 100_000]).unwrap();
         tx.finish().unwrap();
         rx.recv_all().unwrap();
         assert!(t0.elapsed() < Duration::from_millis(50), "uncongest failed");
+    }
+
+    #[test]
+    fn failed_node_refuses_links_and_revives_empty() {
+        use crate::storage::{BlockKey, ObjectId};
+        let c = Cluster::start(ClusterSpec::test(3));
+        let key = BlockKey::coded(ObjectId(9), 1);
+        c.node(1).put(key, vec![7; 16]).unwrap();
+
+        c.fail_node(1);
+        assert!(c.is_failed(1));
+        assert_eq!(c.alive_nodes(), vec![0, 2]);
+        // links touching the failed node refuse lowering, either direction
+        assert!(c.connect(0, 1).is_err());
+        assert!(c.connect(1, 2).is_err());
+        // other links still work
+        assert!(c.connect(0, 2).is_ok());
+        // commands error fast
+        assert!(c.node(1).peek(key).is_err());
+
+        c.revive_node(1);
+        assert_eq!(c.alive_nodes(), vec![0, 1, 2]);
+        assert!(c.connect(0, 1).is_ok());
+        // the crash lost the stored block: the newcomer comes back empty
+        assert!(c.node(1).peek(key).unwrap().is_none());
+    }
+
+    #[test]
+    fn mid_stream_failure_breaks_guarded_link() {
+        let c = Cluster::start(ClusterSpec::test(2));
+        let (mut tx, _rx) = c.connect(0, 1).unwrap();
+        tx.send_data(vec![1; 8]).unwrap();
+        c.fail_node(1);
+        assert!(tx.send_data(vec![2; 8]).is_err());
     }
 
     #[test]

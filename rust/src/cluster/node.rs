@@ -24,7 +24,7 @@
 //! commands on each node, default cap 32) the overflow never triggers.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -189,6 +189,7 @@ pub struct NodeHandle {
     pub down: Arc<RateLimiter>,
     thread: Option<JoinHandle<()>>,
     inflight: Arc<AtomicUsize>,
+    failed: Arc<AtomicBool>,
 }
 
 impl NodeHandle {
@@ -205,10 +206,12 @@ impl NodeHandle {
         let store2 = store.clone();
         let inflight = Arc::new(AtomicUsize::new(0));
         let inflight2 = inflight.clone();
+        let failed = Arc::new(AtomicBool::new(false));
+        let failed2 = failed.clone();
         let loopback = tx.clone();
         let thread = std::thread::Builder::new()
             .name(format!("node-{id}"))
-            .spawn(move || node_loop(rx, loopback, store2, inflight2, max_workers))
+            .spawn(move || node_loop(id, rx, loopback, store2, inflight2, failed2, max_workers))
             .expect("spawn node thread");
         Self {
             id,
@@ -218,14 +221,44 @@ impl NodeHandle {
             down,
             thread: Some(thread),
             inflight,
+            failed,
         }
     }
 
-    /// Enqueue a command.
+    /// Enqueue a command. Errors fast when the node has crashed
+    /// ([`NodeHandle::fail`]) — nothing is enqueued.
     pub fn send(&self, cmd: Command) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.is_failed(), "node {} has failed", self.id);
         self.cmd
             .send(Msg::Cmd(cmd))
             .map_err(|_| anyhow::anyhow!("node {} is down", self.id))
+    }
+
+    /// Crash-stop this node: subsequent commands error fast, stored blocks
+    /// are lost (the simulated disk dies with the node), queued data-plane
+    /// commands are rejected, and guarded links touching the node break.
+    /// The node thread itself keeps running so [`NodeHandle::revive`] can
+    /// bring the node back (empty) without respawning.
+    pub fn fail(&self) {
+        self.failed.store(true, Ordering::SeqCst);
+        self.store.clear();
+    }
+
+    /// Bring a crashed node back as an empty newcomer: commands are
+    /// accepted again; the pre-crash blocks stay lost (repair must
+    /// regenerate them).
+    pub fn revive(&self) {
+        self.failed.store(false, Ordering::SeqCst);
+    }
+
+    /// Whether the node is currently crashed.
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::SeqCst)
+    }
+
+    /// Shared failure flag (the cluster attaches it to link guards).
+    pub fn failure_flag(&self) -> Arc<AtomicBool> {
+        self.failed.clone()
     }
 
     /// Synchronous Put convenience.
@@ -265,11 +298,37 @@ impl Drop for NodeHandle {
     }
 }
 
+/// Answer a command's completion channel with a crash error (the node is
+/// failed: nothing runs, but every caller must still get a reply).
+fn reject(id: NodeId, cmd: Command) {
+    let crash = || anyhow::anyhow!("node {id} has failed");
+    match cmd {
+        Command::Put { done, .. } => {
+            let _ = done.send(Err(crash()));
+        }
+        Command::Peek { reply, .. } => {
+            let _ = reply.send(None);
+        }
+        Command::Delete { done, .. } => {
+            let _ = done.send(false);
+        }
+        Command::Upload { done, .. }
+        | Command::Receive { done, .. }
+        | Command::PipelineStage { done, .. }
+        | Command::ClassicalEncode { done, .. } => {
+            let _ = done.send(Err(crash()));
+        }
+        Command::Shutdown => {}
+    }
+}
+
 fn node_loop(
+    id: NodeId,
     rx: mpsc::Receiver<Msg>,
     loopback: mpsc::Sender<Msg>,
     store: BlockStore,
     inflight: Arc<AtomicUsize>,
+    failed: Arc<AtomicBool>,
     max_workers: usize,
 ) {
     let max_workers = max_workers.max(1);
@@ -280,8 +339,9 @@ fn node_loop(
         let store = store.clone();
         let inflight = inflight.clone();
         let loopback = loopback.clone();
+        let failed = failed.clone();
         workers.push(std::thread::spawn(move || {
-            run_dataplane(cmd, store);
+            run_dataplane(cmd, store, &failed);
             inflight.fetch_sub(1, Ordering::Relaxed);
             // Release the worker slot; the node loop may have shut down
             // already, in which case nobody is waiting for the slot.
@@ -298,6 +358,17 @@ fn node_loop(
     let mut stall_deadline: Option<Instant> = None;
     // The loop holds a loopback sender, so `recv` can only end via Shutdown.
     loop {
+        // A crash rejects everything still queued (each queued data-plane
+        // command was counted in `inflight` on arrival, so the load signal
+        // stays balanced). Workers already running keep going; their link
+        // guards break any stream touching this node.
+        if failed.load(Ordering::SeqCst) {
+            while let Some(cmd) = pending.pop_front() {
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                reject(id, cmd);
+            }
+            stall_deadline = None;
+        }
         let msg = if pending.is_empty() {
             stall_deadline = None;
             match rx.recv() {
@@ -331,6 +402,13 @@ fn node_loop(
             }
         };
         match msg {
+            // Commands that raced past the handle's failure check before
+            // the crash land here: reply with the crash error, run nothing.
+            Msg::Cmd(cmd)
+                if failed.load(Ordering::SeqCst) && !matches!(cmd, Command::Shutdown) =>
+            {
+                reject(id, cmd);
+            }
             Msg::WorkerDone => {
                 stall = QUEUE_STALL_OVERFLOW;
                 stall_deadline = None;
@@ -382,7 +460,7 @@ fn node_loop(
     }
 }
 
-fn run_dataplane(cmd: Command, store: BlockStore) {
+fn run_dataplane(cmd: Command, store: BlockStore, failed: &AtomicBool) {
     match cmd {
         Command::Upload {
             key,
@@ -393,7 +471,7 @@ fn run_dataplane(cmd: Command, store: BlockStore) {
             let _ = done.send(do_upload(&store, key, &mut tx, buf_bytes));
         }
         Command::Receive { key, rx, done } => {
-            let _ = done.send(do_receive(&store, key, &rx));
+            let _ = done.send(do_receive(&store, key, &rx, failed));
         }
         Command::PipelineStage {
             width,
@@ -409,6 +487,7 @@ fn run_dataplane(cmd: Command, store: BlockStore) {
         } => {
             let r = do_pipeline_stage(
                 &store, width, &locals, &psi, &xi, prev, next, out_key, buf_bytes, &backend,
+                failed,
             );
             let _ = done.send(r);
         }
@@ -431,6 +510,7 @@ fn run_dataplane(cmd: Command, store: BlockStore) {
                 buf_bytes,
                 block_bytes,
                 &backend,
+                failed,
             );
             let _ = done.send(r);
         }
@@ -448,9 +528,17 @@ fn do_upload(store: &BlockStore, key: BlockKey, tx: &mut Tx, buf_bytes: usize) -
     tx.finish()
 }
 
-fn do_receive(store: &BlockStore, key: BlockKey, rx: &Rx) -> anyhow::Result<()> {
+fn do_receive(
+    store: &BlockStore,
+    key: BlockKey,
+    rx: &Rx,
+    failed: &AtomicBool,
+) -> anyhow::Result<()> {
     let data = rx.recv_all()?;
-    store.put(key, data);
+    anyhow::ensure!(
+        store.put_unless(key, data, failed),
+        "receive aborted: node has failed"
+    );
     Ok(())
 }
 
@@ -466,6 +554,7 @@ fn do_pipeline_stage(
     out_key: Option<BlockKey>,
     buf_bytes: usize,
     backend: &BackendHandle,
+    failed: &AtomicBool,
 ) -> anyhow::Result<()> {
     let local_blocks: Vec<Arc<Vec<u8>>> = locals
         .iter()
@@ -525,7 +614,10 @@ fn do_pipeline_stage(
     }
     anyhow::ensure!(offset == block_bytes, "stream/block length mismatch");
     if let Some(key) = out_key {
-        store.put(key, out);
+        anyhow::ensure!(
+            store.put_unless(key, out, failed),
+            "pipeline stage aborted: node has failed"
+        );
     }
     Ok(())
 }
@@ -540,6 +632,7 @@ fn do_classical_encode(
     buf_bytes: usize,
     block_bytes: usize,
     backend: &BackendHandle,
+    failed: &AtomicBool,
 ) -> anyhow::Result<()> {
     let k = sources.len();
     let m = parity_rows.len();
@@ -612,7 +705,10 @@ fn do_classical_encode(
     for (i, d) in dests.iter_mut().enumerate() {
         match d {
             ParityDest::Stream(tx) => tx.finish()?,
-            ParityDest::Store(key) => store.put(*key, std::mem::take(&mut local_acc[i])),
+            ParityDest::Store(key) => anyhow::ensure!(
+                store.put_unless(*key, std::mem::take(&mut local_acc[i]), failed),
+                "classical encode aborted: node has failed"
+            ),
         }
     }
     Ok(())
@@ -899,6 +995,56 @@ mod tests {
         for i in 0..block {
             assert_eq!(c1[i] as u32, mul_bitwise(3, b0[i] as u32, 8), "byte {i}");
         }
+    }
+
+    #[test]
+    fn failed_node_rejects_commands_and_loses_blocks() {
+        let n = node(0);
+        let key = BlockKey::source(ObjectId(11), 0);
+        n.put(key, vec![1, 2, 3]).unwrap();
+        n.fail();
+        assert!(n.is_failed());
+        assert!(n.put(key, vec![4]).is_err());
+        assert!(n.peek(key).is_err());
+        n.revive();
+        assert!(!n.is_failed());
+        // revived empty: the crash lost the simulated disk
+        assert!(n.peek(key).unwrap().is_none());
+        n.put(key, vec![9]).unwrap();
+        assert_eq!(*n.peek(key).unwrap().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn crash_rejects_queued_commands() {
+        use std::time::Duration;
+        // cap = 1: a Receive blocked on a silent link occupies the slot, an
+        // Upload queues behind it; the crash must reject the queued Upload
+        // (error, not hang) even though the running worker never finishes
+        // on its own.
+        let a = NodeHandle::spawn(0, nic(), nic(), 1);
+        let key = BlockKey::source(ObjectId(12), 0);
+        a.put(key, vec![5; 100]).unwrap();
+        let (hold_tx, hold_rx) = link(nic(), a.down.clone(), LinkSpec::instant(), 21);
+        let (dr, _wr) = mpsc::channel();
+        a.send(Command::Receive {
+            key: BlockKey::source(ObjectId(12), 1),
+            rx: hold_rx,
+            done: dr,
+        })
+        .unwrap();
+        let (up_tx, _up_rx) = link(a.up.clone(), nic(), LinkSpec::instant(), 22);
+        let (du, wu) = mpsc::channel();
+        a.send(Command::Upload {
+            key,
+            tx: up_tx,
+            buf_bytes: 64,
+            done: du,
+        })
+        .unwrap();
+        a.fail();
+        let res = wu.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(res.unwrap_err().to_string().contains("failed"));
+        drop(hold_tx); // release the blocked worker so shutdown can join
     }
 
     #[test]

@@ -18,7 +18,7 @@
 
 use crate::codes::classical::decode_with_generator;
 use crate::codes::DecodeError;
-use crate::gf::{GfElem, Matrix, SliceOps};
+use crate::gf::{gauss, GfElem, Matrix, SliceOps};
 use crate::util::SplitMix64;
 
 /// Per-node encoding schedule: which object blocks the node stores and the
@@ -194,6 +194,40 @@ impl<F: GfElem + SliceOps> RapidRaidCode<F> {
     /// Reconstruct the object from any k independent blocks `(index, data)`.
     pub fn decode(&self, have: &[(usize, Vec<F>)]) -> Result<Vec<Vec<F>>, DecodeError> {
         decode_with_generator(&self.generator, self.n, self.k, have)
+    }
+
+    /// Repair coefficients for regenerating the lost codeword block
+    /// `c_lost` from surviving blocks: picks an independent k-subset S of
+    /// `avail` (minus `lost` itself) and returns `(S, ψ)` with
+    ///
+    /// ```text
+    /// c_lost = Σ_i ψ[i] · c_{S[i]},   ψ = g_lost · G_S⁻¹
+    /// ```
+    ///
+    /// because the object is `G_S⁻¹ · c_S` and `c_lost = g_lost · object`.
+    /// Both repair planners (star and pipelined) lower exactly this linear
+    /// combination; they differ only in where the folds run.
+    pub fn repair_coefficients(
+        &self,
+        lost: usize,
+        avail: &[usize],
+    ) -> anyhow::Result<(Vec<usize>, Vec<F>)> {
+        anyhow::ensure!(lost < self.n, "lost index {lost} out of range (n={})", self.n);
+        let usable: Vec<usize> = avail.iter().copied().filter(|&p| p != lost).collect();
+        let subset = self.find_decodable_subset(&usable).ok_or_else(|| {
+            anyhow::anyhow!(
+                "block {lost} unrepairable: no independent k-subset among {usable:?}"
+            )
+        })?;
+        let inv = gauss::invert(&self.generator.select_rows(&subset))
+            .ok_or_else(|| anyhow::anyhow!("subset {subset:?} unexpectedly singular"))?;
+        let g_lost = self.generator.row(lost);
+        let psi: Vec<F> = (0..self.k)
+            .map(|j| {
+                (0..self.k).fold(F::ZERO, |acc, i| acc.add(g_lost[i].mul(inv[(i, j)])))
+            })
+            .collect();
+        Ok((subset, psi))
     }
 
     /// Greedy search for a decodable k-subset among the available block
@@ -384,6 +418,44 @@ mod tests {
         let s = code.find_decodable_subset(&[0, 1, 4, 5, 6]).unwrap();
         let sub = code.generator.select_rows(&s);
         assert_eq!(gauss::rank(&sub), 4);
+    }
+
+    #[test]
+    fn repair_coefficients_reproduce_lost_block() {
+        // ψ = g_lost · G_S⁻¹ must reproduce c_lost exactly, any loss, both
+        // fields.
+        fn check<F: GfElem + SliceOps>(n: usize, k: usize, seed: u64) {
+            let code = RapidRaidCode::<F>::with_seed(n, k, seed).unwrap();
+            let obj = random_object::<F>(seed ^ 0xABCD, k, 64);
+            let coded = code.encode_chain(&obj);
+            for lost in 0..n {
+                let avail: Vec<usize> = (0..n).filter(|&p| p != lost).collect();
+                let (subset, psi) = code.repair_coefficients(lost, &avail).unwrap();
+                assert_eq!(subset.len(), k);
+                assert!(!subset.contains(&lost));
+                let mut rebuilt = vec![F::ZERO; 64];
+                for (i, &p) in subset.iter().enumerate() {
+                    F::mul_slice_xor(psi[i], &coded[p], &mut rebuilt);
+                }
+                assert_eq!(rebuilt, coded[lost], "(n={n},k={k}) lost {lost}");
+            }
+        }
+        check::<Gf256>(8, 4, 7);
+        check::<Gf65536>(8, 4, 12);
+        check::<Gf65536>(6, 4, 5);
+        check::<Gf256>(16, 11, 5);
+    }
+
+    #[test]
+    fn repair_coefficients_reject_hopeless_availability() {
+        let code = RapidRaidCode::<Gf65536>::with_seed(8, 4, 12).unwrap();
+        // only the natural dependency survives → unrepairable
+        assert!(code.repair_coefficients(7, &[0, 1, 4, 5]).is_err());
+        // `lost` itself is filtered from the sources even when listed
+        let (subset, _) = code.repair_coefficients(7, &[0, 1, 2, 3, 7]).unwrap();
+        assert!(!subset.contains(&7));
+        // out-of-range lost index
+        assert!(code.repair_coefficients(9, &[0, 1, 2, 3]).is_err());
     }
 
     #[test]

@@ -1,10 +1,13 @@
-//! Object reconstruction from coded blocks.
+//! Object reconstruction from coded blocks — including **degraded reads**.
 //!
 //! RapidRAID is non-systematic, so every read of an archived object decodes:
-//! pick k linearly independent surviving blocks, invert the corresponding
+//! pick k linearly independent *surviving* blocks, invert the corresponding
 //! generator rows (Gauss over the field), and apply the inverse — on the
 //! selected backend, i.e. through the AOT `gf_gemm` artifact when PJRT is
-//! active.
+//! active. [`survey_coded`] treats crashed chain nodes
+//! ([`Cluster::fail_node`]) exactly like missing blocks, so a read keeps
+//! working through up to n−k node failures as long as an independent
+//! k-subset survives.
 
 use crate::backend::{BackendHandle, Width};
 use crate::cluster::Cluster;
@@ -12,8 +15,32 @@ use crate::codes::rapidraid::RapidRaidCode;
 use crate::gf::{gauss, GfElem, SliceOps};
 use crate::storage::{BlockKey, ObjectId};
 
-/// Reconstruct `object` from the coded blocks stored on `chain` (chain[i]
-/// holds c_i). Returns the k source blocks.
+/// Which coded blocks of `object` survive on `chain` (`chain[i]` holds
+/// c_i), and their common size. Crashed nodes and peek errors (a node
+/// failing mid-survey) count as "block unavailable", never as a hard
+/// error — the degraded-read and repair paths both build on this.
+pub fn survey_coded(
+    cluster: &Cluster,
+    chain: &[usize],
+    object: ObjectId,
+) -> (Vec<usize>, usize) {
+    let mut avail = Vec::new();
+    let mut block_bytes = 0usize;
+    for (pos, &node) in chain.iter().enumerate() {
+        if cluster.is_failed(node) {
+            continue;
+        }
+        if let Ok(Some(b)) = cluster.node(node).peek(BlockKey::coded(object, pos)) {
+            avail.push(pos);
+            block_bytes = b.len();
+        }
+    }
+    (avail, block_bytes)
+}
+
+/// Reconstruct `object` from the coded blocks surviving on `chain`
+/// (chain[i] holds c_i) — a degraded read when nodes have crashed or
+/// blocks are missing. Returns the k source blocks.
 pub fn reconstruct<F: GfElem + SliceOps>(
     cluster: &Cluster,
     code: &RapidRaidCode<F>,
@@ -22,23 +49,10 @@ pub fn reconstruct<F: GfElem + SliceOps>(
     backend: &BackendHandle,
 ) -> anyhow::Result<Vec<Vec<u8>>> {
     anyhow::ensure!(chain.len() == code.n(), "chain/code mismatch");
-    let width = match F::BITS {
-        8 => Width::W8,
-        16 => Width::W16,
-        other => anyhow::bail!("unsupported field width {other}"),
-    };
+    let width = Width::for_bits(F::BITS)?;
 
     // 1. which codeword blocks survived?
-    let mut avail: Vec<usize> = Vec::new();
-    for (pos, &node) in chain.iter().enumerate() {
-        if cluster
-            .node(node)
-            .peek(BlockKey::coded(object, pos))?
-            .is_some()
-        {
-            avail.push(pos);
-        }
-    }
+    let (avail, _) = survey_coded(cluster, chain, object);
 
     // 2. pick an independent k-subset
     let subset = code

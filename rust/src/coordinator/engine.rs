@@ -142,6 +142,11 @@ impl<'a> PlanExecutor<'a> {
                 step.node,
                 self.cluster.len()
             );
+            anyhow::ensure!(
+                !self.cluster.is_failed(step.node),
+                "plan step {id} targets failed node {}",
+                step.node
+            );
         }
         let start = Instant::now();
 
@@ -151,7 +156,7 @@ impl<'a> PlanExecutor<'a> {
         for e in &plan.edges {
             let (tx, rx) = self
                 .cluster
-                .connect(plan.steps[e.from].node, plan.steps[e.to].node);
+                .connect(plan.steps[e.from].node, plan.steps[e.to].node)?;
             txs.insert((e.from, e.from_port), tx);
             rxs.insert((e.to, e.to_port), rx);
         }
@@ -279,12 +284,29 @@ impl<'a> PlanExecutor<'a> {
     }
 
     /// Execute plans with at most `max_concurrent` running at a time
-    /// (FIFO over the input order).
+    /// (FIFO over the input order); the first error (in input order) fails
+    /// the whole call after every plan has finished.
     pub fn run_many_bounded(
         &self,
         plans: &[ArchivalPlan],
         max_concurrent: usize,
     ) -> anyhow::Result<Vec<Duration>> {
+        self.run_many_results(plans, max_concurrent)?
+            .into_iter()
+            .collect()
+    }
+
+    /// Like [`PlanExecutor::run_many_bounded`], but reports every plan's
+    /// individual outcome instead of collapsing to the first error — for
+    /// callers that must commit the successes of a partially failed batch
+    /// (e.g. the repair scheduler: one crashed repair must not discard the
+    /// blocks the other repairs already regenerated). The outer error only
+    /// covers invalid arguments.
+    pub fn run_many_results(
+        &self,
+        plans: &[ArchivalPlan],
+        max_concurrent: usize,
+    ) -> anyhow::Result<Vec<anyhow::Result<Duration>>> {
         anyhow::ensure!(max_concurrent >= 1, "need at least one plan worker");
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<anyhow::Result<Duration>>>> =
@@ -300,14 +322,14 @@ impl<'a> PlanExecutor<'a> {
                 });
             }
         });
-        slots
+        Ok(slots
             .into_iter()
             .map(|s| {
                 s.into_inner()
                     .expect("plan worker panicked")
                     .expect("every slot filled")
             })
-            .collect()
+            .collect())
     }
 }
 

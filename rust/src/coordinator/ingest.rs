@@ -1,7 +1,15 @@
 //! Object ingest: create a replicated object on the cluster, laid out the
 //! way RapidRAID expects (two replicas over the n chain nodes).
+//!
+//! Chains are either fixed by the caller (the paper's rotated layout) or
+//! chosen at ingest time by a [`ChainPolicy`] ([`place_object`] /
+//! [`ingest_object_placed`]): the policy ranks the currently *alive* nodes
+//! — so a [`CongestionAwarePolicy`](crate::coordinator::engine::CongestionAwarePolicy)
+//! routes new chains around congested nodes before any replica is placed,
+//! and crashed nodes are never selected.
 
 use crate::cluster::Cluster;
+use crate::coordinator::engine::{select_chain, ChainPolicy};
 use crate::storage::{BlockKey, ObjectId, ReplicaPlacement};
 use crate::util::SplitMix64;
 
@@ -32,6 +40,36 @@ pub fn ingest_object(
     Ok(blocks)
 }
 
+/// Choose a chain for a new `(n, k)` object under `policy`: rank the alive
+/// nodes and take the `n` most preferred (congestion- and failure-aware
+/// placement).
+pub fn place_object(
+    cluster: &Cluster,
+    policy: &dyn ChainPolicy,
+    object: ObjectId,
+    n: usize,
+    k: usize,
+) -> anyhow::Result<ReplicaPlacement> {
+    let alive = cluster.alive_nodes();
+    let chain = select_chain(cluster, policy, &alive, n)?;
+    ReplicaPlacement::new(object, k, chain)
+}
+
+/// Policy-placed ingest: [`place_object`] then [`ingest_object`] in one
+/// call. Returns the chosen placement and the k source blocks.
+pub fn ingest_object_placed(
+    cluster: &Cluster,
+    policy: &dyn ChainPolicy,
+    object: ObjectId,
+    n: usize,
+    k: usize,
+    block_bytes: usize,
+) -> anyhow::Result<(ReplicaPlacement, Vec<Vec<u8>>)> {
+    let placement = place_object(cluster, policy, object, n, k)?;
+    let blocks = ingest_object(cluster, &placement, block_bytes)?;
+    Ok((placement, blocks))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -44,6 +82,46 @@ mod tests {
         let c = object_bytes(ObjectId(1), 1, 128);
         assert_eq!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn policy_placement_avoids_congested_and_failed_nodes() {
+        use crate::cluster::CongestionSpec;
+        use crate::coordinator::engine::CongestionAwarePolicy;
+        // 10 nodes, need 8: the congested and the crashed one must not be
+        // chosen.
+        let cluster = Cluster::start(ClusterSpec::test(10));
+        cluster.congest(2, &CongestionSpec::mild());
+        cluster.fail_node(5);
+        let (placement, blocks) = ingest_object_placed(
+            &cluster,
+            &CongestionAwarePolicy,
+            ObjectId(9),
+            8,
+            4,
+            64,
+        )
+        .unwrap();
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(placement.chain.len(), 8);
+        assert!(!placement.chain.contains(&5), "{:?}", placement.chain);
+        assert!(!placement.chain.contains(&2), "{:?}", placement.chain);
+        // replicas really landed on the chosen chain
+        for (node, b) in placement.replica_map() {
+            assert!(cluster
+                .node(node)
+                .peek(BlockKey::source(ObjectId(9), b))
+                .unwrap()
+                .is_some());
+        }
+    }
+
+    #[test]
+    fn placement_fails_when_too_few_alive_nodes() {
+        use crate::coordinator::engine::FifoPolicy;
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        cluster.fail_node(0);
+        assert!(place_object(&cluster, &FifoPolicy, ObjectId(1), 8, 4).is_err());
     }
 
     #[test]

@@ -21,10 +21,13 @@
 //! * [`pipeline_decode`] — k concurrent decode chains (`Fold` steps over
 //!   inverse coefficients), plus the classical transfer-plan twin.
 //!
-//! Plus: [`decode`] (reconstruction from any independent k-subset),
-//! [`ingest`] (replicated object creation), [`migrate`] (encode → verify →
-//! drop replicas), and [`model`] (the eq. 1/eq. 2 analytic estimates).
-//! `ARCHITECTURE.md` walks one lowering end-to-end.
+//! Plus: [`decode`] (degraded reads: reconstruction from any independent
+//! k-subset *surviving* crashes), [`ingest`] (replicated object creation,
+//! with policy-driven congestion/failure-aware chain placement),
+//! [`migrate`] (encode → verify → drop replicas), and [`model`] (the
+//! eq. 1/eq. 2 analytic estimates). The failure-repair planners build on
+//! the same IR from [`crate::repair`]. `ARCHITECTURE.md` walks one
+//! lowering end-to-end.
 
 pub mod batch;
 pub mod classical;
@@ -39,11 +42,11 @@ pub mod plan;
 
 pub use batch::{run_batch, run_batch_recorded, BatchJob};
 pub use classical::{archive_classical, ClassicalJob};
-pub use decode::reconstruct;
+pub use decode::{reconstruct, survey_coded};
 pub use engine::{
     select_chain, ChainPolicy, CongestionAwarePolicy, FifoPolicy, PlanExecutor,
 };
-pub use ingest::{ingest_object, object_bytes};
+pub use ingest::{ingest_object, ingest_object_placed, object_bytes, place_object};
 pub use migrate::{migrate_object, MigrationReport};
 pub use pipeline::{archive_pipeline, PipelineJob};
 pub use pipeline_decode::reconstruct_pipelined;

@@ -49,11 +49,7 @@ impl PipelineJob {
         block_bytes: usize,
     ) -> anyhow::Result<Self> {
         anyhow::ensure!(placement.n == code.n() && placement.k == code.k(), "code/placement mismatch");
-        let width = match F::BITS {
-            8 => Width::W8,
-            16 => Width::W16,
-            other => anyhow::bail!("unsupported field width {other}"),
-        };
+        let width = Width::for_bits(F::BITS)?;
         let schedule = code
             .schedule()
             .iter()

@@ -46,14 +46,12 @@ pub fn reconstruct_pipelined<F: GfElem + SliceOps>(
 ) -> anyhow::Result<(Vec<Vec<u8>>, Duration)> {
     anyhow::ensure!(chain.len() == code.n(), "chain/code mismatch");
     let k = code.k();
-    let width = match F::BITS {
-        8 => Width::W8,
-        16 => Width::W16,
-        other => anyhow::bail!("unsupported field width {other}"),
-    };
+    let width = Width::for_bits(F::BITS)?;
 
     // survivors + an independent k-subset + the inverse of its rows
-    let (avail, block_bytes) = survey(cluster, chain, object)?;
+    // (degraded: crashed nodes count as missing blocks)
+    let (avail, block_bytes) = super::decode::survey_coded(cluster, chain, object);
+    anyhow::ensure!(!avail.is_empty(), "object {object}: no coded blocks survive");
     let subset = code
         .find_decodable_subset(&avail)
         .ok_or_else(|| anyhow::anyhow!("object {object} unrecoverable: available {avail:?}"))?;
@@ -118,12 +116,9 @@ pub fn reconstruct_classical_timed<F: GfElem + SliceOpsBound>(
     buf_bytes: usize,
 ) -> anyhow::Result<(Vec<Vec<u8>>, Duration)> {
     let k = code.k();
-    let width = match F::BITS {
-        8 => Width::W8,
-        16 => Width::W16,
-        other => anyhow::bail!("unsupported field width {other}"),
-    };
-    let (avail, block_bytes) = survey(cluster, chain, object)?;
+    let width = Width::for_bits(F::BITS)?;
+    let (avail, block_bytes) = super::decode::survey_coded(cluster, chain, object);
+    anyhow::ensure!(!avail.is_empty(), "object {object}: no coded blocks survive");
     let subset = code
         .find_decodable_subset(&avail)
         .ok_or_else(|| anyhow::anyhow!("object {object} unrecoverable"))?;
@@ -163,25 +158,6 @@ pub fn reconstruct_classical_timed<F: GfElem + SliceOpsBound>(
     let refs: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
     let out = backend.gemm(width, &inv_u32, &refs)?;
     Ok((out, start.elapsed()))
-}
-
-/// Which coded blocks of `object` survive on `chain`, and how large they
-/// are (every plan needs the block size up front).
-fn survey(
-    cluster: &Cluster,
-    chain: &[usize],
-    object: ObjectId,
-) -> anyhow::Result<(Vec<usize>, usize)> {
-    let mut avail = Vec::new();
-    let mut block_bytes = 0usize;
-    for (pos, &node) in chain.iter().enumerate() {
-        if let Some(b) = cluster.node(node).peek(BlockKey::coded(object, pos))? {
-            avail.push(pos);
-            block_bytes = b.len();
-        }
-    }
-    anyhow::ensure!(!avail.is_empty(), "object {object}: no coded blocks survive");
-    Ok((avail, block_bytes))
 }
 
 /// Bound alias so the classical twin shares the generic signature.

@@ -5,11 +5,14 @@
 //! 2012) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the distributed-storage coordinator: a simulated
-//!   cluster of storage nodes connected by rate-limited links, a declarative
-//!   archival-plan IR ([`coordinator::plan`]) with one unified execution
-//!   engine ([`coordinator::engine`]) beneath the classical (atomic)
-//!   encoder, the paper's pipelined RapidRAID encoder, the batch scheduler
-//!   for concurrent object archival and pipelined reconstruction, plus
+//!   cluster of storage nodes connected by rate-limited links (with
+//!   crash-stop failure injection), a declarative archival-plan IR
+//!   ([`coordinator::plan`]) with one unified execution engine
+//!   ([`coordinator::engine`]) beneath the classical (atomic) encoder, the
+//!   paper's pipelined RapidRAID encoder, the batch scheduler for
+//!   concurrent object archival, pipelined reconstruction and the failure &
+//!   repair subsystem ([`repair`]: degraded reads, star vs pipelined
+//!   single-block repair, eager/lazy repair scheduling), plus
 //!   fault-tolerance analytics (dependency census, static resilience) and
 //!   the benchmark harnesses that regenerate every table and figure of the
 //!   paper's evaluation section.
@@ -24,9 +27,10 @@
 //! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops, matrices, Gauss |
 //! | [`codes`] | classical Cauchy Reed-Solomon + RapidRAID code constructions, coefficient search, dependency census |
 //! | [`reliability`] | static resilience (probability of data loss, "number of 9's") |
-//! | [`cluster`] | simulated storage cluster: nodes, rate-limited links, congestion |
+//! | [`cluster`] | simulated storage cluster: nodes, rate-limited links, congestion, crash-stop failure injection (`fail_node`/`revive_node`) |
 //! | [`storage`] | objects, blocks, replica placement, block stores |
-//! | [`coordinator`] | the archival system: ArchivalPlan IR + PlanExecutor engine, with classical/pipelined/batch/decode/migration as plan builders |
+//! | [`coordinator`] | the archival system: ArchivalPlan IR + PlanExecutor engine, with classical/pipelined/batch/decode/migration as plan builders; degraded reads via `decode::survey_coded` |
+//! | [`repair`] | failure repair as plan builders: star vs pipelined (Li et al. 2019) single-block repair, repair coefficients from the generator, eager/lazy scheduler |
 //! | [`runtime`] | PJRT executor loading the AOT artifacts (`artifacts/*.hlo.txt`); stubbed without the `pjrt` feature |
 //! | [`backend`] | pluggable GF compute: native Rust vs PJRT artifacts |
 //! | [`metrics`] | timing spans ([`metrics::Span`]), percentile candles, report emitters |
@@ -55,6 +59,7 @@ pub mod coordinator;
 pub mod gf;
 pub mod metrics;
 pub mod reliability;
+pub mod repair;
 pub mod runtime;
 pub mod storage;
 pub mod util;

@@ -9,6 +9,8 @@
 //!                        [--block-mib 1] [--samples 5]        # Fig. 4
 //! rapidraid bench-congestion [--max-congested 8] [--objects 1]
 //!                        [--block-mib 1] [--samples 3]        # Fig. 5
+//! rapidraid bench-repair [--max-congested 4] [--block-mib 16]
+//!                        [--samples 3]                        # star vs pipelined repair
 //! rapidraid demo         [--pjrt]                             # quick e2e
 //! ```
 //!
@@ -37,6 +39,7 @@ fn main() {
         Some("bench-cpu") => cmd_bench_cpu(&opts),
         Some("bench-coding") => cmd_bench_coding(&opts),
         Some("bench-congestion") => cmd_bench_congestion(&opts),
+        Some("bench-repair") => cmd_bench_repair(&opts),
         Some("demo") => cmd_demo(&opts),
         Some(other) => {
             eprintln!("unknown command: {other}\n");
@@ -63,6 +66,7 @@ fn usage() {
          \x20 bench-cpu         CPU-only coding time, Table II\n\
          \x20 bench-coding      cluster coding times, Fig. 4\n\
          \x20 bench-congestion  congested-network sweep, Fig. 5\n\
+         \x20 bench-repair      single-block repair, star vs pipelined\n\
          \x20 demo              end-to-end migrate+decode demo\n\
          see the doc comment in rust/src/main.rs for options"
     );
@@ -184,6 +188,20 @@ fn cmd_bench_congestion(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         &be,
         max_congested,
         objects,
+        block_mib << 20,
+        samples,
+        &mut std::io::stdout().lock(),
+    )
+}
+
+fn cmd_bench_repair(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let max_congested: usize = get(opts, "max-congested", 4);
+    let block_mib: usize = get(opts, "block-mib", 16);
+    let samples: usize = get(opts, "samples", 3);
+    let be = backend(opts)?;
+    scenarios::fig_repair(
+        &be,
+        max_congested,
         block_mib << 20,
         samples,
         &mut std::io::stdout().lock(),

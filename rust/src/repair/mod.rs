@@ -1,0 +1,105 @@
+//! Failure & repair subsystem: regenerate lost codeword blocks as
+//! archival plans.
+//!
+//! After `Cluster::fail_node` (or plain bitrot) a chain is missing coded
+//! blocks. Repair rebuilds each lost block `c_lost` as the linear
+//! combination `Σ ψ_i · c_{S[i]}` over an independent k-subset S of
+//! survivors, with ψ = g_lost · G_S⁻¹ computed in
+//! [`crate::codes::rapidraid::RapidRaidCode::repair_coefficients`]. Two
+//! planners lower the *same* combination onto the
+//! [`crate::coordinator::plan::ArchivalPlan`] IR and run on the shared
+//! [`crate::coordinator::engine::PlanExecutor`] — no bespoke orchestration
+//! lives here:
+//!
+//! * [`star::StarRepairJob`] — the classical baseline: the k survivors all
+//!   stream to the newcomer (`Source` steps into one 1×k `Gemm` that
+//!   `Store`s locally). The newcomer's download NIC serializes everything:
+//!   `T_star ≈ k·τ_block` — repair traffic is exactly the k-transfer cost
+//!   Dimakis et al. identify as the dominant price of erasure coding.
+//! * [`pipeline::PipelinedRepairJob`] — repair pipelining (Li et al.,
+//!   2019): the survivors form a chain of `Fold` steps re-aggregating the
+//!   ψ-weighted partial sums buffer by buffer, the tail delivering to a
+//!   `Store` on the newcomer. Hops overlap exactly like the encode
+//!   pipeline: `T_pipe ≈ τ_block + (k−1)·τ_buf` — single-block repair in
+//!   about one blocktime.
+//!
+//! [`scheduler::RepairScheduler`] scans placements for missing blocks,
+//! picks newcomers through the executor's
+//! [`ChainPolicy`](crate::coordinator::engine::ChainPolicy) ranking, and
+//! drives eager or lazy (threshold-triggered) repair through
+//! `PlanExecutor::run_many_bounded`.
+
+pub mod pipeline;
+pub mod scheduler;
+pub mod star;
+
+pub use pipeline::{run_pipelined_repair, PipelinedRepairJob};
+pub use scheduler::{
+    RepairAction, RepairReport, RepairScheduler, RepairStrategy, RepairTrigger,
+};
+pub use star::{run_star_repair, StarRepairJob};
+
+use crate::backend::Width;
+use crate::cluster::NodeId;
+use crate::codes::rapidraid::RapidRaidCode;
+use crate::gf::{GfElem, SliceOps};
+use crate::storage::ObjectId;
+
+/// One single-block repair, field-erased: everything both planners need to
+/// lower `c_lost = Σ ψ_i · c_{sources[i].1}` onto a plan.
+#[derive(Clone, Debug)]
+pub struct RepairJob {
+    /// Object being repaired.
+    pub object: ObjectId,
+    /// GF width.
+    pub width: Width,
+    /// Codeword index of the lost block.
+    pub lost: usize,
+    /// Node that will store the regenerated block.
+    pub newcomer: NodeId,
+    /// The k survivors: (node, codeword position) per repair source.
+    pub sources: Vec<(NodeId, usize)>,
+    /// Repair coefficients ψ, one per source.
+    pub psi: Vec<u32>,
+    /// Network frame size.
+    pub buf_bytes: usize,
+    /// Coded block size.
+    pub block_bytes: usize,
+}
+
+impl RepairJob {
+    /// Bind a repair of `object`'s block `lost` to the cluster: survivors
+    /// come from `avail` (their chain positions), the coefficients from the
+    /// code's generator. `chain[pos]` is the node holding `c_pos`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_code<F: GfElem + SliceOps>(
+        code: &RapidRaidCode<F>,
+        object: ObjectId,
+        chain: &[NodeId],
+        lost: usize,
+        newcomer: NodeId,
+        avail: &[usize],
+        buf_bytes: usize,
+        block_bytes: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(chain.len() == code.n(), "chain/code mismatch");
+        let width = Width::for_bits(F::BITS)?;
+        let (subset, psi) = code.repair_coefficients(lost, avail)?;
+        let sources = subset.iter().map(|&p| (chain[p], p)).collect();
+        Ok(Self {
+            object,
+            width,
+            lost,
+            newcomer,
+            sources,
+            psi: psi.iter().map(|c| c.to_u32()).collect(),
+            buf_bytes,
+            block_bytes,
+        })
+    }
+
+    /// Number of repair sources (the code's k).
+    pub fn k(&self) -> usize {
+        self.sources.len()
+    }
+}

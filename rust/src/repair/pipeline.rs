@@ -1,0 +1,146 @@
+//! Pipelined repair — Li et al.'s repair pipelining as a plan builder.
+//!
+//! The k survivors form a chain of [`StepKind::Fold`] steps: survivor i
+//! receives the running ψ-weighted partial sum, folds `ψ_i · c_{s_i}` into
+//! it buffer by buffer, and forwards it; the tail delivers the completed
+//! `c_lost` to a [`StepKind::Store`] on the newcomer. Exactly like the
+//! encode pipeline, the hops overlap: `T_pipe ≈ τ_block + (k−1)·τ_buf`
+//! instead of star repair's `k·τ_block` — single-block repair in about one
+//! blocktime.
+
+use std::time::Duration;
+
+use crate::backend::BackendHandle;
+use crate::cluster::Cluster;
+use crate::coordinator::engine::PlanExecutor;
+use crate::coordinator::plan::{ArchivalPlan, StepId, StepKind};
+use crate::storage::BlockKey;
+
+use super::RepairJob;
+
+/// Chained single-block repair: a head→tail line of `Fold` steps over the
+/// survivors, delivering into a `Store` on the newcomer.
+#[derive(Clone, Debug)]
+pub struct PipelinedRepairJob {
+    /// The bound repair.
+    pub job: RepairJob,
+}
+
+impl PipelinedRepairJob {
+    /// Wrap a bound repair in the pipelined lowering.
+    pub fn new(job: RepairJob) -> Self {
+        Self { job }
+    }
+
+    /// Lower onto the plan IR. A survivor co-located with the newcomer
+    /// (in-place repair) is ordered last and stores the result from its own
+    /// fold (`ξ = ψ`), since the IR expresses locality without self-links;
+    /// otherwise the tail fold streams into a `Store` on the newcomer.
+    pub fn plan(&self) -> anyhow::Result<ArchivalPlan> {
+        let j = &self.job;
+        anyhow::ensure!(!j.sources.is_empty(), "repair with no sources");
+        anyhow::ensure!(j.psi.len() == j.sources.len(), "ψ/source arity mismatch");
+        let mut plan = ArchivalPlan::new(j.object, j.width, j.buf_bytes, j.block_bytes);
+        let out_key = BlockKey::coded(j.object, j.lost);
+
+        let local_tail = (0..j.sources.len()).find(|&i| j.sources[i].0 == j.newcomer);
+        let mut order: Vec<usize> =
+            (0..j.sources.len()).filter(|&i| j.sources[i].0 != j.newcomer).collect();
+        if let Some(t) = local_tail {
+            order.push(t);
+        }
+
+        let mut prev: Option<StepId> = None;
+        for &i in &order {
+            let (node, pos) = j.sources[i];
+            let stores_here = local_tail == Some(i);
+            let id = plan.add_step(
+                node,
+                StepKind::Fold {
+                    locals: vec![BlockKey::coded(j.object, pos)],
+                    psi: vec![j.psi[i]],
+                    xi: vec![if stores_here { j.psi[i] } else { 0 }],
+                    store: stores_here.then_some(out_key),
+                },
+            );
+            if let Some(p) = prev {
+                plan.connect(p, 0, id, 0);
+            }
+            prev = Some(id);
+        }
+        if local_tail.is_none() {
+            let store = plan.add_step(j.newcomer, StepKind::Store { key: out_key });
+            plan.connect(prev.expect("nonempty sources"), 0, store, 0);
+        }
+        Ok(plan)
+    }
+}
+
+/// Execute one pipelined repair through the shared engine; returns the
+/// end-to-end repair time.
+pub fn run_pipelined_repair(
+    cluster: &Cluster,
+    backend: &BackendHandle,
+    job: &PipelinedRepairJob,
+) -> anyhow::Result<Duration> {
+    PlanExecutor::new(cluster, backend.clone()).run(&job.plan()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Width;
+    use crate::storage::ObjectId;
+
+    fn job(newcomer: usize) -> PipelinedRepairJob {
+        PipelinedRepairJob::new(RepairJob {
+            object: ObjectId(2),
+            width: Width::W16,
+            lost: 5,
+            newcomer,
+            sources: vec![(0, 0), (1, 1), (2, 2), (3, 3)],
+            psi: vec![2, 4, 6, 8],
+            buf_bytes: 1024,
+            block_bytes: 8192,
+        })
+    }
+
+    #[test]
+    fn plan_is_fold_chain_into_store() {
+        let plan = job(9).plan().unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 5); // 4 folds + 1 store
+        assert_eq!(plan.edges.len(), 4); // a line, no fan-out
+        assert!(plan.steps[..4]
+            .iter()
+            .all(|s| matches!(s.kind, StepKind::Fold { .. })));
+        assert!(matches!(plan.steps[4].kind, StepKind::Store { .. }));
+        assert_eq!(plan.steps[4].node, 9);
+        // intermediate folds relay only (no store, ξ irrelevant)
+        for s in &plan.steps[..4] {
+            match &s.kind {
+                StepKind::Fold { store, .. } => assert!(store.is_none()),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn colocated_survivor_stores_from_its_own_fold() {
+        // newcomer == survivor node 1: it folds last with ξ = ψ and stores;
+        // no separate Store step, no self-link.
+        let plan = job(1).plan().unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 4); // pure fold chain
+        assert_eq!(plan.edges.len(), 3);
+        let tail = plan.steps.last().unwrap();
+        assert_eq!(tail.node, 1);
+        match &tail.kind {
+            StepKind::Fold { psi, xi, store, .. } => {
+                assert_eq!(psi, xi);
+                assert!(store.is_some());
+            }
+            other => panic!("expected fold tail, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,418 @@
+//! Repair scheduler: scan placements for missing coded blocks and drive
+//! their regeneration through the shared engine.
+//!
+//! The scheduler is pure control plane: it surveys survivors
+//! ([`crate::coordinator::decode::survey_coded`] — crashed nodes count as
+//! missing), picks a newcomer per lost block through the executor's
+//! [`ChainPolicy`] ranking (in-place when the holder is alive and only the
+//! block is gone), lowers every repair with the configured planner, and
+//! runs the whole batch through [`PlanExecutor::run_many_results`]. Chain
+//! bindings commit *per repair*: successes rebind immediately, failures
+//! (say a second crash mid-repair) are reported in
+//! [`RepairReport::failed`] and retried by the next pass.
+//!
+//! *Eager* repair fires on any missing block; *lazy* repair defers an
+//! object until it has lost at least `min_missing` blocks — the classical
+//! trade of repair traffic against the risk window, worthwhile because a
+//! deferred object can still serve degraded reads.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use crate::backend::BackendHandle;
+use crate::cluster::{Cluster, NodeId};
+use crate::codes::rapidraid::RapidRaidCode;
+use crate::coordinator::decode::survey_coded;
+use crate::coordinator::engine::{ChainPolicy, PlanExecutor};
+use crate::coordinator::plan::ArchivalPlan;
+use crate::gf::{GfElem, SliceOps};
+use crate::storage::{ObjectId, ReplicaPlacement};
+
+use super::pipeline::PipelinedRepairJob;
+use super::star::StarRepairJob;
+use super::RepairJob;
+
+/// Which planner lowers each single-block repair.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum RepairStrategy {
+    /// k survivors stream to the newcomer (classical baseline).
+    Star,
+    /// Chain of ψ-weighted folds across the survivors (Li et al., 2019).
+    Pipelined,
+}
+
+/// When the scheduler acts on a degraded object.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum RepairTrigger {
+    /// Repair every missing block as soon as it is observed.
+    Eager,
+    /// Defer an object until at least `min_missing` of its blocks are gone.
+    Lazy {
+        /// Missing-block threshold that triggers repair.
+        min_missing: usize,
+    },
+}
+
+/// One committed block move: `object`'s codeword position `position` now
+/// lives on `new_node` (== `old_node` for an in-place repair).
+#[derive(Copy, Clone, Debug)]
+pub struct RepairAction {
+    /// Repaired object.
+    pub object: ObjectId,
+    /// Codeword position regenerated.
+    pub position: usize,
+    /// Chain node that held (or still holds, crashed) the lost block.
+    pub old_node: NodeId,
+    /// Node now holding the regenerated block.
+    pub new_node: NodeId,
+}
+
+/// Outcome of one scheduler pass.
+#[derive(Debug, Default)]
+pub struct RepairReport {
+    /// Every successfully repaired block, in dispatch order.
+    pub actions: Vec<RepairAction>,
+    /// Per-repair end-to-end times (same order as `actions`).
+    pub times: Vec<Duration>,
+    /// Objects left degraded by a lazy trigger (below threshold).
+    pub deferred: Vec<ObjectId>,
+    /// Repairs whose plan failed at execution (e.g. a second crash
+    /// mid-stream), with the error text; their chains were NOT rebound and
+    /// a later pass will retry them.
+    pub failed: Vec<(RepairAction, String)>,
+    /// Objects the pass could not even plan a repair for (no surviving
+    /// blocks, no independent k-subset, no alive newcomer), with the error
+    /// text. They never abort the pass: the other objects' repairs still
+    /// run.
+    pub unschedulable: Vec<(ObjectId, String)>,
+}
+
+/// Drives failure repair over a set of placements.
+pub struct RepairScheduler {
+    /// Planner used for every repair in a pass.
+    pub strategy: RepairStrategy,
+    /// Eager vs threshold-triggered repair.
+    pub trigger: RepairTrigger,
+    /// Bound on concurrently running repair plans
+    /// (`PlanExecutor::run_many_bounded`).
+    pub max_concurrent: usize,
+}
+
+impl RepairScheduler {
+    /// Scheduler with the given strategy/trigger and a default concurrency
+    /// bound of 4 repairs at a time.
+    pub fn new(strategy: RepairStrategy, trigger: RepairTrigger) -> Self {
+        Self {
+            strategy,
+            trigger,
+            max_concurrent: 4,
+        }
+    }
+
+    /// Override the concurrent-repair bound.
+    pub fn with_max_concurrent(mut self, max_concurrent: usize) -> Self {
+        self.max_concurrent = max_concurrent.max(1);
+        self
+    }
+
+    /// One scheduler pass: scan `placements` for missing coded blocks,
+    /// repair what the trigger selects, and rebind each successfully
+    /// repaired position in its placement's chain. Per-object planning
+    /// failures (no survivors / no alive newcomer / unrepairable block)
+    /// land in [`RepairReport::unschedulable`] and per-repair execution
+    /// failures in [`RepairReport::failed`] — neither aborts the pass, so
+    /// one doomed object can never starve the others of repair.
+    pub fn repair<F: GfElem + SliceOps>(
+        &self,
+        cluster: &Cluster,
+        code: &RapidRaidCode<F>,
+        placements: &mut [ReplicaPlacement],
+        backend: &BackendHandle,
+        policy: &dyn ChainPolicy,
+        buf_bytes: usize,
+    ) -> anyhow::Result<RepairReport> {
+        let mut report = RepairReport::default();
+        let mut plans: Vec<ArchivalPlan> = Vec::new();
+        let mut pending: Vec<(usize, RepairAction)> = Vec::new();
+
+        for (pi, p) in placements.iter().enumerate() {
+            let (avail, block_bytes) = survey_coded(cluster, &p.chain, p.object);
+            let missing: Vec<usize> = (0..p.n).filter(|pos| !avail.contains(pos)).collect();
+            if missing.is_empty() {
+                continue;
+            }
+            if let RepairTrigger::Lazy { min_missing } = self.trigger {
+                if missing.len() < min_missing {
+                    report.deferred.push(p.object);
+                    continue;
+                }
+            }
+            match plan_object(
+                cluster, code, policy, self.strategy, p, &avail, &missing, buf_bytes,
+                block_bytes,
+            ) {
+                Ok(planned) => {
+                    for (plan, action) in planned {
+                        plans.push(plan);
+                        pending.push((pi, action));
+                    }
+                }
+                Err(e) => report.unschedulable.push((p.object, format!("{e:#}"))),
+            }
+        }
+
+        // Execute the batch and commit per plan: a repair that failed (a
+        // second crash mid-stream, say) must not discard the blocks the
+        // other repairs already regenerated, so successes rebind their
+        // chains and failures are reported for the next pass to retry.
+        let exec = PlanExecutor::new(cluster, backend.clone());
+        let outcomes = exec.run_many_results(&plans, self.max_concurrent)?;
+        for ((pi, action), outcome) in pending.into_iter().zip(outcomes) {
+            match outcome {
+                Ok(t) => {
+                    placements[pi].chain[action.position] = action.new_node;
+                    report.actions.push(action);
+                    report.times.push(t);
+                }
+                Err(e) => report.failed.push((action, format!("{e:#}"))),
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Plan every missing-block repair of one object: choose a newcomer per
+/// lost block (in place when the holder survived, otherwise the policy's
+/// best alive off-chain node) and lower it with `strategy`. Any error here
+/// makes the *object* unschedulable; it never aborts the pass.
+#[allow(clippy::too_many_arguments)]
+fn plan_object<F: GfElem + SliceOps>(
+    cluster: &Cluster,
+    code: &RapidRaidCode<F>,
+    policy: &dyn ChainPolicy,
+    strategy: RepairStrategy,
+    p: &ReplicaPlacement,
+    avail: &[usize],
+    missing: &[usize],
+    buf_bytes: usize,
+    block_bytes: usize,
+) -> anyhow::Result<Vec<(ArchivalPlan, RepairAction)>> {
+    anyhow::ensure!(
+        block_bytes > 0,
+        "object {}: no surviving coded blocks to repair from",
+        p.object
+    );
+    // Nodes that will hold a block of this object post-repair: survivors
+    // keep theirs, each repair claims one more.
+    let mut taken: HashSet<NodeId> = avail.iter().map(|&pos| p.chain[pos]).collect();
+    let mut planned = Vec::with_capacity(missing.len());
+    for &pos in missing {
+        let old = p.chain[pos];
+        let newcomer = if !cluster.is_failed(old) && !taken.contains(&old) {
+            // the holder survived, only its block is gone: in place
+            old
+        } else {
+            let candidates: Vec<NodeId> = cluster
+                .alive_nodes()
+                .into_iter()
+                .filter(|n| !taken.contains(n))
+                .collect();
+            anyhow::ensure!(
+                !candidates.is_empty(),
+                "object {}: no alive newcomer for block {pos}",
+                p.object
+            );
+            policy.rank(cluster, &candidates)[0]
+        };
+        taken.insert(newcomer);
+        let job = RepairJob::from_code(
+            code, p.object, &p.chain, pos, newcomer, avail, buf_bytes, block_bytes,
+        )?;
+        let plan = match strategy {
+            RepairStrategy::Star => StarRepairJob::new(job).plan()?,
+            RepairStrategy::Pipelined => PipelinedRepairJob::new(job).plan()?,
+        };
+        planned.push((
+            plan,
+            RepairAction {
+                object: p.object,
+                position: pos,
+                old_node: old,
+                new_node: newcomer,
+            },
+        ));
+    }
+    Ok(planned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendHandle, NativeBackend};
+    use crate::cluster::ClusterSpec;
+    use crate::coordinator::engine::{CongestionAwarePolicy, FifoPolicy};
+    use crate::coordinator::ingest::ingest_object;
+    use crate::coordinator::pipeline::{archive_pipeline, PipelineJob};
+    use crate::coordinator::reconstruct;
+    use crate::gf::Gf256;
+    use crate::storage::BlockKey;
+    use std::sync::Arc;
+
+    fn archived(
+        nodes: usize,
+        n: usize,
+        k: usize,
+        block: usize,
+        object: ObjectId,
+    ) -> (Cluster, RapidRaidCode<Gf256>, ReplicaPlacement, Vec<Vec<u8>>, BackendHandle) {
+        let cluster = Cluster::start(ClusterSpec::test(nodes));
+        let placement = ReplicaPlacement::new(object, k, (0..n).collect()).unwrap();
+        let blocks = ingest_object(&cluster, &placement, block).unwrap();
+        let code = RapidRaidCode::<Gf256>::with_seed(n, k, 7).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let job = PipelineJob::from_code(&code, &placement, 2048, block).unwrap();
+        archive_pipeline(&cluster, &backend, &job).unwrap();
+        (cluster, code, placement, blocks, backend)
+    }
+
+    #[test]
+    fn eager_pass_repairs_crashed_node_onto_newcomer() {
+        let object = ObjectId(300);
+        let (cluster, code, placement, blocks, backend) = archived(10, 8, 4, 8 * 1024, object);
+        let key = BlockKey::coded(object, 3);
+        let original = (*cluster.node(3).peek(key).unwrap().unwrap()).clone();
+        cluster.fail_node(3);
+
+        let mut placements = [placement];
+        let sched = RepairScheduler::new(RepairStrategy::Pipelined, RepairTrigger::Eager);
+        let report = sched
+            .repair(&cluster, &code, &mut placements, &backend, &FifoPolicy, 2048)
+            .unwrap();
+        assert_eq!(report.actions.len(), 1);
+        assert_eq!(report.times.len(), 1);
+        assert!(report.failed.is_empty(), "{:?}", report.failed);
+        let a = report.actions[0];
+        assert_eq!((a.object, a.position, a.old_node), (object, 3, 3));
+        assert!(a.new_node == 8 || a.new_node == 9, "newcomer off-chain: {a:?}");
+        assert_eq!(placements[0].chain[3], a.new_node);
+        // byte-identical regeneration on the newcomer
+        let rebuilt = cluster
+            .node(a.new_node)
+            .peek(BlockKey::coded(object, 3))
+            .unwrap()
+            .unwrap();
+        assert_eq!(*rebuilt, original);
+        // and the rebound chain decodes the object
+        let rec = reconstruct(&cluster, &code, &placements[0].chain, object, &backend).unwrap();
+        assert_eq!(rec, blocks);
+    }
+
+    #[test]
+    fn bitrot_on_alive_node_is_repaired_in_place() {
+        let object = ObjectId(301);
+        let (cluster, code, placement, _blocks, backend) = archived(8, 8, 4, 4 * 1024, object);
+        let key = BlockKey::coded(object, 5);
+        let original = (*cluster.node(5).peek(key).unwrap().unwrap()).clone();
+        cluster.node(5).delete(key).unwrap();
+
+        let mut placements = [placement];
+        let sched = RepairScheduler::new(RepairStrategy::Star, RepairTrigger::Eager);
+        let report = sched
+            .repair(&cluster, &code, &mut placements, &backend, &FifoPolicy, 1024)
+            .unwrap();
+        assert_eq!(report.actions.len(), 1);
+        assert_eq!(report.actions[0].new_node, 5, "in-place repair expected");
+        assert_eq!(placements[0].chain[5], 5);
+        let rebuilt = cluster.node(5).peek(BlockKey::coded(object, 5)).unwrap().unwrap();
+        assert_eq!(*rebuilt, original);
+    }
+
+    #[test]
+    fn lazy_trigger_defers_below_threshold_then_fires() {
+        let object = ObjectId(302);
+        let (cluster, code, placement, _blocks, backend) = archived(12, 8, 4, 4 * 1024, object);
+        cluster.fail_node(1);
+
+        let mut placements = [placement];
+        let sched = RepairScheduler::new(
+            RepairStrategy::Pipelined,
+            RepairTrigger::Lazy { min_missing: 2 },
+        );
+        let report = sched
+            .repair(&cluster, &code, &mut placements, &backend, &FifoPolicy, 1024)
+            .unwrap();
+        assert!(report.actions.is_empty());
+        assert_eq!(report.deferred, vec![object]);
+        assert_eq!(placements[0].chain[1], 1, "deferred chain must not move");
+
+        cluster.fail_node(6);
+        let report = sched
+            .repair(&cluster, &code, &mut placements, &backend, &FifoPolicy, 1024)
+            .unwrap();
+        assert_eq!(report.actions.len(), 2);
+        assert!(report.deferred.is_empty());
+        for a in &report.actions {
+            assert!(!cluster.is_failed(a.new_node));
+            assert!(cluster
+                .node(a.new_node)
+                .peek(BlockKey::coded(object, a.position))
+                .unwrap()
+                .is_some());
+        }
+    }
+
+    #[test]
+    fn newcomer_ranking_avoids_congested_spare() {
+        let object = ObjectId(303);
+        let (cluster, code, placement, _blocks, backend) = archived(10, 8, 4, 4 * 1024, object);
+        // two spares: congest node 8 so the ranking prefers node 9
+        cluster.congest(8, &crate::cluster::CongestionSpec::mild());
+        cluster.fail_node(0);
+
+        let mut placements = [placement];
+        let sched = RepairScheduler::new(RepairStrategy::Star, RepairTrigger::Eager);
+        let report = sched
+            .repair(
+                &cluster,
+                &code,
+                &mut placements,
+                &backend,
+                &CongestionAwarePolicy,
+                1024,
+            )
+            .unwrap();
+        assert_eq!(report.actions[0].new_node, 9, "{:?}", report.actions);
+    }
+
+    #[test]
+    fn unrepairable_object_is_reported_without_starving_others() {
+        let doomed = ObjectId(304);
+        let healthy = ObjectId(305);
+        let (cluster, code, doomed_placement, _blocks, backend) =
+            archived(10, 8, 4, 4 * 1024, doomed);
+        // second object on the same cluster, one repairable missing block
+        let healthy_placement = ReplicaPlacement::new(healthy, 4, (0..8).collect()).unwrap();
+        ingest_object(&cluster, &healthy_placement, 4 * 1024).unwrap();
+        let job = PipelineJob::from_code(&code, &healthy_placement, 2048, 4 * 1024).unwrap();
+        archive_pipeline(&cluster, &backend, &job).unwrap();
+        cluster.node(7).delete(BlockKey::coded(healthy, 7)).unwrap();
+        // lose more than n-k blocks of the doomed object: unrepairable
+        for pos in 0..6 {
+            cluster.node(pos).delete(BlockKey::coded(doomed, pos)).unwrap();
+        }
+
+        let mut placements = [doomed_placement, healthy_placement];
+        let sched = RepairScheduler::new(RepairStrategy::Star, RepairTrigger::Eager);
+        let report = sched
+            .repair(&cluster, &code, &mut placements, &backend, &FifoPolicy, 1024)
+            .unwrap();
+        // the doomed object is reported, the healthy one still repaired
+        assert_eq!(report.unschedulable.len(), 1);
+        assert_eq!(report.unschedulable[0].0, doomed);
+        let (_, reason) = &report.unschedulable[0];
+        assert!(reason.contains("unrepairable"), "{reason}");
+        assert_eq!(report.actions.len(), 1);
+        assert_eq!(report.actions[0].object, healthy);
+        assert!(cluster.node(7).peek(BlockKey::coded(healthy, 7)).unwrap().is_some());
+    }
+}

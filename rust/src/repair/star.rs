@@ -1,0 +1,129 @@
+//! Star repair — the classical single-block repair baseline.
+//!
+//! All k survivors stream their coded block to the newcomer, which applies
+//! the 1×k repair row ψ as one streamed [`StepKind::Gemm`] and stores the
+//! regenerated block locally. The newcomer's download NIC serializes the k
+//! arrivals, so `T_star ≈ k·τ_block` — the repair-traffic cost the
+//! pipelined planner exists to beat.
+
+use std::time::Duration;
+
+use crate::backend::BackendHandle;
+use crate::cluster::Cluster;
+use crate::coordinator::engine::PlanExecutor;
+use crate::coordinator::plan::{ArchivalPlan, GemmInput, GemmOutput, StepKind};
+use crate::storage::BlockKey;
+
+use super::RepairJob;
+
+/// Atomic single-block repair: k `Source` streams into one 1×k `Gemm` on
+/// the newcomer (stored in place).
+#[derive(Clone, Debug)]
+pub struct StarRepairJob {
+    /// The bound repair.
+    pub job: RepairJob,
+}
+
+impl StarRepairJob {
+    /// Wrap a bound repair in the star lowering.
+    pub fn new(job: RepairJob) -> Self {
+        Self { job }
+    }
+
+    /// Lower onto the plan IR: one gemm on the newcomer whose row is ψ;
+    /// every remote survivor contributes a `Source` stream, a survivor
+    /// co-located with the newcomer (in-place repair) is read locally.
+    pub fn plan(&self) -> anyhow::Result<ArchivalPlan> {
+        let j = &self.job;
+        anyhow::ensure!(!j.sources.is_empty(), "repair with no sources");
+        anyhow::ensure!(j.psi.len() == j.sources.len(), "ψ/source arity mismatch");
+        let mut plan = ArchivalPlan::new(j.object, j.width, j.buf_bytes, j.block_bytes);
+        let inputs: Vec<GemmInput> = j
+            .sources
+            .iter()
+            .map(|&(node, pos)| {
+                if node == j.newcomer {
+                    GemmInput::Local(BlockKey::coded(j.object, pos))
+                } else {
+                    GemmInput::Stream
+                }
+            })
+            .collect();
+        let gemm = plan.add_step(
+            j.newcomer,
+            StepKind::Gemm {
+                rows: vec![j.psi.clone()],
+                inputs,
+                outputs: vec![GemmOutput::Store(BlockKey::coded(j.object, j.lost))],
+            },
+        );
+        for (i, &(node, pos)) in j.sources.iter().enumerate() {
+            if node != j.newcomer {
+                let s = plan.add_step(
+                    node,
+                    StepKind::Source {
+                        key: BlockKey::coded(j.object, pos),
+                    },
+                );
+                plan.connect(s, 0, gemm, i);
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Execute one star repair through the shared engine; returns the
+/// end-to-end repair time.
+pub fn run_star_repair(
+    cluster: &Cluster,
+    backend: &BackendHandle,
+    job: &StarRepairJob,
+) -> anyhow::Result<Duration> {
+    PlanExecutor::new(cluster, backend.clone()).run(&job.plan()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Width;
+    use crate::storage::ObjectId;
+
+    fn job(newcomer: usize) -> StarRepairJob {
+        StarRepairJob::new(RepairJob {
+            object: ObjectId(1),
+            width: Width::W8,
+            lost: 3,
+            newcomer,
+            sources: vec![(0, 0), (1, 1), (2, 2)],
+            psi: vec![5, 9, 11],
+            buf_bytes: 1024,
+            block_bytes: 4096,
+        })
+    }
+
+    #[test]
+    fn plan_is_k_sources_into_one_gemm() {
+        let plan = job(7).plan().unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 4); // 3 sources + 1 gemm
+        assert_eq!(plan.edges.len(), 3);
+        assert!(matches!(plan.steps[0].kind, StepKind::Gemm { .. }));
+        assert_eq!(plan.steps[0].node, 7);
+    }
+
+    #[test]
+    fn colocated_survivor_becomes_local_input() {
+        // newcomer == survivor node 1: its block is read locally, 2 streams
+        let plan = job(1).plan().unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 3); // 2 sources + 1 gemm
+        assert_eq!(plan.edges.len(), 2);
+        match &plan.steps[0].kind {
+            StepKind::Gemm { inputs, .. } => {
+                assert!(matches!(inputs[1], GemmInput::Local(_)));
+                assert!(matches!(inputs[0], GemmInput::Stream));
+            }
+            other => panic!("expected gemm, got {other:?}"),
+        }
+    }
+}

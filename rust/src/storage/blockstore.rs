@@ -1,6 +1,7 @@
 //! In-memory block store — each simulated storage node owns one.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::object::BlockKey;
@@ -25,6 +26,21 @@ impl BlockStore {
         self.inner.lock().unwrap().insert(key, Arc::new(data));
     }
 
+    /// Insert unless `cancelled` is set, checking the flag *under the store
+    /// lock*; returns whether the block was stored. Crash injection sets
+    /// the flag before wiping the store (also under the lock), so a
+    /// data-plane worker finishing concurrently with `fail_node` can never
+    /// leave a block on a crashed node: either it observes the flag here,
+    /// or its write is erased by the wipe ordered after it.
+    pub fn put_unless(&self, key: BlockKey, data: Vec<u8>, cancelled: &AtomicBool) -> bool {
+        let mut map = self.inner.lock().unwrap();
+        if cancelled.load(Ordering::SeqCst) {
+            return false;
+        }
+        map.insert(key, Arc::new(data));
+        true
+    }
+
     /// Fetch a block (shared, zero-copy).
     pub fn get(&self, key: &BlockKey) -> Option<Arc<Vec<u8>>> {
         self.inner.lock().unwrap().get(key).cloned()
@@ -33,6 +49,12 @@ impl BlockStore {
     /// Remove a block, returning whether it existed.
     pub fn delete(&self, key: &BlockKey) -> bool {
         self.inner.lock().unwrap().remove(key).is_some()
+    }
+
+    /// Drop every block (crash injection: the simulated disk dies with the
+    /// node).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
     }
 
     /// Whether the block exists.
@@ -79,6 +101,19 @@ mod tests {
         assert_eq!(s.used_bytes(), 3);
         assert!(s.delete(&k));
         assert!(!s.delete(&k));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn put_unless_respects_cancel_flag_and_clear_empties() {
+        let s = BlockStore::new();
+        let k = BlockKey::source(ObjectId(3), 0);
+        let flag = AtomicBool::new(false);
+        assert!(s.put_unless(k, vec![1], &flag));
+        flag.store(true, Ordering::SeqCst);
+        assert!(!s.put_unless(k, vec![2], &flag));
+        assert_eq!(*s.get(&k).unwrap(), vec![1]);
+        s.clear();
         assert!(s.is_empty());
     }
 

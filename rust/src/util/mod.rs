@@ -5,5 +5,7 @@
 pub mod bench;
 pub mod prop;
 pub mod rng;
+pub mod watchdog;
 
 pub use rng::SplitMix64;
+pub use watchdog::with_timeout;

@@ -1,0 +1,52 @@
+//! Test watchdog: bound an operation's wall-clock time.
+//!
+//! A hang in an error path is itself a bug this repo's failure-injection
+//! tests want caught, so every integration test wraps risky operations in
+//! [`with_timeout`] instead of trusting the harness' global timeout.
+
+use std::time::Duration;
+
+/// Run `f` on a fresh thread and wait at most `secs` for it: panics with a
+/// watchdog message when the deadline passes (the worker thread is leaked —
+/// acceptable in a failing test), and propagates a panic inside `f` as a
+/// panic here.
+pub fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => v,
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("operation hung (watchdog fired after {secs}s)")
+        }
+        // The worker dropped its sender without a value: f panicked.
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            panic!("operation panicked under the watchdog")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_value_in_time() {
+        assert_eq!(with_timeout(5, || 41 + 1), 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "watchdog fired")]
+    fn fires_on_hang() {
+        with_timeout(1, || loop {
+            std::thread::sleep(Duration::from_millis(50));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "operation panicked")]
+    fn propagates_inner_panic() {
+        with_timeout(5, || panic!("inner"));
+    }
+}

@@ -1,0 +1,36 @@
+//! Shared fixture for the integration tests.
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::cluster::{Cluster, ClusterSpec};
+use rapidraid::codes::rapidraid::RapidRaidCode;
+use rapidraid::coordinator::{archive_pipeline, ingest_object, PipelineJob};
+use rapidraid::gf::{GfElem, SliceOps};
+use rapidraid::storage::{ObjectId, ReplicaPlacement};
+
+/// Ingest + pipeline-archive an `(n, k)` seed-`seed` object on nodes 0..n
+/// of a fresh `nodes`-node test cluster running at `bytes_per_sec`
+/// (nodes beyond n are spares for repair newcomers).
+#[allow(dead_code, clippy::too_many_arguments)] // each test binary uses a subset
+pub fn archived<F: GfElem + SliceOps>(
+    nodes: usize,
+    n: usize,
+    k: usize,
+    seed: u64,
+    object: ObjectId,
+    block: usize,
+    buf: usize,
+    bytes_per_sec: f64,
+) -> (Cluster, RapidRaidCode<F>, ReplicaPlacement, BackendHandle) {
+    let mut spec = ClusterSpec::test(nodes);
+    spec.bytes_per_sec = bytes_per_sec;
+    let cluster = Cluster::start(spec);
+    let placement = ReplicaPlacement::new(object, k, (0..n).collect()).unwrap();
+    ingest_object(&cluster, &placement, block).unwrap();
+    let code = RapidRaidCode::<F>::with_seed(n, k, seed).unwrap();
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let job = PipelineJob::from_code(&code, &placement, buf, block).unwrap();
+    archive_pipeline(&cluster, &backend, &job).unwrap();
+    (cluster, code, placement, backend)
+}

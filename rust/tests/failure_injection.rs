@@ -13,24 +13,17 @@ use rapidraid::coordinator::{
     archive_classical, archive_pipeline, ingest_object, reconstruct, ClassicalJob, PipelineJob,
 };
 use rapidraid::gf::{Gf256, GfElem};
+use rapidraid::repair::{
+    run_pipelined_repair, PipelinedRepairJob, RepairJob, RepairScheduler, RepairStrategy,
+    RepairTrigger,
+};
 use rapidraid::storage::{BlockKey, ObjectId, ReplicaPlacement};
+use rapidraid::util::with_timeout;
+
+mod common;
 
 fn native() -> BackendHandle {
     Arc::new(NativeBackend::new())
-}
-
-/// Run `f` with a watchdog: panics if it takes longer than `secs` (a hang
-/// in error paths is itself a bug we want caught).
-fn with_timeout<T: Send + 'static>(
-    secs: u64,
-    f: impl FnOnce() -> T + Send + 'static,
-) -> T {
-    let (tx, rx) = std::sync::mpsc::channel();
-    std::thread::spawn(move || {
-        let _ = tx.send(f());
-    });
-    rx.recv_timeout(Duration::from_secs(secs))
-        .expect("operation hung (watchdog fired)")
 }
 
 #[test]
@@ -143,6 +136,102 @@ fn reconstruct_fails_then_succeeds_after_block_returns() {
         .unwrap();
     let rec = reconstruct(&cluster, &code, &placement.chain, object, &backend).unwrap();
     assert_eq!(rec, blocks);
+}
+
+/// Archive an (8,4) object on the first 8 nodes of an `nodes`-node test
+/// cluster (shared fixture; spares beyond node 7 serve as newcomers).
+fn archived_84(
+    nodes: usize,
+    object: ObjectId,
+    block: usize,
+    bytes_per_sec: f64,
+) -> (Cluster, RapidRaidCode<Gf256>, ReplicaPlacement, BackendHandle) {
+    common::archived::<Gf256>(nodes, 8, 4, 7, object, block, 4096, bytes_per_sec)
+}
+
+#[test]
+fn second_failure_before_repair_refuses_link_lowering() {
+    with_timeout(30, || {
+        let object = ObjectId(20);
+        let (cluster, code, placement, backend) = archived_84(9, object, 16 * 1024, 1e9);
+        cluster.fail_node(2);
+        let (avail, block_bytes) =
+            rapidraid::coordinator::survey_coded(&cluster, &placement.chain, object);
+        let job = PipelinedRepairJob::new(
+            RepairJob::from_code(&code, object, &placement.chain, 2, 8, &avail, 2048, block_bytes)
+                .unwrap(),
+        );
+        // a survivor the plan depends on dies between planning and execution:
+        // the executor must refuse to lower the plan, not hang
+        let (victim, _) = job.job.sources[0];
+        cluster.fail_node(victim);
+        let err = run_pipelined_repair(&cluster, &backend, &job).unwrap_err();
+        assert!(err.to_string().contains("failed"), "unexpected error: {err}");
+    });
+}
+
+#[test]
+fn second_failure_mid_repair_errors_cleanly() {
+    with_timeout(60, || {
+        // slow NICs (10 MB/s, 2 MiB blocks → ≥ ~840 ms of repair streaming)
+        // so a survivor crash injected shortly after dispatch lands while
+        // frames are still in flight; the guarded links must break the
+        // stream with an error instead of hanging the executor.
+        let object = ObjectId(21);
+        let (cluster, code, placement, backend) = archived_84(9, object, 2 << 20, 10e6);
+        cluster.fail_node(3);
+        let (avail, block_bytes) =
+            rapidraid::coordinator::survey_coded(&cluster, &placement.chain, object);
+        let job = PipelinedRepairJob::new(
+            RepairJob::from_code(&code, object, &placement.chain, 3, 8, &avail, 65536, block_bytes)
+                .unwrap(),
+        );
+        let (victim, _) = job.job.sources[0];
+        let result = std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(60));
+                cluster.fail_node(victim);
+            });
+            run_pipelined_repair(&cluster, &backend, &job)
+        });
+        let err = result.expect_err("repair must fail when a survivor dies mid-stream");
+        assert!(err.to_string().contains("failed") || err.to_string().contains("dropped"),
+            "unexpected error: {err}");
+        // the newcomer must not claim a complete repaired block
+        assert!(cluster.node(8).peek(BlockKey::coded(object, 3)).unwrap().is_none());
+    });
+}
+
+#[test]
+fn scheduler_pass_after_crash_restores_decodability() {
+    with_timeout(60, || {
+        let object = ObjectId(22);
+        let (cluster, code, placement, backend) = archived_84(10, object, 16 * 1024, 1e9);
+        let blocks: Vec<Vec<u8>> = (0..4)
+            .map(|i| rapidraid::coordinator::object_bytes(object, i, 16 * 1024))
+            .collect();
+        cluster.fail_node(1);
+        // degraded read first: reconstruct works around the crash
+        let rec = reconstruct(&cluster, &code, &placement.chain, object, &backend).unwrap();
+        assert_eq!(rec, blocks);
+        // then an eager scheduler pass heals the placement
+        let mut placements = [placement];
+        let sched = RepairScheduler::new(RepairStrategy::Pipelined, RepairTrigger::Eager);
+        let report = sched
+            .repair(
+                &cluster,
+                &code,
+                &mut placements,
+                &backend,
+                &rapidraid::coordinator::FifoPolicy,
+                4096,
+            )
+            .unwrap();
+        assert_eq!(report.actions.len(), 1);
+        assert_ne!(placements[0].chain[1], 1);
+        let rec = reconstruct(&cluster, &code, &placements[0].chain, object, &backend).unwrap();
+        assert_eq!(rec, blocks);
+    });
 }
 
 #[test]
