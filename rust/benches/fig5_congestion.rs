@@ -4,7 +4,9 @@
 //! single-object (5a) and 16-concurrent-object (5b) archival, CEC vs RR8.
 //!
 //! Run: `cargo bench --bench fig5_congestion`
-//! Env: BLOCK_MIB (default 1), SAMPLES (default 3), MAX_CONGESTED (default 8).
+//! Env: PRESET (default tpc; `tpc-sim` runs on the discrete-event
+//! SimClock in wall-clock seconds), BLOCK_MIB (default 1), SAMPLES
+//! (default 3), MAX_CONGESTED (default 8).
 
 use std::sync::Arc;
 
@@ -28,14 +30,24 @@ fn main() {
         .ok()
         .and_then(|v| v.parse::<usize>().ok())
         .unwrap_or(8);
+    let preset = std::env::var("PRESET").unwrap_or_else(|_| "tpc".to_string());
     let backend: BackendHandle = Arc::new(NativeBackend::new());
     let mut out = std::io::stdout().lock();
 
     // Fig. 5a: single object
-    fig5_congestion(&backend, max_congested, 1, block, samples, &mut out).expect("fig5a");
+    fig5_congestion(&backend, &preset, max_congested, 1, block, samples, &mut out)
+        .expect("fig5a");
     println!();
     // Fig. 5b: 16 concurrent objects (quarter-size blocks + coarser sweep
     // to bound wall time; the per-object contention shape is preserved)
-    fig5_congestion(&backend, max_congested.min(4), 16, block / 4, 1.max(samples / 3), &mut out)
-        .expect("fig5b");
+    fig5_congestion(
+        &backend,
+        &preset,
+        max_congested.min(4),
+        16,
+        block / 4,
+        1.max(samples / 3),
+        &mut out,
+    )
+    .expect("fig5b");
 }

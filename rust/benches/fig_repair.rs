@@ -2,11 +2,13 @@
 //! pipelined (Li et al. 2019) — under the paper's netem congestion sweep.
 //!
 //! Run: `cargo bench --bench fig_repair`
-//! Env: BLOCK_MIB (default 16), SAMPLES (default 3), MAX_CONGESTED
-//! (default 4). CI runs this in smoke mode (BLOCK_MIB=1, SAMPLES=1,
-//! MAX_CONGESTED=1) purely to keep the repair path from bitrotting; the
-//! star-vs-pipelined comparison is only meaningful at paper-faithful block
-//! sizes where bandwidth, not the netem latency, dominates.
+//! Env: PRESET (default tpc; `tpc-sim` runs the identical sweep on the
+//! discrete-event SimClock in wall-clock seconds), BLOCK_MIB (default 16),
+//! SAMPLES (default 3), MAX_CONGESTED (default 4). CI runs this in smoke
+//! mode (BLOCK_MIB=1, SAMPLES=1, MAX_CONGESTED=1) purely to keep the
+//! repair path from bitrotting; the star-vs-pipelined comparison is only
+//! meaningful at paper-faithful block sizes where bandwidth, not the netem
+//! latency, dominates.
 
 use std::sync::Arc;
 
@@ -14,6 +16,7 @@ use rapidraid::backend::{BackendHandle, NativeBackend};
 use rapidraid::bench_scenarios::fig_repair;
 
 fn main() {
+    let preset = std::env::var("PRESET").unwrap_or_else(|_| "tpc".to_string());
     let block = std::env::var("BLOCK_MIB")
         .ok()
         .and_then(|v| v.parse::<usize>().ok())
@@ -30,6 +33,7 @@ fn main() {
     let backend: BackendHandle = Arc::new(NativeBackend::new());
     fig_repair(
         &backend,
+        &preset,
         max_congested,
         block,
         samples,

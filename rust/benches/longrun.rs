@@ -1,0 +1,47 @@
+//! Bench: long-run crash/revive/congestion trace on the discrete-event
+//! SimClock — thousands of virtual seconds of 50-node cluster life per
+//! wall-clock second.
+//!
+//! Run: `cargo bench --bench longrun`
+//! Env: VIRTUAL_SECS (default 1000), EPOCH_SECS (default 10), NODES
+//! (default 50), OBJECTS (default 8), SEED, SMOKE=1 (one guaranteed
+//! crash+repair round — the CI configuration).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::workload::{run_long_run, LongRunConfig};
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let mut cfg = if std::env::var("SMOKE").is_ok() {
+        LongRunConfig::smoke()
+    } else {
+        LongRunConfig::paper_scale()
+    };
+    cfg.virtual_secs = env_u64("VIRTUAL_SECS", cfg.virtual_secs);
+    cfg.epoch_secs = env_u64("EPOCH_SECS", cfg.epoch_secs).max(1);
+    cfg.nodes = env_u64("NODES", cfg.nodes as u64) as usize;
+    cfg.objects = env_u64("OBJECTS", cfg.objects as u64) as usize;
+    cfg.seed = env_u64("SEED", cfg.seed);
+
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let wall = Instant::now();
+    let report =
+        run_long_run(&cfg, &backend, Some(&mut std::io::stdout().lock())).expect("longrun");
+    let wall = wall.elapsed();
+    println!(
+        "# wall {:.3}s for {:.0}s virtual ({:.0}x time compression)",
+        wall.as_secs_f64(),
+        report.virtual_elapsed.as_secs_f64(),
+        report.virtual_elapsed.as_secs_f64() / wall.as_secs_f64().max(1e-9)
+    );
+    assert!(report.all_decodable(), "data loss: {}", report.summary());
+}

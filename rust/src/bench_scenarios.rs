@@ -14,9 +14,10 @@
 //!   pipelined (Li et al. 2019), under the same netem congestion sweep.
 
 use std::io::Write;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::backend::{BackendHandle, Width};
+use crate::clock::{Clock, RealClock};
 use crate::cluster::{Cluster, ClusterSpec, CongestionSpec};
 use crate::codes::rapidraid::RapidRaidCode;
 use crate::codes::ClassicalCode;
@@ -81,8 +82,11 @@ pub fn rr16_code() -> RapidRaidCode<Gf65536> {
 /// the paper's Table II methodology ("the execution of the n = 16 nodes
 /// occur in a single node, avoiding all the network I/O").
 pub fn cpu_encode_once(backend: &BackendHandle, imp: Impl, object: &[Vec<u8>]) -> Duration {
+    // Table II measures real compute, so this path is pinned to a wall
+    // clock regardless of any simulation preset.
+    let clock = RealClock::new();
     let block_bytes = object[0].len();
-    let t0 = Instant::now();
+    let t0 = clock.now();
     match imp {
         Impl::Cec => {
             let rows = cec_parity_rows();
@@ -99,7 +103,7 @@ pub fn cpu_encode_once(backend: &BackendHandle, imp: Impl, object: &[Vec<u8>]) -
         Impl::Rr8 => cpu_pipeline_chain(backend, Width::W8, &rr8_schedule(), object),
         Impl::Rr16 => cpu_pipeline_chain(backend, Width::W16, &rr16_schedule(), object),
     }
-    t0.elapsed()
+    clock.now().saturating_sub(t0)
 }
 
 fn rr8_schedule() -> Vec<(Vec<usize>, Vec<u32>, Vec<u32>)> {
@@ -193,13 +197,23 @@ pub fn table2_cpu(
 // Fig. 4 — cluster coding times
 // ---------------------------------------------------------------------------
 
+/// Build a cluster for a preset name. A `-sim` suffix (e.g. `tpc-sim`)
+/// runs the identical topology on a discrete-event `SimClock`: reported
+/// times are then *virtual* network times (compute contributes no virtual
+/// time), the run costs milliseconds of wall clock, and a paper-scale
+/// sweep becomes CI-affordable.
 fn cluster_for(preset: &str, nodes: usize) -> anyhow::Result<Cluster> {
-    Ok(match preset {
-        "tpc" => Cluster::start(ClusterSpec::tpc(nodes)),
-        "ec2" => Cluster::start(ClusterSpec::ec2(nodes)),
-        "test" => Cluster::start(ClusterSpec::test(nodes)),
-        other => anyhow::bail!("unknown preset {other} (tpc|ec2|test)"),
-    })
+    let (base, sim) = match preset.strip_suffix("-sim") {
+        Some(b) => (b, true),
+        None => (preset, false),
+    };
+    let spec = match base {
+        "tpc" => ClusterSpec::tpc(nodes),
+        "ec2" => ClusterSpec::ec2(nodes),
+        "test" => ClusterSpec::test(nodes),
+        other => anyhow::bail!("unknown preset {other} (tpc|ec2|test, optional -sim suffix)"),
+    };
+    Ok(Cluster::start(if sim { spec.sim() } else { spec }))
 }
 
 /// Build the jobs for `objects` concurrent encodings of implementation
@@ -319,9 +333,12 @@ pub fn fig4_coding_times(
 
 /// Fig. 5: mean ± stddev coding time of CEC vs RR8 as 0..=`max_congested`
 /// nodes get the netem profile (500 Mbps + 100±10 ms). `objects` = 1
-/// reproduces Fig. 5a, 16 reproduces Fig. 5b.
+/// reproduces Fig. 5a, 16 reproduces Fig. 5b. `preset` accepts the same
+/// names as Fig. 4, including `-sim` variants (`tpc-sim` runs the sweep on
+/// the discrete-event clock in wall-clock seconds).
 pub fn fig5_congestion(
     backend: &BackendHandle,
+    preset: &str,
     max_congested: usize,
     objects: usize,
     block_bytes: usize,
@@ -330,7 +347,7 @@ pub fn fig5_congestion(
 ) -> anyhow::Result<()> {
     writeln!(
         out,
-        "# Fig. 5{} — TPC preset, netem profile on 0..={max_congested} nodes, {} object(s), block={} MiB",
+        "# Fig. 5{} — preset={preset}, netem profile on 0..={max_congested} nodes, {} object(s), block={} MiB",
         if objects == 1 { "a" } else { "b" },
         objects,
         block_bytes >> 20
@@ -347,7 +364,7 @@ pub fn fig5_congestion(
             let rec = Recorder::new();
             let stages = Recorder::new();
             for _ in 0..samples {
-                let cluster = cluster_for("tpc", N)?;
+                let cluster = cluster_for(preset, N)?;
                 for node in 0..congested {
                     cluster.congest(node, &profile);
                 }
@@ -405,6 +422,7 @@ pub fn fig5_congestion(
 /// block sizes (≥ 16 MiB) keep it bandwidth-bound.
 pub fn fig_repair(
     backend: &BackendHandle,
+    preset: &str,
     max_congested: usize,
     block_bytes: usize,
     samples: usize,
@@ -418,7 +436,7 @@ pub fn fig_repair(
     let samples = samples.max(1);
     writeln!(
         out,
-        "# Fig. R — (16,11) RR8 single-block repair, TPC preset, netem on 0..={max_congested} nodes, block={} MiB",
+        "# Fig. R — (16,11) RR8 single-block repair, preset={preset}, netem on 0..={max_congested} nodes, block={} MiB",
         block_bytes >> 20
     )?;
     writeln!(
@@ -437,7 +455,7 @@ pub fn fig_repair(
             // one archived object per sample; both strategies repair the
             // SAME lost block on the same cluster state, so the comparison
             // is paired.
-            let cluster = Cluster::start(ClusterSpec::tpc(N + 1));
+            let cluster = cluster_for(preset, N + 1)?;
             for node in 0..congested.min(N - 1) {
                 cluster.congest(node, &profile);
             }
@@ -527,9 +545,21 @@ mod tests {
     fn fig_repair_smoke() {
         let be: BackendHandle = Arc::new(NativeBackend::new());
         let mut out = Vec::new();
-        fig_repair(&be, 0, 256 * 1024, 1, &mut out).unwrap();
+        fig_repair(&be, "test", 0, 256 * 1024, 1, &mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("star") && text.contains("pipelined"), "{text}");
+    }
+
+    #[test]
+    fn fig4_smoke_on_simulated_tpc_preset() {
+        // paper-scale preset under the SimClock: virtual timings, wall-fast
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let mut out = Vec::new();
+        let candles = fig4_coding_times(&be, "tpc-sim", 1, 256 * 1024, 1, &mut out).unwrap();
+        assert_eq!(candles.len(), 3);
+        for c in &candles {
+            assert!(c.median() > Duration::ZERO, "virtual time missing: {}", c.name);
+        }
     }
 
     #[test]

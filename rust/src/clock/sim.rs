@@ -1,0 +1,236 @@
+//! Discrete-event virtual clock: waiter-wakeup time advancement.
+//!
+//! Virtual `now` is frozen while any participant thread is runnable; when
+//! the whole dataplane blocks, the last thread to go idle advances `now`
+//! to the earliest pending deadline and wakes its sleepers. Two rules close
+//! the classic wake-races of thread-based discrete-event simulators (time
+//! jumping past an event whose handler has not been scheduled yet):
+//!
+//! * a woken sleeper's heap entry is removed only *after* it reacquires
+//!   the lock, so a just-expired deadline keeps pinning `now` until its
+//!   thread actually runs;
+//! * a message sent to a participant blocked in a clock-channel `recv`
+//!   re-counts that receiver as busy at the send instant (`clock::chan`'s
+//!   wake credit), so the send→wake handoff is seamless.
+//!
+//! A 50-node, thousand-virtual-second crash/repair trace runs in
+//! milliseconds of wall time under this clock (see `workload::longrun`),
+//! and — because nothing ever waits on the OS scheduler — the virtual
+//! timeline of uncontended workloads is bit-for-bit reproducible.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use super::{is_participant, Clock, ClockHandle, Tick};
+
+/// Shared discrete-event clock (cheaply cloneable handle).
+#[derive(Clone, Debug)]
+pub struct SimClock {
+    pub(crate) inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+pub(crate) struct Inner {
+    pub(crate) state: Mutex<State>,
+    pub(crate) cv: Condvar,
+}
+
+#[derive(Debug)]
+pub(crate) struct State {
+    /// Current virtual time.
+    pub(crate) now: Tick,
+    /// Runnable participant threads (see `clock::BusyGuard`). A message
+    /// sent to a participant blocked in a clock-channel `recv` immediately
+    /// re-counts that receiver as runnable (a *wake credit*, managed by
+    /// `clock::chan`), so the send→wake window can never let time slip.
+    pub(crate) busy: usize,
+    /// Pending sleep deadlines → number of threads waiting on each.
+    pub(crate) sleepers: BTreeMap<Tick, usize>,
+}
+
+impl State {
+    /// If the dataplane is fully quiescent, advance `now` to the earliest
+    /// pending deadline and wake everyone to re-check their conditions.
+    /// Call after every decrement of `busy`.
+    pub(crate) fn try_advance(&mut self, cv: &Condvar) {
+        if self.busy == 0 {
+            if let Some((&deadline, _)) = self.sleepers.iter().next() {
+                if deadline > self.now {
+                    self.now = deadline;
+                    cv.notify_all();
+                }
+            }
+        }
+    }
+
+    pub(crate) fn add_sleeper(&mut self, deadline: Tick) {
+        *self.sleepers.entry(deadline).or_insert(0) += 1;
+    }
+
+    pub(crate) fn remove_sleeper(&mut self, deadline: Tick) {
+        if let Some(c) = self.sleepers.get_mut(&deadline) {
+            *c -= 1;
+            if *c == 0 {
+                self.sleepers.remove(&deadline);
+            }
+        }
+    }
+}
+
+impl SimClock {
+    /// A virtual clock at tick zero.
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(Inner {
+                state: Mutex::new(State {
+                    now: Tick::ZERO,
+                    busy: 0,
+                    sleepers: BTreeMap::new(),
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Fresh handle (the usual way to seed a `ClusterSpec`).
+    pub fn handle() -> ClockHandle {
+        Arc::new(Self::new())
+    }
+
+    pub(crate) fn lock(&self) -> MutexGuard<'_, State> {
+        self.inner.state.lock().unwrap()
+    }
+
+    /// The clock's condvar (sleepers + deadline-waiters park here).
+    pub(crate) fn cv(&self) -> &Condvar {
+        &self.inner.cv
+    }
+
+    /// Wait on the clock's condvar with the state lock.
+    pub(crate) fn wait<'a>(&self, guard: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+        self.inner.cv.wait(guard).unwrap()
+    }
+
+    /// Wake every sleeper/deadline-waiter to re-check its condition.
+    pub(crate) fn notify_all(&self) {
+        self.inner.cv.notify_all();
+    }
+
+    /// Count one more runnable participant.
+    pub(crate) fn add_busy(&self) {
+        self.lock().busy += 1;
+    }
+
+    /// Count one participant gone idle (and maybe advance time).
+    pub(crate) fn sub_busy(&self) {
+        let mut st = self.lock();
+        debug_assert!(st.busy > 0, "busy-count underflow");
+        st.busy -= 1;
+        st.try_advance(&self.inner.cv);
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Tick {
+        self.lock().now
+    }
+
+    fn sleep_until(&self, deadline: Tick) {
+        let counted = is_participant();
+        let mut st = self.lock();
+        if st.now >= deadline {
+            return;
+        }
+        if counted {
+            st.busy -= 1;
+        }
+        st.add_sleeper(deadline);
+        st.try_advance(&self.inner.cv);
+        while st.now < deadline {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+        // Removing our entry only now keeps `now` pinned at (or before) our
+        // deadline until we are actually running again — see module docs.
+        st.remove_sleeper(deadline);
+        if counted {
+            st.busy += 1;
+        }
+        st.try_advance(&self.inner.cv);
+    }
+
+    fn as_sim(&self) -> Option<&SimClock> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn starts_at_zero_and_sleep_advances_exactly() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.sleep_until(Duration::from_secs(5));
+        assert_eq!(c.now(), Duration::from_secs(5));
+        c.sleep(Duration::from_millis(1));
+        assert_eq!(c.now(), Duration::from_millis(5001));
+    }
+
+    #[test]
+    fn past_deadline_is_noop() {
+        let c = SimClock::new();
+        c.sleep_until(Duration::from_secs(1));
+        c.sleep_until(Duration::from_millis(10)); // already past
+        assert_eq!(c.now(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn concurrent_sleepers_wake_in_deadline_order() {
+        use super::super::BusyToken;
+        let clock: ClockHandle = SimClock::handle();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        // Hold a busy slot while spawning so time can't advance until every
+        // sleeper is registered (exactly how node threads are spawned).
+        let barrier = BusyToken::new(&clock);
+        let mut handles = Vec::new();
+        for (label, ms) in [("b", 20u64), ("a", 10), ("c", 30)] {
+            let clock2 = clock.clone();
+            let order = order.clone();
+            let token = BusyToken::new(&clock);
+            handles.push(std::thread::spawn(move || {
+                let _busy = token.bind();
+                clock2.sleep_until(Duration::from_millis(ms));
+                order.lock().unwrap().push(label);
+            }));
+        }
+        drop(barrier);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec!["a", "b", "c"]);
+        assert_eq!(clock.now(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn busy_participant_pins_time() {
+        use super::super::BusyToken;
+        let clock: ClockHandle = SimClock::handle();
+        let token = BusyToken::new(&clock);
+        let c2 = clock.clone();
+        // a sleeper can't advance time while a participant is runnable
+        let sleeper = std::thread::spawn(move || c2.sleep_until(Duration::from_millis(50)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(clock.now(), Duration::ZERO, "advanced under a busy thread");
+        drop(token); // participant leaves -> quiescent -> advance
+        sleeper.join().unwrap();
+        assert_eq!(clock.now(), Duration::from_millis(50));
+    }
+}

@@ -1,12 +1,17 @@
 //! Point-to-point data links: paced by both endpoint NICs, delayed by
 //! propagation latency (+jitter), carrying real byte frames.
+//!
+//! Frames travel on a clock channel stamped with their delivery [`Tick`];
+//! the receiver sleeps on the cluster clock until that tick. Under a
+//! `SimClock` an undelivered frame pins virtual time (it counts as pending
+//! work), so delivery order is honored without any wall-clock wait.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use super::nic::{sleep_until, RateLimiter};
+use super::nic::RateLimiter;
+use crate::clock::{self, Clock, ClockHandle, Tick};
 use crate::util::SplitMix64;
 
 /// Propagation characteristics of a link.
@@ -48,7 +53,8 @@ impl Frame {
 
 /// Sending half of a link.
 pub struct Tx {
-    sender: mpsc::Sender<(Instant, Frame)>,
+    sender: clock::Sender<(Tick, Frame)>,
+    clock: ClockHandle,
     up: Arc<RateLimiter>,
     down: Arc<RateLimiter>,
     spec: LinkSpec,
@@ -60,22 +66,26 @@ pub struct Tx {
 
 /// Receiving half of a link.
 pub struct Rx {
-    receiver: mpsc::Receiver<(Instant, Frame)>,
+    receiver: clock::Receiver<(Tick, Frame)>,
+    clock: ClockHandle,
 }
 
-/// Create a link between a sender NIC (`up`) and a receiver NIC (`down`).
+/// Create a link between a sender NIC (`up`) and a receiver NIC (`down`);
+/// both must share one clock, which also times frame delivery.
 pub fn link(up: Arc<RateLimiter>, down: Arc<RateLimiter>, spec: LinkSpec, seed: u64) -> (Tx, Rx) {
-    let (s, r) = mpsc::channel();
+    let clock = up.clock().clone();
+    let (s, r) = clock::channel(&clock);
     (
         Tx {
             sender: s,
+            clock: clock.clone(),
             up,
             down,
             spec,
             rng: SplitMix64::new(seed),
             guards: Vec::new(),
         },
-        Rx { receiver: r },
+        Rx { receiver: r, clock },
     )
 }
 
@@ -92,7 +102,7 @@ impl Tx {
 
     /// Transmit a frame: blocks the sender for the NIC transmission time
     /// (both endpoint NICs reserve the bytes — the slower one paces the
-    /// stream), then enqueues the frame stamped with its delivery instant
+    /// stream), then enqueues the frame stamped with its delivery tick
     /// (completion + propagation latency ± jitter).
     pub fn send(&mut self, frame: Frame) -> anyhow::Result<()> {
         if self.guards.iter().any(|g| g.load(Ordering::SeqCst)) {
@@ -105,7 +115,7 @@ impl Tx {
             // competing inbound streams at the receiver serialize here.
             self.down.reserve(bytes)
         } else {
-            Instant::now()
+            self.clock.now()
         };
         let jitter = if self.spec.jitter > Duration::ZERO {
             let amp = self.spec.jitter.as_secs_f64();
@@ -137,34 +147,48 @@ impl Rx {
     /// Returns `None` when the sender hung up without `End`.
     pub fn recv(&self) -> Option<Frame> {
         let (at, frame) = self.receiver.recv().ok()?;
-        sleep_until(at);
+        self.clock.sleep_until(at);
         Some(frame)
+    }
+
+    /// Drain the stream (until `End`) appending into `out` — the streaming
+    /// primitive under [`Rx::recv_all`] and the node's `Receive` command,
+    /// which pre-sizes `out` to skip growth reallocations.
+    pub fn recv_into(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        loop {
+            match self.recv() {
+                Some(Frame::Data(d)) => out.extend_from_slice(&d),
+                Some(Frame::End) => return Ok(()),
+                None => anyhow::bail!("stream ended without End frame"),
+            }
+        }
     }
 
     /// Drain an entire stream into one buffer (until `End`).
     pub fn recv_all(&self) -> anyhow::Result<Vec<u8>> {
         let mut out = Vec::new();
-        loop {
-            match self.recv() {
-                Some(Frame::Data(d)) => out.extend_from_slice(&d),
-                Some(Frame::End) => return Ok(out),
-                None => anyhow::bail!("stream ended without End frame"),
-            }
-        }
+        self.recv_into(&mut out)?;
+        Ok(out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clock::SimClock;
 
-    fn fast_nic() -> Arc<RateLimiter> {
-        Arc::new(RateLimiter::new(1e9))
+    fn sim() -> ClockHandle {
+        SimClock::handle()
+    }
+
+    fn nic(clock: &ClockHandle) -> Arc<RateLimiter> {
+        Arc::new(RateLimiter::new(clock.clone(), 1e9))
     }
 
     #[test]
     fn roundtrip_payload() {
-        let (mut tx, rx) = link(fast_nic(), fast_nic(), LinkSpec::instant(), 1);
+        let c = sim();
+        let (mut tx, rx) = link(nic(&c), nic(&c), LinkSpec::instant(), 1);
         tx.send_data(vec![1, 2, 3]).unwrap();
         tx.send_data(vec![4]).unwrap();
         tx.finish().unwrap();
@@ -173,39 +197,42 @@ mod tests {
 
     #[test]
     fn latency_delays_delivery() {
+        let c = sim();
         let spec = LinkSpec {
             latency: Duration::from_millis(50),
             jitter: Duration::ZERO,
         };
-        let (mut tx, rx) = link(fast_nic(), fast_nic(), spec, 2);
-        let t0 = Instant::now();
+        let (mut tx, rx) = link(nic(&c), nic(&c), spec, 2);
         tx.send_data(vec![0; 8]).unwrap();
         let _ = rx.recv().unwrap();
-        assert!(t0.elapsed() >= Duration::from_millis(45));
+        // delivery = NIC completion (8 ns at 1 GB/s) + 50 ms exactly
+        assert!(c.now() >= Duration::from_millis(50), "{:?}", c.now());
+        assert!(c.now() < Duration::from_millis(51), "{:?}", c.now());
     }
 
     #[test]
     fn bandwidth_paces_sender() {
-        // 1 MB through a 10 MB/s uplink: >= ~100 ms of send-side pacing
-        let up = Arc::new(RateLimiter::new(10_000_000.0));
-        let (mut tx, _rx) = link(up, fast_nic(), LinkSpec::instant(), 3);
-        let t0 = Instant::now();
+        // 1 MB through a 10 MB/s uplink: ≈ 104.9 ms of send-side pacing
+        let c = sim();
+        let up = Arc::new(RateLimiter::new(c.clone(), 10_000_000.0));
+        let (mut tx, _rx) = link(up, nic(&c), LinkSpec::instant(), 3);
         for _ in 0..16 {
             tx.send_data(vec![0; 65536]).unwrap();
         }
-        assert!(t0.elapsed() >= Duration::from_millis(95));
+        assert!(c.now() >= Duration::from_millis(100), "{:?}", c.now());
+        assert!(c.now() <= Duration::from_millis(110), "{:?}", c.now());
     }
 
     #[test]
     fn receiver_nic_serializes_competing_streams() {
-        // two senders, one receiver NIC at 10 MB/s, 500 KB each => >= ~100 ms
-        let down = fast_nic();
+        // two senders, one receiver NIC at 10 MB/s, 500 KB each => 100 ms
+        let c = sim();
+        let down = nic(&c);
         down.set_rate(10_000_000.0);
-        let t0 = Instant::now();
         let mut handles = Vec::new();
         let mut rxs = Vec::new();
         for s in 0..2 {
-            let (mut tx, rx) = link(fast_nic(), down.clone(), LinkSpec::instant(), 4 + s);
+            let (mut tx, rx) = link(nic(&c), down.clone(), LinkSpec::instant(), 4 + s);
             rxs.push(rx);
             handles.push(std::thread::spawn(move || {
                 for _ in 0..8 {
@@ -220,12 +247,27 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert!(t0.elapsed() >= Duration::from_millis(90), "{:?}", t0.elapsed());
+        assert_eq!(c.now(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn recv_into_presized_buffer_appends() {
+        let c = sim();
+        let (mut tx, rx) = link(nic(&c), nic(&c), LinkSpec::instant(), 8);
+        tx.send_data(vec![5; 10]).unwrap();
+        tx.send_data(vec![6; 6]).unwrap();
+        tx.finish().unwrap();
+        let mut out = Vec::with_capacity(16);
+        rx.recv_into(&mut out).unwrap();
+        assert_eq!(out.len(), 16);
+        assert_eq!(&out[..10], &[5; 10]);
+        assert_eq!(&out[10..], &[6; 6]);
     }
 
     #[test]
     fn recv_none_after_sender_drop() {
-        let (tx, rx) = link(fast_nic(), fast_nic(), LinkSpec::instant(), 9);
+        let c = sim();
+        let (tx, rx) = link(nic(&c), nic(&c), LinkSpec::instant(), 9);
         drop(tx);
         assert!(rx.recv().is_none());
         assert!(rx.recv_all().is_err());
@@ -233,8 +275,9 @@ mod tests {
 
     #[test]
     fn guarded_link_breaks_when_endpoint_fails() {
+        let c = sim();
         let failed = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = link(fast_nic(), fast_nic(), LinkSpec::instant(), 11);
+        let (tx, rx) = link(nic(&c), nic(&c), LinkSpec::instant(), 11);
         let mut tx = tx.guard([failed.clone()]);
         tx.send_data(vec![1, 2]).unwrap();
         failed.store(true, Ordering::SeqCst);
@@ -248,18 +291,22 @@ mod tests {
 
     #[test]
     fn jitter_stays_within_band() {
+        let c = sim();
         let spec = LinkSpec {
             latency: Duration::from_millis(20),
             jitter: Duration::from_millis(5),
         };
-        let (mut tx, rx) = link(fast_nic(), fast_nic(), spec, 10);
+        let (mut tx, rx) = link(nic(&c), nic(&c), spec, 10);
+        let mut last = Duration::ZERO;
         for _ in 0..5 {
-            let t0 = Instant::now();
+            let t0 = c.now();
             tx.send_data(vec![0; 8]).unwrap();
             let _ = rx.recv().unwrap();
-            let dt = t0.elapsed();
-            assert!(dt >= Duration::from_millis(14), "{dt:?}");
-            assert!(dt <= Duration::from_millis(60), "{dt:?}");
+            let dt = c.now() - t0;
+            assert!(dt >= Duration::from_millis(15), "{dt:?}");
+            assert!(dt <= Duration::from_millis(25), "{dt:?}");
+            last = dt;
         }
+        assert!(last > Duration::ZERO);
     }
 }

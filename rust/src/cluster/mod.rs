@@ -12,6 +12,12 @@
 //!
 //! Congestion (the paper's `netem` runs: 1 Gbps → 500 Mbps plus 100±10 ms
 //! latency) is applied per node via [`congestion`].
+//!
+//! All of it runs on a pluggable [`crate::clock::Clock`] carried by the
+//! [`ClusterSpec`]: a `RealClock` gives the paper-faithful wall-clock
+//! testbeds, a `SimClock` turns the identical cluster into a deterministic
+//! discrete-event simulation where a 50-node, multi-hour trace costs
+//! milliseconds (see `ClusterSpec::sim` and the `workload` module).
 
 pub mod congestion;
 pub mod link;

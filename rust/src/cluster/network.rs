@@ -8,6 +8,7 @@ use super::link::{link, LinkSpec, Rx, Tx};
 use super::nic::RateLimiter;
 use super::node::{NodeHandle, DEFAULT_MAX_WORKERS};
 use super::NodeId;
+use crate::clock::{ClockHandle, RealClock, SimClock};
 
 /// Static description of a homogeneous cluster (per-node NIC + base link).
 #[derive(Clone, Debug)]
@@ -25,6 +26,12 @@ pub struct ClusterSpec {
     /// threads; commands beyond the cap queue FIFO on the node, with an
     /// anti-deadlock stall overflow (see `cluster::node` docs).
     pub max_workers: usize,
+    /// Time source the whole cluster runs on: every NIC reservation, link
+    /// delivery, worker stall and metric span uses this clock. Presets
+    /// default to a fresh [`RealClock`]; swap in a [`SimClock`] (via
+    /// [`ClusterSpec::with_clock`] / [`ClusterSpec::sim`]) to run the same
+    /// workload as a deterministic discrete-event simulation.
+    pub clock: ClockHandle,
 }
 
 impl ClusterSpec {
@@ -37,6 +44,7 @@ impl ClusterSpec {
             latency: Duration::from_micros(200),
             jitter: Duration::from_micros(50),
             max_workers: DEFAULT_MAX_WORKERS,
+            clock: RealClock::handle(),
         }
     }
 
@@ -49,6 +57,7 @@ impl ClusterSpec {
             latency: Duration::from_millis(1),
             jitter: Duration::from_micros(300),
             max_workers: DEFAULT_MAX_WORKERS,
+            clock: RealClock::handle(),
         }
     }
 
@@ -60,7 +69,19 @@ impl ClusterSpec {
             latency: Duration::ZERO,
             jitter: Duration::ZERO,
             max_workers: DEFAULT_MAX_WORKERS,
+            clock: RealClock::handle(),
         }
+    }
+
+    /// Substitute the time source (e.g. a shared [`SimClock`]).
+    pub fn with_clock(mut self, clock: ClockHandle) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Switch this spec onto a fresh discrete-event [`SimClock`].
+    pub fn sim(self) -> Self {
+        self.with_clock(SimClock::handle())
     }
 }
 
@@ -84,8 +105,8 @@ impl Cluster {
             .map(|id| {
                 NodeHandle::spawn(
                     id,
-                    Arc::new(RateLimiter::new(spec.bytes_per_sec)),
-                    Arc::new(RateLimiter::new(spec.bytes_per_sec)),
+                    Arc::new(RateLimiter::new(spec.clock.clone(), spec.bytes_per_sec)),
+                    Arc::new(RateLimiter::new(spec.clock.clone(), spec.bytes_per_sec)),
                     spec.max_workers,
                 )
             })
@@ -107,6 +128,11 @@ impl Cluster {
     /// The cluster spec.
     pub fn spec(&self) -> &ClusterSpec {
         &self.spec
+    }
+
+    /// The clock every node, NIC and link of this cluster runs on.
+    pub fn clock(&self) -> &ClockHandle {
+        &self.spec.clock
     }
 
     /// Number of nodes.
@@ -219,7 +245,7 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Instant;
+    use crate::clock::Clock;
 
     #[test]
     fn presets_have_expected_shape() {
@@ -231,7 +257,7 @@ mod tests {
 
     #[test]
     fn connect_moves_bytes() {
-        let c = Cluster::start(ClusterSpec::test(3));
+        let c = Cluster::start(ClusterSpec::test(3).sim());
         let (mut tx, rx) = c.connect(0, 2).unwrap();
         tx.send_data(vec![42; 10]).unwrap();
         tx.finish().unwrap();
@@ -240,7 +266,8 @@ mod tests {
 
     #[test]
     fn congestion_slows_and_delays() {
-        let c = Cluster::start(ClusterSpec::test(2));
+        let c = Cluster::start(ClusterSpec::test(2).sim());
+        let clock = c.clock().clone();
         c.congest(
             1,
             &CongestionSpec {
@@ -250,26 +277,27 @@ mod tests {
             },
         );
         let (mut tx, rx) = c.connect(0, 1).unwrap();
-        let t0 = Instant::now();
+        let t0 = clock.now();
         tx.send_data(vec![0; 100_000]).unwrap(); // 100 ms at 1 MB/s
         tx.finish().unwrap();
         rx.recv_all().unwrap();
-        let dt = t0.elapsed();
+        let dt = clock.now() - t0;
         assert!(dt >= Duration::from_millis(120), "congestion ignored: {dt:?}");
 
         c.uncongest(1);
         let (mut tx, rx) = c.connect(0, 1).unwrap();
-        let t0 = Instant::now();
+        let t0 = clock.now();
         tx.send_data(vec![0; 100_000]).unwrap();
         tx.finish().unwrap();
         rx.recv_all().unwrap();
-        assert!(t0.elapsed() < Duration::from_millis(50), "uncongest failed");
+        let dt = clock.now() - t0;
+        assert!(dt < Duration::from_millis(50), "uncongest failed: {dt:?}");
     }
 
     #[test]
     fn failed_node_refuses_links_and_revives_empty() {
         use crate::storage::{BlockKey, ObjectId};
-        let c = Cluster::start(ClusterSpec::test(3));
+        let c = Cluster::start(ClusterSpec::test(3).sim());
         let key = BlockKey::coded(ObjectId(9), 1);
         c.node(1).put(key, vec![7; 16]).unwrap();
 
@@ -293,11 +321,30 @@ mod tests {
 
     #[test]
     fn mid_stream_failure_breaks_guarded_link() {
-        let c = Cluster::start(ClusterSpec::test(2));
+        let c = Cluster::start(ClusterSpec::test(2).sim());
         let (mut tx, _rx) = c.connect(0, 1).unwrap();
         tx.send_data(vec![1; 8]).unwrap();
         c.fail_node(1);
         assert!(tx.send_data(vec![2; 8]).is_err());
+    }
+
+    #[test]
+    fn sim_cluster_accounts_transfers_in_virtual_time() {
+        // 10 MB through a 1 MB/s NIC would be 10 wall seconds; under the
+        // SimClock the virtual elapsed time reports the full transfer
+        // (the wall-clock speed bound is asserted in tests/longrun.rs).
+        let mut spec = ClusterSpec::test(2).sim();
+        spec.bytes_per_sec = 1e6;
+        let c = Cluster::start(spec);
+        let clock = c.clock().clone();
+        let (mut tx, rx) = c.connect(0, 1).unwrap();
+        for _ in 0..10 {
+            tx.send_data(vec![0; 1_000_000]).unwrap();
+        }
+        tx.finish().unwrap();
+        rx.recv_all().unwrap();
+        assert!(clock.now() >= Duration::from_secs(10), "{:?}", clock.now());
+        assert!(clock.now() < Duration::from_secs(11), "{:?}", clock.now());
     }
 
     #[test]

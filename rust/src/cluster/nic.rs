@@ -1,37 +1,47 @@
-//! Per-node NIC model: a wall-clock token bucket.
+//! Per-node NIC model: a token bucket on the cluster's [`Clock`].
 //!
 //! All transfers that cross a node's NIC (in either direction) reserve
 //! bytes on the same limiter, so concurrent streams share — and contend
 //! for — the node's bandwidth exactly as the paper's analysis assumes.
+//! Reservations are pure tick arithmetic; only [`RateLimiter::acquire`]
+//! blocks, and it blocks on the clock — wall time under
+//! [`RealClock`](crate::clock::RealClock), a discrete event under
+//! [`SimClock`](crate::clock::SimClock).
 
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::clock::{Clock, ClockHandle, Tick};
 
 struct State {
     bytes_per_sec: f64,
-    /// Virtual time at which the NIC becomes free.
-    next_free: Instant,
+    /// Tick at which the NIC becomes free.
+    next_free: Tick,
 }
 
-/// How far ahead of virtual time a paced sender may run (see
-/// [`RateLimiter::acquire`]).
-pub const PACING_SLACK: Duration = Duration::from_millis(4);
-
-/// Wall-clock token-bucket rate limiter (one per NIC direction).
+/// Token-bucket rate limiter (one per NIC direction) on a shared clock.
 pub struct RateLimiter {
+    clock: ClockHandle,
     state: Mutex<State>,
 }
 
 impl RateLimiter {
-    /// New limiter at `bytes_per_sec`.
-    pub fn new(bytes_per_sec: f64) -> Self {
+    /// New limiter at `bytes_per_sec` on `clock`.
+    pub fn new(clock: ClockHandle, bytes_per_sec: f64) -> Self {
         assert!(bytes_per_sec > 0.0);
+        let next_free = clock.now();
         Self {
+            clock,
             state: Mutex::new(State {
                 bytes_per_sec,
-                next_free: Instant::now(),
+                next_free,
             }),
         }
+    }
+
+    /// The clock this limiter reserves time on.
+    pub fn clock(&self) -> &ClockHandle {
+        &self.clock
     }
 
     /// Change the rate (congestion injection). Takes effect for subsequent
@@ -47,29 +57,30 @@ impl RateLimiter {
     }
 
     /// Reserve NIC time for `bytes`, pace the caller, and return the
-    /// (virtual) completion instant.
+    /// (virtual) completion tick.
     ///
     /// Serialization through the mutex gives FIFO-ish fairness between
-    /// competing streams. Pacing allows up to [`PACING_SLACK`] of
-    /// ahead-of-virtual-time progress: `thread::sleep` on a loaded 1-CPU
-    /// host overshoots by ~1 ms, so sleeping per 64 KiB buffer (~0.5 ms
-    /// nominal) would inflate every stream ~3-4×. Aggregate rate stays
-    /// exact because `next_free` bookkeeping is cumulative and receivers
-    /// wait for the *virtual* delivery instant of every frame.
-    pub fn acquire(&self, bytes: usize) -> Instant {
+    /// competing streams. Pacing allows up to the clock's
+    /// [`pacing_slack`](crate::clock::Clock::pacing_slack) of
+    /// ahead-of-virtual-time progress (non-zero only on real clocks, where
+    /// OS sleep overshoot would otherwise inflate every stream — see
+    /// `RealClock::PACING_SLACK`). Aggregate rate stays exact because
+    /// `next_free` bookkeeping is cumulative and receivers wait for the
+    /// *virtual* delivery instant of every frame.
+    pub fn acquire(&self, bytes: usize) -> Tick {
         let done = self.reserve(bytes);
-        let now = Instant::now();
-        if done > now + PACING_SLACK {
-            sleep_until(done - PACING_SLACK);
+        let now = self.clock.now();
+        if done > now + self.clock.pacing_slack() {
+            self.clock.sleep_until(done - self.clock.pacing_slack());
         }
         done
     }
 
     /// Reserve without sleeping (delivery-side accounting); returns the
-    /// completion instant the caller should delay to.
-    pub fn reserve(&self, bytes: usize) -> Instant {
+    /// completion tick the caller should delay to.
+    pub fn reserve(&self, bytes: usize) -> Tick {
         let mut s = self.state.lock().unwrap();
-        let now = Instant::now();
+        let now = self.clock.now();
         let start = if s.next_free > now { s.next_free } else { now };
         let cost = Duration::from_secs_f64(bytes as f64 / s.bytes_per_sec);
         let done = start + cost;
@@ -78,49 +89,28 @@ impl RateLimiter {
     }
 }
 
-/// Sleep until `deadline` (no-op if already past).
-///
-/// Hybrid strategy: `thread::sleep` overshoots by 0.5–4 ms on this class of
-/// host (virtualized, single CPU), which would swamp the sub-millisecond
-/// per-buffer timing the simulation depends on. We therefore sleep only to
-/// ~2 ms before the deadline and yield-spin the rest — measured accuracy
-/// <10 µs (see DESIGN.md §Perf).
-pub fn sleep_until(deadline: Instant) {
-    const SPIN: Duration = Duration::from_micros(2000);
-    let now = Instant::now();
-    if deadline <= now {
-        return;
-    }
-    let remaining = deadline - now;
-    if remaining > SPIN {
-        std::thread::sleep(remaining - SPIN);
-    }
-    while Instant::now() < deadline {
-        std::thread::yield_now();
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clock::{RealClock, SimClock};
+    use std::sync::Arc;
 
     #[test]
     fn paces_to_the_configured_rate() {
-        // 10 MB/s, 1 MB => ~100 ms
-        let l = RateLimiter::new(10_000_000.0);
-        let t0 = Instant::now();
+        // 10 MB/s, 1 MB => exactly 100 ms of virtual time
+        let clock = SimClock::handle();
+        let l = RateLimiter::new(clock.clone(), 10_000_000.0);
         l.acquire(1_000_000);
-        let dt = t0.elapsed();
-        assert!(dt >= Duration::from_millis(95), "too fast: {dt:?}");
-        assert!(dt < Duration::from_millis(400), "too slow: {dt:?}");
+        assert_eq!(clock.now(), Duration::from_millis(100));
     }
 
     #[test]
     fn concurrent_streams_share_bandwidth() {
-        use std::sync::Arc;
-        // two concurrent 500 KB transfers through a 10 MB/s NIC: ~100 ms total
-        let l = Arc::new(RateLimiter::new(10_000_000.0));
-        let t0 = Instant::now();
+        // two concurrent 500 KB transfers through a 10 MB/s NIC: the
+        // cumulative reservation ends at exactly 100 ms regardless of
+        // arrival order.
+        let clock = SimClock::handle();
+        let l = Arc::new(RateLimiter::new(clock.clone(), 10_000_000.0));
         let hs: Vec<_> = (0..2)
             .map(|_| {
                 let l = l.clone();
@@ -132,26 +122,41 @@ mod tests {
         for h in hs {
             h.join().unwrap();
         }
-        let dt = t0.elapsed();
-        assert!(dt >= Duration::from_millis(95), "shared NIC not serialized: {dt:?}");
+        assert_eq!(clock.now(), Duration::from_millis(100));
     }
 
     #[test]
     fn rate_change_applies() {
-        let l = RateLimiter::new(1_000_000.0);
+        let clock = SimClock::handle();
+        let l = RateLimiter::new(clock.clone(), 1_000_000.0);
         l.set_rate(20_000_000.0);
         assert!((l.rate() - 20_000_000.0).abs() < 1.0);
-        let t0 = Instant::now();
         l.acquire(200_000); // 10 ms at the new rate
-        assert!(t0.elapsed() < Duration::from_millis(100));
+        assert_eq!(clock.now(), Duration::from_millis(10));
     }
 
     #[test]
     fn reserve_does_not_sleep() {
-        let l = RateLimiter::new(1_000.0); // very slow
-        let t0 = Instant::now();
+        let clock = SimClock::handle();
+        let l = RateLimiter::new(clock.clone(), 1_000.0); // very slow
         let done = l.reserve(10_000); // would be 10 s
-        assert!(t0.elapsed() < Duration::from_millis(50));
-        assert!(done > Instant::now());
+        assert_eq!(clock.now(), Duration::ZERO, "reserve must not block");
+        assert_eq!(done, Duration::from_secs(10));
+    }
+
+    #[test]
+    fn real_clock_pacing_stays_within_slack() {
+        // 10 MB/s, 100 KB => 10 ms nominal; the real clock may run at most
+        // PACING_SLACK ahead but never report completion early.
+        let clock = RealClock::handle();
+        let l = RateLimiter::new(clock.clone(), 10_000_000.0);
+        let t0 = clock.now();
+        let done = l.acquire(100_000);
+        let now = clock.now();
+        assert!(done >= t0 + Duration::from_millis(10));
+        assert!(
+            now + RealClock::PACING_SLACK >= done,
+            "paced too far behind: now {now:?} done {done:?}"
+        );
     }
 }

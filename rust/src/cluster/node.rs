@@ -1,14 +1,19 @@
 //! Storage node: one OS thread per node, executing coordinator commands.
 //!
 //! A node owns a block store and its two NIC limiters. Commands arrive on
-//! an mpsc queue; data-plane commands run on worker threads drawn from a
-//! bounded per-node pool (cap set by `ClusterSpec::max_workers`) so a node
-//! can serve several concurrent roles (e.g. upload a source block while
-//! acting as a pipeline stage for another object — exactly the contention
-//! the multi-object experiments of Fig. 4b/5b create) without unbounded
-//! thread spawning. Commands beyond the cap queue FIFO and start as workers
-//! free up. NIC token buckets keep the bandwidth accounting honest
-//! regardless of the worker count.
+//! a clock-channel queue; data-plane commands run on worker threads drawn
+//! from a bounded per-node pool (cap set by `ClusterSpec::max_workers`) so
+//! a node can serve several concurrent roles (e.g. upload a source block
+//! while acting as a pipeline stage for another object — exactly the
+//! contention the multi-object experiments of Fig. 4b/5b create) without
+//! unbounded thread spawning. Commands beyond the cap queue FIFO and start
+//! as workers free up. NIC token buckets keep the bandwidth accounting
+//! honest regardless of the worker count.
+//!
+//! The node loop and every worker are clock *participants*
+//! ([`crate::clock::BusyToken`]): under a `SimClock` their runnable/idle
+//! transitions drive virtual-time advancement, and all queue waits happen
+//! in virtual time.
 //!
 //! The cap is a *soft* bound: streaming commands block while waiting for
 //! peer data, so running commands can depend (transitively, across nodes)
@@ -25,22 +30,22 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 use super::link::{Frame, Rx, Tx};
 use super::nic::RateLimiter;
 use super::NodeId;
 use crate::backend::{BackendHandle, Width};
+use crate::clock::{self, blocked, BusyToken, Clock, ClockHandle, RecvTimeoutError, Tick};
 use crate::storage::{BlockKey, BlockStore};
 
 /// Default per-node worker-thread cap (see the module docs for sizing).
 pub const DEFAULT_MAX_WORKERS: usize = 32;
 
-/// How long a queued data-plane command may wait with no worker finishing
-/// before the cap is exceeded by one to guarantee progress (anti-deadlock
-/// overflow — see the module docs).
+/// How long (on the cluster clock) a queued data-plane command may wait
+/// with no worker finishing before the cap is exceeded by one to guarantee
+/// progress (anti-deadlock overflow — see the module docs).
 pub const QUEUE_STALL_OVERFLOW: std::time::Duration = std::time::Duration::from_millis(100);
 
 /// Commands a storage node executes.
@@ -52,7 +57,7 @@ pub enum Command {
         /// Payload.
         data: Vec<u8>,
         /// Completion signal.
-        done: mpsc::Sender<anyhow::Result<()>>,
+        done: clock::Sender<anyhow::Result<()>>,
     },
     /// Read a block directly (control plane, unmetered; used by the
     /// coordinator for verification/decode assembly).
@@ -60,14 +65,14 @@ pub enum Command {
         /// Block key.
         key: BlockKey,
         /// Reply channel.
-        reply: mpsc::Sender<Option<Arc<Vec<u8>>>>,
+        reply: clock::Sender<Option<Arc<Vec<u8>>>>,
     },
     /// Delete a block (replica reclaim after migration).
     Delete {
         /// Block key.
         key: BlockKey,
         /// Completion signal with "existed" flag.
-        done: mpsc::Sender<bool>,
+        done: clock::Sender<bool>,
     },
     /// Stream a stored block out through `tx` in `buf_bytes` frames
     /// (metered by both NICs — the data plane read path).
@@ -79,7 +84,7 @@ pub enum Command {
         /// Frame size.
         buf_bytes: usize,
         /// Completion signal.
-        done: mpsc::Sender<anyhow::Result<()>>,
+        done: clock::Sender<anyhow::Result<()>>,
     },
     /// Receive a streamed block from `rx` and store it under `key`
     /// (the data plane write path; parity distribution in classical coding).
@@ -88,8 +93,11 @@ pub enum Command {
         key: BlockKey,
         /// Incoming link.
         rx: Rx,
+        /// Expected stream size in bytes (pre-sizes the receive buffer;
+        /// 0 = unknown, the buffer grows as frames arrive).
+        expect_bytes: usize,
         /// Completion signal.
-        done: mpsc::Sender<anyhow::Result<()>>,
+        done: clock::Sender<anyhow::Result<()>>,
     },
     /// Act as one stage of a RapidRAID encoding pipeline: for every
     /// incoming buffer fold the local blocks with ψ/ξ, forward `x_out`
@@ -118,7 +126,7 @@ pub enum Command {
         /// GF compute backend.
         backend: BackendHandle,
         /// Completion signal.
-        done: mpsc::Sender<anyhow::Result<()>>,
+        done: clock::Sender<anyhow::Result<()>>,
     },
     /// Act as the single coding node of a classical erasure encoding:
     /// stream k source blocks from `sources`, fold each buffer into m
@@ -144,7 +152,7 @@ pub enum Command {
         /// GF compute backend.
         backend: BackendHandle,
         /// Completion signal.
-        done: mpsc::Sender<anyhow::Result<()>>,
+        done: clock::Sender<anyhow::Result<()>>,
     },
     /// Stop the node thread (workers already running keep finishing; any
     /// still-queued data-plane commands are started before the loop exits).
@@ -179,7 +187,7 @@ pub struct NodeHandle {
     /// Node id within the cluster.
     pub id: NodeId,
     /// Command queue.
-    cmd: mpsc::Sender<Msg>,
+    cmd: clock::Sender<Msg>,
     /// The node's block store (shared; coordinator uses it read-only in
     /// tests/verification).
     pub store: BlockStore,
@@ -187,31 +195,40 @@ pub struct NodeHandle {
     pub up: Arc<RateLimiter>,
     /// Download NIC.
     pub down: Arc<RateLimiter>,
+    clock: ClockHandle,
     thread: Option<JoinHandle<()>>,
     inflight: Arc<AtomicUsize>,
     failed: Arc<AtomicBool>,
 }
 
 impl NodeHandle {
-    /// Spawn a node thread with the given NIC limiters and worker cap
-    /// (`max_workers` is clamped to ≥ 1).
+    /// Spawn a node thread with the given NIC limiters (which must share a
+    /// clock) and worker cap (`max_workers` is clamped to ≥ 1).
     pub fn spawn(
         id: NodeId,
         up: Arc<RateLimiter>,
         down: Arc<RateLimiter>,
         max_workers: usize,
     ) -> Self {
+        let clock = up.clock().clone();
         let store = BlockStore::new();
-        let (tx, rx) = mpsc::channel::<Msg>();
+        let (tx, rx) = clock::channel::<Msg>(&clock);
         let store2 = store.clone();
         let inflight = Arc::new(AtomicUsize::new(0));
         let inflight2 = inflight.clone();
         let failed = Arc::new(AtomicBool::new(false));
         let failed2 = failed.clone();
         let loopback = tx.clone();
+        let clock2 = clock.clone();
+        // Token created before the spawn: the node counts as busy from the
+        // instant it exists, so virtual time can't slip during startup.
+        let token = BusyToken::new(&clock);
         let thread = std::thread::Builder::new()
             .name(format!("node-{id}"))
-            .spawn(move || node_loop(id, rx, loopback, store2, inflight2, failed2, max_workers))
+            .spawn(move || {
+                let _busy = token.bind();
+                node_loop(id, clock2, rx, loopback, store2, inflight2, failed2, max_workers)
+            })
             .expect("spawn node thread");
         Self {
             id,
@@ -219,10 +236,16 @@ impl NodeHandle {
             store,
             up,
             down,
+            clock,
             thread: Some(thread),
             inflight,
             failed,
         }
+    }
+
+    /// The clock this node runs on.
+    pub fn clock(&self) -> &ClockHandle {
+        &self.clock
     }
 
     /// Enqueue a command. Errors fast when the node has crashed
@@ -263,21 +286,21 @@ impl NodeHandle {
 
     /// Synchronous Put convenience.
     pub fn put(&self, key: BlockKey, data: Vec<u8>) -> anyhow::Result<()> {
-        let (done, wait) = mpsc::channel();
+        let (done, wait) = clock::channel(&self.clock);
         self.send(Command::Put { key, data, done })?;
         wait.recv()?
     }
 
     /// Synchronous Peek convenience.
     pub fn peek(&self, key: BlockKey) -> anyhow::Result<Option<Arc<Vec<u8>>>> {
-        let (reply, wait) = mpsc::channel();
+        let (reply, wait) = clock::channel(&self.clock);
         self.send(Command::Peek { key, reply })?;
         Ok(wait.recv()?)
     }
 
     /// Synchronous Delete convenience.
     pub fn delete(&self, key: BlockKey) -> anyhow::Result<bool> {
-        let (done, wait) = mpsc::channel();
+        let (done, wait) = clock::channel(&self.clock);
         self.send(Command::Delete { key, done })?;
         Ok(wait.recv()?)
     }
@@ -322,10 +345,12 @@ fn reject(id: NodeId, cmd: Command) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn node_loop(
     id: NodeId,
-    rx: mpsc::Receiver<Msg>,
-    loopback: mpsc::Sender<Msg>,
+    clock: ClockHandle,
+    rx: clock::Receiver<Msg>,
+    loopback: clock::Sender<Msg>,
     store: BlockStore,
     inflight: Arc<AtomicUsize>,
     failed: Arc<AtomicBool>,
@@ -340,7 +365,10 @@ fn node_loop(
         let inflight = inflight.clone();
         let loopback = loopback.clone();
         let failed = failed.clone();
+        // Parent-created token: no gap between spawn and accounting.
+        let token = BusyToken::new(&clock);
         workers.push(std::thread::spawn(move || {
+            let _busy = token.bind();
             run_dataplane(cmd, store, &failed);
             inflight.fetch_sub(1, Ordering::Relaxed);
             // Release the worker slot; the node loop may have shut down
@@ -352,10 +380,13 @@ fn node_loop(
     // event (a worker finishing), not to message arrival — otherwise
     // steady control-plane traffic (peeks, new commands) would push the
     // window forever and defeat the progress guarantee. Backoff doubles on
-    // consecutive overflow spawns, resets when a worker finishes.
+    // consecutive overflow spawns, resets when a worker finishes. All
+    // deadlines live on the cluster clock: under a SimClock a stalled
+    // queue becomes a discrete event at `now + stall`, so the overflow
+    // fires after 100 *virtual* milliseconds without any wall-clock wait.
     let mut stall = QUEUE_STALL_OVERFLOW;
     let max_stall = QUEUE_STALL_OVERFLOW * 20;
-    let mut stall_deadline: Option<Instant> = None;
+    let mut stall_deadline: Option<Tick> = None;
     // The loop holds a loopback sender, so `recv` can only end via Shutdown.
     loop {
         // A crash rejects everything still queued (each queued data-plane
@@ -382,23 +413,22 @@ fn node_loop(
             // nodes) — run one beyond the cap to guarantee progress, then
             // back off so slow-but-progressing workloads erode the cap at
             // a decaying rate instead of linearly.
-            let deadline = *stall_deadline.get_or_insert_with(|| Instant::now() + stall);
-            let now = Instant::now();
-            if now >= deadline {
+            let deadline = *stall_deadline.get_or_insert_with(|| clock.now() + stall);
+            if clock.now() >= deadline {
                 if let Some(cmd) = pending.pop_front() {
                     active += 1;
                     spawn_worker(cmd, &mut workers);
                 }
                 stall = (stall * 2).min(max_stall);
-                stall_deadline = Some(Instant::now() + stall);
+                stall_deadline = Some(clock.now() + stall);
                 continue;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_deadline(deadline) {
                 Ok(m) => m,
                 // Deadline hit with no message: loop around to fire the
                 // overflow branch above.
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
             }
         };
         match msg {
@@ -455,8 +485,10 @@ fn node_loop(
         }
         workers.retain(|w| !w.is_finished());
     }
+    // Workers may still be sleeping on the clock: the join must not pin
+    // virtual time or a SimClock could never wake them.
     for w in workers {
-        let _ = w.join();
+        let _ = blocked(&clock, move || w.join());
     }
 }
 
@@ -470,8 +502,13 @@ fn run_dataplane(cmd: Command, store: BlockStore, failed: &AtomicBool) {
         } => {
             let _ = done.send(do_upload(&store, key, &mut tx, buf_bytes));
         }
-        Command::Receive { key, rx, done } => {
-            let _ = done.send(do_receive(&store, key, &rx, failed));
+        Command::Receive {
+            key,
+            rx,
+            expect_bytes,
+            done,
+        } => {
+            let _ = done.send(do_receive(&store, key, &rx, expect_bytes, failed));
         }
         Command::PipelineStage {
             width,
@@ -528,13 +565,18 @@ fn do_upload(store: &BlockStore, key: BlockKey, tx: &mut Tx, buf_bytes: usize) -
     tx.finish()
 }
 
+/// Stream a block in. Frames append straight into one buffer pre-sized to
+/// `expect_bytes` (the plan's block size), so the hot receive path does a
+/// single allocation instead of `Vec` growth doubling over the stream.
 fn do_receive(
     store: &BlockStore,
     key: BlockKey,
     rx: &Rx,
+    expect_bytes: usize,
     failed: &AtomicBool,
 ) -> anyhow::Result<()> {
-    let data = rx.recv_all()?;
+    let mut data = Vec::with_capacity(expect_bytes);
+    rx.recv_into(&mut data)?;
     anyhow::ensure!(
         store.put_unless(key, data, failed),
         "receive aborted: node has failed"
@@ -719,19 +761,25 @@ mod tests {
     use super::*;
     use crate::backend::NativeBackend;
     use crate::cluster::link::{link, LinkSpec};
+    use crate::clock::SimClock;
     use crate::storage::ObjectId;
 
-    fn nic() -> Arc<RateLimiter> {
-        Arc::new(RateLimiter::new(1e9))
+    fn sim() -> ClockHandle {
+        SimClock::handle()
     }
 
-    fn node(id: NodeId) -> NodeHandle {
-        NodeHandle::spawn(id, nic(), nic(), DEFAULT_MAX_WORKERS)
+    fn nic(clock: &ClockHandle) -> Arc<RateLimiter> {
+        Arc::new(RateLimiter::new(clock.clone(), 1e9))
+    }
+
+    fn node_on(clock: &ClockHandle, id: NodeId) -> NodeHandle {
+        NodeHandle::spawn(id, nic(clock), nic(clock), DEFAULT_MAX_WORKERS)
     }
 
     #[test]
     fn put_peek_delete_roundtrip() {
-        let n = node(0);
+        let c = sim();
+        let n = node_on(&c, 0);
         let key = BlockKey::source(ObjectId(1), 0);
         n.put(key, vec![1, 2, 3]).unwrap();
         assert_eq!(*n.peek(key).unwrap().unwrap(), vec![1, 2, 3]);
@@ -741,16 +789,23 @@ mod tests {
 
     #[test]
     fn upload_receive_moves_block() {
-        let a = node(0);
-        let b = node(1);
+        let c = sim();
+        let a = node_on(&c, 0);
+        let b = node_on(&c, 1);
         let key = BlockKey::source(ObjectId(1), 0);
         let data: Vec<u8> = (0..100_000u32).map(|i| i as u8).collect();
         a.put(key, data.clone()).unwrap();
 
         let (tx, rx) = link(a.up.clone(), b.down.clone(), LinkSpec::instant(), 1);
-        let (d1, w1) = mpsc::channel();
-        let (d2, w2) = mpsc::channel();
-        b.send(Command::Receive { key, rx, done: d2 }).unwrap();
+        let (d1, w1) = clock::channel(&c);
+        let (d2, w2) = clock::channel(&c);
+        b.send(Command::Receive {
+            key,
+            rx,
+            expect_bytes: data.len(),
+            done: d2,
+        })
+        .unwrap();
         a.send(Command::Upload {
             key,
             tx,
@@ -767,8 +822,9 @@ mod tests {
     fn worker_cap_queues_then_completes_all() {
         // A cap of 1 forces the second/third uploads to queue; all three
         // must still complete and deliver correct bytes.
-        let a = NodeHandle::spawn(0, nic(), nic(), 1);
-        let sinks: Vec<NodeHandle> = (1..4).map(node).collect();
+        let c = sim();
+        let a = NodeHandle::spawn(0, nic(&c), nic(&c), 1);
+        let sinks: Vec<NodeHandle> = (1..4).map(|id| node_on(&c, id)).collect();
         let data: Vec<u8> = (0..50_000u32).map(|i| (i * 3) as u8).collect();
         for i in 0..3 {
             a.put(BlockKey::source(ObjectId(7), i), data.clone()).unwrap();
@@ -777,9 +833,15 @@ mod tests {
         for (i, sink) in sinks.iter().enumerate() {
             let key = BlockKey::source(ObjectId(7), i);
             let (tx, rx) = link(a.up.clone(), sink.down.clone(), LinkSpec::instant(), 10 + i as u64);
-            let (dr, wr) = mpsc::channel();
-            sink.send(Command::Receive { key, rx, done: dr }).unwrap();
-            let (du, wu) = mpsc::channel();
+            let (dr, wr) = clock::channel(&c);
+            sink.send(Command::Receive {
+                key,
+                rx,
+                expect_bytes: data.len(),
+                done: dr,
+            })
+            .unwrap();
+            let (du, wu) = clock::channel(&c);
             a.send(Command::Upload {
                 key,
                 tx,
@@ -809,21 +871,24 @@ mod tests {
         use std::time::Duration;
         // cap = 1: a running Receive waits on an Upload queued behind it on
         // the SAME node. A hard cap would deadlock; the stall overflow must
-        // run the Upload after ~QUEUE_STALL_OVERFLOW and complete both.
-        let a = NodeHandle::spawn(0, nic(), nic(), 1);
+        // run the Upload after QUEUE_STALL_OVERFLOW of *virtual* time and
+        // complete both — instantly in wall-clock terms under SimClock.
+        let c = sim();
+        let a = NodeHandle::spawn(0, nic(&c), nic(&c), 1);
         let key = BlockKey::source(ObjectId(8), 0);
         let out_key = BlockKey::source(ObjectId(8), 1);
         let data = vec![7u8; 10_000];
         a.put(key, data.clone()).unwrap();
         let (tx, rx) = link(a.up.clone(), a.down.clone(), LinkSpec::instant(), 77);
-        let (dr, wr) = mpsc::channel();
+        let (dr, wr) = clock::channel(&c);
         a.send(Command::Receive {
             key: out_key,
             rx,
+            expect_bytes: data.len(),
             done: dr,
         })
         .unwrap();
-        let (du, wu) = mpsc::channel();
+        let (du, wu) = clock::channel(&c);
         a.send(Command::Upload {
             key,
             tx,
@@ -834,13 +899,16 @@ mod tests {
         wr.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         wu.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         assert_eq!(*a.peek(out_key).unwrap().unwrap(), data);
+        // the stall overflow fired at a virtual deadline, not a wall one
+        assert!(c.now() >= QUEUE_STALL_OVERFLOW);
     }
 
     #[test]
     fn two_node_pipeline_produces_correct_codeword() {
         // 2-stage chain over a (2,1)-ish toy: node0 head, node1 tail.
-        let n0 = node(0);
-        let n1 = node(1);
+        let c = sim();
+        let n0 = node_on(&c, 0);
+        let n1 = node_on(&c, 1);
         let obj = ObjectId(9);
         let o0: Vec<u8> = (0..8192u32).map(|i| (i * 7) as u8).collect();
         n0.put(BlockKey::source(obj, 0), o0.clone()).unwrap();
@@ -848,8 +916,8 @@ mod tests {
 
         let backend: BackendHandle = Arc::new(NativeBackend::new());
         let (tx, rx) = link(n0.up.clone(), n1.down.clone(), LinkSpec::instant(), 2);
-        let (d0, w0) = mpsc::channel();
-        let (d1, w1) = mpsc::channel();
+        let (d0, w0) = clock::channel(&c);
+        let (d1, w1) = clock::channel(&c);
         n1.send(Command::PipelineStage {
             width: Width::W8,
             locals: vec![BlockKey::source(obj, 0)],
@@ -892,9 +960,10 @@ mod tests {
 
     #[test]
     fn classical_encode_with_local_source_and_local_parity() {
-        let coder = node(0);
-        let src_node = node(1);
-        let parity_dst = node(2);
+        let c = sim();
+        let coder = node_on(&c, 0);
+        let src_node = node_on(&c, 1);
+        let parity_dst = node_on(&c, 2);
         let obj = ObjectId(5);
         let block: usize = 32_768;
         let b0: Vec<u8> = (0..block).map(|i| (i * 3) as u8).collect();
@@ -908,7 +977,7 @@ mod tests {
         // remote parity stream
         let (p_tx, p_rx) = link(coder.up.clone(), parity_dst.down.clone(), LinkSpec::instant(), 4);
 
-        let (du, wu) = mpsc::channel();
+        let (du, wu) = clock::channel(&c);
         src_node
             .send(Command::Upload {
                 key: BlockKey::source(obj, 1),
@@ -917,15 +986,16 @@ mod tests {
                 done: du,
             })
             .unwrap();
-        let (dr, wr) = mpsc::channel();
+        let (dr, wr) = clock::channel(&c);
         parity_dst
             .send(Command::Receive {
                 key: BlockKey::coded(obj, 3),
                 rx: p_rx,
+                expect_bytes: block,
                 done: dr,
             })
             .unwrap();
-        let (dc, wc) = mpsc::channel();
+        let (dc, wc) = clock::channel(&c);
         coder
             .send(Command::ClassicalEncode {
                 width: Width::W8,
@@ -963,14 +1033,15 @@ mod tests {
     fn classical_encode_multiple_local_parities() {
         // The generalized ParityDest allows several locally kept outputs —
         // the atomic lowering of a full non-systematic generator needs it.
-        let coder = node(0);
+        let c = sim();
+        let coder = node_on(&c, 0);
         let obj = ObjectId(6);
         let block: usize = 8192;
         let b0: Vec<u8> = (0..block).map(|i| (i * 7) as u8).collect();
         coder.put(BlockKey::source(obj, 0), b0.clone()).unwrap();
 
         let backend: BackendHandle = Arc::new(NativeBackend::new());
-        let (dc, wc) = mpsc::channel();
+        let (dc, wc) = clock::channel(&c);
         coder
             .send(Command::ClassicalEncode {
                 width: Width::W8,
@@ -999,7 +1070,8 @@ mod tests {
 
     #[test]
     fn failed_node_rejects_commands_and_loses_blocks() {
-        let n = node(0);
+        let c = sim();
+        let n = node_on(&c, 0);
         let key = BlockKey::source(ObjectId(11), 0);
         n.put(key, vec![1, 2, 3]).unwrap();
         n.fail();
@@ -1020,20 +1092,23 @@ mod tests {
         // cap = 1: a Receive blocked on a silent link occupies the slot, an
         // Upload queues behind it; the crash must reject the queued Upload
         // (error, not hang) even though the running worker never finishes
-        // on its own.
-        let a = NodeHandle::spawn(0, nic(), nic(), 1);
+        // on its own. Real clock: the 100 ms stall window must not elapse
+        // before the crash lands, which a SimClock would fast-forward.
+        let c = crate::clock::RealClock::handle();
+        let a = NodeHandle::spawn(0, nic(&c), nic(&c), 1);
         let key = BlockKey::source(ObjectId(12), 0);
         a.put(key, vec![5; 100]).unwrap();
-        let (hold_tx, hold_rx) = link(nic(), a.down.clone(), LinkSpec::instant(), 21);
-        let (dr, _wr) = mpsc::channel();
+        let (hold_tx, hold_rx) = link(nic(&c), a.down.clone(), LinkSpec::instant(), 21);
+        let (dr, _wr) = clock::channel(&c);
         a.send(Command::Receive {
             key: BlockKey::source(ObjectId(12), 1),
             rx: hold_rx,
+            expect_bytes: 0,
             done: dr,
         })
         .unwrap();
-        let (up_tx, _up_rx) = link(a.up.clone(), nic(), LinkSpec::instant(), 22);
-        let (du, wu) = mpsc::channel();
+        let (up_tx, _up_rx) = link(a.up.clone(), nic(&c), LinkSpec::instant(), 22);
+        let (du, wu) = clock::channel(&c);
         a.send(Command::Upload {
             key,
             tx: up_tx,
@@ -1049,10 +1124,11 @@ mod tests {
 
     #[test]
     fn upload_missing_block_reports_error() {
-        let a = node(0);
-        let b = node(1);
+        let c = sim();
+        let a = node_on(&c, 0);
+        let b = node_on(&c, 1);
         let (tx, _rx) = link(a.up.clone(), b.down.clone(), LinkSpec::instant(), 5);
-        let (d, w) = mpsc::channel();
+        let (d, w) = clock::channel(&c);
         a.send(Command::Upload {
             key: BlockKey::source(ObjectId(404), 0),
             tx,

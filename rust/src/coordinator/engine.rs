@@ -26,10 +26,11 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::backend::BackendHandle;
+use crate::clock::{self, BusyToken, Clock};
 use crate::cluster::node::{Command, ParityDest, SourceStream};
 use crate::cluster::{Cluster, NodeId, Rx, Tx};
 use crate::metrics::{Recorder, Span};
@@ -148,7 +149,8 @@ impl<'a> PlanExecutor<'a> {
                 step.node
             );
         }
-        let start = Instant::now();
+        let clock = self.cluster.clock();
+        let start = clock.now();
 
         // Lower every edge onto a cluster link.
         let mut txs: HashMap<(usize, usize), Tx> = HashMap::new();
@@ -161,15 +163,18 @@ impl<'a> PlanExecutor<'a> {
             rxs.insert((e.to, e.to_port), rx);
         }
 
-        // Lower every step onto one node command and dispatch it.
+        // Lower every step onto one node command.
         struct InFlight<'r> {
             span: Span<'r>,
-            wait: mpsc::Receiver<anyhow::Result<()>>,
+            wait: clock::Receiver<anyhow::Result<()>>,
         }
         let mut inflight: Vec<InFlight<'_>> = Vec::with_capacity(plan.steps.len());
+        let mut cmds: Vec<(crate::cluster::NodeId, Command)> =
+            Vec::with_capacity(plan.steps.len());
         for (id, step) in plan.steps.iter().enumerate() {
-            let (done, wait) = mpsc::channel();
+            let (done, wait) = clock::channel(clock);
             let span = Span::start(
+                clock,
                 self.recorder,
                 format!("{}{}", self.prefix, step.kind.stage()),
             );
@@ -183,6 +188,7 @@ impl<'a> PlanExecutor<'a> {
                 StepKind::Store { key } => Command::Receive {
                     key: *key,
                     rx: rxs.remove(&(id, 0)).expect("validated: store bound"),
+                    expect_bytes: plan.block_bytes,
                     done,
                 },
                 StepKind::Fold {
@@ -239,22 +245,30 @@ impl<'a> PlanExecutor<'a> {
                     }
                 }
             };
-            self.cluster.node(step.node).send(cmd)?;
+            cmds.push((step.node, cmd));
             inflight.push(InFlight { span, wait });
         }
 
         // Collect completions on one blocking collector thread per step
         // (std mpsc has no select; OS threads are this simulator's
         // currency), so each span closes at its step's true completion
-        // instant with no polling skew. Broken links propagate failure to
-        // every dependent step, so every receiver completes even on error;
-        // the first error in step order is reported after all finish.
+        // instant with no polling skew. Collectors are clock participants
+        // and spawn BEFORE anything is dispatched: their busy tokens pin
+        // virtual time until every collector is parked on its completion
+        // channel, and from then on each completion signal re-counts its
+        // collector as busy at the send instant — so every span's end tick
+        // is read before virtual time can move past it. Broken links
+        // propagate failure to every dependent step, so every receiver
+        // completes even on error; the first error in step order is
+        // reported after all finish.
         let results: Vec<anyhow::Result<()>> = std::thread::scope(|scope| {
             let collectors: Vec<_> = inflight
                 .into_iter()
                 .enumerate()
                 .map(|(i, f)| {
+                    let token = BusyToken::new(clock);
                     scope.spawn(move || {
+                        let _busy = token.bind();
                         let res = f.wait.recv().unwrap_or_else(|_| {
                             Err(anyhow::anyhow!("plan step {i} worker vanished"))
                         });
@@ -263,18 +277,26 @@ impl<'a> PlanExecutor<'a> {
                     })
                 })
                 .collect();
-            collectors
+            // Dispatch only now. On a dispatch error the remaining
+            // commands (and their `done` senders) are dropped, so every
+            // already-spawned collector still unblocks via disconnect and
+            // the scope's implicit join cannot deadlock.
+            let dispatch: anyhow::Result<()> = cmds
+                .into_iter()
+                .try_for_each(|(node, cmd)| self.cluster.node(node).send(cmd));
+            let step_results: Vec<anyhow::Result<()>> = collectors
                 .into_iter()
                 .map(|c| match c.join() {
                     Ok(res) => res,
                     Err(_) => Err(anyhow::anyhow!("plan collector thread panicked")),
                 })
-                .collect()
-        });
+                .collect();
+            dispatch.map(|()| step_results)
+        })?;
         for r in results {
             r?;
         }
-        Ok(start.elapsed())
+        Ok(clock.now().saturating_sub(start))
     }
 
     /// Execute all plans concurrently (one coordinator thread each) and

@@ -18,9 +18,10 @@
 //! classical twin lowers its block gathering onto source/store transfer
 //! steps. Execution is the shared [`PlanExecutor`] in both cases.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::backend::{BackendHandle, Width};
+use crate::clock::Clock;
 use crate::cluster::Cluster;
 use crate::codes::rapidraid::RapidRaidCode;
 use crate::gf::{gauss, GfElem, SliceOps};
@@ -128,7 +129,8 @@ pub fn reconstruct_classical_timed<F: GfElem + SliceOpsBound>(
         .map(|i| inv.row(i).iter().map(|c| c.to_u32()).collect())
         .collect();
 
-    let start = Instant::now();
+    let clock = cluster.clock().clone();
+    let start = clock.now();
     // transfer plan: stream each selected block to the decode node (metered)
     let mut plan = ArchivalPlan::new(object, width, buf_bytes, block_bytes);
     for &pos in &subset {
@@ -157,7 +159,7 @@ pub fn reconstruct_classical_timed<F: GfElem + SliceOpsBound>(
         .collect::<anyhow::Result<_>>()?;
     let refs: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
     let out = backend.gemm(width, &inv_u32, &refs)?;
-    Ok((out, start.elapsed()))
+    Ok((out, clock.now().saturating_sub(start)))
 }
 
 /// Bound alias so the classical twin shares the generic signature.
@@ -253,9 +255,10 @@ mod tests {
     #[test]
     fn pipelined_decode_faster_than_classical_on_slow_network() {
         // k-chain parallel decode vs k serialized downloads into one node.
-        // 25 MB/s keeps the comparison network-bound on the 1-CPU host
-        // (same caveat as the encode-side speedup test in tests/system.rs).
-        let mut spec = ClusterSpec::test(16);
+        // Under the SimClock the comparison is purely the network model —
+        // no 1-CPU host noise — so the paper's qualitative claim is checked
+        // deterministically and the test runs in wall-clock milliseconds.
+        let mut spec = ClusterSpec::test(16).sim();
         spec.bytes_per_sec = 25e6;
         let cluster = Cluster::start(spec);
         let object = ObjectId(4);
@@ -267,9 +270,14 @@ mod tests {
         let job = PipelineJob::from_code(&code, &placement, 65536, block).unwrap();
         archive_pipeline(&cluster, &backend, &job).unwrap();
 
-        let (a, t_pipe) =
+        // hard virtual budget: the k rotated chains must beat k serialized
+        // block transfers by construction, whatever the jitter seed does
+        let clock = cluster.clock().clone();
+        let serial_bound = Duration::from_secs_f64(block as f64 / 25e6) * 11;
+        let (a, t_pipe) = crate::util::assert_virtual_within(&clock, serial_bound, || {
             reconstruct_pipelined(&cluster, &code, &placement.chain, object, &backend, 65536)
-                .unwrap();
+                .unwrap()
+        });
         let (b, t_cls) = reconstruct_classical_timed(
             &cluster,
             &code,

@@ -24,16 +24,18 @@
 //!
 //! | module | contents |
 //! |---|---|
+//! | [`clock`] | pluggable time: `RealClock` (wall time) vs `SimClock` (deterministic discrete-event virtual time), clock channels, participant accounting |
 //! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops, matrices, Gauss |
 //! | [`codes`] | classical Cauchy Reed-Solomon + RapidRAID code constructions, coefficient search, dependency census |
 //! | [`reliability`] | static resilience (probability of data loss, "number of 9's") |
-//! | [`cluster`] | simulated storage cluster: nodes, rate-limited links, congestion, crash-stop failure injection (`fail_node`/`revive_node`) |
+//! | [`cluster`] | simulated storage cluster: nodes, rate-limited links, congestion, crash-stop failure injection (`fail_node`/`revive_node`); everything timed on the spec's clock |
 //! | [`storage`] | objects, blocks, replica placement, block stores |
 //! | [`coordinator`] | the archival system: ArchivalPlan IR + PlanExecutor engine, with classical/pipelined/batch/decode/migration as plan builders; degraded reads via `decode::survey_coded` |
-//! | [`repair`] | failure repair as plan builders: star vs pipelined (Li et al. 2019) single-block repair, repair coefficients from the generator, eager/lazy scheduler |
+//! | [`repair`] | failure repair as plan builders: star vs pipelined (Li et al. 2019) single-block repair, repair coefficients from the generator, eager/lazy/reliability-budget scheduler |
 //! | [`runtime`] | PJRT executor loading the AOT artifacts (`artifacts/*.hlo.txt`); stubbed without the `pjrt` feature |
 //! | [`backend`] | pluggable GF compute: native Rust vs PJRT artifacts |
-//! | [`metrics`] | timing spans ([`metrics::Span`]), percentile candles, report emitters |
+//! | [`metrics`] | clock-timed spans ([`metrics::Span`]), percentile candles, report emitters |
+//! | [`workload`] | long-run workload harness: seeded crash/revive/congestion schedules over batch archival + repair, thousands of virtual seconds per wall second under `SimClock` |
 //! | [`util`] | deterministic PRNG, mini property-test harness, bench timer |
 //!
 //! ## Quickstart
@@ -53,6 +55,7 @@
 
 pub mod backend;
 pub mod bench_scenarios;
+pub mod clock;
 pub mod cluster;
 pub mod codes;
 pub mod coordinator;
@@ -63,3 +66,4 @@ pub mod repair;
 pub mod runtime;
 pub mod storage;
 pub mod util;
+pub mod workload;

@@ -7,12 +7,21 @@
 //! rapidraid bench-cpu    [--block-mib 4] [--pjrt]             # Table II
 //! rapidraid bench-coding [--preset tpc|ec2] [--objects 1|16]
 //!                        [--block-mib 1] [--samples 5]        # Fig. 4
-//! rapidraid bench-congestion [--max-congested 8] [--objects 1]
-//!                        [--block-mib 1] [--samples 3]        # Fig. 5
-//! rapidraid bench-repair [--max-congested 4] [--block-mib 16]
-//!                        [--samples 3]                        # star vs pipelined repair
+//! rapidraid bench-congestion [--preset tpc|tpc-sim] [--max-congested 8]
+//!                        [--objects 1] [--block-mib 1] [--samples 3] # Fig. 5
+//! rapidraid bench-repair [--preset tpc|tpc-sim] [--max-congested 4]
+//!                        [--block-mib 16] [--samples 3]       # star vs pipelined repair
+//! rapidraid sim-longrun  [--virtual-secs 1000] [--epoch-secs 10]
+//!                        [--nodes 50] [--objects 8] [--seed N]
+//!                        [--smoke]                            # DES failure trace
 //! rapidraid demo         [--pjrt]                             # quick e2e
 //! ```
+//!
+//! Every `bench-*` preset accepts a `-sim` suffix (`tpc-sim`, `ec2-sim`,
+//! `test-sim`): the identical workload then runs on the discrete-event
+//! `SimClock` — reported times are virtual network times and a paper-scale
+//! sweep finishes in wall-clock seconds. `sim-longrun` always runs under
+//! the SimClock.
 //!
 //! `bench-coding` / `bench-congestion` report per-stage time breakdowns
 //! (transfer vs fold/gemm vs store) alongside the end-to-end candles —
@@ -40,6 +49,7 @@ fn main() {
         Some("bench-coding") => cmd_bench_coding(&opts),
         Some("bench-congestion") => cmd_bench_congestion(&opts),
         Some("bench-repair") => cmd_bench_repair(&opts),
+        Some("sim-longrun") => cmd_sim_longrun(&opts),
         Some("demo") => cmd_demo(&opts),
         Some(other) => {
             eprintln!("unknown command: {other}\n");
@@ -67,6 +77,7 @@ fn usage() {
          \x20 bench-coding      cluster coding times, Fig. 4\n\
          \x20 bench-congestion  congested-network sweep, Fig. 5\n\
          \x20 bench-repair      single-block repair, star vs pipelined\n\
+         \x20 sim-longrun       long-run crash/repair trace on the SimClock\n\
          \x20 demo              end-to-end migrate+decode demo\n\
          see the doc comment in rust/src/main.rs for options"
     );
@@ -179,6 +190,7 @@ fn cmd_bench_coding(opts: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_bench_congestion(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let preset = opts.get("preset").cloned().unwrap_or_else(|| "tpc".into());
     let max_congested: usize = get(opts, "max-congested", 8);
     let objects: usize = get(opts, "objects", 1);
     let block_mib: usize = get(opts, "block-mib", 1);
@@ -186,6 +198,7 @@ fn cmd_bench_congestion(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let be = backend(opts)?;
     scenarios::fig5_congestion(
         &be,
+        &preset,
         max_congested,
         objects,
         block_mib << 20,
@@ -195,17 +208,42 @@ fn cmd_bench_congestion(opts: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_bench_repair(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let preset = opts.get("preset").cloned().unwrap_or_else(|| "tpc".into());
     let max_congested: usize = get(opts, "max-congested", 4);
     let block_mib: usize = get(opts, "block-mib", 16);
     let samples: usize = get(opts, "samples", 3);
     let be = backend(opts)?;
     scenarios::fig_repair(
         &be,
+        &preset,
         max_congested,
         block_mib << 20,
         samples,
         &mut std::io::stdout().lock(),
     )
+}
+
+fn cmd_sim_longrun(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    use rapidraid::workload::{run_long_run, LongRunConfig};
+    let mut cfg = if opts.contains_key("smoke") {
+        LongRunConfig::smoke()
+    } else {
+        LongRunConfig::paper_scale()
+    };
+    cfg.virtual_secs = get(opts, "virtual-secs", cfg.virtual_secs);
+    cfg.epoch_secs = get(opts, "epoch-secs", cfg.epoch_secs);
+    cfg.nodes = get(opts, "nodes", cfg.nodes);
+    cfg.objects = get(opts, "objects", cfg.objects);
+    cfg.seed = get(opts, "seed", cfg.seed);
+    let be = backend(opts)?;
+    let out = &mut std::io::stdout().lock();
+    let report = run_long_run(&cfg, &be, Some(out))?;
+    anyhow::ensure!(
+        report.all_decodable(),
+        "data loss in the trace: {}",
+        report.summary()
+    );
+    Ok(())
 }
 
 fn cmd_demo(opts: &HashMap<String, String>) -> anyhow::Result<()> {

@@ -11,7 +11,9 @@
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::clock::{ClockHandle, Tick};
 
 pub use crate::util::bench::{bench, once, throughput_mib_s, Candle};
 
@@ -97,27 +99,37 @@ impl Recorder {
     }
 }
 
-/// An in-flight timing span, optionally attached to a [`Recorder`].
+/// An in-flight timing span on a [`ClockHandle`], optionally attached to a
+/// [`Recorder`].
 ///
-/// `start` stamps the open instant; [`Span::finish`] measures the elapsed
-/// time, records it under the span's series name (when a recorder is
-/// attached) and returns it. Detached spans (`rec = None`) still measure —
-/// the executor uses them so timing logic never branches on whether a
-/// recorder is present.
+/// `start` stamps the open tick on the given clock; [`Span::finish`]
+/// measures the elapsed clock time, records it under the span's series
+/// name (when a recorder is attached) and returns it. On a `RealClock`
+/// that is wall time; on a `SimClock` it is virtual time, so the Fig. 4/5
+/// stage breakdowns come out of a simulated run with zero timer noise.
+/// Detached spans (`rec = None`) still measure — the executor uses them so
+/// timing logic never branches on whether a recorder is present.
 #[must_use = "a span measures nothing until finished"]
 pub struct Span<'a> {
+    clock: ClockHandle,
     rec: Option<&'a Recorder>,
     series: String,
-    t0: Instant,
+    t0: Tick,
 }
 
 impl<'a> Span<'a> {
-    /// Open a span named `series`, recording into `rec` on finish.
-    pub fn start(rec: Option<&'a Recorder>, series: impl Into<String>) -> Self {
+    /// Open a span named `series` on `clock`, recording into `rec` on
+    /// finish.
+    pub fn start(
+        clock: &ClockHandle,
+        rec: Option<&'a Recorder>,
+        series: impl Into<String>,
+    ) -> Self {
         Self {
+            clock: clock.clone(),
             rec,
             series: series.into(),
-            t0: Instant::now(),
+            t0: clock.now(),
         }
     }
 
@@ -126,9 +138,10 @@ impl<'a> Span<'a> {
         &self.series
     }
 
-    /// Close the span: record the elapsed time (if attached) and return it.
+    /// Close the span: record the elapsed clock time (if attached) and
+    /// return it.
     pub fn finish(self) -> Duration {
-        let dt = self.t0.elapsed();
+        let dt = self.clock.now().saturating_sub(self.t0);
         if let Some(rec) = self.rec {
             rec.record(&self.series, dt);
         }
@@ -139,11 +152,13 @@ impl<'a> Span<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clock::{Clock, RealClock, SimClock};
 
     #[test]
     fn span_records_into_recorder() {
+        let clock = RealClock::handle();
         let r = Recorder::new();
-        let s = Span::start(Some(&r), "stage/fold");
+        let s = Span::start(&clock, Some(&r), "stage/fold");
         assert_eq!(s.series(), "stage/fold");
         let dt = s.finish();
         let c = r.candle("stage/fold").unwrap();
@@ -153,9 +168,23 @@ mod tests {
 
     #[test]
     fn detached_span_still_measures() {
-        let s = Span::start(None, "unrecorded");
-        std::thread::sleep(Duration::from_millis(2));
+        let clock = RealClock::handle();
+        let s = Span::start(&clock, None, "unrecorded");
+        clock.sleep(Duration::from_millis(2));
         assert!(s.finish() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn sim_span_measures_virtual_time_exactly() {
+        let clock = SimClock::handle();
+        let r = Recorder::new();
+        let s = Span::start(&clock, Some(&r), "virt");
+        clock.sleep(Duration::from_millis(250));
+        assert_eq!(s.finish(), Duration::from_millis(250));
+        assert_eq!(
+            r.candle("virt").unwrap().samples,
+            vec![Duration::from_millis(250)]
+        );
     }
 
     #[test]

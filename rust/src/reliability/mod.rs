@@ -17,5 +17,6 @@ pub mod resilience;
 
 pub use nines::nines;
 pub use resilience::{
-    code_survival_prob, mds_survival_prob, replication_survival_prob, table1, Table1Row,
+    census_survival_prob, code_survival_prob, mds_survival_prob, replication_survival_prob,
+    table1, Table1Row,
 };

@@ -45,6 +45,45 @@ pub fn code_survival_prob<F: GfElem>(generator: &Matrix<F>, p: f64) -> f64 {
     survive
 }
 
+/// EXACT survival probability of an object given its CURRENT survivor
+/// census: only the generator rows in `avail` still exist (the rest are
+/// already lost), and each surviving holder fails i.i.d. with probability
+/// `p` before the next repair round. The object survives a pattern iff the
+/// rows that remain alive keep rank k.
+///
+/// This is the scheduler-facing form of [`code_survival_prob`]: the repair
+/// scheduler's `ReliabilityBudget` trigger converts it to a number of 9's
+/// and fires eager repair when a degraded object's budget is breached.
+/// 2^|avail| patterns with a Gauss each — fine for the paper's n ≤ 16.
+pub fn census_survival_prob<F: GfElem>(
+    generator: &Matrix<F>,
+    avail: &[usize],
+    p: f64,
+) -> f64 {
+    let k = generator.cols();
+    let m = avail.len();
+    assert!(m <= 26, "2^m enumeration not sensible beyond m≈26");
+    assert!((0.0..=1.0).contains(&p), "probability out of range");
+    if m < k {
+        return 0.0;
+    }
+    let mut survive = 0.0;
+    for mask in 0u64..(1u64 << m) {
+        let alive = mask.count_ones() as usize;
+        if alive < k {
+            continue;
+        }
+        let rows: Vec<usize> = (0..m)
+            .filter(|&i| mask >> i & 1 == 1)
+            .map(|i| avail[i])
+            .collect();
+        if rank(&generator.select_rows(&rows)) == k {
+            survive += (1.0 - p).powi(alive as i32) * p.powi((m - alive) as i32);
+        }
+    }
+    survive
+}
+
 fn binom_pmf(n: usize, x: usize, p: f64) -> f64 {
     crate::codes::subsets::binomial(n, x) as f64 * p.powi(x as i32) * (1.0 - p).powi((n - x) as i32)
 }
@@ -127,6 +166,33 @@ mod tests {
         // …but only by the probability weight of that one bad 4-subset
         // pattern: the gap is tiny.
         assert!(mds - rr < 1e-3, "gap too large: {}", mds - rr);
+    }
+
+    #[test]
+    fn census_with_all_rows_matches_full_code_survival() {
+        let code = ClassicalCode::<Gf256>::new(8, 4).unwrap();
+        let all: Vec<usize> = (0..8).collect();
+        for p in [0.2, 0.1, 0.01] {
+            let full = code_survival_prob(code.generator(), p);
+            let census = census_survival_prob(code.generator(), &all, p);
+            assert!((full - census).abs() < 1e-12, "p={p}: {full} vs {census}");
+        }
+    }
+
+    #[test]
+    fn census_degrades_as_survivors_are_lost() {
+        let code = ClassicalCode::<Gf256>::new(8, 4).unwrap();
+        let p = 0.1;
+        let mut last = 1.0;
+        // drop rows one by one: survival must be monotonically non-increasing
+        for lost in 0..5 {
+            let avail: Vec<usize> = (lost..8).collect();
+            let s = census_survival_prob(code.generator(), &avail, p);
+            assert!(s <= last + 1e-12, "lost={lost}: {s} > {last}");
+            last = s;
+        }
+        // below k survivors the object is already gone
+        assert_eq!(census_survival_prob(code.generator(), &[0, 1, 2], p), 0.0);
     }
 
     #[test]

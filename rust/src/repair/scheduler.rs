@@ -26,6 +26,7 @@ use crate::coordinator::decode::survey_coded;
 use crate::coordinator::engine::{ChainPolicy, PlanExecutor};
 use crate::coordinator::plan::ArchivalPlan;
 use crate::gf::{GfElem, SliceOps};
+use crate::reliability::{census_survival_prob, nines};
 use crate::storage::{ObjectId, ReplicaPlacement};
 
 use super::pipeline::PipelinedRepairJob;
@@ -42,7 +43,7 @@ pub enum RepairStrategy {
 }
 
 /// When the scheduler acts on a degraded object.
-#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+#[derive(Copy, Clone, PartialEq, Debug)]
 pub enum RepairTrigger {
     /// Repair every missing block as soon as it is observed.
     Eager,
@@ -50,6 +51,20 @@ pub enum RepairTrigger {
     Lazy {
         /// Missing-block threshold that triggers repair.
         min_missing: usize,
+    },
+    /// Defer while the object's *predicted* reliability stays at or above
+    /// the budget: [`crate::reliability::census_survival_prob`] over the
+    /// current survivor census (each surviving holder failing i.i.d. with
+    /// `p_node` before the next pass), converted to
+    /// [`crate::reliability::nines`]. An object whose census drops below
+    /// `min_nines` nines is repaired eagerly; healthier degraded objects
+    /// keep serving degraded reads — the Table-I reliability model driving
+    /// the repair-traffic trade directly.
+    ReliabilityBudget {
+        /// Minimum acceptable number of 9's of survival probability.
+        min_nines: u32,
+        /// Per-node failure probability assumed for the risk window.
+        p_node: f64,
     },
 }
 
@@ -141,10 +156,20 @@ impl RepairScheduler {
             if missing.is_empty() {
                 continue;
             }
-            if let RepairTrigger::Lazy { min_missing } = self.trigger {
-                if missing.len() < min_missing {
-                    report.deferred.push(p.object);
-                    continue;
+            match self.trigger {
+                RepairTrigger::Eager => {}
+                RepairTrigger::Lazy { min_missing } => {
+                    if missing.len() < min_missing {
+                        report.deferred.push(p.object);
+                        continue;
+                    }
+                }
+                RepairTrigger::ReliabilityBudget { min_nines, p_node } => {
+                    let survive = census_survival_prob(code.generator(), &avail, p_node);
+                    if nines(survive) >= min_nines {
+                        report.deferred.push(p.object);
+                        continue;
+                    }
                 }
             }
             match plan_object(
@@ -359,6 +384,69 @@ mod tests {
                 .unwrap()
                 .is_some());
         }
+    }
+
+    #[test]
+    fn reliability_budget_breach_triggers_eager_repair() {
+        use crate::coordinator::survey_coded;
+        use crate::reliability::{census_survival_prob, nines};
+        let object = ObjectId(306);
+        let (cluster, code, placement, _blocks, backend) = archived(10, 8, 4, 4 * 1024, object);
+        cluster.fail_node(2);
+        let (avail, _) = survey_coded(&cluster, &placement.chain, object);
+        assert_eq!(avail.len(), 7);
+        let p_node = 0.1;
+        let have = nines(census_survival_prob(code.generator(), &avail, p_node));
+
+        // budget above the current census -> breach -> repair fires
+        let mut placements = [placement];
+        let sched = RepairScheduler::new(
+            RepairStrategy::Pipelined,
+            RepairTrigger::ReliabilityBudget {
+                min_nines: have + 1,
+                p_node,
+            },
+        );
+        let report = sched
+            .repair(&cluster, &code, &mut placements, &backend, &FifoPolicy, 1024)
+            .unwrap();
+        assert_eq!(report.actions.len(), 1, "budget breach must repair");
+        assert!(report.deferred.is_empty());
+        assert!(!cluster.is_failed(report.actions[0].new_node));
+        assert!(cluster
+            .node(report.actions[0].new_node)
+            .peek(BlockKey::coded(object, 2))
+            .unwrap()
+            .is_some());
+    }
+
+    #[test]
+    fn reliability_budget_within_budget_defers() {
+        use crate::coordinator::survey_coded;
+        use crate::reliability::{census_survival_prob, nines};
+        let object = ObjectId(307);
+        let (cluster, code, placement, _blocks, backend) = archived(10, 8, 4, 4 * 1024, object);
+        cluster.fail_node(4);
+        let (avail, _) = survey_coded(&cluster, &placement.chain, object);
+        let p_node = 0.1;
+        let have = nines(census_survival_prob(code.generator(), &avail, p_node));
+        assert!(have >= 1, "7 survivors of an (8,4) code clear one nine");
+
+        // census still meets the budget -> the degraded object is deferred
+        let mut placements = [placement];
+        let sched = RepairScheduler::new(
+            RepairStrategy::Star,
+            RepairTrigger::ReliabilityBudget {
+                min_nines: have,
+                p_node,
+            },
+        );
+        let report = sched
+            .repair(&cluster, &code, &mut placements, &backend, &FifoPolicy, 1024)
+            .unwrap();
+        assert!(report.actions.is_empty());
+        assert_eq!(report.deferred, vec![object]);
+        assert_eq!(placements[0].chain[4], 4, "deferred chain must not move");
     }
 
     #[test]

@@ -1,10 +1,19 @@
-//! Test watchdog: bound an operation's wall-clock time.
+//! Test watchdogs: bound an operation's wall-clock time, or assert a
+//! bound on the *virtual* time it consumed.
 //!
 //! A hang in an error path is itself a bug this repo's failure-injection
 //! tests want caught, so every integration test wraps risky operations in
 //! [`with_timeout`] instead of trusting the harness' global timeout.
+//! [`with_timeout`] is deliberately wall-clock even under a `SimClock`:
+//! a deadlocked simulation is exactly the case where virtual time stops
+//! advancing, so only a wall deadline can catch it. The complementary
+//! [`assert_virtual_within`] bounds how much *simulated* time an operation
+//! was allowed to consume — a perf regression guard that is exact and
+//! noise-free because virtual elapsed time has no timer jitter.
 
 use std::time::Duration;
+
+use crate::clock::{Clock, ClockHandle};
 
 /// Run `f` on a fresh thread and wait at most `secs` for it: panics with a
 /// watchdog message when the deadline passes (the worker thread is leaked —
@@ -27,9 +36,24 @@ pub fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send +
     }
 }
 
+/// Run `f` and panic unless it consumed at most `limit` of `clock` time.
+/// Under a `SimClock` this bounds the operation's simulated duration
+/// exactly; under a `RealClock` it degrades to a wall-clock budget check.
+pub fn assert_virtual_within<T>(clock: &ClockHandle, limit: Duration, f: impl FnOnce() -> T) -> T {
+    let t0 = clock.now();
+    let v = f();
+    let dt = clock.now().saturating_sub(t0);
+    assert!(
+        dt <= limit,
+        "operation consumed {dt:?} of clock time (budget {limit:?})"
+    );
+    v
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clock::SimClock;
 
     #[test]
     fn returns_value_in_time() {
@@ -48,5 +72,24 @@ mod tests {
     #[should_panic(expected = "operation panicked")]
     fn propagates_inner_panic() {
         with_timeout(5, || panic!("inner"));
+    }
+
+    #[test]
+    fn virtual_budget_passes_within_limit() {
+        let clock = SimClock::handle();
+        let out = assert_virtual_within(&clock, Duration::from_secs(2), || {
+            clock.sleep(Duration::from_secs(1));
+            42
+        });
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "clock time")]
+    fn virtual_budget_panics_when_exceeded() {
+        let clock = SimClock::handle();
+        assert_virtual_within(&clock, Duration::from_millis(10), || {
+            clock.sleep(Duration::from_secs(5));
+        });
     }
 }

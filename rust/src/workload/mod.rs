@@ -1,0 +1,455 @@
+//! Long-run workload harness: a seeded crash/revive/congestion schedule
+//! driving batch archival + the [`RepairScheduler`] over thousands of
+//! *virtual* seconds.
+//!
+//! This is the payoff of the [`crate::clock`] refactor: the identical
+//! cluster, codes and repair machinery that the paper-faithful wall-clock
+//! benchmarks use — nothing is mocked — run here on a [`SimClock`], so a
+//! 50-node cluster living through a multi-minute failure trace (the
+//! regime XORing Elephants shows the interesting reliability questions
+//! live in) costs milliseconds of wall time and is reproducible from a
+//! single seed.
+//!
+//! Shape of a run:
+//!
+//! 1. ingest + pipeline-archive `objects` RapidRAID objects on rotated
+//!    chains, then drop the source replicas (archival is the only
+//!    redundancy, as after a completed migration);
+//! 2. per epoch (fixed virtual length): revive nodes whose outage ended,
+//!    maybe crash-stop a node (never beyond what repair can absorb —
+//!    see [`LongRunConfig::max_down`]), churn one congestion profile,
+//!    then run a scheduler pass and record an [`EpochStats`];
+//! 3. finally decode every object (degraded reads allowed) and compare
+//!    byte-for-byte against the ingested originals.
+
+use std::io::Write;
+use std::time::Duration;
+
+use crate::backend::BackendHandle;
+use crate::clock::{Clock, SimClock};
+use crate::cluster::{Cluster, ClusterSpec, CongestionSpec, NodeId};
+use crate::codes::rapidraid::RapidRaidCode;
+use crate::coordinator::batch::{rotated_chain, run_batch, BatchJob};
+use crate::coordinator::decode::survey_coded;
+use crate::coordinator::engine::CongestionAwarePolicy;
+use crate::coordinator::ingest::ingest_object;
+use crate::coordinator::pipeline::PipelineJob;
+use crate::coordinator::reconstruct;
+use crate::gf::Gf256;
+use crate::repair::{RepairScheduler, RepairStrategy, RepairTrigger};
+use crate::storage::{BlockKey, ObjectId, ReplicaPlacement};
+use crate::util::SplitMix64;
+
+/// Configuration of one long-run trace.
+#[derive(Clone, Debug)]
+pub struct LongRunConfig {
+    /// Cluster size (the paper's deployment scale: 50 ThinClients).
+    pub nodes: usize,
+    /// Code length per object.
+    pub n: usize,
+    /// Message length per object.
+    pub k: usize,
+    /// Coefficient-search seed of the (n, k) RR8 code.
+    pub code_seed: u64,
+    /// Number of archived objects under test.
+    pub objects: usize,
+    /// Bytes per source block.
+    pub block_bytes: usize,
+    /// Network frame size.
+    pub buf_bytes: usize,
+    /// Total virtual runtime of the schedule, seconds.
+    pub virtual_secs: u64,
+    /// Virtual length of one epoch, seconds.
+    pub epoch_secs: u64,
+    /// Seed of the crash/revive/congestion schedule.
+    pub seed: u64,
+    /// Per-epoch probability of a crash attempt.
+    pub p_crash: f64,
+    /// Per-epoch probability of toggling the congestion profile.
+    pub p_congest: f64,
+    /// Cap on simultaneously crashed nodes. Crashes are also refused when
+    /// any object would drop below `k + 1` decodable survivors, so a
+    /// seeded schedule can never (by construction) lose data the final
+    /// verification would miss.
+    pub max_down: usize,
+    /// Outage length: a crashed node revives after this many epochs.
+    pub revive_after_epochs: u64,
+    /// Repair planner used by every pass.
+    pub strategy: RepairStrategy,
+    /// Repair trigger policy.
+    pub trigger: RepairTrigger,
+    /// Concurrent-repair bound of the scheduler.
+    pub max_concurrent_repairs: usize,
+}
+
+impl LongRunConfig {
+    /// Paper-scale trace: 50 nodes, 8 × (16,11) objects, ≥ 1000 virtual
+    /// seconds of crash/revive/congestion in 10-second epochs. Finishes in
+    /// well under 5 s of wall clock on a laptop-class host.
+    pub fn paper_scale() -> Self {
+        Self {
+            nodes: 50,
+            n: 16,
+            k: 11,
+            code_seed: 5,
+            objects: 8,
+            block_bytes: 128 * 1024,
+            buf_bytes: 32 * 1024,
+            virtual_secs: 1000,
+            epoch_secs: 10,
+            seed: 0xC0FF_EE00,
+            p_crash: 0.4,
+            p_congest: 0.25,
+            max_down: 2,
+            revive_after_epochs: 3,
+            strategy: RepairStrategy::Pipelined,
+            trigger: RepairTrigger::Eager,
+            max_concurrent_repairs: 4,
+        }
+    }
+
+    /// CI smoke: same 50-node / 8-object scale, but a single guaranteed
+    /// crash + repair round over a handful of epochs.
+    pub fn smoke() -> Self {
+        Self {
+            virtual_secs: 30,
+            p_crash: 1.0,
+            p_congest: 0.0,
+            max_down: 1,
+            ..Self::paper_scale()
+        }
+    }
+}
+
+/// What one epoch of the schedule did and observed.
+#[derive(Clone, Debug, Default)]
+pub struct EpochStats {
+    /// Epoch index.
+    pub epoch: u64,
+    /// Virtual time at the epoch's start (since the run began).
+    pub at: Duration,
+    /// Nodes crash-stopped this epoch.
+    pub crashed: Vec<NodeId>,
+    /// Nodes revived this epoch.
+    pub revived: Vec<NodeId>,
+    /// Node whose congestion profile was toggled on, if any.
+    pub congested: Option<NodeId>,
+    /// Node whose congestion profile was toggled off, if any.
+    pub uncongested: Option<NodeId>,
+    /// Blocks successfully repaired by this epoch's scheduler pass.
+    pub repaired: usize,
+    /// Repairs that failed at execution (retried next pass).
+    pub repair_failures: usize,
+    /// Objects deferred by the trigger policy.
+    pub deferred: usize,
+    /// Objects the pass could not plan a repair for.
+    pub unschedulable: usize,
+    /// Coded blocks still missing across all objects after the pass.
+    pub missing_after: usize,
+}
+
+/// Outcome of a whole long-run trace.
+#[derive(Clone, Debug)]
+pub struct LongRunReport {
+    /// Per-epoch observations, in order.
+    pub epochs: Vec<EpochStats>,
+    /// Total virtual time the schedule covered.
+    pub virtual_elapsed: Duration,
+    /// Total blocks repaired across all passes.
+    pub repairs_total: usize,
+    /// Total crash events injected.
+    pub crashes_total: usize,
+    /// Objects that decoded byte-identically at the end.
+    pub objects_decodable: usize,
+    /// Objects under test.
+    pub objects_total: usize,
+    /// Coded blocks still missing at the end (after the final pass).
+    pub final_missing: usize,
+}
+
+impl LongRunReport {
+    /// True iff every object survived the whole schedule.
+    pub fn all_decodable(&self) -> bool {
+        self.objects_decodable == self.objects_total
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} epochs / {:?} virtual: {} crashes, {} repairs, {}/{} objects decodable, {} blocks missing",
+            self.epochs.len(),
+            self.virtual_elapsed,
+            self.crashes_total,
+            self.repairs_total,
+            self.objects_decodable,
+            self.objects_total,
+            self.final_missing
+        )
+    }
+}
+
+/// Would crash-stopping `pick` leave every object with a decodable margin?
+/// Requires ≥ k+1 surviving blocks *and* an independent k-subset per
+/// object after the hypothetical crash.
+fn safe_to_crash(
+    cluster: &Cluster,
+    code: &RapidRaidCode<Gf256>,
+    placements: &[ReplicaPlacement],
+    pick: NodeId,
+) -> bool {
+    placements.iter().all(|p| {
+        let (avail, _) = survey_coded(cluster, &p.chain, p.object);
+        let remaining: Vec<usize> = avail
+            .into_iter()
+            .filter(|&pos| p.chain[pos] != pick)
+            .collect();
+        remaining.len() > p.k && code.find_decodable_subset(&remaining).is_some()
+    })
+}
+
+/// Run one long-run trace on a fresh `SimClock` cluster. Per-epoch lines
+/// go to `out` when given; the returned report carries everything a test
+/// or harness needs to assert on.
+pub fn run_long_run(
+    cfg: &LongRunConfig,
+    backend: &BackendHandle,
+    mut out: Option<&mut dyn Write>,
+) -> anyhow::Result<LongRunReport> {
+    anyhow::ensure!(cfg.n <= cfg.nodes, "chain longer than the cluster");
+    anyhow::ensure!(cfg.k < cfg.n, "need redundancy (k < n)");
+    anyhow::ensure!(cfg.epoch_secs > 0, "epochs must have positive length");
+    anyhow::ensure!(cfg.objects > 0, "need at least one object");
+
+    let clock = SimClock::handle();
+    let cluster = Cluster::start(ClusterSpec::tpc(cfg.nodes).with_clock(clock.clone()));
+    let code = RapidRaidCode::<Gf256>::with_seed(cfg.n, cfg.k, cfg.code_seed)?;
+
+    // Archive the fleet: rotated chains spread the load over the cluster.
+    let spread = (cfg.nodes / cfg.objects).max(1);
+    let mut placements = Vec::with_capacity(cfg.objects);
+    let mut originals = Vec::with_capacity(cfg.objects);
+    let mut jobs = Vec::with_capacity(cfg.objects);
+    for i in 0..cfg.objects {
+        let object = ObjectId(0x10_0000 + i as u64);
+        let chain = rotated_chain(cfg.nodes, cfg.n, i * spread);
+        let placement = ReplicaPlacement::new(object, cfg.k, chain)?;
+        let blocks = ingest_object(&cluster, &placement, cfg.block_bytes)?;
+        jobs.push(BatchJob::Pipeline(PipelineJob::from_code(
+            &code,
+            &placement,
+            cfg.buf_bytes,
+            cfg.block_bytes,
+        )?));
+        originals.push(blocks);
+        placements.push(placement);
+    }
+    run_batch(&cluster, backend, &jobs)?;
+    // Post-migration state: coded blocks are the only redundancy.
+    for p in &placements {
+        for (node, idx) in p.replica_map() {
+            cluster.node(node).delete(BlockKey::source(p.object, idx))?;
+        }
+    }
+
+    let sched = RepairScheduler::new(cfg.strategy, cfg.trigger)
+        .with_max_concurrent(cfg.max_concurrent_repairs);
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut down: Vec<(NodeId, u64)> = Vec::new(); // (node, revive epoch)
+    let mut congested: Option<NodeId> = None;
+
+    let t0 = clock.now();
+    let epoch_len = Duration::from_secs(cfg.epoch_secs);
+    let epochs = cfg.virtual_secs.div_ceil(cfg.epoch_secs);
+    let mut report = LongRunReport {
+        epochs: Vec::with_capacity(epochs as usize),
+        virtual_elapsed: Duration::ZERO,
+        repairs_total: 0,
+        crashes_total: 0,
+        objects_decodable: 0,
+        objects_total: cfg.objects,
+        final_missing: 0,
+    };
+
+    for e in 0..epochs {
+        let epoch_start = clock.now();
+        let mut stats = EpochStats {
+            epoch: e,
+            at: epoch_start.saturating_sub(t0),
+            ..EpochStats::default()
+        };
+
+        // 1. outages end
+        down.retain(|&(id, revive_at)| {
+            if revive_at <= e {
+                cluster.revive_node(id);
+                stats.revived.push(id);
+                false
+            } else {
+                true
+            }
+        });
+
+        // 2. maybe crash a node (draws happen every epoch so the schedule
+        // is a fixed function of the seed, not of prior outcomes)
+        let crash_roll = rng.chance(cfg.p_crash);
+        let crash_pick = {
+            let alive = cluster.alive_nodes();
+            alive[rng.below(alive.len() as u64) as usize]
+        };
+        if crash_roll
+            && down.len() < cfg.max_down
+            && safe_to_crash(&cluster, &code, &placements, crash_pick)
+        {
+            cluster.fail_node(crash_pick);
+            down.push((crash_pick, e + cfg.revive_after_epochs));
+            stats.crashed.push(crash_pick);
+            report.crashes_total += 1;
+        }
+
+        // 3. congestion churn: one netem profile roams the cluster
+        if rng.chance(cfg.p_congest) {
+            match congested.take() {
+                Some(id) => {
+                    cluster.uncongest(id);
+                    stats.uncongested = Some(id);
+                }
+                None => {
+                    let alive = cluster.alive_nodes();
+                    let id = alive[rng.below(alive.len() as u64) as usize];
+                    cluster.congest(id, &CongestionSpec::mild());
+                    congested = Some(id);
+                    stats.congested = Some(id);
+                }
+            }
+        }
+
+        // 4. repair pass
+        let pass = sched.repair(
+            &cluster,
+            &code,
+            &mut placements,
+            backend,
+            &CongestionAwarePolicy,
+            cfg.buf_bytes,
+        )?;
+        stats.repaired = pass.actions.len();
+        stats.repair_failures = pass.failed.len();
+        stats.deferred = pass.deferred.len();
+        stats.unschedulable = pass.unschedulable.len();
+        report.repairs_total += pass.actions.len();
+
+        // 5. census after the pass
+        stats.missing_after = placements
+            .iter()
+            .map(|p| {
+                let (avail, _) = survey_coded(&cluster, &p.chain, p.object);
+                p.n - avail.len()
+            })
+            .sum();
+
+        if let Some(o) = out.as_deref_mut() {
+            writeln!(
+                o,
+                "epoch {:>4} @ {:>6.1}s: crash={:?} revive={:?} congest={:?}/{:?} repaired={} failed={} deferred={} missing={}",
+                stats.epoch,
+                stats.at.as_secs_f64(),
+                stats.crashed,
+                stats.revived,
+                stats.congested,
+                stats.uncongested,
+                stats.repaired,
+                stats.repair_failures,
+                stats.deferred,
+                stats.missing_after,
+            )?;
+        }
+        report.epochs.push(stats);
+
+        // 6. epochs have a fixed virtual length; the idle remainder costs
+        // nothing under the SimClock
+        clock.sleep_until(epoch_start + epoch_len);
+    }
+
+    report.virtual_elapsed = clock.now().saturating_sub(t0);
+    report.final_missing = report.epochs.last().map(|s| s.missing_after).unwrap_or(0);
+
+    // Final verification: every object must still decode byte-identically
+    // (degraded reads allowed — outstanding outages count as missing).
+    for (p, blocks) in placements.iter().zip(&originals) {
+        if let Ok(rec) = reconstruct(&cluster, &code, &p.chain, p.object, backend) {
+            if rec == *blocks {
+                report.objects_decodable += 1;
+            }
+        }
+    }
+    if let Some(o) = out.as_deref_mut() {
+        writeln!(o, "{}", report.summary())?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use std::sync::Arc;
+
+    fn tiny() -> LongRunConfig {
+        LongRunConfig {
+            nodes: 12,
+            n: 8,
+            k: 4,
+            code_seed: 7,
+            objects: 2,
+            block_bytes: 8 * 1024,
+            buf_bytes: 2 * 1024,
+            virtual_secs: 60,
+            epoch_secs: 10,
+            seed: 42,
+            p_crash: 1.0,
+            p_congest: 0.5,
+            max_down: 2,
+            revive_after_epochs: 2,
+            strategy: RepairStrategy::Pipelined,
+            trigger: RepairTrigger::Eager,
+            max_concurrent_repairs: 2,
+        }
+    }
+
+    #[test]
+    fn tiny_trace_repairs_and_stays_decodable() {
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let report = run_long_run(&tiny(), &backend, None).unwrap();
+        assert_eq!(report.epochs.len(), 6);
+        assert!(report.virtual_elapsed >= Duration::from_secs(60));
+        assert!(report.crashes_total >= 1, "p_crash=1 must crash something");
+        assert!(report.all_decodable(), "{}", report.summary());
+    }
+
+    #[test]
+    fn trace_is_deterministic_per_seed() {
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let a = run_long_run(&tiny(), &backend, None).unwrap();
+        let b = run_long_run(&tiny(), &backend, None).unwrap();
+        let shape = |r: &LongRunReport| {
+            r.epochs
+                .iter()
+                .map(|e| (e.epoch, e.crashed.clone(), e.revived.clone(), e.repaired))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(shape(&a), shape(&b));
+        assert_eq!(a.crashes_total, b.crashes_total);
+        assert_eq!(a.virtual_elapsed, b.virtual_elapsed);
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let mut bad = tiny();
+        bad.n = 20; // chain longer than the 12-node cluster
+        assert!(run_long_run(&bad, &backend, None).is_err());
+        let mut bad = tiny();
+        bad.epoch_secs = 0;
+        assert!(run_long_run(&bad, &backend, None).is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! Grep-enforcement of the virtual-time refactor: no wall-clock primitive
+//! may appear in `cluster/`, `coordinator/` or `repair/` — all time goes
+//! through the `Clock` trait, whose only wall implementation lives in
+//! `clock/` (RealClock). A reintroduced `Instant::now()` or
+//! `thread::sleep` would silently break SimClock determinism, so this test
+//! fails the build instead.
+
+use std::path::{Path, PathBuf};
+
+const FORBIDDEN: &[&str] = &["Instant::now", "thread::sleep", "SystemTime"];
+const DIRS: &[&str] = &["rust/src/cluster", "rust/src/coordinator", "rust/src/repair"];
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).expect("readable source dir") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn dataplane_sources_are_free_of_wall_clock_calls() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut violations = Vec::new();
+    let mut checked = 0usize;
+    for dir in DIRS {
+        let mut files = Vec::new();
+        rust_files(&root.join(dir), &mut files);
+        assert!(!files.is_empty(), "{dir} has no Rust sources?");
+        for file in files {
+            checked += 1;
+            let text = std::fs::read_to_string(&file).expect("readable source");
+            for (lineno, line) in text.lines().enumerate() {
+                for pat in FORBIDDEN {
+                    if line.contains(pat) {
+                        violations.push(format!(
+                            "{}:{}: `{pat}` — use the cluster Clock instead",
+                            file.strip_prefix(root).unwrap_or(&file).display(),
+                            lineno + 1
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    assert!(checked >= 10, "suspiciously few files checked ({checked})");
+    assert!(
+        violations.is_empty(),
+        "wall-clock primitives leaked back into the dataplane:\n{}",
+        violations.join("\n")
+    );
+}
