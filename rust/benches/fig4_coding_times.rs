@@ -24,11 +24,18 @@ fn main() {
 
     for preset in ["tpc", "ec2"] {
         // Fig. 4a: one object on an idle cluster
-        fig4_coding_times(&backend, preset, 1, block, samples, &mut out).expect("fig4a");
+        let report =
+            fig4_coding_times(&backend, preset, 1, block, samples, &mut out).expect("fig4a");
+        report
+            .write_to_dir(std::path::Path::new("."))
+            .expect("write BENCH json");
         println!();
         // Fig. 4b: 16 concurrent objects (fewer samples; each is 16 jobs)
-        fig4_coding_times(&backend, preset, 16, block, samples.div_ceil(2), &mut out)
+        let report = fig4_coding_times(&backend, preset, 16, block, samples.div_ceil(2), &mut out)
             .expect("fig4b");
+        report
+            .write_to_dir(std::path::Path::new("."))
+            .expect("write BENCH json");
         println!();
     }
 }

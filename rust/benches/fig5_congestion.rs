@@ -35,12 +35,15 @@ fn main() {
     let mut out = std::io::stdout().lock();
 
     // Fig. 5a: single object
-    fig5_congestion(&backend, &preset, max_congested, 1, block, samples, &mut out)
+    let report = fig5_congestion(&backend, &preset, max_congested, 1, block, samples, &mut out)
         .expect("fig5a");
+    report
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
     println!();
     // Fig. 5b: 16 concurrent objects (quarter-size blocks + coarser sweep
     // to bound wall time; the per-object contention shape is preserved)
-    fig5_congestion(
+    let report = fig5_congestion(
         &backend,
         &preset,
         max_congested.min(4),
@@ -50,4 +53,7 @@ fn main() {
         &mut out,
     )
     .expect("fig5b");
+    report
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
 }

@@ -31,7 +31,7 @@ fn main() {
         .and_then(|v| v.parse::<usize>().ok())
         .unwrap_or(4);
     let backend: BackendHandle = Arc::new(NativeBackend::new());
-    fig_repair(
+    let report = fig_repair(
         &backend,
         &preset,
         max_congested,
@@ -40,4 +40,7 @@ fn main() {
         &mut std::io::stdout().lock(),
     )
     .expect("fig_repair");
+    report
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
 }

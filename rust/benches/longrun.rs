@@ -11,14 +11,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::util::bench::env_u64;
 use rapidraid::workload::{run_long_run, LongRunConfig};
-
-fn env_u64(key: &str, default: u64) -> u64 {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
 
 fn main() {
     let mut cfg = if std::env::var("SMOKE").is_ok() {

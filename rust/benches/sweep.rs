@@ -1,0 +1,46 @@
+//! Bench: the `rapidraid sweep` grid — repair triggers × chain policies ×
+//! CPU cost profiles, each cell one seeded long-run failure trace on the
+//! SimClock.
+//!
+//! Run: `cargo bench --bench sweep`
+//! Env: VIRTUAL_SECS, NODES, OBJECTS, SEED (override the base trace),
+//! SMOKE=1 (short traces, 4-cell grid — the CI configuration). Writes
+//! BENCH_sweep.json.
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::util::bench::env_u64;
+use rapidraid::workload::{run_sweep, LongRunConfig, SweepConfig};
+
+fn main() {
+    let smoke = std::env::var("SMOKE").is_ok();
+    let mut base = if smoke {
+        LongRunConfig::smoke()
+    } else {
+        LongRunConfig::paper_scale()
+    };
+    base.virtual_secs = env_u64("VIRTUAL_SECS", base.virtual_secs);
+    base.nodes = env_u64("NODES", base.nodes as u64) as usize;
+    base.objects = env_u64("OBJECTS", base.objects as u64) as usize;
+    base.seed = env_u64("SEED", base.seed);
+    let grid = if smoke {
+        let mut g = SweepConfig::smoke();
+        g.base = base;
+        g
+    } else {
+        SweepConfig::default_grid(base)
+    };
+
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let (rows, report) =
+        run_sweep(&grid, &backend, &mut std::io::stdout().lock()).expect("sweep");
+    assert!(
+        rows.iter().all(|r| r.report.all_decodable()),
+        "data loss in a sweep cell"
+    );
+    let path = report
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
+    println!("# wrote {}", path.display());
+}

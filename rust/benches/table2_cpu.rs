@@ -20,12 +20,18 @@ fn main() {
     let mut out = std::io::stdout().lock();
 
     let native: BackendHandle = Arc::new(NativeBackend::new());
-    table2_cpu(&native, block, &mut out).expect("native table2");
+    let report = table2_cpu(&native, block, &mut out).expect("native table2");
+    report
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
 
     match PjrtBackend::load(&rapidraid::runtime::artifacts::default_dir()) {
         Ok(be) => {
             let be: BackendHandle = Arc::new(be);
-            table2_cpu(&be, block, &mut out).expect("pjrt table2");
+            let report = table2_cpu(&be, block, &mut out).expect("pjrt table2");
+            report
+                .write_to_dir(std::path::Path::new("."))
+                .expect("write BENCH json");
         }
         Err(e) => eprintln!("# pjrt backend skipped: {e} (run `make artifacts`)"),
     }

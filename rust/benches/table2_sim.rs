@@ -1,0 +1,43 @@
+//! Bench: the `table2-sim` preset — the paper's Table-II classical-vs-
+//! pipelined coding-time comparison reproduced on the discrete-event
+//! SimClock, with per-node GF compute charged by the `UniformCost` and
+//! heterogeneous `ProfileCost` models (k=8/n=11 and k=16/n=22).
+//!
+//! Run: `cargo bench --bench table2_sim`
+//! Env: BLOCK_KIB (default 1024), SEED (default 5), SMOKE=1 (128 KiB
+//! blocks — the CI configuration). Writes BENCH_table2-sim.json.
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::bench_scenarios::table2_sim;
+use rapidraid::util::bench::env_u64;
+
+fn main() {
+    let block_kib = if std::env::var("SMOKE").is_ok() {
+        128
+    } else {
+        env_u64("BLOCK_KIB", 1024) as usize
+    };
+    let seed = env_u64("SEED", 5);
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let (rows, report) = table2_sim(
+        &backend,
+        block_kib << 10,
+        seed,
+        &mut std::io::stdout().lock(),
+    )
+    .expect("table2-sim");
+    assert_eq!(rows.len(), 4, "2 code sizes x 2 cost models expected");
+    assert!(
+        report
+            .spans
+            .iter()
+            .any(|c| c.name.ends_with(".compute") && c.max() > std::time::Duration::ZERO),
+        "cost models charged no compute"
+    );
+    let path = report
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
+    println!("# wrote {}", path.display());
+}

@@ -53,7 +53,7 @@ fn mul_slice_xor16_bytes(c: u16, src: &[u8], dst: &mut [u8]) {
 pub fn mul_xor_bytes(w: Width, c: u32, src: &[u8], dst: &mut [u8]) {
     match w {
         Width::W8 => {
-            Gf256::mul_slice_xor(Gf256(c as u8), bytes_as_gf256(src), bytes_as_gf256_mut(dst))
+            Gf256::mul_slice_xor(Gf256(c as u8), bytes_as_gf256(src), bytes_as_gf256_mut(dst));
         }
         Width::W16 => mul_slice_xor16_bytes(c as u16, src, dst),
     }

@@ -6,12 +6,21 @@
 //!
 //! * [`table2_cpu`] — Table II: CPU-only coding time of CEC / RR8 / RR16
 //!   (all compute on one node, no network).
+//! * [`table2_sim`] — the `table2-sim` preset: the same classical-vs-
+//!   pipelined coding-time comparison *in the simulator*, with compute
+//!   charged in virtual time by [`UniformCost`]/[`ProfileCost`] models
+//!   (uniform and heterogeneous EC2-class hardware, k=8/n=11 and
+//!   k=16/n=22).
 //! * [`fig4_coding_times`] — Fig. 4: single-object and 16-concurrent-object
 //!   coding times on the TPC / EC2 presets.
 //! * [`fig5_congestion`] — Fig. 5: coding time vs number of congested
 //!   nodes (netem-equivalent profile).
 //! * [`fig_repair`] — beyond the paper: single-block repair time, star vs
 //!   pipelined (Li et al. 2019), under the same netem congestion sweep.
+//!
+//! Every harness returns a [`BenchJson`] alongside its human-readable
+//! table; the CLI and bench binaries write it out as
+//! `BENCH_<preset>.json` so the perf trajectory is trackable across PRs.
 
 use std::io::Write;
 use std::time::Duration;
@@ -24,7 +33,8 @@ use crate::codes::ClassicalCode;
 use crate::coordinator::batch::{rotated_chain, run_batch_recorded, BatchJob};
 use crate::coordinator::{ingest_object, ClassicalJob, PipelineJob};
 use crate::gf::{Gf256, Gf65536, GfElem};
-use crate::metrics::{Candle, Recorder};
+use crate::metrics::{BenchJson, Candle, Recorder};
+use crate::resources::{CostModelHandle, NodeProfile, ProfileCost, UniformCost};
 use crate::storage::{ObjectId, ReplicaPlacement};
 
 /// Evaluation code parameters: the paper's (16, 11).
@@ -55,13 +65,19 @@ impl std::fmt::Display for Impl {
     }
 }
 
+/// Parity rows of an arbitrary (n, k) Cauchy code as u32 (for node
+/// commands).
+pub fn parity_rows_for(n: usize, k: usize) -> anyhow::Result<Vec<Vec<u32>>> {
+    let code = ClassicalCode::<Gf256>::new(n, k)?;
+    let p = code.parity_matrix();
+    Ok((0..p.rows())
+        .map(|i| p.row(i).iter().map(|c| c.to_u32()).collect())
+        .collect())
+}
+
 /// Parity rows of the (N, K) Cauchy code as u32 (for node commands).
 pub fn cec_parity_rows() -> Vec<Vec<u32>> {
-    let code = ClassicalCode::<Gf256>::new(N, K).expect("(16,11) code");
-    let p = code.parity_matrix();
-    (0..p.rows())
-        .map(|i| p.row(i).iter().map(|c| c.to_u32()).collect())
-        .collect()
+    parity_rows_for(N, K).expect("(16,11) code")
 }
 
 /// The evaluation RR8 code (coefficients via the documented search seed).
@@ -162,7 +178,8 @@ pub fn table2_cpu(
     backend: &BackendHandle,
     block_bytes: usize,
     out: &mut dyn Write,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<BenchJson> {
+    let wall = RealClock::new();
     writeln!(out, "# Table II — CPU-only (16,11) coding time, no network I/O")?;
     writeln!(
         out,
@@ -175,6 +192,10 @@ pub fn table2_cpu(
     let object: Vec<Vec<u8>> = (0..K)
         .map(|i| crate::coordinator::object_bytes(ObjectId(0xC0DE), i, block_bytes))
         .collect();
+    let mut report = BenchJson::new(format!("table2-{}", backend.name()))
+        .param("block_bytes", block_bytes)
+        .param("n", N)
+        .param("k", K);
     writeln!(out, "{:>6} {:>12} {:>12}", "impl", "seconds", "MiB/s")?;
     for imp in [Impl::Cec, Impl::Rr8, Impl::Rr16] {
         let mut times: Vec<Duration> = (0..3)
@@ -189,8 +210,178 @@ pub fn table2_cpu(
             med.as_secs_f64(),
             (K * block_bytes) as f64 / (1 << 20) as f64 / med.as_secs_f64()
         )?;
+        report.series.push(Candle {
+            name: imp.to_string(),
+            samples: times,
+        });
     }
-    Ok(())
+    report.wall = wall.now();
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// Table II (simulated) — the `table2-sim` preset: compute charged in
+// virtual time
+// ---------------------------------------------------------------------------
+
+/// One row of the `table2-sim` comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table2SimRow {
+    /// Code length.
+    pub n: usize,
+    /// Message length.
+    pub k: usize,
+    /// Cost-model label (`uniform` / `ec2-mix`).
+    pub cost: &'static str,
+    /// Virtual coding time of the classical atomic encoding.
+    pub classical: Duration,
+    /// Virtual coding time of the pipelined RapidRAID encoding.
+    pub pipelined: Duration,
+}
+
+impl Table2SimRow {
+    /// Classical/pipelined coding-time ratio (> 1 ⇒ pipelining wins).
+    pub fn ratio(&self) -> f64 {
+        self.classical.as_secs_f64() / self.pipelined.as_secs_f64()
+    }
+}
+
+/// The `table2-sim` preset: the paper's Table-II coding-time comparison
+/// reproduced *inside the discrete-event simulator*, with per-node GF
+/// compute charged in virtual time.
+///
+/// Classical (atomic Cauchy-RS) vs pipelined (RapidRAID RR8) archival of
+/// one object, under k=8/n=11 and k=16/n=22, on two cost models:
+/// [`UniformCost::calibrated`] (homogeneous EC2-small hardware) and a
+/// heterogeneous [`ProfileCost`] over [`NodeProfile::ec2_mix`]
+/// (small/medium/large classes round-robin). Runs on a `SimClock` TPC
+/// topology with jitter disabled, so the virtual timeline — and hence
+/// every reported duration — is an exact function of `(block_bytes,
+/// seed)`: the same invocation reproduces tick-identical rows.
+pub fn table2_sim(
+    backend: &BackendHandle,
+    block_bytes: usize,
+    seed: u64,
+    out: &mut dyn Write,
+) -> anyhow::Result<(Vec<Table2SimRow>, BenchJson)> {
+    let wall = RealClock::new();
+    let mut report = BenchJson::new("table2-sim")
+        .param("block_bytes", block_bytes)
+        .param("seed", seed);
+    writeln!(
+        out,
+        "# Table II (simulated) — classical vs pipelined virtual coding time, compute charged"
+    )?;
+    writeln!(
+        out,
+        "# SimClock TPC topology (jitter off), block={} KiB, code seed {seed}, backend={}",
+        block_bytes >> 10,
+        backend.name()
+    )?;
+    writeln!(
+        out,
+        "{:>3} {:>3} {:>8} {:>12} {:>12} {:>7}",
+        "n", "k", "cost", "classical_s", "pipelined_s", "ratio"
+    )?;
+
+    // Fresh per-run cluster: virtual timelines must not share NIC state.
+    let sim_cluster = |n: usize, cost: CostModelHandle| -> Cluster {
+        let mut spec = ClusterSpec::tpc(n).sim().with_cost(cost);
+        // Table II isolates compute: jitter off keeps the discrete-event
+        // timeline an exact function of the inputs.
+        spec.jitter = Duration::ZERO;
+        Cluster::start(spec)
+    };
+    let costs: Vec<(&'static str, CostModelHandle)> = vec![
+        ("uniform", UniformCost::handle()),
+        ("ec2-mix", ProfileCost::handle(NodeProfile::ec2_mix())?),
+    ];
+
+    let stages = Recorder::new();
+    let mut rows = Vec::new();
+    let mut id = 0u64; // distinct object id per run
+    for (n, k) in [(11usize, 8usize), (22, 16)] {
+        for (cost_name, cost) in &costs {
+            let cost_name = *cost_name;
+            let tag = format!("n{n}k{k}/{cost_name}");
+
+            // Classical: fresh cluster, one atomic Cauchy-RS job.
+            let cluster = sim_cluster(n, cost.clone());
+            id += 1;
+            let placement =
+                ReplicaPlacement::new(ObjectId(0x7AB2_0000 + id), k, (0..n).collect())?;
+            ingest_object(&cluster, &placement, block_bytes)?;
+            let job = BatchJob::Classical(ClassicalJob {
+                object: placement.object,
+                width: Width::W8,
+                parity_rows: parity_rows_for(n, k)?,
+                source_nodes: placement.chain[..k].to_vec(),
+                coding_node: placement.chain[k],
+                parity_nodes: placement.chain[k..].to_vec(),
+                buf_bytes: BUF_BYTES,
+                block_bytes,
+            });
+            let prefix = format!("{tag}/CEC/");
+            let times =
+                run_batch_recorded(&cluster, backend, &[job], Some((&stages, &prefix)))?;
+            let classical = times[0];
+
+            // Pipelined: fresh cluster, one RapidRAID RR8 chain.
+            let cluster = sim_cluster(n, cost.clone());
+            id += 1;
+            let placement =
+                ReplicaPlacement::new(ObjectId(0x7AB2_0000 + id), k, (0..n).collect())?;
+            ingest_object(&cluster, &placement, block_bytes)?;
+            let code = RapidRaidCode::<Gf256>::with_seed(n, k, seed)?;
+            let job = BatchJob::Pipeline(PipelineJob::from_code(
+                &code,
+                &placement,
+                BUF_BYTES,
+                block_bytes,
+            )?);
+            let prefix = format!("{tag}/RR8/");
+            let times =
+                run_batch_recorded(&cluster, backend, &[job], Some((&stages, &prefix)))?;
+            let pipelined = times[0];
+
+            let row = Table2SimRow {
+                n,
+                k,
+                cost: cost_name,
+                classical,
+                pipelined,
+            };
+            writeln!(
+                out,
+                "{:>3} {:>3} {:>8} {:>12.4} {:>12.4} {:>6.2}x",
+                row.n,
+                row.k,
+                row.cost,
+                row.classical.as_secs_f64(),
+                row.pipelined.as_secs_f64(),
+                row.ratio()
+            )?;
+            report.series.push(Candle {
+                name: format!("{tag}/classical"),
+                samples: vec![classical],
+            });
+            report.series.push(Candle {
+                name: format!("{tag}/pipelined"),
+                samples: vec![pipelined],
+            });
+            rows.push(row);
+        }
+    }
+    writeln!(
+        out,
+        "# per-stage spans (…/fold.compute and …/gemm.compute are the charged CPU ticks):"
+    )?;
+    for c in stages.candles() {
+        writeln!(out, "# {}", c.report())?;
+    }
+    report.spans = stages.candles();
+    report.wall = wall.now();
+    Ok((rows, report))
 }
 
 // ---------------------------------------------------------------------------
@@ -199,9 +390,10 @@ pub fn table2_cpu(
 
 /// Build a cluster for a preset name. A `-sim` suffix (e.g. `tpc-sim`)
 /// runs the identical topology on a discrete-event `SimClock`: reported
-/// times are then *virtual* network times (compute contributes no virtual
-/// time), the run costs milliseconds of wall clock, and a paper-scale
-/// sweep becomes CI-affordable.
+/// times are then *virtual* network times (these presets keep the default
+/// `ZeroCost` model, so compute stays free — [`table2_sim`] is the preset
+/// that charges it), the run costs milliseconds of wall clock, and a
+/// paper-scale sweep becomes CI-affordable.
 fn cluster_for(preset: &str, nodes: usize) -> anyhow::Result<Cluster> {
     let (base, sim) = match preset.strip_suffix("-sim") {
         Some(b) => (b, true),
@@ -276,7 +468,8 @@ pub fn fig4_coding_times(
     block_bytes: usize,
     samples: usize,
     out: &mut dyn Write,
-) -> anyhow::Result<Vec<Candle>> {
+) -> anyhow::Result<BenchJson> {
+    let wall = RealClock::new();
     writeln!(
         out,
         "# Fig. 4{} — {} object(s), preset={preset}, block={} MiB, backend={}",
@@ -324,7 +517,15 @@ pub fn fig4_coding_times(
             )?;
         }
     }
-    Ok(candles)
+    let mut report = BenchJson::new(format!("fig4-{preset}-{objects}obj"))
+        .param("preset", preset)
+        .param("objects", objects)
+        .param("block_bytes", block_bytes)
+        .param("samples", samples);
+    report.series = candles;
+    report.spans = stages.candles();
+    report.wall = wall.now();
+    Ok(report)
 }
 
 // ---------------------------------------------------------------------------
@@ -344,7 +545,14 @@ pub fn fig5_congestion(
     block_bytes: usize,
     samples: usize,
     out: &mut dyn Write,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<BenchJson> {
+    let wall = RealClock::new();
+    let mut report = BenchJson::new(format!("fig5-{preset}-{objects}obj"))
+        .param("preset", preset)
+        .param("max_congested", max_congested)
+        .param("objects", objects)
+        .param("block_bytes", block_bytes)
+        .param("samples", samples);
     writeln!(
         out,
         "# Fig. 5{} — preset={preset}, netem profile on 0..={max_congested} nodes, {} object(s), block={} MiB",
@@ -401,9 +609,20 @@ pub fn fig5_congestion(
                 encode,
                 stage_mean("store")
             )?;
+            report.series.push(Candle {
+                name: format!("c{congested}/{imp}"),
+                samples: c.samples,
+            });
+            for s in stages.candles() {
+                report.spans.push(Candle {
+                    name: format!("c{congested}/{}", s.name),
+                    samples: s.samples,
+                });
+            }
         }
     }
-    Ok(())
+    report.wall = wall.now();
+    Ok(report)
 }
 
 // ---------------------------------------------------------------------------
@@ -427,12 +646,18 @@ pub fn fig_repair(
     block_bytes: usize,
     samples: usize,
     out: &mut dyn Write,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<BenchJson> {
     use crate::coordinator::survey_coded;
     use crate::repair::{
         run_pipelined_repair, run_star_repair, PipelinedRepairJob, RepairJob, StarRepairJob,
     };
 
+    let wall = RealClock::new();
+    let mut report = BenchJson::new(format!("figR-{preset}"))
+        .param("preset", preset)
+        .param("max_congested", max_congested)
+        .param("block_bytes", block_bytes)
+        .param("samples", samples);
     let samples = samples.max(1);
     writeln!(
         out,
@@ -497,9 +722,14 @@ pub fn fig_repair(
                 c.stddev_secs(),
                 speedup
             )?;
+            report.series.push(Candle {
+                name: format!("c{congested}/{name}"),
+                samples: c.samples.clone(),
+            });
         }
     }
-    Ok(())
+    report.wall = wall.now();
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -522,10 +752,15 @@ mod tests {
     fn fig4_smoke_single_object_test_preset() {
         let be: BackendHandle = Arc::new(NativeBackend::new());
         let mut out = Vec::new();
-        let candles = fig4_coding_times(&be, "test", 1, 256 * 1024, 1, &mut out).unwrap();
-        assert_eq!(candles.len(), 3);
+        let report = fig4_coding_times(&be, "test", 1, 256 * 1024, 1, &mut out).unwrap();
+        assert_eq!(report.series.len(), 3);
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("CEC") && text.contains("RR8") && text.contains("RR16"));
+        // machine-readable twin carries the same series plus the metadata;
+        // the objects variant is part of the name so 4a/4b files coexist
+        assert_eq!(report.preset, "fig4-test-1obj");
+        let json = report.to_json();
+        assert!(json.contains("\"CEC\"") && json.contains("\"objects\":\"1\""), "{json}");
     }
 
     #[test]
@@ -555,11 +790,50 @@ mod tests {
         // paper-scale preset under the SimClock: virtual timings, wall-fast
         let be: BackendHandle = Arc::new(NativeBackend::new());
         let mut out = Vec::new();
-        let candles = fig4_coding_times(&be, "tpc-sim", 1, 256 * 1024, 1, &mut out).unwrap();
-        assert_eq!(candles.len(), 3);
-        for c in &candles {
+        let report = fig4_coding_times(&be, "tpc-sim", 1, 256 * 1024, 1, &mut out).unwrap();
+        assert_eq!(report.series.len(), 3);
+        for c in &report.series {
             assert!(c.median() > Duration::ZERO, "virtual time missing: {}", c.name);
         }
+    }
+
+    #[test]
+    fn table2_sim_reports_nonzero_compute_and_sane_ratios() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let mut out = Vec::new();
+        let (rows, report) = table2_sim(&be, 128 * 1024, 5, &mut out).unwrap();
+        // 2 code sizes × 2 cost models
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.classical > Duration::ZERO && r.pipelined > Duration::ZERO, "{r:?}");
+            assert!(r.ratio() > 0.0);
+        }
+        assert!(rows.iter().any(|r| r.cost == "uniform"));
+        assert!(rows.iter().any(|r| r.cost == "ec2-mix"));
+        assert!(rows.iter().any(|r| (r.n, r.k) == (11, 8)));
+        assert!(rows.iter().any(|r| (r.n, r.k) == (22, 16)));
+        // the cost models actually charged compute: split spans exist and
+        // are nonzero
+        let compute: Vec<_> = report
+            .spans
+            .iter()
+            .filter(|c| c.name.ends_with(".compute"))
+            .collect();
+        assert!(!compute.is_empty(), "no compute spans recorded");
+        assert!(
+            compute.iter().any(|c| c.max() > Duration::ZERO),
+            "compute spans all zero"
+        );
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("uniform") && text.contains("ec2-mix"), "{text}");
+    }
+
+    #[test]
+    fn table2_sim_is_deterministic_per_seed() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let (a, _) = table2_sim(&be, 64 * 1024, 5, &mut Vec::<u8>::new()).unwrap();
+        let (b, _) = table2_sim(&be, 64 * 1024, 5, &mut Vec::<u8>::new()).unwrap();
+        assert_eq!(a, b, "virtual Table-II rows diverged between identical runs");
     }
 
     #[test]

@@ -30,7 +30,8 @@ pub use link::{Frame, LinkSpec, Rx, Tx};
 pub use network::{Cluster, ClusterSpec};
 pub use nic::RateLimiter;
 pub use node::{
-    Command, NodeHandle, ParityDest, SourceStream, DEFAULT_MAX_WORKERS, QUEUE_STALL_OVERFLOW,
+    Command, NodeHandle, ParityDest, SourceStream, StepResult, StepStats, DEFAULT_MAX_WORKERS,
+    QUEUE_STALL_OVERFLOW,
 };
 
 /// Node identifier within a cluster.

@@ -9,6 +9,7 @@ use super::nic::RateLimiter;
 use super::node::{NodeHandle, DEFAULT_MAX_WORKERS};
 use super::NodeId;
 use crate::clock::{ClockHandle, RealClock, SimClock};
+use crate::resources::{CostModelHandle, CpuMeter, NodeProfile, ProfileCost, UniformCost, ZeroCost};
 
 /// Static description of a homogeneous cluster (per-node NIC + base link).
 #[derive(Clone, Debug)]
@@ -32,6 +33,13 @@ pub struct ClusterSpec {
     /// [`ClusterSpec::with_clock`] / [`ClusterSpec::sim`]) to run the same
     /// workload as a deterministic discrete-event simulation.
     pub clock: ClockHandle,
+    /// CPU cost model charged by every data-plane worker through its
+    /// node's [`CpuMeter`]. Presets default to [`ZeroCost`] (compute is
+    /// free — correct under a `RealClock`, where compute already costs
+    /// wall time); swap in [`UniformCost`]/[`ProfileCost`] (via
+    /// [`ClusterSpec::with_cost`] / [`ClusterSpec::with_profiles`]) so a
+    /// `SimClock` run charges Table-II-style compute in virtual time.
+    pub cost: CostModelHandle,
 }
 
 impl ClusterSpec {
@@ -45,6 +53,7 @@ impl ClusterSpec {
             jitter: Duration::from_micros(50),
             max_workers: DEFAULT_MAX_WORKERS,
             clock: RealClock::handle(),
+            cost: ZeroCost::handle(),
         }
     }
 
@@ -58,6 +67,7 @@ impl ClusterSpec {
             jitter: Duration::from_micros(300),
             max_workers: DEFAULT_MAX_WORKERS,
             clock: RealClock::handle(),
+            cost: ZeroCost::handle(),
         }
     }
 
@@ -70,6 +80,7 @@ impl ClusterSpec {
             jitter: Duration::ZERO,
             max_workers: DEFAULT_MAX_WORKERS,
             clock: RealClock::handle(),
+            cost: ZeroCost::handle(),
         }
     }
 
@@ -82,6 +93,23 @@ impl ClusterSpec {
     /// Switch this spec onto a fresh discrete-event [`SimClock`].
     pub fn sim(self) -> Self {
         self.with_clock(SimClock::handle())
+    }
+
+    /// Substitute the CPU cost model.
+    pub fn with_cost(mut self, cost: CostModelHandle) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    /// Charge compute at the calibrated [`UniformCost`] rates.
+    pub fn with_uniform_cost(self) -> Self {
+        self.with_cost(UniformCost::handle())
+    }
+
+    /// Charge compute through heterogeneous per-node [`NodeProfile`]s
+    /// over the calibrated baseline (node i gets `profiles[i % len]`).
+    pub fn with_profiles(self, profiles: Vec<NodeProfile>) -> anyhow::Result<Self> {
+        Ok(self.with_cost(ProfileCost::handle(profiles)?))
     }
 }
 
@@ -107,6 +135,7 @@ impl Cluster {
                     id,
                     Arc::new(RateLimiter::new(spec.clock.clone(), spec.bytes_per_sec)),
                     Arc::new(RateLimiter::new(spec.clock.clone(), spec.bytes_per_sec)),
+                    Arc::new(CpuMeter::new(spec.clock.clone(), spec.cost.clone(), id)),
                     spec.max_workers,
                 )
             })
@@ -133,6 +162,11 @@ impl Cluster {
     /// The clock every node, NIC and link of this cluster runs on.
     pub fn clock(&self) -> &ClockHandle {
         &self.spec.clock
+    }
+
+    /// The CPU cost model every node's workers charge.
+    pub fn cost(&self) -> &CostModelHandle {
+        &self.spec.cost
     }
 
     /// Number of nodes.
@@ -246,6 +280,7 @@ impl Cluster {
 mod tests {
     use super::*;
     use crate::clock::Clock;
+    use crate::resources::CostModel;
 
     #[test]
     fn presets_have_expected_shape() {
@@ -253,6 +288,27 @@ mod tests {
         assert_eq!(t.nodes, 50);
         assert!(t.bytes_per_sec > ClusterSpec::ec2(16).bytes_per_sec);
         assert!(t.latency < ClusterSpec::ec2(16).latency);
+        // compute is free by default: ZeroCost is the RealClock-correct model
+        assert_eq!(t.cost.name(), "zero");
+    }
+
+    #[test]
+    fn cost_model_reaches_every_node_meter() {
+        use crate::resources::NodeProfile;
+        let spec = ClusterSpec::test(3)
+            .sim()
+            .with_profiles(NodeProfile::ec2_mix())
+            .unwrap();
+        assert_eq!(spec.cost.name(), "profile");
+        let c = Cluster::start(spec);
+        assert_eq!(c.cost().name(), "profile");
+        for id in 0..3 {
+            assert_eq!(c.node(id).cpu.node(), id);
+            assert_eq!(c.node(id).cpu.model().name(), "profile");
+        }
+        // uniform builder variant
+        let spec = ClusterSpec::test(1).with_uniform_cost();
+        assert_eq!(spec.cost.name(), "uniform");
     }
 
     #[test]

@@ -38,10 +38,24 @@ use super::nic::RateLimiter;
 use super::NodeId;
 use crate::backend::{BackendHandle, Width};
 use crate::clock::{self, blocked, BusyToken, Clock, ClockHandle, RecvTimeoutError, Tick};
+use crate::resources::{CpuMeter, GfWork};
 use crate::storage::{BlockKey, BlockStore};
 
 /// Default per-node worker-thread cap (see the module docs for sizing).
 pub const DEFAULT_MAX_WORKERS: usize = 32;
+
+/// What a completed data-plane command reports alongside success: the
+/// virtual compute time it charged to the node's [`CpuMeter`]. The plan
+/// executor subtracts this from a step's end-to-end span to split
+/// compute from transfer occupancy.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct StepStats {
+    /// Total compute time charged (ZERO under the `ZeroCost` model).
+    pub compute: Tick,
+}
+
+/// Completion payload of every data-plane command.
+pub type StepResult = anyhow::Result<StepStats>;
 
 /// How long (on the cluster clock) a queued data-plane command may wait
 /// with no worker finishing before the cap is exceeded by one to guarantee
@@ -84,7 +98,7 @@ pub enum Command {
         /// Frame size.
         buf_bytes: usize,
         /// Completion signal.
-        done: clock::Sender<anyhow::Result<()>>,
+        done: clock::Sender<StepResult>,
     },
     /// Receive a streamed block from `rx` and store it under `key`
     /// (the data plane write path; parity distribution in classical coding).
@@ -97,7 +111,7 @@ pub enum Command {
         /// 0 = unknown, the buffer grows as frames arrive).
         expect_bytes: usize,
         /// Completion signal.
-        done: clock::Sender<anyhow::Result<()>>,
+        done: clock::Sender<StepResult>,
     },
     /// Act as one stage of a RapidRAID encoding pipeline: for every
     /// incoming buffer fold the local blocks with ψ/ξ, forward `x_out`
@@ -126,7 +140,7 @@ pub enum Command {
         /// GF compute backend.
         backend: BackendHandle,
         /// Completion signal.
-        done: clock::Sender<anyhow::Result<()>>,
+        done: clock::Sender<StepResult>,
     },
     /// Act as the single coding node of a classical erasure encoding:
     /// stream k source blocks from `sources`, fold each buffer into m
@@ -152,7 +166,7 @@ pub enum Command {
         /// GF compute backend.
         backend: BackendHandle,
         /// Completion signal.
-        done: clock::Sender<anyhow::Result<()>>,
+        done: clock::Sender<StepResult>,
     },
     /// Stop the node thread (workers already running keep finishing; any
     /// still-queued data-plane commands are started before the loop exits).
@@ -195,6 +209,8 @@ pub struct NodeHandle {
     pub up: Arc<RateLimiter>,
     /// Download NIC.
     pub down: Arc<RateLimiter>,
+    /// CPU meter every data-plane worker of this node charges.
+    pub cpu: Arc<CpuMeter>,
     clock: ClockHandle,
     thread: Option<JoinHandle<()>>,
     inflight: Arc<AtomicUsize>,
@@ -202,18 +218,21 @@ pub struct NodeHandle {
 }
 
 impl NodeHandle {
-    /// Spawn a node thread with the given NIC limiters (which must share a
-    /// clock) and worker cap (`max_workers` is clamped to ≥ 1).
+    /// Spawn a node thread with the given NIC limiters and CPU meter
+    /// (which must share a clock) and worker cap (`max_workers` is
+    /// clamped to ≥ 1).
     pub fn spawn(
         id: NodeId,
         up: Arc<RateLimiter>,
         down: Arc<RateLimiter>,
+        cpu: Arc<CpuMeter>,
         max_workers: usize,
     ) -> Self {
         let clock = up.clock().clone();
         let store = BlockStore::new();
         let (tx, rx) = clock::channel::<Msg>(&clock);
         let store2 = store.clone();
+        let cpu2 = cpu.clone();
         let inflight = Arc::new(AtomicUsize::new(0));
         let inflight2 = inflight.clone();
         let failed = Arc::new(AtomicBool::new(false));
@@ -227,7 +246,17 @@ impl NodeHandle {
             .name(format!("node-{id}"))
             .spawn(move || {
                 let _busy = token.bind();
-                node_loop(id, clock2, rx, loopback, store2, inflight2, failed2, max_workers)
+                node_loop(
+                    id,
+                    clock2,
+                    rx,
+                    loopback,
+                    store2,
+                    cpu2,
+                    inflight2,
+                    failed2,
+                    max_workers,
+                )
             })
             .expect("spawn node thread");
         Self {
@@ -236,6 +265,7 @@ impl NodeHandle {
             store,
             up,
             down,
+            cpu,
             clock,
             thread: Some(thread),
             inflight,
@@ -352,6 +382,7 @@ fn node_loop(
     rx: clock::Receiver<Msg>,
     loopback: clock::Sender<Msg>,
     store: BlockStore,
+    cpu: Arc<CpuMeter>,
     inflight: Arc<AtomicUsize>,
     failed: Arc<AtomicBool>,
     max_workers: usize,
@@ -362,6 +393,7 @@ fn node_loop(
     let mut active = 0usize;
     let spawn_worker = |cmd: Command, workers: &mut Vec<JoinHandle<()>>| {
         let store = store.clone();
+        let cpu = cpu.clone();
         let inflight = inflight.clone();
         let loopback = loopback.clone();
         let failed = failed.clone();
@@ -369,7 +401,7 @@ fn node_loop(
         let token = BusyToken::new(&clock);
         workers.push(std::thread::spawn(move || {
             let _busy = token.bind();
-            run_dataplane(cmd, store, &failed);
+            run_dataplane(cmd, store, &cpu, &failed);
             inflight.fetch_sub(1, Ordering::Relaxed);
             // Release the worker slot; the node loop may have shut down
             // already, in which case nobody is waiting for the slot.
@@ -492,7 +524,7 @@ fn node_loop(
     }
 }
 
-fn run_dataplane(cmd: Command, store: BlockStore, failed: &AtomicBool) {
+fn run_dataplane(cmd: Command, store: BlockStore, cpu: &CpuMeter, failed: &AtomicBool) {
     match cmd {
         Command::Upload {
             key,
@@ -508,7 +540,7 @@ fn run_dataplane(cmd: Command, store: BlockStore, failed: &AtomicBool) {
             expect_bytes,
             done,
         } => {
-            let _ = done.send(do_receive(&store, key, &rx, expect_bytes, failed));
+            let _ = done.send(do_receive(&store, key, &rx, expect_bytes, cpu, failed));
         }
         Command::PipelineStage {
             width,
@@ -524,7 +556,7 @@ fn run_dataplane(cmd: Command, store: BlockStore, failed: &AtomicBool) {
         } => {
             let r = do_pipeline_stage(
                 &store, width, &locals, &psi, &xi, prev, next, out_key, buf_bytes, &backend,
-                failed,
+                cpu, failed,
             );
             let _ = done.send(r);
         }
@@ -547,6 +579,7 @@ fn run_dataplane(cmd: Command, store: BlockStore, failed: &AtomicBool) {
                 buf_bytes,
                 block_bytes,
                 &backend,
+                cpu,
                 failed,
             );
             let _ = done.send(r);
@@ -555,14 +588,16 @@ fn run_dataplane(cmd: Command, store: BlockStore, failed: &AtomicBool) {
     }
 }
 
-fn do_upload(store: &BlockStore, key: BlockKey, tx: &mut Tx, buf_bytes: usize) -> anyhow::Result<()> {
+fn do_upload(store: &BlockStore, key: BlockKey, tx: &mut Tx, buf_bytes: usize) -> StepResult {
     let data = store
         .get(&key)
         .ok_or_else(|| anyhow::anyhow!("upload: missing block {key:?}"))?;
     for chunk in data.chunks(buf_bytes) {
         tx.send_data(chunk.to_vec())?;
     }
-    tx.finish()
+    tx.finish()?;
+    // A stored-block read costs no GF work; the NICs price the transfer.
+    Ok(StepStats::default())
 }
 
 /// Stream a block in. Frames append straight into one buffer pre-sized to
@@ -573,15 +608,19 @@ fn do_receive(
     key: BlockKey,
     rx: &Rx,
     expect_bytes: usize,
+    cpu: &CpuMeter,
     failed: &AtomicBool,
-) -> anyhow::Result<()> {
+) -> StepResult {
     let mut data = Vec::with_capacity(expect_bytes);
     rx.recv_into(&mut data)?;
+    // The store landing is the step's compute: charged before completion
+    // so a Store step occupies virtual time on the node's core.
+    let compute = cpu.charge(&GfWork::store(data.len()));
     anyhow::ensure!(
         store.put_unless(key, data, failed),
         "receive aborted: node has failed"
     );
-    Ok(())
+    Ok(StepStats { compute })
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -596,8 +635,9 @@ fn do_pipeline_stage(
     out_key: Option<BlockKey>,
     buf_bytes: usize,
     backend: &BackendHandle,
+    cpu: &CpuMeter,
     failed: &AtomicBool,
-) -> anyhow::Result<()> {
+) -> StepResult {
     let local_blocks: Vec<Arc<Vec<u8>>> = locals
         .iter()
         .map(|k| {
@@ -616,6 +656,7 @@ fn do_pipeline_stage(
     );
 
     let mut out = Vec::with_capacity(if out_key.is_some() { block_bytes } else { 0 });
+    let mut compute = Tick::ZERO;
     let mut offset = 0usize;
     loop {
         // Obtain the incoming partial-combination buffer: from upstream, or
@@ -643,6 +684,9 @@ fn do_pipeline_stage(
             .map(|b| &b[offset..offset + len])
             .collect();
         let (x_out, c) = backend.pipeline_step(width, &x_in, &loc_slices, psi, xi)?;
+        // Charge the frame's GF work BEFORE forwarding: the compute delay
+        // paces the whole downstream chain, exactly like a slow CPU would.
+        compute += cpu.charge(&GfWork::pipeline_step(psi, xi, len));
         if out_key.is_some() {
             out.extend_from_slice(&c);
         }
@@ -656,12 +700,13 @@ fn do_pipeline_stage(
     }
     anyhow::ensure!(offset == block_bytes, "stream/block length mismatch");
     if let Some(key) = out_key {
+        compute += cpu.charge(&GfWork::store(out.len()));
         anyhow::ensure!(
             store.put_unless(key, out, failed),
             "pipeline stage aborted: node has failed"
         );
     }
-    Ok(())
+    Ok(StepStats { compute })
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -674,8 +719,9 @@ fn do_classical_encode(
     buf_bytes: usize,
     block_bytes: usize,
     backend: &BackendHandle,
+    cpu: &CpuMeter,
     failed: &AtomicBool,
-) -> anyhow::Result<()> {
+) -> StepResult {
     let k = sources.len();
     let m = parity_rows.len();
     anyhow::ensure!(dests.len() == m, "dests/parity arity mismatch");
@@ -700,6 +746,7 @@ fn do_classical_encode(
             ParityDest::Stream(_) => Vec::new(),
         })
         .collect();
+    let mut compute = Tick::ZERO;
     let mut offset = 0usize;
     // Streamlined loop (paper Section III): gather one "row" of k source
     // buffers (the k-th network buffer of every block), apply the parity
@@ -727,6 +774,9 @@ fn do_classical_encode(
         }
         let row_refs: Vec<&[u8]> = row.iter().map(|b| b.as_slice()).collect();
         let parity_bufs = backend.gemm(width, parity_rows, &row_refs)?;
+        // The row's m×k gemm is this step's compute, charged before the
+        // parity buffers ship so compute paces the outgoing streams.
+        compute += cpu.charge(&GfWork::gemm(parity_rows, len));
         for (i, pb) in parity_bufs.into_iter().enumerate() {
             match dests[i] {
                 ParityDest::Stream(ref mut tx) => tx.send_data(pb)?,
@@ -747,13 +797,17 @@ fn do_classical_encode(
     for (i, d) in dests.iter_mut().enumerate() {
         match d {
             ParityDest::Stream(tx) => tx.finish()?,
-            ParityDest::Store(key) => anyhow::ensure!(
-                store.put_unless(*key, std::mem::take(&mut local_acc[i]), failed),
-                "classical encode aborted: node has failed"
-            ),
+            ParityDest::Store(key) => {
+                let acc = std::mem::take(&mut local_acc[i]);
+                compute += cpu.charge(&GfWork::store(acc.len()));
+                anyhow::ensure!(
+                    store.put_unless(*key, acc, failed),
+                    "classical encode aborted: node has failed"
+                )
+            }
         }
     }
-    Ok(())
+    Ok(StepStats { compute })
 }
 
 #[cfg(test)]
@@ -772,8 +826,12 @@ mod tests {
         Arc::new(RateLimiter::new(clock.clone(), 1e9))
     }
 
+    fn meter(clock: &ClockHandle, id: NodeId) -> Arc<CpuMeter> {
+        Arc::new(CpuMeter::new(clock.clone(), crate::resources::ZeroCost::handle(), id))
+    }
+
     fn node_on(clock: &ClockHandle, id: NodeId) -> NodeHandle {
-        NodeHandle::spawn(id, nic(clock), nic(clock), DEFAULT_MAX_WORKERS)
+        NodeHandle::spawn(id, nic(clock), nic(clock), meter(clock, id), DEFAULT_MAX_WORKERS)
     }
 
     #[test]
@@ -823,7 +881,7 @@ mod tests {
         // A cap of 1 forces the second/third uploads to queue; all three
         // must still complete and deliver correct bytes.
         let c = sim();
-        let a = NodeHandle::spawn(0, nic(&c), nic(&c), 1);
+        let a = NodeHandle::spawn(0, nic(&c), nic(&c), meter(&c, 0), 1);
         let sinks: Vec<NodeHandle> = (1..4).map(|id| node_on(&c, id)).collect();
         let data: Vec<u8> = (0..50_000u32).map(|i| (i * 3) as u8).collect();
         for i in 0..3 {
@@ -874,7 +932,7 @@ mod tests {
         // run the Upload after QUEUE_STALL_OVERFLOW of *virtual* time and
         // complete both — instantly in wall-clock terms under SimClock.
         let c = sim();
-        let a = NodeHandle::spawn(0, nic(&c), nic(&c), 1);
+        let a = NodeHandle::spawn(0, nic(&c), nic(&c), meter(&c, 0), 1);
         let key = BlockKey::source(ObjectId(8), 0);
         let out_key = BlockKey::source(ObjectId(8), 1);
         let data = vec![7u8; 10_000];
@@ -1095,7 +1153,7 @@ mod tests {
         // on its own. Real clock: the 100 ms stall window must not elapse
         // before the crash lands, which a SimClock would fast-forward.
         let c = crate::clock::RealClock::handle();
-        let a = NodeHandle::spawn(0, nic(&c), nic(&c), 1);
+        let a = NodeHandle::spawn(0, nic(&c), nic(&c), meter(&c, 0), 1);
         let key = BlockKey::source(ObjectId(12), 0);
         a.put(key, vec![5; 100]).unwrap();
         let (hold_tx, hold_rx) = link(nic(&c), a.down.clone(), LinkSpec::instant(), 21);
@@ -1137,5 +1195,53 @@ mod tests {
         })
         .unwrap();
         assert!(w.recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn pipeline_stage_charges_modeled_compute_in_virtual_time() {
+        use crate::resources::{UniformCost, ZeroCost};
+        // One-node chain head with a cost model: the stage must occupy
+        // virtual time for its GF work and report it in StepStats; the
+        // same command under ZeroCost must report zero compute.
+        let run = |model: crate::resources::CostModelHandle| -> (Tick, StepStats) {
+            let c = sim();
+            let n = NodeHandle::spawn(
+                0,
+                nic(&c),
+                nic(&c),
+                Arc::new(CpuMeter::new(c.clone(), model, 0)),
+                DEFAULT_MAX_WORKERS,
+            );
+            let obj = ObjectId(13);
+            let data = vec![3u8; 64 * 1024];
+            n.put(BlockKey::source(obj, 0), data).unwrap();
+            let backend: BackendHandle = Arc::new(NativeBackend::new());
+            let (d, w) = clock::channel(&c);
+            n.send(Command::PipelineStage {
+                width: Width::W8,
+                locals: vec![BlockKey::source(obj, 0)],
+                psi: vec![5],
+                xi: vec![9],
+                prev: None,
+                next: None,
+                out_key: Some(BlockKey::coded(obj, 0)),
+                buf_bytes: 16 * 1024,
+                backend,
+                done: d,
+            })
+            .unwrap();
+            let stats = w.recv().unwrap().unwrap();
+            (c.now(), stats)
+        };
+        let (t_zero, s_zero) = run(ZeroCost::handle());
+        assert_eq!(s_zero.compute, Tick::ZERO);
+        let (t_cost, s_cost) = run(UniformCost::handle());
+        assert!(s_cost.compute > Tick::ZERO, "no compute charged");
+        assert!(
+            t_cost > t_zero,
+            "cost model added no virtual time: {t_cost:?} vs {t_zero:?}"
+        );
+        // the stage's virtual occupancy includes at least its compute
+        assert!(t_cost >= s_cost.compute);
     }
 }

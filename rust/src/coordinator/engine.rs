@@ -31,7 +31,7 @@ use std::time::Duration;
 
 use crate::backend::BackendHandle;
 use crate::clock::{self, BusyToken, Clock};
-use crate::cluster::node::{Command, ParityDest, SourceStream};
+use crate::cluster::node::{Command, ParityDest, SourceStream, StepStats};
 use crate::cluster::{Cluster, NodeId, Rx, Tx};
 use crate::metrics::{Recorder, Span};
 
@@ -71,6 +71,35 @@ impl ChainPolicy for CongestionAwarePolicy {
                 .then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
         });
         scored.into_iter().map(|(_, _, id)| id).collect()
+    }
+}
+
+/// Value-level selector for the built-in chain policies, for places that
+/// carry policy choice as data (long-run configs, the `rapidraid sweep`
+/// grid) rather than as a trait object.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum PolicyKind {
+    /// Keep the caller's order ([`FifoPolicy`]).
+    Fifo,
+    /// Load/NIC-aware ranking ([`CongestionAwarePolicy`]).
+    CongestionAware,
+}
+
+impl PolicyKind {
+    /// Instantiate the selected policy.
+    pub fn policy(&self) -> Arc<dyn ChainPolicy> {
+        match self {
+            PolicyKind::Fifo => Arc::new(FifoPolicy),
+            PolicyKind::CongestionAware => Arc::new(CongestionAwarePolicy),
+        }
+    }
+
+    /// Short label for report tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::CongestionAware => "congestion-aware",
+        }
     }
 }
 
@@ -166,7 +195,7 @@ impl<'a> PlanExecutor<'a> {
         // Lower every step onto one node command.
         struct InFlight<'r> {
             span: Span<'r>,
-            wait: clock::Receiver<anyhow::Result<()>>,
+            wait: clock::Receiver<anyhow::Result<StepStats>>,
         }
         let mut inflight: Vec<InFlight<'_>> = Vec::with_capacity(plan.steps.len());
         let mut cmds: Vec<(crate::cluster::NodeId, Command)> =
@@ -272,8 +301,14 @@ impl<'a> PlanExecutor<'a> {
                         let res = f.wait.recv().unwrap_or_else(|_| {
                             Err(anyhow::anyhow!("plan step {i} worker vanished"))
                         });
-                        f.span.finish();
-                        res
+                        // The worker reports its charged compute ticks; the
+                        // span splits them out from transfer occupancy.
+                        let compute = res
+                            .as_ref()
+                            .map(|stats| stats.compute)
+                            .unwrap_or_default();
+                        f.span.finish_split(compute);
+                        res.map(|_| ())
                     })
                 })
                 .collect();

@@ -44,7 +44,7 @@ pub use batch::{run_batch, run_batch_recorded, BatchJob};
 pub use classical::{archive_classical, ClassicalJob};
 pub use decode::{reconstruct, survey_coded};
 pub use engine::{
-    select_chain, ChainPolicy, CongestionAwarePolicy, FifoPolicy, PlanExecutor,
+    select_chain, ChainPolicy, CongestionAwarePolicy, FifoPolicy, PlanExecutor, PolicyKind,
 };
 pub use ingest::{ingest_object, ingest_object_placed, object_bytes, place_object};
 pub use migrate::{migrate_object, MigrationReport};

@@ -16,14 +16,22 @@
 //!   XOR per 16-bit word.
 
 use super::field::{Gf256, Gf65536, GfElem};
+use crate::resources::GfWork;
 
 /// `dst[i] ^= c * src[i]` — the multiply-accumulate at the heart of both the
 /// classical parity generation and the RapidRAID pipeline stage.
+///
+/// Every op reports the [`GfWork`] it *actually* performed — a zero
+/// coefficient does nothing, a one-coefficient takes the XOR shortcut, and
+/// only the general case pays a table MAC pass — so compute stops being
+/// invisible to the resource model: the same shortcut rules feed the
+/// dataplane's per-frame charges ([`GfWork::coeff`]) and the cost models
+/// price what the kernel really did.
 pub trait SliceOps: GfElem {
-    /// dst ^= c * src (elementwise, GF multiply).
-    fn mul_slice_xor(c: Self, src: &[Self], dst: &mut [Self]);
-    /// dst = c * src (elementwise, GF multiply).
-    fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]);
+    /// dst ^= c * src (elementwise, GF multiply); returns the work done.
+    fn mul_slice_xor(c: Self, src: &[Self], dst: &mut [Self]) -> GfWork;
+    /// dst = c * src (elementwise, GF multiply); returns the work done.
+    fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]) -> GfWork;
 }
 
 /// Build the 256-entry product table for a GF(2^8) coefficient.
@@ -60,14 +68,13 @@ fn tables65536(c: Gf65536) -> ([u16; 256], [u16; 256]) {
 }
 
 impl SliceOps for Gf256 {
-    fn mul_slice_xor(c: Self, src: &[Self], dst: &mut [Self]) {
+    fn mul_slice_xor(c: Self, src: &[Self], dst: &mut [Self]) -> GfWork {
         assert_eq!(src.len(), dst.len());
         if c.0 == 0 {
-            return;
+            return GfWork::ZERO;
         }
         if c.0 == 1 {
-            xor_slice(src, dst);
-            return;
+            return xor_slice(src, dst);
         }
         let t = table256(c);
         // 8-way unroll: keeps the table lookup pipeline full on one core.
@@ -86,78 +93,82 @@ impl SliceOps for Gf256 {
         for i in chunks..n {
             dst[i].0 ^= t[src[i].0 as usize];
         }
+        GfWork::mac(n)
     }
 
-    fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]) {
+    fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]) -> GfWork {
         assert_eq!(src.len(), dst.len());
         if c.0 == 0 {
             dst.fill(Gf256::ZERO);
-            return;
+            return GfWork::xor(dst.len());
         }
         if c.0 == 1 {
             dst.copy_from_slice(src);
-            return;
+            return GfWork::xor(dst.len());
         }
         let t = table256(c);
         for (d, s) in dst.iter_mut().zip(src) {
             d.0 = t[s.0 as usize];
         }
+        GfWork::mac(dst.len())
     }
 }
 
 impl SliceOps for Gf65536 {
-    fn mul_slice_xor(c: Self, src: &[Self], dst: &mut [Self]) {
+    fn mul_slice_xor(c: Self, src: &[Self], dst: &mut [Self]) -> GfWork {
         assert_eq!(src.len(), dst.len());
         if c.0 == 0 {
-            return;
+            return GfWork::ZERO;
         }
         if c.0 == 1 {
-            xor_slice(src, dst);
-            return;
+            return xor_slice(src, dst);
         }
         let (lo, hi) = tables65536(c);
         for (d, s) in dst.iter_mut().zip(src) {
             d.0 ^= lo[(s.0 & 0xFF) as usize] ^ hi[(s.0 >> 8) as usize];
         }
+        GfWork::mac(2 * dst.len())
     }
 
-    fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]) {
+    fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]) -> GfWork {
         assert_eq!(src.len(), dst.len());
         if c.0 == 0 {
             dst.fill(Gf65536::ZERO);
-            return;
+            return GfWork::xor(2 * dst.len());
         }
         if c.0 == 1 {
             dst.copy_from_slice(src);
-            return;
+            return GfWork::xor(2 * dst.len());
         }
         let (lo, hi) = tables65536(c);
         for (d, s) in dst.iter_mut().zip(src) {
             d.0 = lo[(s.0 & 0xFF) as usize] ^ hi[(s.0 >> 8) as usize];
         }
+        GfWork::mac(2 * dst.len())
     }
 }
 
 /// `dst[i] ^= c * src[i]` for any field implementing [`SliceOps`].
 #[inline]
-pub fn mul_slice_xor<F: SliceOps>(c: F, src: &[F], dst: &mut [F]) {
-    F::mul_slice_xor(c, src, dst);
+pub fn mul_slice_xor<F: SliceOps>(c: F, src: &[F], dst: &mut [F]) -> GfWork {
+    F::mul_slice_xor(c, src, dst)
 }
 
 /// `dst[i] = c * src[i]` for any field implementing [`SliceOps`].
 #[inline]
-pub fn mul_slice<F: SliceOps>(c: F, src: &[F], dst: &mut [F]) {
-    F::mul_slice(c, src, dst);
+pub fn mul_slice<F: SliceOps>(c: F, src: &[F], dst: &mut [F]) -> GfWork {
+    F::mul_slice(c, src, dst)
 }
 
 /// Plain `dst ^= src`, word-accelerated where alignment allows.
-pub fn xor_slice<F: GfElem>(src: &[F], dst: &mut [F]) {
+pub fn xor_slice<F: GfElem>(src: &[F], dst: &mut [F]) -> GfWork {
     assert_eq!(src.len(), dst.len());
     // Safety-free fast path: XOR via u64 words on the raw byte views when
     // both slices have the same (arbitrary) alignment offset.
     for (d, s) in dst.iter_mut().zip(src) {
         *d = d.add(*s);
     }
+    GfWork::xor(std::mem::size_of_val(dst))
 }
 
 /// Reinterpret a byte buffer as GF(2^8) symbols (zero-copy).
@@ -260,6 +271,24 @@ mod tests {
         let wide = bytes_as_gf65536(&bytes);
         assert_eq!(wide.len(), 32);
         assert_eq!(wide[0], Gf65536(u16::from_le_bytes([0, 1])));
+    }
+
+    #[test]
+    fn ops_report_the_work_actually_done() {
+        let src = vec![Gf256(7); 100];
+        let mut dst = vec![Gf256(1); 100];
+        // zero coefficient: the op skips everything and reports nothing
+        assert_eq!(mul_slice_xor(Gf256(0), &src, &mut dst), GfWork::ZERO);
+        // one: the XOR shortcut
+        assert_eq!(mul_slice_xor(Gf256(1), &src, &mut dst), GfWork::xor(100));
+        // general: one MAC pass over the payload bytes
+        assert_eq!(mul_slice_xor(Gf256(5), &src, &mut dst), GfWork::mac(100));
+        // GF(2^16) counts bytes, not symbols
+        let src16 = vec![Gf65536(9); 50];
+        let mut dst16 = vec![Gf65536(0); 50];
+        assert_eq!(mul_slice_xor(Gf65536(3), &src16, &mut dst16), GfWork::mac(100));
+        assert_eq!(xor_slice(&src16, &mut dst16), GfWork::xor(100));
+        assert_eq!(mul_slice(Gf256(0), &src, &mut dst), GfWork::xor(100));
     }
 
     #[test]

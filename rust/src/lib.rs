@@ -25,7 +25,8 @@
 //! | module | contents |
 //! |---|---|
 //! | [`clock`] | pluggable time: `RealClock` (wall time) vs `SimClock` (deterministic discrete-event virtual time), clock channels, participant accounting |
-//! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops, matrices, Gauss |
+//! | [`resources`] | unified resource model: `GfWork` units, `CostModel` (`ZeroCost`/`UniformCost`/`ProfileCost` + per-node `NodeProfile`s), per-node `CpuMeter` charging compute in virtual time |
+//! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops (work-reporting), matrices, Gauss |
 //! | [`codes`] | classical Cauchy Reed-Solomon + RapidRAID code constructions, coefficient search, dependency census |
 //! | [`reliability`] | static resilience (probability of data loss, "number of 9's") |
 //! | [`cluster`] | simulated storage cluster: nodes, rate-limited links, congestion, crash-stop failure injection (`fail_node`/`revive_node`); everything timed on the spec's clock |
@@ -34,8 +35,8 @@
 //! | [`repair`] | failure repair as plan builders: star vs pipelined (Li et al. 2019) single-block repair, repair coefficients from the generator, eager/lazy/reliability-budget scheduler |
 //! | [`runtime`] | PJRT executor loading the AOT artifacts (`artifacts/*.hlo.txt`); stubbed without the `pjrt` feature |
 //! | [`backend`] | pluggable GF compute: native Rust vs PJRT artifacts |
-//! | [`metrics`] | clock-timed spans ([`metrics::Span`]), percentile candles, report emitters |
-//! | [`workload`] | long-run workload harness: seeded crash/revive/congestion schedules over batch archival + repair, thousands of virtual seconds per wall second under `SimClock` |
+//! | [`metrics`] | clock-timed spans ([`metrics::Span`], with compute/transfer splits), percentile candles, report emitters, `BENCH_*.json` output |
+//! | [`workload`] | long-run workload harness: seeded crash/revive/congestion schedules over batch archival + repair (with CPU profile mixes), thousands of virtual seconds per wall second under `SimClock`; [`workload::sweep`] grids triggers × policies × cost profiles |
 //! | [`util`] | deterministic PRNG, mini property-test harness, bench timer |
 //!
 //! ## Quickstart
@@ -63,6 +64,7 @@ pub mod gf;
 pub mod metrics;
 pub mod reliability;
 pub mod repair;
+pub mod resources;
 pub mod runtime;
 pub mod storage;
 pub mod util;

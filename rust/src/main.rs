@@ -11,21 +11,30 @@
 //!                        [--objects 1] [--block-mib 1] [--samples 3] # Fig. 5
 //! rapidraid bench-repair [--preset tpc|tpc-sim] [--max-congested 4]
 //!                        [--block-mib 16] [--samples 3]       # star vs pipelined repair
+//! rapidraid bench-table2-sim [--block-kib 1024] [--seed 5]    # Table II on the SimClock,
+//!                                                             # compute charged (uniform +
+//!                                                             # heterogeneous cost models)
 //! rapidraid sim-longrun  [--virtual-secs 1000] [--epoch-secs 10]
 //!                        [--nodes 50] [--objects 8] [--seed N]
 //!                        [--smoke]                            # DES failure trace
+//! rapidraid sweep        [--smoke] [--virtual-secs N] [--nodes N]
+//!                        [--objects N] [--seed N]             # triggers × policies × cost
+//!                                                             # profiles over long traces
 //! rapidraid demo         [--pjrt]                             # quick e2e
 //! ```
 //!
 //! Every `bench-*` preset accepts a `-sim` suffix (`tpc-sim`, `ec2-sim`,
 //! `test-sim`): the identical workload then runs on the discrete-event
 //! `SimClock` — reported times are virtual network times and a paper-scale
-//! sweep finishes in wall-clock seconds. `sim-longrun` always runs under
-//! the SimClock.
+//! sweep finishes in wall-clock seconds. `sim-longrun`, `sweep` and
+//! `bench-table2-sim` always run under the SimClock; the latter charges
+//! CPU cost models so compute occupies virtual time too.
 //!
 //! `bench-coding` / `bench-congestion` report per-stage time breakdowns
 //! (transfer vs fold/gemm vs store) alongside the end-to-end candles —
-//! the spans come from the coordinator's PlanExecutor.
+//! the spans come from the coordinator's PlanExecutor. Every `bench-*`
+//! command (and `sweep`) also writes a machine-readable
+//! `BENCH_<preset>.json` into the working directory.
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
@@ -49,7 +58,9 @@ fn main() {
         Some("bench-coding") => cmd_bench_coding(&opts),
         Some("bench-congestion") => cmd_bench_congestion(&opts),
         Some("bench-repair") => cmd_bench_repair(&opts),
+        Some("bench-table2-sim") => cmd_bench_table2_sim(&opts),
         Some("sim-longrun") => cmd_sim_longrun(&opts),
+        Some("sweep") => cmd_sweep(&opts),
         Some("demo") => cmd_demo(&opts),
         Some(other) => {
             eprintln!("unknown command: {other}\n");
@@ -77,7 +88,9 @@ fn usage() {
          \x20 bench-coding      cluster coding times, Fig. 4\n\
          \x20 bench-congestion  congested-network sweep, Fig. 5\n\
          \x20 bench-repair      single-block repair, star vs pipelined\n\
+         \x20 bench-table2-sim  Table II on the SimClock, CPU cost models charged\n\
          \x20 sim-longrun       long-run crash/repair trace on the SimClock\n\
+         \x20 sweep             repair triggers x policies x cost profiles grid\n\
          \x20 demo              end-to-end migrate+decode demo\n\
          see the doc comment in rust/src/main.rs for options"
     );
@@ -166,10 +179,18 @@ fn cmd_resilience(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Write a bench command's machine-readable twin next to its stdout table.
+fn emit_json(report: &rapidraid::metrics::BenchJson) -> anyhow::Result<()> {
+    let path = report.write_to_dir(std::path::Path::new("."))?;
+    println!("# wrote {}", path.display());
+    Ok(())
+}
+
 fn cmd_bench_cpu(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let block_mib: usize = get(opts, "block-mib", 4);
     let be = backend(opts)?;
-    scenarios::table2_cpu(&be, block_mib << 20, &mut std::io::stdout().lock())
+    let report = scenarios::table2_cpu(&be, block_mib << 20, &mut std::io::stdout().lock())?;
+    emit_json(&report)
 }
 
 fn cmd_bench_coding(opts: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -178,7 +199,7 @@ fn cmd_bench_coding(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let block_mib: usize = get(opts, "block-mib", 1);
     let samples: usize = get(opts, "samples", 5);
     let be = backend(opts)?;
-    scenarios::fig4_coding_times(
+    let report = scenarios::fig4_coding_times(
         &be,
         &preset,
         objects,
@@ -186,7 +207,7 @@ fn cmd_bench_coding(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         samples,
         &mut std::io::stdout().lock(),
     )?;
-    Ok(())
+    emit_json(&report)
 }
 
 fn cmd_bench_congestion(opts: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -196,7 +217,7 @@ fn cmd_bench_congestion(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let block_mib: usize = get(opts, "block-mib", 1);
     let samples: usize = get(opts, "samples", 3);
     let be = backend(opts)?;
-    scenarios::fig5_congestion(
+    let report = scenarios::fig5_congestion(
         &be,
         &preset,
         max_congested,
@@ -204,7 +225,8 @@ fn cmd_bench_congestion(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         block_mib << 20,
         samples,
         &mut std::io::stdout().lock(),
-    )
+    )?;
+    emit_json(&report)
 }
 
 fn cmd_bench_repair(opts: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -213,14 +235,52 @@ fn cmd_bench_repair(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let block_mib: usize = get(opts, "block-mib", 16);
     let samples: usize = get(opts, "samples", 3);
     let be = backend(opts)?;
-    scenarios::fig_repair(
+    let report = scenarios::fig_repair(
         &be,
         &preset,
         max_congested,
         block_mib << 20,
         samples,
         &mut std::io::stdout().lock(),
-    )
+    )?;
+    emit_json(&report)
+}
+
+fn cmd_bench_table2_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let block_kib: usize = get(opts, "block-kib", 1024);
+    let seed: u64 = get(opts, "seed", 5);
+    let be = backend(opts)?;
+    let (_rows, report) =
+        scenarios::table2_sim(&be, block_kib << 10, seed, &mut std::io::stdout().lock())?;
+    emit_json(&report)
+}
+
+fn cmd_sweep(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    use rapidraid::workload::{run_sweep, LongRunConfig, SweepConfig};
+    let mut base = if opts.contains_key("smoke") {
+        LongRunConfig::smoke()
+    } else {
+        LongRunConfig::paper_scale()
+    };
+    base.virtual_secs = get(opts, "virtual-secs", base.virtual_secs);
+    base.epoch_secs = get(opts, "epoch-secs", base.epoch_secs);
+    base.nodes = get(opts, "nodes", base.nodes);
+    base.objects = get(opts, "objects", base.objects);
+    base.seed = get(opts, "seed", base.seed);
+    let grid = if opts.contains_key("smoke") {
+        let mut g = SweepConfig::smoke();
+        g.base = base;
+        g
+    } else {
+        SweepConfig::default_grid(base)
+    };
+    let be = backend(opts)?;
+    let (rows, report) = run_sweep(&grid, &be, &mut std::io::stdout().lock())?;
+    anyhow::ensure!(
+        rows.iter().all(|r| r.report.all_decodable()),
+        "data loss in a sweep cell"
+    );
+    emit_json(&report)
 }
 
 fn cmd_sim_longrun(opts: &HashMap<String, String>) -> anyhow::Result<()> {

@@ -1,0 +1,188 @@
+//! Machine-readable bench output: every `rapidraid bench-*` / sim preset
+//! writes a `BENCH_<preset>.json` next to its human-readable table so the
+//! performance trajectory is trackable across PRs (diff two files, plot a
+//! series) without scraping stdout.
+//!
+//! The emitter is hand-rolled (the offline build has no serde): the shape
+//! is deliberately flat —
+//!
+//! ```json
+//! {
+//!   "preset": "table2-sim",
+//!   "params": {"block_bytes": "1048576", …},
+//!   "series": [{"name": "…", "n": 3, "median_s": …, "samples_s": […]}, …],
+//!   "spans":  [same shape — the per-stage tick breakdown],
+//!   "wall_s": 0.42
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::util::bench::Candle;
+
+/// Escape a string for a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn candle_json(c: &Candle) -> String {
+    let samples: Vec<String> = c
+        .samples
+        .iter()
+        .map(|s| format!("{:.9}", s.as_secs_f64()))
+        .collect();
+    format!(
+        "{{\"name\":\"{}\",\"n\":{},\"median_s\":{:.9},\"mean_s\":{:.9},\"min_s\":{:.9},\"max_s\":{:.9},\"stddev_s\":{:.9},\"samples_s\":[{}]}}",
+        escape(&c.name),
+        c.samples.len(),
+        c.median().as_secs_f64(),
+        c.mean().as_secs_f64(),
+        c.min().as_secs_f64(),
+        c.max().as_secs_f64(),
+        c.stddev_secs(),
+        samples.join(",")
+    )
+}
+
+/// One bench invocation's machine-readable report.
+#[derive(Clone, Debug)]
+pub struct BenchJson {
+    /// Preset label; also names the output file (`BENCH_<preset>.json`).
+    pub preset: String,
+    /// Invocation parameters, as key/value strings.
+    pub params: Vec<(String, String)>,
+    /// End-to-end result series (coding times, repair times, …).
+    pub series: Vec<Candle>,
+    /// Per-span tick breakdown (`<impl>/fold`, `<impl>/gemm.compute`, …).
+    pub spans: Vec<Candle>,
+    /// Wall time of the whole invocation.
+    pub wall: Duration,
+}
+
+impl BenchJson {
+    /// Empty report for `preset`.
+    pub fn new(preset: impl Into<String>) -> Self {
+        Self {
+            preset: preset.into(),
+            params: Vec::new(),
+            series: Vec::new(),
+            spans: Vec::new(),
+            wall: Duration::ZERO,
+        }
+    }
+
+    /// Append one parameter.
+    pub fn param(mut self, key: &str, value: impl ToString) -> Self {
+        self.params.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// The whole report as one JSON document.
+    pub fn to_json(&self) -> String {
+        let params: Vec<String> = self
+            .params
+            .iter()
+            .map(|(k, v)| format!("\"{}\":\"{}\"", escape(k), escape(v)))
+            .collect();
+        let series: Vec<String> = self.series.iter().map(candle_json).collect();
+        let spans: Vec<String> = self.spans.iter().map(candle_json).collect();
+        format!(
+            "{{\"preset\":\"{}\",\"params\":{{{}}},\"series\":[{}],\"spans\":[{}],\"wall_s\":{:.6}}}\n",
+            escape(&self.preset),
+            params.join(","),
+            series.join(","),
+            spans.join(","),
+            self.wall.as_secs_f64()
+        )
+    }
+
+    /// The output file name: `BENCH_<preset>.json`, preset sanitized to
+    /// `[A-Za-z0-9._-]`.
+    pub fn file_name(&self) -> String {
+        let safe: String = self
+            .preset
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect();
+        format!("BENCH_{safe}.json")
+    }
+
+    /// Write the report into `dir`; returns the file path.
+    pub fn write_to_dir(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn candle(name: &str, ms: &[u64]) -> Candle {
+        let mut samples: Vec<Duration> = ms.iter().map(|&m| Duration::from_millis(m)).collect();
+        samples.sort_unstable();
+        Candle {
+            name: name.to_string(),
+            samples,
+        }
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("plain"), "plain");
+    }
+
+    #[test]
+    fn report_serializes_all_sections() {
+        let mut r = BenchJson::new("table2-sim").param("block_bytes", 1 << 20);
+        r.series.push(candle("n11k8/classical", &[10, 30, 20]));
+        r.spans.push(candle("CEC/gemm.compute", &[5]));
+        r.wall = Duration::from_millis(1500);
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with("}\n"), "{j}");
+        assert!(j.contains("\"preset\":\"table2-sim\""));
+        assert!(j.contains("\"block_bytes\":\"1048576\""));
+        assert!(j.contains("\"name\":\"n11k8/classical\""));
+        assert!(j.contains("\"median_s\":0.020000000"));
+        assert!(j.contains("CEC/gemm.compute"));
+        assert!(j.contains("\"wall_s\":1.500000"));
+    }
+
+    #[test]
+    fn file_name_is_sanitized() {
+        assert_eq!(BenchJson::new("fig4-tpc-sim").file_name(), "BENCH_fig4-tpc-sim.json");
+        assert_eq!(BenchJson::new("a/b c").file_name(), "BENCH_a_b_c.json");
+    }
+
+    #[test]
+    fn write_roundtrips_to_disk() {
+        let dir = std::env::temp_dir().join(format!("rr-benchjson-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = BenchJson::new("smoke").param("k", 11);
+        let path = r.write_to_dir(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"preset\":\"smoke\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -15,7 +15,10 @@ use std::time::Duration;
 
 use crate::clock::{ClockHandle, Tick};
 
+pub mod json;
+
 pub use crate::util::bench::{bench, once, throughput_mib_s, Candle};
+pub use json::BenchJson;
 
 /// Thread-safe named-sample collector.
 #[derive(Default)]
@@ -141,9 +144,24 @@ impl<'a> Span<'a> {
     /// Close the span: record the elapsed clock time (if attached) and
     /// return it.
     pub fn finish(self) -> Duration {
+        self.finish_split(Duration::ZERO)
+    }
+
+    /// Close the span with a compute/transfer split: the total elapsed
+    /// clock time is recorded under the span's series as before, and when
+    /// `compute` is non-zero (a CPU cost model charged the step) two extra
+    /// series land next to it — `<series>.compute` (the charged compute
+    /// ticks) and `<series>.transfer` (the remainder: NIC pacing, link
+    /// latency, upstream waits). Zero-compute runs therefore produce
+    /// reports byte-identical to the pre-resource-model ones.
+    pub fn finish_split(self, compute: Duration) -> Duration {
         let dt = self.clock.now().saturating_sub(self.t0);
         if let Some(rec) = self.rec {
             rec.record(&self.series, dt);
+            if !compute.is_zero() {
+                rec.record(&format!("{}.compute", self.series), compute);
+                rec.record(&format!("{}.transfer", self.series), dt.saturating_sub(compute));
+            }
         }
         dt
     }
@@ -185,6 +203,30 @@ mod tests {
             r.candle("virt").unwrap().samples,
             vec![Duration::from_millis(250)]
         );
+    }
+
+    #[test]
+    fn finish_split_records_compute_and_transfer() {
+        let clock = SimClock::handle();
+        let r = Recorder::new();
+        let s = Span::start(&clock, Some(&r), "fold");
+        clock.sleep(Duration::from_millis(10));
+        let dt = s.finish_split(Duration::from_millis(4));
+        assert_eq!(dt, Duration::from_millis(10));
+        assert_eq!(r.candle("fold").unwrap().samples, vec![Duration::from_millis(10)]);
+        assert_eq!(
+            r.candle("fold.compute").unwrap().samples,
+            vec![Duration::from_millis(4)]
+        );
+        assert_eq!(
+            r.candle("fold.transfer").unwrap().samples,
+            vec![Duration::from_millis(6)]
+        );
+        // zero compute: no split series — reports stay PR-3-identical
+        let s = Span::start(&clock, Some(&r), "idle");
+        s.finish_split(Duration::ZERO);
+        assert!(r.candle("idle.compute").is_none());
+        assert!(r.candle("idle.transfer").is_none());
     }
 
     #[test]

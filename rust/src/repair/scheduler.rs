@@ -68,6 +68,18 @@ pub enum RepairTrigger {
     },
 }
 
+impl std::fmt::Display for RepairTrigger {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RepairTrigger::Eager => write!(f, "eager"),
+            RepairTrigger::Lazy { min_missing } => write!(f, "lazy({min_missing})"),
+            RepairTrigger::ReliabilityBudget { min_nines, p_node } => {
+                write!(f, "budget({min_nines}x9,p={p_node})")
+            }
+        }
+    }
+}
+
 /// One committed block move: `object`'s codeword position `position` now
 /// lives on `new_node` (== `old_node` for an in-place repair).
 #[derive(Copy, Clone, Debug)]

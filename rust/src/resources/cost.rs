@@ -1,0 +1,212 @@
+//! [`CostModel`]: map GF work to virtual time.
+//!
+//! The model is consulted by every data-plane worker through its node's
+//! [`CpuMeter`](super::CpuMeter); the returned duration is slept on the
+//! cluster clock, so under a `SimClock` compute becomes discrete events
+//! exactly like NIC reservations. [`ZeroCost`] (the default) prices
+//! everything at zero — that *is* PR 3's network-only accounting,
+//! expressed inside the unified model instead of as a separate code path.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::NodeId;
+
+use super::profile::NodeProfile;
+use super::work::GfWork;
+
+/// Prices [`GfWork`] in virtual time, per node.
+pub trait CostModel: Send + Sync + std::fmt::Debug {
+    /// Virtual compute time `node` needs to perform `work`.
+    fn cost(&self, node: NodeId, work: &GfWork) -> Duration;
+
+    /// Model label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Shared cost-model handle as carried by `ClusterSpec`.
+pub type CostModelHandle = Arc<dyn CostModel>;
+
+/// Compute is free (the pre-resource-model behavior). The right model
+/// under a `RealClock`, where compute already costs real time.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ZeroCost;
+
+impl ZeroCost {
+    /// Fresh handle (the `ClusterSpec` preset default).
+    pub fn handle() -> CostModelHandle {
+        Arc::new(ZeroCost)
+    }
+}
+
+impl CostModel for ZeroCost {
+    fn cost(&self, _node: NodeId, _work: &GfWork) -> Duration {
+        Duration::ZERO
+    }
+
+    fn name(&self) -> &'static str {
+        "zero"
+    }
+}
+
+/// Every node runs the same calibrated hardware: throughput per work
+/// category, charged linearly.
+#[derive(Clone, Debug)]
+pub struct UniformCost {
+    /// Table-lookup multiply-accumulate throughput, bytes/second.
+    pub mac_bytes_per_sec: f64,
+    /// Plain XOR/copy/memset throughput, bytes/second.
+    pub xor_bytes_per_sec: f64,
+    /// Block-store write throughput, bytes/second.
+    pub store_bytes_per_sec: f64,
+    /// Matrix-inversion throughput, element operations/second.
+    pub invert_elems_per_sec: f64,
+}
+
+impl UniformCost {
+    /// Rates calibrated to one core of the paper-era EC2 small instance
+    /// (≈ 1 ECU): a single-threaded table-lookup GF(2^8) MAC pass runs at
+    /// a few hundred MiB/s, plain XOR near memory speed, stores at memcpy
+    /// speed. These put one (16,11) pipeline stage's per-frame compute in
+    /// the same order as a 1 Gbps frame time, which is exactly the regime
+    /// Table II shows (compute and network both matter).
+    pub fn calibrated() -> Self {
+        Self {
+            mac_bytes_per_sec: 250e6,
+            xor_bytes_per_sec: 2e9,
+            store_bytes_per_sec: 4e9,
+            invert_elems_per_sec: 25e6,
+        }
+    }
+
+    /// Fresh handle of the calibrated rates.
+    pub fn handle() -> CostModelHandle {
+        Arc::new(Self::calibrated())
+    }
+
+    fn secs(&self, work: &GfWork) -> f64 {
+        work.mac_bytes as f64 / self.mac_bytes_per_sec
+            + work.xor_bytes as f64 / self.xor_bytes_per_sec
+            + work.store_bytes as f64 / self.store_bytes_per_sec
+            + work.invert_elems as f64 / self.invert_elems_per_sec
+    }
+}
+
+impl CostModel for UniformCost {
+    fn cost(&self, _node: NodeId, work: &GfWork) -> Duration {
+        if work.is_zero() {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(self.secs(work))
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// Heterogeneous hardware: per-node [`NodeProfile`]s scaling a
+/// [`UniformCost`] baseline. Node `i` gets `profiles[i % len]`, so a
+/// short mix (e.g. [`NodeProfile::ec2_mix`]) tiles any cluster size
+/// deterministically.
+#[derive(Clone, Debug)]
+pub struct ProfileCost {
+    base: UniformCost,
+    profiles: Vec<NodeProfile>,
+}
+
+impl ProfileCost {
+    /// Profile the `base` rates. Errors on an empty or non-positive mix.
+    pub fn new(base: UniformCost, profiles: Vec<NodeProfile>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!profiles.is_empty(), "need at least one node profile");
+        anyhow::ensure!(
+            profiles.iter().all(|p| p.speed > 0.0),
+            "profile speeds must be positive"
+        );
+        Ok(Self { base, profiles })
+    }
+
+    /// Calibrated baseline + the given mix, as a handle.
+    pub fn handle(profiles: Vec<NodeProfile>) -> anyhow::Result<CostModelHandle> {
+        Ok(Arc::new(Self::new(UniformCost::calibrated(), profiles)?))
+    }
+
+    /// The profile charged to `node`.
+    pub fn profile(&self, node: NodeId) -> NodeProfile {
+        self.profiles[node % self.profiles.len()]
+    }
+}
+
+impl CostModel for ProfileCost {
+    fn cost(&self, node: NodeId, work: &GfWork) -> Duration {
+        if work.is_zero() {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(self.base.secs(work) / self.profile(node).speed)
+    }
+
+    fn name(&self) -> &'static str {
+        "profile"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_cost_prices_everything_at_zero() {
+        let m = ZeroCost::handle();
+        assert_eq!(m.cost(0, &GfWork::mac(1 << 30)), Duration::ZERO);
+        assert_eq!(m.name(), "zero");
+    }
+
+    #[test]
+    fn uniform_cost_is_linear_in_work() {
+        let m = UniformCost::calibrated();
+        let one = m.cost(0, &GfWork::mac(1 << 20));
+        let two = m.cost(5, &GfWork::mac(2 << 20));
+        assert!(one > Duration::ZERO);
+        assert_eq!(two, one * 2);
+        // a MiB of MAC at 250 MB/s is ~4 ms
+        assert!(one > Duration::from_millis(2) && one < Duration::from_millis(8), "{one:?}");
+    }
+
+    #[test]
+    fn uniform_cost_charges_all_categories() {
+        let m = UniformCost::calibrated();
+        for w in [
+            GfWork::mac(1000),
+            GfWork::xor(1000),
+            GfWork::store(1000),
+            GfWork::invert(8),
+        ] {
+            assert!(m.cost(0, &w) > Duration::ZERO, "{w:?} priced at zero");
+        }
+        assert_eq!(m.cost(0, &GfWork::ZERO), Duration::ZERO);
+    }
+
+    #[test]
+    fn profile_cost_scales_per_node() {
+        let m = ProfileCost::new(UniformCost::calibrated(), NodeProfile::ec2_mix()).unwrap();
+        let w = GfWork::mac(1 << 20);
+        let small = m.cost(0, &w); // ec2-small, speed 1
+        let medium = m.cost(1, &w); // ec2-medium, speed 2
+        let large = m.cost(2, &w); // ec2-large, speed 4
+        assert_eq!(small, medium * 2);
+        assert_eq!(small, large * 4);
+        // the mix tiles: node 3 wraps back to small
+        assert_eq!(m.cost(3, &w), small);
+        assert_eq!(m.profile(4).name, "ec2-medium");
+    }
+
+    #[test]
+    fn profile_cost_rejects_bad_mixes() {
+        assert!(ProfileCost::new(UniformCost::calibrated(), vec![]).is_err());
+        let neg = NodeProfile {
+            name: "neg",
+            speed: -1.0,
+        };
+        assert!(ProfileCost::new(UniformCost::calibrated(), vec![neg]).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! [`CpuMeter`]: per-node CPU reservation on the cluster clock — the
+//! compute twin of the NIC [`RateLimiter`](crate::cluster::RateLimiter).
+//!
+//! A node's workers all charge the same meter, so concurrent data-plane
+//! commands contend for the node's (single) simulated core with the same
+//! cumulative-FIFO semantics that make NIC bandwidth sharing honest:
+//! reservations serialize through a mutex, the blocking happens on the
+//! clock, and under a `SimClock` a charge is a discrete event with zero
+//! wall cost. A zero-priced charge ([`ZeroCost`](super::ZeroCost), or
+//! genuinely zero work) returns without touching the reservation state,
+//! so the default configuration is tick-for-tick identical to the
+//! pre-resource-model dataplane.
+//!
+//! Determinism caveat (the same one the NIC limiter carries): the meter's
+//! *aggregate* schedule is order-independent — the sum of reservations
+//! commutes — but when several workers of one node charge at the same
+//! virtual instant, mutex-acquisition order decides which completes
+//! first. Fine-grained tick determinism therefore holds in
+//! single-charger-per-node regimes (one data-plane command per node at a
+//! time — the `table2-sim` preset and the determinism tests), not for
+//! arbitrary concurrent workloads; seeded long-run traces remain
+//! *schedule*-deterministic (crash/revive draws are a function of the
+//! seed alone) regardless.
+
+use std::sync::Mutex;
+
+use crate::clock::{Clock, ClockHandle, Tick};
+use crate::cluster::NodeId;
+
+use super::cost::CostModelHandle;
+use super::work::GfWork;
+
+/// Cumulative CPU-time reservation for one node.
+pub struct CpuMeter {
+    clock: ClockHandle,
+    model: CostModelHandle,
+    node: NodeId,
+    /// Tick at which the node's core becomes free.
+    next_free: Mutex<Tick>,
+}
+
+impl CpuMeter {
+    /// Meter for `node`, pricing work with `model` on `clock`.
+    pub fn new(clock: ClockHandle, model: CostModelHandle, node: NodeId) -> Self {
+        let next_free = clock.now();
+        Self {
+            clock,
+            model,
+            node,
+            next_free: Mutex::new(next_free),
+        }
+    }
+
+    /// The cost model behind this meter.
+    pub fn model(&self) -> &CostModelHandle {
+        &self.model
+    }
+
+    /// The node this meter accounts for.
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    /// Charge `work`: reserve the core for its priced duration (FIFO
+    /// behind earlier charges) and sleep until the reservation ends.
+    /// Returns the compute time charged — `ZERO` charges are free and do
+    /// not serialize.
+    pub fn charge(&self, work: &GfWork) -> Tick {
+        let cost = self.model.cost(self.node, work);
+        if cost.is_zero() {
+            return Tick::ZERO;
+        }
+        let done = {
+            let mut next = self.next_free.lock().unwrap();
+            let now = self.clock.now();
+            let start = if *next > now { *next } else { now };
+            let done = start + cost;
+            *next = done;
+            done
+        };
+        self.clock.sleep_until(done);
+        cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::SimClock;
+    use crate::resources::{ProfileCost, UniformCost, ZeroCost};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn zero_cost_charge_is_free_and_instant() {
+        let clock = SimClock::handle();
+        let m = CpuMeter::new(clock.clone(), ZeroCost::handle(), 0);
+        assert_eq!(m.charge(&GfWork::mac(1 << 30)), Duration::ZERO);
+        assert_eq!(clock.now(), Duration::ZERO, "free charge must not advance time");
+    }
+
+    #[test]
+    fn uniform_charge_occupies_virtual_time() {
+        let clock = SimClock::handle();
+        let m = CpuMeter::new(clock.clone(), UniformCost::handle(), 0);
+        // 250 MB of MAC at 250 MB/s = exactly 1 virtual second
+        let dt = m.charge(&GfWork::mac(250_000_000));
+        assert_eq!(dt, Duration::from_secs(1));
+        assert_eq!(clock.now(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn charges_serialize_like_one_core() {
+        // two concurrent half-second charges on one meter end at 1 s of
+        // virtual time total, regardless of arrival order.
+        let clock = SimClock::handle();
+        let m = Arc::new(CpuMeter::new(clock.clone(), UniformCost::handle(), 0));
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    m.charge(&GfWork::mac(125_000_000));
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(clock.now(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn profiled_meter_charges_its_nodes_speed() {
+        let clock = SimClock::handle();
+        let model = ProfileCost::handle(crate::resources::NodeProfile::ec2_mix()).unwrap();
+        let slow = CpuMeter::new(clock.clone(), model.clone(), 0); // small
+        let fast = CpuMeter::new(clock.clone(), model, 2); // large, 4x
+        let w = GfWork::mac(100_000_000);
+        let a = slow.charge(&w);
+        let b = fast.charge(&w);
+        assert_eq!(a, b * 4);
+        assert_eq!(slow.node(), 0);
+    }
+}

@@ -1,0 +1,47 @@
+//! Unified resource accounting: CPU cost as a first-class peer of network
+//! bandwidth.
+//!
+//! PR 3's virtual-time core made every *network* wait a discrete event on
+//! the cluster clock, but compute stayed free: under a `SimClock` a GF
+//! multiply-accumulate over a megabyte took zero virtual time, so every
+//! `-sim` preset modeled an infinitely fast CPU. The paper's Table II
+//! shows that is the wrong model — archival speedups are shaped by
+//! per-node GF throughput as much as by link bandwidth, and on
+//! heterogeneous hardware the bottleneck flips between network and
+//! compute (Li et al.'s repair-pipelining analysis makes the same point).
+//!
+//! This module closes the gap with three pieces:
+//!
+//! * [`GfWork`] — the unit of GF effort: multiply-accumulate bytes,
+//!   XOR/copy bytes, store traffic and matrix-inversion element ops.
+//!   The slice layer ([`crate::gf::slice`]) reports the work each op
+//!   *actually* performed (zero-coefficient skips and XOR shortcuts
+//!   included), and the dataplane derives per-frame work from the same
+//!   coefficient rules.
+//! * [`CostModel`] — maps `(node, GfWork)` to virtual time. [`ZeroCost`]
+//!   is the old behavior expressed inside the new model (compute is free —
+//!   the default, and the right choice under a `RealClock` where compute
+//!   already costs real time); [`UniformCost`] charges calibrated
+//!   ns-per-byte rates; [`ProfileCost`] scales those rates per node
+//!   through [`NodeProfile`]s (EC2 small/medium/large classes).
+//! * [`CpuMeter`] — the compute twin of the NIC
+//!   [`RateLimiter`](crate::cluster::RateLimiter): one per node,
+//!   cumulative FIFO reservation of the node's (single) simulated core.
+//!   Every data-plane worker charges its frame's work *before* forwarding
+//!   the result, so compute occupies virtual time in the middle of the
+//!   pipeline — exactly where it throttles a real chain — and concurrent
+//!   workers on one node contend for the core like they contend for the
+//!   NIC.
+//!
+//! There is no parallel "network-only" accounting path left: every worker
+//! always charges its meter, and `ZeroCost` simply makes the charge free.
+
+pub mod cost;
+pub mod meter;
+pub mod profile;
+pub mod work;
+
+pub use cost::{CostModel, CostModelHandle, ProfileCost, UniformCost, ZeroCost};
+pub use meter::CpuMeter;
+pub use profile::NodeProfile;
+pub use work::GfWork;

@@ -1,0 +1,84 @@
+//! [`NodeProfile`]: the relative CPU capability of one storage node.
+//!
+//! Profiles scale the calibrated [`UniformCost`](super::UniformCost)
+//! baseline per node, which is how the Table-II-style hardware sweep —
+//! the paper ran its CPU measurements on an Atom, a Core 2 and a Xeon,
+//! and its cluster experiments on EC2 small instances — enters the
+//! simulation: a heterogeneous [`ProfileCost`](super::ProfileCost) makes
+//! the chain's bottleneck land on its slowest stage instead of on the
+//! network.
+
+/// Relative CPU speed class of one storage node.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct NodeProfile {
+    /// Class label used in reports (`ec2-small`, …).
+    pub name: &'static str,
+    /// Speed multiplier over the calibrated baseline: 1.0 = the EC2
+    /// small instance the defaults are calibrated to; 2.0 halves every
+    /// compute charge. Must be > 0.
+    pub speed: f64,
+}
+
+impl NodeProfile {
+    /// EC2 small instance — the calibration baseline (speed 1.0).
+    pub const EC2_SMALL: NodeProfile = NodeProfile {
+        name: "ec2-small",
+        speed: 1.0,
+    };
+
+    /// EC2 medium class: ~2× the small instance's GF throughput.
+    pub const EC2_MEDIUM: NodeProfile = NodeProfile {
+        name: "ec2-medium",
+        speed: 2.0,
+    };
+
+    /// EC2 large class: ~4× the small instance's GF throughput.
+    pub const EC2_LARGE: NodeProfile = NodeProfile {
+        name: "ec2-large",
+        speed: 4.0,
+    };
+
+    /// HP ThinClient (the paper's 50-node testbed): Atom-class, about
+    /// half the small instance's throughput.
+    pub const THINCLIENT: NodeProfile = NodeProfile {
+        name: "thinclient",
+        speed: 0.5,
+    };
+
+    /// A custom profile (testing stragglers, hypothetical hardware).
+    pub fn custom(name: &'static str, speed: f64) -> Self {
+        assert!(speed > 0.0, "profile speed must be positive");
+        NodeProfile { name, speed }
+    }
+
+    /// The heterogeneous EC2 mix used by the Table-II sim preset and the
+    /// sweep grid: small/medium/large round-robin.
+    pub fn ec2_mix() -> Vec<NodeProfile> {
+        vec![Self::EC2_SMALL, Self::EC2_MEDIUM, Self::EC2_LARGE]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_ordered_by_speed() {
+        assert!(NodeProfile::THINCLIENT.speed < NodeProfile::EC2_SMALL.speed);
+        assert!(NodeProfile::EC2_SMALL.speed < NodeProfile::EC2_MEDIUM.speed);
+        assert!(NodeProfile::EC2_MEDIUM.speed < NodeProfile::EC2_LARGE.speed);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_speed_rejected() {
+        let _ = NodeProfile::custom("broken", 0.0);
+    }
+
+    #[test]
+    fn ec2_mix_has_all_three_classes() {
+        let mix = NodeProfile::ec2_mix();
+        assert_eq!(mix.len(), 3);
+        assert_eq!(mix[0], NodeProfile::EC2_SMALL);
+    }
+}

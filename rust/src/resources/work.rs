@@ -1,0 +1,185 @@
+//! [`GfWork`]: the unit of GF compute effort reported by the slice layer
+//! and charged by [`CostModel`](super::CostModel)s.
+
+use std::ops::{Add, AddAssign};
+
+/// Work performed by GF operations, in the units the cost models price.
+///
+/// The categories mirror the real cost structure of the table-based
+/// kernels in [`crate::gf::slice`]:
+///
+/// * `mac_bytes` — bytes pushed through a table-lookup
+///   multiply-accumulate pass (one product-table lookup + XOR per byte;
+///   the dominant term of every encode/repair).
+/// * `xor_bytes` — bytes pushed through a plain XOR, copy or memset pass
+///   (the coefficient-0/1 shortcuts, buffer clones, zero fills).
+/// * `store_bytes` — bytes appended to a node's block store (the memcpy
+///   that lands a received or generated block).
+/// * `invert_elems` — Gauss-Jordan element operations of matrix
+///   inversions, counted as dim³ per inversion (decode setup, repair
+///   coefficient derivation).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct GfWork {
+    /// Table-lookup multiply-accumulate bytes.
+    pub mac_bytes: u64,
+    /// Plain XOR / copy / memset bytes.
+    pub xor_bytes: u64,
+    /// Block-store write traffic in bytes.
+    pub store_bytes: u64,
+    /// Matrix-inversion element operations (Σ dim³).
+    pub invert_elems: u64,
+}
+
+impl GfWork {
+    /// No work at all.
+    pub const ZERO: GfWork = GfWork {
+        mac_bytes: 0,
+        xor_bytes: 0,
+        store_bytes: 0,
+        invert_elems: 0,
+    };
+
+    /// A multiply-accumulate pass over `bytes`.
+    pub fn mac(bytes: usize) -> Self {
+        GfWork {
+            mac_bytes: bytes as u64,
+            ..Self::ZERO
+        }
+    }
+
+    /// An XOR/copy/memset pass over `bytes`.
+    pub fn xor(bytes: usize) -> Self {
+        GfWork {
+            xor_bytes: bytes as u64,
+            ..Self::ZERO
+        }
+    }
+
+    /// A block-store write of `bytes`.
+    pub fn store(bytes: usize) -> Self {
+        GfWork {
+            store_bytes: bytes as u64,
+            ..Self::ZERO
+        }
+    }
+
+    /// One `dim`×`dim` matrix inversion (dim³ element operations).
+    pub fn invert(dim: usize) -> Self {
+        GfWork {
+            invert_elems: (dim as u64).pow(3),
+            ..Self::ZERO
+        }
+    }
+
+    /// Work of applying one field-erased coefficient to a `bytes`-long
+    /// buffer — the same shortcut rules the slice ops take: 0 does
+    /// nothing, 1 is an XOR pass, anything else a table MAC pass.
+    pub fn coeff(c: u32, bytes: usize) -> Self {
+        match c {
+            0 => Self::ZERO,
+            1 => Self::xor(bytes),
+            _ => Self::mac(bytes),
+        }
+    }
+
+    /// Work of one fused pipeline stage (paper eqs. (3)/(4)) over one
+    /// `bytes`-long frame: the two incoming-buffer clones plus a ψ and a ξ
+    /// coefficient application per local block.
+    pub fn pipeline_step(psi: &[u32], xi: &[u32], bytes: usize) -> Self {
+        let mut w = Self::xor(2 * bytes); // x_out and c start as copies of x_in
+        for &c in psi.iter().chain(xi) {
+            w += Self::coeff(c, bytes);
+        }
+        w
+    }
+
+    /// Work of applying an m×k coefficient matrix to one row of k
+    /// `bytes`-long frames (the classical coding node's streamed gemm):
+    /// the m output-accumulator fills plus one coefficient application per
+    /// matrix cell.
+    pub fn gemm(rows: &[Vec<u32>], bytes: usize) -> Self {
+        let mut w = Self::xor(rows.len() * bytes);
+        for row in rows {
+            for &c in row {
+                w += Self::coeff(c, bytes);
+            }
+        }
+        w
+    }
+
+    /// True iff every category is zero.
+    pub fn is_zero(&self) -> bool {
+        *self == Self::ZERO
+    }
+}
+
+impl AddAssign for GfWork {
+    fn add_assign(&mut self, rhs: Self) {
+        self.mac_bytes += rhs.mac_bytes;
+        self.xor_bytes += rhs.xor_bytes;
+        self.store_bytes += rhs.store_bytes;
+        self.invert_elems += rhs.invert_elems;
+    }
+}
+
+impl Add for GfWork {
+    type Output = GfWork;
+    fn add(mut self, rhs: Self) -> Self {
+        self += rhs;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coeff_takes_the_shortcut_rules() {
+        assert_eq!(GfWork::coeff(0, 100), GfWork::ZERO);
+        assert_eq!(GfWork::coeff(1, 100), GfWork::xor(100));
+        assert_eq!(GfWork::coeff(7, 100), GfWork::mac(100));
+    }
+
+    #[test]
+    fn pipeline_step_counts_psi_and_xi() {
+        // 2 locals, all coefficients ≥ 2: 4 MAC passes + the 2 clones.
+        let w = GfWork::pipeline_step(&[3, 5], &[7, 9], 1000);
+        assert_eq!(w.mac_bytes, 4000);
+        assert_eq!(w.xor_bytes, 2000);
+        // zero coefficients cost nothing beyond the clones
+        let w = GfWork::pipeline_step(&[0], &[1], 1000);
+        assert_eq!(w.mac_bytes, 0);
+        assert_eq!(w.xor_bytes, 3000);
+    }
+
+    #[test]
+    fn gemm_counts_every_cell() {
+        let rows = vec![vec![2u32, 3, 0], vec![1, 4, 5]];
+        let w = GfWork::gemm(&rows, 10);
+        assert_eq!(w.mac_bytes, 40); // cells 2,3,4,5
+        assert_eq!(w.xor_bytes, 20 + 10); // 2 accumulator fills + cell 1
+    }
+
+    #[test]
+    fn invert_is_cubic() {
+        assert_eq!(GfWork::invert(4).invert_elems, 64);
+    }
+
+    #[test]
+    fn addition_accumulates() {
+        let mut w = GfWork::mac(5);
+        w += GfWork::xor(7) + GfWork::store(11) + GfWork::invert(2);
+        assert_eq!(
+            w,
+            GfWork {
+                mac_bytes: 5,
+                xor_bytes: 7,
+                store_bytes: 11,
+                invert_elems: 8
+            }
+        );
+        assert!(!w.is_zero());
+        assert!(GfWork::ZERO.is_zero());
+    }
+}

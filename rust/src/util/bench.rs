@@ -104,6 +104,16 @@ pub fn throughput_mib_s(bytes: usize, d: Duration) -> f64 {
     bytes as f64 / (1024.0 * 1024.0) / d.as_secs_f64()
 }
 
+/// Parse a `u64` knob from the environment, falling back to `default`
+/// when unset or malformed — the bench binaries' shared option
+/// convention (`BLOCK_KIB`, `SAMPLES`, `SEED`, …).
+pub fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,219 @@
+//! `rapidraid sweep`: grid a long-run failure trace over repair triggers ×
+//! chain policies × CPU cost profiles and print a comparison table.
+//!
+//! Every cell of the grid is one full [`run_long_run`] trace (same seed,
+//! same crash/revive/congestion schedule — the schedule is a fixed
+//! function of the seed, so the cells are directly comparable) with the
+//! trigger, the newcomer-ranking policy and the per-node compute profiles
+//! swapped. This is ROADMAP's "sweep repair schedules / placement
+//! policies over long traces", now with the resource model as the third
+//! axis: a repair schedule that looks fine on free compute can lose its
+//! margin when the newcomers are the slow nodes.
+
+use std::io::Write;
+use std::time::Duration;
+
+use crate::backend::BackendHandle;
+use crate::clock::{Clock, RealClock};
+use crate::coordinator::engine::PolicyKind;
+use crate::metrics::{BenchJson, Candle};
+use crate::repair::RepairTrigger;
+use crate::resources::NodeProfile;
+
+use super::{run_long_run, LongRunConfig, LongRunReport};
+
+/// The sweep grid: a base trace plus the axes to vary.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Trace every cell runs (seed, scale, failure rates).
+    pub base: LongRunConfig,
+    /// Repair triggers to sweep.
+    pub triggers: Vec<RepairTrigger>,
+    /// Chain/newcomer ranking policies to sweep.
+    pub policies: Vec<PolicyKind>,
+    /// Named CPU profile mixes to sweep (empty mix = free compute).
+    pub profiles: Vec<(&'static str, Vec<NodeProfile>)>,
+}
+
+impl SweepConfig {
+    /// The full default grid: Eager / Lazy(2) / ReliabilityBudget(2×9)
+    /// triggers × Fifo / CongestionAware policies × free / uniform /
+    /// heterogeneous compute — 18 traces.
+    pub fn default_grid(base: LongRunConfig) -> Self {
+        Self {
+            base,
+            triggers: vec![
+                RepairTrigger::Eager,
+                RepairTrigger::Lazy { min_missing: 2 },
+                RepairTrigger::ReliabilityBudget {
+                    min_nines: 2,
+                    p_node: 0.05,
+                },
+            ],
+            policies: vec![PolicyKind::Fifo, PolicyKind::CongestionAware],
+            profiles: vec![
+                ("free", Vec::new()),
+                ("uniform", vec![NodeProfile::EC2_SMALL]),
+                ("ec2-mix", NodeProfile::ec2_mix()),
+            ],
+        }
+    }
+
+    /// CI smoke grid: one trigger, both policies, free vs heterogeneous
+    /// compute — 4 short traces.
+    pub fn smoke() -> Self {
+        let mut grid = Self::default_grid(LongRunConfig::smoke());
+        grid.triggers = vec![RepairTrigger::Eager];
+        grid.profiles = vec![("free", Vec::new()), ("ec2-mix", NodeProfile::ec2_mix())];
+        grid
+    }
+}
+
+/// One completed cell of the grid.
+#[derive(Debug)]
+pub struct SweepRow {
+    /// Trigger of this cell.
+    pub trigger: RepairTrigger,
+    /// Policy of this cell.
+    pub policy: PolicyKind,
+    /// Profile-mix label of this cell.
+    pub cost: &'static str,
+    /// The trace's outcome.
+    pub report: LongRunReport,
+    /// Wall time the cell took.
+    pub wall: Duration,
+}
+
+/// Run the whole grid, printing one table row per cell as it completes.
+/// Returns the rows plus a machine-readable twin (`BENCH_sweep.json`
+/// material: one single-sample virtual-elapsed series per cell).
+pub fn run_sweep(
+    cfg: &SweepConfig,
+    backend: &BackendHandle,
+    out: &mut dyn Write,
+) -> anyhow::Result<(Vec<SweepRow>, BenchJson)> {
+    anyhow::ensure!(
+        !cfg.triggers.is_empty() && !cfg.policies.is_empty() && !cfg.profiles.is_empty(),
+        "sweep grid has an empty axis"
+    );
+    let wall = RealClock::new();
+    let mut json = BenchJson::new("sweep")
+        .param("nodes", cfg.base.nodes)
+        .param("objects", cfg.base.objects)
+        .param("virtual_secs", cfg.base.virtual_secs)
+        .param("seed", cfg.base.seed)
+        .param("cells", cfg.triggers.len() * cfg.policies.len() * cfg.profiles.len());
+    writeln!(
+        out,
+        "# sweep — {} nodes, {} objects, {} virtual secs per cell, seed {}",
+        cfg.base.nodes, cfg.base.objects, cfg.base.virtual_secs, cfg.base.seed
+    )?;
+    writeln!(
+        out,
+        "{:>18} {:>17} {:>8} {:>8} {:>8} {:>9} {:>8} {:>10} {:>8}",
+        "trigger", "policy", "cost", "crashes", "repairs", "deferred", "missing", "decodable", "wall_s"
+    )?;
+    let mut rows = Vec::new();
+    for &trigger in &cfg.triggers {
+        for &policy in &cfg.policies {
+            for (cost, profiles) in &cfg.profiles {
+                let cost = *cost;
+                let mut cell = cfg.base.clone();
+                cell.trigger = trigger;
+                cell.policy = policy;
+                cell.profiles = profiles.clone();
+                let t0 = wall.now();
+                let report = run_long_run(&cell, backend, None)?;
+                let cell_wall = wall.now().saturating_sub(t0);
+                let deferred: usize = report.epochs.iter().map(|e| e.deferred).sum();
+                writeln!(
+                    out,
+                    "{:>18} {:>17} {:>8} {:>8} {:>8} {:>9} {:>8} {:>7}/{:<2} {:>8.2}",
+                    trigger.to_string(),
+                    policy.name(),
+                    cost,
+                    report.crashes_total,
+                    report.repairs_total,
+                    deferred,
+                    report.final_missing,
+                    report.objects_decodable,
+                    report.objects_total,
+                    cell_wall.as_secs_f64(),
+                )?;
+                json.series.push(Candle {
+                    name: format!("{trigger}/{}/{cost}", policy.name()),
+                    samples: vec![report.virtual_elapsed],
+                });
+                rows.push(SweepRow {
+                    trigger,
+                    policy,
+                    cost,
+                    report,
+                    wall: cell_wall,
+                });
+            }
+        }
+    }
+    json.wall = wall.now();
+    Ok((rows, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::repair::RepairStrategy;
+    use std::sync::Arc;
+
+    fn tiny_base() -> LongRunConfig {
+        LongRunConfig {
+            nodes: 12,
+            n: 8,
+            k: 4,
+            code_seed: 7,
+            objects: 2,
+            block_bytes: 8 * 1024,
+            buf_bytes: 2 * 1024,
+            virtual_secs: 30,
+            epoch_secs: 10,
+            seed: 42,
+            p_crash: 1.0,
+            p_congest: 0.0,
+            max_down: 1,
+            revive_after_epochs: 2,
+            strategy: RepairStrategy::Pipelined,
+            trigger: RepairTrigger::Eager,
+            max_concurrent_repairs: 2,
+            policy: PolicyKind::CongestionAware,
+            profiles: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn tiny_grid_covers_every_cell_losslessly() {
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let mut grid = SweepConfig::default_grid(tiny_base());
+        // keep the test quick: 1 trigger × 2 policies × 2 costs
+        grid.triggers = vec![RepairTrigger::Eager];
+        grid.profiles = vec![("free", Vec::new()), ("ec2-mix", NodeProfile::ec2_mix())];
+        let mut out = Vec::new();
+        let (rows, json) = run_sweep(&grid, &backend, &mut out).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.report.all_decodable(), "{}", r.report.summary());
+            assert!(r.report.crashes_total >= 1);
+        }
+        assert_eq!(json.series.len(), 4);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("eager") && text.contains("congestion-aware"), "{text}");
+        assert!(text.contains("ec2-mix"));
+    }
+
+    #[test]
+    fn empty_axis_is_rejected() {
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let mut grid = SweepConfig::default_grid(tiny_base());
+        grid.policies.clear();
+        assert!(run_sweep(&grid, &backend, &mut Vec::<u8>::new()).is_err());
+    }
+}

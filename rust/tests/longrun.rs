@@ -8,6 +8,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::resources::NodeProfile;
 use rapidraid::workload::{run_long_run, LongRunConfig};
 
 #[test]
@@ -38,6 +39,43 @@ fn paper_scale_trace_is_wall_fast_and_lossless() {
     // …and no object was lost.
     assert!(report.all_decodable(), "{}", report.summary());
     assert_eq!(report.epochs.len() as u64, 100);
+}
+
+#[test]
+fn two_hundred_nodes_one_virtual_hour_with_compute_costs() {
+    // Scale acceptance for the resource model: 200 nodes living through a
+    // full virtual hour of seeded crash/revive/congestion with
+    // heterogeneous CPU costs charged on every data-plane op — still a
+    // bounded wall-time run, still lossless.
+    let mut cfg = LongRunConfig::paper_scale();
+    cfg.nodes = 200;
+    cfg.virtual_secs = 3600; // one virtual hour
+    cfg.epoch_secs = 60;
+    cfg.objects = 8;
+    cfg.block_bytes = 64 * 1024;
+    cfg.buf_bytes = 16 * 1024;
+    cfg.seed = 0xD00D_FEED;
+    cfg.profiles = NodeProfile::ec2_mix(); // small/medium/large tiling
+
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let wall = Instant::now();
+    let report = run_long_run(&cfg, &backend, None).expect("200-node long run");
+    let wall = wall.elapsed();
+
+    assert!(
+        report.virtual_elapsed >= Duration::from_secs(3600),
+        "only {:?} virtual",
+        report.virtual_elapsed
+    );
+    assert_eq!(report.epochs.len(), 60);
+    // wall budget: generous for slow CI hosts, but tight enough to catch a
+    // virtual clock leaking real waits (3600 real seconds would time out).
+    assert!(
+        wall < Duration::from_secs(60),
+        "200-node virtual hour took {wall:?} of wall time"
+    );
+    assert!(report.crashes_total >= 3, "{}", report.summary());
+    assert!(report.all_decodable(), "{}", report.summary());
 }
 
 #[test]

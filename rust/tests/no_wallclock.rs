@@ -1,14 +1,22 @@
 //! Grep-enforcement of the virtual-time refactor: no wall-clock primitive
-//! may appear in `cluster/`, `coordinator/` or `repair/` — all time goes
-//! through the `Clock` trait, whose only wall implementation lives in
-//! `clock/` (RealClock). A reintroduced `Instant::now()` or
-//! `thread::sleep` would silently break SimClock determinism, so this test
-//! fails the build instead.
+//! may appear in `cluster/`, `coordinator/`, `repair/`, `resources/` or
+//! `workload/` — all time goes through the `Clock` trait, whose only wall
+//! implementation lives in `clock/` (RealClock). A reintroduced
+//! `Instant::now()` or `thread::sleep` would silently break SimClock
+//! determinism, so this test fails the build instead. (`resources/` is in
+//! scope because the `CpuMeter` must charge compute on the cluster clock;
+//! `workload/` because its traces are the determinism acceptance surface.)
 
 use std::path::{Path, PathBuf};
 
 const FORBIDDEN: &[&str] = &["Instant::now", "thread::sleep", "SystemTime"];
-const DIRS: &[&str] = &["rust/src/cluster", "rust/src/coordinator", "rust/src/repair"];
+const DIRS: &[&str] = &[
+    "rust/src/cluster",
+    "rust/src/coordinator",
+    "rust/src/repair",
+    "rust/src/resources",
+    "rust/src/workload",
+];
 
 fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
     for entry in std::fs::read_dir(dir).expect("readable source dir") {

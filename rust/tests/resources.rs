@@ -1,0 +1,126 @@
+//! Property tests of the unified resource model (PR 4 acceptance):
+//!
+//! 1. **Cost models never change bytes** — archival + repair under
+//!    `ZeroCost`, `UniformCost` and a heterogeneous `ProfileCost` produce
+//!    byte-identical coded blocks for the same seed: cost models may only
+//!    move virtual time, never data.
+//! 2. **Slowing a chain node strictly increases the chain's virtual
+//!    makespan** — heterogeneous profiles place the bottleneck on the
+//!    slowest stage.
+//! 3. **Charging compute strictly increases virtual time over
+//!    `ZeroCost`** — compute genuinely occupies the timeline.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::cluster::{Cluster, ClusterSpec};
+use rapidraid::codes::rapidraid::RapidRaidCode;
+use rapidraid::coordinator::{ingest_object, survey_coded, PipelineJob, PlanExecutor};
+use rapidraid::gf::Gf256;
+use rapidraid::repair::{PipelinedRepairJob, RepairJob};
+use rapidraid::resources::{
+    CostModelHandle, NodeProfile, ProfileCost, UniformCost, ZeroCost,
+};
+use rapidraid::storage::{BlockKey, ObjectId, ReplicaPlacement};
+use rapidraid::util::with_timeout;
+
+const N: usize = 8;
+const K: usize = 4;
+const BLOCK: usize = 64 * 1024;
+const BUF: usize = 8 * 1024;
+
+/// Archive one object and repair one crashed tail block under `cost`;
+/// return every coded block's bytes (repaired position included) plus the
+/// two end-to-end virtual durations.
+fn run_under(cost: CostModelHandle) -> (Vec<Vec<u8>>, [Duration; 2]) {
+    let mut spec = ClusterSpec::tpc(N + 1).sim().with_cost(cost);
+    spec.jitter = Duration::ZERO; // exact timelines: only the cost model varies
+    let cluster = Cluster::start(spec);
+    let object = ObjectId(4100);
+    let placement = ReplicaPlacement::new(object, K, (0..N).collect()).unwrap();
+    ingest_object(&cluster, &placement, BLOCK).unwrap();
+    let code = RapidRaidCode::<Gf256>::with_seed(N, K, 7).unwrap();
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let exec = PlanExecutor::new(&cluster, backend.clone());
+
+    let job = PipelineJob::from_code(&code, &placement, BUF, BLOCK).unwrap();
+    let t_archive = exec.run(&job.plan().unwrap()).unwrap();
+
+    let lost = N - 1;
+    cluster.fail_node(lost);
+    let (avail, bb) = survey_coded(&cluster, &placement.chain, object);
+    let rjob =
+        RepairJob::from_code(&code, object, &placement.chain, lost, N, &avail, BUF, bb).unwrap();
+    let t_repair = exec.run(&PipelinedRepairJob::new(rjob).plan().unwrap()).unwrap();
+
+    let mut coded = Vec::with_capacity(N);
+    for pos in 0..N {
+        let holder = if pos == lost { N } else { placement.chain[pos] };
+        let block = cluster
+            .node(holder)
+            .peek(BlockKey::coded(object, pos))
+            .unwrap()
+            .unwrap();
+        coded.push((*block).clone());
+    }
+    (coded, [t_archive, t_repair])
+}
+
+#[test]
+fn cost_models_never_change_bytes() {
+    let (zero, t_zero) = with_timeout(120, || run_under(ZeroCost::handle()));
+    let (uniform, t_uniform) = with_timeout(120, || run_under(UniformCost::handle()));
+    let (hetero, _) = with_timeout(120, || {
+        run_under(ProfileCost::handle(NodeProfile::ec2_mix()).unwrap())
+    });
+    assert_eq!(zero, uniform, "UniformCost changed coded bytes");
+    assert_eq!(zero, hetero, "ProfileCost changed coded bytes");
+    // ...but compute genuinely occupies the timeline: both the archival
+    // chain and the repair chain take strictly longer than on free CPUs.
+    for i in 0..2 {
+        assert!(
+            t_uniform[i] > t_zero[i],
+            "charged run not slower: {:?} vs {:?}",
+            t_uniform[i],
+            t_zero[i]
+        );
+    }
+}
+
+/// Pipelined archival makespan of an (8,4) chain where every node runs
+/// `fast` except `slow_node` (usize::MAX = nobody slowed).
+fn chain_makespan(slow_node: usize) -> Duration {
+    let fast = NodeProfile::EC2_LARGE;
+    let slow = NodeProfile::custom("straggler", 0.25);
+    let profiles: Vec<NodeProfile> = (0..N)
+        .map(|i| if i == slow_node { slow } else { fast })
+        .collect();
+    let mut spec = ClusterSpec::tpc(N)
+        .sim()
+        .with_profiles(profiles)
+        .unwrap();
+    spec.jitter = Duration::ZERO;
+    let cluster = Cluster::start(spec);
+    let object = ObjectId(4200);
+    let placement = ReplicaPlacement::new(object, K, (0..N).collect()).unwrap();
+    ingest_object(&cluster, &placement, BLOCK).unwrap();
+    let code = RapidRaidCode::<Gf256>::with_seed(N, K, 7).unwrap();
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let exec = PlanExecutor::new(&cluster, backend);
+    let job = PipelineJob::from_code(&code, &placement, BUF, BLOCK).unwrap();
+    exec.run(&job.plan().unwrap()).unwrap()
+}
+
+#[test]
+fn slowing_any_chain_node_strictly_increases_makespan() {
+    let baseline = with_timeout(120, || chain_makespan(usize::MAX));
+    // head, middle and tail stragglers all delay the chain
+    for slow in [0usize, N / 2, N - 1] {
+        let slowed = with_timeout(120, move || chain_makespan(slow));
+        assert!(
+            slowed > baseline,
+            "straggler at {slow} did not stretch the chain: {slowed:?} vs {baseline:?}"
+        );
+    }
+}
