@@ -1,10 +1,10 @@
 //! Bench: the `rapidraid sweep` grid — repair triggers × chain policies ×
-//! CPU cost profiles, each cell one seeded long-run failure trace on the
-//! SimClock.
+//! CPU cost profiles × pipeline topologies (chain + tree:2), each cell one
+//! seeded long-run failure trace on the SimClock.
 //!
 //! Run: `cargo bench --bench sweep`
 //! Env: VIRTUAL_SECS, NODES, OBJECTS, SEED (override the base trace),
-//! SMOKE=1 (short traces, 4-cell grid — the CI configuration). Writes
+//! SMOKE=1 (short traces, 8-cell grid — the CI configuration). Writes
 //! BENCH_sweep.json.
 
 use std::sync::Arc;

@@ -1,0 +1,59 @@
+//! Bench: the `topo-sim` preset — the pipeline-shape shootout. Chain vs
+//! tree vs hybrid encoding of the same objects (k=8/n=11 and k=16/n=22)
+//! under the `UniformCost` and heterogeneous `ProfileCost` models on a
+//! jitter-free SimClock, with per-cell decode verification through the
+//! topology-composed generator.
+//!
+//! Run: `cargo bench --bench topo_sim`
+//! Env: BLOCK_KIB (default 512), SEED (default 5), SMOKE=1 (128 KiB
+//! blocks — the CI configuration). Writes BENCH_topo-sim.json.
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::bench_scenarios::topo_sim;
+use rapidraid::coordinator::Topology;
+use rapidraid::util::bench::env_u64;
+
+fn main() {
+    let block_kib = if std::env::var("SMOKE").is_ok() {
+        128
+    } else {
+        env_u64("BLOCK_KIB", 512) as usize
+    };
+    let seed = env_u64("SEED", 5);
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let (rows, report) = topo_sim(
+        &backend,
+        block_kib << 10,
+        seed,
+        &mut std::io::stdout().lock(),
+    )
+    .expect("topo-sim");
+    assert_eq!(
+        rows.len(),
+        16,
+        "2 code sizes x 2 cost models x (3 shapes + 1 placed cell) expected"
+    );
+    // the ec2-mix cells must show a non-chain winner (acceptance gate)
+    for (n, k) in [(11usize, 8usize), (22, 16)] {
+        let chain = rows
+            .iter()
+            .find(|r| {
+                r.n == n && r.cost == "ec2-mix" && !r.placed && r.topology == Topology::Chain
+            })
+            .expect("chain cell");
+        assert!(
+            rows.iter().any(|r| r.n == n
+                && r.cost == "ec2-mix"
+                && !r.placed
+                && r.topology != Topology::Chain
+                && r.coding < chain.coding),
+            "(n={n},k={k}) ec2-mix: no non-chain shape beat the chain"
+        );
+    }
+    let path = report
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
+    println!("# wrote {}", path.display());
+}

@@ -11,6 +11,10 @@
 //!   charged in virtual time by [`UniformCost`]/[`ProfileCost`] models
 //!   (uniform and heterogeneous EC2-class hardware, k=8/n=11 and
 //!   k=16/n=22).
+//! * [`topo_sim`] — the `topo-sim` preset: the pipeline-shape shootout —
+//!   chain vs tree vs hybrid encoding of the same objects under
+//!   uniform/heterogeneous cost models on the SimClock, with per-cell
+//!   decode verification through the topology-composed generator.
 //! * [`fig4_coding_times`] — Fig. 4: single-object and 16-concurrent-object
 //!   coding times on the TPC / EC2 presets.
 //! * [`fig5_congestion`] — Fig. 5: coding time vs number of congested
@@ -29,9 +33,12 @@ use crate::backend::{BackendHandle, Width};
 use crate::clock::{Clock, RealClock};
 use crate::cluster::{Cluster, ClusterSpec, CongestionSpec};
 use crate::codes::rapidraid::RapidRaidCode;
-use crate::codes::ClassicalCode;
-use crate::coordinator::batch::{rotated_chain, run_batch_recorded, BatchJob};
-use crate::coordinator::{ingest_object, ClassicalJob, PipelineJob};
+use crate::codes::{ClassicalCode, TopologyCode};
+use crate::coordinator::batch::{
+    place_and_build_pipeline_jobs, rotated_chain, run_batch_recorded, BatchJob,
+};
+use crate::coordinator::topology::{LoadAwarePolicy, Topology};
+use crate::coordinator::{ingest_object, object_bytes, reconstruct, ClassicalJob, PipelineJob};
 use crate::gf::{Gf256, Gf65536, GfElem};
 use crate::metrics::{BenchJson, Candle, Recorder};
 use crate::resources::{CostModelHandle, NodeProfile, ProfileCost, UniformCost};
@@ -375,6 +382,240 @@ pub fn table2_sim(
     writeln!(
         out,
         "# per-stage spans (…/fold.compute and …/gemm.compute are the charged CPU ticks):"
+    )?;
+    for c in stages.candles() {
+        writeln!(out, "# {}", c.report())?;
+    }
+    report.spans = stages.candles();
+    report.wall = wall.now();
+    Ok((rows, report))
+}
+
+// ---------------------------------------------------------------------------
+// topo-sim — the pipeline-shape shootout: chain vs tree vs hybrid
+// ---------------------------------------------------------------------------
+
+/// One cell of the `topo-sim` shootout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopoSimRow {
+    /// Code length.
+    pub n: usize,
+    /// Message length.
+    pub k: usize,
+    /// Cost-model label (`uniform` / `ec2-mix`).
+    pub cost: &'static str,
+    /// Pipeline shape of this cell.
+    pub topology: Topology,
+    /// True for the load-aware placed cell (the policy chose shape and
+    /// placement on a clamped cluster; not comparable to the fixed cells).
+    pub placed: bool,
+    /// Virtual coding time of the shaped pipeline.
+    pub coding: Duration,
+}
+
+/// The shapes the shootout compares.
+pub fn topo_sim_topologies() -> Vec<Topology> {
+    vec![
+        Topology::Chain,
+        Topology::Tree { fanout: 2 },
+        Topology::Hybrid {
+            chain_prefix: 4,
+            tree_fanout: 2,
+        },
+    ]
+}
+
+/// The `topo-sim` preset: archive the same object through chain, tree and
+/// hybrid pipelines — k=8/n=11 and k=16/n=22, under
+/// [`UniformCost::calibrated`] and a heterogeneous [`ProfileCost`] over
+/// [`NodeProfile::ec2_mix`] — on a jitter-free `SimClock` TPC topology, so
+/// every reported duration is an exact function of `(block_bytes, seed)`.
+/// Each cell is decode-verified through the topology-composed generator:
+/// the reconstructed object must equal the ingested bytes, whatever the
+/// shape. The chain's hop tail grows with n while a tree's grows with its
+/// depth, so under stragglers (and even uniform compute at paper-scale n)
+/// the non-chain shapes win — exactly the §VII trade this preset
+/// quantifies.
+pub fn topo_sim(
+    backend: &BackendHandle,
+    block_bytes: usize,
+    seed: u64,
+    out: &mut dyn Write,
+) -> anyhow::Result<(Vec<TopoSimRow>, BenchJson)> {
+    let wall = RealClock::new();
+    let mut report = BenchJson::new("topo-sim")
+        .param("block_bytes", block_bytes)
+        .param("seed", seed);
+    writeln!(
+        out,
+        "# topo-sim — pipeline-shape shootout: chain vs tree vs hybrid virtual coding time"
+    )?;
+    writeln!(
+        out,
+        "# SimClock TPC topology (jitter off), block={} KiB, code seed {seed}, backend={}",
+        block_bytes >> 10,
+        backend.name()
+    )?;
+    writeln!(
+        out,
+        "{:>3} {:>3} {:>8} {:>12} {:>12} {:>9}",
+        "n", "k", "cost", "topology", "coding_s", "vs_chain"
+    )?;
+
+    // Fresh per-cell cluster: virtual timelines must not share NIC or
+    // meter state.
+    let sim_cluster = |n: usize, cost: CostModelHandle| -> Cluster {
+        let mut spec = ClusterSpec::tpc(n).sim().with_cost(cost);
+        spec.jitter = Duration::ZERO;
+        Cluster::start(spec)
+    };
+    let costs: Vec<(&'static str, CostModelHandle)> = vec![
+        ("uniform", UniformCost::handle()),
+        ("ec2-mix", ProfileCost::handle(NodeProfile::ec2_mix())?),
+    ];
+
+    let stages = Recorder::new();
+    let mut rows: Vec<TopoSimRow> = Vec::new();
+    let mut id = 0u64;
+    for (n, k) in [(11usize, 8usize), (22, 16)] {
+        let code = RapidRaidCode::<Gf256>::with_seed(n, k, seed)?;
+        for (cost_name, cost) in &costs {
+            let cost_name = *cost_name;
+            let mut chain_time: Option<Duration> = None;
+            for topo in topo_sim_topologies() {
+                let cluster = sim_cluster(n, cost.clone());
+                id += 1;
+                let placement =
+                    ReplicaPlacement::new(ObjectId(0x7090_0000 + id), k, (0..n).collect())?;
+                let blocks = ingest_object(&cluster, &placement, block_bytes)?;
+                let job = BatchJob::Pipeline(PipelineJob::from_code_with_topology(
+                    &code,
+                    &placement,
+                    topo,
+                    BUF_BYTES,
+                    block_bytes,
+                )?);
+                let tag = format!("n{n}k{k}/{cost_name}/{topo}");
+                let prefix = format!("{tag}/");
+                let times =
+                    run_batch_recorded(&cluster, backend, &[job], Some((&stages, &prefix)))?;
+                let coding = times[0];
+
+                // Decode verification through the topology generator: the
+                // shape must never change the object.
+                let tcode = TopologyCode::new(code.clone(), topo.shape(n)?)?;
+                let rec =
+                    reconstruct(&cluster, &tcode, &placement.chain, placement.object, backend)?;
+                anyhow::ensure!(
+                    rec == blocks,
+                    "topo-sim {tag}: decoded object differs from ingested bytes"
+                );
+
+                if topo == Topology::Chain {
+                    chain_time = Some(coding);
+                }
+                let vs_chain = chain_time
+                    .map(|c| format!("{:.2}x", c.as_secs_f64() / coding.as_secs_f64()))
+                    .unwrap_or_else(|| "-".into());
+                writeln!(
+                    out,
+                    "{:>3} {:>3} {:>8} {:>12} {:>12.4} {:>9}",
+                    n,
+                    k,
+                    cost_name,
+                    topo.to_string(),
+                    coding.as_secs_f64(),
+                    vs_chain
+                )?;
+                report.series.push(Candle {
+                    name: tag,
+                    samples: vec![coding],
+                });
+                rows.push(TopoSimRow {
+                    n,
+                    k,
+                    cost: cost_name,
+                    topology: topo,
+                    placed: false,
+                    coding,
+                });
+            }
+
+            // Load-aware placed cell: one node's NIC clamped to a tenth —
+            // the policy must pick a non-chain shape on its own and sink
+            // the clamped node to a leaf slot. This drives
+            // `place_and_build_pipeline_jobs` (per-object shape AND
+            // placement) end to end; the cell is reported separately
+            // because its cluster state differs from the fixed cells.
+            let cluster = sim_cluster(n, cost.clone());
+            cluster.congest(
+                2,
+                &CongestionSpec {
+                    bytes_per_sec: 12.5e6,
+                    extra_latency: Duration::ZERO,
+                    jitter: Duration::ZERO,
+                },
+            );
+            id += 1;
+            let object = ObjectId(0x7090_0000 + id);
+            let placed = place_and_build_pipeline_jobs(
+                &cluster,
+                &LoadAwarePolicy::default(),
+                &code,
+                &[object],
+                Topology::Chain,
+                BUF_BYTES,
+                block_bytes,
+            )?;
+            let (placement, job) = placed.into_iter().next().expect("one placed object");
+            let topo = match &job {
+                BatchJob::Pipeline(p) => p.topology,
+                other => unreachable!("placed builder emits pipeline jobs, got {other:?}"),
+            };
+            anyhow::ensure!(
+                topo != Topology::Chain,
+                "load-aware policy kept the chain despite a 10x NIC spread"
+            );
+            let tag = format!("n{n}k{k}/{cost_name}/load-aware");
+            let prefix = format!("{tag}/");
+            let times = run_batch_recorded(&cluster, backend, &[job], Some((&stages, &prefix)))?;
+            let coding = times[0];
+            let expect: Vec<Vec<u8>> =
+                (0..k).map(|i| object_bytes(object, i, block_bytes)).collect();
+            let tcode = TopologyCode::new(code.clone(), topo.shape(n)?)?;
+            let rec = reconstruct(&cluster, &tcode, &placement.chain, object, backend)?;
+            anyhow::ensure!(rec == expect, "topo-sim {tag}: placed cell decode mismatch");
+            writeln!(
+                out,
+                "{:>3} {:>3} {:>8} {:>12} {:>12.4} {:>9}",
+                n,
+                k,
+                cost_name,
+                "placed",
+                coding.as_secs_f64(),
+                "-"
+            )?;
+            writeln!(
+                out,
+                "# load-aware {tag}: policy chose {topo}, clamped node on a leaf slot"
+            )?;
+            report.series.push(Candle {
+                name: tag,
+                samples: vec![coding],
+            });
+            rows.push(TopoSimRow {
+                n,
+                k,
+                cost: cost_name,
+                topology: topo,
+                placed: true,
+                coding,
+            });
+        }
+    }
+    writeln!(
+        out,
+        "# per-stage spans (…/fold.compute are the charged CPU ticks; fan-out copies included):"
     )?;
     for c in stages.candles() {
         writeln!(out, "# {}", c.report())?;
@@ -826,6 +1067,60 @@ mod tests {
         );
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("uniform") && text.contains("ec2-mix"), "{text}");
+    }
+
+    #[test]
+    fn topo_sim_covers_grid_and_nonchain_wins_under_stragglers() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let mut out = Vec::new();
+        let (rows, report) = topo_sim(&be, 128 * 1024, 5, &mut out).unwrap();
+        // 2 code sizes × 2 cost models × (3 fixed shapes + 1 placed cell)
+        assert_eq!(rows.len(), 16);
+        for r in &rows {
+            assert!(r.coding > Duration::ZERO, "{r:?}");
+        }
+        // acceptance: under the heterogeneous ec2-mix cost model at least
+        // one non-chain shape beats the chain on makespan (every cell
+        // already decode-verified byte-identically inside topo_sim)
+        for (n, k) in [(11usize, 8usize), (22, 16)] {
+            let cell = |topo: Topology| {
+                rows.iter()
+                    .find(|r| {
+                        r.n == n && r.k == k && r.cost == "ec2-mix" && !r.placed
+                            && r.topology == topo
+                    })
+                    .unwrap()
+                    .coding
+            };
+            let chain = cell(Topology::Chain);
+            let best_nonchain = topo_sim_topologies()
+                .into_iter()
+                .filter(|t| *t != Topology::Chain)
+                .map(cell)
+                .min()
+                .unwrap();
+            assert!(
+                best_nonchain < chain,
+                "(n={n},k={k}) ec2-mix: no non-chain shape beat the chain \
+                 ({best_nonchain:?} vs {chain:?})"
+            );
+        }
+        // the load-aware placed cells ran and chose a non-chain shape
+        let placed: Vec<_> = rows.iter().filter(|r| r.placed).collect();
+        assert_eq!(placed.len(), 4);
+        assert!(placed.iter().all(|r| r.topology != Topology::Chain));
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("tree:2") && text.contains("hybrid:4:2"), "{text}");
+        assert!(text.contains("load-aware"), "{text}");
+        assert_eq!(report.preset, "topo-sim");
+    }
+
+    #[test]
+    fn topo_sim_is_deterministic_per_seed() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let (a, _) = topo_sim(&be, 64 * 1024, 5, &mut Vec::<u8>::new()).unwrap();
+        let (b, _) = topo_sim(&be, 64 * 1024, 5, &mut Vec::<u8>::new()).unwrap();
+        assert_eq!(a, b, "virtual topo-sim rows diverged between identical runs");
     }
 
     #[test]

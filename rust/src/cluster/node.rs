@@ -125,11 +125,14 @@ pub enum Command {
         psi: Vec<u32>,
         /// Codeword coefficients ξ (one per local).
         xi: Vec<u32>,
-        /// Upstream link (None for the chain head, which synthesizes zero
-        /// buffers).
+        /// Upstream link (None for the pipeline head, which synthesizes
+        /// zero buffers).
         prev: Option<Rx>,
-        /// Downstream link (None for the chain tail).
-        next: Option<Tx>,
+        /// Downstream links: one per child subtree. A chain stage has one,
+        /// a tree interior stage several (every child receives the same
+        /// `x_out` stream; the extra frame copies are charged as XOR
+        /// work), a tail none.
+        next: Vec<Tx>,
         /// Where to store the locally generated block: `Some` stores the
         /// c output (archival: codeword block c_i; pipelined-decode tail:
         /// the recovered source block), `None` discards it (pipelined-
@@ -631,7 +634,7 @@ fn do_pipeline_stage(
     psi: &[u32],
     xi: &[u32],
     prev: Option<Rx>,
-    mut next: Option<Tx>,
+    mut next: Vec<Tx>,
     out_key: Option<BlockKey>,
     buf_bytes: usize,
     backend: &BackendHandle,
@@ -685,17 +688,26 @@ fn do_pipeline_stage(
             .collect();
         let (x_out, c) = backend.pipeline_step(width, &x_in, &loc_slices, psi, xi)?;
         // Charge the frame's GF work BEFORE forwarding: the compute delay
-        // paces the whole downstream chain, exactly like a slow CPU would.
-        compute += cpu.charge(&GfWork::pipeline_step(psi, xi, len));
+        // paces the whole downstream pipeline, exactly like a slow CPU
+        // would. Fan-out duplicates the frame once per extra child — a
+        // plain memcpy, priced as XOR bytes.
+        let mut work = GfWork::pipeline_step(psi, xi, len);
+        if next.len() > 1 {
+            work += GfWork::xor((next.len() - 1) * len);
+        }
+        compute += cpu.charge(&work);
         if out_key.is_some() {
             out.extend_from_slice(&c);
         }
-        if let Some(tx) = next.as_mut() {
-            tx.send_data(x_out)?;
+        if let Some((last, rest)) = next.split_last_mut() {
+            for tx in rest {
+                tx.send_data(x_out.clone())?;
+            }
+            last.send_data(x_out)?;
         }
         offset += len;
     }
-    if let Some(tx) = next.as_mut() {
+    for tx in &mut next {
         tx.finish()?;
     }
     anyhow::ensure!(offset == block_bytes, "stream/block length mismatch");
@@ -982,7 +994,7 @@ mod tests {
             psi: vec![5],
             xi: vec![9],
             prev: Some(rx),
-            next: None,
+            next: Vec::new(),
             out_key: Some(BlockKey::coded(obj, 1)),
             buf_bytes: 1024,
             backend: backend.clone(),
@@ -995,7 +1007,7 @@ mod tests {
             psi: vec![3],
             xi: vec![7],
             prev: None,
-            next: Some(tx),
+            next: vec![tx],
             out_key: Some(BlockKey::coded(obj, 0)),
             buf_bytes: 1024,
             backend,
@@ -1223,7 +1235,7 @@ mod tests {
                 psi: vec![5],
                 xi: vec![9],
                 prev: None,
-                next: None,
+                next: Vec::new(),
                 out_key: Some(BlockKey::coded(obj, 0)),
                 buf_bytes: 16 * 1024,
                 backend,

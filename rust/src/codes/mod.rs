@@ -8,11 +8,97 @@ pub mod classical;
 pub mod coeffs;
 pub mod rapidraid;
 pub mod subsets;
+pub mod topology;
 
 pub use census::{census, CensusReport};
 pub use classical::ClassicalCode;
 pub use rapidraid::RapidRaidCode;
 pub use subsets::Combinations;
+pub use topology::{topology_generator, TopologyCode, TopologyShape};
+
+use crate::gf::{gauss, GfElem, Matrix, SliceOps};
+
+/// Greedy search for a decodable k-subset among `avail` generator rows;
+/// returns `None` when every k-subset of `avail` is dependent. Greedy
+/// rank-building is exact over a field: keep a row iff it increases the
+/// rank of the selected set.
+pub fn decodable_subset<F: GfElem>(
+    generator: &Matrix<F>,
+    k: usize,
+    avail: &[usize],
+) -> Option<Vec<usize>> {
+    if avail.len() < k {
+        return None;
+    }
+    let mut chosen: Vec<usize> = Vec::with_capacity(k);
+    for &idx in avail {
+        let mut trial = chosen.clone();
+        trial.push(idx);
+        let sub = generator.select_rows(&trial);
+        if gauss::rank(&sub) == trial.len() {
+            chosen = trial;
+            if chosen.len() == k {
+                return Some(chosen);
+            }
+        }
+    }
+    None
+}
+
+/// Repair coefficients for regenerating codeword block `lost` from
+/// surviving blocks under an arbitrary n×k `generator`: picks an
+/// independent k-subset S of `avail` (minus `lost` itself) and returns
+/// `(S, ψ)` with `c_lost = Σ ψ[i]·c_{S[i]}`, i.e. `ψ = g_lost · G_S⁻¹`.
+pub fn repair_coefficients_from<F: GfElem>(
+    generator: &Matrix<F>,
+    n: usize,
+    k: usize,
+    lost: usize,
+    avail: &[usize],
+) -> anyhow::Result<(Vec<usize>, Vec<F>)> {
+    anyhow::ensure!(lost < n, "lost index {lost} out of range (n={n})");
+    let usable: Vec<usize> = avail.iter().copied().filter(|&p| p != lost).collect();
+    let subset = decodable_subset(generator, k, &usable).ok_or_else(|| {
+        anyhow::anyhow!("block {lost} unrepairable: no independent k-subset among {usable:?}")
+    })?;
+    let inv = gauss::invert(&generator.select_rows(&subset))
+        .ok_or_else(|| anyhow::anyhow!("subset {subset:?} unexpectedly singular"))?;
+    let g_lost = generator.row(lost);
+    let psi: Vec<F> = (0..k)
+        .map(|j| (0..k).fold(F::ZERO, |acc, i| acc.add(g_lost[i].mul(inv[(i, j)]))))
+        .collect();
+    Ok((subset, psi))
+}
+
+/// Generator-level view of a linear code — the surface decode, repair and
+/// the reliability census actually consume. [`RapidRaidCode`] (the chain
+/// composition) and [`TopologyCode`] (tree/hybrid compositions) both
+/// implement it, so every consumer is topology-generic for free.
+pub trait CodeView<F: GfElem + SliceOps> {
+    /// Codeword length n.
+    fn n(&self) -> usize;
+
+    /// Message length k.
+    fn k(&self) -> usize;
+
+    /// The n×k generator matrix.
+    fn generator(&self) -> &Matrix<F>;
+
+    /// Greedy decodable k-subset among the available block indices.
+    fn find_decodable_subset(&self, avail: &[usize]) -> Option<Vec<usize>> {
+        decodable_subset(self.generator(), self.k(), avail)
+    }
+
+    /// Repair coefficients `ψ = g_lost · G_S⁻¹` over an independent
+    /// k-subset S of `avail`.
+    fn repair_coefficients(
+        &self,
+        lost: usize,
+        avail: &[usize],
+    ) -> anyhow::Result<(Vec<usize>, Vec<F>)> {
+        repair_coefficients_from(self.generator(), self.n(), self.k(), lost, avail)
+    }
+}
 
 /// Erasure decode failure reasons.
 #[derive(Debug, Clone, PartialEq, Eq)]

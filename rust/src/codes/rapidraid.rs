@@ -18,7 +18,7 @@
 
 use crate::codes::classical::decode_with_generator;
 use crate::codes::DecodeError;
-use crate::gf::{gauss, GfElem, Matrix, SliceOps};
+use crate::gf::{GfElem, Matrix, SliceOps};
 use crate::util::SplitMix64;
 
 /// Per-node encoding schedule: which object blocks the node stores and the
@@ -212,45 +212,27 @@ impl<F: GfElem + SliceOps> RapidRaidCode<F> {
         lost: usize,
         avail: &[usize],
     ) -> anyhow::Result<(Vec<usize>, Vec<F>)> {
-        anyhow::ensure!(lost < self.n, "lost index {lost} out of range (n={})", self.n);
-        let usable: Vec<usize> = avail.iter().copied().filter(|&p| p != lost).collect();
-        let subset = self.find_decodable_subset(&usable).ok_or_else(|| {
-            anyhow::anyhow!(
-                "block {lost} unrepairable: no independent k-subset among {usable:?}"
-            )
-        })?;
-        let inv = gauss::invert(&self.generator.select_rows(&subset))
-            .ok_or_else(|| anyhow::anyhow!("subset {subset:?} unexpectedly singular"))?;
-        let g_lost = self.generator.row(lost);
-        let psi: Vec<F> = (0..self.k)
-            .map(|j| {
-                (0..self.k).fold(F::ZERO, |acc, i| acc.add(g_lost[i].mul(inv[(i, j)])))
-            })
-            .collect();
-        Ok((subset, psi))
+        crate::codes::repair_coefficients_from(&self.generator, self.n, self.k, lost, avail)
     }
 
     /// Greedy search for a decodable k-subset among the available block
     /// indices; returns `None` if every k-subset of `avail` is dependent.
     pub fn find_decodable_subset(&self, avail: &[usize]) -> Option<Vec<usize>> {
-        if avail.len() < self.k {
-            return None;
-        }
-        // Greedy rank-building is exact over a field: keep a row iff it
-        // increases the rank of the selected set.
-        let mut chosen: Vec<usize> = Vec::with_capacity(self.k);
-        for &idx in avail {
-            let mut trial = chosen.clone();
-            trial.push(idx);
-            let sub = self.generator.select_rows(&trial);
-            if crate::gf::rank(&sub) == trial.len() {
-                chosen = trial;
-                if chosen.len() == self.k {
-                    return Some(chosen);
-                }
-            }
-        }
-        None
+        crate::codes::decodable_subset(&self.generator, self.k, avail)
+    }
+}
+
+impl<F: GfElem + SliceOps> crate::codes::CodeView<F> for RapidRaidCode<F> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn generator(&self) -> &Matrix<F> {
+        &self.generator
     }
 }
 

@@ -12,12 +12,17 @@ use std::time::Duration;
 
 use crate::backend::BackendHandle;
 use crate::cluster::Cluster;
+use crate::codes::rapidraid::RapidRaidCode;
+use crate::gf::{GfElem, SliceOps};
 use crate::metrics::Recorder;
+use crate::storage::{ObjectId, ReplicaPlacement};
 
 use super::classical::ClassicalJob;
 use super::engine::PlanExecutor;
+use super::ingest::ingest_object;
 use super::pipeline::PipelineJob;
 use super::plan::ArchivalPlan;
+use super::topology::{PlacementPolicy, Topology};
 
 /// One archival job of either strategy.
 #[derive(Clone, Debug)]
@@ -62,6 +67,65 @@ pub fn run_batch_recorded(
         exec = exec.with_spans(rec, prefix);
     }
     exec.run_many(&plans)
+}
+
+/// Lower one pipelined job per placement, all through `topology` — the
+/// Topology-parameterized bulk builder the `topo-sim` shootout and the
+/// long-run harness feed into [`run_batch`] / `run_many_bounded`.
+pub fn pipeline_jobs<F: GfElem + SliceOps>(
+    code: &RapidRaidCode<F>,
+    placements: &[ReplicaPlacement],
+    topology: Topology,
+    buf_bytes: usize,
+    block_bytes: usize,
+) -> anyhow::Result<Vec<BatchJob>> {
+    placements
+        .iter()
+        .map(|p| {
+            Ok(BatchJob::Pipeline(PipelineJob::from_code_with_topology(
+                code,
+                p,
+                topology,
+                buf_bytes,
+                block_bytes,
+            )?))
+        })
+        .collect()
+}
+
+/// Place, ingest and lower pipelined jobs **one object at a time** under a
+/// shape-aware policy: every object gets `policy.select_topology` over the
+/// currently alive nodes — a
+/// [`LoadAwarePolicy`](super::topology::LoadAwarePolicy) picks the shape
+/// *and* the placement from the live congestion/CPU state, re-ranking
+/// between objects as earlier placements load nodes up. Returns the
+/// per-object placements and jobs; feed the jobs to [`run_batch`] /
+/// `PlanExecutor::run_many_bounded`.
+pub fn place_and_build_pipeline_jobs<F: GfElem + SliceOps>(
+    cluster: &Cluster,
+    policy: &dyn PlacementPolicy,
+    code: &RapidRaidCode<F>,
+    objects: &[ObjectId],
+    requested: Topology,
+    buf_bytes: usize,
+    block_bytes: usize,
+) -> anyhow::Result<Vec<(ReplicaPlacement, BatchJob)>> {
+    let mut out = Vec::with_capacity(objects.len());
+    for &object in objects {
+        let alive = cluster.alive_nodes();
+        let sel = policy.select_topology(cluster, &alive, code.n(), requested)?;
+        let placement = ReplicaPlacement::new(object, code.k(), sel.nodes)?;
+        ingest_object(cluster, &placement, block_bytes)?;
+        let job = BatchJob::Pipeline(PipelineJob::from_code_with_topology(
+            code,
+            &placement,
+            sel.topology,
+            buf_bytes,
+            block_bytes,
+        )?);
+        out.push((placement, job));
+    }
+    Ok(out)
 }
 
 /// Rotate a chain of `n` positions over `nodes` starting at `offset`
@@ -121,6 +185,67 @@ mod tests {
                         .is_some(),
                     "object {} block {pos} missing on node {node}",
                     p.object
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn load_aware_batch_places_and_shapes_per_object() {
+        use crate::cluster::CongestionSpec;
+        use crate::coordinator::topology::{LoadAwarePolicy, Topology};
+        // 8 nodes (every one needed), one severely clamped: the load-aware
+        // policy must pick a non-chain shape, keep the clamped node on a
+        // leaf slot, and the batch must still archive through run_batch.
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        cluster.congest(
+            4,
+            &CongestionSpec {
+                bytes_per_sec: 1e8,
+                extra_latency: std::time::Duration::ZERO,
+                jitter: std::time::Duration::ZERO,
+            },
+        );
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let objects: Vec<ObjectId> = (0..2).map(|i| ObjectId(400 + i)).collect();
+        let placed = place_and_build_pipeline_jobs(
+            &cluster,
+            &LoadAwarePolicy::default(),
+            &code,
+            &objects,
+            Topology::Chain,
+            2048,
+            8 * 1024,
+        )
+        .unwrap();
+        assert_eq!(placed.len(), 2);
+        for (placement, job) in &placed {
+            match job {
+                BatchJob::Pipeline(p) => {
+                    assert_ne!(p.topology, Topology::Chain, "spread must force a shape");
+                    // the clamped node never lands on an interior slot
+                    let shape = p.topology.shape(8).unwrap();
+                    if let Some(slot) = placement.chain.iter().position(|&n| n == 4) {
+                        assert!(shape.children()[slot].is_empty(), "{:?}", placement.chain);
+                    }
+                }
+                other => panic!("expected pipeline job, got {other:?}"),
+            }
+        }
+        let jobs: Vec<BatchJob> = placed.iter().map(|(_, j)| j.clone()).collect();
+        let times = run_batch(&cluster, &backend, &jobs).unwrap();
+        assert_eq!(times.len(), 2);
+        for (placement, _) in &placed {
+            for (pos, &node) in placement.chain.iter().enumerate() {
+                assert!(
+                    cluster
+                        .node(node)
+                        .peek(BlockKey::coded(placement.object, pos))
+                        .unwrap()
+                        .is_some(),
+                    "object {} block {pos} missing on node {node}",
+                    placement.object
                 );
             }
         }

@@ -11,8 +11,9 @@
 
 use crate::backend::{BackendHandle, Width};
 use crate::cluster::Cluster;
-use crate::codes::rapidraid::RapidRaidCode;
+use crate::codes::CodeView;
 use crate::gf::{gauss, GfElem, SliceOps};
+use crate::resources::GfWork;
 use crate::storage::{BlockKey, ObjectId};
 
 /// Which coded blocks of `object` survive on `chain` (`chain[i]` holds
@@ -40,10 +41,12 @@ pub fn survey_coded(
 
 /// Reconstruct `object` from the coded blocks surviving on `chain`
 /// (chain[i] holds c_i) — a degraded read when nodes have crashed or
-/// blocks are missing. Returns the k source blocks.
-pub fn reconstruct<F: GfElem + SliceOps>(
+/// blocks are missing. Generic over [`CodeView`], so chain codes and
+/// topology codes decode through the same path. Returns the k source
+/// blocks.
+pub fn reconstruct<F: GfElem + SliceOps, C: CodeView<F>>(
     cluster: &Cluster,
-    code: &RapidRaidCode<F>,
+    code: &C,
     chain: &[usize],
     object: ObjectId,
     backend: &BackendHandle,
@@ -59,7 +62,13 @@ pub fn reconstruct<F: GfElem + SliceOps>(
         .find_decodable_subset(&avail)
         .ok_or_else(|| anyhow::anyhow!("object {object} unrecoverable: available {avail:?}"))?;
 
-    // 3. invert the generator rows
+    // 3. invert the generator rows. The k×k Gauss-Jordan runs on the
+    // first selected survivor (the node anchoring the read); its CpuMeter
+    // prices the inversion in virtual time.
+    cluster
+        .node(chain[subset[0]])
+        .cpu
+        .charge(&GfWork::invert(code.k()));
     let sub = code.generator().select_rows(&subset);
     let inv = gauss::invert(&sub)
         .ok_or_else(|| anyhow::anyhow!("subset {subset:?} unexpectedly singular"))?;
@@ -85,6 +94,7 @@ mod tests {
     use super::*;
     use crate::backend::NativeBackend;
     use crate::cluster::ClusterSpec;
+    use crate::codes::rapidraid::RapidRaidCode;
     use crate::coordinator::ingest::ingest_object;
     use crate::coordinator::pipeline::{archive_pipeline, PipelineJob};
     use crate::gf::Gf256;

@@ -18,11 +18,14 @@
 //! steps overlap by design: they measure critical-path occupancy, not
 //! exclusive CPU time.
 //!
-//! Chain selection is pluggable via [`ChainPolicy`]: [`FifoPolicy`] keeps
-//! the caller's order; [`CongestionAwarePolicy`] ranks candidate nodes by
-//! current load (queued + running data-plane commands) and NIC rate, so
-//! plan builders can route new chains around congested nodes
-//! (`cluster::congestion`) before replicas are even placed.
+//! Node selection is pluggable via the shape-aware
+//! [`PlacementPolicy`](super::topology::PlacementPolicy) (re-exported here
+//! under its historical name [`ChainPolicy`]): [`FifoPolicy`] keeps the
+//! caller's order; [`CongestionAwarePolicy`] ranks candidate nodes by
+//! current load (queued + running data-plane commands), CPU-meter backlog
+//! and NIC rate; [`super::topology::LoadAwarePolicy`] additionally picks
+//! the pipeline *shape* per object. Policies live in
+//! `coordinator::topology::policy`; the engine only consumes them.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -36,89 +39,12 @@ use crate::cluster::{Cluster, NodeId, Rx, Tx};
 use crate::metrics::{Recorder, Span};
 
 use super::plan::{ArchivalPlan, GemmInput, GemmOutput, StepKind};
+use super::topology::Topology;
 
-/// Orders candidate nodes for chain construction, most preferred first.
-pub trait ChainPolicy: Send + Sync {
-    /// Rank `candidates` (a permutation of the input), best first.
-    fn rank(&self, cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId>;
-}
-
-/// Keep the caller's order (the paper's fixed rotated chains).
-pub struct FifoPolicy;
-
-impl ChainPolicy for FifoPolicy {
-    fn rank(&self, _cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId> {
-        candidates.to_vec()
-    }
-}
-
-/// Prefer idle, fast nodes: ascending in-flight command count, then
-/// descending effective NIC rate (min of up/down — a congested node's
-/// clamped direction is what throttles a chain hop).
-pub struct CongestionAwarePolicy;
-
-impl ChainPolicy for CongestionAwarePolicy {
-    fn rank(&self, cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId> {
-        let mut scored: Vec<(usize, f64, NodeId)> = candidates
-            .iter()
-            .map(|&id| {
-                let n = cluster.node(id);
-                (n.inflight(), n.up.rate().min(n.down.rate()), id)
-            })
-            .collect();
-        scored.sort_by(|a, b| {
-            a.0.cmp(&b.0)
-                .then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
-        });
-        scored.into_iter().map(|(_, _, id)| id).collect()
-    }
-}
-
-/// Value-level selector for the built-in chain policies, for places that
-/// carry policy choice as data (long-run configs, the `rapidraid sweep`
-/// grid) rather than as a trait object.
-#[derive(Copy, Clone, PartialEq, Eq, Debug)]
-pub enum PolicyKind {
-    /// Keep the caller's order ([`FifoPolicy`]).
-    Fifo,
-    /// Load/NIC-aware ranking ([`CongestionAwarePolicy`]).
-    CongestionAware,
-}
-
-impl PolicyKind {
-    /// Instantiate the selected policy.
-    pub fn policy(&self) -> Arc<dyn ChainPolicy> {
-        match self {
-            PolicyKind::Fifo => Arc::new(FifoPolicy),
-            PolicyKind::CongestionAware => Arc::new(CongestionAwarePolicy),
-        }
-    }
-
-    /// Short label for report tables.
-    pub fn name(&self) -> &'static str {
-        match self {
-            PolicyKind::Fifo => "fifo",
-            PolicyKind::CongestionAware => "congestion-aware",
-        }
-    }
-}
-
-/// Pick the `n` most preferred of `candidates` under `policy`.
-pub fn select_chain(
-    cluster: &Cluster,
-    policy: &dyn ChainPolicy,
-    candidates: &[NodeId],
-    n: usize,
-) -> anyhow::Result<Vec<NodeId>> {
-    anyhow::ensure!(
-        candidates.len() >= n,
-        "need {n} chain nodes, only {} candidates",
-        candidates.len()
-    );
-    let mut ranked = policy.rank(cluster, candidates);
-    ranked.truncate(n);
-    Ok(ranked)
-}
+pub use super::topology::policy::{
+    select_chain, CongestionAwarePolicy, FifoPolicy, PlacementPolicy,
+    PlacementPolicy as ChainPolicy, PolicyKind, TopologySelection,
+};
 
 /// Executes [`ArchivalPlan`]s against a cluster with one backend.
 pub struct PlanExecutor<'a> {
@@ -126,7 +52,7 @@ pub struct PlanExecutor<'a> {
     backend: BackendHandle,
     recorder: Option<&'a Recorder>,
     prefix: String,
-    policy: Arc<dyn ChainPolicy>,
+    policy: Arc<dyn PlacementPolicy>,
 }
 
 impl<'a> PlanExecutor<'a> {
@@ -148,8 +74,8 @@ impl<'a> PlanExecutor<'a> {
         self
     }
 
-    /// Substitute the chain-selection policy.
-    pub fn with_policy(mut self, policy: Arc<dyn ChainPolicy>) -> Self {
+    /// Substitute the placement policy.
+    pub fn with_policy(mut self, policy: Arc<dyn PlacementPolicy>) -> Self {
         self.policy = policy;
         self
     }
@@ -157,6 +83,19 @@ impl<'a> PlanExecutor<'a> {
     /// Pick `n` chain nodes from `candidates` under this executor's policy.
     pub fn select_chain(&self, candidates: &[NodeId], n: usize) -> anyhow::Result<Vec<NodeId>> {
         select_chain(self.cluster, self.policy.as_ref(), candidates, n)
+    }
+
+    /// Pick a shape and its per-slot node binding for an n-position
+    /// pipeline under this executor's policy (a policy that chooses shapes
+    /// may override `requested`).
+    pub fn select_topology(
+        &self,
+        candidates: &[NodeId],
+        n: usize,
+        requested: Topology,
+    ) -> anyhow::Result<TopologySelection> {
+        self.policy
+            .select_topology(self.cluster, candidates, n, requested)
     }
 
     /// Execute one plan to completion; returns the wall-clock time from
@@ -225,18 +164,34 @@ impl<'a> PlanExecutor<'a> {
                     psi,
                     xi,
                     store,
-                } => Command::PipelineStage {
-                    width: plan.width,
-                    locals: locals.clone(),
-                    psi: psi.clone(),
-                    xi: xi.clone(),
-                    prev: rxs.remove(&(id, 0)),
-                    next: txs.remove(&(id, 0)),
-                    out_key: *store,
-                    buf_bytes: plan.buf_bytes,
-                    backend: self.backend.clone(),
-                    done,
-                },
+                } => {
+                    // Collect every bound out-port in port order: a chain
+                    // stage has one downstream, a tree interior stage one
+                    // per child, a tail none.
+                    let mut ports: Vec<usize> = plan
+                        .edges
+                        .iter()
+                        .filter(|e| e.from == id)
+                        .map(|e| e.from_port)
+                        .collect();
+                    ports.sort_unstable();
+                    let next: Vec<Tx> = ports
+                        .into_iter()
+                        .map(|p| txs.remove(&(id, p)).expect("validated: fold out bound"))
+                        .collect();
+                    Command::PipelineStage {
+                        width: plan.width,
+                        locals: locals.clone(),
+                        psi: psi.clone(),
+                        xi: xi.clone(),
+                        prev: rxs.remove(&(id, 0)),
+                        next,
+                        out_key: *store,
+                        buf_bytes: plan.buf_bytes,
+                        backend: self.backend.clone(),
+                        done,
+                    }
+                }
                 StepKind::Gemm {
                     rows,
                     inputs,
@@ -489,6 +444,35 @@ mod tests {
                 .unwrap()
                 .is_some());
         }
+    }
+
+    #[test]
+    fn executor_select_topology_honors_policy_shape_choice() {
+        // The executor-level surface: a load-aware policy on a cluster
+        // with one clamped node must override the requested chain with a
+        // tree and bind all requested slots.
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        cluster.congest(
+            5,
+            &CongestionSpec {
+                bytes_per_sec: 1e8,
+                extra_latency: Duration::ZERO,
+                jitter: Duration::ZERO,
+            },
+        );
+        let exec = PlanExecutor::new(&cluster, native())
+            .with_policy(Arc::new(crate::coordinator::topology::LoadAwarePolicy::default()));
+        let sel = exec
+            .select_topology(&(0..8).collect::<Vec<_>>(), 8, Topology::Chain)
+            .unwrap();
+        assert_eq!(sel.topology, Topology::Tree { fanout: 2 });
+        assert_eq!(sel.nodes.len(), 8);
+        // and the FIFO default keeps the request
+        let exec = PlanExecutor::new(&cluster, native());
+        let sel = exec
+            .select_topology(&(0..8).collect::<Vec<_>>(), 8, Topology::Chain)
+            .unwrap();
+        assert_eq!(sel.topology, Topology::Chain);
     }
 
     #[test]

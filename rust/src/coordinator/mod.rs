@@ -13,9 +13,12 @@
 //! * [`classical`] — the traditional *atomic* encoding (Section III,
 //!   Fig. 1): one `Gemm` step on the coding node fed by `Source` streams,
 //!   draining into `Store` steps; `T ≈ τ_block · max{k, m−1}` (eq. 1).
-//! * [`pipeline`] — RapidRAID (Sections IV–V, Fig. 2): a head→tail chain
-//!   of `Fold` steps over the n replica holders;
-//!   `T ≈ τ_block + (n−1)·τ_pipe` (eq. 2).
+//! * [`pipeline`] — RapidRAID (Sections IV–V, Fig. 2) over any
+//!   [`topology::Topology`]: fold steps over the n replica holders, shaped
+//!   as the paper's chain (`T ≈ τ_block + (n−1)·τ_pipe`, eq. 2), a tree
+//!   (logarithmic hop tail, straggler isolation) or a hybrid. The
+//!   [`topology`] module owns the shapes, both lowering directions and the
+//!   shape-aware placement policies.
 //! * [`batch`] — concurrent multi-object archival (Fig. 4b/5b): every job
 //!   lowers to a plan, the engine runs them with bounded concurrency.
 //! * [`pipeline_decode`] — k concurrent decode chains (`Fold` steps over
@@ -39,8 +42,9 @@ pub mod model;
 pub mod pipeline;
 pub mod pipeline_decode;
 pub mod plan;
+pub mod topology;
 
-pub use batch::{run_batch, run_batch_recorded, BatchJob};
+pub use batch::{pipeline_jobs, run_batch, run_batch_recorded, BatchJob};
 pub use classical::{archive_classical, ClassicalJob};
 pub use decode::{reconstruct, survey_coded};
 pub use engine::{
@@ -51,3 +55,6 @@ pub use migrate::{migrate_object, MigrationReport};
 pub use pipeline::{archive_pipeline, PipelineJob};
 pub use pipeline_decode::reconstruct_pipelined;
 pub use plan::{ArchivalPlan, Edge, GemmInput, GemmOutput, Step, StepId, StepKind};
+pub use topology::{
+    LoadAwarePolicy, PlacementPolicy, Topology, TopologySelection,
+};

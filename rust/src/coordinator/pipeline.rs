@@ -1,14 +1,20 @@
-//! RapidRAID pipelined archival (Sections IV–V, Fig. 2).
+//! RapidRAID pipelined archival (Sections IV–V, Fig. 2) — over any
+//! pipeline [`Topology`].
 //!
-//! The n nodes that already hold the two replicas form a chain; every
-//! network buffer flows head→tail once while each node folds its local
-//! block(s) and stores its codeword block — eq. (2):
-//! `T_pipe ≈ τ_block + (n−1)·τ_pipe`.
+//! The n nodes that already hold the two replicas form a pipeline; every
+//! network buffer flows root→leaves once while each node folds its local
+//! block(s) and stores its codeword block. The paper's chain gives
+//! eq. (2) `T_pipe ≈ τ_block + (n−1)·τ_pipe`; tree/hybrid shapes trade
+//! interior fan-out uplink for a logarithmic hop tail and straggler
+//! isolation (a slow node paces only its subtree).
 //!
-//! This module is a *plan builder*: [`PipelineJob::plan`] lowers the
-//! coefficient schedule onto the [`ArchivalPlan`] IR as a linear chain of
-//! [`StepKind::Fold`] steps, and [`archive_pipeline`] hands the plan to
-//! the shared [`PlanExecutor`]. No node-command plumbing lives here.
+//! This module is a *thin builder*: [`PipelineJob::plan`] expands the
+//! job's topology to a shape and delegates the whole lowering to
+//! [`crate::coordinator::topology::lower_encode`]; [`archive_pipeline`]
+//! hands the plan to the shared [`PlanExecutor`]. No wiring lives here.
+//! Non-chain jobs decode through the matching
+//! [`crate::codes::TopologyCode`] (same ψ/ξ schedule, shape-composed
+//! generator).
 
 use std::time::Duration;
 
@@ -16,10 +22,11 @@ use crate::backend::{BackendHandle, Width};
 use crate::cluster::Cluster;
 use crate::codes::rapidraid::RapidRaidCode;
 use crate::gf::{GfElem, SliceOps};
-use crate::storage::{BlockKey, ObjectId, ReplicaPlacement};
+use crate::storage::{ObjectId, ReplicaPlacement};
 
 use super::engine::PlanExecutor;
-use super::plan::{ArchivalPlan, StepKind};
+use super::plan::ArchivalPlan;
+use super::topology::{lower_encode, Topology};
 
 /// One pipelined archival job (field-erased: coefficients as u32).
 #[derive(Clone, Debug)]
@@ -32,16 +39,19 @@ pub struct PipelineJob {
     pub k: usize,
     /// Per chain position: (local source-block indices, ψ, ξ).
     pub schedule: Vec<(Vec<usize>, Vec<u32>, Vec<u32>)>,
-    /// Cluster node at each chain position (len n).
+    /// Cluster node at each pipeline position (len n).
     pub chain: Vec<usize>,
     /// Network buffer size.
     pub buf_bytes: usize,
     /// Source block size.
     pub block_bytes: usize,
+    /// Pipeline shape the position binding is lowered through.
+    pub topology: Topology,
 }
 
 impl PipelineJob {
-    /// Build a job from a code instance and a placement binding.
+    /// Build a chain-shaped job from a code instance and a placement
+    /// binding (the paper's layout).
     pub fn from_code<F: GfElem + SliceOps>(
         code: &RapidRaidCode<F>,
         placement: &ReplicaPlacement,
@@ -69,7 +79,22 @@ impl PipelineJob {
             chain: placement.chain.clone(),
             buf_bytes,
             block_bytes,
+            topology: Topology::Chain,
         })
+    }
+
+    /// Build a job lowered through an arbitrary pipeline `topology`.
+    pub fn from_code_with_topology<F: GfElem + SliceOps>(
+        code: &RapidRaidCode<F>,
+        placement: &ReplicaPlacement,
+        topology: Topology,
+        buf_bytes: usize,
+        block_bytes: usize,
+    ) -> anyhow::Result<Self> {
+        topology.validate()?;
+        let mut job = Self::from_code(code, placement, buf_bytes, block_bytes)?;
+        job.topology = topology;
+        Ok(job)
     }
 
     /// Code length n.
@@ -77,32 +102,22 @@ impl PipelineJob {
         self.chain.len()
     }
 
-    /// Lower the job onto the plan IR: a head→tail chain of fold steps,
-    /// each storing its codeword block c_i in place.
+    /// Lower the job onto the plan IR through its topology: one fold step
+    /// per position, each storing its codeword block c_i in place and
+    /// streaming the running ψ-combination to every child position.
     pub fn plan(&self) -> anyhow::Result<ArchivalPlan> {
         let n = self.n();
         anyhow::ensure!(self.schedule.len() == n, "schedule/chain length mismatch");
-        let mut plan = ArchivalPlan::new(self.object, self.width, self.buf_bytes, self.block_bytes);
-        let mut prev = None;
-        for (pos, (locals, psi, xi)) in self.schedule.iter().enumerate() {
-            let id = plan.add_step(
-                self.chain[pos],
-                StepKind::Fold {
-                    locals: locals
-                        .iter()
-                        .map(|&b| BlockKey::source(self.object, b))
-                        .collect(),
-                    psi: psi.clone(),
-                    xi: xi.clone(),
-                    store: Some(BlockKey::coded(self.object, pos)),
-                },
-            );
-            if let Some(p) = prev {
-                plan.connect(p, 0, id, 0);
-            }
-            prev = Some(id);
-        }
-        Ok(plan)
+        let shape = self.topology.shape(n)?;
+        lower_encode(
+            self.object,
+            self.width,
+            &self.schedule,
+            &self.chain,
+            &shape,
+            self.buf_bytes,
+            self.block_bytes,
+        )
     }
 }
 
@@ -121,8 +136,11 @@ mod tests {
     use super::*;
     use crate::backend::NativeBackend;
     use crate::cluster::ClusterSpec;
+    use crate::codes::TopologyCode;
     use crate::coordinator::ingest::ingest_object;
+    use crate::coordinator::plan::StepKind;
     use crate::gf::Gf256;
+    use crate::storage::BlockKey;
     use std::sync::Arc;
 
     #[test]
@@ -187,6 +205,42 @@ mod tests {
             .collect();
         let expect = code.encode_chain(&obj_gf);
         for i in 0..6 {
+            let got = cluster.node(i).peek(BlockKey::coded(object, i)).unwrap().unwrap();
+            let expect_bytes: Vec<u8> = expect[i].iter().map(|g| g.0).collect();
+            assert_eq!(*got, expect_bytes, "codeword block {i}");
+        }
+    }
+
+    #[test]
+    fn tree_archival_equals_topology_code_encode() {
+        // Tree-shaped pipelined archival must land byte-identically on the
+        // topology code's atomic (generator) encode — the distributed twin
+        // of codes::topology's reference checks.
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        let object = ObjectId(17);
+        let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+        let blocks = ingest_object(&cluster, &placement, 16 * 1024).unwrap();
+
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let topo = Topology::Tree { fanout: 2 };
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let job =
+            PipelineJob::from_code_with_topology(&code, &placement, topo, 4096, 16 * 1024)
+                .unwrap();
+        let plan = job.plan().unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 8);
+        assert_eq!(plan.edges.len(), 7); // trees keep n-1 streams
+        assert!(plan.steps.iter().all(|s| matches!(s.kind, StepKind::Fold { .. })));
+        archive_pipeline(&cluster, &backend, &job).unwrap();
+
+        let tcode = TopologyCode::new(code, topo.shape(8).unwrap()).unwrap();
+        let obj_gf: Vec<Vec<Gf256>> = blocks
+            .iter()
+            .map(|b| b.iter().map(|&x| Gf256(x)).collect())
+            .collect();
+        let expect = tcode.encode_matrix(&obj_gf);
+        for i in 0..8 {
             let got = cluster.node(i).peek(BlockKey::coded(object, i)).unwrap().unwrap();
             let expect_bytes: Vec<u8> = expect[i].iter().map(|g| g.0).collect();
             assert_eq!(*got, expect_bytes, "codeword block {i}");

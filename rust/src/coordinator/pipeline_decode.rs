@@ -56,6 +56,12 @@ pub fn reconstruct_pipelined<F: GfElem + SliceOps>(
     let subset = code
         .find_decodable_subset(&avail)
         .ok_or_else(|| anyhow::anyhow!("object {object} unrecoverable: available {avail:?}"))?;
+    // The k×k inversion runs on the first selected survivor; its meter
+    // prices the Gauss-Jordan in virtual time before any chain starts.
+    cluster
+        .node(chain[subset[0]])
+        .cpu
+        .charge(&crate::resources::GfWork::invert(k));
     let inv = gauss::invert(&code.generator().select_rows(&subset))
         .ok_or_else(|| anyhow::anyhow!("subset {subset:?} unexpectedly singular"))?;
 
@@ -123,6 +129,11 @@ pub fn reconstruct_classical_timed<F: GfElem + SliceOpsBound>(
     let subset = code
         .find_decodable_subset(&avail)
         .ok_or_else(|| anyhow::anyhow!("object {object} unrecoverable"))?;
+    // classical decode inverts on the decode node itself
+    cluster
+        .node(decode_node)
+        .cpu
+        .charge(&crate::resources::GfWork::invert(k));
     let inv = gauss::invert(&code.generator().select_rows(&subset))
         .ok_or_else(|| anyhow::anyhow!("singular subset"))?;
     let inv_u32: Vec<Vec<u32>> = (0..k)

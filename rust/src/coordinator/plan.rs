@@ -60,9 +60,11 @@ pub enum StepKind {
         key: BlockKey,
     },
     /// One pipeline stage: consume the upstream partial combination on
-    /// in-port 0 (or synthesize zeros when no in-edge — the chain head),
-    /// fold the local blocks, forward `x ⊕ Σψ·local` on out-port 0 (absent
-    /// for the chain tail) and optionally store `x ⊕ Σξ·local`.
+    /// in-port 0 (or synthesize zeros when no in-edge — the pipeline
+    /// head), fold the local blocks, forward `x ⊕ Σψ·local` on **every**
+    /// bound out-port (one stream per child — tree pipelines fan the same
+    /// combination out to several subtrees; a chain stage binds port 0
+    /// only; a tail binds none) and optionally store `x ⊕ Σξ·local`.
     Fold {
         /// Local blocks folded at this stage (1 or 2).
         locals: Vec<BlockKey>,
@@ -221,7 +223,10 @@ impl ArchivalPlan {
                 "edge {ei}: self-node edge (express locality as Local/Store instead)"
             );
             let from_ok = match &self.steps[e.from].kind {
-                StepKind::Source { .. } | StepKind::Fold { .. } => e.from_port == 0,
+                StepKind::Source { .. } => e.from_port == 0,
+                // A fold forwards the same combination on every bound
+                // out-port (multi-port fan-out); ports need not be dense.
+                StepKind::Fold { .. } => true,
                 StepKind::Gemm { outputs, .. } => {
                     matches!(outputs.get(e.from_port), Some(GemmOutput::Stream))
                 }
@@ -332,6 +337,24 @@ mod tests {
         p.validate().unwrap();
         assert_eq!(p.len(), 2);
         assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn fold_fanout_binds_multiple_out_ports() {
+        // tree pipelines: one fold streams the same combination to two
+        // children on ports 0 and 1
+        let mut p = base();
+        let root = p.add_step(0, fold(Some(BlockKey::coded(ObjectId(1), 0))));
+        let a = p.add_step(1, fold(Some(BlockKey::coded(ObjectId(1), 1))));
+        let b = p.add_step(2, fold(Some(BlockKey::coded(ObjectId(1), 2))));
+        p.connect(root, 0, a, 0);
+        p.connect(root, 1, b, 0);
+        p.validate().unwrap();
+        // double-binding one producer port is still rejected
+        let mut bad = p.clone();
+        let c = bad.add_step(3, fold(None));
+        bad.connect(root, 1, c, 0);
+        assert!(bad.validate().unwrap_err().to_string().contains("bound twice"));
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Lower a topology-shaped pipeline onto the [`ArchivalPlan`] IR.
+//!
+//! Two dataflow directions share every shape:
+//!
+//! * [`lower_encode`] — **diffusion** (archival): the running ψ-combination
+//!   flows root→leaves; every position is one [`StepKind::Fold`] that
+//!   stores its codeword block and fans the same `x_out` stream to each
+//!   child via the fold's multi-port fan-out (compute once, one frame copy
+//!   per extra child).
+//! * [`lower_aggregate`] — **aggregation** (repair): ψ-weighted partials
+//!   flow leaves→root; a slot with one child is a `Fold`, a slot merging
+//!   several children is a 1-row [`StepKind::Gemm`] (`[1,…,1,ψ]` over the
+//!   child streams plus its local block), and the root's completed sum
+//!   lands on the newcomer — in place when the root slot *is* the
+//!   newcomer, through a trailing [`StepKind::Store`] otherwise.
+//!
+//! Both lowerings produce plans the unchanged `PlanExecutor` runs; the
+//! chain shape reproduces the PR 1/PR 2 chain plans step for step.
+
+use crate::backend::Width;
+use crate::cluster::NodeId;
+use crate::codes::TopologyShape;
+use crate::coordinator::plan::{ArchivalPlan, GemmInput, GemmOutput, StepId, StepKind};
+use crate::storage::{BlockKey, ObjectId};
+
+/// Lower an encode schedule bound to `nodes` over `shape`: position i runs
+/// `schedule[i]` on `nodes[i]`, stores `c_i` and streams its ψ-combination
+/// to every child position.
+pub fn lower_encode(
+    object: ObjectId,
+    width: Width,
+    schedule: &[(Vec<usize>, Vec<u32>, Vec<u32>)],
+    nodes: &[NodeId],
+    shape: &TopologyShape,
+    buf_bytes: usize,
+    block_bytes: usize,
+) -> anyhow::Result<ArchivalPlan> {
+    anyhow::ensure!(
+        schedule.len() == nodes.len(),
+        "schedule/node binding length mismatch"
+    );
+    anyhow::ensure!(
+        shape.n() == nodes.len(),
+        "shape has {} positions, binding has {}",
+        shape.n(),
+        nodes.len()
+    );
+    let mut plan = ArchivalPlan::new(object, width, buf_bytes, block_bytes);
+    let ids: Vec<StepId> = schedule
+        .iter()
+        .enumerate()
+        .map(|(i, (locals, psi, xi))| {
+            plan.add_step(
+                nodes[i],
+                StepKind::Fold {
+                    locals: locals.iter().map(|&b| BlockKey::source(object, b)).collect(),
+                    psi: psi.clone(),
+                    xi: xi.clone(),
+                    store: Some(BlockKey::coded(object, i)),
+                },
+            )
+        })
+        .collect();
+    for (parent, kids) in shape.children().iter().enumerate() {
+        for (port, &child) in kids.iter().enumerate() {
+            plan.connect(ids[parent], port, ids[child], 0);
+        }
+    }
+    Ok(plan)
+}
+
+/// Lower a ψ-weighted aggregation `Σ ψ[i]·c_{sources[i].1}` over `shape`
+/// (one slot per source): leaves fold their coded block into a fresh
+/// partial, interior slots merge child partials, and the root's sum is
+/// stored under `out_key` on `newcomer` (directly when the root slot's
+/// node *is* the newcomer).
+#[allow(clippy::too_many_arguments)]
+pub fn lower_aggregate(
+    object: ObjectId,
+    width: Width,
+    sources: &[(NodeId, usize)],
+    psi: &[u32],
+    shape: &TopologyShape,
+    newcomer: NodeId,
+    out_key: BlockKey,
+    buf_bytes: usize,
+    block_bytes: usize,
+) -> anyhow::Result<ArchivalPlan> {
+    anyhow::ensure!(!sources.is_empty(), "aggregation with no sources");
+    anyhow::ensure!(psi.len() == sources.len(), "ψ/source arity mismatch");
+    anyhow::ensure!(
+        shape.n() == sources.len(),
+        "shape has {} slots, {} sources given",
+        shape.n(),
+        sources.len()
+    );
+    let children = shape.children();
+    let root_in_place = sources[0].0 == newcomer;
+    let mut plan = ArchivalPlan::new(object, width, buf_bytes, block_bytes);
+
+    // Slots in reverse index order (leaves before their parents) purely
+    // for readability of dumped plans; edges are wired by id afterwards.
+    let mut ids = vec![usize::MAX; sources.len()];
+    for slot in (0..sources.len()).rev() {
+        let (node, pos) = sources[slot];
+        let key = BlockKey::coded(object, pos);
+        let is_root = slot == 0;
+        let stores_here = is_root && root_in_place;
+        let kind = if children[slot].len() >= 2 {
+            // Merge several child partials: one Gemm row XORs them (coeff
+            // 1) and folds the local block with ψ.
+            let fan_in = children[slot].len();
+            let mut row = vec![1u32; fan_in];
+            row.push(psi[slot]);
+            let mut inputs = vec![GemmInput::Stream; fan_in];
+            inputs.push(GemmInput::Local(key));
+            let outputs = vec![if stores_here {
+                GemmOutput::Store(out_key)
+            } else {
+                GemmOutput::Stream
+            }];
+            StepKind::Gemm {
+                rows: vec![row],
+                inputs,
+                outputs,
+            }
+        } else {
+            StepKind::Fold {
+                locals: vec![key],
+                psi: vec![psi[slot]],
+                xi: vec![if stores_here { psi[slot] } else { 0 }],
+                store: stores_here.then_some(out_key),
+            }
+        };
+        ids[slot] = plan.add_step(node, kind);
+    }
+    for (parent, kids) in children.iter().enumerate() {
+        for (in_port, &child) in kids.iter().enumerate() {
+            // a single-child fold consumes on in-port 0 (== in_port); a
+            // fan-in gemm binds one child stream per input index
+            plan.connect(ids[child], 0, ids[parent], in_port);
+        }
+    }
+    if !root_in_place {
+        let store = plan.add_step(newcomer, StepKind::Store { key: out_key });
+        plan.connect(ids[0], 0, store, 0);
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::topology::Topology;
+
+    fn schedule(n: usize) -> Vec<(Vec<usize>, Vec<u32>, Vec<u32>)> {
+        (0..n).map(|i| (vec![i % 4], vec![3], vec![7])).collect()
+    }
+
+    #[test]
+    fn chain_encode_lowering_matches_pr1_shape() {
+        let shape = Topology::Chain.shape(8).unwrap();
+        let plan = lower_encode(
+            ObjectId(1),
+            Width::W8,
+            &schedule(8),
+            &(0..8).collect::<Vec<_>>(),
+            &shape,
+            1024,
+            4096,
+        )
+        .unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 8);
+        assert_eq!(plan.edges.len(), 7);
+        assert!(plan.steps.iter().all(|s| matches!(s.kind, StepKind::Fold { .. })));
+    }
+
+    #[test]
+    fn tree_encode_lowering_fans_out_folds() {
+        let shape = Topology::Tree { fanout: 2 }.shape(8).unwrap();
+        let plan = lower_encode(
+            ObjectId(2),
+            Width::W8,
+            &schedule(8),
+            &(0..8).collect::<Vec<_>>(),
+            &shape,
+            1024,
+            4096,
+        )
+        .unwrap();
+        plan.validate().unwrap();
+        // still n steps / n-1 edges — trees keep the chain's traffic
+        // optimality, they just reshape it
+        assert_eq!(plan.len(), 8);
+        assert_eq!(plan.edges.len(), 7);
+        assert!(plan.steps.iter().all(|s| matches!(s.kind, StepKind::Fold { .. })));
+        // the root binds two producer ports
+        let root_ports: Vec<usize> = plan
+            .edges
+            .iter()
+            .filter(|e| e.from == 0)
+            .map(|e| e.from_port)
+            .collect();
+        assert_eq!(root_ports.len(), 2);
+    }
+
+    #[test]
+    fn aggregate_tree_merges_with_gemm() {
+        // 4 slots, fanout 2: root (slot 0) merges slots 1+2, slot 1 also
+        // feeds from slot 3
+        let shape = Topology::Tree { fanout: 2 }.shape(4).unwrap();
+        let sources = vec![(0usize, 0usize), (1, 1), (2, 2), (3, 3)];
+        let plan = lower_aggregate(
+            ObjectId(3),
+            Width::W8,
+            &sources,
+            &[2, 4, 6, 8],
+            &shape,
+            9,
+            BlockKey::coded(ObjectId(3), 5),
+            1024,
+            4096,
+        )
+        .unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 5); // 4 slots + newcomer store
+        let gemms = plan
+            .steps
+            .iter()
+            .filter(|s| matches!(s.kind, StepKind::Gemm { .. }))
+            .count();
+        assert_eq!(gemms, 1, "only the fan-in root merges via gemm");
+        assert!(matches!(plan.steps.last().unwrap().kind, StepKind::Store { .. }));
+    }
+
+    #[test]
+    fn aggregate_in_place_root_stores_locally() {
+        let shape = Topology::Chain.shape(3).unwrap();
+        // root slot's node IS the newcomer: no separate Store step
+        let sources = vec![(7usize, 0usize), (1, 1), (2, 2)];
+        let plan = lower_aggregate(
+            ObjectId(4),
+            Width::W8,
+            &sources,
+            &[2, 4, 6],
+            &shape,
+            7,
+            BlockKey::coded(ObjectId(4), 9),
+            1024,
+            4096,
+        )
+        .unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.len(), 3);
+        let storing: Vec<_> = plan
+            .steps
+            .iter()
+            .filter(|s| matches!(&s.kind, StepKind::Fold { store: Some(_), .. }))
+            .collect();
+        assert_eq!(storing.len(), 1);
+        assert_eq!(storing[0].node, 7);
+    }
+
+    #[test]
+    fn arity_mismatches_rejected() {
+        let shape = Topology::Chain.shape(3).unwrap();
+        assert!(lower_encode(
+            ObjectId(5),
+            Width::W8,
+            &schedule(3),
+            &[0, 1],
+            &shape,
+            1024,
+            4096
+        )
+        .is_err());
+        assert!(lower_aggregate(
+            ObjectId(5),
+            Width::W8,
+            &[(0, 0), (1, 1)],
+            &[1],
+            &shape,
+            5,
+            BlockKey::coded(ObjectId(5), 0),
+            1024,
+            4096
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! First-class pipeline **topologies**: the shape of an encoding (or
+//! repair) pipeline as data, decoupled from the coefficient schedule that
+//! runs over it.
+//!
+//! The paper's §VII notes the chain is only one point of a free design
+//! axis; Li et al.'s repair pipelining shows tree/hybrid layouts dominate
+//! chains when links or CPUs are heterogeneous. A [`Topology`] names a
+//! shape family, [`Topology::shape`] expands it into the ordered
+//! [`TopologyShape`] the codes layer composes coefficients over, and
+//! [`lower`] turns shape + schedule + node binding into an
+//! [`crate::coordinator::plan::ArchivalPlan`] the one shared executor
+//! runs. [`policy`] generalizes chain selection into shape-aware
+//! placement: interior slots (big subtrees) pace everything beneath them,
+//! so they get the best-ranked nodes.
+//!
+//! Shape intuition (what each family trades):
+//!
+//! * [`Topology::Chain`] — traffic-optimal (every node uplinks one block)
+//!   but the critical path crosses all n stages: one slow stage paces the
+//!   whole pipeline, and the hop tail grows linearly in n.
+//! * [`Topology::Tree`] — depth log_f(n): a slow node paces only its own
+//!   subtree and the hop tail shrinks, at the price of interior uplinks
+//!   carrying `fanout` copies of the stream.
+//! * [`Topology::Hybrid`] — a chain prefix feeding a tree: tunes between
+//!   the two (the prefix keeps uplinks single, the tree caps the tail).
+
+pub mod lower;
+pub mod policy;
+
+pub use lower::{lower_aggregate, lower_encode};
+pub use policy::{
+    assign_slots, select_chain, CongestionAwarePolicy, FifoPolicy, LoadAwarePolicy,
+    PlacementPolicy, PolicyKind, TopologySelection,
+};
+
+use crate::codes::TopologyShape;
+
+/// A pipeline shape family, expanded to a concrete [`TopologyShape`] per
+/// code length n.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// The paper's linear chain (position i feeds position i+1).
+    Chain,
+    /// Heap-ordered tree: position i's parent is `(i-1)/fanout`, so every
+    /// interior position feeds up to `fanout` subtrees.
+    Tree {
+        /// Children per interior position (≥ 1; 1 degenerates to a chain).
+        fanout: usize,
+    },
+    /// A chain head feeding a heap-ordered tree: positions
+    /// `0..=chain_prefix` form the chain (the tree's root *is* position
+    /// `chain_prefix`), positions beyond hang off it with `tree_fanout`
+    /// children each.
+    Hybrid {
+        /// Position of the tree root, i.e. the number of chain *hops*
+        /// before branching starts. `0` degenerates to the pure tree,
+        /// anything ≥ n−1 to the pure chain.
+        chain_prefix: usize,
+        /// Fanout of the trailing tree segment (≥ 1).
+        tree_fanout: usize,
+    },
+}
+
+impl Topology {
+    /// Parameter sanity (independent of n).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            Topology::Chain => Ok(()),
+            Topology::Tree { fanout } => {
+                anyhow::ensure!(fanout >= 1, "tree fanout must be >= 1");
+                Ok(())
+            }
+            Topology::Hybrid { tree_fanout, .. } => {
+                anyhow::ensure!(tree_fanout >= 1, "hybrid tree fanout must be >= 1");
+                Ok(())
+            }
+        }
+    }
+
+    /// Expand to the ordered shape over `n` positions.
+    pub fn shape(&self, n: usize) -> anyhow::Result<TopologyShape> {
+        self.validate()?;
+        anyhow::ensure!(n >= 1, "topology over zero positions");
+        let parents = (0..n)
+            .map(|i| {
+                if i == 0 {
+                    return None;
+                }
+                Some(match *self {
+                    Topology::Chain => i - 1,
+                    Topology::Tree { fanout } => (i - 1) / fanout,
+                    Topology::Hybrid {
+                        chain_prefix,
+                        tree_fanout,
+                    } => {
+                        if i <= chain_prefix {
+                            i - 1
+                        } else {
+                            chain_prefix + (i - chain_prefix - 1) / tree_fanout
+                        }
+                    }
+                })
+            })
+            .collect();
+        TopologyShape::new(parents)
+    }
+
+    /// Parse a report/CLI label: `chain`, `tree:<fanout>`,
+    /// `hybrid:<prefix>:<fanout>`.
+    pub fn parse(s: &str) -> anyhow::Result<Topology> {
+        let mut parts = s.split(':');
+        let topo = match parts.next() {
+            Some("chain") => Topology::Chain,
+            Some("tree") => Topology::Tree {
+                fanout: parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("tree needs a fanout: tree:<f>"))?
+                    .parse()?,
+            },
+            Some("hybrid") => Topology::Hybrid {
+                chain_prefix: parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("hybrid needs hybrid:<prefix>:<fanout>"))?
+                    .parse()?,
+                tree_fanout: parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("hybrid needs hybrid:<prefix>:<fanout>"))?
+                    .parse()?,
+            },
+            other => anyhow::bail!("unknown topology {other:?} (chain | tree:<f> | hybrid:<p>:<f>)"),
+        };
+        anyhow::ensure!(parts.next().is_none(), "trailing topology parameters in {s:?}");
+        topo.validate()?;
+        Ok(topo)
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Topology::Chain => write!(f, "chain"),
+            Topology::Tree { fanout } => write!(f, "tree:{fanout}"),
+            Topology::Hybrid {
+                chain_prefix,
+                tree_fanout,
+            } => write!(f, "hybrid:{chain_prefix}:{tree_fanout}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_shape_is_a_chain() {
+        let s = Topology::Chain.shape(5).unwrap();
+        assert!(s.is_chain());
+        assert_eq!(s.depth(), 4);
+    }
+
+    #[test]
+    fn tree_shape_is_heap_ordered() {
+        let s = Topology::Tree { fanout: 2 }.shape(7).unwrap();
+        assert_eq!(
+            s.parents(),
+            &[None, Some(0), Some(0), Some(1), Some(1), Some(2), Some(2)]
+        );
+        assert_eq!(s.depth(), 2);
+        assert_eq!(s.max_fanout(), 2);
+        // fanout 1 degenerates to the chain
+        assert!(Topology::Tree { fanout: 1 }.shape(5).unwrap().is_chain());
+    }
+
+    #[test]
+    fn hybrid_shape_chains_then_branches() {
+        let s = Topology::Hybrid {
+            chain_prefix: 2,
+            tree_fanout: 2,
+        }
+        .shape(7)
+        .unwrap();
+        assert_eq!(
+            s.parents(),
+            &[None, Some(0), Some(1), Some(2), Some(2), Some(3), Some(3)]
+        );
+        // prefix 0 is the pure tree; a prefix >= n-1 is the pure chain
+        assert_eq!(
+            Topology::Hybrid { chain_prefix: 0, tree_fanout: 2 }.shape(7).unwrap(),
+            Topology::Tree { fanout: 2 }.shape(7).unwrap()
+        );
+        assert!(Topology::Hybrid { chain_prefix: 9, tree_fanout: 2 }
+            .shape(7)
+            .unwrap()
+            .is_chain());
+    }
+
+    #[test]
+    fn validation_rejects_zero_fanout() {
+        assert!(Topology::Tree { fanout: 0 }.validate().is_err());
+        assert!(Topology::Hybrid { chain_prefix: 1, tree_fanout: 0 }.shape(4).is_err());
+        assert!(Topology::Chain.shape(0).is_err());
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        for t in [
+            Topology::Chain,
+            Topology::Tree { fanout: 3 },
+            Topology::Hybrid { chain_prefix: 4, tree_fanout: 2 },
+        ] {
+            assert_eq!(Topology::parse(&t.to_string()).unwrap(), t);
+        }
+        assert!(Topology::parse("ring").is_err());
+        assert!(Topology::parse("tree").is_err());
+        assert!(Topology::parse("tree:0").is_err());
+        assert!(Topology::parse("hybrid:1:2:3").is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! Shape-aware placement: rank cluster nodes and bind them to topology
+//! slots.
+//!
+//! [`PlacementPolicy`] generalizes the PR 1 `ChainPolicy`: `rank` orders
+//! candidate nodes (the legacy surface ingest and the repair scheduler's
+//! newcomer selection still use directly), and `select_topology` maps the
+//! ranking onto a whole shape — interior slots pace their entire subtree,
+//! so [`assign_slots`] hands the best-ranked nodes to the heaviest slots
+//! (largest subtree first) and pushes the worst nodes to leaves, where a
+//! straggler delays only itself. For a chain every slot weight is
+//! distinct, so the binding degenerates to the PR 1 behavior exactly.
+//!
+//! [`FifoPolicy`] and [`CongestionAwarePolicy`] keep their names and
+//! ranking semantics (the latter now also reads each node's
+//! [`CpuMeter`](crate::resources::CpuMeter) backlog, the compute twin of
+//! the NIC load signal); [`LoadAwarePolicy`] additionally *chooses the
+//! shape* per object from the live congestion/CPU state.
+
+use std::sync::Arc;
+
+use crate::clock::Tick;
+use crate::cluster::{Cluster, NodeId};
+use crate::codes::TopologyShape;
+
+use super::Topology;
+
+/// Ranks candidate nodes and binds them to pipeline-topology slots.
+pub trait PlacementPolicy: Send + Sync {
+    /// Rank `candidates` (a permutation of the input), best first.
+    fn rank(&self, cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId>;
+
+    /// Choose the pipeline shape for an n-position archival over `ranked`
+    /// (this policy's own ranking of the candidates, best first — computed
+    /// once by [`PlacementPolicy::select_topology`]); the default keeps
+    /// the caller's request, [`LoadAwarePolicy`] overrides it.
+    fn choose_topology(
+        &self,
+        _cluster: &Cluster,
+        _ranked: &[NodeId],
+        _n: usize,
+        requested: Topology,
+    ) -> Topology {
+        requested
+    }
+
+    /// Pick nodes for every slot of the (possibly policy-overridden)
+    /// topology: the n most preferred candidates, heaviest slots first.
+    /// Ranks exactly once; the ranking feeds both the shape choice and
+    /// the slot binding.
+    fn select_topology(
+        &self,
+        cluster: &Cluster,
+        candidates: &[NodeId],
+        n: usize,
+        requested: Topology,
+    ) -> anyhow::Result<TopologySelection> {
+        anyhow::ensure!(
+            candidates.len() >= n,
+            "need {n} pipeline nodes, only {} candidates",
+            candidates.len()
+        );
+        let ranked = self.rank(cluster, candidates);
+        let topology = self.choose_topology(cluster, &ranked, n, requested);
+        let shape = topology.shape(n)?;
+        Ok(TopologySelection {
+            topology,
+            nodes: assign_slots(&shape, &ranked[..n]),
+        })
+    }
+}
+
+/// A chosen shape plus its node binding (`nodes[i]` runs slot i).
+#[derive(Clone, Debug)]
+pub struct TopologySelection {
+    /// The shape the policy settled on.
+    pub topology: Topology,
+    /// One cluster node per topology slot.
+    pub nodes: Vec<NodeId>,
+}
+
+/// Bind ranked nodes (best first) to shape slots, heaviest slot first.
+/// A slot's weight is its subtree size — the number of positions a slow
+/// node there would pace — with index order as the deterministic
+/// tie-break, so leaves collect the worst-ranked nodes.
+pub fn assign_slots(shape: &TopologyShape, ranked: &[NodeId]) -> Vec<NodeId> {
+    let n = shape.n();
+    assert_eq!(ranked.len(), n, "need exactly one node per slot");
+    let mut weight = vec![1usize; n];
+    for i in (1..n).rev() {
+        weight[shape.parent(i).expect("non-root has a parent")] += weight[i];
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(weight[i]), i));
+    let mut nodes = vec![0usize; n];
+    for (rank, &slot) in order.iter().enumerate() {
+        nodes[slot] = ranked[rank];
+    }
+    nodes
+}
+
+/// Keep the caller's order (the paper's fixed rotated chains).
+pub struct FifoPolicy;
+
+impl PlacementPolicy for FifoPolicy {
+    fn rank(&self, _cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId> {
+        candidates.to_vec()
+    }
+}
+
+/// Prefer idle, fast nodes: ascending in-flight command count, then
+/// ascending CPU-meter backlog (queued compute reservations), then
+/// descending effective NIC rate (min of up/down — a congested node's
+/// clamped direction is what throttles a pipeline hop).
+pub struct CongestionAwarePolicy;
+
+impl PlacementPolicy for CongestionAwarePolicy {
+    fn rank(&self, cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId> {
+        let mut scored: Vec<(usize, Tick, f64, NodeId)> = candidates
+            .iter()
+            .map(|&id| {
+                let n = cluster.node(id);
+                (
+                    n.inflight(),
+                    n.cpu.backlog(),
+                    n.up.rate().min(n.down.rate()),
+                    id,
+                )
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.cmp(&b.1))
+                .then(b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        scored.into_iter().map(|(_, _, _, id)| id).collect()
+    }
+}
+
+/// Picks the shape *and* the placement per object from the live cluster
+/// state: an idle pool with uniform NIC rates keeps the traffic-optimal
+/// [`Topology::Chain`]; visible CPU backlog or a wide rate spread switches
+/// to a tree (stragglers land on leaf slots where they pace only
+/// themselves); a moderate spread takes the hybrid middle ground.
+pub struct LoadAwarePolicy {
+    /// Fanout used for the tree/hybrid shapes this policy picks.
+    pub tree_fanout: usize,
+}
+
+impl Default for LoadAwarePolicy {
+    fn default() -> Self {
+        Self { tree_fanout: 2 }
+    }
+}
+
+impl PlacementPolicy for LoadAwarePolicy {
+    fn rank(&self, cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId> {
+        CongestionAwarePolicy.rank(cluster, candidates)
+    }
+
+    fn choose_topology(
+        &self,
+        cluster: &Cluster,
+        ranked: &[NodeId],
+        n: usize,
+        _requested: Topology,
+    ) -> Topology {
+        // Signals over the n best-ranked candidates (the nodes the shape
+        // will actually run on), all deterministic reads of cluster state.
+        let pool = &ranked[..n.min(ranked.len())];
+        let mut inflight_total = 0usize;
+        let mut cpu_backlogged = false;
+        let mut min_rate = f64::INFINITY;
+        let mut max_rate: f64 = 0.0;
+        for &id in pool {
+            let node = cluster.node(id);
+            inflight_total += node.inflight();
+            cpu_backlogged |= node.cpu.backlog() > Tick::ZERO;
+            let rate = node.up.rate().min(node.down.rate());
+            min_rate = min_rate.min(rate);
+            max_rate = max_rate.max(rate);
+        }
+        let spread = if min_rate > 0.0 { max_rate / min_rate } else { f64::INFINITY };
+        let heavily_loaded = cpu_backlogged || inflight_total >= pool.len();
+        if !heavily_loaded && inflight_total == 0 && spread <= 1.5 {
+            Topology::Chain
+        } else if heavily_loaded || spread > 4.0 {
+            Topology::Tree {
+                fanout: self.tree_fanout,
+            }
+        } else {
+            Topology::Hybrid {
+                chain_prefix: n / 2,
+                tree_fanout: self.tree_fanout,
+            }
+        }
+    }
+}
+
+/// Value-level selector for the built-in placement policies, for places
+/// that carry policy choice as data (long-run configs, the `rapidraid
+/// sweep` grid) rather than as a trait object.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum PolicyKind {
+    /// Keep the caller's order ([`FifoPolicy`]).
+    Fifo,
+    /// Load/CPU/NIC-aware ranking ([`CongestionAwarePolicy`]).
+    CongestionAware,
+    /// Shape-choosing placement ([`LoadAwarePolicy`], fanout 2).
+    LoadAware,
+}
+
+impl PolicyKind {
+    /// Instantiate the selected policy.
+    pub fn policy(&self) -> Arc<dyn PlacementPolicy> {
+        match self {
+            PolicyKind::Fifo => Arc::new(FifoPolicy),
+            PolicyKind::CongestionAware => Arc::new(CongestionAwarePolicy),
+            PolicyKind::LoadAware => Arc::new(LoadAwarePolicy::default()),
+        }
+    }
+
+    /// Short label for report tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::CongestionAware => "congestion-aware",
+            PolicyKind::LoadAware => "load-aware",
+        }
+    }
+}
+
+/// Pick the `n` most preferred of `candidates` under `policy`, bound as a
+/// chain (the legacy selection surface — replica placement and newcomer
+/// ranking stay shape-agnostic).
+pub fn select_chain(
+    cluster: &Cluster,
+    policy: &dyn PlacementPolicy,
+    candidates: &[NodeId],
+    n: usize,
+) -> anyhow::Result<Vec<NodeId>> {
+    anyhow::ensure!(
+        candidates.len() >= n,
+        "need {n} chain nodes, only {} candidates",
+        candidates.len()
+    );
+    let mut ranked = policy.rank(cluster, candidates);
+    ranked.truncate(n);
+    Ok(ranked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, CongestionSpec};
+
+    #[test]
+    fn assign_slots_chain_keeps_rank_order() {
+        let shape = Topology::Chain.shape(4).unwrap();
+        assert_eq!(assign_slots(&shape, &[9, 7, 5, 3]), vec![9, 7, 5, 3]);
+    }
+
+    #[test]
+    fn assign_slots_tree_puts_best_nodes_interior() {
+        // tree:2 over 7: weights [7,3,3,1,1,1,1] — slots 0,1,2 are
+        // interior, leaves 3..6 get the tail of the ranking
+        let shape = Topology::Tree { fanout: 2 }.shape(7).unwrap();
+        let nodes = assign_slots(&shape, &[10, 11, 12, 13, 14, 15, 16]);
+        assert_eq!(nodes[0], 10, "root gets the best-ranked node");
+        assert_eq!(&nodes[1..3], &[11, 12], "interior slots next");
+        assert_eq!(&nodes[3..], &[13, 14, 15, 16], "leaves take the rest");
+    }
+
+    #[test]
+    fn load_aware_picks_chain_on_idle_uniform_cluster() {
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        let policy = LoadAwarePolicy::default();
+        let sel = policy
+            .select_topology(&cluster, &(0..8).collect::<Vec<_>>(), 8, Topology::Chain)
+            .unwrap();
+        assert_eq!(sel.topology, Topology::Chain);
+        assert_eq!(sel.nodes.len(), 8);
+    }
+
+    #[test]
+    fn load_aware_switches_shape_under_rate_spread() {
+        let cluster = Cluster::start(ClusterSpec::test(8));
+        // one severely clamped node: spread > 4 ⇒ tree
+        cluster.congest(
+            3,
+            &CongestionSpec {
+                bytes_per_sec: 1e8, // 10x below the 1e9 test preset
+                extra_latency: std::time::Duration::ZERO,
+                jitter: std::time::Duration::ZERO,
+            },
+        );
+        let policy = LoadAwarePolicy::default();
+        let sel = policy
+            .select_topology(&cluster, &(0..8).collect::<Vec<_>>(), 8, Topology::Chain)
+            .unwrap();
+        assert_eq!(sel.topology, Topology::Tree { fanout: 2 });
+        // the clamped node ranks last, i.e. lands on a leaf slot
+        let shape = sel.topology.shape(8).unwrap();
+        let slot_of_congested = sel.nodes.iter().position(|&n| n == 3).unwrap();
+        assert!(
+            shape.children()[slot_of_congested].is_empty(),
+            "straggler must sit on a leaf: {:?}",
+            sel.nodes
+        );
+    }
+
+    #[test]
+    fn select_chain_needs_enough_candidates() {
+        let cluster = Cluster::start(ClusterSpec::test(3));
+        assert!(select_chain(&cluster, &FifoPolicy, &[0, 1], 3).is_err());
+        let chain = select_chain(&cluster, &FifoPolicy, &[2, 0, 1], 2).unwrap();
+        assert_eq!(chain, vec![2, 0]);
+    }
+}

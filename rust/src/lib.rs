@@ -25,18 +25,19 @@
 //! | module | contents |
 //! |---|---|
 //! | [`clock`] | pluggable time: `RealClock` (wall time) vs `SimClock` (deterministic discrete-event virtual time), clock channels, participant accounting |
-//! | [`resources`] | unified resource model: `GfWork` units, `CostModel` (`ZeroCost`/`UniformCost`/`ProfileCost` + per-node `NodeProfile`s), per-node `CpuMeter` charging compute in virtual time |
+//! | [`resources`] | unified resource model: `GfWork` units, `CostModel` (`ZeroCost`/`UniformCost`/`ProfileCost` + per-node multi-core `NodeProfile`s, runtime re-profiling), per-node `CpuMeter` charging compute in virtual time over core lanes (`backlog()` is the placement load signal) |
 //! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops (work-reporting), matrices, Gauss |
-//! | [`codes`] | classical Cauchy Reed-Solomon + RapidRAID code constructions, coefficient search, dependency census |
+//! | [`codes`] | classical Cauchy Reed-Solomon + RapidRAID code constructions, coefficient search, dependency census; [`codes::topology`] composes a schedule over any rooted shape into its generator (`TopologyShape`/`TopologyCode`), and `CodeView` is the generator-level surface decode/repair consume |
 //! | [`reliability`] | static resilience (probability of data loss, "number of 9's") |
 //! | [`cluster`] | simulated storage cluster: nodes, rate-limited links, congestion, crash-stop failure injection (`fail_node`/`revive_node`); everything timed on the spec's clock |
 //! | [`storage`] | objects, blocks, replica placement, block stores |
 //! | [`coordinator`] | the archival system: ArchivalPlan IR + PlanExecutor engine, with classical/pipelined/batch/decode/migration as plan builders; degraded reads via `decode::survey_coded` |
-//! | [`repair`] | failure repair as plan builders: star vs pipelined (Li et al. 2019) single-block repair, repair coefficients from the generator, eager/lazy/reliability-budget scheduler |
+//! | [`coordinator::topology`] | first-class pipeline shapes: `Topology` (`Chain`/`Tree`/`Hybrid`) expanded to ordered shapes, encode/aggregate lowerings onto the plan IR, and shape-aware `PlacementPolicy` placement (`FifoPolicy`/`CongestionAwarePolicy`/`LoadAwarePolicy`, slot-weighted binding) |
+//! | [`repair`] | failure repair as plan builders: star vs topology-shaped pipelined (Li et al. 2019) single-block repair, repair coefficients from the generator, eager/lazy/reliability-budget scheduler |
 //! | [`runtime`] | PJRT executor loading the AOT artifacts (`artifacts/*.hlo.txt`); stubbed without the `pjrt` feature |
 //! | [`backend`] | pluggable GF compute: native Rust vs PJRT artifacts |
 //! | [`metrics`] | clock-timed spans ([`metrics::Span`], with compute/transfer splits), percentile candles, report emitters, `BENCH_*.json` output |
-//! | [`workload`] | long-run workload harness: seeded crash/revive/congestion schedules over batch archival + repair (with CPU profile mixes), thousands of virtual seconds per wall second under `SimClock`; [`workload::sweep`] grids triggers × policies × cost profiles |
+//! | [`workload`] | long-run workload harness: seeded crash/revive/congestion/CPU-churn schedules over batch archival + repair (with CPU profile mixes and any pipeline topology), thousands of virtual seconds per wall second under `SimClock`; [`workload::sweep`] grids triggers × policies × cost profiles × topologies |
 //! | [`util`] | deterministic PRNG, mini property-test harness, bench timer |
 //!
 //! ## Quickstart

@@ -14,12 +14,17 @@
 //! rapidraid bench-table2-sim [--block-kib 1024] [--seed 5]    # Table II on the SimClock,
 //!                                                             # compute charged (uniform +
 //!                                                             # heterogeneous cost models)
+//! rapidraid bench-topo-sim [--block-kib 512] [--seed 5]       # pipeline-shape shootout:
+//!                                                             # chain vs tree vs hybrid ×
+//!                                                             # uniform/ec2-mix cost, SimClock
 //! rapidraid sim-longrun  [--virtual-secs 1000] [--epoch-secs 10]
 //!                        [--nodes 50] [--objects 8] [--seed N]
+//!                        [--topology chain|tree:F|hybrid:P:F]
 //!                        [--smoke]                            # DES failure trace
 //! rapidraid sweep        [--smoke] [--virtual-secs N] [--nodes N]
 //!                        [--objects N] [--seed N]             # triggers × policies × cost
-//!                                                             # profiles over long traces
+//!                                                             # profiles × topologies
+//!                                                             # (chain + tree:2) over traces
 //! rapidraid demo         [--pjrt]                             # quick e2e
 //! ```
 //!
@@ -59,6 +64,7 @@ fn main() {
         Some("bench-congestion") => cmd_bench_congestion(&opts),
         Some("bench-repair") => cmd_bench_repair(&opts),
         Some("bench-table2-sim") => cmd_bench_table2_sim(&opts),
+        Some("bench-topo-sim") => cmd_bench_topo_sim(&opts),
         Some("sim-longrun") => cmd_sim_longrun(&opts),
         Some("sweep") => cmd_sweep(&opts),
         Some("demo") => cmd_demo(&opts),
@@ -89,8 +95,10 @@ fn usage() {
          \x20 bench-congestion  congested-network sweep, Fig. 5\n\
          \x20 bench-repair      single-block repair, star vs pipelined\n\
          \x20 bench-table2-sim  Table II on the SimClock, CPU cost models charged\n\
+         \x20 bench-topo-sim    pipeline-shape shootout: chain vs tree vs hybrid\n\
          \x20 sim-longrun       long-run crash/repair trace on the SimClock\n\
-         \x20 sweep             repair triggers x policies x cost profiles grid\n\
+         \x20 sweep             repair triggers x policies x cost profiles x\n\
+         \x20                   pipeline topologies (chain + tree:2) grid\n\
          \x20 demo              end-to-end migrate+decode demo\n\
          see the doc comment in rust/src/main.rs for options"
     );
@@ -255,6 +263,15 @@ fn cmd_bench_table2_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     emit_json(&report)
 }
 
+fn cmd_bench_topo_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let block_kib: usize = get(opts, "block-kib", 512);
+    let seed: u64 = get(opts, "seed", 5);
+    let be = backend(opts)?;
+    let (_rows, report) =
+        scenarios::topo_sim(&be, block_kib << 10, seed, &mut std::io::stdout().lock())?;
+    emit_json(&report)
+}
+
 fn cmd_sweep(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     use rapidraid::workload::{run_sweep, LongRunConfig, SweepConfig};
     let mut base = if opts.contains_key("smoke") {
@@ -295,6 +312,9 @@ fn cmd_sim_longrun(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     cfg.nodes = get(opts, "nodes", cfg.nodes);
     cfg.objects = get(opts, "objects", cfg.objects);
     cfg.seed = get(opts, "seed", cfg.seed);
+    if let Some(t) = opts.get("topology") {
+        cfg.topology = rapidraid::coordinator::Topology::parse(t)?;
+    }
     let be = backend(opts)?;
     let out = &mut std::io::stdout().lock();
     let report = run_long_run(&cfg, &be, Some(out))?;

@@ -17,11 +17,13 @@
 //!   `T_star ≈ k·τ_block` — repair traffic is exactly the k-transfer cost
 //!   Dimakis et al. identify as the dominant price of erasure coding.
 //! * [`pipeline::PipelinedRepairJob`] — repair pipelining (Li et al.,
-//!   2019): the survivors form a chain of `Fold` steps re-aggregating the
-//!   ψ-weighted partial sums buffer by buffer, the tail delivering to a
-//!   `Store` on the newcomer. Hops overlap exactly like the encode
-//!   pipeline: `T_pipe ≈ τ_block + (k−1)·τ_buf` — single-block repair in
-//!   about one blocktime.
+//!   2019) over any aggregation
+//!   [`Topology`](crate::coordinator::topology::Topology): the survivors
+//!   re-aggregate the ψ-weighted partial sums buffer by buffer toward a
+//!   root delivering to the newcomer. The chain shape gives
+//!   `T_pipe ≈ τ_block + (k−1)·τ_buf` — single-block repair in about one
+//!   blocktime; tree shapes cut the hop tail to the shape depth and
+//!   confine slow survivors to their own subtrees.
 //!
 //! [`scheduler::RepairScheduler`] scans placements for missing blocks,
 //! picks newcomers through the executor's
@@ -41,7 +43,7 @@ pub use star::{run_star_repair, StarRepairJob};
 
 use crate::backend::Width;
 use crate::cluster::NodeId;
-use crate::codes::rapidraid::RapidRaidCode;
+use crate::codes::CodeView;
 use crate::gf::{GfElem, SliceOps};
 use crate::storage::ObjectId;
 
@@ -70,10 +72,12 @@ pub struct RepairJob {
 impl RepairJob {
     /// Bind a repair of `object`'s block `lost` to the cluster: survivors
     /// come from `avail` (their chain positions), the coefficients from the
-    /// code's generator. `chain[pos]` is the node holding `c_pos`.
+    /// code's generator — any [`CodeView`], so chain and topology codes
+    /// repair through the same path. `chain[pos]` is the node holding
+    /// `c_pos`.
     #[allow(clippy::too_many_arguments)]
-    pub fn from_code<F: GfElem + SliceOps>(
-        code: &RapidRaidCode<F>,
+    pub fn from_code<F: GfElem + SliceOps, C: CodeView<F>>(
+        code: &C,
         object: ObjectId,
         chain: &[NodeId],
         lost: usize,

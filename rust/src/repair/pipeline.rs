@@ -1,78 +1,85 @@
-//! Pipelined repair — Li et al.'s repair pipelining as a plan builder.
+//! Pipelined repair — Li et al.'s repair pipelining as a plan builder,
+//! over any aggregation [`Topology`].
 //!
-//! The k survivors form a chain of [`StepKind::Fold`] steps: survivor i
-//! receives the running ψ-weighted partial sum, folds `ψ_i · c_{s_i}` into
-//! it buffer by buffer, and forwards it; the tail delivers the completed
-//! `c_lost` to a [`StepKind::Store`] on the newcomer. Exactly like the
-//! encode pipeline, the hops overlap: `T_pipe ≈ τ_block + (k−1)·τ_buf`
-//! instead of star repair's `k·τ_block` — single-block repair in about one
-//! blocktime.
+//! The k survivors form an aggregation shape: each slot folds
+//! `ψ_i · c_{s_i}` into the partial sums arriving from its children and
+//! forwards toward the root, whose completed `c_lost` lands on the
+//! newcomer. The paper-faithful chain gives
+//! `T_pipe ≈ τ_block + (k−1)·τ_buf` instead of star repair's `k·τ_block`;
+//! tree shapes shorten the hop tail to the shape depth and confine a slow
+//! survivor to its own subtree. All wiring lives in
+//! [`crate::coordinator::topology::lower_aggregate`] — this module only
+//! binds survivors to slots (a survivor co-located with the newcomer
+//! becomes the root, so the result is stored without a self-link).
 
 use std::time::Duration;
 
 use crate::backend::BackendHandle;
 use crate::cluster::Cluster;
 use crate::coordinator::engine::PlanExecutor;
-use crate::coordinator::plan::{ArchivalPlan, StepId, StepKind};
+use crate::coordinator::plan::ArchivalPlan;
+use crate::coordinator::topology::{lower_aggregate, Topology};
 use crate::storage::BlockKey;
 
 use super::RepairJob;
 
-/// Chained single-block repair: a head→tail line of `Fold` steps over the
-/// survivors, delivering into a `Store` on the newcomer.
+/// Topology-shaped single-block repair: an aggregation of `Fold`/fan-in
+/// `Gemm` steps over the survivors, delivering into the newcomer.
 #[derive(Clone, Debug)]
 pub struct PipelinedRepairJob {
     /// The bound repair.
     pub job: RepairJob,
+    /// Aggregation shape over the k survivors.
+    pub topology: Topology,
 }
 
 impl PipelinedRepairJob {
-    /// Wrap a bound repair in the pipelined lowering.
+    /// Wrap a bound repair in the chain-shaped lowering (the paper-faithful
+    /// Li et al. pipeline).
     pub fn new(job: RepairJob) -> Self {
-        Self { job }
+        Self {
+            job,
+            topology: Topology::Chain,
+        }
+    }
+
+    /// Wrap a bound repair in an arbitrary aggregation shape.
+    pub fn with_topology(job: RepairJob, topology: Topology) -> Self {
+        Self { job, topology }
     }
 
     /// Lower onto the plan IR. A survivor co-located with the newcomer
-    /// (in-place repair) is ordered last and stores the result from its own
-    /// fold (`ξ = ψ`), since the IR expresses locality without self-links;
-    /// otherwise the tail fold streams into a `Store` on the newcomer.
+    /// (in-place repair) takes the root slot and stores the result from
+    /// its own merge (`ξ = ψ`), since the IR expresses locality without
+    /// self-links; otherwise the root streams into a `Store` on the
+    /// newcomer.
     pub fn plan(&self) -> anyhow::Result<ArchivalPlan> {
         let j = &self.job;
         anyhow::ensure!(!j.sources.is_empty(), "repair with no sources");
         anyhow::ensure!(j.psi.len() == j.sources.len(), "ψ/source arity mismatch");
-        let mut plan = ArchivalPlan::new(j.object, j.width, j.buf_bytes, j.block_bytes);
-        let out_key = BlockKey::coded(j.object, j.lost);
-
-        let local_tail = (0..j.sources.len()).find(|&i| j.sources[i].0 == j.newcomer);
-        let mut order: Vec<usize> =
-            (0..j.sources.len()).filter(|&i| j.sources[i].0 != j.newcomer).collect();
-        if let Some(t) = local_tail {
-            order.push(t);
+        let k = j.sources.len();
+        // Slot binding: the co-located survivor (if any) is the root, the
+        // rest keep their order.
+        let colocated = (0..k).find(|&i| j.sources[i].0 == j.newcomer);
+        let mut order: Vec<usize> = Vec::with_capacity(k);
+        if let Some(c) = colocated {
+            order.push(c);
         }
-
-        let mut prev: Option<StepId> = None;
-        for &i in &order {
-            let (node, pos) = j.sources[i];
-            let stores_here = local_tail == Some(i);
-            let id = plan.add_step(
-                node,
-                StepKind::Fold {
-                    locals: vec![BlockKey::coded(j.object, pos)],
-                    psi: vec![j.psi[i]],
-                    xi: vec![if stores_here { j.psi[i] } else { 0 }],
-                    store: stores_here.then_some(out_key),
-                },
-            );
-            if let Some(p) = prev {
-                plan.connect(p, 0, id, 0);
-            }
-            prev = Some(id);
-        }
-        if local_tail.is_none() {
-            let store = plan.add_step(j.newcomer, StepKind::Store { key: out_key });
-            plan.connect(prev.expect("nonempty sources"), 0, store, 0);
-        }
-        Ok(plan)
+        order.extend((0..k).filter(|&i| colocated != Some(i)));
+        let slot_sources: Vec<_> = order.iter().map(|&i| j.sources[i]).collect();
+        let slot_psi: Vec<u32> = order.iter().map(|&i| j.psi[i]).collect();
+        let shape = self.topology.shape(k)?;
+        lower_aggregate(
+            j.object,
+            j.width,
+            &slot_sources,
+            &slot_psi,
+            &shape,
+            j.newcomer,
+            BlockKey::coded(j.object, j.lost),
+            j.buf_bytes,
+            j.block_bytes,
+        )
     }
 }
 
@@ -90,6 +97,7 @@ pub fn run_pipelined_repair(
 mod tests {
     use super::*;
     use crate::backend::Width;
+    use crate::coordinator::plan::StepKind;
     use crate::storage::ObjectId;
 
     fn job(newcomer: usize) -> PipelinedRepairJob {
@@ -111,13 +119,20 @@ mod tests {
         plan.validate().unwrap();
         assert_eq!(plan.len(), 5); // 4 folds + 1 store
         assert_eq!(plan.edges.len(), 4); // a line, no fan-out
-        assert!(plan.steps[..4]
+        let folds: Vec<_> = plan
+            .steps
             .iter()
-            .all(|s| matches!(s.kind, StepKind::Fold { .. })));
-        assert!(matches!(plan.steps[4].kind, StepKind::Store { .. }));
-        assert_eq!(plan.steps[4].node, 9);
+            .filter(|s| matches!(s.kind, StepKind::Fold { .. }))
+            .collect();
+        assert_eq!(folds.len(), 4);
+        let store = plan
+            .steps
+            .iter()
+            .find(|s| matches!(s.kind, StepKind::Store { .. }))
+            .expect("store step");
+        assert_eq!(store.node, 9);
         // intermediate folds relay only (no store, ξ irrelevant)
-        for s in &plan.steps[..4] {
+        for s in &folds {
             match &s.kind {
                 StepKind::Fold { store, .. } => assert!(store.is_none()),
                 _ => unreachable!(),
@@ -127,20 +142,44 @@ mod tests {
 
     #[test]
     fn colocated_survivor_stores_from_its_own_fold() {
-        // newcomer == survivor node 1: it folds last with ξ = ψ and stores;
-        // no separate Store step, no self-link.
+        // newcomer == survivor node 1: it takes the root slot, merges with
+        // ξ = ψ and stores; no separate Store step, no self-link.
         let plan = job(1).plan().unwrap();
         plan.validate().unwrap();
         assert_eq!(plan.len(), 4); // pure fold chain
         assert_eq!(plan.edges.len(), 3);
-        let tail = plan.steps.last().unwrap();
-        assert_eq!(tail.node, 1);
-        match &tail.kind {
-            StepKind::Fold { psi, xi, store, .. } => {
-                assert_eq!(psi, xi);
-                assert!(store.is_some());
-            }
-            other => panic!("expected fold tail, got {other:?}"),
+        let storing: Vec<_> = plan
+            .steps
+            .iter()
+            .filter(|s| matches!(&s.kind, StepKind::Fold { store: Some(_), .. }))
+            .collect();
+        assert_eq!(storing.len(), 1);
+        let root = storing[0];
+        assert_eq!(root.node, 1);
+        match &root.kind {
+            StepKind::Fold { psi, xi, .. } => assert_eq!(psi, xi),
+            other => panic!("expected fold root, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn tree_repair_plan_merges_with_gemm() {
+        let mut j = job(9);
+        j.topology = Topology::Tree { fanout: 2 };
+        let plan = j.plan().unwrap();
+        plan.validate().unwrap();
+        // tree:2 over 4 slots: the root merges two child partials via a
+        // 1-row gemm, slot 1 chains one child, slots 2/3 are leaf folds
+        assert_eq!(plan.len(), 5);
+        let gemms = plan
+            .steps
+            .iter()
+            .filter(|s| matches!(s.kind, StepKind::Gemm { .. }))
+            .count();
+        assert_eq!(gemms, 1);
+        assert!(plan
+            .steps
+            .iter()
+            .any(|s| matches!(s.kind, StepKind::Store { .. }) && s.node == 9));
     }
 }

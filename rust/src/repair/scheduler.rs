@@ -21,12 +21,14 @@ use std::time::Duration;
 
 use crate::backend::BackendHandle;
 use crate::cluster::{Cluster, NodeId};
-use crate::codes::rapidraid::RapidRaidCode;
+use crate::codes::CodeView;
 use crate::coordinator::decode::survey_coded;
 use crate::coordinator::engine::{ChainPolicy, PlanExecutor};
 use crate::coordinator::plan::ArchivalPlan;
+use crate::coordinator::topology::Topology;
 use crate::gf::{GfElem, SliceOps};
 use crate::reliability::{census_survival_prob, nines};
+use crate::resources::GfWork;
 use crate::storage::{ObjectId, ReplicaPlacement};
 
 use super::pipeline::PipelinedRepairJob;
@@ -123,22 +125,32 @@ pub struct RepairScheduler {
     /// Bound on concurrently running repair plans
     /// (`PlanExecutor::run_many_bounded`).
     pub max_concurrent: usize,
+    /// Aggregation shape pipelined repairs are lowered through (ignored by
+    /// the star planner).
+    pub topology: Topology,
 }
 
 impl RepairScheduler {
-    /// Scheduler with the given strategy/trigger and a default concurrency
-    /// bound of 4 repairs at a time.
+    /// Scheduler with the given strategy/trigger, chain-shaped pipelined
+    /// repairs and a default concurrency bound of 4 repairs at a time.
     pub fn new(strategy: RepairStrategy, trigger: RepairTrigger) -> Self {
         Self {
             strategy,
             trigger,
             max_concurrent: 4,
+            topology: Topology::Chain,
         }
     }
 
     /// Override the concurrent-repair bound.
     pub fn with_max_concurrent(mut self, max_concurrent: usize) -> Self {
         self.max_concurrent = max_concurrent.max(1);
+        self
+    }
+
+    /// Substitute the aggregation shape pipelined repairs use.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
         self
     }
 
@@ -149,10 +161,10 @@ impl RepairScheduler {
     /// land in [`RepairReport::unschedulable`] and per-repair execution
     /// failures in [`RepairReport::failed`] — neither aborts the pass, so
     /// one doomed object can never starve the others of repair.
-    pub fn repair<F: GfElem + SliceOps>(
+    pub fn repair<F: GfElem + SliceOps, C: CodeView<F>>(
         &self,
         cluster: &Cluster,
-        code: &RapidRaidCode<F>,
+        code: &C,
         placements: &mut [ReplicaPlacement],
         backend: &BackendHandle,
         policy: &dyn ChainPolicy,
@@ -185,7 +197,15 @@ impl RepairScheduler {
                 }
             }
             match plan_object(
-                cluster, code, policy, self.strategy, p, &avail, &missing, buf_bytes,
+                cluster,
+                code,
+                policy,
+                self.strategy,
+                self.topology,
+                p,
+                &avail,
+                &missing,
+                buf_bytes,
                 block_bytes,
             ) {
                 Ok(planned) => {
@@ -223,11 +243,12 @@ impl RepairScheduler {
 /// best alive off-chain node) and lower it with `strategy`. Any error here
 /// makes the *object* unschedulable; it never aborts the pass.
 #[allow(clippy::too_many_arguments)]
-fn plan_object<F: GfElem + SliceOps>(
+fn plan_object<F: GfElem + SliceOps, C: CodeView<F>>(
     cluster: &Cluster,
-    code: &RapidRaidCode<F>,
+    code: &C,
     policy: &dyn ChainPolicy,
     strategy: RepairStrategy,
+    topology: Topology,
     p: &ReplicaPlacement,
     avail: &[usize],
     missing: &[usize],
@@ -265,9 +286,15 @@ fn plan_object<F: GfElem + SliceOps>(
         let job = RepairJob::from_code(
             code, p.object, &p.chain, pos, newcomer, avail, buf_bytes, block_bytes,
         )?;
+        // ψ = g_lost · G_S⁻¹ just ran (a k×k Gauss-Jordan): charge it to
+        // the newcomer driving the repair, so coefficient derivation
+        // occupies virtual time like every other priced GF operation.
+        cluster.node(newcomer).cpu.charge(&GfWork::invert(job.k()));
         let plan = match strategy {
             RepairStrategy::Star => StarRepairJob::new(job).plan()?,
-            RepairStrategy::Pipelined => PipelinedRepairJob::new(job).plan()?,
+            RepairStrategy::Pipelined => {
+                PipelinedRepairJob::with_topology(job, topology).plan()?
+            }
         };
         planned.push((
             plan,
@@ -287,6 +314,7 @@ mod tests {
     use super::*;
     use crate::backend::{BackendHandle, NativeBackend};
     use crate::cluster::ClusterSpec;
+    use crate::codes::rapidraid::RapidRaidCode;
     use crate::coordinator::engine::{CongestionAwarePolicy, FifoPolicy};
     use crate::coordinator::ingest::ingest_object;
     use crate::coordinator::pipeline::{archive_pipeline, PipelineJob};

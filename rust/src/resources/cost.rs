@@ -20,6 +20,13 @@ pub trait CostModel: Send + Sync + std::fmt::Debug {
     /// Virtual compute time `node` needs to perform `work`.
     fn cost(&self, node: NodeId, work: &GfWork) -> Duration;
 
+    /// Independent compute lanes of `node` (its
+    /// [`CpuMeter`](super::CpuMeter) reserves per core). Read once at
+    /// node spawn; defaults to a single core.
+    fn cores(&self, _node: NodeId) -> usize {
+        1
+    }
+
     /// Model label for reports.
     fn name(&self) -> &'static str;
 }
@@ -108,11 +115,25 @@ impl CostModel for UniformCost {
 /// Heterogeneous hardware: per-node [`NodeProfile`]s scaling a
 /// [`UniformCost`] baseline. Node `i` gets `profiles[i % len]`, so a
 /// short mix (e.g. [`NodeProfile::ec2_mix`]) tiles any cluster size
-/// deterministically.
-#[derive(Clone, Debug)]
+/// deterministically. Individual nodes can be re-profiled at runtime
+/// ([`ProfileCost::set_profile`]) — the long-run harness churns CPU
+/// profiles over epochs the way it churns netem profiles. Overrides swap
+/// *pricing* only: a node's core count is read once at spawn.
+#[derive(Debug)]
 pub struct ProfileCost {
     base: UniformCost,
     profiles: Vec<NodeProfile>,
+    overrides: std::sync::Mutex<std::collections::HashMap<NodeId, NodeProfile>>,
+}
+
+impl Clone for ProfileCost {
+    fn clone(&self) -> Self {
+        Self {
+            base: self.base.clone(),
+            profiles: self.profiles.clone(),
+            overrides: std::sync::Mutex::new(self.overrides.lock().unwrap().clone()),
+        }
+    }
 }
 
 impl ProfileCost {
@@ -123,7 +144,11 @@ impl ProfileCost {
             profiles.iter().all(|p| p.speed > 0.0),
             "profile speeds must be positive"
         );
-        Ok(Self { base, profiles })
+        Ok(Self {
+            base,
+            profiles,
+            overrides: std::sync::Mutex::new(std::collections::HashMap::new()),
+        })
     }
 
     /// Calibrated baseline + the given mix, as a handle.
@@ -131,9 +156,26 @@ impl ProfileCost {
         Ok(Arc::new(Self::new(UniformCost::calibrated(), profiles)?))
     }
 
-    /// The profile charged to `node`.
+    /// The profile charged to `node` (override, else the tiled mix).
     pub fn profile(&self, node: NodeId) -> NodeProfile {
+        if let Some(p) = self.overrides.lock().unwrap().get(&node) {
+            return *p;
+        }
         self.profiles[node % self.profiles.len()]
+    }
+
+    /// Re-profile one node at runtime (CPU churn: a VM migration, thermal
+    /// throttling, a noisy neighbor). Future charges — including work
+    /// already queued on the node's meter but not yet priced — use the
+    /// new speed.
+    pub fn set_profile(&self, node: NodeId, profile: NodeProfile) {
+        assert!(profile.speed > 0.0, "profile speed must be positive");
+        self.overrides.lock().unwrap().insert(node, profile);
+    }
+
+    /// Drop a node's override, restoring its tiled mix profile.
+    pub fn reset_profile(&self, node: NodeId) {
+        self.overrides.lock().unwrap().remove(&node);
     }
 }
 
@@ -143,6 +185,10 @@ impl CostModel for ProfileCost {
             return Duration::ZERO;
         }
         Duration::from_secs_f64(self.base.secs(work) / self.profile(node).speed)
+    }
+
+    fn cores(&self, node: NodeId) -> usize {
+        self.profile(node).cores
     }
 
     fn name(&self) -> &'static str {
@@ -206,7 +252,31 @@ mod tests {
         let neg = NodeProfile {
             name: "neg",
             speed: -1.0,
+            cores: 1,
         };
         assert!(ProfileCost::new(UniformCost::calibrated(), vec![neg]).is_err());
+    }
+
+    #[test]
+    fn profile_cost_reports_cores_and_defaults_to_one() {
+        let m = ProfileCost::new(UniformCost::calibrated(), NodeProfile::ec2_mix()).unwrap();
+        assert_eq!(m.cores(0), 1); // small
+        assert_eq!(m.cores(2), 2); // large is multicore
+        assert_eq!(UniformCost::calibrated().cores(7), 1); // trait default
+        assert_eq!(ZeroCost.cores(0), 1);
+    }
+
+    #[test]
+    fn runtime_override_swaps_pricing_and_restores() {
+        let m = ProfileCost::new(UniformCost::calibrated(), vec![NodeProfile::EC2_SMALL]).unwrap();
+        let w = GfWork::mac(1 << 20);
+        let before = m.cost(3, &w);
+        m.set_profile(3, NodeProfile::THINCLIENT); // half speed ⇒ double cost
+        assert_eq!(m.cost(3, &w), before * 2);
+        assert_eq!(m.profile(3).name, "thinclient");
+        // other nodes untouched
+        assert_eq!(m.cost(4, &w), before);
+        m.reset_profile(3);
+        assert_eq!(m.cost(3, &w), before);
     }
 }

@@ -2,14 +2,18 @@
 //! compute twin of the NIC [`RateLimiter`](crate::cluster::RateLimiter).
 //!
 //! A node's workers all charge the same meter, so concurrent data-plane
-//! commands contend for the node's (single) simulated core with the same
+//! commands contend for the node's simulated cores with the same
 //! cumulative-FIFO semantics that make NIC bandwidth sharing honest:
-//! reservations serialize through a mutex, the blocking happens on the
-//! clock, and under a `SimClock` a charge is a discrete event with zero
-//! wall cost. A zero-priced charge ([`ZeroCost`](super::ZeroCost), or
-//! genuinely zero work) returns without touching the reservation state,
-//! so the default configuration is tick-for-tick identical to the
-//! pre-resource-model dataplane.
+//! reservations serialize through a mutex onto the earliest-free core
+//! lane (the model's [`CostModel::cores`](super::CostModel::cores) for
+//! the node, read once at spawn — 1 unless the node's profile says
+//! otherwise), the blocking happens on the clock, and under a `SimClock`
+//! a charge is a discrete event with zero wall cost. On a multi-core
+//! profile (e.g. `EC2_LARGE`) concurrent Gemm rows and Fold frames
+//! genuinely overlap instead of queueing behind one core. A zero-priced
+//! charge ([`ZeroCost`](super::ZeroCost), or genuinely zero work) returns
+//! without touching the reservation state, so the default configuration
+//! is tick-for-tick identical to the pre-resource-model dataplane.
 //!
 //! Determinism caveat (the same one the NIC limiter carries): the meter's
 //! *aggregate* schedule is order-independent — the sum of reservations
@@ -30,24 +34,29 @@ use crate::cluster::NodeId;
 use super::cost::CostModelHandle;
 use super::work::GfWork;
 
-/// Cumulative CPU-time reservation for one node.
+/// Cumulative CPU-time reservation for one node's core lanes.
 pub struct CpuMeter {
     clock: ClockHandle,
     model: CostModelHandle,
     node: NodeId,
-    /// Tick at which the node's core becomes free.
-    next_free: Mutex<Tick>,
+    cores: usize,
+    /// Tick at which each core lane becomes free.
+    lanes: Mutex<Vec<Tick>>,
 }
 
 impl CpuMeter {
-    /// Meter for `node`, pricing work with `model` on `clock`.
+    /// Meter for `node`, pricing work with `model` on `clock`. The lane
+    /// count is `model.cores(node)` at construction time (profile churn
+    /// later swaps pricing, never lanes).
     pub fn new(clock: ClockHandle, model: CostModelHandle, node: NodeId) -> Self {
-        let next_free = clock.now();
+        let cores = model.cores(node).max(1);
+        let now = clock.now();
         Self {
             clock,
             model,
             node,
-            next_free: Mutex::new(next_free),
+            cores,
+            lanes: Mutex::new(vec![now; cores]),
         }
     }
 
@@ -61,21 +70,39 @@ impl CpuMeter {
         self.node
     }
 
-    /// Charge `work`: reserve the core for its priced duration (FIFO
-    /// behind earlier charges) and sleep until the reservation ends.
-    /// Returns the compute time charged — `ZERO` charges are free and do
-    /// not serialize.
+    /// Number of core lanes this meter reserves over.
+    pub fn cores(&self) -> usize {
+        self.cores
+    }
+
+    /// How long a new charge would queue before any core frees up — the
+    /// compute analogue of the NIC load signal, read by placement
+    /// policies (`ZERO` on an idle or never-charged meter).
+    pub fn backlog(&self) -> Tick {
+        let lanes = self.lanes.lock().unwrap();
+        let earliest = *lanes.iter().min().expect("at least one lane");
+        earliest.saturating_sub(self.clock.now())
+    }
+
+    /// Charge `work`: reserve the earliest-free core lane for its priced
+    /// duration (FIFO behind earlier charges on that lane) and sleep until
+    /// the reservation ends. Returns the compute time charged — `ZERO`
+    /// charges are free and do not serialize.
     pub fn charge(&self, work: &GfWork) -> Tick {
         let cost = self.model.cost(self.node, work);
         if cost.is_zero() {
             return Tick::ZERO;
         }
         let done = {
-            let mut next = self.next_free.lock().unwrap();
+            let mut lanes = self.lanes.lock().unwrap();
             let now = self.clock.now();
-            let start = if *next > now { *next } else { now };
+            // earliest-free lane; lowest index wins ties deterministically
+            let lane = (0..lanes.len())
+                .min_by_key(|&i| lanes[i])
+                .expect("at least one lane");
+            let start = if lanes[lane] > now { lanes[lane] } else { now };
             let done = start + cost;
-            *next = done;
+            lanes[lane] = done;
             done
         };
         self.clock.sleep_until(done);
@@ -140,5 +167,50 @@ mod tests {
         let b = fast.charge(&w);
         assert_eq!(a, b * 4);
         assert_eq!(slow.node(), 0);
+        assert_eq!(slow.cores(), 1);
+        assert_eq!(fast.cores(), 2, "large profile is multicore");
+    }
+
+    #[test]
+    fn multicore_meter_overlaps_concurrent_charges() {
+        use crate::resources::{CostModel, NodeProfile, ProfileCost, UniformCost};
+        // one-core twin: two 1-second charges serialize to 2 s; the
+        // two-core meter finishes both in 1 s of virtual time.
+        let run = |cores: usize| -> Duration {
+            let clock = SimClock::handle();
+            let profile = NodeProfile::custom("lab", 1.0).with_cores(cores);
+            let model: Arc<dyn CostModel> =
+                Arc::new(ProfileCost::new(UniformCost::calibrated(), vec![profile]).unwrap());
+            let m = Arc::new(CpuMeter::new(clock.clone(), model, 0));
+            // Busy tokens created BEFORE the spawns pin virtual time at 0
+            // until both threads have issued their charge, so the overlap
+            // is exercised deterministically (the node worker pattern).
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let m = m.clone();
+                    let token = crate::clock::BusyToken::new(&clock);
+                    std::thread::spawn(move || {
+                        let _busy = token.bind();
+                        m.charge(&GfWork::mac(250_000_000)); // 1 s at 250 MB/s
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            clock.now()
+        };
+        assert_eq!(run(1), Duration::from_secs(2));
+        assert_eq!(run(2), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn backlog_reports_queued_compute() {
+        let clock = SimClock::handle();
+        let m = CpuMeter::new(clock.clone(), UniformCost::handle(), 0);
+        assert_eq!(m.backlog(), Duration::ZERO, "idle meter has no backlog");
+        m.charge(&GfWork::mac(250_000_000)); // sleeps until t=1s
+        // after the charge completes the lane frees exactly at `now`
+        assert_eq!(m.backlog(), Duration::ZERO);
     }
 }

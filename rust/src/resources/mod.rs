@@ -26,12 +26,17 @@
 //!   through [`NodeProfile`]s (EC2 small/medium/large classes).
 //! * [`CpuMeter`] — the compute twin of the NIC
 //!   [`RateLimiter`](crate::cluster::RateLimiter): one per node,
-//!   cumulative FIFO reservation of the node's (single) simulated core.
-//!   Every data-plane worker charges its frame's work *before* forwarding
-//!   the result, so compute occupies virtual time in the middle of the
-//!   pipeline — exactly where it throttles a real chain — and concurrent
-//!   workers on one node contend for the core like they contend for the
-//!   NIC.
+//!   cumulative FIFO reservation over the node's core lanes
+//!   ([`CostModel::cores`], from its profile — multi-core profiles let
+//!   concurrent commands genuinely overlap). Every data-plane worker
+//!   charges its frame's work *before* forwarding the result, so compute
+//!   occupies virtual time in the middle of the pipeline — exactly where
+//!   it throttles a real chain — and concurrent workers on one node
+//!   contend for the cores like they contend for the NIC. The meter's
+//!   `backlog()` is the compute load signal placement policies rank by.
+//!   [`ProfileCost::set_profile`] re-prices a node at runtime (the
+//!   long-run harness churns CPU profiles over epochs like netem
+//!   profiles).
 //!
 //! There is no parallel "network-only" accounting path left: every worker
 //! always charges its meter, and `ZeroCost` simply makes the charge free.

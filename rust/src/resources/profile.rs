@@ -13,29 +13,39 @@
 pub struct NodeProfile {
     /// Class label used in reports (`ec2-small`, …).
     pub name: &'static str,
-    /// Speed multiplier over the calibrated baseline: 1.0 = the EC2
-    /// small instance the defaults are calibrated to; 2.0 halves every
-    /// compute charge. Must be > 0.
+    /// Per-core speed multiplier over the calibrated baseline: 1.0 = one
+    /// core of the EC2 small instance the defaults are calibrated to; 2.0
+    /// halves every compute charge. Must be > 0.
     pub speed: f64,
+    /// Independent charge lanes: how many data-plane workers of the node
+    /// can occupy compute simultaneously before reservations queue
+    /// (`CpuMeter` reserves per core). Must be ≥ 1. Read once at node
+    /// spawn — profile churn swaps pricing, not the lane count.
+    pub cores: usize,
 }
 
 impl NodeProfile {
-    /// EC2 small instance — the calibration baseline (speed 1.0).
+    /// EC2 small instance — the calibration baseline (speed 1.0, 1 core).
     pub const EC2_SMALL: NodeProfile = NodeProfile {
         name: "ec2-small",
         speed: 1.0,
+        cores: 1,
     };
 
     /// EC2 medium class: ~2× the small instance's GF throughput.
     pub const EC2_MEDIUM: NodeProfile = NodeProfile {
         name: "ec2-medium",
         speed: 2.0,
+        cores: 1,
     };
 
-    /// EC2 large class: ~4× the small instance's GF throughput.
+    /// EC2 large class: ~4× the per-core throughput AND a second core, so
+    /// concurrent Gemm rows and Fold frames on a large node genuinely
+    /// overlap instead of queueing on one simulated core.
     pub const EC2_LARGE: NodeProfile = NodeProfile {
         name: "ec2-large",
         speed: 4.0,
+        cores: 2,
     };
 
     /// HP ThinClient (the paper's 50-node testbed): Atom-class, about
@@ -43,12 +53,25 @@ impl NodeProfile {
     pub const THINCLIENT: NodeProfile = NodeProfile {
         name: "thinclient",
         speed: 0.5,
+        cores: 1,
     };
 
-    /// A custom profile (testing stragglers, hypothetical hardware).
+    /// A custom single-core profile (testing stragglers, hypothetical
+    /// hardware).
     pub fn custom(name: &'static str, speed: f64) -> Self {
         assert!(speed > 0.0, "profile speed must be positive");
-        NodeProfile { name, speed }
+        NodeProfile {
+            name,
+            speed,
+            cores: 1,
+        }
+    }
+
+    /// The same profile with a different core count.
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        assert!(cores >= 1, "profiles need at least one core");
+        self.cores = cores;
+        self
     }
 
     /// The heterogeneous EC2 mix used by the Table-II sim preset and the
@@ -80,5 +103,19 @@ mod tests {
         let mix = NodeProfile::ec2_mix();
         assert_eq!(mix.len(), 3);
         assert_eq!(mix[0], NodeProfile::EC2_SMALL);
+    }
+
+    #[test]
+    fn cores_default_to_one_and_large_is_multicore() {
+        assert_eq!(NodeProfile::EC2_SMALL.cores, 1);
+        assert_eq!(NodeProfile::EC2_LARGE.cores, 2);
+        assert_eq!(NodeProfile::custom("x", 1.5).cores, 1);
+        assert_eq!(NodeProfile::custom("x", 1.5).with_cores(4).cores, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one core")]
+    fn zero_cores_rejected() {
+        let _ = NodeProfile::custom("broken", 1.0).with_cores(0);
     }
 }

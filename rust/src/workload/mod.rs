@@ -25,19 +25,22 @@
 use std::io::Write;
 use std::time::Duration;
 
+use std::sync::Arc;
+
 use crate::backend::BackendHandle;
 use crate::clock::{Clock, SimClock};
 use crate::cluster::{Cluster, ClusterSpec, CongestionSpec, NodeId};
 use crate::codes::rapidraid::RapidRaidCode;
-use crate::coordinator::batch::{rotated_chain, run_batch, BatchJob};
+use crate::codes::{CodeView, TopologyCode};
+use crate::coordinator::batch::{pipeline_jobs, rotated_chain, run_batch};
 use crate::coordinator::decode::survey_coded;
 use crate::coordinator::engine::PolicyKind;
 use crate::coordinator::ingest::ingest_object;
-use crate::coordinator::pipeline::PipelineJob;
 use crate::coordinator::reconstruct;
+use crate::coordinator::topology::Topology;
 use crate::gf::Gf256;
 use crate::repair::{RepairScheduler, RepairStrategy, RepairTrigger};
-use crate::resources::NodeProfile;
+use crate::resources::{CostModelHandle, NodeProfile, ProfileCost, UniformCost};
 use crate::storage::{BlockKey, ObjectId, ReplicaPlacement};
 use crate::util::SplitMix64;
 
@@ -94,6 +97,18 @@ pub struct LongRunConfig {
     /// calibrated `UniformCost` baseline — long traces then exercise
     /// compute stragglers, not just congested NICs.
     pub profiles: Vec<NodeProfile>,
+    /// Per-epoch probability of toggling a CPU-profile override: one
+    /// roaming node is re-priced as a `THINCLIENT`-class straggler (then
+    /// restored on the next toggle), exercising placement re-ranking
+    /// mid-trace the way netem churn does. The toggle schedule (and its
+    /// rng draws) advances even when `profiles` is empty — the override
+    /// is then a pricing no-op but sweep cells with and without cost
+    /// models keep identical crash/congestion schedules per seed.
+    pub p_cpu_churn: f64,
+    /// Pipeline shape used for every archival AND every pipelined repair
+    /// of the trace; decode verification runs through the matching
+    /// topology-composed generator.
+    pub topology: Topology,
 }
 
 impl LongRunConfig {
@@ -121,6 +136,8 @@ impl LongRunConfig {
             max_concurrent_repairs: 4,
             policy: PolicyKind::CongestionAware,
             profiles: Vec::new(),
+            p_cpu_churn: 0.25,
+            topology: Topology::Chain,
         }
     }
 
@@ -132,6 +149,7 @@ impl LongRunConfig {
             p_crash: 1.0,
             p_congest: 0.0,
             max_down: 1,
+            p_cpu_churn: 0.0,
             ..Self::paper_scale()
         }
     }
@@ -140,6 +158,12 @@ impl LongRunConfig {
     /// [`LongRunConfig::profiles`]).
     pub fn with_profiles(mut self, profiles: Vec<NodeProfile>) -> Self {
         self.profiles = profiles;
+        self
+    }
+
+    /// Substitute the pipeline shape (see [`LongRunConfig::topology`]).
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
         self
     }
 }
@@ -159,6 +183,10 @@ pub struct EpochStats {
     pub congested: Option<NodeId>,
     /// Node whose congestion profile was toggled off, if any.
     pub uncongested: Option<NodeId>,
+    /// Node re-priced as a CPU straggler this epoch, if any.
+    pub cpu_churned: Option<NodeId>,
+    /// Node whose CPU-profile override was restored this epoch, if any.
+    pub cpu_restored: Option<NodeId>,
     /// Blocks successfully repaired by this epoch's scheduler pass.
     pub repaired: usize,
     /// Repairs that failed at execution (retried next pass).
@@ -216,7 +244,7 @@ impl LongRunReport {
 /// object after the hypothetical crash.
 fn safe_to_crash(
     cluster: &Cluster,
-    code: &RapidRaidCode<Gf256>,
+    code: &TopologyCode<Gf256>,
     placements: &[ReplicaPlacement],
     pick: NodeId,
 ) -> bool {
@@ -242,35 +270,50 @@ pub fn run_long_run(
     anyhow::ensure!(cfg.k < cfg.n, "need redundancy (k < n)");
     anyhow::ensure!(cfg.epoch_secs > 0, "epochs must have positive length");
     anyhow::ensure!(cfg.objects > 0, "need at least one object");
+    cfg.topology.validate()?;
 
     let clock = SimClock::handle();
     let mut spec = ClusterSpec::tpc(cfg.nodes).with_clock(clock.clone());
-    if !cfg.profiles.is_empty() {
-        spec = spec.with_profiles(cfg.profiles.clone())?;
+    // A concrete ProfileCost handle is kept when profiles are configured,
+    // so the epoch loop can churn per-node CPU overrides at runtime.
+    let profile_cost: Option<Arc<ProfileCost>> = if cfg.profiles.is_empty() {
+        None
+    } else {
+        Some(Arc::new(ProfileCost::new(
+            UniformCost::calibrated(),
+            cfg.profiles.clone(),
+        )?))
+    };
+    if let Some(pc) = &profile_cost {
+        let handle: CostModelHandle = pc.clone();
+        spec = spec.with_cost(handle);
     }
     let cluster = Cluster::start(spec);
     let policy = cfg.policy.policy();
     let code = RapidRaidCode::<Gf256>::with_seed(cfg.n, cfg.k, cfg.code_seed)?;
+    // Every consumer below (crash safety, repair, decode verification)
+    // works against the topology-composed generator.
+    let code = TopologyCode::new(code, cfg.topology.shape(cfg.n)?)?;
 
-    // Archive the fleet: rotated chains spread the load over the cluster.
+    // Archive the fleet: rotated bindings spread the load over the cluster.
     let spread = (cfg.nodes / cfg.objects).max(1);
     let mut placements = Vec::with_capacity(cfg.objects);
     let mut originals = Vec::with_capacity(cfg.objects);
-    let mut jobs = Vec::with_capacity(cfg.objects);
     for i in 0..cfg.objects {
         let object = ObjectId(0x10_0000 + i as u64);
         let chain = rotated_chain(cfg.nodes, cfg.n, i * spread);
         let placement = ReplicaPlacement::new(object, cfg.k, chain)?;
         let blocks = ingest_object(&cluster, &placement, cfg.block_bytes)?;
-        jobs.push(BatchJob::Pipeline(PipelineJob::from_code(
-            &code,
-            &placement,
-            cfg.buf_bytes,
-            cfg.block_bytes,
-        )?));
         originals.push(blocks);
         placements.push(placement);
     }
+    let jobs = pipeline_jobs(
+        code.code(),
+        &placements,
+        cfg.topology,
+        cfg.buf_bytes,
+        cfg.block_bytes,
+    )?;
     run_batch(&cluster, backend, &jobs)?;
     // Post-migration state: coded blocks are the only redundancy.
     for p in &placements {
@@ -280,10 +323,12 @@ pub fn run_long_run(
     }
 
     let sched = RepairScheduler::new(cfg.strategy, cfg.trigger)
-        .with_max_concurrent(cfg.max_concurrent_repairs);
+        .with_max_concurrent(cfg.max_concurrent_repairs)
+        .with_topology(cfg.topology);
     let mut rng = SplitMix64::new(cfg.seed);
     let mut down: Vec<(NodeId, u64)> = Vec::new(); // (node, revive epoch)
     let mut congested: Option<NodeId> = None;
+    let mut cpu_churned: Option<NodeId> = None;
 
     let t0 = clock.now();
     let epoch_len = Duration::from_secs(cfg.epoch_secs);
@@ -351,6 +396,32 @@ pub fn run_long_run(
             }
         }
 
+        // 3b. CPU-profile churn: one straggler override roams the cluster
+        // exactly like the netem profile. The toggle state machine AND its
+        // rng draws advance identically whether or not a cost model is
+        // configured — only the pricing side effect is gated — so every
+        // sweep cell of one seed follows the same schedule and the cost
+        // axis stays isolated.
+        if rng.chance(cfg.p_cpu_churn) {
+            match cpu_churned.take() {
+                Some(id) => {
+                    if let Some(pc) = &profile_cost {
+                        pc.reset_profile(id);
+                    }
+                    stats.cpu_restored = Some(id);
+                }
+                None => {
+                    let alive = cluster.alive_nodes();
+                    let id = alive[rng.below(alive.len() as u64) as usize];
+                    if let Some(pc) = &profile_cost {
+                        pc.set_profile(id, NodeProfile::THINCLIENT);
+                    }
+                    cpu_churned = Some(id);
+                    stats.cpu_churned = Some(id);
+                }
+            }
+        }
+
         // 4. repair pass
         let pass = sched.repair(
             &cluster,
@@ -378,13 +449,15 @@ pub fn run_long_run(
         if let Some(o) = out.as_deref_mut() {
             writeln!(
                 o,
-                "epoch {:>4} @ {:>6.1}s: crash={:?} revive={:?} congest={:?}/{:?} repaired={} failed={} deferred={} missing={}",
+                "epoch {:>4} @ {:>6.1}s: crash={:?} revive={:?} congest={:?}/{:?} cpu={:?}/{:?} repaired={} failed={} deferred={} missing={}",
                 stats.epoch,
                 stats.at.as_secs_f64(),
                 stats.crashed,
                 stats.revived,
                 stats.congested,
                 stats.uncongested,
+                stats.cpu_churned,
+                stats.cpu_restored,
                 stats.repaired,
                 stats.repair_failures,
                 stats.deferred,
@@ -443,7 +516,35 @@ mod tests {
             max_concurrent_repairs: 2,
             policy: PolicyKind::CongestionAware,
             profiles: Vec::new(),
+            p_cpu_churn: 0.0,
+            topology: Topology::Chain,
         }
+    }
+
+    #[test]
+    fn tree_topology_trace_repairs_and_stays_decodable() {
+        // Same tiny trace archived AND repaired over tree:2 pipelines:
+        // every epoch's pipelined repairs aggregate over the tree shape and
+        // the final decode runs through the topology generator.
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let cfg = tiny().with_topology(Topology::Tree { fanout: 2 });
+        let report = run_long_run(&cfg, &backend, None).unwrap();
+        assert!(report.crashes_total >= 1);
+        assert!(report.repairs_total >= 1, "{}", report.summary());
+        assert!(report.all_decodable(), "{}", report.summary());
+    }
+
+    #[test]
+    fn cpu_churn_toggles_and_stays_decodable() {
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let mut cfg = tiny().with_profiles(NodeProfile::ec2_mix());
+        cfg.p_cpu_churn = 1.0; // toggle every epoch
+        let report = run_long_run(&cfg, &backend, None).unwrap();
+        let churns = report.epochs.iter().filter(|e| e.cpu_churned.is_some()).count();
+        let restores = report.epochs.iter().filter(|e| e.cpu_restored.is_some()).count();
+        assert!(churns >= 1, "churn never fired");
+        assert!(restores >= 1, "override never restored");
+        assert!(report.all_decodable(), "{}", report.summary());
     }
 
     #[test]

@@ -1,14 +1,17 @@
 //! `rapidraid sweep`: grid a long-run failure trace over repair triggers ×
-//! chain policies × CPU cost profiles and print a comparison table.
+//! chain policies × CPU cost profiles × pipeline topologies and print a
+//! comparison table.
 //!
 //! Every cell of the grid is one full [`run_long_run`] trace (same seed,
 //! same crash/revive/congestion schedule — the schedule is a fixed
 //! function of the seed, so the cells are directly comparable) with the
-//! trigger, the newcomer-ranking policy and the per-node compute profiles
-//! swapped. This is ROADMAP's "sweep repair schedules / placement
-//! policies over long traces", now with the resource model as the third
-//! axis: a repair schedule that looks fine on free compute can lose its
-//! margin when the newcomers are the slow nodes.
+//! trigger, the newcomer-ranking policy, the per-node compute profiles
+//! and the archival/repair pipeline shape swapped. This is ROADMAP's
+//! "sweep repair schedules / placement policies over long traces", with
+//! the resource model and the topology as further axes: a repair schedule
+//! that looks fine on free compute can lose its margin when the newcomers
+//! are the slow nodes, and a chain that looks fine on uniform hardware
+//! loses to a tree once stragglers appear.
 
 use std::io::Write;
 use std::time::Duration;
@@ -16,6 +19,7 @@ use std::time::Duration;
 use crate::backend::BackendHandle;
 use crate::clock::{Clock, RealClock};
 use crate::coordinator::engine::PolicyKind;
+use crate::coordinator::topology::Topology;
 use crate::metrics::{BenchJson, Candle};
 use crate::repair::RepairTrigger;
 use crate::resources::NodeProfile;
@@ -33,12 +37,15 @@ pub struct SweepConfig {
     pub policies: Vec<PolicyKind>,
     /// Named CPU profile mixes to sweep (empty mix = free compute).
     pub profiles: Vec<(&'static str, Vec<NodeProfile>)>,
+    /// Pipeline shapes to sweep (archival and pipelined repair both use
+    /// the cell's shape).
+    pub topologies: Vec<Topology>,
 }
 
 impl SweepConfig {
     /// The full default grid: Eager / Lazy(2) / ReliabilityBudget(2×9)
     /// triggers × Fifo / CongestionAware policies × free / uniform /
-    /// heterogeneous compute — 18 traces.
+    /// heterogeneous compute × chain / tree:2 shapes — 36 traces.
     pub fn default_grid(base: LongRunConfig) -> Self {
         Self {
             base,
@@ -56,11 +63,12 @@ impl SweepConfig {
                 ("uniform", vec![NodeProfile::EC2_SMALL]),
                 ("ec2-mix", NodeProfile::ec2_mix()),
             ],
+            topologies: vec![Topology::Chain, Topology::Tree { fanout: 2 }],
         }
     }
 
     /// CI smoke grid: one trigger, both policies, free vs heterogeneous
-    /// compute — 4 short traces.
+    /// compute, chain vs tree — 8 short traces.
     pub fn smoke() -> Self {
         let mut grid = Self::default_grid(LongRunConfig::smoke());
         grid.triggers = vec![RepairTrigger::Eager];
@@ -78,6 +86,8 @@ pub struct SweepRow {
     pub policy: PolicyKind,
     /// Profile-mix label of this cell.
     pub cost: &'static str,
+    /// Pipeline shape of this cell.
+    pub topology: Topology,
     /// The trace's outcome.
     pub report: LongRunReport,
     /// Wall time the cell took.
@@ -93,16 +103,21 @@ pub fn run_sweep(
     out: &mut dyn Write,
 ) -> anyhow::Result<(Vec<SweepRow>, BenchJson)> {
     anyhow::ensure!(
-        !cfg.triggers.is_empty() && !cfg.policies.is_empty() && !cfg.profiles.is_empty(),
+        !cfg.triggers.is_empty()
+            && !cfg.policies.is_empty()
+            && !cfg.profiles.is_empty()
+            && !cfg.topologies.is_empty(),
         "sweep grid has an empty axis"
     );
     let wall = RealClock::new();
+    let cells =
+        cfg.triggers.len() * cfg.policies.len() * cfg.profiles.len() * cfg.topologies.len();
     let mut json = BenchJson::new("sweep")
         .param("nodes", cfg.base.nodes)
         .param("objects", cfg.base.objects)
         .param("virtual_secs", cfg.base.virtual_secs)
         .param("seed", cfg.base.seed)
-        .param("cells", cfg.triggers.len() * cfg.policies.len() * cfg.profiles.len());
+        .param("cells", cells);
     writeln!(
         out,
         "# sweep — {} nodes, {} objects, {} virtual secs per cell, seed {}",
@@ -110,47 +125,52 @@ pub fn run_sweep(
     )?;
     writeln!(
         out,
-        "{:>18} {:>17} {:>8} {:>8} {:>8} {:>9} {:>8} {:>10} {:>8}",
-        "trigger", "policy", "cost", "crashes", "repairs", "deferred", "missing", "decodable", "wall_s"
+        "{:>18} {:>17} {:>8} {:>10} {:>8} {:>8} {:>9} {:>8} {:>10} {:>8}",
+        "trigger", "policy", "cost", "topology", "crashes", "repairs", "deferred", "missing", "decodable", "wall_s"
     )?;
     let mut rows = Vec::new();
     for &trigger in &cfg.triggers {
         for &policy in &cfg.policies {
             for (cost, profiles) in &cfg.profiles {
-                let cost = *cost;
-                let mut cell = cfg.base.clone();
-                cell.trigger = trigger;
-                cell.policy = policy;
-                cell.profiles = profiles.clone();
-                let t0 = wall.now();
-                let report = run_long_run(&cell, backend, None)?;
-                let cell_wall = wall.now().saturating_sub(t0);
-                let deferred: usize = report.epochs.iter().map(|e| e.deferred).sum();
-                writeln!(
-                    out,
-                    "{:>18} {:>17} {:>8} {:>8} {:>8} {:>9} {:>8} {:>7}/{:<2} {:>8.2}",
-                    trigger.to_string(),
-                    policy.name(),
-                    cost,
-                    report.crashes_total,
-                    report.repairs_total,
-                    deferred,
-                    report.final_missing,
-                    report.objects_decodable,
-                    report.objects_total,
-                    cell_wall.as_secs_f64(),
-                )?;
-                json.series.push(Candle {
-                    name: format!("{trigger}/{}/{cost}", policy.name()),
-                    samples: vec![report.virtual_elapsed],
-                });
-                rows.push(SweepRow {
-                    trigger,
-                    policy,
-                    cost,
-                    report,
-                    wall: cell_wall,
-                });
+                for &topology in &cfg.topologies {
+                    let cost = *cost;
+                    let mut cell = cfg.base.clone();
+                    cell.trigger = trigger;
+                    cell.policy = policy;
+                    cell.profiles = profiles.clone();
+                    cell.topology = topology;
+                    let t0 = wall.now();
+                    let report = run_long_run(&cell, backend, None)?;
+                    let cell_wall = wall.now().saturating_sub(t0);
+                    let deferred: usize = report.epochs.iter().map(|e| e.deferred).sum();
+                    writeln!(
+                        out,
+                        "{:>18} {:>17} {:>8} {:>10} {:>8} {:>8} {:>9} {:>8} {:>7}/{:<2} {:>8.2}",
+                        trigger.to_string(),
+                        policy.name(),
+                        cost,
+                        topology.to_string(),
+                        report.crashes_total,
+                        report.repairs_total,
+                        deferred,
+                        report.final_missing,
+                        report.objects_decodable,
+                        report.objects_total,
+                        cell_wall.as_secs_f64(),
+                    )?;
+                    json.series.push(Candle {
+                        name: format!("{trigger}/{}/{cost}/{topology}", policy.name()),
+                        samples: vec![report.virtual_elapsed],
+                    });
+                    rows.push(SweepRow {
+                        trigger,
+                        policy,
+                        cost,
+                        topology,
+                        report,
+                        wall: cell_wall,
+                    });
+                }
             }
         }
     }
@@ -186,6 +206,8 @@ mod tests {
             max_concurrent_repairs: 2,
             policy: PolicyKind::CongestionAware,
             profiles: Vec::new(),
+            p_cpu_churn: 0.0,
+            topology: Topology::Chain,
         }
     }
 
@@ -193,20 +215,22 @@ mod tests {
     fn tiny_grid_covers_every_cell_losslessly() {
         let backend: BackendHandle = Arc::new(NativeBackend::new());
         let mut grid = SweepConfig::default_grid(tiny_base());
-        // keep the test quick: 1 trigger × 2 policies × 2 costs
+        // keep the test quick: 1 trigger × 2 policies × 2 costs × 2 shapes
         grid.triggers = vec![RepairTrigger::Eager];
         grid.profiles = vec![("free", Vec::new()), ("ec2-mix", NodeProfile::ec2_mix())];
         let mut out = Vec::new();
         let (rows, json) = run_sweep(&grid, &backend, &mut out).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 8);
         for r in &rows {
             assert!(r.report.all_decodable(), "{}", r.report.summary());
             assert!(r.report.crashes_total >= 1);
         }
-        assert_eq!(json.series.len(), 4);
+        assert!(rows.iter().any(|r| r.topology == Topology::Tree { fanout: 2 }));
+        assert_eq!(json.series.len(), 8);
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("eager") && text.contains("congestion-aware"), "{text}");
         assert!(text.contains("ec2-mix"));
+        assert!(text.contains("tree:2") && text.contains("chain"), "{text}");
     }
 
     #[test]

@@ -16,7 +16,10 @@ use rapidraid::backend::{BackendHandle, NativeBackend};
 use rapidraid::clock::SimClock;
 use rapidraid::cluster::{Cluster, ClusterSpec};
 use rapidraid::codes::rapidraid::RapidRaidCode;
-use rapidraid::coordinator::{ingest_object, survey_coded, PipelineJob, PlanExecutor};
+use rapidraid::codes::TopologyCode;
+use rapidraid::coordinator::{
+    ingest_object, survey_coded, PipelineJob, PlanExecutor, Topology,
+};
 use rapidraid::gf::Gf256;
 use rapidraid::metrics::Recorder;
 use rapidraid::repair::{PipelinedRepairJob, RepairJob};
@@ -38,7 +41,7 @@ struct RunOutcome {
     spans: Vec<(String, Vec<Duration>)>,
 }
 
-fn run_once() -> RunOutcome {
+fn run_once(topology: Topology) -> RunOutcome {
     // tpc preset: non-zero latency AND jitter, so the seeded-jitter path is
     // exercised by the determinism check too.
     let cluster = Cluster::start(ClusterSpec::tpc(N + 1).with_clock(SimClock::handle()));
@@ -46,19 +49,22 @@ fn run_once() -> RunOutcome {
     let placement = ReplicaPlacement::new(object, K, (0..N).collect()).unwrap();
     ingest_object(&cluster, &placement, BLOCK).unwrap();
     let code = RapidRaidCode::<Gf256>::with_seed(N, K, 5).unwrap();
+    // repair coefficients must come from the shape-composed generator
+    let tcode = TopologyCode::new(code.clone(), topology.shape(N).unwrap()).unwrap();
     let backend: BackendHandle = Arc::new(NativeBackend::new());
 
     let rec = Recorder::new();
     let exec = PlanExecutor::new(&cluster, backend.clone()).with_spans(&rec, "rr/");
-    let job = PipelineJob::from_code(&code, &placement, BUF, BLOCK).unwrap();
+    let job =
+        PipelineJob::from_code_with_topology(&code, &placement, topology, BUF, BLOCK).unwrap();
     let t_archive = exec.run(&job.plan().unwrap()).unwrap();
 
-    // crash the chain tail, repair onto the spare node N
+    // crash the pipeline tail position, repair onto the spare node N
     let lost = N - 1;
     cluster.fail_node(lost);
     let (avail, bb) = survey_coded(&cluster, &placement.chain, object);
     let rjob = RepairJob::from_code(
-        &code,
+        &tcode,
         object,
         &placement.chain,
         lost,
@@ -68,7 +74,9 @@ fn run_once() -> RunOutcome {
         bb,
     )
     .unwrap();
-    let t_repair = exec.run(&PipelinedRepairJob::new(rjob).plan().unwrap()).unwrap();
+    let t_repair = exec
+        .run(&PipelinedRepairJob::with_topology(rjob, topology).plan().unwrap())
+        .unwrap();
 
     let mut coded = Vec::with_capacity(N);
     for pos in 0..N {
@@ -96,7 +104,9 @@ fn run_once() -> RunOutcome {
 
 #[test]
 fn same_seed_same_bytes_and_same_virtual_times() {
-    let (a, b) = with_timeout(120, || (run_once(), run_once()));
+    let (a, b) = with_timeout(120, || {
+        (run_once(Topology::Chain), run_once(Topology::Chain))
+    });
     assert_eq!(a.coded, b.coded, "coded blocks diverged between runs");
     assert_eq!(
         a.durations, b.durations,
@@ -110,12 +120,27 @@ fn same_seed_same_bytes_and_same_virtual_times() {
 }
 
 #[test]
+fn tree_run_same_seed_same_bytes_and_same_virtual_times() {
+    // The fan-out path (one fold feeding two subtrees, tree-shaped repair
+    // aggregation) must be exactly as deterministic as the chain.
+    let topo = Topology::Tree { fanout: 2 };
+    let (a, b) = with_timeout(120, || (run_once(topo), run_once(topo)));
+    assert_eq!(a.coded, b.coded, "tree coded blocks diverged between runs");
+    assert_eq!(
+        a.durations, b.durations,
+        "tree virtual times diverged — wall-clock leakage on the fan-out path?"
+    );
+    assert_eq!(a.spans, b.spans, "tree per-stage virtual spans diverged");
+    assert!(a.durations.iter().all(|d| *d > Duration::ZERO));
+}
+
+#[test]
 fn archival_virtual_time_matches_pipeline_model_shape() {
     // Not a strict equality (jitter is seeded but non-zero), but the
     // pipelined archival of an 11×128 KiB object over 1 Gbps must land in
     // the right ballpark: ≥ one block-time, well under k serialized
     // block-times. Deterministic, so the bounds can be tight-ish.
-    let out = with_timeout(120, run_once);
+    let out = with_timeout(120, || run_once(Topology::Chain));
     let block_time = Duration::from_secs_f64(BLOCK as f64 / 125e6);
     assert!(
         out.durations[0] >= block_time,

@@ -1,0 +1,212 @@
+//! Topology acceptance properties:
+//!
+//! 1. **Lowering equivalence** — for random (n, k, seed) RapidRAID codes
+//!    over GF(2^8) and GF(2^16), the distributed pipeline of every shape
+//!    (chain, tree:2, tree:3, hybrid:2:2) produces codewords
+//!    byte-identical to the atomic encode through the topology-composed
+//!    generator, and every *independent* k-subset of the stored blocks
+//!    decodes back to the object (dependent subsets are rejected).
+//! 2. **Straggler isolation** — under `ProfileCost`, slowing the pipeline
+//!    head/root hurts the chain strictly more than the fanout-2 tree: the
+//!    chain re-paces all n stages behind the straggler, the tree only the
+//!    root's own work (its children are already paced by the fan-out
+//!    uplink).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::cluster::{Cluster, ClusterSpec};
+use rapidraid::codes::rapidraid::RapidRaidCode;
+use rapidraid::codes::subsets::Combinations;
+use rapidraid::codes::{DecodeError, TopologyCode};
+use rapidraid::coordinator::{archive_pipeline, ingest_object, PipelineJob, Topology};
+use rapidraid::gf::{Gf256, Gf65536, GfElem, SliceOps};
+use rapidraid::resources::NodeProfile;
+use rapidraid::storage::{BlockKey, ObjectId, ReplicaPlacement};
+use rapidraid::util::prop::forall;
+
+fn bytes_to_gf<F: GfElem>(data: &[u8]) -> Vec<F> {
+    match F::BITS {
+        8 => data.iter().map(|&b| F::from_u32(b as u32)).collect(),
+        16 => data
+            .chunks_exact(2)
+            .map(|p| F::from_u32(u16::from_le_bytes([p[0], p[1]]) as u32))
+            .collect(),
+        other => panic!("unsupported width {other}"),
+    }
+}
+
+fn shapes() -> Vec<Topology> {
+    vec![
+        Topology::Chain,
+        Topology::Tree { fanout: 2 },
+        Topology::Tree { fanout: 3 },
+        Topology::Hybrid {
+            chain_prefix: 2,
+            tree_fanout: 2,
+        },
+    ]
+}
+
+/// The lowering-equivalence property, generic over the field.
+fn equivalence_property<F: GfElem + SliceOps>(backend: &BackendHandle, cases: usize, seed: u64) {
+    forall(cases, seed, |rng| {
+        let k = 3 + rng.below(2) as usize; // 3..=4 keeps C(n,k) enumerable
+        let extra = 1 + rng.below(k as u64) as usize; // 1..=k
+        let n = (k + extra).min(2 * k);
+        let block = 1024 * (1 + rng.below(3) as usize); // 1..3 KiB
+        let object = ObjectId(rng.next_u64());
+        let code = RapidRaidCode::<F>::with_seed(n, k, rng.next_u64()).unwrap();
+
+        for topo in shapes() {
+            let cluster = Cluster::start(ClusterSpec::test(n));
+            let placement = ReplicaPlacement::new(object, k, (0..n).collect()).unwrap();
+            let blocks = ingest_object(&cluster, &placement, block).unwrap();
+            let job =
+                PipelineJob::from_code_with_topology(&code, &placement, topo, 1024, block)
+                    .unwrap();
+            archive_pipeline(&cluster, backend, &job).unwrap();
+
+            // 1. distributed pipeline ≡ atomic generator encode
+            let tcode = TopologyCode::new(code.clone(), topo.shape(n).unwrap()).unwrap();
+            let obj_gf: Vec<Vec<F>> = blocks.iter().map(|b| bytes_to_gf::<F>(b)).collect();
+            let expect = tcode.encode_matrix(&obj_gf);
+            let coded: Vec<Vec<F>> = (0..n)
+                .map(|i| {
+                    let raw = cluster
+                        .node(i)
+                        .peek(BlockKey::coded(object, i))
+                        .unwrap()
+                        .unwrap_or_else(|| panic!("({topo}) coded block {i} missing"));
+                    bytes_to_gf::<F>(&raw)
+                })
+                .collect();
+            assert_eq!(coded, expect, "(n={n},k={k},{topo}) pipeline != generator");
+
+            // 2. every independent k-subset decodes to the object
+            let mut independent = 0usize;
+            for sub in Combinations::new(n, k) {
+                let have: Vec<(usize, Vec<F>)> =
+                    sub.iter().map(|&i| (i, coded[i].clone())).collect();
+                match tcode.decode(&have) {
+                    Ok(rec) => {
+                        independent += 1;
+                        assert_eq!(rec, obj_gf, "(n={n},k={k},{topo}) subset {sub:?}");
+                    }
+                    Err(DecodeError::DependentSubset { .. }) => {}
+                    Err(e) => panic!("(n={n},k={k},{topo}) subset {sub:?}: unexpected {e:?}"),
+                }
+            }
+            assert!(independent > 0, "(n={n},k={k},{topo}) nothing decodable");
+        }
+    });
+}
+
+#[test]
+fn every_topology_matches_atomic_generator_gf8() {
+    let be: BackendHandle = Arc::new(NativeBackend::new());
+    equivalence_property::<Gf256>(&be, 3, 0x70_01);
+}
+
+#[test]
+fn every_topology_matches_atomic_generator_gf16() {
+    let be: BackendHandle = Arc::new(NativeBackend::new());
+    equivalence_property::<Gf65536>(&be, 3, 0x70_02);
+}
+
+#[test]
+fn tree_repair_regenerates_byte_identical_block() {
+    use rapidraid::coordinator::survey_coded;
+    use rapidraid::repair::{run_pipelined_repair, PipelinedRepairJob, RepairJob};
+    // Archive over tree:2, crash a holder, aggregate the repair over the
+    // same tree shape: the newcomer must receive the exact lost bytes.
+    let topo = Topology::Tree { fanout: 2 };
+    let cluster = Cluster::start(ClusterSpec::test(9));
+    let object = ObjectId(0x7EE);
+    let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+    ingest_object(&cluster, &placement, 16 * 1024).unwrap();
+    let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+    let tcode = TopologyCode::new(code.clone(), topo.shape(8).unwrap()).unwrap();
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let job =
+        PipelineJob::from_code_with_topology(&code, &placement, topo, 2048, 16 * 1024).unwrap();
+    archive_pipeline(&cluster, &backend, &job).unwrap();
+
+    let lost = 6usize;
+    let original = (*cluster
+        .node(lost)
+        .peek(BlockKey::coded(object, lost))
+        .unwrap()
+        .unwrap())
+    .clone();
+    cluster.fail_node(lost);
+    let (avail, bb) = survey_coded(&cluster, &placement.chain, object);
+    let rjob = RepairJob::from_code(
+        &tcode,
+        object,
+        &placement.chain,
+        lost,
+        8, // the spare 9th node
+        &avail,
+        2048,
+        bb,
+    )
+    .unwrap();
+    run_pipelined_repair(&cluster, &backend, &PipelinedRepairJob::with_topology(rjob, topo))
+        .unwrap();
+    let rebuilt = cluster
+        .node(8)
+        .peek(BlockKey::coded(object, lost))
+        .unwrap()
+        .unwrap();
+    assert_eq!(*rebuilt, original, "tree repair changed the block bytes");
+}
+
+/// Archive one (8,4) object over `topo` on a jitter-free SimClock TPC
+/// cluster with the given per-node profile mix; returns the virtual
+/// coding time.
+fn timed_archival(topo: Topology, profiles: Vec<NodeProfile>) -> Duration {
+    let mut spec = ClusterSpec::tpc(8).sim().with_profiles(profiles).unwrap();
+    spec.jitter = Duration::ZERO;
+    let cluster = Cluster::start(spec);
+    let object = ObjectId(0x57A6);
+    let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+    ingest_object(&cluster, &placement, 512 * 1024).unwrap();
+    let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let job =
+        PipelineJob::from_code_with_topology(&code, &placement, topo, 64 * 1024, 512 * 1024)
+            .unwrap();
+    archive_pipeline(&cluster, &backend, &job).unwrap()
+}
+
+#[test]
+fn slow_head_hurts_chain_strictly_more_than_tree() {
+    // Straggler at position 0 (chain head == tree root). The chain's
+    // whole stream re-paces behind the slow stage; the tree root's
+    // children are paced by the fan-out uplink anyway, so the same
+    // straggler costs the tree strictly less added makespan.
+    let uniform = vec![NodeProfile::EC2_SMALL];
+    let straggled = {
+        let mut p = vec![NodeProfile::EC2_SMALL; 8];
+        p[0] = NodeProfile::THINCLIENT; // half speed at the head
+        p
+    };
+    let tree = Topology::Tree { fanout: 2 };
+    let chain_fast = timed_archival(Topology::Chain, uniform.clone());
+    let chain_slow = timed_archival(Topology::Chain, straggled.clone());
+    let tree_fast = timed_archival(tree, uniform);
+    let tree_slow = timed_archival(tree, straggled);
+    let chain_hurt = chain_slow.saturating_sub(chain_fast);
+    let tree_hurt = tree_slow.saturating_sub(tree_fast);
+    assert!(
+        chain_slow > chain_fast,
+        "straggler did not slow the chain: {chain_slow:?} vs {chain_fast:?}"
+    );
+    assert!(
+        chain_hurt > tree_hurt,
+        "chain hurt {chain_hurt:?} not strictly above tree hurt {tree_hurt:?} \
+         (chain {chain_fast:?}->{chain_slow:?}, tree {tree_fast:?}->{tree_slow:?})"
+    );
+}
