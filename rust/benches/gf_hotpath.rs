@@ -1,99 +1,182 @@
-//! Bench: GF hot-path microbenchmarks (§Perf) — native slice ops and the
-//! PJRT-executed Pallas kernels, in bytes/second.
+//! Bench: GF hot-path microbenchmarks (§Perf) — the op × width × kernel ×
+//! buffer-size sweep behind the SIMD dispatch layer, plus the calibration
+//! series that feed `UniformCost::from_measured`.
 //!
 //! Not a paper table; this is the §Perf instrumentation used to drive the
-//! optimization pass (EXPERIMENTS.md §Perf).
+//! optimization pass (EXPERIMENTS.md §Perf) and the measured-throughput
+//! calibration loop: the `calibrate/{mac,xor,store,invert}` candles plus
+//! the `calibrate_bytes`/`calibrate_invert_dim` params in the emitted
+//! `BENCH_gf-hotpath.json` are exactly what
+//! `UniformCost::from_measured(&BenchJson)` consumes.
 //!
 //! Run: `cargo bench --bench gf_hotpath`
+//! Env: SAMPLES (default 15, smoke 5), SEED (default 1), SMOKE=1 (small
+//! buffers — the CI configuration), REQUIRE_SPEEDUP=1 (assert the ≥ 4×
+//! GF(2^8) mul_slice_xor acceptance bar when a SIMD kernel is active).
+//! Writes BENCH_gf-hotpath.json.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use rapidraid::backend::{BackendHandle, NativeBackend, PjrtBackend, Width};
-use rapidraid::gf::{bytes_as_gf256, bytes_as_gf256_mut, mul_slice_xor, Gf256};
+use rapidraid::gf::{invert, simd, Gf256, Kernel, Matrix};
+use rapidraid::metrics::BenchJson;
+use rapidraid::resources::UniformCost;
+use rapidraid::util::bench::{bench, env_u64, throughput_mib_s};
 use rapidraid::util::SplitMix64;
 
-fn mib_s(bytes: usize, iters: usize, dt: std::time::Duration) -> f64 {
-    (bytes * iters) as f64 / (1 << 20) as f64 / dt.as_secs_f64()
-}
+/// Coefficients with no 0/1 shortcut: every pass is a real table MAC.
+const C8: u8 = 0x53;
+const C16: u16 = 0x1234;
 
 fn main() {
-    let mut rng = SplitMix64::new(1);
-    const LEN: usize = 1 << 20;
-    let mut src = vec![0u8; LEN];
+    let t_start = Instant::now();
+    let smoke = std::env::var("SMOKE").is_ok();
+    let samples = env_u64("SAMPLES", if smoke { 5 } else { 15 }) as usize;
+    let sizes: &[usize] = if smoke {
+        &[4 << 10, 64 << 10]
+    } else {
+        &[4 << 10, 64 << 10, 1 << 20]
+    };
+    let largest = *sizes.last().unwrap();
+    let kernels = Kernel::available_kernels();
+    let active = Kernel::active();
+
+    let mut report = BenchJson::new("gf-hotpath")
+        .param("smoke", smoke)
+        .param("samples", samples)
+        .param("active_kernel", active)
+        .param(
+            "kernels",
+            kernels
+                .iter()
+                .map(|k| k.name())
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+
+    let mut rng = SplitMix64::new(env_u64("SEED", 1));
+    let mut src = vec![0u8; largest];
     rng.fill_bytes(&mut src);
-    let mut dst = vec![0u8; LEN];
+    let mut dst = vec![0u8; largest];
     rng.fill_bytes(&mut dst);
 
-    // raw gf256 mul_slice_xor
-    let iters = 200;
-    let t0 = Instant::now();
-    for i in 0..iters {
-        let c = Gf256((i % 254 + 2) as u8);
-        mul_slice_xor(c, bytes_as_gf256(&src), bytes_as_gf256_mut(&mut dst));
-    }
-    let dt = t0.elapsed();
-    println!(
-        "{:<44} {:>10.1} MiB/s",
-        "gf256 mul_slice_xor (1 MiB)",
-        mib_s(LEN, iters, dt)
-    );
+    println!("# GF hot path sweep — active kernel: {active}");
 
-    // backend pipeline_step throughput, native vs pjrt
-    let backends: Vec<(&str, BackendHandle)> = {
-        let mut v: Vec<(&str, BackendHandle)> = vec![("native", Arc::new(NativeBackend::new()))];
-        match PjrtBackend::load(&rapidraid::runtime::artifacts::default_dir()) {
-            Ok(b) => v.push(("pjrt", Arc::new(b))),
-            Err(e) => eprintln!("# pjrt skipped: {e}"),
-        }
-        v
-    };
-    let buf = 65536usize;
-    let x = &src[..buf];
-    let l = &dst[..buf];
-    for (name, be) in &backends {
-        for w in [Width::W8, Width::W16] {
-            let iters = if *name == "native" { 400 } else { 100 };
-            // warmup (compiles the artifact on pjrt)
-            be.pipeline_step(w, x, &[l], &[7], &[9]).unwrap();
-            let t0 = Instant::now();
-            for _ in 0..iters {
-                let out = be.pipeline_step(w, x, &[l], &[7], &[9]).unwrap();
-                std::hint::black_box(out);
+    // --- op × width × kernel × size sweep -----------------------------
+    let ops: [(&str, fn(Kernel, &[u8], &mut [u8])); 5] = [
+        ("gf8/mul_slice_xor", |k, s, d| simd::mul_xor8(k, C8, s, d)),
+        ("gf8/mul_slice", |k, s, d| simd::mul8(k, C8, s, d)),
+        ("gf16/mul_slice_xor", |k, s, d| simd::mul_xor16(k, C16, s, d)),
+        ("gf16/mul_slice", |k, s, d| simd::mul16(k, C16, s, d)),
+        ("xor", |k, s, d| simd::xor_bytes(k, s, d)),
+    ];
+    // Inner repeats keep each sample well above timer resolution on the
+    // small buffers.
+    let target_bytes: usize = if smoke { 1 << 20 } else { 1 << 23 };
+    let mut mxor8_medians: Vec<(Kernel, std::time::Duration)> = Vec::new();
+    for (op_name, op) in &ops {
+        for &size in sizes {
+            for &k in &kernels {
+                let iters = (target_bytes / size).max(1);
+                let name = format!("{op_name}/{}/{}KiB", k.name(), size >> 10);
+                let c = bench(&name, 1, samples, || {
+                    for _ in 0..iters {
+                        op(k, &src[..size], &mut dst[..size]);
+                    }
+                    std::hint::black_box(&dst);
+                });
+                let mibs = throughput_mib_s(size * iters, c.median());
+                println!("{name:<44} {mibs:>10.1} MiB/s");
+                if *op_name == "gf8/mul_slice_xor" && size == largest {
+                    mxor8_medians.push((k, c.median()));
+                }
+                report.series.push(c);
             }
-            let dt = t0.elapsed();
-            println!(
-                "{:<44} {:>10.1} MiB/s",
-                format!("{name} pipeline_step r=1 {w} (64 KiB)"),
-                mib_s(buf, iters, dt)
-            );
         }
     }
 
-    // backend gemm throughput (5x11, the (16,11) parity shape)
-    let data: Vec<Vec<u8>> = (0..11)
-        .map(|_| {
-            let mut d = vec![0u8; buf];
-            rng.fill_bytes(&mut d);
-            d
-        })
-        .collect();
-    let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
-    let mat: Vec<Vec<u32>> = (0..5)
-        .map(|_| (0..11).map(|_| (rng.next_u64() & 0xFF) as u32).collect())
-        .collect();
-    for (name, be) in &backends {
-        let iters = if *name == "native" { 100 } else { 30 };
-        be.gemm(Width::W8, &mat, &refs).unwrap();
-        let t0 = Instant::now();
-        for _ in 0..iters {
-            std::hint::black_box(be.gemm(Width::W8, &mat, &refs).unwrap());
-        }
-        let dt = t0.elapsed();
-        println!(
-            "{:<44} {:>10.1} MiB/s (source bytes)",
-            format!("{name} gemm 5x11 gf8 (11 x 64 KiB)"),
-            mib_s(11 * buf, iters, dt)
+    // --- acceptance headline: GF(2^8) mul_slice_xor, active vs scalar --
+    let median_of = |k: Kernel| {
+        mxor8_medians
+            .iter()
+            .find(|(mk, _)| *mk == k)
+            .map(|(_, d)| d.as_secs_f64())
+            .expect("sweep covered the kernel")
+    };
+    let speedup = median_of(Kernel::Scalar) / median_of(active);
+    println!("# gf8 mul_slice_xor: {active} is {speedup:.2}x scalar at {}KiB", largest >> 10);
+    report = report.param("gf8_mul_slice_xor_speedup", format!("{speedup:.3}"));
+    if env_u64("REQUIRE_SPEEDUP", 0) == 1 && active != Kernel::Scalar {
+        assert!(
+            speedup >= 4.0,
+            "acceptance: expected >= 4x for gf8 mul_slice_xor on {active}, got {speedup:.2}x"
         );
     }
+
+    // --- calibration series (one pass per sample, so rate = work/median)
+    let cal_bytes: usize = if smoke { 64 << 10 } else { 1 << 20 };
+    let cal_dim: usize = if smoke { 32 } else { 64 };
+    report = report
+        .param("calibrate_bytes", cal_bytes)
+        .param("calibrate_invert_dim", cal_dim);
+    let mac = bench("calibrate/mac", 1, samples, || {
+        simd::mul_xor8(active, C8, &src[..cal_bytes], &mut dst[..cal_bytes]);
+        std::hint::black_box(&dst);
+    });
+    let xor = bench("calibrate/xor", 1, samples, || {
+        simd::xor_bytes(active, &src[..cal_bytes], &mut dst[..cal_bytes]);
+        std::hint::black_box(&dst);
+    });
+    let store = bench("calibrate/store", 1, samples, || {
+        dst[..cal_bytes].copy_from_slice(&src[..cal_bytes]);
+        std::hint::black_box(&dst);
+    });
+    let m: Matrix<Gf256> = Matrix::cauchy(cal_dim, cal_dim);
+    let inv = bench("calibrate/invert", 1, samples, || {
+        std::hint::black_box(invert(&m).expect("cauchy matrices are invertible"));
+    });
+    for c in [mac, xor, store, inv] {
+        println!("{:<44} median={:?}", c.name, c.median());
+        report.series.push(c);
+    }
+    match UniformCost::from_measured(&report) {
+        Ok(u) => println!(
+            "# measured UniformCost: mac {:.3e} B/s, xor {:.3e} B/s, store {:.3e} B/s, invert {:.3e} elems/s",
+            u.mac_bytes_per_sec, u.xor_bytes_per_sec, u.store_bytes_per_sec, u.invert_elems_per_sec
+        ),
+        Err(e) => eprintln!("# calibration failed: {e}"),
+    }
+
+    // --- end-to-end pipeline_step, native vs pjrt (non-smoke only) -----
+    if !smoke {
+        let backends: Vec<(&str, BackendHandle)> = {
+            let mut v: Vec<(&str, BackendHandle)> =
+                vec![("native", Arc::new(NativeBackend::new()))];
+            match PjrtBackend::load(&rapidraid::runtime::artifacts::default_dir()) {
+                Ok(b) => v.push(("pjrt", Arc::new(b))),
+                Err(e) => eprintln!("# pjrt skipped: {e}"),
+            }
+            v
+        };
+        let buf = 64 << 10;
+        let x = &src[..buf];
+        let l = &dst[..buf];
+        for (name, be) in &backends {
+            for w in [Width::W8, Width::W16] {
+                let c = bench(&format!("pipeline_step/{name}/{w}"), 1, samples, || {
+                    std::hint::black_box(be.pipeline_step(w, x, &[l], &[7], &[9]).unwrap());
+                });
+                let mibs = throughput_mib_s(buf, c.median());
+                println!("{:<44} {mibs:>10.1} MiB/s", c.name);
+                report.spans.push(c);
+            }
+        }
+    }
+
+    report.wall = t_start.elapsed();
+    let path = report
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
+    println!("# wrote {}", path.display());
 }

@@ -3,8 +3,7 @@
 
 use super::{EncodeBackend, Width};
 use crate::gf::field::{Gf65536, GfElem};
-use crate::gf::slice::{bytes_as_gf256, bytes_as_gf256_mut, SliceOps};
-use crate::gf::Gf256;
+use crate::gf::simd::{self, Kernel};
 
 /// Pure-Rust GF compute (no PJRT).
 #[derive(Default)]
@@ -20,8 +19,9 @@ impl NativeBackend {
 /// `dst ^= c * src` over GF(2^16) on raw little-endian byte buffers.
 ///
 /// Works on unaligned `&[u8]` (payloads come straight off network frames);
-/// uses the same split-table method as `gf::slice` — two 256-entry tables
-/// per coefficient, two lookups + XOR per 16-bit word.
+/// streams through the process-wide [`Kernel`] — split-nibble vector
+/// shuffles where the CPU has them, the two-256-entry-table scalar pass
+/// otherwise.
 fn mul_slice_xor16_bytes(c: u16, src: &[u8], dst: &mut [u8]) {
     assert_eq!(src.len(), dst.len());
     assert_eq!(src.len() % 2, 0, "GF(2^16) payload must have even length");
@@ -29,31 +29,24 @@ fn mul_slice_xor16_bytes(c: u16, src: &[u8], dst: &mut [u8]) {
         return;
     }
     if c == 1 {
-        for (d, s) in dst.iter_mut().zip(src) {
-            *d ^= s;
-        }
+        simd::xor_bytes(Kernel::active(), src, dst);
         return;
     }
-    let t = Gf65536::tables();
-    let lc = t.log[c as usize];
-    let mut lo = [0u16; 256];
-    let mut hi = [0u16; 256];
-    for b in 1usize..256 {
-        lo[b] = t.exp[(lc + t.log[b]) as usize] as u16;
-        hi[b] = t.exp[(lc + t.log[b << 8]) as usize] as u16;
-    }
-    for (d, s) in dst.chunks_exact_mut(2).zip(src.chunks_exact(2)) {
-        let p = lo[s[0] as usize] ^ hi[s[1] as usize];
-        let v = u16::from_le_bytes([d[0], d[1]]) ^ p;
-        d.copy_from_slice(&v.to_le_bytes());
-    }
+    simd::mul_xor16(Kernel::active(), c, src, dst);
 }
 
 /// `dst ^= c * src` dispatched on width, on raw byte buffers.
 pub fn mul_xor_bytes(w: Width, c: u32, src: &[u8], dst: &mut [u8]) {
     match w {
         Width::W8 => {
-            Gf256::mul_slice_xor(Gf256(c as u8), bytes_as_gf256(src), bytes_as_gf256_mut(dst));
+            if c == 0 {
+                return;
+            }
+            if c == 1 {
+                simd::xor_bytes(Kernel::active(), src, dst);
+                return;
+            }
+            simd::mul_xor8(Kernel::active(), c as u8, src, dst);
         }
         Width::W16 => mul_slice_xor16_bytes(c as u16, src, dst),
     }
@@ -132,15 +125,26 @@ impl EncodeBackend for NativeBackend {
         );
         let mut x_out = x_in.to_vec();
         let mut c = x_in.to_vec();
+        // On the scalar kernel the fused dual-table pass wins (one read of
+        // each local byte feeds both products); on a SIMD kernel two
+        // vector passes per local beat it comfortably, so dispatch there.
+        let fused = Kernel::active() == Kernel::Scalar;
         for (j, loc) in locals.iter().enumerate() {
             anyhow::ensure!(loc.len() == x_in.len(), "local block length mismatch");
             match w {
-                Width::W8 => {
+                Width::W8 if fused => {
                     fused_step8(psi[j] as u8, xi[j] as u8, loc, &mut x_out, &mut c)
                 }
-                Width::W16 => {
+                Width::W16 if fused => {
                     anyhow::ensure!(loc.len() % 2 == 0, "GF(2^16) length must be even");
                     fused_step16(psi[j] as u16, xi[j] as u16, loc, &mut x_out, &mut c)
+                }
+                _ => {
+                    if w == Width::W16 {
+                        anyhow::ensure!(loc.len() % 2 == 0, "GF(2^16) length must be even");
+                    }
+                    mul_xor_bytes(w, psi[j], loc, &mut x_out);
+                    mul_xor_bytes(w, xi[j], loc, &mut c);
                 }
             }
         }
@@ -172,7 +176,9 @@ impl EncodeBackend for NativeBackend {
             // Row-fused GF(2^8) path (§Perf): per output row, keep the k
             // product tables L1-resident and accumulate in a register —
             // one write per output byte instead of k read-modify-writes.
-            Width::W8 => {
+            // Only worth it on the scalar kernel; the vector shuffles are
+            // faster as one dispatched pass per matrix cell.
+            Width::W8 if Kernel::active() == Kernel::Scalar => {
                 for (row, o) in mat.iter().zip(out.iter_mut()) {
                     let t8 = crate::gf::field::Gf256::tables();
                     let tables: Vec<[u8; 256]> = row
@@ -206,7 +212,7 @@ impl EncodeBackend for NativeBackend {
                     }
                 }
             }
-            Width::W16 => {
+            _ => {
                 for (row, o) in mat.iter().zip(out.iter_mut()) {
                     for (c, d) in row.iter().zip(data) {
                         mul_xor_bytes(w, *c, d, o);

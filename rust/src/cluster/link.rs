@@ -33,11 +33,97 @@ impl LinkSpec {
     }
 }
 
+/// A shareable view into a payload buffer — the zero-copy frame body.
+///
+/// Wraps `Arc<Vec<u8>>` (the same shape [`BlockStore`](crate::storage::BlockStore)
+/// hands out, so a stored block streams with no conversion copy) plus a
+/// byte range. Cloning bumps a refcount; [`Payload::slice`] carves
+/// sub-views of the same allocation — an upload chunks one buffer and a
+/// fan-out sends one frame to F children without ever duplicating the
+/// bytes. The *modeled* copy charges (the XOR-priced fan-out term, the
+/// store-priced landing copy) are the dataplane's business; this type only
+/// guarantees no physical memcpy hides underneath them.
+#[derive(Clone)]
+pub struct Payload {
+    buf: Arc<Vec<u8>>,
+    start: usize,
+    end: usize,
+}
+
+impl Payload {
+    /// Take ownership of a buffer (no copy).
+    pub fn new(data: Vec<u8>) -> Self {
+        Self::from_shared(Arc::new(data))
+    }
+
+    /// View an already-shared buffer (no copy; refcount bump).
+    pub fn from_shared(buf: Arc<Vec<u8>>) -> Self {
+        let end = buf.len();
+        Self { buf, start: 0, end }
+    }
+
+    /// Sub-view of this payload's byte range (same allocation).
+    pub fn slice(&self, start: usize, end: usize) -> Self {
+        assert!(start <= end && self.start + end <= self.end, "slice out of range");
+        Self {
+            buf: self.buf.clone(),
+            start: self.start + start,
+            end: self.start + end,
+        }
+    }
+
+    /// View length in bytes.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True if the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// The viewed bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.start..self.end]
+    }
+
+    /// Whether two payloads view the same allocation (zero-copy tests).
+    pub fn shares_buffer(&self, other: &Payload) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+}
+
+impl std::ops::Deref for Payload {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(data: Vec<u8>) -> Self {
+        Payload::new(data)
+    }
+}
+
+impl From<Arc<Vec<u8>>> for Payload {
+    fn from(buf: Arc<Vec<u8>>) -> Self {
+        Payload::from_shared(buf)
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // frames end up in error messages; print the shape, not the bytes
+        write!(f, "Payload({} bytes)", self.len())
+    }
+}
+
 /// A unit of payload on the wire.
 #[derive(Debug)]
 pub enum Frame {
-    /// One network buffer of payload.
-    Data(Vec<u8>),
+    /// One network buffer of payload (shared, zero-copy).
+    Data(Payload),
     /// End of stream.
     End,
 }
@@ -131,9 +217,11 @@ impl Tx {
             .map_err(|_| anyhow::anyhow!("link receiver dropped"))
     }
 
-    /// Convenience: send a payload buffer.
-    pub fn send_data(&mut self, data: Vec<u8>) -> anyhow::Result<()> {
-        self.send(Frame::Data(data))
+    /// Convenience: send a payload buffer (anything cheaply convertible to
+    /// a [`Payload`] — an owned `Vec<u8>`, a shared `Arc<Vec<u8>>`, or an
+    /// existing view).
+    pub fn send_data(&mut self, data: impl Into<Payload>) -> anyhow::Result<()> {
+        self.send(Frame::Data(data.into()))
     }
 
     /// Convenience: close the stream.
@@ -287,6 +375,50 @@ mod tests {
         assert!(matches!(rx.recv(), Some(Frame::Data(_))));
         drop(tx);
         assert!(rx.recv().is_none());
+    }
+
+    #[test]
+    fn payload_views_share_one_allocation() {
+        let p = Payload::new((0..100u8).collect());
+        let a = p.slice(10, 60);
+        let b = a.slice(5, 20);
+        let c = p.clone();
+        assert_eq!(a.len(), 50);
+        assert_eq!(a[0], 10);
+        assert_eq!(b.as_slice(), &(15..30).collect::<Vec<u8>>()[..]);
+        assert!(a.shares_buffer(&p) && b.shares_buffer(&p) && c.shares_buffer(&p));
+        assert!(p.slice(100, 100).is_empty());
+        assert_eq!(format!("{p:?}"), "Payload(100 bytes)");
+        // an Arc straight out of a block store also shares
+        let shared = Arc::new(vec![7u8; 4]);
+        let q = Payload::from_shared(shared.clone());
+        assert!(q.shares_buffer(&Payload::from_shared(shared)));
+    }
+
+    #[test]
+    #[should_panic(expected = "slice out of range")]
+    fn payload_slice_bounds_checked() {
+        let _ = Payload::new(vec![0; 4]).slice(2, 6);
+    }
+
+    #[test]
+    fn frames_deliver_payload_views_without_copying() {
+        let c = sim();
+        let (mut tx, rx) = link(nic(&c), nic(&c), LinkSpec::instant(), 21);
+        let p = Payload::new(vec![9u8; 32]);
+        tx.send_data(p.slice(0, 16)).unwrap();
+        tx.send_data(p.slice(16, 32)).unwrap();
+        match rx.recv().unwrap() {
+            Frame::Data(d) => assert!(d.shares_buffer(&p)),
+            Frame::End => panic!("expected data"),
+        }
+        match rx.recv().unwrap() {
+            Frame::Data(d) => {
+                assert!(d.shares_buffer(&p));
+                assert_eq!(d.as_slice(), &[9u8; 16]);
+            }
+            Frame::End => panic!("expected data"),
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod nic;
 pub mod node;
 
 pub use congestion::CongestionSpec;
-pub use link::{Frame, LinkSpec, Rx, Tx};
+pub use link::{Frame, LinkSpec, Payload, Rx, Tx};
 pub use network::{Cluster, ClusterSpec};
 pub use nic::RateLimiter;
 pub use node::{

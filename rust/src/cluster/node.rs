@@ -33,7 +33,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use super::link::{Frame, Rx, Tx};
+use super::link::{Frame, Payload, Rx, Tx};
 use super::nic::RateLimiter;
 use super::NodeId;
 use crate::backend::{BackendHandle, Width};
@@ -129,9 +129,9 @@ pub enum Command {
         /// zero buffers).
         prev: Option<Rx>,
         /// Downstream links: one per child subtree. A chain stage has one,
-        /// a tree interior stage several (every child receives the same
-        /// `x_out` stream; the extra frame copies are charged as XOR
-        /// work), a tail none.
+        /// a tree interior stage several (every child receives a shared
+        /// view of the same `x_out` frame — the modeled duplication is
+        /// charged as XOR work, no physical copy is made), a tail none.
         next: Vec<Tx>,
         /// Where to store the locally generated block: `Some` stores the
         /// c output (archival: codeword block c_i; pipelined-decode tail:
@@ -595,8 +595,15 @@ fn do_upload(store: &BlockStore, key: BlockKey, tx: &mut Tx, buf_bytes: usize) -
     let data = store
         .get(&key)
         .ok_or_else(|| anyhow::anyhow!("upload: missing block {key:?}"))?;
-    for chunk in data.chunks(buf_bytes) {
-        tx.send_data(chunk.to_vec())?;
+    // The stored Arc streams out as payload views — every frame is a
+    // sub-range of the block's own allocation, no per-chunk copy.
+    let payload = Payload::from_shared(data);
+    let total = payload.len();
+    let mut off = 0usize;
+    while off < total {
+        let end = (off + buf_bytes).min(total);
+        tx.send_data(payload.slice(off, end))?;
+        off = end;
     }
     tx.finish()?;
     // A stored-block read costs no GF work; the NICs price the transfer.
@@ -664,7 +671,7 @@ fn do_pipeline_stage(
     loop {
         // Obtain the incoming partial-combination buffer: from upstream, or
         // all-zero for the chain head.
-        let x_in: Vec<u8> = match &prev {
+        let x_in: Payload = match &prev {
             Some(rx) => match rx.recv() {
                 Some(Frame::Data(d)) => d,
                 Some(Frame::End) => break,
@@ -674,7 +681,7 @@ fn do_pipeline_stage(
                 if offset >= block_bytes {
                     break;
                 }
-                vec![0u8; buf_bytes.min(block_bytes - offset)]
+                Payload::new(vec![0u8; buf_bytes.min(block_bytes - offset)])
             }
         };
         let len = x_in.len();
@@ -689,8 +696,10 @@ fn do_pipeline_stage(
         let (x_out, c) = backend.pipeline_step(width, &x_in, &loc_slices, psi, xi)?;
         // Charge the frame's GF work BEFORE forwarding: the compute delay
         // paces the whole downstream pipeline, exactly like a slow CPU
-        // would. Fan-out duplicates the frame once per extra child — a
-        // plain memcpy, priced as XOR bytes.
+        // would. Fan-out to extra children is still *priced* as one XOR
+        // pass per extra child (the modeled duplication cost) even though
+        // the frames below are refcounted views of one buffer — the model
+        // charges it, the data plane no longer memcpys it.
         let mut work = GfWork::pipeline_step(psi, xi, len);
         if next.len() > 1 {
             work += GfWork::xor((next.len() - 1) * len);
@@ -700,10 +709,11 @@ fn do_pipeline_stage(
             out.extend_from_slice(&c);
         }
         if let Some((last, rest)) = next.split_last_mut() {
+            let frame = Payload::new(x_out);
             for tx in rest {
-                tx.send_data(x_out.clone())?;
+                tx.send_data(frame.clone())?;
             }
-            last.send_data(x_out)?;
+            last.send_data(frame)?;
         }
         offset += len;
     }
@@ -764,7 +774,9 @@ fn do_classical_encode(
     // buffers (the k-th network buffer of every block), apply the parity
     // sub-matrix in ONE gemm (this is the AOT Pallas gf_gemm kernel on the
     // PJRT backend), and ship each parity buffer as soon as it exists.
-    let mut row: Vec<Vec<u8>> = Vec::with_capacity(k);
+    // Remote entries are the delivered frames as-is; local entries are
+    // payload views into the stored block — no per-row copies either way.
+    let mut row: Vec<Payload> = Vec::with_capacity(k);
     while offset < block_bytes {
         let len = buf_bytes.min(block_bytes - offset);
         row.clear();
@@ -780,7 +792,7 @@ fn do_classical_encode(
                 }
                 SourceStream::Local(_) => {
                     let b = local_blocks[j].as_ref().unwrap();
-                    row.push(b[offset..offset + len].to_vec());
+                    row.push(Payload::from_shared(b.clone()).slice(offset, offset + len));
                 }
             }
         }
@@ -1136,6 +1148,82 @@ mod tests {
         for i in 0..block {
             assert_eq!(c1[i] as u32, mul_bitwise(3, b0[i] as u32, 8), "byte {i}");
         }
+    }
+
+    #[test]
+    fn upload_frames_are_views_of_the_stored_block() {
+        let c = sim();
+        let a = node_on(&c, 0);
+        let key = BlockKey::source(ObjectId(19), 0);
+        let data: Vec<u8> = (0..10_000u32).map(|i| i as u8).collect();
+        a.put(key, data.clone()).unwrap();
+        let stored = Payload::from_shared(a.store.get(&key).unwrap());
+
+        let (tx, rx) = link(a.up.clone(), nic(&c), LinkSpec::instant(), 41);
+        let (d, w) = clock::channel(&c);
+        a.send(Command::Upload {
+            key,
+            tx,
+            buf_bytes: 4096,
+            done: d,
+        })
+        .unwrap();
+        let mut seen = 0usize;
+        loop {
+            match rx.recv() {
+                Some(Frame::Data(p)) => {
+                    assert!(p.shares_buffer(&stored), "frame copied the block");
+                    assert_eq!(p.as_slice(), &data[seen..seen + p.len()]);
+                    seen += p.len();
+                }
+                Some(Frame::End) => break,
+                None => panic!("stream broke"),
+            }
+        }
+        assert_eq!(seen, data.len());
+        w.recv().unwrap().unwrap();
+    }
+
+    #[test]
+    fn pipeline_fanout_sends_shared_views_not_copies() {
+        // A tree interior stage fanning x_out to two children must put the
+        // SAME allocation on both links (refcount bump, no memcpy).
+        let c = sim();
+        let n0 = node_on(&c, 0);
+        let obj = ObjectId(20);
+        let data = vec![5u8; 4096];
+        n0.put(BlockKey::source(obj, 0), data).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let (tx1, rx1) = link(n0.up.clone(), nic(&c), LinkSpec::instant(), 42);
+        let (tx2, rx2) = link(n0.up.clone(), nic(&c), LinkSpec::instant(), 43);
+        let (d, w) = clock::channel(&c);
+        n0.send(Command::PipelineStage {
+            width: Width::W8,
+            locals: vec![BlockKey::source(obj, 0)],
+            psi: vec![3],
+            xi: vec![7],
+            prev: None,
+            next: vec![tx1, tx2],
+            out_key: None,
+            buf_bytes: 1024,
+            backend,
+            done: d,
+        })
+        .unwrap();
+        let mut frames = 0;
+        loop {
+            match (rx1.recv(), rx2.recv()) {
+                (Some(Frame::Data(p1)), Some(Frame::Data(p2))) => {
+                    assert!(p1.shares_buffer(&p2), "fan-out duplicated the frame");
+                    assert_eq!(p1.as_slice(), p2.as_slice());
+                    frames += 1;
+                }
+                (Some(Frame::End), Some(Frame::End)) => break,
+                other => panic!("streams diverged: {other:?}"),
+            }
+        }
+        assert_eq!(frames, 4);
+        w.recv().unwrap().unwrap();
     }
 
     #[test]

@@ -1,0 +1,1025 @@
+//! SIMD GF kernels with runtime dispatch — the hot-path backend behind
+//! [`crate::gf::slice`].
+//!
+//! Every bulk GF op in the crate funnels through one [`Kernel`]: a scalar
+//! 256-entry-table pass (always available, the PR-1..5 behavior), or a
+//! vectorized split-nibble pass on x86-64 (SSSE3/AVX2 `PSHUFB`) and
+//! aarch64 (NEON `TBL`). The trick is gf-complete's `SPLIT` scheme: a
+//! GF(2^8) product by a fixed coefficient `c` is linear over the nibbles
+//! of the source byte,
+//!
+//! ```text
+//! c·x = lo_tbl[x & 0xF] ⊕ hi_tbl[x >> 4]
+//! ```
+//!
+//! so two 16-entry product tables fit in vector registers and one
+//! byte-shuffle instruction performs 16/32 table lookups at once. GF(2^16)
+//! splits each little-endian word into four nibbles (four 16-entry `u16`
+//! tables, stored as separate low/high byte planes for the shuffles) and
+//! de/re-interleaves the byte pairs around the lookup.
+//!
+//! Dispatch rules:
+//!
+//! * [`Kernel::active`] picks the widest runtime-detected kernel once per
+//!   process (`is_x86_feature_detected!` / NEON detection), overridable
+//!   with `RAPIDRAID_FORCE_SCALAR=1` (CI runs the whole suite a second
+//!   time this way) or `RAPIDRAID_KERNEL=<name>` for a specific backend.
+//! * A requested kernel that is not available on the running CPU silently
+//!   degrades to [`Kernel::Scalar`] — the dispatch functions re-check
+//!   availability before entering any `unsafe` block, so a hand-built
+//!   `Kernel` value can never execute unsupported instructions.
+//! * Work accounting is *not* done here: callers
+//!   ([`crate::gf::slice::SliceOps`], the native backend) report the same
+//!   [`GfWork`](crate::resources::GfWork) for every kernel, so cost
+//!   models, `ZeroCost` tick-identity and SimClock determinism are
+//!   backend-independent by construction.
+//!
+//! Safety: the vector loops use unaligned loads/stores exclusively
+//! (`loadu`/`storeu`, `vld1q`/`vst1q`), never read or write past
+//! `min(src.len(), dst.len())` (each kernel returns how many bytes it
+//! handled; the dispatcher finishes the tail with scalar nibble math), and
+//! are only entered after the matching CPU feature was runtime-detected.
+//! Table lookups index 16-entry arrays with 4-bit values, so no
+//! out-of-bounds access is possible by construction.
+
+use std::sync::OnceLock;
+
+use super::field::{Gf256, Gf65536, GfElem};
+
+// The byte views used by both the scalar GF(2^16) pass and the SIMD
+// kernels assume little-endian symbol layout (as does the rest of the
+// crate: `bytes_as_gf65536` transmutes network payloads in place).
+#[cfg(target_endian = "big")]
+compile_error!("rapidraid's GF byte views assume a little-endian target");
+
+/// One GF slice-op backend.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable 256-entry-table passes (always available).
+    Scalar,
+    /// x86-64 128-bit split-nibble shuffles (`PSHUFB`).
+    Ssse3,
+    /// x86-64 256-bit split-nibble shuffles.
+    Avx2,
+    /// aarch64 128-bit split-nibble shuffles (`TBL`).
+    Neon,
+}
+
+fn detect_ssse3() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("ssse3")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn detect_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn detect_neon() -> bool {
+    #[cfg(target_arch = "aarch64")]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        false
+    }
+}
+
+/// Pure kernel-selection rule (extracted so tests can drive it without
+/// touching process environment): forced scalar wins, then an explicitly
+/// requested available kernel, then the widest detected one.
+fn resolve(force_scalar: bool, requested: Option<&str>) -> Kernel {
+    if force_scalar {
+        return Kernel::Scalar;
+    }
+    if let Some(name) = requested {
+        if let Some(k) = Kernel::from_name(name) {
+            if k.is_available() {
+                return k;
+            }
+        }
+    }
+    Kernel::detect()
+}
+
+impl Kernel {
+    /// Every kernel, widest last (sweep order for benches).
+    pub const ALL: [Kernel; 4] = [Kernel::Scalar, Kernel::Ssse3, Kernel::Avx2, Kernel::Neon];
+
+    /// Stable lowercase label (also the `RAPIDRAID_KERNEL` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Ssse3 => "ssse3",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Parse a `RAPIDRAID_KERNEL` value.
+    pub fn from_name(name: &str) -> Option<Kernel> {
+        Kernel::ALL.into_iter().find(|k| k.name() == name)
+    }
+
+    /// Whether this kernel can run on the current CPU.
+    pub fn is_available(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            Kernel::Ssse3 => detect_ssse3(),
+            Kernel::Avx2 => detect_avx2(),
+            Kernel::Neon => detect_neon(),
+        }
+    }
+
+    /// The widest kernel the running CPU supports.
+    pub fn detect() -> Kernel {
+        if detect_avx2() {
+            Kernel::Avx2
+        } else if detect_ssse3() {
+            Kernel::Ssse3
+        } else if detect_neon() {
+            Kernel::Neon
+        } else {
+            Kernel::Scalar
+        }
+    }
+
+    /// Every kernel available on this CPU (scalar first) — the bench
+    /// sweep's backend axis.
+    pub fn available_kernels() -> Vec<Kernel> {
+        Kernel::ALL.into_iter().filter(|k| k.is_available()).collect()
+    }
+
+    /// The kernel the slice ops use, resolved once per process:
+    /// `RAPIDRAID_FORCE_SCALAR=1` forces the fallback,
+    /// `RAPIDRAID_KERNEL=<name>` requests a specific backend (ignored if
+    /// unavailable), otherwise the widest detected kernel wins.
+    pub fn active() -> Kernel {
+        static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            let force = std::env::var("RAPIDRAID_FORCE_SCALAR")
+                .map(|v| !v.is_empty() && v != "0")
+                .unwrap_or(false);
+            let requested = std::env::var("RAPIDRAID_KERNEL").ok();
+            resolve(force, requested.as_deref())
+        })
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coefficient table construction
+// ---------------------------------------------------------------------------
+
+/// GF(2^8) split-nibble product tables: `lo[n] = c·n`, `hi[n] = c·(n<<4)`.
+fn nib_tables8(c: u8) -> ([u8; 16], [u8; 16]) {
+    let mut lo = [0u8; 16];
+    let mut hi = [0u8; 16];
+    if c == 0 {
+        return (lo, hi);
+    }
+    let t = Gf256::tables();
+    let lc = t.log[c as usize];
+    for (n, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate().skip(1) {
+        *l = t.exp[(lc + t.log[n]) as usize] as u8;
+        *h = t.exp[(lc + t.log[n << 4]) as usize] as u8;
+    }
+    (lo, hi)
+}
+
+/// GF(2^16) split-nibble product tables: `t[i][n] = c·(n << 4i)`.
+fn nib_tables16(c: u16) -> [[u16; 16]; 4] {
+    let mut t = [[0u16; 16]; 4];
+    if c == 0 {
+        return t;
+    }
+    let tabs = Gf65536::tables();
+    let lc = tabs.log[c as usize];
+    for (i, tbl) in t.iter_mut().enumerate() {
+        for (n, slot) in tbl.iter_mut().enumerate().skip(1) {
+            *slot = tabs.exp[(lc + tabs.log[n << (4 * i)]) as usize] as u16;
+        }
+    }
+    t
+}
+
+/// Split the four `u16` nibble tables into low/high byte planes — the form
+/// the byte shuffles consume.
+#[cfg_attr(not(any(target_arch = "x86_64", target_arch = "aarch64")), allow(dead_code))]
+fn planes16(t: &[[u16; 16]; 4]) -> ([[u8; 16]; 4], [[u8; 16]; 4]) {
+    let mut lo = [[0u8; 16]; 4];
+    let mut hi = [[0u8; 16]; 4];
+    for ((tw, tl), th) in t.iter().zip(lo.iter_mut()).zip(hi.iter_mut()) {
+        for ((w, l), h) in tw.iter().zip(tl.iter_mut()).zip(th.iter_mut()) {
+            *l = *w as u8;
+            *h = (*w >> 8) as u8;
+        }
+    }
+    (lo, hi)
+}
+
+/// Scalar nibble-table product for one GF(2^16) word (SIMD tail handling).
+#[inline]
+fn nib_mul16(t: &[[u16; 16]; 4], x: u16) -> u16 {
+    t[0][(x & 0xF) as usize]
+        ^ t[1][((x >> 4) & 0xF) as usize]
+        ^ t[2][((x >> 8) & 0xF) as usize]
+        ^ t[3][(x >> 12) as usize]
+}
+
+// ---------------------------------------------------------------------------
+// Scalar kernels (the always-available fallback)
+// ---------------------------------------------------------------------------
+
+mod scalar {
+    use crate::gf::field::{Gf256, Gf65536, GfElem};
+
+    /// 256-entry product table for a GF(2^8) coefficient.
+    fn table256(c: u8) -> [u8; 256] {
+        let mut t = [0u8; 256];
+        if c == 0 {
+            return t;
+        }
+        let tabs = Gf256::tables();
+        let lc = tabs.log[c as usize];
+        for (x, slot) in t.iter_mut().enumerate().skip(1) {
+            *slot = tabs.exp[(lc + tabs.log[x]) as usize] as u8;
+        }
+        t
+    }
+
+    /// Two 256-entry split-byte tables for a GF(2^16) coefficient:
+    /// `lo[b] = c·b`, `hi[b] = c·(b << 8)`.
+    fn tables65536(c: u16) -> ([u16; 256], [u16; 256]) {
+        let mut lo = [0u16; 256];
+        let mut hi = [0u16; 256];
+        if c == 0 {
+            return (lo, hi);
+        }
+        let tabs = Gf65536::tables();
+        let lc = tabs.log[c as usize];
+        for b in 1usize..256 {
+            lo[b] = tabs.exp[(lc + tabs.log[b]) as usize] as u16;
+            hi[b] = tabs.exp[(lc + tabs.log[b << 8]) as usize] as u16;
+        }
+        (lo, hi)
+    }
+
+    /// `dst ^= c·src` (XOR=true) / `dst = c·src` (XOR=false) over GF(2^8).
+    pub fn mul8<const XOR: bool>(c: u8, src: &[u8], dst: &mut [u8]) {
+        let t = table256(c);
+        // 8-way unroll: keeps the table-lookup pipeline full on one core.
+        let n = src.len();
+        let chunks = n / 8 * 8;
+        for i in (0..chunks).step_by(8) {
+            if XOR {
+                dst[i] ^= t[src[i] as usize];
+                dst[i + 1] ^= t[src[i + 1] as usize];
+                dst[i + 2] ^= t[src[i + 2] as usize];
+                dst[i + 3] ^= t[src[i + 3] as usize];
+                dst[i + 4] ^= t[src[i + 4] as usize];
+                dst[i + 5] ^= t[src[i + 5] as usize];
+                dst[i + 6] ^= t[src[i + 6] as usize];
+                dst[i + 7] ^= t[src[i + 7] as usize];
+            } else {
+                dst[i] = t[src[i] as usize];
+                dst[i + 1] = t[src[i + 1] as usize];
+                dst[i + 2] = t[src[i + 2] as usize];
+                dst[i + 3] = t[src[i + 3] as usize];
+                dst[i + 4] = t[src[i + 4] as usize];
+                dst[i + 5] = t[src[i + 5] as usize];
+                dst[i + 6] = t[src[i + 6] as usize];
+                dst[i + 7] = t[src[i + 7] as usize];
+            }
+        }
+        for i in chunks..n {
+            if XOR {
+                dst[i] ^= t[src[i] as usize];
+            } else {
+                dst[i] = t[src[i] as usize];
+            }
+        }
+    }
+
+    /// `dst ^= c·src` / `dst = c·src` over GF(2^16) on little-endian byte
+    /// pairs (length must be even; the dispatcher checks).
+    pub fn mul16<const XOR: bool>(c: u16, src: &[u8], dst: &mut [u8]) {
+        let (lo, hi) = tables65536(c);
+        for (d, s) in dst.chunks_exact_mut(2).zip(src.chunks_exact(2)) {
+            let p = lo[s[0] as usize] ^ hi[s[1] as usize];
+            let v = if XOR {
+                u16::from_le_bytes([d[0], d[1]]) ^ p
+            } else {
+                p
+            };
+            d.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// `dst ^= src`, 8 bytes per step via `u64` words (any alignment —
+    /// the words are assembled with `from_ne_bytes`).
+    pub fn xor_wide(src: &[u8], dst: &mut [u8]) {
+        for (d, s) in dst.chunks_exact_mut(8).zip(src.chunks_exact(8)) {
+            let dv = u64::from_ne_bytes(<[u8; 8]>::try_from(&d[..]).unwrap());
+            let sv = u64::from_ne_bytes(<[u8; 8]>::try_from(s).unwrap());
+            d.copy_from_slice(&(dv ^ sv).to_ne_bytes());
+        }
+        let n = src.len();
+        let done = n / 8 * 8;
+        for i in done..n {
+            dst[i] ^= src[i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// GF(2^8) split-nibble pass, 16 bytes per step. Returns bytes done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified SSSE3 support.
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn mul8_ssse3<const XOR: bool>(
+        tlo: &[u8; 16],
+        thi: &[u8; 16],
+        src: &[u8],
+        dst: &mut [u8],
+    ) -> usize {
+        let lo = _mm_loadu_si128(tlo.as_ptr() as *const __m128i);
+        let hi = _mm_loadu_si128(thi.as_ptr() as *const __m128i);
+        let nib = _mm_set1_epi8(0x0F);
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let s = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let ln = _mm_and_si128(s, nib);
+            let hn = _mm_and_si128(_mm_srli_epi64::<4>(s), nib);
+            let mut p = _mm_xor_si128(_mm_shuffle_epi8(lo, ln), _mm_shuffle_epi8(hi, hn));
+            if XOR {
+                p = _mm_xor_si128(p, _mm_loadu_si128(dst.as_ptr().add(i) as *const __m128i));
+            }
+            _mm_storeu_si128(dst.as_mut_ptr().add(i) as *mut __m128i, p);
+            i += 16;
+        }
+        i
+    }
+
+    /// GF(2^8) split-nibble pass, 32 bytes per step. Returns bytes done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul8_avx2<const XOR: bool>(
+        tlo: &[u8; 16],
+        thi: &[u8; 16],
+        src: &[u8],
+        dst: &mut [u8],
+    ) -> usize {
+        let lo = _mm256_broadcastsi128_si256(_mm_loadu_si128(tlo.as_ptr() as *const __m128i));
+        let hi = _mm256_broadcastsi128_si256(_mm_loadu_si128(thi.as_ptr() as *const __m128i));
+        let nib = _mm256_set1_epi8(0x0F);
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let ln = _mm256_and_si256(s, nib);
+            let hn = _mm256_and_si256(_mm256_srli_epi64::<4>(s), nib);
+            let mut p =
+                _mm256_xor_si256(_mm256_shuffle_epi8(lo, ln), _mm256_shuffle_epi8(hi, hn));
+            if XOR {
+                p = _mm256_xor_si256(
+                    p,
+                    _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i),
+                );
+            }
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, p);
+            i += 32;
+        }
+        i
+    }
+
+    /// GF(2^16) four-nibble pass over little-endian byte pairs, 16 words
+    /// (32 bytes) per step: deinterleave the lo/hi source bytes with
+    /// pack/shift, shuffle the four byte-plane tables, reinterleave with
+    /// unpack. Returns bytes done (a multiple of 32).
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified SSSE3 support.
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn mul16_ssse3<const XOR: bool>(
+        plo: &[[u8; 16]; 4],
+        phi: &[[u8; 16]; 4],
+        src: &[u8],
+        dst: &mut [u8],
+    ) -> usize {
+        let t: [__m128i; 4] = [
+            _mm_loadu_si128(plo[0].as_ptr() as *const __m128i),
+            _mm_loadu_si128(plo[1].as_ptr() as *const __m128i),
+            _mm_loadu_si128(plo[2].as_ptr() as *const __m128i),
+            _mm_loadu_si128(plo[3].as_ptr() as *const __m128i),
+        ];
+        let u: [__m128i; 4] = [
+            _mm_loadu_si128(phi[0].as_ptr() as *const __m128i),
+            _mm_loadu_si128(phi[1].as_ptr() as *const __m128i),
+            _mm_loadu_si128(phi[2].as_ptr() as *const __m128i),
+            _mm_loadu_si128(phi[3].as_ptr() as *const __m128i),
+        ];
+        let nib = _mm_set1_epi8(0x0F);
+        let bytemask = _mm_set1_epi16(0x00FF);
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let v0 = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let v1 = _mm_loadu_si128(src.as_ptr().add(i + 16) as *const __m128i);
+            // deinterleave: lo = low bytes of the 16 words, hi = high bytes
+            let lo = _mm_packus_epi16(_mm_and_si128(v0, bytemask), _mm_and_si128(v1, bytemask));
+            let hi = _mm_packus_epi16(_mm_srli_epi16::<8>(v0), _mm_srli_epi16::<8>(v1));
+            let n0 = _mm_and_si128(lo, nib);
+            let n1 = _mm_and_si128(_mm_srli_epi64::<4>(lo), nib);
+            let n2 = _mm_and_si128(hi, nib);
+            let n3 = _mm_and_si128(_mm_srli_epi64::<4>(hi), nib);
+            let rlo = _mm_xor_si128(
+                _mm_xor_si128(_mm_shuffle_epi8(t[0], n0), _mm_shuffle_epi8(t[1], n1)),
+                _mm_xor_si128(_mm_shuffle_epi8(t[2], n2), _mm_shuffle_epi8(t[3], n3)),
+            );
+            let rhi = _mm_xor_si128(
+                _mm_xor_si128(_mm_shuffle_epi8(u[0], n0), _mm_shuffle_epi8(u[1], n1)),
+                _mm_xor_si128(_mm_shuffle_epi8(u[2], n2), _mm_shuffle_epi8(u[3], n3)),
+            );
+            // reinterleave the product byte planes back into words
+            let mut p0 = _mm_unpacklo_epi8(rlo, rhi);
+            let mut p1 = _mm_unpackhi_epi8(rlo, rhi);
+            if XOR {
+                p0 = _mm_xor_si128(p0, _mm_loadu_si128(dst.as_ptr().add(i) as *const __m128i));
+                p1 = _mm_xor_si128(
+                    p1,
+                    _mm_loadu_si128(dst.as_ptr().add(i + 16) as *const __m128i),
+                );
+            }
+            _mm_storeu_si128(dst.as_mut_ptr().add(i) as *mut __m128i, p0);
+            _mm_storeu_si128(dst.as_mut_ptr().add(i + 16) as *mut __m128i, p1);
+            i += 32;
+        }
+        i
+    }
+
+    /// GF(2^16) four-nibble pass, 32 words (64 bytes) per step. The
+    /// pack/unpack pairs operate per 128-bit lane, and the composition
+    /// pack → shuffle → unpack is lane-consistent, so the interleaved
+    /// word layout round-trips exactly as in the SSE version. Returns
+    /// bytes done (a multiple of 64).
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul16_avx2<const XOR: bool>(
+        plo: &[[u8; 16]; 4],
+        phi: &[[u8; 16]; 4],
+        src: &[u8],
+        dst: &mut [u8],
+    ) -> usize {
+        let t: [__m256i; 4] = [
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(plo[0].as_ptr() as *const __m128i)),
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(plo[1].as_ptr() as *const __m128i)),
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(plo[2].as_ptr() as *const __m128i)),
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(plo[3].as_ptr() as *const __m128i)),
+        ];
+        let u: [__m256i; 4] = [
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(phi[0].as_ptr() as *const __m128i)),
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(phi[1].as_ptr() as *const __m128i)),
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(phi[2].as_ptr() as *const __m128i)),
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(phi[3].as_ptr() as *const __m128i)),
+        ];
+        let nib = _mm256_set1_epi8(0x0F);
+        let bytemask = _mm256_set1_epi16(0x00FF);
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let v0 = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let v1 = _mm256_loadu_si256(src.as_ptr().add(i + 32) as *const __m256i);
+            let lo = _mm256_packus_epi16(
+                _mm256_and_si256(v0, bytemask),
+                _mm256_and_si256(v1, bytemask),
+            );
+            let hi = _mm256_packus_epi16(_mm256_srli_epi16::<8>(v0), _mm256_srli_epi16::<8>(v1));
+            let n0 = _mm256_and_si256(lo, nib);
+            let n1 = _mm256_and_si256(_mm256_srli_epi64::<4>(lo), nib);
+            let n2 = _mm256_and_si256(hi, nib);
+            let n3 = _mm256_and_si256(_mm256_srli_epi64::<4>(hi), nib);
+            let rlo = _mm256_xor_si256(
+                _mm256_xor_si256(_mm256_shuffle_epi8(t[0], n0), _mm256_shuffle_epi8(t[1], n1)),
+                _mm256_xor_si256(_mm256_shuffle_epi8(t[2], n2), _mm256_shuffle_epi8(t[3], n3)),
+            );
+            let rhi = _mm256_xor_si256(
+                _mm256_xor_si256(_mm256_shuffle_epi8(u[0], n0), _mm256_shuffle_epi8(u[1], n1)),
+                _mm256_xor_si256(_mm256_shuffle_epi8(u[2], n2), _mm256_shuffle_epi8(u[3], n3)),
+            );
+            let mut p0 = _mm256_unpacklo_epi8(rlo, rhi);
+            let mut p1 = _mm256_unpackhi_epi8(rlo, rhi);
+            if XOR {
+                p0 = _mm256_xor_si256(
+                    p0,
+                    _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i),
+                );
+                p1 = _mm256_xor_si256(
+                    p1,
+                    _mm256_loadu_si256(dst.as_ptr().add(i + 32) as *const __m256i),
+                );
+            }
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, p0);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i + 32) as *mut __m256i, p1);
+            i += 64;
+        }
+        i
+    }
+
+    /// `dst ^= src`, 16 bytes per step (SSE2 is x86-64 baseline). Returns
+    /// bytes done.
+    ///
+    /// # Safety
+    /// `src`/`dst` must be valid for the lengths given (plain slices are).
+    pub unsafe fn xor_sse2(src: &[u8], dst: &mut [u8]) -> usize {
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let s = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let d = _mm_loadu_si128(dst.as_ptr().add(i) as *const __m128i);
+            _mm_storeu_si128(dst.as_mut_ptr().add(i) as *mut __m128i, _mm_xor_si128(d, s));
+            i += 16;
+        }
+        i
+    }
+
+    /// `dst ^= src`, 32 bytes per step. Returns bytes done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_avx2(src: &[u8], dst: &mut [u8]) -> usize {
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let d = _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(
+                dst.as_mut_ptr().add(i) as *mut __m256i,
+                _mm256_xor_si256(d, s),
+            );
+            i += 32;
+        }
+        i
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// GF(2^8) split-nibble pass (`TBL`), 16 bytes per step. Returns
+    /// bytes done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified NEON support.
+    pub unsafe fn mul8_neon<const XOR: bool>(
+        tlo: &[u8; 16],
+        thi: &[u8; 16],
+        src: &[u8],
+        dst: &mut [u8],
+    ) -> usize {
+        let lo = vld1q_u8(tlo.as_ptr());
+        let hi = vld1q_u8(thi.as_ptr());
+        let nib = vdupq_n_u8(0x0F);
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let s = vld1q_u8(src.as_ptr().add(i));
+            let mut p = veorq_u8(
+                vqtbl1q_u8(lo, vandq_u8(s, nib)),
+                vqtbl1q_u8(hi, vshrq_n_u8::<4>(s)),
+            );
+            if XOR {
+                p = veorq_u8(p, vld1q_u8(dst.as_ptr().add(i)));
+            }
+            vst1q_u8(dst.as_mut_ptr().add(i), p);
+            i += 16;
+        }
+        i
+    }
+
+    /// GF(2^16) four-nibble pass over little-endian byte pairs, 16 words
+    /// (32 bytes) per step: `UZP` deinterleaves the lo/hi source bytes,
+    /// `TBL` looks up the four byte-plane tables, `ZIP` reinterleaves.
+    /// Returns bytes done (a multiple of 32).
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified NEON support.
+    pub unsafe fn mul16_neon<const XOR: bool>(
+        plo: &[[u8; 16]; 4],
+        phi: &[[u8; 16]; 4],
+        src: &[u8],
+        dst: &mut [u8],
+    ) -> usize {
+        let t = [
+            vld1q_u8(plo[0].as_ptr()),
+            vld1q_u8(plo[1].as_ptr()),
+            vld1q_u8(plo[2].as_ptr()),
+            vld1q_u8(plo[3].as_ptr()),
+        ];
+        let u = [
+            vld1q_u8(phi[0].as_ptr()),
+            vld1q_u8(phi[1].as_ptr()),
+            vld1q_u8(phi[2].as_ptr()),
+            vld1q_u8(phi[3].as_ptr()),
+        ];
+        let nib = vdupq_n_u8(0x0F);
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let v0 = vld1q_u8(src.as_ptr().add(i));
+            let v1 = vld1q_u8(src.as_ptr().add(i + 16));
+            let lo = vuzp1q_u8(v0, v1); // low bytes of the 16 words
+            let hi = vuzp2q_u8(v0, v1); // high bytes
+            let n0 = vandq_u8(lo, nib);
+            let n1 = vshrq_n_u8::<4>(lo);
+            let n2 = vandq_u8(hi, nib);
+            let n3 = vshrq_n_u8::<4>(hi);
+            let rlo = veorq_u8(
+                veorq_u8(vqtbl1q_u8(t[0], n0), vqtbl1q_u8(t[1], n1)),
+                veorq_u8(vqtbl1q_u8(t[2], n2), vqtbl1q_u8(t[3], n3)),
+            );
+            let rhi = veorq_u8(
+                veorq_u8(vqtbl1q_u8(u[0], n0), vqtbl1q_u8(u[1], n1)),
+                veorq_u8(vqtbl1q_u8(u[2], n2), vqtbl1q_u8(u[3], n3)),
+            );
+            let mut p0 = vzip1q_u8(rlo, rhi);
+            let mut p1 = vzip2q_u8(rlo, rhi);
+            if XOR {
+                p0 = veorq_u8(p0, vld1q_u8(dst.as_ptr().add(i)));
+                p1 = veorq_u8(p1, vld1q_u8(dst.as_ptr().add(i + 16)));
+            }
+            vst1q_u8(dst.as_mut_ptr().add(i), p0);
+            vst1q_u8(dst.as_mut_ptr().add(i + 16), p1);
+            i += 32;
+        }
+        i
+    }
+
+    /// `dst ^= src`, 16 bytes per step. Returns bytes done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified NEON support.
+    pub unsafe fn xor_neon(src: &[u8], dst: &mut [u8]) -> usize {
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let s = vld1q_u8(src.as_ptr().add(i));
+            let d = vld1q_u8(dst.as_ptr().add(i));
+            vst1q_u8(dst.as_mut_ptr().add(i), veorq_u8(d, s));
+            i += 16;
+        }
+        i
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// Downgrade to scalar when the requested kernel can't run here — the
+/// safety gate in front of every `unsafe` feature block.
+#[inline]
+fn usable(k: Kernel) -> Kernel {
+    if k.is_available() {
+        k
+    } else {
+        Kernel::Scalar
+    }
+}
+
+fn mul8_dispatch<const XOR: bool>(k: Kernel, c: u8, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(src.len(), dst.len());
+    let k = usable(k);
+    if k == Kernel::Scalar {
+        scalar::mul8::<XOR>(c, src, dst);
+        return;
+    }
+    let (tlo, thi) = nib_tables8(c);
+    let done = match k {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `usable` verified the feature at runtime.
+        Kernel::Ssse3 => unsafe { x86::mul8_ssse3::<XOR>(&tlo, &thi, src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Kernel::Avx2 => unsafe { x86::mul8_avx2::<XOR>(&tlo, &thi, src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Kernel::Neon => unsafe { neon::mul8_neon::<XOR>(&tlo, &thi, src, dst) },
+        _ => 0,
+    };
+    for i in done..src.len() {
+        let s = src[i];
+        let p = tlo[(s & 0x0F) as usize] ^ thi[(s >> 4) as usize];
+        if XOR {
+            dst[i] ^= p;
+        } else {
+            dst[i] = p;
+        }
+    }
+}
+
+fn mul16_dispatch<const XOR: bool>(k: Kernel, c: u16, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(src.len(), dst.len());
+    assert_eq!(src.len() % 2, 0, "GF(2^16) payload must have even length");
+    let k = usable(k);
+    if k == Kernel::Scalar {
+        scalar::mul16::<XOR>(c, src, dst);
+        return;
+    }
+    let t = nib_tables16(c);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    let (plo, phi) = planes16(&t);
+    let done = match k {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `usable` verified the feature at runtime.
+        Kernel::Ssse3 => unsafe { x86::mul16_ssse3::<XOR>(&plo, &phi, src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Kernel::Avx2 => unsafe { x86::mul16_avx2::<XOR>(&plo, &phi, src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Kernel::Neon => unsafe { neon::mul16_neon::<XOR>(&plo, &phi, src, dst) },
+        _ => 0,
+    };
+    let n = src.len();
+    let mut i = done;
+    while i < n {
+        let p = nib_mul16(&t, u16::from_le_bytes([src[i], src[i + 1]]));
+        let v = if XOR {
+            u16::from_le_bytes([dst[i], dst[i + 1]]) ^ p
+        } else {
+            p
+        };
+        dst[i..i + 2].copy_from_slice(&v.to_le_bytes());
+        i += 2;
+    }
+}
+
+/// `dst[i] ^= c·src[i]` over GF(2^8) byte slices on the given kernel.
+/// Handles every coefficient (0 and 1 included) — the slice layer
+/// shortcuts them earlier only for work accounting and speed.
+pub fn mul_xor8(k: Kernel, c: u8, src: &[u8], dst: &mut [u8]) {
+    mul8_dispatch::<true>(k, c, src, dst);
+}
+
+/// `dst[i] = c·src[i]` over GF(2^8) byte slices on the given kernel.
+pub fn mul8(k: Kernel, c: u8, src: &[u8], dst: &mut [u8]) {
+    mul8_dispatch::<false>(k, c, src, dst);
+}
+
+/// `dst[i] ^= c·src[i]` over GF(2^16) little-endian byte pairs (length
+/// must be even) on the given kernel. Works on any byte alignment.
+pub fn mul_xor16(k: Kernel, c: u16, src: &[u8], dst: &mut [u8]) {
+    mul16_dispatch::<true>(k, c, src, dst);
+}
+
+/// `dst[i] = c·src[i]` over GF(2^16) little-endian byte pairs on the
+/// given kernel.
+pub fn mul16(k: Kernel, c: u16, src: &[u8], dst: &mut [u8]) {
+    mul16_dispatch::<false>(k, c, src, dst);
+}
+
+/// `dst ^= src` on the given kernel (u64 words on scalar, vector XOR on
+/// the SIMD kernels).
+pub fn xor_bytes(k: Kernel, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(src.len(), dst.len());
+    let k = usable(k);
+    let done = match k {
+        Kernel::Scalar => {
+            scalar::xor_wide(src, dst);
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: plain slices; SSE2 is x86-64 baseline.
+        Kernel::Ssse3 => unsafe { x86::xor_sse2(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `usable` verified AVX2 at runtime.
+        Kernel::Avx2 => unsafe { x86::xor_avx2(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `usable` verified NEON at runtime.
+        Kernel::Neon => unsafe { neon::xor_neon(src, dst) },
+        _ => 0,
+    };
+    for i in done..src.len() {
+        dst[i] ^= src[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::tables::mul_bitwise;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn kernel_names_roundtrip() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::from_name(k.name()), Some(k));
+            assert_eq!(format!("{k}"), k.name());
+        }
+        assert_eq!(Kernel::from_name("sse9"), None);
+    }
+
+    #[test]
+    fn resolve_priorities() {
+        // forced scalar beats everything
+        assert_eq!(resolve(true, Some("avx2")), Kernel::Scalar);
+        // an explicit available kernel wins over detection
+        assert_eq!(resolve(false, Some("scalar")), Kernel::Scalar);
+        // unknown / unavailable requests fall back to detection
+        assert_eq!(resolve(false, Some("nonsense")), Kernel::detect());
+        assert_eq!(resolve(false, None), Kernel::detect());
+        for k in Kernel::available_kernels() {
+            assert_eq!(resolve(false, Some(k.name())), k);
+        }
+    }
+
+    #[test]
+    fn detected_kernels_are_available_and_include_scalar() {
+        let ks = Kernel::available_kernels();
+        assert!(ks.contains(&Kernel::Scalar));
+        assert!(ks.iter().all(|k| k.is_available()));
+        assert!(Kernel::detect().is_available());
+        assert!(Kernel::active().is_available());
+    }
+
+    /// Lengths that cover empty, sub-vector, exact-vector and straddling
+    /// tails for every vector width in play (16/32/64 bytes).
+    const LENS: [usize; 14] = [0, 1, 2, 3, 8, 15, 16, 17, 31, 32, 33, 63, 64, 257];
+
+    #[test]
+    fn mul_xor8_matches_bitwise_on_every_kernel() {
+        let mut rng = SplitMix64::new(11);
+        let base_src: Vec<u8> = (0..600).map(|_| rng.next_u64() as u8).collect();
+        let base_dst: Vec<u8> = (0..600).map(|_| rng.next_u64() as u8).collect();
+        for k in Kernel::available_kernels() {
+            for c in [0u8, 1, 2, 3, 0x53, 0x8E, 255] {
+                for len in LENS {
+                    for off in 0..3usize {
+                        let src = &base_src[off..off + len];
+                        let mut dst = base_dst[off..off + len].to_vec();
+                        mul_xor8(k, c, src, &mut dst);
+                        for i in 0..len {
+                            let expect = base_dst[off + i]
+                                ^ mul_bitwise(c as u32, src[i] as u32, 8) as u8;
+                            assert_eq!(dst[i], expect, "k={k} c={c} len={len} off={off} i={i}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul8_overwrite_matches_bitwise_on_every_kernel() {
+        let mut rng = SplitMix64::new(12);
+        let src: Vec<u8> = (0..300).map(|_| rng.next_u64() as u8).collect();
+        for k in Kernel::available_kernels() {
+            for c in [0u8, 1, 7, 200] {
+                let mut dst = vec![0xAAu8; src.len()];
+                mul8(k, c, &src, &mut dst);
+                for i in 0..src.len() {
+                    assert_eq!(
+                        dst[i] as u32,
+                        mul_bitwise(c as u32, src[i] as u32, 8),
+                        "k={k} c={c} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul_xor16_matches_bitwise_on_every_kernel() {
+        let mut rng = SplitMix64::new(13);
+        let base_src: Vec<u8> = (0..800).map(|_| rng.next_u64() as u8).collect();
+        let base_dst: Vec<u8> = (0..800).map(|_| rng.next_u64() as u8).collect();
+        for k in Kernel::available_kernels() {
+            for c in [0u16, 1, 2, 0x1234, 0x8001, 0xFFFF] {
+                for len in LENS.map(|l| l / 2 * 2) {
+                    // odd byte offsets exercise unaligned vector loads
+                    for off in [0usize, 1, 2, 3] {
+                        let src = &base_src[off..off + len];
+                        let mut dst = base_dst[off..off + len].to_vec();
+                        mul_xor16(k, c, src, &mut dst);
+                        let mut i = 0;
+                        while i < len {
+                            let x = u16::from_le_bytes([src[i], src[i + 1]]);
+                            let d0 = u16::from_le_bytes([base_dst[off + i], base_dst[off + i + 1]]);
+                            let expect = d0 ^ mul_bitwise(c as u32, x as u32, 16) as u16;
+                            let got = u16::from_le_bytes([dst[i], dst[i + 1]]);
+                            assert_eq!(got, expect, "k={k} c={c:#x} len={len} off={off} i={i}");
+                            i += 2;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul16_overwrite_matches_bitwise_on_every_kernel() {
+        let mut rng = SplitMix64::new(14);
+        let src: Vec<u8> = (0..400).map(|_| rng.next_u64() as u8).collect();
+        for k in Kernel::available_kernels() {
+            for c in [0u16, 1, 9, 0xBEEF] {
+                let mut dst = vec![0x55u8; src.len()];
+                mul16(k, c, &src, &mut dst);
+                let mut i = 0;
+                while i < src.len() {
+                    let x = u16::from_le_bytes([src[i], src[i + 1]]);
+                    let got = u16::from_le_bytes([dst[i], dst[i + 1]]);
+                    assert_eq!(got as u32, mul_bitwise(c as u32, x as u32, 16), "k={k} c={c:#x} i={i}");
+                    i += 2;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xor_bytes_matches_on_every_kernel() {
+        let mut rng = SplitMix64::new(15);
+        let src: Vec<u8> = (0..500).map(|_| rng.next_u64() as u8).collect();
+        let orig: Vec<u8> = (0..500).map(|_| rng.next_u64() as u8).collect();
+        for k in Kernel::available_kernels() {
+            for len in LENS {
+                for off in 0..2usize {
+                    let mut dst = orig[off..off + len].to_vec();
+                    xor_bytes(k, &src[off..off + len], &mut dst);
+                    for i in 0..len {
+                        assert_eq!(dst[i], orig[off + i] ^ src[off + i], "k={k} len={len} i={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unavailable_kernel_degrades_to_scalar() {
+        // A kernel foreign to this arch must still produce correct output
+        // (the dispatcher downgrades instead of entering unsafe blocks).
+        let foreign = if cfg!(target_arch = "x86_64") {
+            Kernel::Neon
+        } else {
+            Kernel::Avx2
+        };
+        if foreign.is_available() {
+            return; // nothing to test on this host
+        }
+        let src = vec![7u8; 100];
+        let mut dst = vec![1u8; 100];
+        mul_xor8(foreign, 5, &src, &mut dst);
+        let expect = 1 ^ mul_bitwise(5, 7, 8) as u8;
+        assert!(dst.iter().all(|&b| b == expect));
+    }
+
+    #[test]
+    fn nibble_tables_compose_the_product() {
+        let (lo, hi) = nib_tables8(0x53);
+        for x in 0u32..256 {
+            let got = lo[(x & 0xF) as usize] ^ hi[(x >> 4) as usize];
+            assert_eq!(got as u32, mul_bitwise(0x53, x, 8), "x={x}");
+        }
+        let t = nib_tables16(0x1234);
+        for x in [0u32, 1, 0xFF, 0x100, 0xABCD, 0xFFFF] {
+            assert_eq!(nib_mul16(&t, x as u16) as u32, mul_bitwise(0x1234, x, 16), "x={x}");
+        }
+    }
+}

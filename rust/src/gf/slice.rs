@@ -7,15 +7,19 @@
 //!
 //! The key trick (same as Jerasure's `MULT_TABLE` / gf-complete's `SPLIT`):
 //! a slice is always multiplied by ONE coefficient, so we pre-expand that
-//! coefficient into small product tables and stream the payload once.
+//! coefficient into small product tables and stream the payload once. As
+//! of PR 6 the per-byte work is delegated to [`super::simd`] — the
+//! process-wide [`Kernel`] (scalar 256-entry tables, or split-nibble
+//! `PSHUFB`/`TBL` vector shuffles where the CPU supports them) is picked
+//! once by [`Kernel::active`] and every slice op streams through it.
 //!
-//! * GF(2^8): one 256-entry `u8` product table — a single L1-resident lookup
-//!   per byte.
-//! * GF(2^16): two 256-entry `u16` tables (low/high source byte), exploiting
-//!   distributivity `c*(hi·256 ⊕ lo) = c*hi·256 ⊕ c*lo`; two lookups + one
-//!   XOR per 16-bit word.
+//! The [`GfWork`] reported is computed from the coefficient class and the
+//! payload length *before* dispatch, so it is identical on every kernel —
+//! `ZeroCost` pricing, `SimClock` determinism and the dataplane's
+//! per-frame charges do not depend on which instructions ran.
 
 use super::field::{Gf256, Gf65536, GfElem};
+use super::simd::{self, Kernel};
 use crate::resources::GfWork;
 
 /// `dst[i] ^= c * src[i]` — the multiply-accumulate at the heart of both the
@@ -34,37 +38,20 @@ pub trait SliceOps: GfElem {
     fn mul_slice(c: Self, src: &[Self], dst: &mut [Self]) -> GfWork;
 }
 
-/// Build the 256-entry product table for a GF(2^8) coefficient.
+/// Raw byte view of a symbol slice (both fields are plain little-endian
+/// integer wrappers, so the reinterpretation is layout-exact).
 #[inline]
-fn table256(c: Gf256) -> [u8; 256] {
-    let mut t = [0u8; 256];
-    if c.0 == 0 {
-        return t;
-    }
-    let tabs = Gf256::tables();
-    let lc = tabs.log[c.0 as usize];
-    for (x, slot) in t.iter_mut().enumerate().skip(1) {
-        *slot = tabs.exp[(lc + tabs.log[x]) as usize] as u8;
-    }
-    t
+fn as_bytes<F: GfElem>(s: &[F]) -> &[u8] {
+    // SAFETY: Gf256/Gf65536 are transparent u8/u16 wrappers; any byte
+    // pattern is a valid symbol and size_of_val gives the exact byte count.
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
 }
 
-/// Build the two 256-entry split tables for a GF(2^16) coefficient:
-/// `lo[b] = c * b` and `hi[b] = c * (b << 8)`.
+/// Mutable raw byte view of a symbol slice.
 #[inline]
-fn tables65536(c: Gf65536) -> ([u16; 256], [u16; 256]) {
-    let mut lo = [0u16; 256];
-    let mut hi = [0u16; 256];
-    if c.0 == 0 {
-        return (lo, hi);
-    }
-    let tabs = Gf65536::tables();
-    let lc = tabs.log[c.0 as usize];
-    for b in 1usize..256 {
-        lo[b] = tabs.exp[(lc + tabs.log[b]) as usize] as u16;
-        hi[b] = tabs.exp[(lc + tabs.log[b << 8]) as usize] as u16;
-    }
-    (lo, hi)
+fn as_bytes_mut<F: GfElem>(s: &mut [F]) -> &mut [u8] {
+    // SAFETY: as above.
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut u8, std::mem::size_of_val(s)) }
 }
 
 impl SliceOps for Gf256 {
@@ -76,23 +63,8 @@ impl SliceOps for Gf256 {
         if c.0 == 1 {
             return xor_slice(src, dst);
         }
-        let t = table256(c);
-        // 8-way unroll: keeps the table lookup pipeline full on one core.
         let n = src.len();
-        let chunks = n / 8 * 8;
-        for i in (0..chunks).step_by(8) {
-            dst[i].0 ^= t[src[i].0 as usize];
-            dst[i + 1].0 ^= t[src[i + 1].0 as usize];
-            dst[i + 2].0 ^= t[src[i + 2].0 as usize];
-            dst[i + 3].0 ^= t[src[i + 3].0 as usize];
-            dst[i + 4].0 ^= t[src[i + 4].0 as usize];
-            dst[i + 5].0 ^= t[src[i + 5].0 as usize];
-            dst[i + 6].0 ^= t[src[i + 6].0 as usize];
-            dst[i + 7].0 ^= t[src[i + 7].0 as usize];
-        }
-        for i in chunks..n {
-            dst[i].0 ^= t[src[i].0 as usize];
-        }
+        simd::mul_xor8(Kernel::active(), c.0, as_bytes(src), as_bytes_mut(dst));
         GfWork::mac(n)
     }
 
@@ -106,10 +78,7 @@ impl SliceOps for Gf256 {
             dst.copy_from_slice(src);
             return GfWork::xor(dst.len());
         }
-        let t = table256(c);
-        for (d, s) in dst.iter_mut().zip(src) {
-            d.0 = t[s.0 as usize];
-        }
+        simd::mul8(Kernel::active(), c.0, as_bytes(src), as_bytes_mut(dst));
         GfWork::mac(dst.len())
     }
 }
@@ -123,10 +92,7 @@ impl SliceOps for Gf65536 {
         if c.0 == 1 {
             return xor_slice(src, dst);
         }
-        let (lo, hi) = tables65536(c);
-        for (d, s) in dst.iter_mut().zip(src) {
-            d.0 ^= lo[(s.0 & 0xFF) as usize] ^ hi[(s.0 >> 8) as usize];
-        }
+        simd::mul_xor16(Kernel::active(), c.0, as_bytes(src), as_bytes_mut(dst));
         GfWork::mac(2 * dst.len())
     }
 
@@ -140,10 +106,7 @@ impl SliceOps for Gf65536 {
             dst.copy_from_slice(src);
             return GfWork::xor(2 * dst.len());
         }
-        let (lo, hi) = tables65536(c);
-        for (d, s) in dst.iter_mut().zip(src) {
-            d.0 = lo[(s.0 & 0xFF) as usize] ^ hi[(s.0 >> 8) as usize];
-        }
+        simd::mul16(Kernel::active(), c.0, as_bytes(src), as_bytes_mut(dst));
         GfWork::mac(2 * dst.len())
     }
 }
@@ -160,15 +123,14 @@ pub fn mul_slice<F: SliceOps>(c: F, src: &[F], dst: &mut [F]) -> GfWork {
     F::mul_slice(c, src, dst)
 }
 
-/// Plain `dst ^= src`, word-accelerated where alignment allows.
+/// Plain `dst ^= src` — in GF(2^w) field addition *is* XOR, so the pass
+/// runs on the raw byte views: `u64` words on the scalar kernel, vector
+/// XOR on the SIMD kernels, any alignment.
 pub fn xor_slice<F: GfElem>(src: &[F], dst: &mut [F]) -> GfWork {
     assert_eq!(src.len(), dst.len());
-    // Safety-free fast path: XOR via u64 words on the raw byte views when
-    // both slices have the same (arbitrary) alignment offset.
-    for (d, s) in dst.iter_mut().zip(src) {
-        *d = d.add(*s);
-    }
-    GfWork::xor(std::mem::size_of_val(dst))
+    let n = std::mem::size_of_val(dst);
+    simd::xor_bytes(Kernel::active(), as_bytes(src), as_bytes_mut(dst));
+    GfWork::xor(n)
 }
 
 /// Reinterpret a byte buffer as GF(2^8) symbols (zero-copy).
@@ -186,14 +148,150 @@ pub fn bytes_as_gf256_mut(bytes: &mut [u8]) -> &mut [Gf256] {
     unsafe { std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut Gf256, bytes.len()) }
 }
 
-/// Reinterpret a byte buffer as GF(2^16) symbols (zero-copy; len must be even
-/// and the pointer 2-aligned, which `Vec<u8>` always satisfies in practice —
-/// callers allocate via `vec![0u8; n]`).
-pub fn bytes_as_gf65536(bytes: &[u8]) -> &[Gf65536] {
-    assert_eq!(bytes.len() % 2, 0, "GF(2^16) payload must have even length");
-    assert_eq!(bytes.as_ptr() as usize % 2, 0, "GF(2^16) payload must be 2-aligned");
-    // SAFETY: length/alignment checked; u16 has no invalid bit patterns.
-    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const Gf65536, bytes.len() / 2) }
+#[inline]
+fn gf16_borrowable(bytes: &[u8]) -> bool {
+    bytes.len() % 2 == 0 && bytes.as_ptr() as usize % 2 == 0
+}
+
+/// GF(2^16) read view of a byte buffer: zero-copy when the buffer has even
+/// length and a 2-aligned pointer (every `vec![0u8; n]` payload in
+/// practice), otherwise a checked copy of the little-endian word stream —
+/// an odd trailing byte becomes the low byte of a zero-padded final
+/// symbol. Dereferences to `[Gf65536]` either way.
+#[derive(Debug)]
+pub enum Gf16View<'a> {
+    /// Zero-copy reinterpretation of the caller's bytes.
+    Borrowed(&'a [Gf65536]),
+    /// Copied symbols (odd length or misaligned pointer).
+    Owned(Vec<Gf65536>),
+}
+
+impl std::ops::Deref for Gf16View<'_> {
+    type Target = [Gf65536];
+    fn deref(&self) -> &[Gf65536] {
+        match self {
+            Gf16View::Borrowed(s) => s,
+            Gf16View::Owned(v) => v,
+        }
+    }
+}
+
+impl Gf16View<'_> {
+    /// Whether this view reinterprets the caller's buffer in place.
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, Gf16View::Borrowed(_))
+    }
+}
+
+/// Reinterpret a byte buffer as GF(2^16) symbols: zero-copy where layout
+/// allows, copy fallback otherwise (see [`Gf16View`]).
+pub fn bytes_as_gf65536(bytes: &[u8]) -> Gf16View<'_> {
+    if bytes.is_empty() {
+        // an empty &[u8]'s pointer may be odd — don't reinterpret it
+        return Gf16View::Borrowed(&[]);
+    }
+    if gf16_borrowable(bytes) {
+        // SAFETY: length/alignment checked; u16 has no invalid bit patterns.
+        Gf16View::Borrowed(unsafe {
+            std::slice::from_raw_parts(bytes.as_ptr() as *const Gf65536, bytes.len() / 2)
+        })
+    } else {
+        let mut v = Vec::with_capacity(bytes.len().div_ceil(2));
+        let mut it = bytes.chunks_exact(2);
+        for pair in &mut it {
+            v.push(Gf65536(u16::from_le_bytes([pair[0], pair[1]])));
+        }
+        if let [last] = it.remainder() {
+            v.push(Gf65536(*last as u16));
+        }
+        Gf16View::Owned(v)
+    }
+}
+
+enum Gf16ViewMutInner<'a> {
+    Borrowed(&'a mut [Gf65536]),
+    /// Copy-out / write-back: `symbols` is edited in place and flushed to
+    /// `bytes` on drop. An odd trailing byte round-trips only the low byte
+    /// of its zero-padded final symbol.
+    Copied {
+        bytes: &'a mut [u8],
+        symbols: Vec<Gf65536>,
+    },
+}
+
+/// GF(2^16) write view of a byte buffer: zero-copy when even/2-aligned,
+/// otherwise a copy whose edits are written back (little-endian) when the
+/// view drops. Dereferences to `[Gf65536]`/`mut [Gf65536]` either way.
+pub struct Gf16ViewMut<'a> {
+    inner: Gf16ViewMutInner<'a>,
+}
+
+impl std::ops::Deref for Gf16ViewMut<'_> {
+    type Target = [Gf65536];
+    fn deref(&self) -> &[Gf65536] {
+        match &self.inner {
+            Gf16ViewMutInner::Borrowed(s) => s,
+            Gf16ViewMutInner::Copied { symbols, .. } => symbols,
+        }
+    }
+}
+
+impl std::ops::DerefMut for Gf16ViewMut<'_> {
+    fn deref_mut(&mut self) -> &mut [Gf65536] {
+        match &mut self.inner {
+            Gf16ViewMutInner::Borrowed(s) => s,
+            Gf16ViewMutInner::Copied { symbols, .. } => symbols,
+        }
+    }
+}
+
+impl Gf16ViewMut<'_> {
+    /// Whether this view edits the caller's buffer in place.
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self.inner, Gf16ViewMutInner::Borrowed(_))
+    }
+}
+
+impl Drop for Gf16ViewMut<'_> {
+    fn drop(&mut self) {
+        if let Gf16ViewMutInner::Copied { bytes, symbols } = &mut self.inner {
+            for (chunk, sym) in bytes.chunks_mut(2).zip(symbols.iter()) {
+                let le = sym.0.to_le_bytes();
+                // a 1-byte tail chunk persists only the low byte
+                chunk.copy_from_slice(&le[..chunk.len()]);
+            }
+        }
+    }
+}
+
+/// Mutable GF(2^16) view of a byte buffer: zero-copy where layout allows,
+/// checked copy + drop-time write-back otherwise (see [`Gf16ViewMut`]).
+pub fn bytes_as_gf65536_mut(bytes: &mut [u8]) -> Gf16ViewMut<'_> {
+    if bytes.is_empty() {
+        // as in `bytes_as_gf65536`: never reinterpret a possibly-odd
+        // dangling pointer, even at length zero
+        return Gf16ViewMut {
+            inner: Gf16ViewMutInner::Borrowed(&mut []),
+        };
+    }
+    if gf16_borrowable(bytes) {
+        // SAFETY: length/alignment checked; u16 has no invalid bit patterns.
+        let s = unsafe {
+            std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut Gf65536, bytes.len() / 2)
+        };
+        Gf16ViewMut {
+            inner: Gf16ViewMutInner::Borrowed(s),
+        }
+    } else {
+        let symbols = match bytes_as_gf65536(bytes) {
+            Gf16View::Owned(v) => v,
+            // bytes fail the borrow check here too, so the read view copied
+            Gf16View::Borrowed(s) => s.to_vec(),
+        };
+        Gf16ViewMut {
+            inner: Gf16ViewMutInner::Copied { bytes, symbols },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -263,14 +361,83 @@ mod tests {
     }
 
     #[test]
+    fn xor_slice_matches_elementwise_add_both_widths() {
+        let mut rng = SplitMix64::new(51);
+        // odd length exercises the word-pass tail
+        let src: Vec<Gf65536> = (0..251).map(|_| Gf65536(rng.next_u64() as u16)).collect();
+        let orig: Vec<Gf65536> = (0..251).map(|_| Gf65536(rng.next_u64() as u16)).collect();
+        let mut dst = orig.clone();
+        xor_slice(&src, &mut dst);
+        for i in 0..src.len() {
+            assert_eq!(dst[i], orig[i].add(src[i]), "i={i}");
+        }
+    }
+
+    #[test]
     fn byte_views_roundtrip() {
         let bytes: Vec<u8> = (0..64).collect();
         let view = bytes_as_gf256(&bytes);
         assert_eq!(view.len(), 64);
         assert_eq!(view[10], Gf256(10));
         let wide = bytes_as_gf65536(&bytes);
+        assert!(wide.is_borrowed());
         assert_eq!(wide.len(), 32);
         assert_eq!(wide[0], Gf65536(u16::from_le_bytes([0, 1])));
+    }
+
+    #[test]
+    fn gf16_view_copies_odd_and_unaligned_buffers() {
+        // odd length: copy fallback, zero-padded final symbol
+        let odd: Vec<u8> = vec![0x11, 0x22, 0x33];
+        let v = bytes_as_gf65536(&odd);
+        assert!(!v.is_borrowed());
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0], Gf65536(0x2211));
+        assert_eq!(v[1], Gf65536(0x0033));
+        // misaligned pointer: slice a 2-aligned Vec at an odd offset
+        let buf: Vec<u8> = (0..9u8).collect();
+        let off = (buf.as_ptr() as usize % 2 == 0) as usize; // odd address
+        let sub = &buf[off..off + 4];
+        let v = bytes_as_gf65536(sub);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0], Gf65536(u16::from_le_bytes([sub[0], sub[1]])));
+        // empty is a fine borrow
+        assert!(bytes_as_gf65536(&[]).is_borrowed());
+    }
+
+    #[test]
+    fn gf16_view_mut_borrows_and_edits_in_place() {
+        let mut bytes = vec![0u8; 8];
+        {
+            let mut v = bytes_as_gf65536_mut(&mut bytes);
+            assert!(v.is_borrowed());
+            v[1] = Gf65536(0xBEEF);
+        }
+        assert_eq!(&bytes[2..4], &0xBEEFu16.to_le_bytes());
+    }
+
+    #[test]
+    fn gf16_view_mut_writes_back_copied_buffers() {
+        // odd length: edits flush on drop; the tail symbol persists its
+        // low byte only
+        let mut bytes = vec![0u8; 5];
+        {
+            let mut v = bytes_as_gf65536_mut(&mut bytes);
+            assert!(!v.is_borrowed());
+            assert_eq!(v.len(), 3);
+            v[0] = Gf65536(0x1234);
+            v[2] = Gf65536(0xAB99);
+        }
+        assert_eq!(bytes, vec![0x34, 0x12, 0, 0, 0x99]);
+        // misaligned: same write-back through the copy
+        let mut buf = vec![0u8; 9];
+        let off = (buf.as_ptr() as usize % 2 == 0) as usize;
+        {
+            let mut v = bytes_as_gf65536_mut(&mut buf[off..off + 4]);
+            assert!(!v.is_borrowed());
+            v[0] = Gf65536(0x5678);
+        }
+        assert_eq!(&buf[off..off + 2], &0x5678u16.to_le_bytes());
     }
 
     #[test]

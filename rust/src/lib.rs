@@ -26,10 +26,10 @@
 //! |---|---|
 //! | [`clock`] | pluggable time: `RealClock` (wall time) vs `SimClock` (deterministic discrete-event virtual time), clock channels, participant accounting |
 //! | [`resources`] | unified resource model: `GfWork` units, `CostModel` (`ZeroCost`/`UniformCost`/`ProfileCost` + per-node multi-core `NodeProfile`s, runtime re-profiling), per-node `CpuMeter` charging compute in virtual time over core lanes (`backlog()` is the placement load signal) |
-//! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops (work-reporting), matrices, Gauss |
+//! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops (work-reporting), matrices, Gauss; [`gf::simd`] runtime-dispatched kernels (scalar / SSSE3 / AVX2 / NEON split-nibble `PSHUFB`/`TBL`, forced via `RAPIDRAID_FORCE_SCALAR` / `RAPIDRAID_KERNEL`) |
 //! | [`codes`] | classical Cauchy Reed-Solomon + RapidRAID code constructions, coefficient search, dependency census; [`codes::topology`] composes a schedule over any rooted shape into its generator (`TopologyShape`/`TopologyCode`), and `CodeView` is the generator-level surface decode/repair consume |
 //! | [`reliability`] | static resilience (probability of data loss, "number of 9's") |
-//! | [`cluster`] | simulated storage cluster: nodes, rate-limited links, congestion, crash-stop failure injection (`fail_node`/`revive_node`); everything timed on the spec's clock |
+//! | [`cluster`] | simulated storage cluster: nodes, rate-limited links (zero-copy `Payload` frames — `Arc`-backed views, fan-out without memcpy), congestion, crash-stop failure injection (`fail_node`/`revive_node`); everything timed on the spec's clock |
 //! | [`storage`] | objects, blocks, replica placement, block stores |
 //! | [`coordinator`] | the archival system: ArchivalPlan IR + PlanExecutor engine, with classical/pipelined/batch/decode/migration as plan builders; degraded reads via `decode::survey_coded` |
 //! | [`coordinator::topology`] | first-class pipeline shapes: `Topology` (`Chain`/`Tree`/`Hybrid`) expanded to ordered shapes, encode/aggregate lowerings onto the plan IR, and shape-aware `PlacementPolicy` placement (`FifoPolicy`/`CongestionAwarePolicy`/`LoadAwarePolicy`, slot-weighted binding) |

@@ -132,6 +132,24 @@ impl BenchJson {
         std::fs::write(&path, self.to_json())?;
         Ok(path)
     }
+
+    /// Find a result series by exact name (searches `series`, then
+    /// `spans`) — how calibration consumers pull the `calibrate/*`
+    /// candles back out of a report.
+    pub fn find_series(&self, name: &str) -> Option<&Candle> {
+        self.series
+            .iter()
+            .chain(self.spans.iter())
+            .find(|c| c.name == name)
+    }
+
+    /// Look up a parameter value by key.
+    pub fn get_param(&self, key: &str) -> Option<&str> {
+        self.params
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +191,19 @@ mod tests {
     fn file_name_is_sanitized() {
         assert_eq!(BenchJson::new("fig4-tpc-sim").file_name(), "BENCH_fig4-tpc-sim.json");
         assert_eq!(BenchJson::new("a/b c").file_name(), "BENCH_a_b_c.json");
+    }
+
+    #[test]
+    fn find_series_and_get_param() {
+        let mut r = BenchJson::new("cal").param("calibrate_bytes", 1 << 20);
+        r.series.push(candle("calibrate/mac", &[4]));
+        r.spans.push(candle("CEC/gemm.compute", &[5]));
+        assert_eq!(r.find_series("calibrate/mac").unwrap().samples.len(), 1);
+        // spans are searched too
+        assert!(r.find_series("CEC/gemm.compute").is_some());
+        assert!(r.find_series("nope").is_none());
+        assert_eq!(r.get_param("calibrate_bytes"), Some("1048576"));
+        assert_eq!(r.get_param("missing"), None);
     }
 
     #[test]

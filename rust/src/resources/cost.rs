@@ -91,6 +91,39 @@ impl UniformCost {
         Arc::new(Self::calibrated())
     }
 
+    /// Rates measured on the machine the crate actually runs on, from a
+    /// `gf_hotpath` bench report: the bench times one MAC / XOR / store
+    /// pass over `calibrate_bytes` bytes and one Gauss-Jordan inversion of
+    /// a `calibrate_invert_dim`-square matrix, publishing them as the
+    /// `calibrate/{mac,xor,store,invert}` series. Each rate is the
+    /// category's work divided by its median sample — so `-sim` presets
+    /// track measured throughput instead of hardcoded EC2-era guesses.
+    pub fn from_measured(bench: &crate::metrics::BenchJson) -> anyhow::Result<Self> {
+        let bytes: f64 = bench
+            .get_param("calibrate_bytes")
+            .ok_or_else(|| anyhow::anyhow!("report has no calibrate_bytes param"))?
+            .parse::<u64>()? as f64;
+        let dim: f64 = bench
+            .get_param("calibrate_invert_dim")
+            .ok_or_else(|| anyhow::anyhow!("report has no calibrate_invert_dim param"))?
+            .parse::<u64>()? as f64;
+        anyhow::ensure!(bytes > 0.0 && dim > 0.0, "degenerate calibration sizes");
+        let rate = |name: &str, work: f64| -> anyhow::Result<f64> {
+            let c = bench
+                .find_series(name)
+                .ok_or_else(|| anyhow::anyhow!("report has no {name} series"))?;
+            let secs = c.median().as_secs_f64();
+            anyhow::ensure!(secs > 0.0, "{name} median is zero");
+            Ok(work / secs)
+        };
+        Ok(Self {
+            mac_bytes_per_sec: rate("calibrate/mac", bytes)?,
+            xor_bytes_per_sec: rate("calibrate/xor", bytes)?,
+            store_bytes_per_sec: rate("calibrate/store", bytes)?,
+            invert_elems_per_sec: rate("calibrate/invert", dim * dim * dim)?,
+        })
+    }
+
     fn secs(&self, work: &GfWork) -> f64 {
         work.mac_bytes as f64 / self.mac_bytes_per_sec
             + work.xor_bytes as f64 / self.xor_bytes_per_sec
@@ -230,6 +263,50 @@ mod tests {
             assert!(m.cost(0, &w) > Duration::ZERO, "{w:?} priced at zero");
         }
         assert_eq!(m.cost(0, &GfWork::ZERO), Duration::ZERO);
+    }
+
+    #[test]
+    fn from_measured_converts_medians_to_rates() {
+        use crate::metrics::BenchJson;
+        use crate::util::bench::Candle;
+        let candle = |name: &str, ms: &[u64]| {
+            let mut samples: Vec<Duration> =
+                ms.iter().map(|&m| Duration::from_millis(m)).collect();
+            samples.sort_unstable();
+            Candle {
+                name: name.to_string(),
+                samples,
+            }
+        };
+        let mut r = BenchJson::new("gf-hotpath")
+            .param("calibrate_bytes", 1_000_000u64)
+            .param("calibrate_invert_dim", 100u64);
+        // medians: mac 4 ms, xor 1 ms, store 2 ms, invert 10 ms
+        r.series.push(candle("calibrate/mac", &[8, 4, 3]));
+        r.series.push(candle("calibrate/xor", &[1]));
+        r.series.push(candle("calibrate/store", &[2]));
+        r.series.push(candle("calibrate/invert", &[10]));
+        let m = UniformCost::from_measured(&r).unwrap();
+        assert!((m.mac_bytes_per_sec - 250e6).abs() < 1e3, "{}", m.mac_bytes_per_sec);
+        assert!((m.xor_bytes_per_sec - 1e9).abs() < 1e3);
+        assert!((m.store_bytes_per_sec - 500e6).abs() < 1e3);
+        // 100³ elems / 10 ms = 1e8 elems/s
+        assert!((m.invert_elems_per_sec - 1e8).abs() < 1e3);
+        // and the result prices work like any uniform model
+        assert!(m.cost(0, &GfWork::mac(1 << 20)) > Duration::ZERO);
+    }
+
+    #[test]
+    fn from_measured_rejects_incomplete_reports() {
+        use crate::metrics::BenchJson;
+        // no params at all
+        assert!(UniformCost::from_measured(&BenchJson::new("x")).is_err());
+        // params but missing series
+        let r = BenchJson::new("x")
+            .param("calibrate_bytes", 1024u64)
+            .param("calibrate_invert_dim", 8u64);
+        let err = UniformCost::from_measured(&r).unwrap_err();
+        assert!(err.to_string().contains("calibrate/mac"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Differential tests for the SIMD GF kernels: every runtime-available
+//! kernel must be **byte-identical** to the scalar kernel and to the
+//! bitwise (carry-less shift/XOR) ground truth, for both field widths,
+//! every coefficient class (0, 1, general), sub-vector tail lengths and
+//! unaligned buffer offsets — and the `GfWork` a slice op reports must not
+//! depend on which backend executed it.
+//!
+//! CI runs the whole suite twice — once as-is and once under
+//! `RAPIDRAID_FORCE_SCALAR=1` — so both the dispatcher's chosen kernel and
+//! the forced-scalar path face the same assertions.
+
+use rapidraid::gf::tables::mul_bitwise;
+use rapidraid::gf::{
+    bytes_as_gf256, bytes_as_gf65536, mul_slice, mul_slice_xor, simd, xor_slice, Gf256, Gf65536,
+    Kernel,
+};
+use rapidraid::resources::GfWork;
+use rapidraid::util::SplitMix64;
+
+/// Lengths that exercise empty input, sub-vector tails, exact vector
+/// multiples and large buffers (for GF(2^16) the odd entries are rounded
+/// down to the nearest even byte count by the callers below).
+const LENS: &[usize] = &[0, 1, 2, 3, 8, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 257, 1024];
+
+/// Start offsets into an over-allocated buffer — defeats any accidental
+/// reliance on 16/32-byte alignment.
+const OFFSETS: &[usize] = &[0, 1, 3];
+
+const SEEDS: &[u64] = &[1, 0xD1CE_F00D];
+
+fn ref_mul8(c: u8, x: u8) -> u8 {
+    mul_bitwise(c as u32, x as u32, 8) as u8
+}
+
+fn ref_mul16(c: u16, x: u16) -> u16 {
+    mul_bitwise(c as u32, x as u32, 16) as u16
+}
+
+#[test]
+fn gf8_kernels_match_bitwise_ground_truth() {
+    let kernels = Kernel::available_kernels();
+    assert!(kernels.contains(&Kernel::Scalar));
+    for &seed in SEEDS {
+        let mut rng = SplitMix64::new(seed);
+        let mut src = vec![0u8; 1024 + 8];
+        let mut dst0 = vec![0u8; 1024 + 8];
+        rng.fill_bytes(&mut src);
+        rng.fill_bytes(&mut dst0);
+        let mut coeffs = vec![0u8, 1, 2, 0x53, 0x8E, 0xFF];
+        coeffs.push(rng.next_u64() as u8);
+        for &c in &coeffs {
+            for &len in LENS {
+                for &off in OFFSETS {
+                    let s = &src[off..off + len];
+                    let expect_xor: Vec<u8> = s
+                        .iter()
+                        .zip(&dst0[off..off + len])
+                        .map(|(&x, &d)| ref_mul8(c, x) ^ d)
+                        .collect();
+                    let expect_mul: Vec<u8> = s.iter().map(|&x| ref_mul8(c, x)).collect();
+                    for &k in &kernels {
+                        let mut d = dst0.clone();
+                        simd::mul_xor8(k, c, s, &mut d[off..off + len]);
+                        assert_eq!(
+                            d[off..off + len],
+                            expect_xor[..],
+                            "mul_xor8 {k} c={c:#x} len={len} off={off} seed={seed}"
+                        );
+                        let mut d = dst0.clone();
+                        simd::mul8(k, c, s, &mut d[off..off + len]);
+                        assert_eq!(
+                            d[off..off + len],
+                            expect_mul[..],
+                            "mul8 {k} c={c:#x} len={len} off={off} seed={seed}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gf16_kernels_match_bitwise_ground_truth() {
+    let kernels = Kernel::available_kernels();
+    for &seed in SEEDS {
+        let mut rng = SplitMix64::new(seed);
+        let mut src = vec![0u8; 1024 + 8];
+        let mut dst0 = vec![0u8; 1024 + 8];
+        rng.fill_bytes(&mut src);
+        rng.fill_bytes(&mut dst0);
+        let mut coeffs = vec![0u16, 1, 2, 0x1234, 0x8000, 0xFFFF];
+        coeffs.push(rng.next_u64() as u16);
+        for &c in &coeffs {
+            for &raw_len in LENS {
+                let len = raw_len & !1; // symbols are two bytes wide
+                for &off in OFFSETS {
+                    let s = &src[off..off + len];
+                    let ref16 = |bytes: &[u8], d: &[u8], xor: bool| -> Vec<u8> {
+                        let mut out = Vec::with_capacity(bytes.len());
+                        for (p, dp) in bytes.chunks_exact(2).zip(d.chunks_exact(2)) {
+                            let x = u16::from_le_bytes([p[0], p[1]]);
+                            let mut r = ref_mul16(c, x);
+                            if xor {
+                                r ^= u16::from_le_bytes([dp[0], dp[1]]);
+                            }
+                            out.extend_from_slice(&r.to_le_bytes());
+                        }
+                        out
+                    };
+                    let expect_xor = ref16(s, &dst0[off..off + len], true);
+                    let expect_mul = ref16(s, &dst0[off..off + len], false);
+                    for &k in &kernels {
+                        let mut d = dst0.clone();
+                        simd::mul_xor16(k, c, s, &mut d[off..off + len]);
+                        assert_eq!(
+                            d[off..off + len],
+                            expect_xor[..],
+                            "mul_xor16 {k} c={c:#x} len={len} off={off} seed={seed}"
+                        );
+                        let mut d = dst0.clone();
+                        simd::mul16(k, c, s, &mut d[off..off + len]);
+                        assert_eq!(
+                            d[off..off + len],
+                            expect_mul[..],
+                            "mul16 {k} c={c:#x} len={len} off={off} seed={seed}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn xor_kernels_match_reference() {
+    let kernels = Kernel::available_kernels();
+    let mut rng = SplitMix64::new(7);
+    let mut src = vec![0u8; 1024 + 8];
+    let mut dst0 = vec![0u8; 1024 + 8];
+    rng.fill_bytes(&mut src);
+    rng.fill_bytes(&mut dst0);
+    for &len in LENS {
+        for &off in OFFSETS {
+            let s = &src[off..off + len];
+            let expect: Vec<u8> = s
+                .iter()
+                .zip(&dst0[off..off + len])
+                .map(|(&x, &d)| x ^ d)
+                .collect();
+            for &k in &kernels {
+                let mut d = dst0.clone();
+                simd::xor_bytes(k, s, &mut d[off..off + len]);
+                assert_eq!(d[off..off + len], expect[..], "xor {k} len={len} off={off}");
+            }
+        }
+    }
+}
+
+/// The SIMD kernels agree with each other, not just with the reference —
+/// a direct pairwise check at a size large enough to hit every internal
+/// stride (full vectors for SSE/AVX/NEON plus a ragged tail).
+#[test]
+fn kernels_are_pairwise_byte_identical() {
+    let kernels = Kernel::available_kernels();
+    let mut rng = SplitMix64::new(42);
+    let mut src = vec![0u8; 4096 + 6];
+    let mut dst0 = vec![0u8; 4096 + 6];
+    rng.fill_bytes(&mut src);
+    rng.fill_bytes(&mut dst0);
+    let len = 4096 + 6; // ragged: not a multiple of 32
+    let mut scalar8 = dst0.clone();
+    simd::mul_xor8(Kernel::Scalar, 0xA7, &src[..len], &mut scalar8[..len]);
+    let even = len & !1;
+    let mut scalar16 = dst0.clone();
+    simd::mul_xor16(Kernel::Scalar, 0xBEEF, &src[..even], &mut scalar16[..even]);
+    for &k in &kernels {
+        let mut d = dst0.clone();
+        simd::mul_xor8(k, 0xA7, &src[..len], &mut d[..len]);
+        assert_eq!(d, scalar8, "gf8 {k} diverges from scalar");
+        let mut d = dst0.clone();
+        simd::mul_xor16(k, 0xBEEF, &src[..even], &mut d[..even]);
+        assert_eq!(d, scalar16, "gf16 {k} diverges from scalar");
+    }
+}
+
+/// `GfWork` is part of the deterministic simulation contract: it is
+/// derived from the coefficient class and length *before* kernel dispatch,
+/// so a SIMD box and a scalar box charge identical virtual time. These
+/// constants must hold no matter which kernel `Kernel::active()` resolved
+/// to (CI re-runs this suite under `RAPIDRAID_FORCE_SCALAR=1`).
+#[test]
+fn gfwork_is_backend_independent() {
+    let n = 257usize;
+    let mut rng = SplitMix64::new(3);
+    let mut bytes8 = vec![0u8; n];
+    rng.fill_bytes(&mut bytes8);
+    let src8: Vec<Gf256> = bytes_as_gf256(&bytes8).to_vec();
+    let mut dst8 = src8.clone();
+
+    // GF(2^8): general coefficient = one MAC pass; c == 1 on the XOR
+    // variant = one XOR pass; c == 0 is free.
+    assert_eq!(mul_slice_xor(Gf256(0x53), &src8, &mut dst8), GfWork::mac(n));
+    assert_eq!(mul_slice_xor(Gf256(1), &src8, &mut dst8), GfWork::xor(n));
+    assert_eq!(mul_slice_xor(Gf256(0), &src8, &mut dst8), GfWork::ZERO);
+    assert_eq!(mul_slice(Gf256(0x53), &src8, &mut dst8), GfWork::mac(n));
+    assert_eq!(xor_slice(&src8, &mut dst8), GfWork::xor(n));
+
+    // GF(2^16): work is charged in bytes (2 per symbol).
+    let mut bytes16 = vec![0u8; 2 * n];
+    rng.fill_bytes(&mut bytes16);
+    let src16: Vec<Gf65536> = bytes_as_gf65536(&bytes16).to_vec();
+    let mut dst16 = src16.clone();
+    assert_eq!(
+        mul_slice_xor(Gf65536(0x1234), &src16, &mut dst16),
+        GfWork::mac(2 * n)
+    );
+    assert_eq!(
+        mul_slice_xor(Gf65536(1), &src16, &mut dst16),
+        GfWork::xor(2 * n)
+    );
+    assert_eq!(xor_slice(&src16, &mut dst16), GfWork::xor(2 * n));
+}
+
+/// Slice-level ops (which dispatch through `Kernel::active()`) agree with
+/// an explicit scalar-kernel pass over the same bytes — whatever kernel
+/// the environment selected.
+#[test]
+fn active_kernel_slice_ops_match_forced_scalar() {
+    let mut rng = SplitMix64::new(11);
+    let mut bytes = vec![0u8; 513];
+    rng.fill_bytes(&mut bytes);
+    let src: Vec<Gf256> = bytes_as_gf256(&bytes).to_vec();
+
+    let mut via_slice = src.clone();
+    mul_slice_xor(Gf256(0xC3), &src, &mut via_slice);
+
+    let mut via_scalar = bytes.clone();
+    {
+        let tmp = bytes.clone();
+        simd::mul_xor8(Kernel::Scalar, 0xC3, &tmp, &mut via_scalar);
+    }
+    let expect: Vec<Gf256> = bytes_as_gf256(&via_scalar).to_vec();
+    assert_eq!(via_slice, expect);
+}
