@@ -271,10 +271,33 @@ pub fn table2_sim(
     seed: u64,
     out: &mut dyn Write,
 ) -> anyhow::Result<(Vec<Table2SimRow>, BenchJson)> {
+    table2_sim_calibrated(backend, block_bytes, seed, None, out)
+}
+
+/// [`table2_sim`] with the compute baseline swapped for measured rates
+/// (`--calibration` / `RAPIDRAID_CALIBRATION` on the CLI): `None` keeps
+/// the built-in [`UniformCost::calibrated`] constants, `Some(rates)` —
+/// typically [`UniformCost::from_measured`] over a `gf-hotpath` report —
+/// prices both cost models over this machine's throughput. The report
+/// records which baseline ran under the `calibration` param.
+pub fn table2_sim_calibrated(
+    backend: &BackendHandle,
+    block_bytes: usize,
+    seed: u64,
+    calibration: Option<UniformCost>,
+    out: &mut dyn Write,
+) -> anyhow::Result<(Vec<Table2SimRow>, BenchJson)> {
     let wall = RealClock::new();
+    let base_rates = calibration
+        .clone()
+        .unwrap_or_else(UniformCost::calibrated);
     let mut report = BenchJson::new("table2-sim")
         .param("block_bytes", block_bytes)
-        .param("seed", seed);
+        .param("seed", seed)
+        .param(
+            "calibration",
+            if calibration.is_some() { "measured" } else { "builtin" },
+        );
     writeln!(
         out,
         "# Table II (simulated) — classical vs pipelined virtual coding time, compute charged"
@@ -300,8 +323,11 @@ pub fn table2_sim(
         Cluster::start(spec)
     };
     let costs: Vec<(&'static str, CostModelHandle)> = vec![
-        ("uniform", UniformCost::handle()),
-        ("ec2-mix", ProfileCost::handle(NodeProfile::ec2_mix())?),
+        ("uniform", std::sync::Arc::new(base_rates.clone())),
+        (
+            "ec2-mix",
+            std::sync::Arc::new(ProfileCost::new(base_rates, NodeProfile::ec2_mix())?),
+        ),
     ];
 
     let stages = Recorder::new();
@@ -442,10 +468,29 @@ pub fn topo_sim(
     seed: u64,
     out: &mut dyn Write,
 ) -> anyhow::Result<(Vec<TopoSimRow>, BenchJson)> {
+    topo_sim_calibrated(backend, block_bytes, seed, None, out)
+}
+
+/// [`topo_sim`] with the compute baseline swapped for measured rates —
+/// same contract as [`table2_sim_calibrated`].
+pub fn topo_sim_calibrated(
+    backend: &BackendHandle,
+    block_bytes: usize,
+    seed: u64,
+    calibration: Option<UniformCost>,
+    out: &mut dyn Write,
+) -> anyhow::Result<(Vec<TopoSimRow>, BenchJson)> {
     let wall = RealClock::new();
+    let base_rates = calibration
+        .clone()
+        .unwrap_or_else(UniformCost::calibrated);
     let mut report = BenchJson::new("topo-sim")
         .param("block_bytes", block_bytes)
-        .param("seed", seed);
+        .param("seed", seed)
+        .param(
+            "calibration",
+            if calibration.is_some() { "measured" } else { "builtin" },
+        );
     writeln!(
         out,
         "# topo-sim — pipeline-shape shootout: chain vs tree vs hybrid virtual coding time"
@@ -470,8 +515,11 @@ pub fn topo_sim(
         Cluster::start(spec)
     };
     let costs: Vec<(&'static str, CostModelHandle)> = vec![
-        ("uniform", UniformCost::handle()),
-        ("ec2-mix", ProfileCost::handle(NodeProfile::ec2_mix())?),
+        ("uniform", std::sync::Arc::new(base_rates.clone())),
+        (
+            "ec2-mix",
+            std::sync::Arc::new(ProfileCost::new(base_rates, NodeProfile::ec2_mix())?),
+        ),
     ];
 
     let stages = Recorder::new();

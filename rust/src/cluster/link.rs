@@ -11,7 +11,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::nic::RateLimiter;
+use super::NodeId;
 use crate::clock::{self, Clock, ClockHandle, Tick};
+use crate::trace::{Direction, EventKind};
 use crate::util::SplitMix64;
 
 /// Propagation characteristics of a link.
@@ -148,12 +150,18 @@ pub struct Tx {
     /// Failure flags of the endpoint nodes (crash injection): when any is
     /// set, further sends error instead of delivering. Empty for raw links.
     guards: Vec<Arc<AtomicBool>>,
+    /// Endpoint node ids for tracing (`None` on raw links, which emit no
+    /// frame events).
+    src: Option<NodeId>,
+    dst: Option<NodeId>,
 }
 
 /// Receiving half of a link.
 pub struct Rx {
     receiver: clock::Receiver<(Tick, Frame)>,
     clock: ClockHandle,
+    src: Option<NodeId>,
+    dst: Option<NodeId>,
 }
 
 /// Create a link between a sender NIC (`up`) and a receiver NIC (`down`);
@@ -170,8 +178,33 @@ pub fn link(up: Arc<RateLimiter>, down: Arc<RateLimiter>, spec: LinkSpec, seed: 
             spec,
             rng: SplitMix64::new(seed),
             guards: Vec::new(),
+            src: None,
+            dst: None,
         },
-        Rx { receiver: r, clock },
+        Rx {
+            receiver: r,
+            clock,
+            src: None,
+            dst: None,
+        },
+    )
+}
+
+/// Stamp both halves of a link with their endpoint node ids so the trace
+/// layer can attribute frames and NIC reservations. `Cluster::connect`
+/// does this for every cluster link; raw [`link`]s stay anonymous.
+pub fn with_endpoints(tx: Tx, rx: Rx, src: NodeId, dst: NodeId) -> (Tx, Rx) {
+    (
+        Tx {
+            src: Some(src),
+            dst: Some(dst),
+            ..tx
+        },
+        Rx {
+            src: Some(src),
+            dst: Some(dst),
+            ..rx
+        },
     )
 }
 
@@ -196,10 +229,35 @@ impl Tx {
         }
         let bytes = frame.wire_bytes();
         let done = if bytes > 0 {
-            let _up_done = self.up.acquire(bytes);
+            let up = self.up.acquire_traced(bytes);
             // Receiver NIC books the same bytes; delivery waits for it, and
             // competing inbound streams at the receiver serialize here.
-            self.down.reserve(bytes)
+            let down = self.down.reserve_traced(bytes);
+            if let Some(src) = self.src {
+                crate::trace_emit!(
+                    self.clock,
+                    src,
+                    EventKind::NicStall {
+                        dir: Direction::Up,
+                        stall: up.stall(),
+                        busy: up.busy(),
+                        bytes,
+                    }
+                );
+            }
+            if let Some(dst) = self.dst {
+                crate::trace_emit!(
+                    self.clock,
+                    dst,
+                    EventKind::NicStall {
+                        dir: Direction::Down,
+                        stall: down.stall(),
+                        busy: down.busy(),
+                        bytes,
+                    }
+                );
+            }
+            down.done
         } else {
             self.clock.now()
         };
@@ -212,6 +270,19 @@ impl Tx {
         // latency - jitter_amp + uniform(0, 2*jitter_amp) == latency ± jitter
         let lat = self.spec.latency.saturating_sub(self.spec.jitter) + jitter;
         let deliver_at = done + lat;
+        if bytes > 0 {
+            if let (Some(src), Some(dst)) = (self.src, self.dst) {
+                crate::trace_emit!(
+                    self.clock,
+                    src,
+                    EventKind::FrameSent {
+                        dst,
+                        bytes,
+                        deliver_at,
+                    }
+                );
+            }
+        }
         self.sender
             .send((deliver_at, frame))
             .map_err(|_| anyhow::anyhow!("link receiver dropped"))
@@ -236,6 +307,19 @@ impl Rx {
     pub fn recv(&self) -> Option<Frame> {
         let (at, frame) = self.receiver.recv().ok()?;
         self.clock.sleep_until(at);
+        if let Frame::Data(d) = &frame {
+            if let (Some(src), Some(dst)) = (self.src, self.dst) {
+                crate::trace_emit!(
+                    @at at,
+                    self.clock,
+                    dst,
+                    EventKind::FrameRecvd {
+                        src,
+                        bytes: d.len(),
+                    }
+                );
+            }
+        }
         Some(frame)
     }
 
@@ -419,6 +503,49 @@ mod tests {
             }
             Frame::End => panic!("expected data"),
         }
+    }
+
+    #[test]
+    fn endpoint_stamped_link_emits_trace_events() {
+        let c = sim();
+        let sink = crate::trace::JsonlSink::shared();
+        let _guard = crate::trace::install(&c, sink.clone());
+        let (tx, rx) = link(nic(&c), nic(&c), LinkSpec::instant(), 31);
+        let (mut tx, rx) = with_endpoints(tx, rx, 4, 7);
+        tx.send_data(vec![1; 64]).unwrap();
+        tx.finish().unwrap();
+        rx.recv_all().unwrap();
+        let events = sink.events();
+        let names: Vec<&str> = events.iter().map(|e| e.kind.name()).collect();
+        assert!(names.contains(&"frame_sent"), "{names:?}");
+        assert!(names.contains(&"frame_recvd"), "{names:?}");
+        // one up + one down reservation for the single data frame
+        assert_eq!(names.iter().filter(|n| **n == "nic_stall").count(), 2);
+        // End frames are control, not wire traffic
+        assert_eq!(names.iter().filter(|n| **n == "frame_sent").count(), 1);
+        for e in &events {
+            match &e.kind {
+                crate::trace::EventKind::FrameSent { dst, bytes, .. } => {
+                    assert_eq!((e.node, *dst, *bytes), (Some(4), 7, 64));
+                }
+                crate::trace::EventKind::FrameRecvd { src, bytes } => {
+                    assert_eq!((e.node, *src, *bytes), (Some(7), 4, 64));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn raw_links_stay_anonymous_and_silent() {
+        let c = sim();
+        let sink = crate::trace::JsonlSink::shared();
+        let _guard = crate::trace::install(&c, sink.clone());
+        let (mut tx, rx) = link(nic(&c), nic(&c), LinkSpec::instant(), 32);
+        tx.send_data(vec![1; 8]).unwrap();
+        tx.finish().unwrap();
+        rx.recv_all().unwrap();
+        assert!(sink.is_empty(), "anonymous links must not emit");
     }
 
     #[test]

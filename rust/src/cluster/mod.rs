@@ -28,7 +28,7 @@ pub mod node;
 pub use congestion::CongestionSpec;
 pub use link::{Frame, LinkSpec, Payload, Rx, Tx};
 pub use network::{Cluster, ClusterSpec};
-pub use nic::RateLimiter;
+pub use nic::{RateLimiter, Reservation};
 pub use node::{
     Command, NodeHandle, ParityDest, SourceStream, StepResult, StepStats, DEFAULT_MAX_WORKERS,
     QUEUE_STALL_OVERFLOW,

@@ -4,7 +4,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::congestion::CongestionSpec;
-use super::link::{link, LinkSpec, Rx, Tx};
+use super::link::{link, with_endpoints, LinkSpec, Rx, Tx};
 use super::nic::RateLimiter;
 use super::node::{NodeHandle, DEFAULT_MAX_WORKERS};
 use super::NodeId;
@@ -227,7 +227,8 @@ impl Cluster {
             self.nodes[src].failure_flag(),
             self.nodes[dst].failure_flag(),
         ]);
-        Ok((tx, rx))
+        // endpoint identity makes the link's frames traceable
+        Ok(with_endpoints(tx, rx, src, dst))
     }
 
     /// Crash-stop a node ([`crate::cluster::node::NodeHandle::fail`]):
@@ -235,12 +236,14 @@ impl Cluster {
     /// touching it refuse lowering and break mid-stream.
     pub fn fail_node(&self, id: NodeId) {
         self.nodes[id].fail();
+        crate::trace_emit!(self.spec.clock, id, crate::trace::EventKind::NodeFailed);
     }
 
     /// Bring a crashed node back as an empty newcomer; its pre-crash
     /// blocks stay lost until repair regenerates them.
     pub fn revive_node(&self, id: NodeId) {
         self.nodes[id].revive();
+        crate::trace_emit!(self.spec.clock, id, crate::trace::EventKind::NodeRevived);
     }
 
     /// Whether a node is currently crashed.

@@ -19,6 +19,31 @@ struct State {
     next_free: Tick,
 }
 
+/// One NIC reservation, decomposed for tracing: the transfer queued behind
+/// earlier reservations until `start` (stall), then occupied the wire until
+/// `done` (busy).
+#[derive(Clone, Copy, Debug)]
+pub struct Reservation {
+    /// Tick the reservation was requested.
+    pub requested: Tick,
+    /// Tick the wire actually starts carrying these bytes.
+    pub start: Tick,
+    /// Tick the transfer completes.
+    pub done: Tick,
+}
+
+impl Reservation {
+    /// Time spent queued behind earlier reservations.
+    pub fn stall(&self) -> Tick {
+        self.start.saturating_sub(self.requested)
+    }
+
+    /// Wire-occupancy time (serialization at the NIC rate).
+    pub fn busy(&self) -> Tick {
+        self.done.saturating_sub(self.start)
+    }
+}
+
 /// Token-bucket rate limiter (one per NIC direction) on a shared clock.
 pub struct RateLimiter {
     clock: ClockHandle,
@@ -68,24 +93,39 @@ impl RateLimiter {
     /// `next_free` bookkeeping is cumulative and receivers wait for the
     /// *virtual* delivery instant of every frame.
     pub fn acquire(&self, bytes: usize) -> Tick {
-        let done = self.reserve(bytes);
+        self.acquire_traced(bytes).done
+    }
+
+    /// [`RateLimiter::acquire`] with the reservation's stall/busy split
+    /// exposed (the dataplane's `NicStall` trace events come from here).
+    pub fn acquire_traced(&self, bytes: usize) -> Reservation {
+        let r = self.reserve_traced(bytes);
         let now = self.clock.now();
-        if done > now + self.clock.pacing_slack() {
-            self.clock.sleep_until(done - self.clock.pacing_slack());
+        if r.done > now + self.clock.pacing_slack() {
+            self.clock.sleep_until(r.done - self.clock.pacing_slack());
         }
-        done
+        r
     }
 
     /// Reserve without sleeping (delivery-side accounting); returns the
     /// completion tick the caller should delay to.
     pub fn reserve(&self, bytes: usize) -> Tick {
+        self.reserve_traced(bytes).done
+    }
+
+    /// [`RateLimiter::reserve`] with the stall/busy split exposed.
+    pub fn reserve_traced(&self, bytes: usize) -> Reservation {
         let mut s = self.state.lock().unwrap();
         let now = self.clock.now();
         let start = if s.next_free > now { s.next_free } else { now };
         let cost = Duration::from_secs_f64(bytes as f64 / s.bytes_per_sec);
         let done = start + cost;
         s.next_free = done;
-        done
+        Reservation {
+            requested: now,
+            start,
+            done,
+        }
     }
 }
 
@@ -142,6 +182,19 @@ mod tests {
         let done = l.reserve(10_000); // would be 10 s
         assert_eq!(clock.now(), Duration::ZERO, "reserve must not block");
         assert_eq!(done, Duration::from_secs(10));
+    }
+
+    #[test]
+    fn traced_reservation_splits_stall_and_busy() {
+        let clock = SimClock::handle();
+        let l = RateLimiter::new(clock, 1_000.0);
+        let a = l.reserve_traced(1_000); // 1 s on the wire, no queueing
+        assert_eq!(a.stall(), Duration::ZERO);
+        assert_eq!(a.busy(), Duration::from_secs(1));
+        let b = l.reserve_traced(1_000); // queued behind `a`
+        assert_eq!(b.stall(), Duration::from_secs(1));
+        assert_eq!(b.busy(), Duration::from_secs(1));
+        assert_eq!(b.done, Duration::from_secs(2));
     }
 
     #[test]

@@ -429,9 +429,15 @@ fn node_loop(
         // stays balanced). Workers already running keep going; their link
         // guards break any stream touching this node.
         if failed.load(Ordering::SeqCst) {
+            let flushed = !pending.is_empty();
             while let Some(cmd) = pending.pop_front() {
                 inflight.fetch_sub(1, Ordering::Relaxed);
                 reject(id, cmd);
+            }
+            if flushed {
+                crate::trace_emit!(clock, id, crate::trace::EventKind::QueueDepth {
+                    depth: active
+                });
             }
             stall_deadline = None;
         }
@@ -486,6 +492,9 @@ fn node_loop(
                         spawn_worker(cmd, &mut workers);
                     }
                 }
+                crate::trace_emit!(clock, id, crate::trace::EventKind::QueueDepth {
+                    depth: active + pending.len()
+                });
             }
             Msg::Cmd(Command::Shutdown) => {
                 // Flush the queue (briefly exceeding the cap) so every
@@ -516,6 +525,9 @@ fn node_loop(
                 } else {
                     pending.push_back(other);
                 }
+                crate::trace_emit!(clock, id, crate::trace::EventKind::QueueDepth {
+                    depth: active + pending.len()
+                });
             }
         }
         workers.retain(|w| !w.is_finished());
@@ -623,12 +635,22 @@ fn do_receive(
 ) -> StepResult {
     let mut data = Vec::with_capacity(expect_bytes);
     rx.recv_into(&mut data)?;
+    let bytes = data.len();
     // The store landing is the step's compute: charged before completion
     // so a Store step occupies virtual time on the node's core.
-    let compute = cpu.charge(&GfWork::store(data.len()));
+    let compute = cpu.charge(&GfWork::store(bytes));
     anyhow::ensure!(
         store.put_unless(key, data, failed),
         "receive aborted: node has failed"
+    );
+    crate::trace_emit!(
+        cpu.clock(),
+        cpu.node(),
+        crate::trace::EventKind::StoreDone {
+            object: key.object.0,
+            index: key.index,
+            bytes
+        }
     );
     Ok(StepStats { compute })
 }
@@ -666,6 +688,13 @@ fn do_pipeline_stage(
     );
 
     let mut out = Vec::with_capacity(if out_key.is_some() { block_bytes } else { 0 });
+    // Trace identity of this stage's stored output (None for relay-only
+    // stages); copied out up front because `out_key` is consumed below.
+    let (trace_obj, trace_idx) = match &out_key {
+        Some(k) => (Some(k.object.0), Some(k.index)),
+        None => (None, None),
+    };
+    let mut frame_no = 0usize;
     let mut compute = Tick::ZERO;
     let mut offset = 0usize;
     loop {
@@ -693,6 +722,15 @@ fn do_pipeline_stage(
             .iter()
             .map(|b| &b[offset..offset + len])
             .collect();
+        crate::trace_emit!(
+            cpu.clock(),
+            cpu.node(),
+            crate::trace::EventKind::FoldStart {
+                object: trace_obj,
+                index: trace_idx,
+                frame: frame_no
+            }
+        );
         let (x_out, c) = backend.pipeline_step(width, &x_in, &loc_slices, psi, xi)?;
         // Charge the frame's GF work BEFORE forwarding: the compute delay
         // paces the whole downstream pipeline, exactly like a slow CPU
@@ -705,6 +743,16 @@ fn do_pipeline_stage(
             work += GfWork::xor((next.len() - 1) * len);
         }
         compute += cpu.charge(&work);
+        crate::trace_emit!(
+            cpu.clock(),
+            cpu.node(),
+            crate::trace::EventKind::FoldEnd {
+                object: trace_obj,
+                index: trace_idx,
+                frame: frame_no
+            }
+        );
+        frame_no += 1;
         if out_key.is_some() {
             out.extend_from_slice(&c);
         }
@@ -722,10 +770,20 @@ fn do_pipeline_stage(
     }
     anyhow::ensure!(offset == block_bytes, "stream/block length mismatch");
     if let Some(key) = out_key {
-        compute += cpu.charge(&GfWork::store(out.len()));
+        let bytes = out.len();
+        compute += cpu.charge(&GfWork::store(bytes));
         anyhow::ensure!(
             store.put_unless(key, out, failed),
             "pipeline stage aborted: node has failed"
+        );
+        crate::trace_emit!(
+            cpu.clock(),
+            cpu.node(),
+            crate::trace::EventKind::StoreDone {
+                object: key.object.0,
+                index: key.index,
+                bytes
+            }
         );
     }
     Ok(StepStats { compute })
@@ -777,6 +835,7 @@ fn do_classical_encode(
     // Remote entries are the delivered frames as-is; local entries are
     // payload views into the stored block — no per-row copies either way.
     let mut row: Vec<Payload> = Vec::with_capacity(k);
+    let mut frame_no = 0usize;
     while offset < block_bytes {
         let len = buf_bytes.min(block_bytes - offset);
         row.clear();
@@ -797,10 +856,27 @@ fn do_classical_encode(
             }
         }
         let row_refs: Vec<&[u8]> = row.iter().map(|b| b.as_slice()).collect();
+        crate::trace_emit!(
+            cpu.clock(),
+            cpu.node(),
+            crate::trace::EventKind::GemmStart {
+                rows: m,
+                frame: frame_no
+            }
+        );
         let parity_bufs = backend.gemm(width, parity_rows, &row_refs)?;
         // The row's m×k gemm is this step's compute, charged before the
         // parity buffers ship so compute paces the outgoing streams.
         compute += cpu.charge(&GfWork::gemm(parity_rows, len));
+        crate::trace_emit!(
+            cpu.clock(),
+            cpu.node(),
+            crate::trace::EventKind::GemmEnd {
+                rows: m,
+                frame: frame_no
+            }
+        );
+        frame_no += 1;
         for (i, pb) in parity_bufs.into_iter().enumerate() {
             match dests[i] {
                 ParityDest::Stream(ref mut tx) => tx.send_data(pb)?,
@@ -823,11 +899,21 @@ fn do_classical_encode(
             ParityDest::Stream(tx) => tx.finish()?,
             ParityDest::Store(key) => {
                 let acc = std::mem::take(&mut local_acc[i]);
-                compute += cpu.charge(&GfWork::store(acc.len()));
+                let bytes = acc.len();
+                compute += cpu.charge(&GfWork::store(bytes));
                 anyhow::ensure!(
                     store.put_unless(*key, acc, failed),
                     "classical encode aborted: node has failed"
-                )
+                );
+                crate::trace_emit!(
+                    cpu.clock(),
+                    cpu.node(),
+                    crate::trace::EventKind::StoreDone {
+                        object: key.object.0,
+                        index: key.index,
+                        bytes
+                    }
+                );
             }
         }
     }

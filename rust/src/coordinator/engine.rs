@@ -119,6 +119,16 @@ impl<'a> PlanExecutor<'a> {
         }
         let clock = self.cluster.clock();
         let start = clock.now();
+        // Control-plane trace bracket: the critical-path analyzer carves
+        // [PlanStart, PlanEnd] into per-slot compute/transfer/wait.
+        crate::trace_emit!(
+            clock,
+            None::<NodeId>,
+            crate::trace::EventKind::PlanStart {
+                object: plan.object.0,
+                nodes: plan.steps.iter().map(|s| s.node).collect(),
+            }
+        );
 
         // Lower every edge onto a cluster link.
         let mut txs: HashMap<(usize, usize), Tx> = HashMap::new();
@@ -286,7 +296,18 @@ impl<'a> PlanExecutor<'a> {
         for r in results {
             r?;
         }
-        Ok(clock.now().saturating_sub(start))
+        let makespan = clock.now().saturating_sub(start);
+        // Only successful plans close their bracket; a failed plan leaves
+        // an unmatched PlanStart, which the analyzer skips.
+        crate::trace_emit!(
+            clock,
+            None::<NodeId>,
+            crate::trace::EventKind::PlanEnd {
+                object: plan.object.0,
+                makespan
+            }
+        );
+        Ok(makespan)
     }
 
     /// Execute all plans concurrently (one coordinator thread each) and

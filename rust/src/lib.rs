@@ -36,7 +36,8 @@
 //! | [`repair`] | failure repair as plan builders: star vs topology-shaped pipelined (Li et al. 2019) single-block repair, repair coefficients from the generator, eager/lazy/reliability-budget scheduler |
 //! | [`runtime`] | PJRT executor loading the AOT artifacts (`artifacts/*.hlo.txt`); stubbed without the `pjrt` feature |
 //! | [`backend`] | pluggable GF compute: native Rust vs PJRT artifacts |
-//! | [`metrics`] | clock-timed spans ([`metrics::Span`], with compute/transfer splits), percentile candles, report emitters, `BENCH_*.json` output |
+//! | [`metrics`] | clock-timed spans ([`metrics::Span`], with compute/transfer splits), percentile candles, report emitters, `BENCH_*.json` output (self-describing: `schema_version` + preset param) and a serde-free JSON parser ([`metrics::json::parse_json`], `BenchJson::from_json`) |
+//! | [`trace`] | deterministic dataplane tracing: typed [`trace::Event`] bus behind the zero-cost [`trace_emit!`] macro (frames, NIC stalls, CPU charges, fold/gemm spans, queue gauges, failure/repair/plan/epoch lifecycle), ring/JSONL sinks, Chrome-trace/Perfetto export, derived per-node/link counters and critical-path makespan attribution |
 //! | [`workload`] | long-run workload harness: seeded crash/revive/congestion/CPU-churn schedules over batch archival + repair (with CPU profile mixes and any pipeline topology), thousands of virtual seconds per wall second under `SimClock`; [`workload::sweep`] grids triggers × policies × cost profiles × topologies |
 //! | [`util`] | deterministic PRNG, mini property-test harness, bench timer |
 //!
@@ -68,5 +69,6 @@ pub mod repair;
 pub mod resources;
 pub mod runtime;
 pub mod storage;
+pub mod trace;
 pub mod util;
 pub mod workload;

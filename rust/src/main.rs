@@ -21,6 +21,26 @@
 //!                        [--nodes 50] [--objects 8] [--seed N]
 //!                        [--topology chain|tree:F|hybrid:P:F]
 //!                        [--smoke]                            # DES failure trace
+//! rapidraid trace-report <trace.jsonl>                        # per-node/link counters +
+//!                                                             # critical-path attribution
+//!                                                             # of a recorded trace
+//! ```
+//!
+//! The SimClock presets (`bench-table2-sim`, `bench-topo-sim`,
+//! `sim-longrun`) additionally accept:
+//!
+//! ```text
+//! --trace <out.jsonl|out.perfetto.json>   record the dataplane event trace:
+//!                                         a `.jsonl` path gets the canonical
+//!                                         deterministic event log (input of
+//!                                         `trace-report`), any other path a
+//!                                         Chrome-trace/Perfetto timeline for
+//!                                         ui.perfetto.dev
+//! --calibration <BENCH_gf-hotpath.json>   price compute with rates measured
+//!                                         by `cargo bench gf_hotpath` on THIS
+//!                                         machine instead of the built-in
+//!                                         EC2-era constants (also read from
+//!                                         the RAPIDRAID_CALIBRATION env var)
 //! rapidraid sweep        [--smoke] [--virtual-secs N] [--nodes N]
 //!                        [--objects N] [--seed N]             # triggers × policies × cost
 //!                                                             # profiles × topologies
@@ -66,6 +86,7 @@ fn main() {
         Some("bench-table2-sim") => cmd_bench_table2_sim(&opts),
         Some("bench-topo-sim") => cmd_bench_topo_sim(&opts),
         Some("sim-longrun") => cmd_sim_longrun(&opts),
+        Some("trace-report") => cmd_trace_report(&opts),
         Some("sweep") => cmd_sweep(&opts),
         Some("demo") => cmd_demo(&opts),
         Some(other) => {
@@ -99,8 +120,12 @@ fn usage() {
          \x20 sim-longrun       long-run crash/repair trace on the SimClock\n\
          \x20 sweep             repair triggers x policies x cost profiles x\n\
          \x20                   pipeline topologies (chain + tree:2) grid\n\
+         \x20 trace-report      counters + critical-path attribution of a\n\
+         \x20                   --trace'd .jsonl event log\n\
          \x20 demo              end-to-end migrate+decode demo\n\
-         see the doc comment in rust/src/main.rs for options"
+         sim presets take --trace <out.jsonl|out.perfetto.json> and\n\
+         --calibration <BENCH_gf-hotpath.json> (or RAPIDRAID_CALIBRATION);\n\
+         see the doc comment in rust/src/main.rs for all options"
     );
 }
 
@@ -120,6 +145,10 @@ fn parse(args: &[String]) -> (Option<String>, HashMap<String, String>) {
             opts.insert(key.to_string(), val);
         } else if cmd.is_none() {
             cmd = Some(a.clone());
+        } else {
+            // First bare operand after the command becomes the `file`
+            // option (e.g. the trace file of `trace-report <path>`).
+            opts.entry("file".to_string()).or_insert_with(|| a.clone());
         }
         i += 1;
     }
@@ -194,6 +223,64 @@ fn emit_json(report: &rapidraid::metrics::BenchJson) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Measured compute rates from `--calibration <BENCH_gf-hotpath.json>` or
+/// the `RAPIDRAID_CALIBRATION` env var; `None` when neither is set.
+fn calibration_from(
+    opts: &HashMap<String, String>,
+) -> anyhow::Result<Option<rapidraid::resources::UniformCost>> {
+    let path = opts
+        .get("calibration")
+        .cloned()
+        .or_else(|| std::env::var("RAPIDRAID_CALIBRATION").ok());
+    let Some(path) = path else { return Ok(None) };
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading calibration report {path}: {e}"))?;
+    let bench = rapidraid::metrics::BenchJson::from_json(&text)?;
+    let rates = rapidraid::resources::UniformCost::from_measured(&bench)?;
+    println!("# calibration: measured GF rates from {path}");
+    Ok(Some(rates))
+}
+
+/// An installed `--trace` recording session: a process-global JSONL sink
+/// plus the output path it flushes to when finished.
+struct TraceSession {
+    sink: std::sync::Arc<rapidraid::trace::JsonlSink>,
+    guard: rapidraid::trace::TraceGuard,
+    path: std::path::PathBuf,
+}
+
+/// Install a process-global trace recorder when `--trace <path>` is given.
+fn trace_from(opts: &HashMap<String, String>) -> Option<TraceSession> {
+    let path = std::path::PathBuf::from(opts.get("trace")?);
+    let sink = rapidraid::trace::JsonlSink::shared();
+    let guard = rapidraid::trace::install_global(sink.clone());
+    Some(TraceSession { sink, guard, path })
+}
+
+/// Uninstall the recorder, fold its counters into `report` (when given)
+/// and write the trace out — canonical JSONL for a `.jsonl` path, a
+/// Chrome-trace/Perfetto timeline for anything else.
+fn finish_trace(
+    trace: Option<TraceSession>,
+    report: Option<&mut rapidraid::metrics::BenchJson>,
+) -> anyhow::Result<()> {
+    let Some(t) = trace else { return Ok(()) };
+    drop(t.guard);
+    if let Some(r) = report {
+        let events = t.sink.events();
+        rapidraid::trace::derive_counters(&events).fold_into(r);
+    }
+    if t.path.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+        t.sink.write_jsonl(&t.path)?;
+    } else {
+        let events = t.sink.events();
+        std::fs::write(&t.path, rapidraid::trace::chrome_trace(&events))
+            .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", t.path.display()))?;
+    }
+    println!("# wrote trace {}", t.path.display());
+    Ok(())
+}
+
 fn cmd_bench_cpu(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let block_mib: usize = get(opts, "block-mib", 4);
     let be = backend(opts)?;
@@ -258,8 +345,16 @@ fn cmd_bench_table2_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let block_kib: usize = get(opts, "block-kib", 1024);
     let seed: u64 = get(opts, "seed", 5);
     let be = backend(opts)?;
-    let (_rows, report) =
-        scenarios::table2_sim(&be, block_kib << 10, seed, &mut std::io::stdout().lock())?;
+    let calibration = calibration_from(opts)?;
+    let trace = trace_from(opts);
+    let (_rows, mut report) = scenarios::table2_sim_calibrated(
+        &be,
+        block_kib << 10,
+        seed,
+        calibration,
+        &mut std::io::stdout().lock(),
+    )?;
+    finish_trace(trace, Some(&mut report))?;
     emit_json(&report)
 }
 
@@ -267,8 +362,16 @@ fn cmd_bench_topo_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let block_kib: usize = get(opts, "block-kib", 512);
     let seed: u64 = get(opts, "seed", 5);
     let be = backend(opts)?;
-    let (_rows, report) =
-        scenarios::topo_sim(&be, block_kib << 10, seed, &mut std::io::stdout().lock())?;
+    let calibration = calibration_from(opts)?;
+    let trace = trace_from(opts);
+    let (_rows, mut report) = scenarios::topo_sim_calibrated(
+        &be,
+        block_kib << 10,
+        seed,
+        calibration,
+        &mut std::io::stdout().lock(),
+    )?;
+    finish_trace(trace, Some(&mut report))?;
     emit_json(&report)
 }
 
@@ -315,14 +418,40 @@ fn cmd_sim_longrun(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(t) = opts.get("topology") {
         cfg.topology = rapidraid::coordinator::Topology::parse(t)?;
     }
+    cfg.calibration = calibration_from(opts)?;
     let be = backend(opts)?;
-    let out = &mut std::io::stdout().lock();
-    let report = run_long_run(&cfg, &be, Some(out))?;
+    let trace = trace_from(opts);
+    let report = {
+        let out = &mut std::io::stdout().lock();
+        run_long_run(&cfg, &be, Some(out))?
+    };
+    finish_trace(trace, None)?;
     anyhow::ensure!(
         report.all_decodable(),
         "data loss in the trace: {}",
         report.summary()
     );
+    Ok(())
+}
+
+fn cmd_trace_report(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let path = opts.get("file").ok_or_else(|| {
+        anyhow::anyhow!("trace-report needs a trace file: rapidraid trace-report <trace.jsonl>")
+    })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
+    let events = rapidraid::trace::parse_jsonl(&text)?;
+    println!("# trace-report — {path} ({} events)", events.len());
+    let counters = rapidraid::trace::derive_counters(&events);
+    for line in counters.summary_lines() {
+        println!("{line}");
+    }
+    let plans = rapidraid::trace::attribute_plans(&events);
+    if plans.is_empty() {
+        println!("# no complete PlanStart/PlanEnd window in the trace");
+    } else {
+        print!("{}", rapidraid::trace::render_attribution(&plans));
+    }
     Ok(())
 }
 

@@ -8,18 +8,30 @@
 //!
 //! ```json
 //! {
+//!   "schema_version": 2,
 //!   "preset": "table2-sim",
-//!   "params": {"block_bytes": "1048576", …},
+//!   "params": {"preset": "table2-sim", "block_bytes": "1048576", …},
 //!   "series": [{"name": "…", "n": 3, "median_s": …, "samples_s": […]}, …],
 //!   "spans":  [same shape — the per-stage tick breakdown],
 //!   "wall_s": 0.42
 //! }
 //! ```
+//!
+//! Reports are also *readable*: [`parse_json`] is a minimal serde-free
+//! JSON reader and [`BenchJson::from_json`] reconstitutes a report from
+//! its own output, which is how `--calibration <BENCH_gf-hotpath.json>`
+//! feeds measured GF kernel costs back into the simulators and how
+//! `trace-report` consumes saved traces.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use crate::util::bench::Candle;
+
+/// Version of the `BENCH_*.json` document shape. Bumped when fields are
+/// added or change meaning; every emitted report carries it so downstream
+/// consumers can detect stale files.
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// Escape a string for a JSON string literal.
 pub fn escape(s: &str) -> String {
@@ -90,17 +102,34 @@ impl BenchJson {
         self
     }
 
-    /// The whole report as one JSON document.
+    /// Set (or replace) one parameter in place — the mutating counterpart
+    /// of the builder-style [`BenchJson::param`], used by consumers that
+    /// fold derived data (e.g. trace counters) into an existing report.
+    pub fn set_param(&mut self, key: &str, value: impl ToString) {
+        let value = value.to_string();
+        if let Some(slot) = self.params.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.params.push((key.to_string(), value));
+        }
+    }
+
+    /// The whole report as one JSON document (self-describing: carries
+    /// [`SCHEMA_VERSION`] and repeats the preset as a param).
     pub fn to_json(&self) -> String {
-        let params: Vec<String> = self
-            .params
-            .iter()
-            .map(|(k, v)| format!("\"{}\":\"{}\"", escape(k), escape(v)))
-            .collect();
+        let mut params: Vec<String> = Vec::with_capacity(self.params.len() + 1);
+        if self.get_param("preset").is_none() {
+            params.push(format!("\"preset\":\"{}\"", escape(&self.preset)));
+        }
+        params.extend(
+            self.params
+                .iter()
+                .map(|(k, v)| format!("\"{}\":\"{}\"", escape(k), escape(v))),
+        );
         let series: Vec<String> = self.series.iter().map(candle_json).collect();
         let spans: Vec<String> = self.spans.iter().map(candle_json).collect();
         format!(
-            "{{\"preset\":\"{}\",\"params\":{{{}}},\"series\":[{}],\"spans\":[{}],\"wall_s\":{:.6}}}\n",
+            "{{\"schema_version\":{SCHEMA_VERSION},\"preset\":\"{}\",\"params\":{{{}}},\"series\":[{}],\"spans\":[{}],\"wall_s\":{:.6}}}\n",
             escape(&self.preset),
             params.join(","),
             series.join(","),
@@ -143,12 +172,366 @@ impl BenchJson {
             .find(|c| c.name == name)
     }
 
+    /// Like [`BenchJson::find_series`] but fails with an error naming the
+    /// series the report *does* have — so a calibration file with the
+    /// wrong preset produces an actionable message instead of a bare
+    /// "missing".
+    pub fn series(&self, name: &str) -> anyhow::Result<&Candle> {
+        self.find_series(name).ok_or_else(|| {
+            let available: Vec<&str> = self
+                .series
+                .iter()
+                .chain(self.spans.iter())
+                .map(|c| c.name.as_str())
+                .collect();
+            anyhow::anyhow!(
+                "no series {name:?} in report {:?} (available: {})",
+                self.preset,
+                if available.is_empty() {
+                    "none".to_string()
+                } else {
+                    available.join(", ")
+                }
+            )
+        })
+    }
+
     /// Look up a parameter value by key.
     pub fn get_param(&self, key: &str) -> Option<&str> {
         self.params
             .iter()
             .find(|(k, _)| k == key)
             .map(|(_, v)| v.as_str())
+    }
+
+    /// Reconstitute a report from its own [`BenchJson::to_json`] output.
+    /// Tolerant of missing optional sections; `schema_version` is accepted
+    /// but not required (pre-PR-7 reports parse too).
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let doc = parse_json(text)?;
+        let preset = doc
+            .get("preset")
+            .and_then(JsonValue::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let mut report = BenchJson::new(preset);
+        if let Some(JsonValue::Obj(entries)) = doc.get("params") {
+            for (k, v) in entries {
+                let v = match v {
+                    JsonValue::Str(s) => s.clone(),
+                    JsonValue::Num(n) => format!("{n}"),
+                    JsonValue::Bool(b) => b.to_string(),
+                    other => anyhow::bail!("param {k:?} has non-scalar value {other:?}"),
+                };
+                report.params.push((k.clone(), v));
+            }
+        }
+        report.series = candles_field(&doc, "series")?;
+        report.spans = candles_field(&doc, "spans")?;
+        if let Some(w) = doc.get("wall_s").and_then(JsonValue::as_f64) {
+            report.wall = Duration::from_secs_f64(w.max(0.0));
+        }
+        Ok(report)
+    }
+}
+
+fn candles_field(doc: &JsonValue, key: &str) -> anyhow::Result<Vec<Candle>> {
+    let Some(entries) = doc.get(key).and_then(JsonValue::as_arr) else {
+        return Ok(Vec::new());
+    };
+    entries.iter().map(candle_from_json).collect()
+}
+
+fn candle_from_json(v: &JsonValue) -> anyhow::Result<Candle> {
+    let name = v
+        .get("name")
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| anyhow::anyhow!("series entry without \"name\""))?
+        .to_string();
+    let mut samples = match v.get("samples_s") {
+        Some(JsonValue::Arr(xs)) => xs
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|s| Duration::from_secs_f64(s.max(0.0)))
+                    .ok_or_else(|| anyhow::anyhow!("non-numeric sample in series {name:?}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?,
+        _ => Vec::new(),
+    };
+    samples.sort_unstable();
+    Ok(Candle { name, samples })
+}
+
+/// A parsed JSON value — the minimal serde-free reader counterpart of the
+/// crate's hand-rolled emitters ([`BenchJson::to_json`],
+/// [`Event::to_json_line`](crate::trace::Event::to_json_line),
+/// [`chrome_trace`](crate::trace::chrome_trace)).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any JSON number (stored as `f64`; integers exact up to 2^53).
+    Num(f64),
+    /// A string, with escapes resolved.
+    Str(String),
+    /// An array.
+    Arr(Vec<JsonValue>),
+    /// An object (insertion order preserved; lookups take the last
+    /// occurrence of a duplicate key, matching serde/JS semantics).
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Object field lookup (None on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(entries) => {
+                entries.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// The number, if this is one.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The number as an unsigned integer (None on negatives/fractions).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// The string contents, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The array elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document (object, array, or scalar). Trailing
+/// non-whitespace after the document is an error.
+pub fn parse_json(text: &str) -> anyhow::Result<JsonValue> {
+    let mut p = Parser {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        anyhow::bail!("trailing data after JSON document at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> anyhow::Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON at byte {}", self.pos))
+    }
+
+    fn expect(&mut self, want: u8) -> anyhow::Result<()> {
+        let got = self.peek()?;
+        if got != want {
+            anyhow::bail!(
+                "expected {:?} at byte {}, got {:?}",
+                want as char,
+                self.pos,
+                got as char
+            );
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<JsonValue> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(JsonValue::Str(self.string()?)),
+            b't' => {
+                self.literal("true")?;
+                Ok(JsonValue::Bool(true))
+            }
+            b'f' => {
+                self.literal("false")?;
+                Ok(JsonValue::Bool(false))
+            }
+            b'n' => {
+                self.literal("null")?;
+                Ok(JsonValue::Null)
+            }
+            b'-' | b'0'..=b'9' => self.number(),
+            c => anyhow::bail!("unexpected {:?} at byte {}", c as char, self.pos),
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> anyhow::Result<()> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            anyhow::bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<JsonValue> {
+        let start = self.pos;
+        if self.bytes.get(self.pos) == Some(&b'-') {
+            self.pos += 1;
+        }
+        while matches!(
+            self.bytes.get(self.pos),
+            Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("digits are ASCII");
+        let n: f64 = text
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad number {text:?} at byte {start}"))?;
+        Ok(JsonValue::Num(n))
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                anyhow::bail!("unterminated string at byte {}", self.pos);
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&esc) = self.bytes.get(self.pos) else {
+                        anyhow::bail!("unterminated escape at byte {}", self.pos);
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+                            let code =
+                                u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            self.pos += 4;
+                            // lone surrogates (never emitted by our writers)
+                            // degrade to the replacement character
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => anyhow::bail!("bad escape \\{}", other as char),
+                    }
+                }
+                _ => {
+                    // raw UTF-8 run up to the next quote or escape
+                    let run_start = self.pos - 1;
+                    while let Some(&c) = self.bytes.get(self.pos) {
+                        if c == b'"' || c == b'\\' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.bytes[run_start..self.pos])?);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                c => anyhow::bail!(
+                    "expected ',' or ']' at byte {}, got {:?}",
+                    self.pos,
+                    c as char
+                ),
+            }
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut entries = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(entries));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            let v = self.value()?;
+            entries.push((key, v));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(entries));
+                }
+                c => anyhow::bail!(
+                    "expected ',' or '}}' at byte {}, got {:?}",
+                    self.pos,
+                    c as char
+                ),
+            }
+        }
     }
 }
 
@@ -204,6 +587,95 @@ mod tests {
         assert!(r.find_series("nope").is_none());
         assert_eq!(r.get_param("calibrate_bytes"), Some("1048576"));
         assert_eq!(r.get_param("missing"), None);
+    }
+
+    #[test]
+    fn reports_are_self_describing() {
+        let j = BenchJson::new("topo-sim").param("width", 8).to_json();
+        assert!(j.contains(&format!("\"schema_version\":{SCHEMA_VERSION}")), "{j}");
+        // the preset rides along inside params too
+        assert!(j.contains("\"params\":{\"preset\":\"topo-sim\",\"width\":\"8\""), "{j}");
+        // an explicit preset param is not duplicated
+        let j = BenchJson::new("x").param("preset", "custom").to_json();
+        assert_eq!(j.matches("\"preset\":\"custom\"").count(), 1, "{j}");
+    }
+
+    #[test]
+    fn set_param_replaces_in_place() {
+        let mut r = BenchJson::new("p").param("a", 1);
+        r.set_param("a", 2);
+        r.set_param("b", "x");
+        assert_eq!(r.get_param("a"), Some("2"));
+        assert_eq!(r.get_param("b"), Some("x"));
+        assert_eq!(r.params.len(), 2);
+    }
+
+    #[test]
+    fn series_lookup_error_names_available_series() {
+        let mut r = BenchJson::new("cal");
+        r.series.push(candle("calibrate/mac", &[4]));
+        r.spans.push(candle("CEC/gemm.compute", &[5]));
+        assert!(r.series("calibrate/mac").is_ok());
+        let err = r.series("calibrate/xor").unwrap_err().to_string();
+        assert!(err.contains("calibrate/xor"), "{err}");
+        assert!(err.contains("calibrate/mac"), "{err}");
+        assert!(err.contains("CEC/gemm.compute"), "{err}");
+        let empty = BenchJson::new("e").series("nope").unwrap_err().to_string();
+        assert!(empty.contains("none"), "{empty}");
+    }
+
+    #[test]
+    fn from_json_round_trips_a_report() {
+        let mut r = BenchJson::new("table2-sim").param("block_bytes", 1 << 20);
+        r.series.push(candle("n11k8/classical", &[10, 30, 20]));
+        r.spans.push(candle("CEC/gemm.compute", &[5]));
+        r.wall = Duration::from_millis(1500);
+        let back = BenchJson::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.preset, "table2-sim");
+        assert_eq!(back.get_param("preset"), Some("table2-sim"));
+        assert_eq!(back.get_param("block_bytes"), Some("1048576"));
+        assert_eq!(back.series.len(), 1);
+        assert_eq!(back.series[0].name, "n11k8/classical");
+        assert_eq!(back.series[0].samples.len(), 3);
+        assert_eq!(back.series[0].median(), Duration::from_millis(20));
+        assert_eq!(back.spans[0].name, "CEC/gemm.compute");
+        assert!((back.wall.as_secs_f64() - 1.5).abs() < 1e-6);
+        // pre-schema_version documents (no preset param, no spans) parse too
+        let old = BenchJson::from_json(
+            "{\"preset\":\"legacy\",\"params\":{},\"series\":[],\"wall_s\":0.1}",
+        )
+        .unwrap();
+        assert_eq!(old.preset, "legacy");
+        assert!(old.spans.is_empty());
+    }
+
+    #[test]
+    fn parse_json_handles_nesting_and_escapes() {
+        let v = parse_json(
+            " {\"a\": [1, 2.5, -3e2, true, false, null], \"s\": \"x\\n\\\"y\\u0041\", \"o\": {\"k\": 7}} ",
+        )
+        .unwrap();
+        let a = v.get("a").and_then(JsonValue::as_arr).unwrap();
+        assert_eq!(a.len(), 6);
+        assert_eq!(a[0].as_u64(), Some(1));
+        assert_eq!(a[1].as_f64(), Some(2.5));
+        assert_eq!(a[2].as_f64(), Some(-300.0));
+        assert_eq!(a[2].as_u64(), None, "negative is not u64");
+        assert_eq!(a[3], JsonValue::Bool(true));
+        assert_eq!(a[5], JsonValue::Null);
+        assert_eq!(v.get("s").and_then(JsonValue::as_str), Some("x\n\"yA"));
+        assert_eq!(v.get("o").unwrap().get("k").and_then(JsonValue::as_u64), Some(7));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn parse_json_rejects_malformed_documents() {
+        assert!(parse_json("").is_err());
+        assert!(parse_json("{\"a\":1} extra").is_err());
+        assert!(parse_json("{\"a\"}").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("\"unterminated").is_err());
+        assert!(parse_json("{\"a\":12x4}").is_err());
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::clock::{ClockHandle, Tick};
 pub mod json;
 
 pub use crate::util::bench::{bench, once, throughput_mib_s, Candle};
-pub use json::BenchJson;
+pub use json::{parse_json, BenchJson, JsonValue};
 
 /// Thread-safe named-sample collector.
 #[derive(Default)]

@@ -210,6 +210,14 @@ impl RepairScheduler {
             ) {
                 Ok(planned) => {
                     for (plan, action) in planned {
+                        crate::trace_emit!(
+                            cluster.clock(),
+                            action.new_node,
+                            crate::trace::EventKind::RepairTriggered {
+                                object: action.object.0,
+                                position: action.position
+                            }
+                        );
                         plans.push(plan);
                         pending.push((pi, action));
                     }
@@ -228,6 +236,15 @@ impl RepairScheduler {
             match outcome {
                 Ok(t) => {
                     placements[pi].chain[action.position] = action.new_node;
+                    crate::trace_emit!(
+                        cluster.clock(),
+                        action.new_node,
+                        crate::trace::EventKind::RepairCommitted {
+                            object: action.object.0,
+                            position: action.position,
+                            newcomer: action.new_node
+                        }
+                    );
                     report.actions.push(action);
                     report.times.push(t);
                 }

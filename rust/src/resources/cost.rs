@@ -109,9 +109,7 @@ impl UniformCost {
             .parse::<u64>()? as f64;
         anyhow::ensure!(bytes > 0.0 && dim > 0.0, "degenerate calibration sizes");
         let rate = |name: &str, work: f64| -> anyhow::Result<f64> {
-            let c = bench
-                .find_series(name)
-                .ok_or_else(|| anyhow::anyhow!("report has no {name} series"))?;
+            let c = bench.series(name)?;
             let secs = c.median().as_secs_f64();
             anyhow::ensure!(secs > 0.0, "{name} median is zero");
             Ok(work / secs)

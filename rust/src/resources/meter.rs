@@ -70,6 +70,12 @@ impl CpuMeter {
         self.node
     }
 
+    /// The clock this meter charges on — handed to worker-side trace
+    /// emits so dataplane events carry the same virtual timeline.
+    pub fn clock(&self) -> &ClockHandle {
+        &self.clock
+    }
+
     /// Number of core lanes this meter reserves over.
     pub fn cores(&self) -> usize {
         self.cores
@@ -91,8 +97,15 @@ impl CpuMeter {
     pub fn charge(&self, work: &GfWork) -> Tick {
         let cost = self.model.cost(self.node, work);
         if cost.is_zero() {
+            // zero charges stay emit-free too: a ZeroCost run's trace (and
+            // tick schedule) is identical to the pre-resource-model one
             return Tick::ZERO;
         }
+        crate::trace_emit!(
+            self.clock,
+            self.node,
+            crate::trace::EventKind::CpuCharge { work: *work, cost }
+        );
         let done = {
             let mut lanes = self.lanes.lock().unwrap();
             let now = self.clock.now();
@@ -202,6 +215,24 @@ mod tests {
         };
         assert_eq!(run(1), Duration::from_secs(2));
         assert_eq!(run(2), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn charges_emit_trace_events_except_zero_priced_ones() {
+        let clock = SimClock::handle();
+        let sink = crate::trace::JsonlSink::shared();
+        let _guard = crate::trace::install(&clock, sink.clone());
+        let m = CpuMeter::new(clock.clone(), UniformCost::handle(), 3);
+        m.charge(&GfWork::mac(250_000_000)); // 1 s at 250 MB/s
+        let zero = CpuMeter::new(clock.clone(), ZeroCost::handle(), 3);
+        zero.charge(&GfWork::mac(1 << 20));
+        let events = sink.events();
+        assert_eq!(events.len(), 1, "zero-priced charges must not emit");
+        assert_eq!(events[0].node, Some(3));
+        assert!(matches!(
+            events[0].kind,
+            crate::trace::EventKind::CpuCharge { cost, .. } if cost == Duration::from_secs(1)
+        ));
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Derived per-node / per-link counters over a raw event stream: bytes in
+//! flight, NIC and CPU utilization, queue-depth gauges — the aggregate
+//! load signals folded into `BenchJson` reports and printed by
+//! `rapidraid trace-report`.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::clock::Tick;
+use crate::cluster::NodeId;
+use crate::metrics::BenchJson;
+
+use super::{Event, EventKind};
+
+/// Aggregates for one node.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeCounters {
+    /// Node id.
+    pub node: NodeId,
+    /// Frames sent / received.
+    pub frames_sent: u64,
+    /// Frames received.
+    pub frames_recvd: u64,
+    /// Wire bytes sent.
+    pub bytes_sent: u64,
+    /// Wire bytes received.
+    pub bytes_recvd: u64,
+    /// Total virtual CPU time charged on the node's meter.
+    pub cpu_busy: Tick,
+    /// Total NIC wire-occupancy time (up + down reservations).
+    pub nic_busy: Tick,
+    /// Total time spent queued behind earlier NIC reservations.
+    pub nic_stall: Tick,
+    /// Highest observed command-queue depth.
+    pub max_queue: usize,
+    /// Blocks landed in the store.
+    pub stores: u64,
+    /// Bytes landed in the store.
+    pub store_bytes: u64,
+}
+
+/// Aggregates for one directed link (src → dst).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LinkCounters {
+    /// Sending node.
+    pub src: NodeId,
+    /// Receiving node.
+    pub dst: NodeId,
+    /// Frames carried.
+    pub frames: u64,
+    /// Wire bytes carried.
+    pub bytes: u64,
+    /// Peak bytes in flight (sent, not yet received).
+    pub max_in_flight: u64,
+}
+
+/// Everything [`derive_counters`] computes over one trace.
+#[derive(Clone, Debug, Default)]
+pub struct TraceCounters {
+    /// Events observed.
+    pub events: usize,
+    /// Time covered: first event tick → last event tick.
+    pub span: Tick,
+    /// Per-node aggregates, ordered by node id.
+    pub nodes: Vec<NodeCounters>,
+    /// Per-link aggregates, ordered by (src, dst).
+    pub links: Vec<LinkCounters>,
+}
+
+impl TraceCounters {
+    /// CPU utilization of `c` over the trace span, in percent (0 when the
+    /// span is empty).
+    pub fn cpu_util_pct(&self, c: &NodeCounters) -> f64 {
+        pct(c.cpu_busy, self.span)
+    }
+
+    /// NIC wire-occupancy of `c` over the trace span, in percent.
+    pub fn nic_util_pct(&self, c: &NodeCounters) -> f64 {
+        pct(c.nic_busy, self.span)
+    }
+
+    /// Fold the headline gauges into a bench report as params
+    /// (`trace_events`, `trace_span_ns`, byte totals, peak queue depth and
+    /// the max per-node CPU/NIC utilization) so every traced `BENCH_*.json`
+    /// is self-describing about the load it measured.
+    pub fn fold_into(&self, report: &mut BenchJson) {
+        let bytes_sent: u64 = self.nodes.iter().map(|n| n.bytes_sent).sum();
+        let max_queue = self.nodes.iter().map(|n| n.max_queue).max().unwrap_or(0);
+        let cpu_max = self
+            .nodes
+            .iter()
+            .map(|n| self.cpu_util_pct(n))
+            .fold(0.0f64, f64::max);
+        let nic_max = self
+            .nodes
+            .iter()
+            .map(|n| self.nic_util_pct(n))
+            .fold(0.0f64, f64::max);
+        report.set_param("trace_events", self.events);
+        report.set_param("trace_span_ns", self.span.as_nanos());
+        report.set_param("trace_bytes_sent", bytes_sent);
+        report.set_param("trace_max_queue_depth", max_queue);
+        report.set_param("trace_cpu_util_max_pct", format!("{cpu_max:.1}"));
+        report.set_param("trace_nic_util_max_pct", format!("{nic_max:.1}"));
+    }
+
+    /// Human-readable per-node and per-link summary lines.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.nodes.len() + self.links.len() + 1);
+        out.push(format!(
+            "{} events over {:?} on {} nodes / {} links",
+            self.events,
+            self.span,
+            self.nodes.len(),
+            self.links.len()
+        ));
+        for n in &self.nodes {
+            out.push(format!(
+                "node {:>3}: cpu {:>5.1}% nic {:>5.1}% (stall {:?}) sent {} B recvd {} B stores {} queue≤{}",
+                n.node,
+                self.cpu_util_pct(n),
+                self.nic_util_pct(n),
+                n.nic_stall,
+                n.bytes_sent,
+                n.bytes_recvd,
+                n.stores,
+                n.max_queue,
+            ));
+        }
+        for l in &self.links {
+            out.push(format!(
+                "link {:>3} -> {:>3}: {} frames, {} B, peak {} B in flight",
+                l.src, l.dst, l.frames, l.bytes, l.max_in_flight
+            ));
+        }
+        out
+    }
+}
+
+fn pct(busy: Tick, span: Tick) -> f64 {
+    if span.is_zero() {
+        return 0.0;
+    }
+    100.0 * busy.as_secs_f64() / span.as_secs_f64()
+}
+
+/// Scan a trace into per-node / per-link aggregates.
+pub fn derive_counters(events: &[Event]) -> TraceCounters {
+    let mut nodes: BTreeMap<NodeId, NodeCounters> = BTreeMap::new();
+    let mut links: BTreeMap<(NodeId, NodeId), (LinkCounters, u64)> = BTreeMap::new();
+    let mut first: Option<Tick> = None;
+    let mut last = Duration::ZERO;
+
+    for e in events {
+        first = Some(first.map_or(e.at, |f| f.min(e.at)));
+        last = last.max(e.at);
+        let touch = |nodes: &mut BTreeMap<NodeId, NodeCounters>, id: NodeId| {
+            nodes.entry(id).or_insert_with(|| NodeCounters {
+                node: id,
+                ..NodeCounters::default()
+            });
+        };
+        match (&e.kind, e.node) {
+            (
+                EventKind::FrameSent {
+                    dst,
+                    bytes,
+                    deliver_at,
+                },
+                Some(src),
+            ) => {
+                last = last.max(*deliver_at);
+                touch(&mut nodes, src);
+                let n = nodes.get_mut(&src).unwrap();
+                n.frames_sent += 1;
+                n.bytes_sent += *bytes as u64;
+                let (link, in_flight) =
+                    links
+                        .entry((src, *dst))
+                        .or_insert_with(|| {
+                            (
+                                LinkCounters {
+                                    src,
+                                    dst: *dst,
+                                    ..LinkCounters::default()
+                                },
+                                0,
+                            )
+                        });
+                link.frames += 1;
+                link.bytes += *bytes as u64;
+                *in_flight += *bytes as u64;
+                link.max_in_flight = link.max_in_flight.max(*in_flight);
+            }
+            (EventKind::FrameRecvd { src, bytes }, Some(dst)) => {
+                touch(&mut nodes, dst);
+                let n = nodes.get_mut(&dst).unwrap();
+                n.frames_recvd += 1;
+                n.bytes_recvd += *bytes as u64;
+                if let Some((_, in_flight)) = links.get_mut(&(*src, dst)) {
+                    *in_flight = in_flight.saturating_sub(*bytes as u64);
+                }
+            }
+            (EventKind::NicStall { stall, busy, .. }, Some(id)) => {
+                touch(&mut nodes, id);
+                let n = nodes.get_mut(&id).unwrap();
+                n.nic_stall += *stall;
+                n.nic_busy += *busy;
+            }
+            (EventKind::CpuCharge { cost, .. }, Some(id)) => {
+                touch(&mut nodes, id);
+                nodes.get_mut(&id).unwrap().cpu_busy += *cost;
+            }
+            (EventKind::QueueDepth { depth }, Some(id)) => {
+                touch(&mut nodes, id);
+                let n = nodes.get_mut(&id).unwrap();
+                n.max_queue = n.max_queue.max(*depth);
+            }
+            (EventKind::StoreDone { bytes, .. }, Some(id)) => {
+                touch(&mut nodes, id);
+                let n = nodes.get_mut(&id).unwrap();
+                n.stores += 1;
+                n.store_bytes += *bytes as u64;
+            }
+            _ => {}
+        }
+    }
+    TraceCounters {
+        events: events.len(),
+        span: last.saturating_sub(first.unwrap_or(Duration::ZERO)),
+        nodes: nodes.into_values().collect(),
+        links: links.into_values().map(|(l, _)| l).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::GfWork;
+    use crate::trace::Direction;
+
+    fn at(ns: u64) -> Tick {
+        Duration::from_nanos(ns)
+    }
+
+    #[test]
+    fn counters_aggregate_per_node_and_link() {
+        let events = vec![
+            Event {
+                at: at(0),
+                node: Some(0),
+                kind: EventKind::FrameSent {
+                    dst: 1,
+                    bytes: 100,
+                    deliver_at: at(50),
+                },
+            },
+            Event {
+                at: at(10),
+                node: Some(0),
+                kind: EventKind::FrameSent {
+                    dst: 1,
+                    bytes: 100,
+                    deliver_at: at(60),
+                },
+            },
+            Event {
+                at: at(50),
+                node: Some(1),
+                kind: EventKind::FrameRecvd { src: 0, bytes: 100 },
+            },
+            Event {
+                at: at(55),
+                node: Some(1),
+                kind: EventKind::CpuCharge {
+                    work: GfWork::mac(64),
+                    cost: at(500),
+                },
+            },
+            Event {
+                at: at(56),
+                node: Some(1),
+                kind: EventKind::NicStall {
+                    dir: Direction::Up,
+                    stall: at(5),
+                    busy: at(250),
+                    bytes: 100,
+                },
+            },
+            Event {
+                at: at(57),
+                node: Some(1),
+                kind: EventKind::QueueDepth { depth: 3 },
+            },
+            Event {
+                at: at(1000),
+                node: Some(1),
+                kind: EventKind::StoreDone {
+                    object: 1,
+                    index: 0,
+                    bytes: 4096,
+                },
+            },
+        ];
+        let c = derive_counters(&events);
+        assert_eq!(c.events, 7);
+        assert_eq!(c.span, at(1000));
+        assert_eq!(c.nodes.len(), 2);
+        let n0 = &c.nodes[0];
+        assert_eq!((n0.node, n0.frames_sent, n0.bytes_sent), (0, 2, 200));
+        let n1 = &c.nodes[1];
+        assert_eq!(n1.frames_recvd, 1);
+        assert_eq!(n1.cpu_busy, at(500));
+        assert_eq!(n1.nic_busy, at(250));
+        assert_eq!(n1.nic_stall, at(5));
+        assert_eq!(n1.max_queue, 3);
+        assert_eq!((n1.stores, n1.store_bytes), (1, 4096));
+        assert_eq!(c.links.len(), 1);
+        let l = &c.links[0];
+        assert_eq!((l.src, l.dst, l.frames, l.bytes), (0, 1, 2, 200));
+        // both frames were outstanding before the first delivery
+        assert_eq!(l.max_in_flight, 200);
+        assert!((c.cpu_util_pct(n1) - 50.0).abs() < 1e-9);
+        assert!(!c.summary_lines().is_empty());
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_counters() {
+        let c = derive_counters(&[]);
+        assert_eq!(c.events, 0);
+        assert_eq!(c.span, Duration::ZERO);
+        assert!(c.nodes.is_empty() && c.links.is_empty());
+    }
+}

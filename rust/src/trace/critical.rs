@@ -1,0 +1,342 @@
+//! Critical-path attribution: walk the event stream of a finished archival
+//! (or repair) plan and attribute its makespan to *compute* vs *transfer*
+//! vs *upstream wait*, per chain/tree slot.
+//!
+//! The algorithm is a per-slot partition of the plan window. The executor
+//! brackets every plan with `PlanStart { object, nodes }` /
+//! `PlanEnd { object, makespan }` events; for each slot (a node bound to a
+//! plan step) the window `[start, end]` decomposes as:
+//!
+//! * **compute** — the sum of the slot's `CpuCharge` costs inside the
+//!   window (virtual time its CPU meter was genuinely reserved);
+//! * **transfer** — the sum of its `NicStall` stall + wire-occupancy time
+//!   (queueing behind earlier reservations plus serialization at the NIC
+//!   rate), clamped so compute + transfer never exceeds the makespan
+//!   (overlap is attributed to the earlier category in this order);
+//! * **wait** — the remainder: time the slot sat blocked on upstream
+//!   frames (or on plan-level skew).
+//!
+//! By construction the three parts of every slot sum *exactly* to the
+//! plan's makespan — `trace-report` always accounts for 100% of where the
+//! time went, and the slot with the least wait is the critical one (it
+//! paced everyone else). Concurrent plans are disambiguated by object id
+//! (starts and ends match LIFO per object).
+
+use std::time::Duration;
+
+use crate::clock::Tick;
+use crate::cluster::NodeId;
+
+use super::{Event, EventKind};
+
+/// One plan slot's share of the makespan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotAttribution {
+    /// The node bound to this slot.
+    pub node: NodeId,
+    /// CPU-meter time charged inside the plan window.
+    pub compute: Tick,
+    /// NIC stall + wire-occupancy time inside the window (clamped).
+    pub transfer: Tick,
+    /// Remainder: blocked on upstream frames / plan skew.
+    pub wait: Tick,
+}
+
+impl SlotAttribution {
+    /// Always equals the plan's makespan (the partition is exact).
+    pub fn total(&self) -> Tick {
+        self.compute + self.transfer + self.wait
+    }
+}
+
+/// Attribution of one executed plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanAttribution {
+    /// Object the plan operated on.
+    pub object: u64,
+    /// Virtual start of the plan window.
+    pub start: Tick,
+    /// Virtual end of the plan window.
+    pub end: Tick,
+    /// Per-slot partitions, in plan step order.
+    pub slots: Vec<SlotAttribution>,
+}
+
+impl PlanAttribution {
+    /// The plan's start→finish duration.
+    pub fn makespan(&self) -> Tick {
+        self.end.saturating_sub(self.start)
+    }
+}
+
+/// Walk `events` (any order-preserving trace, e.g. a `JsonlSink`'s
+/// canonical stream) and attribute every completed plan found in it.
+pub fn attribute_plans(events: &[Event]) -> Vec<PlanAttribution> {
+    // Open windows per object, LIFO (concurrent plans share a trace but
+    // objects are distinct within a batch).
+    let mut open: Vec<(u64, Tick, Vec<NodeId>)> = Vec::new();
+    let mut done: Vec<PlanAttribution> = Vec::new();
+    for e in events {
+        match &e.kind {
+            EventKind::PlanStart { object, nodes } => {
+                open.push((*object, e.at, nodes.clone()));
+            }
+            EventKind::PlanEnd { object, .. } => {
+                let Some(i) = open.iter().rposition(|(o, _, _)| o == object) else {
+                    continue; // truncated trace: end without start
+                };
+                let (object, start, nodes) = open.remove(i);
+                done.push(attribute_window(events, object, start, e.at, &nodes));
+            }
+            _ => {}
+        }
+    }
+    done
+}
+
+fn attribute_window(
+    events: &[Event],
+    object: u64,
+    start: Tick,
+    end: Tick,
+    nodes: &[NodeId],
+) -> PlanAttribution {
+    let makespan = end.saturating_sub(start);
+    let slots = nodes
+        .iter()
+        .map(|&node| {
+            let mut compute = Duration::ZERO;
+            let mut transfer = Duration::ZERO;
+            for e in events {
+                if e.node != Some(node) || e.at < start || e.at > end {
+                    continue;
+                }
+                match &e.kind {
+                    EventKind::CpuCharge { cost, .. } => compute += *cost,
+                    EventKind::NicStall { stall, busy, .. } => transfer += *stall + *busy,
+                    _ => {}
+                }
+            }
+            // Exact partition: overlapping or over-attributed categories
+            // are clamped in (compute, transfer) order; wait absorbs the
+            // rest.
+            let compute = compute.min(makespan);
+            let transfer = transfer.min(makespan.saturating_sub(compute));
+            let wait = makespan.saturating_sub(compute + transfer);
+            SlotAttribution {
+                node,
+                compute,
+                transfer,
+                wait,
+            }
+        })
+        .collect();
+    PlanAttribution {
+        object,
+        start,
+        end,
+        slots,
+    }
+}
+
+/// Render attributions as the `trace-report` breakdown table.
+pub fn render_attribution(plans: &[PlanAttribution]) -> String {
+    let mut out = String::new();
+    if plans.is_empty() {
+        out.push_str("no completed plans in trace\n");
+        return out;
+    }
+    for p in plans {
+        let ms = p.makespan();
+        out.push_str(&format!(
+            "plan object={} makespan={:?} ({} slots)\n",
+            p.object,
+            ms,
+            p.slots.len()
+        ));
+        for s in &p.slots {
+            out.push_str(&format!(
+                "  slot node={:>3}  compute {:>12?} ({:>5.1}%)  transfer {:>12?} ({:>5.1}%)  wait {:>12?} ({:>5.1}%)\n",
+                s.node,
+                s.compute,
+                share(s.compute, ms),
+                s.transfer,
+                share(s.transfer, ms),
+                s.wait,
+                share(s.wait, ms),
+            ));
+        }
+    }
+    out
+}
+
+fn share(part: Tick, whole: Tick) -> f64 {
+    if whole.is_zero() {
+        return 0.0;
+    }
+    100.0 * part.as_secs_f64() / whole.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::GfWork;
+    use crate::trace::Direction;
+
+    fn at(ns: u64) -> Tick {
+        Duration::from_nanos(ns)
+    }
+
+    fn charge(node: NodeId, t: u64, cost: u64) -> Event {
+        Event {
+            at: at(t),
+            node: Some(node),
+            kind: EventKind::CpuCharge {
+                work: GfWork::mac(1),
+                cost: at(cost),
+            },
+        }
+    }
+
+    fn stall(node: NodeId, t: u64, stall_ns: u64, busy_ns: u64) -> Event {
+        Event {
+            at: at(t),
+            node: Some(node),
+            kind: EventKind::NicStall {
+                dir: Direction::Up,
+                stall: at(stall_ns),
+                busy: at(busy_ns),
+                bytes: 64,
+            },
+        }
+    }
+
+    #[test]
+    fn partition_sums_exactly_to_makespan() {
+        let events = vec![
+            Event {
+                at: at(100),
+                node: Some(0),
+                kind: EventKind::PlanStart {
+                    object: 5,
+                    nodes: vec![0, 1, 2],
+                },
+            },
+            charge(0, 150, 200),
+            stall(0, 200, 50, 100),
+            charge(1, 300, 400),
+            // node 2: no charges at all — pure wait
+            // outside the window: ignored
+            charge(1, 5000, 123),
+            Event {
+                at: at(1100),
+                node: Some(0),
+                kind: EventKind::PlanEnd {
+                    object: 5,
+                    makespan: at(1000),
+                },
+            },
+        ];
+        let plans = attribute_plans(&events);
+        assert_eq!(plans.len(), 1);
+        let p = &plans[0];
+        assert_eq!(p.makespan(), at(1000));
+        assert_eq!(p.slots.len(), 3);
+        for s in &p.slots {
+            assert_eq!(s.total(), p.makespan(), "slot {} partition leaks", s.node);
+        }
+        assert_eq!(p.slots[0].compute, at(200));
+        assert_eq!(p.slots[0].transfer, at(150));
+        assert_eq!(p.slots[0].wait, at(650));
+        assert_eq!(p.slots[1].compute, at(400));
+        assert_eq!(p.slots[2].compute, Duration::ZERO);
+        assert_eq!(p.slots[2].wait, at(1000));
+        let table = render_attribution(&plans);
+        assert!(table.contains("object=5"), "{table}");
+        assert!(table.contains("slot node=  2"), "{table}");
+    }
+
+    #[test]
+    fn over_attribution_clamps_instead_of_overflowing() {
+        let events = vec![
+            Event {
+                at: at(0),
+                node: Some(0),
+                kind: EventKind::PlanStart {
+                    object: 1,
+                    nodes: vec![0],
+                },
+            },
+            charge(0, 10, 900),
+            charge(0, 20, 900), // 1800 > 1000 makespan
+            stall(0, 30, 500, 500),
+            Event {
+                at: at(1000),
+                node: Some(0),
+                kind: EventKind::PlanEnd {
+                    object: 1,
+                    makespan: at(1000),
+                },
+            },
+        ];
+        let p = &attribute_plans(&events)[0];
+        let s = &p.slots[0];
+        assert_eq!(s.compute, at(1000));
+        assert_eq!(s.transfer, Duration::ZERO);
+        assert_eq!(s.wait, Duration::ZERO);
+        assert_eq!(s.total(), p.makespan());
+    }
+
+    #[test]
+    fn unmatched_end_is_skipped_and_lifo_matches_objects() {
+        let events = vec![
+            Event {
+                at: at(0),
+                node: Some(0),
+                kind: EventKind::PlanEnd {
+                    object: 9,
+                    makespan: at(1),
+                },
+            },
+            Event {
+                at: at(10),
+                node: Some(0),
+                kind: EventKind::PlanStart {
+                    object: 1,
+                    nodes: vec![0],
+                },
+            },
+            Event {
+                at: at(10),
+                node: Some(1),
+                kind: EventKind::PlanStart {
+                    object: 2,
+                    nodes: vec![1],
+                },
+            },
+            Event {
+                at: at(30),
+                node: Some(1),
+                kind: EventKind::PlanEnd {
+                    object: 2,
+                    makespan: at(20),
+                },
+            },
+            Event {
+                at: at(50),
+                node: Some(0),
+                kind: EventKind::PlanEnd {
+                    object: 1,
+                    makespan: at(40),
+                },
+            },
+        ];
+        let plans = attribute_plans(&events);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].object, 2);
+        assert_eq!(plans[0].makespan(), at(20));
+        assert_eq!(plans[1].object, 1);
+        assert_eq!(plans[1].makespan(), at(40));
+        assert!(render_attribution(&[]).contains("no completed plans"));
+    }
+}

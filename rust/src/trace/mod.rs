@@ -1,0 +1,605 @@
+//! Deterministic dataplane tracing: a typed event bus for the whole
+//! simulator.
+//!
+//! Every instrumentation point in the dataplane funnels through one macro,
+//! [`trace_emit!`]: a typed [`Event`] stamped with the *cluster clock's*
+//! virtual time, the emitting node, and a payload variant
+//! ([`EventKind`]) — frames on the wire, NIC stalls, CPU charges, fold and
+//! gemm spans, store landings, queue-depth gauges, failure and repair
+//! lifecycle, plan boundaries and workload epochs. Events flow into any
+//! number of installed [`TraceSink`]s (a ring buffer, a JSONL writer, and —
+//! via [`perfetto`] — a Chrome-trace exporter rendering a run as a per-node
+//! Gantt timeline); [`counters`] and [`critical`] derive per-node/per-link
+//! counters and critical-path attribution from the raw stream.
+//!
+//! ## Determinism contract
+//!
+//! * **No sink installed ⇒ zero observable effect.** The emit macro
+//!   compiles to a branch on a process-wide `OnceLock` registry (plus a
+//!   relaxed active-session counter): until the first install the event
+//!   expression is never even evaluated, no clock is read, and the
+//!   dataplane stays byte- and tick-identical to an untraced build —
+//!   `tests/determinism.rs` guards exactly this.
+//! * **Sinks observe, never perturb.** Recording takes no clock sleeps and
+//!   registers no participants, so virtual time cannot advance (or stall)
+//!   because of tracing; a traced SimClock run takes the same ticks as an
+//!   untraced one.
+//! * **Byte-identical traces per seed.** Under a `SimClock` the *multiset*
+//!   of events per tick is deterministic, but OS thread scheduling may
+//!   interleave same-tick emits differently across runs. [`sink::JsonlSink`]
+//!   therefore canonicalizes at the end: lines are sorted by
+//!   `(tick, serialized line)`, making the output a pure function of the
+//!   event multiset — same seed ⇒ byte-identical JSONL.
+//! * **Isolation.** A session installed with [`install`] only receives
+//!   events stamped by *that clock* (filtered by `Arc` pointer identity), so
+//!   concurrently running tests with their own clusters cannot pollute each
+//!   other's traces. [`install_global`] (the CLI path, one scenario per
+//!   process) receives everything.
+
+pub mod counters;
+pub mod critical;
+pub mod perfetto;
+pub mod reader;
+pub mod sink;
+
+pub use counters::{derive_counters, LinkCounters, NodeCounters, TraceCounters};
+pub use critical::{attribute_plans, render_attribution, PlanAttribution, SlotAttribution};
+pub use perfetto::chrome_trace;
+pub use reader::{parse_event, parse_jsonl};
+pub use sink::{JsonlSink, RingSink};
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::clock::{ClockHandle, Tick};
+use crate::cluster::NodeId;
+use crate::resources::GfWork;
+
+/// Which side of a link a NIC reservation was made on.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// The sender's uplink (acquired, paces the sending worker).
+    Up,
+    /// The receiver's downlink (reserved, shifts the delivery instant).
+    Down,
+}
+
+impl Direction {
+    /// Stable wire label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Direction::Up => "up",
+            Direction::Down => "down",
+        }
+    }
+}
+
+/// One typed observation from the dataplane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    /// Virtual time on the emitting cluster's clock.
+    pub at: Tick,
+    /// Emitting node, when the event has one (`None` = cluster-scope:
+    /// plan boundaries, workload epochs).
+    pub node: Option<NodeId>,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+/// Payload variants of a trace [`Event`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A frame left `node` for `dst` (stamped at send, after NIC pacing).
+    FrameSent {
+        /// Receiving node.
+        dst: NodeId,
+        /// Wire bytes of the frame.
+        bytes: usize,
+        /// Virtual instant the frame arrives at `dst`.
+        deliver_at: Tick,
+    },
+    /// A frame from `src` was consumed by `node`'s receiving worker.
+    FrameRecvd {
+        /// Sending node.
+        src: NodeId,
+        /// Wire bytes of the frame.
+        bytes: usize,
+    },
+    /// A NIC token-bucket reservation: how long the caller queued behind
+    /// earlier reservations (`stall`) and how long the wire itself is
+    /// occupied (`busy`).
+    NicStall {
+        /// Uplink (sender) or downlink (receiver) reservation.
+        dir: Direction,
+        /// Queueing delay behind earlier reservations.
+        stall: Tick,
+        /// Serialization time of these bytes at the NIC rate.
+        busy: Tick,
+        /// Reserved bytes.
+        bytes: usize,
+    },
+    /// A data-plane worker charged GF compute on its node's `CpuMeter`.
+    CpuCharge {
+        /// The work units priced.
+        work: GfWork,
+        /// Virtual compute time charged.
+        cost: Tick,
+    },
+    /// A fold (pipeline stage) started processing one frame.
+    FoldStart {
+        /// Object of the stored output, when this stage stores one.
+        object: Option<u64>,
+        /// Codeword index of the stored output, when known.
+        index: Option<usize>,
+        /// Frame sequence number within the stream.
+        frame: usize,
+    },
+    /// The matching end of a [`EventKind::FoldStart`] (same frame).
+    FoldEnd {
+        /// Object of the stored output, when this stage stores one.
+        object: Option<u64>,
+        /// Codeword index of the stored output, when known.
+        index: Option<usize>,
+        /// Frame sequence number within the stream.
+        frame: usize,
+    },
+    /// A gemm step started one frame's row sweep.
+    GemmStart {
+        /// Parity rows computed per frame.
+        rows: usize,
+        /// Frame sequence number within the stream.
+        frame: usize,
+    },
+    /// The matching end of a [`EventKind::GemmStart`] (same frame).
+    GemmEnd {
+        /// Parity rows computed per frame.
+        rows: usize,
+        /// Frame sequence number within the stream.
+        frame: usize,
+    },
+    /// A block landed in a node's store.
+    StoreDone {
+        /// Owning object.
+        object: u64,
+        /// Block index within the object.
+        index: usize,
+        /// Stored bytes.
+        bytes: usize,
+    },
+    /// A node's command-queue depth changed (gauge: queued + active).
+    QueueDepth {
+        /// Commands queued or running after the change.
+        depth: usize,
+    },
+    /// The node was crash-stopped.
+    NodeFailed,
+    /// The node came back (empty).
+    NodeRevived,
+    /// The scheduler planned a repair of one lost block.
+    RepairTriggered {
+        /// Object being repaired.
+        object: u64,
+        /// Codeword position of the lost block.
+        position: usize,
+    },
+    /// A planned repair executed and its chain rebind committed.
+    RepairCommitted {
+        /// Object that was repaired.
+        object: u64,
+        /// Codeword position of the regenerated block.
+        position: usize,
+        /// Node now holding the block.
+        newcomer: NodeId,
+    },
+    /// A plan began executing (stamped by the executor before dispatch).
+    PlanStart {
+        /// Object the plan operates on.
+        object: u64,
+        /// Nodes bound to the plan's steps, in step order (the slots the
+        /// critical-path analyzer attributes over).
+        nodes: Vec<NodeId>,
+    },
+    /// The matching end of a [`EventKind::PlanStart`].
+    PlanEnd {
+        /// Object the plan operated on.
+        object: u64,
+        /// Virtual start→finish duration of the plan.
+        makespan: Tick,
+    },
+    /// One workload epoch's summary (the long-run harness's `EpochStats`).
+    Epoch {
+        /// Epoch index.
+        epoch: u64,
+        /// Blocks repaired by this epoch's scheduler pass.
+        repaired: usize,
+        /// Coded blocks still missing after the pass.
+        missing: usize,
+    },
+}
+
+impl EventKind {
+    /// Stable wire name of the variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::FrameSent { .. } => "frame_sent",
+            EventKind::FrameRecvd { .. } => "frame_recvd",
+            EventKind::NicStall { .. } => "nic_stall",
+            EventKind::CpuCharge { .. } => "cpu_charge",
+            EventKind::FoldStart { .. } => "fold_start",
+            EventKind::FoldEnd { .. } => "fold_end",
+            EventKind::GemmStart { .. } => "gemm_start",
+            EventKind::GemmEnd { .. } => "gemm_end",
+            EventKind::StoreDone { .. } => "store_done",
+            EventKind::QueueDepth { .. } => "queue_depth",
+            EventKind::NodeFailed => "node_failed",
+            EventKind::NodeRevived => "node_revived",
+            EventKind::RepairTriggered { .. } => "repair_triggered",
+            EventKind::RepairCommitted { .. } => "repair_committed",
+            EventKind::PlanStart { .. } => "plan_start",
+            EventKind::PlanEnd { .. } => "plan_end",
+            EventKind::Epoch { .. } => "epoch",
+        }
+    }
+}
+
+impl Event {
+    /// The canonical one-line JSON form ([`reader::parse_event`] is its
+    /// inverse). Field order is fixed, so the line doubles as the
+    /// deterministic sort tie-break for same-tick events.
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::with_capacity(96);
+        s.push_str("{\"t\":");
+        push_u128(&mut s, self.at.as_nanos());
+        if let Some(n) = self.node {
+            s.push_str(",\"node\":");
+            push_u128(&mut s, n as u128);
+        }
+        s.push_str(",\"ev\":\"");
+        s.push_str(self.kind.name());
+        s.push('"');
+        match &self.kind {
+            EventKind::FrameSent {
+                dst,
+                bytes,
+                deliver_at,
+            } => {
+                field(&mut s, "dst", *dst as u128);
+                field(&mut s, "bytes", *bytes as u128);
+                field(&mut s, "deliver", deliver_at.as_nanos());
+            }
+            EventKind::FrameRecvd { src, bytes } => {
+                field(&mut s, "src", *src as u128);
+                field(&mut s, "bytes", *bytes as u128);
+            }
+            EventKind::NicStall {
+                dir,
+                stall,
+                busy,
+                bytes,
+            } => {
+                s.push_str(",\"dir\":\"");
+                s.push_str(dir.label());
+                s.push('"');
+                field(&mut s, "stall", stall.as_nanos());
+                field(&mut s, "busy", busy.as_nanos());
+                field(&mut s, "bytes", *bytes as u128);
+            }
+            EventKind::CpuCharge { work, cost } => {
+                field(&mut s, "mac", work.mac_bytes as u128);
+                field(&mut s, "xor", work.xor_bytes as u128);
+                field(&mut s, "store", work.store_bytes as u128);
+                field(&mut s, "inv", work.invert_elems as u128);
+                field(&mut s, "cost", cost.as_nanos());
+            }
+            EventKind::FoldStart {
+                object,
+                index,
+                frame,
+            }
+            | EventKind::FoldEnd {
+                object,
+                index,
+                frame,
+            } => {
+                if let Some(o) = object {
+                    field(&mut s, "object", *o as u128);
+                }
+                if let Some(i) = index {
+                    field(&mut s, "index", *i as u128);
+                }
+                field(&mut s, "frame", *frame as u128);
+            }
+            EventKind::GemmStart { rows, frame } | EventKind::GemmEnd { rows, frame } => {
+                field(&mut s, "rows", *rows as u128);
+                field(&mut s, "frame", *frame as u128);
+            }
+            EventKind::StoreDone {
+                object,
+                index,
+                bytes,
+            } => {
+                field(&mut s, "object", *object as u128);
+                field(&mut s, "index", *index as u128);
+                field(&mut s, "bytes", *bytes as u128);
+            }
+            EventKind::QueueDepth { depth } => {
+                field(&mut s, "depth", *depth as u128);
+            }
+            EventKind::NodeFailed | EventKind::NodeRevived => {}
+            EventKind::RepairTriggered { object, position } => {
+                field(&mut s, "object", *object as u128);
+                field(&mut s, "position", *position as u128);
+            }
+            EventKind::RepairCommitted {
+                object,
+                position,
+                newcomer,
+            } => {
+                field(&mut s, "object", *object as u128);
+                field(&mut s, "position", *position as u128);
+                field(&mut s, "newcomer", *newcomer as u128);
+            }
+            EventKind::PlanStart { object, nodes } => {
+                field(&mut s, "object", *object as u128);
+                s.push_str(",\"nodes\":[");
+                for (i, n) in nodes.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    push_u128(&mut s, *n as u128);
+                }
+                s.push(']');
+            }
+            EventKind::PlanEnd { object, makespan } => {
+                field(&mut s, "object", *object as u128);
+                field(&mut s, "makespan", makespan.as_nanos());
+            }
+            EventKind::Epoch {
+                epoch,
+                repaired,
+                missing,
+            } => {
+                field(&mut s, "epoch", *epoch as u128);
+                field(&mut s, "repaired", *repaired as u128);
+                field(&mut s, "missing", *missing as u128);
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+fn push_u128(s: &mut String, v: u128) {
+    s.push_str(&v.to_string());
+}
+
+fn field(s: &mut String, key: &str, v: u128) {
+    s.push_str(",\"");
+    s.push_str(key);
+    s.push_str("\":");
+    push_u128(s, v);
+}
+
+/// Where trace events go. Implementations must be cheap and non-blocking
+/// on the simulation's critical path: no clock sleeps, no participant
+/// registration, no I/O per event (buffer, flush at the end).
+pub trait TraceSink: Send + Sync + std::fmt::Debug {
+    /// Observe one event. Called from data-plane threads; may run
+    /// concurrently.
+    fn record(&self, event: &Event);
+}
+
+struct Session {
+    id: u64,
+    /// `Some(key)` = only events stamped by the clock with this identity;
+    /// `None` = every clock in the process.
+    clock: Option<usize>,
+    sink: Arc<dyn TraceSink>,
+}
+
+struct Registry {
+    sessions: RwLock<Vec<Session>>,
+    next_id: AtomicU64,
+    active: AtomicUsize,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(|| Registry {
+        sessions: RwLock::new(Vec::new()),
+        next_id: AtomicU64::new(1),
+        active: AtomicUsize::new(0),
+    })
+}
+
+/// Identity of a clock for session filtering: the `Arc`'s data pointer.
+fn clock_key(clock: &ClockHandle) -> usize {
+    Arc::as_ptr(clock) as *const u8 as usize
+}
+
+/// Fast path of [`trace_emit!`]: true iff at least one session is
+/// installed. Until the first install this is a `OnceLock` miss — the
+/// macro's event expression is never evaluated.
+#[inline]
+pub fn enabled() -> bool {
+    match REGISTRY.get() {
+        None => false,
+        Some(r) => r.active.load(Ordering::Relaxed) != 0,
+    }
+}
+
+/// Stamp `kind` with `clock.now()` and deliver it to every matching
+/// session. Prefer [`trace_emit!`], which skips all of this when tracing
+/// is off.
+pub fn emit(clock: &ClockHandle, node: impl Into<Option<NodeId>>, kind: EventKind) {
+    let at = clock.now();
+    emit_at(clock, at, node, kind);
+}
+
+/// [`emit`] with an explicit timestamp (for events whose natural instant
+/// precedes the emit point, e.g. a NIC stall stamped at request time).
+pub fn emit_at(clock: &ClockHandle, at: Tick, node: impl Into<Option<NodeId>>, kind: EventKind) {
+    let Some(reg) = REGISTRY.get() else { return };
+    let key = clock_key(clock);
+    let event = Event {
+        at,
+        node: node.into(),
+        kind,
+    };
+    let sessions = reg.sessions.read().unwrap();
+    for s in sessions.iter() {
+        let matches = match s.clock {
+            None => true,
+            Some(c) => c == key,
+        };
+        if matches {
+            s.sink.record(&event);
+        }
+    }
+}
+
+/// Uninstalls its session on drop.
+#[must_use = "dropping the guard uninstalls the trace session"]
+#[derive(Debug)]
+pub struct TraceGuard {
+    id: u64,
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        let reg = registry();
+        let mut sessions = reg.sessions.write().unwrap();
+        if let Some(i) = sessions.iter().position(|s| s.id == self.id) {
+            sessions.remove(i);
+            reg.active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn install_inner(clock: Option<usize>, sink: Arc<dyn TraceSink>) -> TraceGuard {
+    let reg = registry();
+    let id = reg.next_id.fetch_add(1, Ordering::Relaxed);
+    reg.sessions.write().unwrap().push(Session { id, clock, sink });
+    reg.active.fetch_add(1, Ordering::Relaxed);
+    TraceGuard { id }
+}
+
+/// Install `sink` for events stamped by `clock` only (the test-safe form:
+/// concurrent clusters on other clocks stay invisible).
+pub fn install(clock: &ClockHandle, sink: Arc<dyn TraceSink>) -> TraceGuard {
+    install_inner(Some(clock_key(clock)), sink)
+}
+
+/// Install `sink` for every clock in the process (the CLI form — one
+/// scenario per process, including scenarios that build a fresh `SimClock`
+/// per cell).
+pub fn install_global(sink: Arc<dyn TraceSink>) -> TraceGuard {
+    install_inner(None, sink)
+}
+
+/// Emit a trace event if (and only if) tracing is on.
+///
+/// `$clock` is the emitting component's `ClockHandle`, `$node` anything
+/// `Into<Option<NodeId>>` (a node id, or `None` for cluster-scope events),
+/// `$kind` an [`EventKind`] expression — evaluated only when a sink is
+/// installed, so an untraced run never pays for payload construction.
+/// The `@at` form stamps an explicit tick instead of `clock.now()`.
+#[macro_export]
+macro_rules! trace_emit {
+    (@at $at:expr, $clock:expr, $node:expr, $kind:expr) => {
+        if $crate::trace::enabled() {
+            $crate::trace::emit_at(&$clock, $at, $node, $kind);
+        }
+    };
+    ($clock:expr, $node:expr, $kind:expr) => {
+        if $crate::trace::enabled() {
+            $crate::trace::emit(&$clock, $node, $kind);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::SimClock;
+    use std::time::Duration;
+
+    #[test]
+    fn json_lines_are_stable_and_named() {
+        let e = Event {
+            at: Duration::from_nanos(1500),
+            node: Some(3),
+            kind: EventKind::FrameSent {
+                dst: 4,
+                bytes: 1024,
+                deliver_at: Duration::from_nanos(2500),
+            },
+        };
+        assert_eq!(
+            e.to_json_line(),
+            "{\"t\":1500,\"node\":3,\"ev\":\"frame_sent\",\"dst\":4,\"bytes\":1024,\"deliver\":2500}"
+        );
+        let e = Event {
+            at: Duration::ZERO,
+            node: None,
+            kind: EventKind::Epoch {
+                epoch: 7,
+                repaired: 1,
+                missing: 0,
+            },
+        };
+        assert_eq!(
+            e.to_json_line(),
+            "{\"t\":0,\"ev\":\"epoch\",\"epoch\":7,\"repaired\":1,\"missing\":0}"
+        );
+    }
+
+    #[test]
+    fn sessions_filter_by_clock_identity() {
+        let a: ClockHandle = SimClock::handle();
+        let b: ClockHandle = SimClock::handle();
+        let sink = JsonlSink::shared();
+        let _guard = install(&a, sink.clone());
+        assert!(enabled());
+        emit(&a, 0, EventKind::NodeFailed);
+        emit(&b, 1, EventKind::NodeFailed); // other clock: filtered out
+        let events = sink.events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].node, Some(0));
+    }
+
+    #[test]
+    fn guard_drop_uninstalls() {
+        let clock: ClockHandle = SimClock::handle();
+        let sink = JsonlSink::shared();
+        {
+            let _guard = install(&clock, sink.clone());
+            emit(&clock, 0, EventKind::NodeRevived);
+        }
+        emit(&clock, 0, EventKind::NodeRevived); // after drop: not recorded
+        assert_eq!(sink.events().len(), 1);
+    }
+
+    #[test]
+    fn global_session_sees_every_clock() {
+        let a: ClockHandle = SimClock::handle();
+        let b: ClockHandle = SimClock::handle();
+        let sink = JsonlSink::shared();
+        let _guard = install_global(sink.clone());
+        // marker payload: concurrently running traced tests are also
+        // visible to a global session, so count only our own events
+        let marker = |pos| EventKind::RepairTriggered {
+            object: 0xdead_beef,
+            position: pos,
+        };
+        emit(&a, 0, marker(1));
+        emit(&b, 1, marker(2));
+        let ours: Vec<_> = sink
+            .events()
+            .into_iter()
+            .filter(|e| matches!(e.kind, EventKind::RepairTriggered { object, .. } if object == 0xdead_beef))
+            .collect();
+        assert_eq!(ours.len(), 2, "global session must see both clocks");
+    }
+}

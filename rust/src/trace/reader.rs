@@ -1,0 +1,303 @@
+//! Parse a saved JSONL trace back into [`Event`]s ([`Event::to_json_line`]'s
+//! inverse) — the input side of `rapidraid trace-report`.
+
+use std::time::Duration;
+
+use crate::clock::Tick;
+use crate::metrics::json::{parse_json, JsonValue};
+use crate::resources::GfWork;
+
+use super::{Direction, Event, EventKind};
+
+fn u64_field(obj: &JsonValue, key: &str) -> anyhow::Result<u64> {
+    obj.get(key)
+        .and_then(JsonValue::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("missing numeric field {key:?}"))
+}
+
+fn opt_u64_field(obj: &JsonValue, key: &str) -> Option<u64> {
+    obj.get(key).and_then(JsonValue::as_u64)
+}
+
+fn tick_field(obj: &JsonValue, key: &str) -> anyhow::Result<Tick> {
+    Ok(Duration::from_nanos(u64_field(obj, key)?))
+}
+
+/// Parse one canonical JSON trace line.
+pub fn parse_event(line: &str) -> anyhow::Result<Event> {
+    let obj = parse_json(line)?;
+    let at = tick_field(&obj, "t")?;
+    let node = opt_u64_field(&obj, "node").map(|n| n as usize);
+    let name = obj
+        .get("ev")
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing \"ev\" field"))?
+        .to_string();
+    let kind = match name.as_str() {
+        "frame_sent" => EventKind::FrameSent {
+            dst: u64_field(&obj, "dst")? as usize,
+            bytes: u64_field(&obj, "bytes")? as usize,
+            deliver_at: tick_field(&obj, "deliver")?,
+        },
+        "frame_recvd" => EventKind::FrameRecvd {
+            src: u64_field(&obj, "src")? as usize,
+            bytes: u64_field(&obj, "bytes")? as usize,
+        },
+        "nic_stall" => EventKind::NicStall {
+            dir: match obj.get("dir").and_then(JsonValue::as_str) {
+                Some("up") => Direction::Up,
+                Some("down") => Direction::Down,
+                other => anyhow::bail!("bad nic_stall dir {other:?}"),
+            },
+            stall: tick_field(&obj, "stall")?,
+            busy: tick_field(&obj, "busy")?,
+            bytes: u64_field(&obj, "bytes")? as usize,
+        },
+        "cpu_charge" => EventKind::CpuCharge {
+            work: GfWork {
+                mac_bytes: u64_field(&obj, "mac")?,
+                xor_bytes: u64_field(&obj, "xor")?,
+                store_bytes: u64_field(&obj, "store")?,
+                invert_elems: u64_field(&obj, "inv")?,
+            },
+            cost: tick_field(&obj, "cost")?,
+        },
+        "fold_start" => EventKind::FoldStart {
+            object: opt_u64_field(&obj, "object"),
+            index: opt_u64_field(&obj, "index").map(|i| i as usize),
+            frame: u64_field(&obj, "frame")? as usize,
+        },
+        "fold_end" => EventKind::FoldEnd {
+            object: opt_u64_field(&obj, "object"),
+            index: opt_u64_field(&obj, "index").map(|i| i as usize),
+            frame: u64_field(&obj, "frame")? as usize,
+        },
+        "gemm_start" => EventKind::GemmStart {
+            rows: u64_field(&obj, "rows")? as usize,
+            frame: u64_field(&obj, "frame")? as usize,
+        },
+        "gemm_end" => EventKind::GemmEnd {
+            rows: u64_field(&obj, "rows")? as usize,
+            frame: u64_field(&obj, "frame")? as usize,
+        },
+        "store_done" => EventKind::StoreDone {
+            object: u64_field(&obj, "object")?,
+            index: u64_field(&obj, "index")? as usize,
+            bytes: u64_field(&obj, "bytes")? as usize,
+        },
+        "queue_depth" => EventKind::QueueDepth {
+            depth: u64_field(&obj, "depth")? as usize,
+        },
+        "node_failed" => EventKind::NodeFailed,
+        "node_revived" => EventKind::NodeRevived,
+        "repair_triggered" => EventKind::RepairTriggered {
+            object: u64_field(&obj, "object")?,
+            position: u64_field(&obj, "position")? as usize,
+        },
+        "repair_committed" => EventKind::RepairCommitted {
+            object: u64_field(&obj, "object")?,
+            position: u64_field(&obj, "position")? as usize,
+            newcomer: u64_field(&obj, "newcomer")? as usize,
+        },
+        "plan_start" => EventKind::PlanStart {
+            object: u64_field(&obj, "object")?,
+            nodes: obj
+                .get("nodes")
+                .and_then(JsonValue::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("missing \"nodes\" array"))?
+                .iter()
+                .map(|v| {
+                    v.as_u64()
+                        .map(|n| n as usize)
+                        .ok_or_else(|| anyhow::anyhow!("non-numeric node id"))
+                })
+                .collect::<anyhow::Result<Vec<usize>>>()?,
+        },
+        "plan_end" => EventKind::PlanEnd {
+            object: u64_field(&obj, "object")?,
+            makespan: tick_field(&obj, "makespan")?,
+        },
+        "epoch" => EventKind::Epoch {
+            epoch: u64_field(&obj, "epoch")?,
+            repaired: u64_field(&obj, "repaired")? as usize,
+            missing: u64_field(&obj, "missing")? as usize,
+        },
+        other => anyhow::bail!("unknown event kind {other:?}"),
+    };
+    Ok(Event { at, node, kind })
+}
+
+/// Parse a whole JSONL document (blank lines skipped). Errors carry the
+/// 1-based line number.
+pub fn parse_jsonl(text: &str) -> anyhow::Result<Vec<Event>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let e =
+            parse_event(line).map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+        out.push(e);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_variant() {
+        let samples = vec![
+            Event {
+                at: Duration::from_nanos(17),
+                node: Some(2),
+                kind: EventKind::FrameSent {
+                    dst: 3,
+                    bytes: 4096,
+                    deliver_at: Duration::from_micros(9),
+                },
+            },
+            Event {
+                at: Duration::from_nanos(18),
+                node: Some(3),
+                kind: EventKind::FrameRecvd { src: 2, bytes: 4096 },
+            },
+            Event {
+                at: Duration::from_nanos(19),
+                node: Some(2),
+                kind: EventKind::NicStall {
+                    dir: Direction::Down,
+                    stall: Duration::from_nanos(5),
+                    busy: Duration::from_nanos(6),
+                    bytes: 4096,
+                },
+            },
+            Event {
+                at: Duration::from_nanos(20),
+                node: Some(1),
+                kind: EventKind::CpuCharge {
+                    work: GfWork {
+                        mac_bytes: 1,
+                        xor_bytes: 2,
+                        store_bytes: 3,
+                        invert_elems: 4,
+                    },
+                    cost: Duration::from_nanos(7),
+                },
+            },
+            Event {
+                at: Duration::from_nanos(21),
+                node: Some(1),
+                kind: EventKind::FoldStart {
+                    object: Some(9),
+                    index: Some(4),
+                    frame: 0,
+                },
+            },
+            Event {
+                at: Duration::from_nanos(22),
+                node: Some(1),
+                kind: EventKind::FoldEnd {
+                    object: None,
+                    index: None,
+                    frame: 0,
+                },
+            },
+            Event {
+                at: Duration::from_nanos(23),
+                node: Some(5),
+                kind: EventKind::GemmStart { rows: 3, frame: 1 },
+            },
+            Event {
+                at: Duration::from_nanos(24),
+                node: Some(5),
+                kind: EventKind::GemmEnd { rows: 3, frame: 1 },
+            },
+            Event {
+                at: Duration::from_nanos(25),
+                node: Some(5),
+                kind: EventKind::StoreDone {
+                    object: 9,
+                    index: 2,
+                    bytes: 65536,
+                },
+            },
+            Event {
+                at: Duration::from_nanos(26),
+                node: Some(0),
+                kind: EventKind::QueueDepth { depth: 4 },
+            },
+            Event {
+                at: Duration::from_nanos(27),
+                node: Some(6),
+                kind: EventKind::NodeFailed,
+            },
+            Event {
+                at: Duration::from_nanos(28),
+                node: Some(6),
+                kind: EventKind::NodeRevived,
+            },
+            Event {
+                at: Duration::from_nanos(29),
+                node: Some(7),
+                kind: EventKind::RepairTriggered {
+                    object: 9,
+                    position: 1,
+                },
+            },
+            Event {
+                at: Duration::from_nanos(30),
+                node: Some(7),
+                kind: EventKind::RepairCommitted {
+                    object: 9,
+                    position: 1,
+                    newcomer: 7,
+                },
+            },
+            Event {
+                at: Duration::from_nanos(31),
+                node: Some(0),
+                kind: EventKind::PlanStart {
+                    object: 9,
+                    nodes: vec![0, 1, 2],
+                },
+            },
+            Event {
+                at: Duration::from_nanos(32),
+                node: Some(0),
+                kind: EventKind::PlanEnd {
+                    object: 9,
+                    makespan: Duration::from_nanos(1),
+                },
+            },
+            Event {
+                at: Duration::from_nanos(33),
+                node: None,
+                kind: EventKind::Epoch {
+                    epoch: 2,
+                    repaired: 1,
+                    missing: 0,
+                },
+            },
+        ];
+        for e in &samples {
+            let back = parse_event(&e.to_json_line()).unwrap();
+            assert_eq!(&back, e, "round trip of {}", e.to_json_line());
+        }
+        let doc: String = samples
+            .iter()
+            .map(|e| e.to_json_line() + "\n")
+            .collect();
+        assert_eq!(parse_jsonl(&doc).unwrap(), samples);
+    }
+
+    #[test]
+    fn bad_lines_name_their_line_number() {
+        let err = parse_jsonl("{\"t\":1,\"ev\":\"frame_sent\"}\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+        assert!(parse_event("not json").is_err());
+        assert!(parse_event("{\"t\":1,\"ev\":\"martian\"}").is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! The built-in [`TraceSink`] implementations.
+//!
+//! * [`RingSink`] — a bounded, lock-free-enough ring: an atomic cursor
+//!   claims slots, each slot is its own tiny mutex, so concurrent
+//!   data-plane threads never contend on one global lock and the newest
+//!   `capacity` events are always available (live inspection, the
+//!   adaptive-control-plane feed).
+//! * [`JsonlSink`] — collects every event and canonicalizes at the end:
+//!   lines sorted by `(tick, line)`, making the serialized trace a pure
+//!   function of the event *multiset* — the byte-identical-per-seed
+//!   guarantee `tests/determinism.rs` asserts.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{Event, TraceSink};
+
+/// Bounded in-memory ring keeping the newest `capacity` events.
+#[derive(Debug)]
+pub struct RingSink {
+    slots: Vec<Mutex<Option<Event>>>,
+    cursor: AtomicUsize,
+}
+
+impl RingSink {
+    /// A ring holding the newest `capacity` events (`capacity` ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "ring capacity must be positive");
+        Self {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    /// [`RingSink::new`] as a shareable handle.
+    pub fn shared(capacity: usize) -> Arc<Self> {
+        Arc::new(Self::new(capacity))
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> usize {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// The retained events, oldest first. Taken while recording may still
+    /// be in flight, the snapshot is a best-effort view (slots claimed but
+    /// not yet written are skipped); quiescent, it is exact.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let total = self.recorded();
+        let cap = self.slots.len();
+        let (start, len) = if total <= cap {
+            (0, total)
+        } else {
+            (total % cap, cap)
+        };
+        let mut out = Vec::with_capacity(len);
+        for i in 0..len {
+            let slot = &self.slots[(start + i) % cap];
+            if let Some(e) = slot.lock().unwrap().clone() {
+                out.push(e);
+            }
+        }
+        out
+    }
+}
+
+impl TraceSink for RingSink {
+    fn record(&self, event: &Event) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+        *self.slots[i].lock().unwrap() = Some(event.clone());
+    }
+}
+
+/// Collects every event; serializes to canonical, deterministic JSONL.
+#[derive(Debug, Default)]
+pub struct JsonlSink {
+    events: Mutex<Vec<Event>>,
+}
+
+impl JsonlSink {
+    /// An empty collector.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// [`JsonlSink::new`] as a shareable handle.
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::new())
+    }
+
+    /// Recorded event count.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// True iff nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The events in canonical order: sorted by `(tick, serialized line)`.
+    /// This is the order [`JsonlSink::to_jsonl`] writes, independent of the
+    /// OS interleaving that produced same-tick events.
+    pub fn events(&self) -> Vec<Event> {
+        let events = self.events.lock().unwrap().clone();
+        let mut keyed: Vec<(String, Event)> = events
+            .into_iter()
+            .map(|e| (e.to_json_line(), e))
+            .collect();
+        keyed.sort_by(|a, b| a.1.at.cmp(&b.1.at).then_with(|| a.0.cmp(&b.0)));
+        keyed.into_iter().map(|(_, e)| e).collect()
+    }
+
+    /// The canonical JSONL document (one event per line, trailing newline;
+    /// empty string when no events were recorded).
+    pub fn to_jsonl(&self) -> String {
+        let events = self.events();
+        let mut out = String::new();
+        for e in &events {
+            out.push_str(&e.to_json_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the canonical JSONL document to `path`.
+    pub fn write_jsonl(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn record(&self, event: &Event) {
+        self.events.lock().unwrap().push(event.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::EventKind;
+    use std::time::Duration;
+
+    fn ev(ns: u64, node: usize, depth: usize) -> Event {
+        Event {
+            at: Duration::from_nanos(ns),
+            node: Some(node),
+            kind: EventKind::QueueDepth { depth },
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_capacity_events() {
+        let ring = RingSink::new(3);
+        for i in 0..5 {
+            ring.record(&ev(i, 0, i as usize));
+        }
+        assert_eq!(ring.recorded(), 5);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(
+            snap.iter().map(|e| e.at.as_nanos()).collect::<Vec<_>>(),
+            vec![2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn ring_partial_fill_snapshots_in_order() {
+        let ring = RingSink::new(8);
+        ring.record(&ev(5, 1, 0));
+        ring.record(&ev(7, 2, 0));
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].at, Duration::from_nanos(5));
+    }
+
+    #[test]
+    fn jsonl_output_is_sorted_and_canonical() {
+        let a = JsonlSink::new();
+        let b = JsonlSink::new();
+        // same multiset, opposite insertion order (two ticks + a same-tick
+        // pair whose lines differ)
+        let events = [ev(20, 1, 0), ev(10, 0, 0), ev(10, 2, 3)];
+        for e in &events {
+            a.record(e);
+        }
+        for e in events.iter().rev() {
+            b.record(e);
+        }
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+        let doc = a.to_jsonl();
+        let lines: Vec<&str> = doc.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"t\":10"));
+        assert!(lines[1].contains("\"t\":10"));
+        assert!(lines[2].contains("\"t\":20"));
+        // same-tick tie broken by line text, deterministically
+        assert!(lines[0] < lines[1]);
+    }
+
+    #[test]
+    fn empty_jsonl_is_empty_string() {
+        let s = JsonlSink::new();
+        assert!(s.is_empty());
+        assert_eq!(s.to_jsonl(), "");
+    }
+}

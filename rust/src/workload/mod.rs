@@ -109,6 +109,14 @@ pub struct LongRunConfig {
     /// of the trace; decode verification runs through the matching
     /// topology-composed generator.
     pub topology: Topology,
+    /// Measured compute rates replacing the EC2-era `UniformCost`
+    /// baseline: `None` keeps the default behavior (free compute without
+    /// profiles, `UniformCost::calibrated()` under them); `Some(rates)` —
+    /// typically [`crate::resources::UniformCost::from_measured`] over a
+    /// `gf-hotpath` bench report — prices compute at this machine's
+    /// throughput, both as the uniform model and as the baseline profiles
+    /// scale over.
+    pub calibration: Option<UniformCost>,
 }
 
 impl LongRunConfig {
@@ -138,6 +146,7 @@ impl LongRunConfig {
             profiles: Vec::new(),
             p_cpu_churn: 0.25,
             topology: Topology::Chain,
+            calibration: None,
         }
     }
 
@@ -164,6 +173,13 @@ impl LongRunConfig {
     /// Substitute the pipeline shape (see [`LongRunConfig::topology`]).
     pub fn with_topology(mut self, topology: Topology) -> Self {
         self.topology = topology;
+        self
+    }
+
+    /// Price compute with measured rates (see
+    /// [`LongRunConfig::calibration`]).
+    pub fn with_calibration(mut self, rates: UniformCost) -> Self {
+        self.calibration = Some(rates);
         self
     }
 }
@@ -274,19 +290,26 @@ pub fn run_long_run(
 
     let clock = SimClock::handle();
     let mut spec = ClusterSpec::tpc(cfg.nodes).with_clock(clock.clone());
+    // Baseline rates the cost model scales over: measured calibration when
+    // provided, the EC2-era constants otherwise.
+    let base_rates = cfg
+        .calibration
+        .clone()
+        .unwrap_or_else(UniformCost::calibrated);
     // A concrete ProfileCost handle is kept when profiles are configured,
     // so the epoch loop can churn per-node CPU overrides at runtime.
     let profile_cost: Option<Arc<ProfileCost>> = if cfg.profiles.is_empty() {
         None
     } else {
-        Some(Arc::new(ProfileCost::new(
-            UniformCost::calibrated(),
-            cfg.profiles.clone(),
-        )?))
+        Some(Arc::new(ProfileCost::new(base_rates.clone(), cfg.profiles.clone())?))
     };
     if let Some(pc) = &profile_cost {
         let handle: CostModelHandle = pc.clone();
         spec = spec.with_cost(handle);
+    } else if cfg.calibration.is_some() {
+        // No profile mix but measured rates: uniform calibrated compute
+        // (the pre-calibration default stays free/ZeroCost).
+        spec = spec.with_cost(Arc::new(base_rates));
     }
     let cluster = Cluster::start(spec);
     let policy = cfg.policy.policy();
@@ -445,6 +468,15 @@ pub fn run_long_run(
                 p.n - avail.len()
             })
             .sum();
+        crate::trace_emit!(
+            clock,
+            None::<NodeId>,
+            crate::trace::EventKind::Epoch {
+                epoch: stats.epoch,
+                repaired: stats.repaired,
+                missing: stats.missing_after
+            }
+        );
 
         if let Some(o) = out.as_deref_mut() {
             writeln!(
@@ -518,6 +550,7 @@ mod tests {
             profiles: Vec::new(),
             p_cpu_churn: 0.0,
             topology: Topology::Chain,
+            calibration: None,
         }
     }
 

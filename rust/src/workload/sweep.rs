@@ -208,6 +208,7 @@ mod tests {
             profiles: Vec::new(),
             p_cpu_churn: 0.0,
             topology: Topology::Chain,
+            calibration: None,
         }
     }
 

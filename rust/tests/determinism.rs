@@ -135,6 +135,29 @@ fn tree_run_same_seed_same_bytes_and_same_virtual_times() {
 }
 
 #[test]
+fn traced_run_is_tick_and_byte_identical_to_untraced() {
+    // The observability layer's core contract: installing a trace sink
+    // must not move a single virtual tick or flip a single coded byte.
+    // Global install is fine here — sinks only observe, and the assertion
+    // compares the *runs*, not the sink contents.
+    let (base, traced) = with_timeout(240, || {
+        let base = run_once(Topology::Chain);
+        let sink = rapidraid::trace::JsonlSink::shared();
+        let guard = rapidraid::trace::install_global(sink.clone());
+        let traced = run_once(Topology::Chain);
+        drop(guard);
+        assert!(!sink.is_empty(), "traced run emitted no events");
+        (base, traced)
+    });
+    assert_eq!(base.coded, traced.coded, "tracing flipped coded bytes");
+    assert_eq!(
+        base.durations, traced.durations,
+        "tracing shifted virtual end-to-end times"
+    );
+    assert_eq!(base.spans, traced.spans, "tracing shifted per-stage spans");
+}
+
+#[test]
 fn archival_virtual_time_matches_pipeline_model_shape() {
     // Not a strict equality (jitter is seeded but non-zero), but the
     // pipelined archival of an 11×128 KiB object over 1 Gbps must land in

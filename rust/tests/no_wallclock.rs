@@ -19,6 +19,7 @@ const DIRS: &[&str] = &[
     "rust/src/coordinator/topology",
     "rust/src/repair",
     "rust/src/resources",
+    "rust/src/trace",
     "rust/src/workload",
 ];
 

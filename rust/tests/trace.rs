@@ -1,0 +1,172 @@
+//! Integration tests for the deterministic trace layer: a real pipelined
+//! archival on a SimClock cluster, observed through a per-clock JSONL
+//! session, must (a) serialize byte-identically per seed, (b) leave the
+//! virtual timeline untouched relative to an untraced run, (c) export a
+//! well-formed Chrome-trace document with monotonic per-track timestamps,
+//! and (d) let the critical-path analyzer partition 100% of the plan's
+//! makespan across its slots.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::clock::{ClockHandle, SimClock};
+use rapidraid::cluster::{Cluster, ClusterSpec};
+use rapidraid::codes::rapidraid::RapidRaidCode;
+use rapidraid::coordinator::{ingest_object, PipelineJob, PlanExecutor};
+use rapidraid::gf::Gf256;
+use rapidraid::metrics::{parse_json, JsonValue};
+use rapidraid::resources::UniformCost;
+use rapidraid::storage::{ObjectId, ReplicaPlacement};
+use rapidraid::trace::{
+    attribute_plans, chrome_trace, install, parse_jsonl, render_attribution, JsonlSink,
+};
+use rapidraid::util::with_timeout;
+
+const BLOCK: usize = 32 * 1024;
+const BUF: usize = 8 * 1024;
+
+/// Pipeline-archive one `(n, k)` object on a fresh SimClock cluster with a
+/// non-zero CPU cost model (so `cpu_charge` events carry real costs) and
+/// return the plan's virtual makespan.
+fn archive_on(n: usize, k: usize, seed: u64, clock: ClockHandle) -> Duration {
+    let spec = ClusterSpec::test(n)
+        .with_clock(clock)
+        .with_cost(Arc::new(UniformCost::calibrated()));
+    let cluster = Cluster::start(spec);
+    let object = ObjectId(400 + seed);
+    let placement = ReplicaPlacement::new(object, k, (0..n).collect()).unwrap();
+    ingest_object(&cluster, &placement, BLOCK).unwrap();
+    let code = RapidRaidCode::<Gf256>::with_seed(n, k, seed).unwrap();
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let exec = PlanExecutor::new(&cluster, backend);
+    let job = PipelineJob::from_code(&code, &placement, BUF, BLOCK).unwrap();
+    exec.run(&job.plan().unwrap()).unwrap()
+}
+
+/// [`archive_on`] with a per-clock JSONL session installed for the run.
+/// Per-clock filtering keeps concurrently running tests (which own other
+/// clocks) out of the returned sink.
+fn traced_archival(n: usize, k: usize, seed: u64) -> (Arc<JsonlSink>, Duration) {
+    let clock: ClockHandle = SimClock::handle();
+    let sink = JsonlSink::shared();
+    let guard = install(&clock, sink.clone());
+    let makespan = archive_on(n, k, seed, clock);
+    drop(guard);
+    (sink, makespan)
+}
+
+#[test]
+fn same_seed_traced_runs_serialize_byte_identically() {
+    let ((sink_a, t_a), (sink_b, t_b)) =
+        with_timeout(120, || (traced_archival(6, 4, 9), traced_archival(6, 4, 9)));
+    let (doc_a, doc_b) = (sink_a.to_jsonl(), sink_b.to_jsonl());
+    assert!(!doc_a.is_empty(), "traced run recorded nothing");
+    assert_eq!(doc_a, doc_b, "same seed must yield byte-identical JSONL");
+    assert_eq!(t_a, t_b, "same seed must yield the same virtual makespan");
+    // the archival exercised every dataplane event family
+    for ev in [
+        "plan_start",
+        "plan_end",
+        "frame_sent",
+        "frame_recvd",
+        "nic_stall",
+        "cpu_charge",
+        "fold_start",
+        "fold_end",
+        "store_done",
+        "queue_depth",
+    ] {
+        assert!(
+            doc_a.contains(&format!("\"ev\":\"{ev}\"")),
+            "trace is missing any `{ev}` event"
+        );
+    }
+    // the reader is the serializer's exact inverse
+    let parsed = parse_jsonl(&doc_a).unwrap();
+    assert_eq!(parsed, sink_a.events(), "JSONL round-trip changed the events");
+}
+
+#[test]
+fn tracing_does_not_perturb_the_virtual_timeline() {
+    // Untraced baseline first, then the identical scenario under a sink:
+    // recording must not move a single virtual tick.
+    let (untraced, traced) = with_timeout(120, || {
+        let untraced = archive_on(6, 4, 9, SimClock::handle());
+        (untraced, traced_archival(6, 4, 9))
+    });
+    assert_eq!(
+        untraced, traced.1,
+        "installing a trace sink shifted the virtual timeline"
+    );
+}
+
+#[test]
+fn perfetto_export_is_well_formed_and_monotonic_per_track() {
+    let (sink, _) = with_timeout(120, || traced_archival(5, 3, 11));
+    let events = sink.events();
+    assert!(!events.is_empty());
+    let doc = chrome_trace(&events);
+    let v = parse_json(&doc).unwrap();
+    let entries = v
+        .get("traceEvents")
+        .and_then(JsonValue::as_arr)
+        .expect("traceEvents array");
+    assert!(entries.len() > 10, "only {} trace entries", entries.len());
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    for e in entries {
+        let ph = e.get("ph").and_then(JsonValue::as_str).expect("ph field");
+        if ph == "M" {
+            continue; // metadata carries no timestamp
+        }
+        let pid = e.get("pid").and_then(JsonValue::as_u64).expect("pid");
+        let tid = e.get("tid").and_then(JsonValue::as_u64).expect("tid");
+        let ts = e.get("ts").and_then(JsonValue::as_f64).expect("ts");
+        let prev = last_ts.insert((pid, tid), ts).unwrap_or(f64::MIN);
+        assert!(
+            ts >= prev,
+            "track ({pid},{tid}) went backwards: {prev} -> {ts}"
+        );
+        if ph == "X" {
+            let dur = e.get("dur").and_then(JsonValue::as_f64).expect("dur");
+            assert!(dur >= 0.0, "negative span duration {dur}");
+        }
+    }
+    // fold frame spans got stitched from their start/end events
+    assert!(doc.contains("\"name\":\"fold\""), "no fold spans in export");
+    assert!(doc.contains("\"ph\":\"C\""), "no queue-depth counters in export");
+}
+
+#[test]
+fn critical_path_partitions_full_makespan_on_three_node_chain() {
+    let (sink, makespan) = with_timeout(120, || traced_archival(3, 2, 5));
+    let events = sink.events();
+    let plans = attribute_plans(&events);
+    assert_eq!(plans.len(), 1, "expected exactly the one archival plan");
+    let p = &plans[0];
+    assert_eq!(p.object, 405);
+    assert!(p.makespan() > Duration::ZERO);
+    assert!(makespan > Duration::ZERO);
+    assert!(!p.slots.is_empty(), "plan has no attributed slots");
+    for s in &p.slots {
+        assert_eq!(
+            s.compute + s.transfer + s.wait,
+            p.makespan(),
+            "slot {} does not account for 100% of the makespan",
+            s.node
+        );
+    }
+    // with UniformCost installed and frames on the wire, both compute and
+    // transfer must show up somewhere in the partition
+    assert!(
+        p.slots.iter().any(|s| s.compute > Duration::ZERO),
+        "no slot attributed any compute despite a non-zero cost model"
+    );
+    assert!(
+        p.slots.iter().any(|s| s.transfer > Duration::ZERO),
+        "no slot attributed any transfer time"
+    );
+    let table = render_attribution(&plans);
+    assert!(table.contains("object=405"), "{table}");
+}
