@@ -1,0 +1,59 @@
+//! Bench: the `scale-sim` preset — multiplexed-runtime scale acceptance.
+//! 2,048 SimClock nodes (64 racks of 32) live through one virtual day of
+//! epoch-batched rack-local archivals, all cooperatively scheduled on one
+//! driver thread. Every epoch decode-verifies a seeded sample and drops
+//! its blocks, so memory stays bounded at any virtual run length.
+//!
+//! Run: `cargo bench --bench scale_sim`
+//! Env: SMOKE=1 (hourly epochs of small batches — the CI configuration,
+//! same 2,048-node / one-virtual-day floors), NODES, RACK, VIRTUAL_SECS,
+//! EPOCH_SECS, OBJECTS_PER_EPOCH, BLOCK_BYTES, SEED override the preset.
+//! Writes BENCH_scale-sim.json.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::bench_scenarios::{scale_sim, ScaleSimConfig};
+use rapidraid::clock::{Clock, RealClock};
+use rapidraid::util::bench::env_u64;
+
+fn main() {
+    let mut cfg = if std::env::var("SMOKE").is_ok() {
+        ScaleSimConfig::smoke()
+    } else {
+        ScaleSimConfig::paper_scale()
+    };
+    cfg.nodes = env_u64("NODES", cfg.nodes as u64) as usize;
+    cfg.rack = env_u64("RACK", cfg.rack as u64) as usize;
+    cfg.virtual_secs = env_u64("VIRTUAL_SECS", cfg.virtual_secs);
+    cfg.epoch_secs = env_u64("EPOCH_SECS", cfg.epoch_secs);
+    cfg.objects_per_epoch = env_u64("OBJECTS_PER_EPOCH", cfg.objects_per_epoch as u64) as usize;
+    cfg.block_bytes = env_u64("BLOCK_BYTES", cfg.block_bytes as u64) as usize;
+    cfg.seed = env_u64("SEED", cfg.seed);
+
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let wall = RealClock::new();
+    let (report, bench) =
+        scale_sim(&cfg, &backend, &mut std::io::stdout().lock()).expect("scale-sim");
+
+    // acceptance floors: thousands of nodes, at least one virtual day,
+    // wall-clock seconds — the multiplexed runtime's raison d'être
+    assert!(report.nodes >= 2000, "scale floor: {} nodes", report.nodes);
+    assert!(
+        report.virtual_elapsed >= Duration::from_secs(86_400),
+        "virtual-day floor: {:?}",
+        report.virtual_elapsed
+    );
+    assert_eq!(report.verified, report.epochs as usize, "every epoch verifies");
+    let elapsed = wall.now();
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "wall budget blown: {elapsed:?}"
+    );
+
+    let path = bench
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
+    println!("# wrote {}", path.display());
+}

@@ -30,19 +30,21 @@ use std::io::Write;
 use std::time::Duration;
 
 use crate::backend::{BackendHandle, Width};
-use crate::clock::{Clock, RealClock};
-use crate::cluster::{Cluster, ClusterSpec, CongestionSpec};
+use crate::clock::{Clock, RealClock, SimClock};
+use crate::cluster::{Cluster, ClusterSpec, CongestionSpec, RuntimeKind};
 use crate::codes::rapidraid::RapidRaidCode;
 use crate::codes::{ClassicalCode, TopologyCode};
 use crate::coordinator::batch::{
-    place_and_build_pipeline_jobs, rotated_chain, run_batch_recorded, BatchJob,
+    pipeline_jobs, place_and_build_pipeline_jobs, rotated_chain, run_batch, run_batch_recorded,
+    BatchJob,
 };
 use crate::coordinator::topology::{LoadAwarePolicy, Topology};
 use crate::coordinator::{ingest_object, object_bytes, reconstruct, ClassicalJob, PipelineJob};
 use crate::gf::{Gf256, Gf65536, GfElem};
 use crate::metrics::{BenchJson, Candle, Recorder};
 use crate::resources::{CostModelHandle, NodeProfile, ProfileCost, UniformCost};
-use crate::storage::{ObjectId, ReplicaPlacement};
+use crate::storage::{BlockKey, ObjectId, ReplicaPlacement};
+use crate::util::SplitMix64;
 
 /// Evaluation code parameters: the paper's (16, 11).
 pub const N: usize = 16;
@@ -1021,6 +1023,262 @@ pub fn fig_repair(
     Ok(report)
 }
 
+// ---------------------------------------------------------------------------
+// scale-sim — multiplexed-runtime scale acceptance
+// ---------------------------------------------------------------------------
+
+/// Rack-local chain for object `i` on a cluster of `nodes` nodes grouped
+/// into racks of `rack`: the whole `n`-node chain lives inside rack
+/// `i % racks` (archival traffic never crosses the rack boundary — the
+/// oversubscribed links of a real datacenter fabric), rotated inside the
+/// rack by `i / racks` so the head role cycles over rack members.
+pub fn rack_local_chain(nodes: usize, rack: usize, n: usize, i: usize) -> Vec<usize> {
+    assert!(rack >= n, "chain must fit in one rack");
+    assert!(nodes >= rack && nodes % rack == 0, "whole racks only");
+    let racks = nodes / rack;
+    let base = (i % racks) * rack;
+    (0..n).map(|j| base + (i / racks + j) % rack).collect()
+}
+
+/// Configuration of the `scale-sim` preset: an epoch loop of concurrent
+/// rack-local archivals on a cluster far past thread-per-node scale.
+#[derive(Clone, Debug)]
+pub struct ScaleSimConfig {
+    /// Cluster size (the multiplexed runtime runs all of these on one
+    /// driver thread — a threaded run would need this many OS threads).
+    pub nodes: usize,
+    /// Nodes per rack; chains are placed rack-locally.
+    pub rack: usize,
+    /// Code length per object.
+    pub n: usize,
+    /// Message length per object.
+    pub k: usize,
+    /// Coefficient-search seed of the (n, k) code.
+    pub code_seed: u64,
+    /// Concurrent archivals per epoch.
+    pub objects_per_epoch: usize,
+    /// Bytes per source block.
+    pub block_bytes: usize,
+    /// Network frame size.
+    pub buf_bytes: usize,
+    /// Total virtual runtime, seconds.
+    pub virtual_secs: u64,
+    /// Virtual length of one epoch, seconds.
+    pub epoch_secs: u64,
+    /// Seed of the per-epoch verification sampling.
+    pub seed: u64,
+}
+
+impl ScaleSimConfig {
+    /// The acceptance-scale preset: 2,048 nodes in 64 racks of 32 living
+    /// through one virtual day, archiving a rack-local (16,11) batch every
+    /// 20 virtual minutes — thousands of objects per run, finishing in
+    /// wall-clock seconds on the multiplexed runtime.
+    pub fn paper_scale() -> Self {
+        Self {
+            nodes: 2048,
+            rack: 32,
+            n: 16,
+            k: 11,
+            code_seed: 5,
+            objects_per_epoch: 32,
+            block_bytes: 8 * 1024,
+            buf_bytes: 4 * 1024,
+            virtual_secs: 86_400,
+            epoch_secs: 1200,
+            seed: 0xACE5_CA1E,
+        }
+    }
+
+    /// CI smoke: the same 2,048-node cluster and full virtual day (the
+    /// scale floors stay honest in CI), but hourly epochs of small batches
+    /// so the whole run costs a few wall seconds.
+    pub fn smoke() -> Self {
+        Self {
+            objects_per_epoch: 8,
+            block_bytes: 4 * 1024,
+            buf_bytes: 2 * 1024,
+            epoch_secs: 7200,
+            ..Self::paper_scale()
+        }
+    }
+}
+
+/// What a `scale-sim` run did, for acceptance assertions.
+#[derive(Clone, Debug)]
+pub struct ScaleSimReport {
+    /// Cluster size of the run.
+    pub nodes: usize,
+    /// Rack count.
+    pub racks: usize,
+    /// Epochs executed.
+    pub epochs: u64,
+    /// Objects archived over the whole run.
+    pub objects_archived: usize,
+    /// Coded bytes produced (n × block per object).
+    pub bytes_coded: u64,
+    /// Virtual time the run covered.
+    pub virtual_elapsed: Duration,
+    /// Sampled objects that decode-verified byte-identically (one/epoch).
+    pub verified: usize,
+    /// Largest per-epoch batch makespan in virtual time.
+    pub peak_epoch_makespan: Duration,
+}
+
+/// The `scale-sim` preset: `nodes` SimClock nodes (Auto-resolved to the
+/// multiplexed runtime — the whole dataplane cooperatively scheduled on
+/// one driver thread) run an epoch loop for ≥ a virtual day. Each epoch
+/// ingests and pipeline-archives `objects_per_epoch` objects on rotating
+/// rack-local chains, decode-verifies one seeded sample through the
+/// topology generator, then drops the epoch's blocks so memory stays
+/// bounded however long the virtual run. Jitter is off: every reported
+/// virtual duration is an exact function of the config.
+pub fn scale_sim(
+    cfg: &ScaleSimConfig,
+    backend: &BackendHandle,
+    out: &mut dyn Write,
+) -> anyhow::Result<(ScaleSimReport, BenchJson)> {
+    anyhow::ensure!(cfg.rack >= cfg.n, "chain longer than a rack");
+    anyhow::ensure!(
+        cfg.nodes >= cfg.rack && cfg.nodes % cfg.rack == 0,
+        "cluster must be whole racks"
+    );
+    anyhow::ensure!(cfg.k < cfg.n, "need redundancy (k < n)");
+    anyhow::ensure!(cfg.epoch_secs > 0, "epochs must have positive length");
+    anyhow::ensure!(cfg.objects_per_epoch > 0, "need at least one object per epoch");
+
+    let wall = RealClock::new();
+    let clock = SimClock::handle();
+    let mut spec = ClusterSpec::tpc(cfg.nodes).with_clock(clock.clone());
+    spec.jitter = Duration::ZERO;
+    let cluster = Cluster::start(spec);
+    anyhow::ensure!(
+        cluster.runtime_kind() == RuntimeKind::Multiplexed,
+        "scale-sim needs the multiplexed runtime (SimClock presets resolve to it)"
+    );
+    let code = RapidRaidCode::<Gf256>::with_seed(cfg.n, cfg.k, cfg.code_seed)?;
+    let tcode = TopologyCode::new(code.clone(), Topology::Chain.shape(cfg.n)?)?;
+
+    let racks = cfg.nodes / cfg.rack;
+    let epochs = cfg.virtual_secs.div_ceil(cfg.epoch_secs);
+    let epoch_len = Duration::from_secs(cfg.epoch_secs);
+    writeln!(
+        out,
+        "# scale-sim — {} nodes / {racks} racks of {}, {} epochs x {} objects, block={} KiB, runtime={:?}",
+        cfg.nodes,
+        cfg.rack,
+        epochs,
+        cfg.objects_per_epoch,
+        cfg.block_bytes >> 10,
+        cluster.runtime_kind()
+    )?;
+
+    let mut rng = SplitMix64::new(cfg.seed);
+    let makespans = Recorder::new();
+    let mut report = ScaleSimReport {
+        nodes: cfg.nodes,
+        racks,
+        epochs,
+        objects_archived: 0,
+        bytes_coded: 0,
+        virtual_elapsed: Duration::ZERO,
+        verified: 0,
+        peak_epoch_makespan: Duration::ZERO,
+    };
+    let t0 = clock.now();
+    let print_every = (epochs / 12).max(1);
+    for e in 0..epochs {
+        let epoch_start = clock.now();
+        // ingest this epoch's batch on rotating rack-local chains
+        let mut placements = Vec::with_capacity(cfg.objects_per_epoch);
+        let sample = rng.below(cfg.objects_per_epoch as u64) as usize;
+        let mut sample_blocks: Vec<Vec<u8>> = Vec::new();
+        for i in 0..cfg.objects_per_epoch {
+            let idx = report.objects_archived + i;
+            let object = ObjectId(0x5CA1_0000 + idx as u64);
+            let chain = rack_local_chain(cfg.nodes, cfg.rack, cfg.n, idx);
+            let placement = ReplicaPlacement::new(object, cfg.k, chain)?;
+            let blocks = ingest_object(&cluster, &placement, cfg.block_bytes)?;
+            if i == sample {
+                sample_blocks = blocks;
+            }
+            placements.push(placement);
+        }
+        let jobs = pipeline_jobs(
+            &code,
+            &placements,
+            Topology::Chain,
+            cfg.buf_bytes,
+            cfg.block_bytes,
+        )?;
+        let times = run_batch(&cluster, backend, &jobs)?;
+        let makespan = times.iter().copied().max().unwrap_or(Duration::ZERO);
+        anyhow::ensure!(
+            makespan <= epoch_len,
+            "epoch {e} batch overran its epoch: {makespan:?} > {epoch_len:?}"
+        );
+        makespans.record("epoch_makespan", makespan);
+        report.peak_epoch_makespan = report.peak_epoch_makespan.max(makespan);
+
+        // decode-verify one seeded sample, then drop the whole epoch's
+        // blocks — memory stays bounded regardless of run length
+        let p = &placements[sample];
+        let rec = reconstruct(&cluster, &tcode, &p.chain, p.object, backend)?;
+        anyhow::ensure!(
+            rec == sample_blocks,
+            "epoch {e}: sampled object {:?} decode mismatch",
+            p.object
+        );
+        report.verified += 1;
+        for p in &placements {
+            for (node, idx) in p.replica_map() {
+                cluster.node(node).delete(BlockKey::source(p.object, idx))?;
+            }
+            for (i, &node) in p.chain.iter().enumerate() {
+                cluster.node(node).delete(BlockKey::coded(p.object, i))?;
+            }
+        }
+        report.objects_archived += cfg.objects_per_epoch;
+        report.bytes_coded += (cfg.objects_per_epoch * cfg.n * cfg.block_bytes) as u64;
+
+        if e % print_every == 0 {
+            writeln!(
+                out,
+                "epoch {e:>4} @ {:>8.0}s: {} objects archived, makespan {:.3}s",
+                epoch_start.saturating_sub(t0).as_secs_f64(),
+                report.objects_archived,
+                makespan.as_secs_f64()
+            )?;
+        }
+        // epochs have a fixed virtual length; the idle tail is free
+        clock.sleep_until(epoch_start + epoch_len);
+    }
+    report.virtual_elapsed = clock.now().saturating_sub(t0);
+
+    let mut bench = BenchJson::new("scale-sim")
+        .param("nodes", cfg.nodes)
+        .param("rack", cfg.rack)
+        .param("epochs", epochs)
+        .param("objects_per_epoch", cfg.objects_per_epoch)
+        .param("objects_archived", report.objects_archived)
+        .param("block_bytes", cfg.block_bytes)
+        .param("virtual_secs", cfg.virtual_secs)
+        .param("seed", cfg.seed)
+        .param("runtime", format!("{:?}", cluster.runtime_kind()));
+    bench.series = makespans.candles();
+    bench.wall = wall.now();
+    writeln!(
+        out,
+        "# {} objects ({} MiB coded) over {:.0} virtual s on {} nodes: {:.2} s wall",
+        report.objects_archived,
+        report.bytes_coded >> 20,
+        report.virtual_elapsed.as_secs_f64(),
+        cfg.nodes,
+        bench.wall.as_secs_f64()
+    )?;
+    Ok((report, bench))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1177,6 +1435,55 @@ mod tests {
         let (a, _) = table2_sim(&be, 64 * 1024, 5, &mut Vec::<u8>::new()).unwrap();
         let (b, _) = table2_sim(&be, 64 * 1024, 5, &mut Vec::<u8>::new()).unwrap();
         assert_eq!(a, b, "virtual Table-II rows diverged between identical runs");
+    }
+
+    #[test]
+    fn scale_sim_tiny_archives_verifies_and_bounds_memory() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let cfg = ScaleSimConfig {
+            nodes: 64,
+            rack: 16,
+            n: 8,
+            k: 4,
+            code_seed: 7,
+            objects_per_epoch: 3,
+            block_bytes: 4 * 1024,
+            buf_bytes: 2 * 1024,
+            virtual_secs: 60,
+            epoch_secs: 20,
+            seed: 11,
+        };
+        let mut out = Vec::new();
+        let (report, bench) = scale_sim(&cfg, &be, &mut out).unwrap();
+        assert_eq!(report.epochs, 3);
+        assert_eq!(report.objects_archived, 9);
+        assert_eq!(report.verified, 3);
+        assert!(report.virtual_elapsed >= Duration::from_secs(60));
+        assert!(report.peak_epoch_makespan > Duration::ZERO);
+        assert_eq!(bench.preset, "scale-sim");
+        assert_eq!(bench.get_param("runtime"), Some("Multiplexed"));
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("scale-sim"), "{text}");
+    }
+
+    #[test]
+    fn rack_local_chains_stay_inside_one_rack() {
+        for i in 0..40 {
+            let chain = rack_local_chain(64, 16, 8, i);
+            assert_eq!(chain.len(), 8);
+            let rack = chain[0] / 16;
+            assert!(chain.iter().all(|&n| n / 16 == rack), "{chain:?}");
+            // all distinct
+            let mut sorted = chain.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8);
+        }
+        // consecutive objects land on consecutive racks
+        assert_ne!(
+            rack_local_chain(64, 16, 8, 0)[0] / 16,
+            rack_local_chain(64, 16, 8, 1)[0] / 16
+        );
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::sim::{SimClock, State};
+use super::task::TaskWaker;
 use super::{is_participant, ClockHandle, Tick};
 
 /// The receiver disconnected before (or while) sending.
@@ -63,6 +64,15 @@ pub enum RecvTimeoutError {
     Disconnected,
 }
 
+/// Outcome of a non-blocking receive ([`Receiver::try_recv`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum TryRecvError {
+    /// Queue empty, senders still connected.
+    Empty,
+    /// All senders disconnected with the queue empty.
+    Disconnected,
+}
+
 /// Channel state shared between the sim halves. Accounting fields
 /// (`consumer_waiting`, `wake_credit`, and the busy bookkeeping they
 /// drive) are mutated only while the **clock's** state lock is held; the
@@ -82,6 +92,10 @@ struct SimShared<T> {
     /// A send already re-counted the waiting consumer as busy; the
     /// consumer absorbs this credit when it resumes.
     wake_credit: AtomicBool,
+    /// Multiplexed-runtime consumer: a task to wake (on its driver's
+    /// `WakeHub`) whenever a message arrives or the senders disconnect.
+    /// Locked only while the clock's state lock is held.
+    waker: Mutex<Option<TaskWaker>>,
 }
 
 impl<T> SimShared<T> {
@@ -94,6 +108,16 @@ impl<T> SimShared<T> {
         let credited = self.wake_credit.swap(false, Ordering::Relaxed);
         if counted && !credited {
             st.busy += 1;
+        }
+    }
+
+    /// Fire the registered task waker (if any) with the clock lock held.
+    /// Returns `true` if the caller should notify the clock condvar after
+    /// unlocking (the waker's driver is parked there).
+    fn fire_waker_locked(&self, st: &mut State) -> bool {
+        match self.waker.lock().unwrap().as_ref() {
+            Some(w) => w.wake_locked(st),
+            None => false,
         }
     }
 }
@@ -130,6 +154,7 @@ pub fn channel<T>(clock: &ClockHandle) -> (Sender<T>, Receiver<T>) {
                 consumer_waiting: AtomicBool::new(false),
                 consumer_on_clock_cv: AtomicBool::new(false),
                 wake_credit: AtomicBool::new(false),
+                waker: Mutex::new(None),
             });
             (
                 Sender {
@@ -182,10 +207,12 @@ impl<T> Sender<T> {
                     st.busy += 1;
                 }
                 let on_clock_cv = ch.consumer_on_clock_cv.load(Ordering::Relaxed);
+                let task_woken = ch.fire_waker_locked(&mut st);
                 drop(st);
                 ch.cv.notify_all();
-                if on_clock_cv {
-                    // recv_deadline waiters park on the clock's condvar
+                if on_clock_cv || task_woken {
+                    // recv_deadline waiters and parked task drivers both
+                    // wait on the clock's condvar
                     clock.notify_all();
                 }
                 Ok(())
@@ -224,8 +251,9 @@ impl<T> Drop for Sender<T> {
                 // channel-cv wait. Taking each lock here (clock first —
                 // the global order) guarantees the waiter is parked before
                 // the notify, so the disconnect can never be missed.
-                let st = clock.lock();
+                let mut st = clock.lock();
                 drop(ch.q.lock().unwrap());
+                ch.fire_waker_locked(&mut st); // disconnect wakes tasks too
                 drop(st);
                 ch.cv.notify_all();
                 clock.notify_all();
@@ -395,6 +423,44 @@ impl<T> Receiver<T> {
                         drop(ch.cv.wait_timeout(q, remaining).unwrap());
                     }
                 }
+            }
+        }
+    }
+
+    /// Non-blocking receive: the poll primitive behind multiplexed-runtime
+    /// tasks. Performs no busy accounting — the calling task's driver is
+    /// already counted busy while polling.
+    pub(crate) fn try_recv(&self) -> Result<T, TryRecvError> {
+        match &self.imp {
+            ReceiverImpl::Real { rx, .. } => rx.try_recv().map_err(|e| match e {
+                mpsc::TryRecvError::Empty => TryRecvError::Empty,
+                mpsc::TryRecvError::Disconnected => TryRecvError::Disconnected,
+            }),
+            ReceiverImpl::Sim { clock, ch } => {
+                let _st = clock.lock();
+                if let Some(v) = ch.q.lock().unwrap().pop_front() {
+                    return Ok(v);
+                }
+                if ch.senders.load(Ordering::Acquire) == 0 {
+                    Err(TryRecvError::Disconnected)
+                } else {
+                    Err(TryRecvError::Empty)
+                }
+            }
+        }
+    }
+
+    /// Register a task waker: every subsequent send (and the final sender
+    /// disconnect) wakes `waker`'s task on its driver. Sim channels only —
+    /// the multiplexed runtime never runs on a real clock.
+    pub(crate) fn set_waker(&self, waker: TaskWaker) {
+        match &self.imp {
+            ReceiverImpl::Real { .. } => {
+                unreachable!("task wakers are a SimClock-runtime feature")
+            }
+            ReceiverImpl::Sim { clock, ch } => {
+                let _st = clock.lock();
+                *ch.waker.lock().unwrap() = Some(waker);
             }
         }
     }

@@ -30,6 +30,7 @@
 
 pub mod chan;
 pub mod sim;
+pub(crate) mod task;
 
 pub use chan::{channel, Receiver, RecvError, RecvTimeoutError, SendError, Sender};
 pub use sim::SimClock;

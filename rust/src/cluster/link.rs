@@ -10,8 +10,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::nic::RateLimiter;
+use super::nic::{RateLimiter, Reservation};
 use super::NodeId;
+use crate::clock::task::TaskWaker;
 use crate::clock::{self, Clock, ClockHandle, Tick};
 use crate::trace::{Direction, EventKind};
 use crate::util::SplitMix64;
@@ -164,6 +165,36 @@ pub struct Rx {
     dst: Option<NodeId>,
 }
 
+/// A frame whose uplink time is reserved but not yet elapsed — the state
+/// carried between [`Tx::begin_send`] and [`Tx::commit_send`].
+pub(crate) struct PendingSend {
+    frame: Frame,
+    bytes: usize,
+    up: Option<Reservation>,
+    /// Tick the sender must reach before committing (the uplink completion
+    /// tick; `now` for zero-byte control frames).
+    pub(crate) ready_at: Tick,
+}
+
+impl PendingSend {
+    /// Whether the sender owes a pacing wait before the commit (zero-byte
+    /// control frames reserve nothing and commit immediately).
+    pub(crate) fn paced(&self) -> bool {
+        self.up.is_some()
+    }
+}
+
+/// Outcome of a non-blocking [`Rx::poll`].
+pub(crate) enum RxPoll {
+    /// A frame is queued; consume it at tick `.0` (its delivery instant) —
+    /// wait there, then call [`Rx::note_recvd`].
+    Ready(Tick, Frame),
+    /// Nothing queued yet; register a waker and yield.
+    Empty,
+    /// Sender hung up without `End` (the threaded `recv`'s `None`).
+    Disconnected,
+}
+
 /// Create a link between a sender NIC (`up`) and a receiver NIC (`down`);
 /// both must share one clock, which also times frame delivery.
 pub fn link(up: Arc<RateLimiter>, down: Arc<RateLimiter>, spec: LinkSpec, seed: u64) -> (Tx, Rx) {
@@ -224,12 +255,58 @@ impl Tx {
     /// stream), then enqueues the frame stamped with its delivery tick
     /// (completion + propagation latency ± jitter).
     pub fn send(&mut self, frame: Frame) -> anyhow::Result<()> {
+        let pending = self.begin_send(frame)?;
+        // Pace exactly like `RateLimiter::acquire_traced`: sleep up to the
+        // clock's slack short of the uplink completion tick.
+        if pending.up.is_some() {
+            let now = self.clock.now();
+            if pending.ready_at > now + self.clock.pacing_slack() {
+                self.clock
+                    .sleep_until(pending.ready_at - self.clock.pacing_slack());
+            }
+        }
+        self.commit_send(pending)
+    }
+
+    /// First half of a split [`Tx::send`] for cooperatively-scheduled
+    /// tasks: failure-guard check plus the **uplink** reservation (the
+    /// sender-pacing half). The caller must wait until
+    /// [`PendingSend::ready_at`] on the clock, then [`Tx::commit_send`].
+    /// Downlink booking, trace events and enqueueing all happen in the
+    /// commit, at the same tick the threaded path reaches them — that is
+    /// what keeps the two runtimes tick-identical.
+    pub(crate) fn begin_send(&mut self, frame: Frame) -> anyhow::Result<PendingSend> {
         if self.guards.iter().any(|g| g.load(Ordering::SeqCst)) {
             anyhow::bail!("link endpoint node has failed");
         }
         let bytes = frame.wire_bytes();
-        let done = if bytes > 0 {
-            let up = self.up.acquire_traced(bytes);
+        let (up, ready_at) = if bytes > 0 {
+            let up = self.up.reserve_traced(bytes);
+            let ready_at = up.done;
+            (Some(up), ready_at)
+        } else {
+            (None, self.clock.now())
+        };
+        Ok(PendingSend {
+            frame,
+            bytes,
+            up,
+            ready_at,
+        })
+    }
+
+    /// Second half of a split [`Tx::send`]: books the receiver NIC, emits
+    /// the NIC/frame trace events, draws the per-send jitter and enqueues
+    /// the frame with its delivery tick. Call with the clock at (or past)
+    /// [`PendingSend::ready_at`].
+    pub(crate) fn commit_send(&mut self, pending: PendingSend) -> anyhow::Result<()> {
+        let PendingSend {
+            frame,
+            bytes,
+            up,
+            ready_at: _,
+        } = pending;
+        let done = if let Some(up) = up {
             // Receiver NIC books the same bytes; delivery waits for it, and
             // competing inbound streams at the receiver serialize here.
             let down = self.down.reserve_traced(bytes);
@@ -261,6 +338,9 @@ impl Tx {
         } else {
             self.clock.now()
         };
+        // The jitter draw happens unconditionally per send (End frames
+        // included) so the per-link RNG stream is identical no matter how
+        // sends interleave with waits.
         let jitter = if self.spec.jitter > Duration::ZERO {
             let amp = self.spec.jitter.as_secs_f64();
             Duration::from_secs_f64(amp * self.rng.f64() * 2.0)
@@ -341,6 +421,43 @@ impl Rx {
         let mut out = Vec::new();
         self.recv_into(&mut out)?;
         Ok(out)
+    }
+
+    /// Non-blocking receive for cooperatively-scheduled tasks: pops the
+    /// next frame (with its delivery tick) if one is queued. The caller
+    /// owns the wait-until-delivery step the threaded [`Rx::recv`] does
+    /// inline.
+    pub(crate) fn poll(&self) -> RxPoll {
+        match self.receiver.try_recv() {
+            Ok((at, frame)) => RxPoll::Ready(at, frame),
+            Err(clock::chan::TryRecvError::Empty) => RxPoll::Empty,
+            Err(clock::chan::TryRecvError::Disconnected) => RxPoll::Disconnected,
+        }
+    }
+
+    /// Emit the `frame_recvd` trace event for a frame consumed at its
+    /// delivery tick `at` — the task-path twin of the emit inside
+    /// [`Rx::recv`].
+    pub(crate) fn note_recvd(&self, at: Tick, frame: &Frame) {
+        if let Frame::Data(d) = frame {
+            if let (Some(src), Some(dst)) = (self.src, self.dst) {
+                crate::trace_emit!(
+                    @at at,
+                    self.clock,
+                    dst,
+                    EventKind::FrameRecvd {
+                        src,
+                        bytes: d.len(),
+                    }
+                );
+            }
+        }
+    }
+
+    /// Register a task waker on the underlying channel: every subsequent
+    /// frame (and the sender's disconnect) wakes the task on its driver.
+    pub(crate) fn set_waker(&self, waker: TaskWaker) {
+        self.receiver.set_waker(waker);
     }
 }
 

@@ -24,10 +24,12 @@ pub mod link;
 pub mod network;
 pub mod nic;
 pub mod node;
+pub mod runtime;
 
 pub use congestion::CongestionSpec;
 pub use link::{Frame, LinkSpec, Payload, Rx, Tx};
 pub use network::{Cluster, ClusterSpec};
+pub use runtime::RuntimeKind;
 pub use nic::{RateLimiter, Reservation};
 pub use node::{
     Command, NodeHandle, ParityDest, SourceStream, StepResult, StepStats, DEFAULT_MAX_WORKERS,

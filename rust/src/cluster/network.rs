@@ -7,6 +7,7 @@ use super::congestion::CongestionSpec;
 use super::link::{link, with_endpoints, LinkSpec, Rx, Tx};
 use super::nic::RateLimiter;
 use super::node::{NodeHandle, DEFAULT_MAX_WORKERS};
+use super::runtime::{MultiplexedRuntime, RuntimeKind};
 use super::NodeId;
 use crate::clock::{ClockHandle, RealClock, SimClock};
 use crate::resources::{CostModelHandle, CpuMeter, NodeProfile, ProfileCost, UniformCost, ZeroCost};
@@ -40,6 +41,13 @@ pub struct ClusterSpec {
     /// [`ClusterSpec::with_cost`] / [`ClusterSpec::with_profiles`]) so a
     /// `SimClock` run charges Table-II-style compute in virtual time.
     pub cost: CostModelHandle,
+    /// Execution runtime for the node dataplanes. The default
+    /// [`RuntimeKind::Auto`] resolves from the clock — `SimClock` runs get
+    /// the single-threaded multiplexed event loop (thousands of nodes at
+    /// negligible wall cost), `RealClock` runs keep the thread-per-node
+    /// dataplane — so every existing preset transparently picks the fast
+    /// path the moment it goes `.sim()`.
+    pub runtime: RuntimeKind,
 }
 
 impl ClusterSpec {
@@ -54,6 +62,7 @@ impl ClusterSpec {
             max_workers: DEFAULT_MAX_WORKERS,
             clock: RealClock::handle(),
             cost: ZeroCost::handle(),
+            runtime: RuntimeKind::Auto,
         }
     }
 
@@ -68,6 +77,7 @@ impl ClusterSpec {
             max_workers: DEFAULT_MAX_WORKERS,
             clock: RealClock::handle(),
             cost: ZeroCost::handle(),
+            runtime: RuntimeKind::Auto,
         }
     }
 
@@ -81,6 +91,7 @@ impl ClusterSpec {
             max_workers: DEFAULT_MAX_WORKERS,
             clock: RealClock::handle(),
             cost: ZeroCost::handle(),
+            runtime: RuntimeKind::Auto,
         }
     }
 
@@ -111,6 +122,20 @@ impl ClusterSpec {
     pub fn with_profiles(self, profiles: Vec<NodeProfile>) -> anyhow::Result<Self> {
         Ok(self.with_cost(ProfileCost::handle(profiles)?))
     }
+
+    /// Pin the execution runtime instead of resolving it from the clock
+    /// (e.g. force [`RuntimeKind::Threaded`] under a `SimClock` for a
+    /// runtime-parity A/B).
+    pub fn with_runtime(mut self, runtime: RuntimeKind) -> Self {
+        self.runtime = runtime;
+        self
+    }
+
+    /// The runtime this spec will actually start:
+    /// [`RuntimeKind::Auto`] resolved against the spec's clock.
+    pub fn resolved_runtime(&self) -> RuntimeKind {
+        self.runtime.resolve(&self.clock)
+    }
 }
 
 struct NodeNet {
@@ -121,25 +146,56 @@ struct NodeNet {
 /// A running simulated cluster.
 pub struct Cluster {
     spec: ClusterSpec,
+    /// Declared before `runtime`: fields drop in declaration order, so the
+    /// node handles (whose drops send `Shutdown`) go down before the
+    /// multiplexed driver is joined — reordering these deadlocks shutdown.
     nodes: Vec<NodeHandle>,
     net: Mutex<Vec<NodeNet>>,
     link_seed: Mutex<u64>,
+    /// The multiplexed driver, when the resolved runtime is
+    /// [`RuntimeKind::Multiplexed`] (`None` for the threaded dataplane).
+    runtime: Option<MultiplexedRuntime>,
 }
 
 impl Cluster {
-    /// Spawn all node threads for `spec`.
+    /// Start all nodes for `spec` on its resolved runtime: one OS thread
+    /// per node (threaded), or one shared driver thread scheduling every
+    /// node as a task (multiplexed).
     pub fn start(spec: ClusterSpec) -> Self {
-        let nodes = (0..spec.nodes)
-            .map(|id| {
-                NodeHandle::spawn(
-                    id,
-                    Arc::new(RateLimiter::new(spec.clock.clone(), spec.bytes_per_sec)),
-                    Arc::new(RateLimiter::new(spec.clock.clone(), spec.bytes_per_sec)),
-                    Arc::new(CpuMeter::new(spec.clock.clone(), spec.cost.clone(), id)),
-                    spec.max_workers,
-                )
-            })
-            .collect();
+        let kind = spec.resolved_runtime();
+        let mk_parts = |id: NodeId| {
+            (
+                Arc::new(RateLimiter::new(spec.clock.clone(), spec.bytes_per_sec)),
+                Arc::new(RateLimiter::new(spec.clock.clone(), spec.bytes_per_sec)),
+                Arc::new(CpuMeter::new(spec.clock.clone(), spec.cost.clone(), id)),
+            )
+        };
+        let (nodes, runtime) = match kind {
+            RuntimeKind::Threaded => {
+                let nodes = (0..spec.nodes)
+                    .map(|id| {
+                        let (up, down, cpu) = mk_parts(id);
+                        NodeHandle::spawn(id, up, down, cpu, spec.max_workers)
+                    })
+                    .collect();
+                (nodes, None)
+            }
+            RuntimeKind::Multiplexed => {
+                let mut cores = Vec::with_capacity(spec.nodes);
+                let nodes = (0..spec.nodes)
+                    .map(|id| {
+                        let (up, down, cpu) = mk_parts(id);
+                        let (node, core) =
+                            NodeHandle::multiplexed(id, up, down, cpu, spec.max_workers);
+                        cores.push(core);
+                        node
+                    })
+                    .collect();
+                let rt = MultiplexedRuntime::launch(&spec.clock, cores);
+                (nodes, Some(rt))
+            }
+            RuntimeKind::Auto => unreachable!("resolved_runtime never returns Auto"),
+        };
         let net = (0..spec.nodes)
             .map(|_| NodeNet {
                 extra_latency: Duration::ZERO,
@@ -151,6 +207,16 @@ impl Cluster {
             nodes,
             net: Mutex::new(net),
             link_seed: Mutex::new(0x5EED),
+            runtime,
+        }
+    }
+
+    /// The execution runtime this cluster is running on.
+    pub fn runtime_kind(&self) -> RuntimeKind {
+        if self.runtime.is_some() {
+            RuntimeKind::Multiplexed
+        } else {
+            RuntimeKind::Threaded
         }
     }
 
@@ -411,5 +477,23 @@ mod tests {
     fn self_link_rejected() {
         let c = Cluster::start(ClusterSpec::test(2));
         let _ = c.connect(1, 1);
+    }
+
+    #[test]
+    fn auto_runtime_follows_the_clock() {
+        // RealClock preset: threads. The same preset gone .sim(): tasks.
+        let real = Cluster::start(ClusterSpec::test(2));
+        assert_eq!(real.runtime_kind(), super::RuntimeKind::Threaded);
+        let sim = Cluster::start(ClusterSpec::test(2).sim());
+        assert_eq!(sim.runtime_kind(), super::RuntimeKind::Multiplexed);
+        // pinning Threaded under a SimClock is allowed (parity A/Bs)
+        let pinned =
+            Cluster::start(ClusterSpec::test(2).sim().with_runtime(super::RuntimeKind::Threaded));
+        assert_eq!(pinned.runtime_kind(), super::RuntimeKind::Threaded);
+        // the multiplexed cluster still moves bytes end to end
+        let (mut tx, rx) = sim.connect(0, 1).unwrap();
+        tx.send_data(vec![9; 64]).unwrap();
+        tx.finish().unwrap();
+        assert_eq!(rx.recv_all().unwrap(), vec![9; 64]);
     }
 }

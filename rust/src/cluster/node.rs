@@ -52,6 +52,11 @@ pub const DEFAULT_MAX_WORKERS: usize = 32;
 pub struct StepStats {
     /// Total compute time charged (ZERO under the `ZeroCost` model).
     pub compute: Tick,
+    /// Tick at which the command finished, stamped by the worker (or task)
+    /// that ran it, immediately before the completion signal. The plan
+    /// executor closes each step's span at this tick, so the recorded
+    /// stage times do not depend on when the result is collected.
+    pub finished_at: Tick,
 }
 
 /// Completion payload of every data-plane command.
@@ -192,9 +197,10 @@ pub enum ParityDest {
     Store(BlockKey),
 }
 
-/// Internal node-thread message: an external command or a worker-slot
-/// release from a finished data-plane worker.
-enum Msg {
+/// Internal node-loop message: an external command or a worker-slot
+/// release from a finished data-plane worker. `pub(crate)` so the
+/// multiplexed runtime's node task speaks the same protocol.
+pub(crate) enum Msg {
     Cmd(Command),
     WorkerDone,
 }
@@ -276,6 +282,50 @@ impl NodeHandle {
         }
     }
 
+    /// Build a node WITHOUT its own OS thread: the returned [`NodeCore`]
+    /// holds the command-queue receiver and loop state seeds, and the
+    /// multiplexed runtime drives the node loop as a cooperatively
+    /// scheduled task on its driver. The handle is indistinguishable from
+    /// a [`NodeHandle::spawn`]ed one to every caller.
+    pub(crate) fn multiplexed(
+        id: NodeId,
+        up: Arc<RateLimiter>,
+        down: Arc<RateLimiter>,
+        cpu: Arc<CpuMeter>,
+        max_workers: usize,
+    ) -> (Self, NodeCore) {
+        let clock = up.clock().clone();
+        let store = BlockStore::new();
+        let (tx, rx) = clock::channel::<Msg>(&clock);
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let failed = Arc::new(AtomicBool::new(false));
+        let core = NodeCore {
+            id,
+            rx,
+            loopback: tx.clone(),
+            store: store.clone(),
+            cpu: cpu.clone(),
+            inflight: inflight.clone(),
+            failed: failed.clone(),
+            max_workers: max_workers.max(1),
+        };
+        (
+            Self {
+                id,
+                cmd: tx,
+                store,
+                up,
+                down,
+                cpu,
+                clock,
+                thread: None,
+                inflight,
+                failed,
+            },
+            core,
+        )
+    }
+
     /// The clock this node runs on.
     pub fn clock(&self) -> &ClockHandle {
         &self.clock
@@ -354,9 +404,23 @@ impl Drop for NodeHandle {
     }
 }
 
+/// Everything the multiplexed runtime needs to run one node's command
+/// loop as a task: the receive side of the queue [`NodeHandle`] sends on,
+/// plus the shared state the threaded `node_loop` closes over.
+pub(crate) struct NodeCore {
+    pub(crate) id: NodeId,
+    pub(crate) rx: clock::Receiver<Msg>,
+    pub(crate) loopback: clock::Sender<Msg>,
+    pub(crate) store: BlockStore,
+    pub(crate) cpu: Arc<CpuMeter>,
+    pub(crate) inflight: Arc<AtomicUsize>,
+    pub(crate) failed: Arc<AtomicBool>,
+    pub(crate) max_workers: usize,
+}
+
 /// Answer a command's completion channel with a crash error (the node is
 /// failed: nothing runs, but every caller must still get a reply).
-fn reject(id: NodeId, cmd: Command) {
+pub(crate) fn reject(id: NodeId, cmd: Command) {
     let crash = || anyhow::anyhow!("node {id} has failed");
     match cmd {
         Command::Put { done, .. } => {
@@ -539,7 +603,18 @@ fn node_loop(
     }
 }
 
+/// Stamp a completed command's finish tick right before its result is
+/// sent — shared by the threaded workers and the multiplexed tasks, so
+/// `StepStats::finished_at` is runtime-independent.
+pub(crate) fn stamp_finished(r: StepResult, clock: &ClockHandle) -> StepResult {
+    r.map(|mut s| {
+        s.finished_at = clock.now();
+        s
+    })
+}
+
 fn run_dataplane(cmd: Command, store: BlockStore, cpu: &CpuMeter, failed: &AtomicBool) {
+    let clock = cpu.clock().clone();
     match cmd {
         Command::Upload {
             key,
@@ -547,7 +622,8 @@ fn run_dataplane(cmd: Command, store: BlockStore, cpu: &CpuMeter, failed: &Atomi
             buf_bytes,
             done,
         } => {
-            let _ = done.send(do_upload(&store, key, &mut tx, buf_bytes));
+            let r = do_upload(&store, key, &mut tx, buf_bytes);
+            let _ = done.send(stamp_finished(r, &clock));
         }
         Command::Receive {
             key,
@@ -555,7 +631,8 @@ fn run_dataplane(cmd: Command, store: BlockStore, cpu: &CpuMeter, failed: &Atomi
             expect_bytes,
             done,
         } => {
-            let _ = done.send(do_receive(&store, key, &rx, expect_bytes, cpu, failed));
+            let r = do_receive(&store, key, &rx, expect_bytes, cpu, failed);
+            let _ = done.send(stamp_finished(r, &clock));
         }
         Command::PipelineStage {
             width,
@@ -573,7 +650,7 @@ fn run_dataplane(cmd: Command, store: BlockStore, cpu: &CpuMeter, failed: &Atomi
                 &store, width, &locals, &psi, &xi, prev, next, out_key, buf_bytes, &backend,
                 cpu, failed,
             );
-            let _ = done.send(r);
+            let _ = done.send(stamp_finished(r, &clock));
         }
         Command::ClassicalEncode {
             width,
@@ -597,7 +674,7 @@ fn run_dataplane(cmd: Command, store: BlockStore, cpu: &CpuMeter, failed: &Atomi
                 cpu,
                 failed,
             );
-            let _ = done.send(r);
+            let _ = done.send(stamp_finished(r, &clock));
         }
         _ => unreachable!("control-plane command on data plane"),
     }
@@ -652,7 +729,10 @@ fn do_receive(
             bytes
         }
     );
-    Ok(StepStats { compute })
+    Ok(StepStats {
+        compute,
+        ..Default::default()
+    })
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -786,7 +866,10 @@ fn do_pipeline_stage(
             }
         );
     }
-    Ok(StepStats { compute })
+    Ok(StepStats {
+        compute,
+        ..Default::default()
+    })
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -917,7 +1000,10 @@ fn do_classical_encode(
             }
         }
     }
-    Ok(StepStats { compute })
+    Ok(StepStats {
+        compute,
+        ..Default::default()
+    })
 }
 
 #[cfg(test)]

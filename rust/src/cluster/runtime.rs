@@ -1,0 +1,1550 @@
+//! Multiplexed discrete-event dataplane: every node command loop and every
+//! plan-step worker as a cooperatively-scheduled task on ONE driver thread.
+//!
+//! The threaded dataplane spawns an OS thread per node plus one per
+//! in-flight data-plane command. That is the paper-faithful shape for
+//! `RealClock` testbeds (real concurrency, real wall time), but under a
+//! `SimClock` the threads do nothing except park on condvars and take
+//! turns — a 2,000-node cluster burns its wall time on context switches.
+//! The [`MultiplexedRuntime`] replaces all of them with resumable state
+//! machines ([`Task`]) driven by a single OS thread:
+//!
+//! * the driver is exactly one clock *participant*; while it runs tasks the
+//!   virtual clock is pinned, and when every task is waiting it parks on
+//!   the clock via [`WakeHub::park`], registering the earliest task
+//!   deadline as a clock sleeper — so quiescence advances virtual time
+//!   exactly as it would with parked threads;
+//! * channel sends wake tasks through a registered [`TaskWaker`] (with the
+//!   same busy-credit handoff `clock::chan` gives threads), so the
+//!   send→resume window can never let time slip;
+//! * each task mirrors its blocking twin in `node.rs` **wait point for
+//!   wait point**: `Tx::send` splits into [`Tx::begin_send`] → sleep →
+//!   [`Tx::commit_send`], `Rx::recv` into [`Rx::poll`] → sleep →
+//!   [`Rx::note_recvd`], `CpuMeter::charge` into
+//!   [`CpuMeter::charge_reserve`] → sleep. Every reservation, RNG draw and
+//!   trace emit happens at the same virtual tick as in the threaded
+//!   runtime — that is the determinism contract the parity tests in
+//!   `tests/scale.rs` lock in: same seed ⇒ byte-identical blocks and
+//!   tick-identical traces under either runtime.
+//!
+//! Scheduling is deterministic: a FIFO ready queue, a `(deadline, seq)`
+//! B-tree for sleepers (same-tick tasks run in registration order), and
+//! wake delivery ordered by send order. Task polls are spurious-wake safe —
+//! every wait point re-checks its condition on resume — so a stray waker
+//! firing while a task sleeps on a deadline costs one no-op poll, nothing
+//! else.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::mem;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::link::{Frame, Payload, PendingSend, Rx, RxPoll, Tx};
+use super::node::{
+    reject, stamp_finished, Command, Msg, NodeCore, ParityDest, SourceStream, StepResult,
+    StepStats, QUEUE_STALL_OVERFLOW,
+};
+use crate::backend::{BackendHandle, Width};
+use crate::clock::chan::TryRecvError;
+use crate::clock::task::{TaskId, TaskWaker, WakeHub};
+use crate::clock::{self, BusyToken, Clock, ClockHandle, SimClock, Tick};
+use crate::resources::{CpuMeter, GfWork};
+use crate::storage::{BlockKey, BlockStore};
+use crate::trace::EventKind;
+
+/// Which execution runtime a [`Cluster`](super::Cluster) drives its nodes
+/// with.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// Pick from the spec's clock: a `SimClock` gets the [`Multiplexed`]
+    /// fast path, a `RealClock` the paper-faithful [`Threaded`] dataplane.
+    ///
+    /// [`Multiplexed`]: RuntimeKind::Multiplexed
+    /// [`Threaded`]: RuntimeKind::Threaded
+    #[default]
+    Auto,
+    /// One OS thread per node plus one per in-flight data-plane command —
+    /// required for `RealClock` (real concurrency costs real time).
+    Threaded,
+    /// Every node loop and worker as a cooperatively-scheduled task on one
+    /// driver thread. `SimClock` only.
+    Multiplexed,
+}
+
+impl RuntimeKind {
+    /// Resolve `Auto` against a clock.
+    pub fn resolve(self, clock: &ClockHandle) -> RuntimeKind {
+        match self {
+            RuntimeKind::Auto => {
+                if clock.as_sim().is_some() {
+                    RuntimeKind::Multiplexed
+                } else {
+                    RuntimeKind::Threaded
+                }
+            }
+            k => k,
+        }
+    }
+}
+
+/// What a task reports back to the driver from one poll.
+enum TaskPoll {
+    /// Blocked on a channel: sleep until the registered waker fires.
+    Park,
+    /// Wake at the given tick (a channel waker may still fire earlier; the
+    /// poll re-checks its condition either way).
+    Sleep(Tick),
+    /// Task complete; drop it.
+    Done,
+}
+
+/// A resumable state machine scheduled by the [`Driver`].
+trait Task: Send {
+    /// Attach `waker` to every channel this task will ever wait on (called
+    /// once, when the driver adopts the task).
+    fn register(&self, waker: TaskWaker);
+
+    /// Run until the next wait point. Tasks spawned by this poll (worker
+    /// tasks of a node loop) are pushed onto `spawn` and adopted by the
+    /// driver immediately after.
+    fn poll(&mut self, spawn: &mut Vec<Box<dyn Task>>) -> TaskPoll;
+}
+
+struct TaskEntry {
+    /// `None` only transiently while the task is being polled.
+    task: Option<Box<dyn Task>>,
+    /// Already in the ready queue (dedupes redundant wakes).
+    queued: bool,
+    /// Key of this task's entry in the sleeping tree, if any.
+    sleep_key: Option<(Tick, u64)>,
+}
+
+/// The single-threaded cooperative scheduler behind a
+/// [`MultiplexedRuntime`].
+struct Driver {
+    clock: ClockHandle,
+    sim: SimClock,
+    hub: Arc<WakeHub>,
+    tasks: HashMap<TaskId, TaskEntry>,
+    ready: VecDeque<TaskId>,
+    /// Tasks waiting on a deadline, ordered by `(tick, registration seq)`
+    /// so same-tick wakeups replay in a deterministic order.
+    sleeping: BTreeMap<(Tick, u64), TaskId>,
+    seq: u64,
+    next_id: TaskId,
+}
+
+impl Driver {
+    fn new(clock: ClockHandle, sim: SimClock) -> Self {
+        Self {
+            clock,
+            sim,
+            hub: WakeHub::new(),
+            tasks: HashMap::new(),
+            ready: VecDeque::new(),
+            sleeping: BTreeMap::new(),
+            seq: 0,
+            next_id: 0,
+        }
+    }
+
+    /// Adopt a task: register its waker, queue it for an immediate first
+    /// poll (the moral equivalent of the threaded runtime creating a
+    /// `BusyToken` before `thread::spawn` — the driver is already busy, so
+    /// no virtual time can pass before the task first runs).
+    fn spawn(&mut self, task: Box<dyn Task>) {
+        let id = self.next_id;
+        self.next_id += 1;
+        task.register(TaskWaker::new(self.hub.clone(), id));
+        self.tasks.insert(
+            id,
+            TaskEntry {
+                task: Some(task),
+                queued: true,
+                sleep_key: None,
+            },
+        );
+        self.ready.push_back(id);
+    }
+
+    /// Queue a woken task (no-op for completed or already-queued tasks).
+    fn enqueue(&mut self, id: TaskId) {
+        let Some(entry) = self.tasks.get_mut(&id) else {
+            return;
+        };
+        if entry.queued {
+            return;
+        }
+        entry.queued = true;
+        if let Some(key) = entry.sleep_key.take() {
+            self.sleeping.remove(&key);
+        }
+        self.ready.push_back(id);
+    }
+
+    fn poll_one(&mut self, id: TaskId) {
+        let Some(entry) = self.tasks.get_mut(&id) else {
+            return;
+        };
+        entry.queued = false;
+        if let Some(key) = entry.sleep_key.take() {
+            self.sleeping.remove(&key);
+        }
+        let mut task = entry.task.take().expect("task polled reentrantly");
+        let mut spawned = Vec::new();
+        match task.poll(&mut spawned) {
+            TaskPoll::Done => {
+                self.tasks.remove(&id);
+            }
+            TaskPoll::Park => {
+                self.tasks.get_mut(&id).expect("entry still present").task = Some(task);
+            }
+            TaskPoll::Sleep(at) => {
+                let key = (at, self.seq);
+                self.seq += 1;
+                self.sleeping.insert(key, id);
+                let entry = self.tasks.get_mut(&id).expect("entry still present");
+                entry.task = Some(task);
+                entry.sleep_key = Some(key);
+            }
+        }
+        for t in spawned {
+            self.spawn(t);
+        }
+    }
+
+    /// Run until every task has completed (each node task completes on
+    /// `Shutdown`, sent by its `NodeHandle`'s drop).
+    fn run(&mut self) {
+        loop {
+            while let Some(id) = self.ready.pop_front() {
+                self.poll_one(id);
+            }
+            if self.tasks.is_empty() {
+                break;
+            }
+            // Park on the clock: the earliest task deadline (if any) is
+            // registered as a clock sleeper, so a quiescent dataplane
+            // advances virtual time straight to it; channel wakers (with
+            // their busy credit) cut the park short.
+            let deadline = self.sleeping.keys().next().map(|&(at, _)| at);
+            for id in self.hub.park(&self.sim, deadline) {
+                self.enqueue(id);
+            }
+            let now = self.clock.now();
+            while let Some((&key, &id)) = self.sleeping.iter().next() {
+                if key.0 > now {
+                    break;
+                }
+                self.sleeping.remove(&key);
+                if let Some(entry) = self.tasks.get_mut(&id) {
+                    entry.sleep_key = None;
+                }
+                self.enqueue(id);
+            }
+        }
+    }
+}
+
+/// Handle to a running multiplexed dataplane: one driver OS thread
+/// cooperatively scheduling all node loops and workers of a cluster.
+///
+/// Drop order matters for the owner: the driver exits when every node task
+/// has processed its `Shutdown`, so the owning [`Cluster`](super::Cluster)
+/// must drop its `NodeHandle`s (whose drops send `Shutdown`) *before* this
+/// handle's drop joins the driver.
+pub(crate) struct MultiplexedRuntime {
+    driver: Option<JoinHandle<()>>,
+}
+
+impl MultiplexedRuntime {
+    /// Launch the driver thread over one task per [`NodeCore`].
+    pub(crate) fn launch(clock: &ClockHandle, cores: Vec<NodeCore>) -> Self {
+        assert!(
+            clock.as_sim().is_some(),
+            "the multiplexed runtime requires a SimClock"
+        );
+        let sim = clock.as_sim().expect("checked above").clone();
+        let clock2 = clock.clone();
+        // Token created before the spawn: the driver counts as busy from
+        // the instant it exists, so virtual time can't slip during startup.
+        let token = BusyToken::new(clock);
+        let driver = std::thread::Builder::new()
+            .name("mux-driver".into())
+            .spawn(move || {
+                let _busy = token.bind();
+                let mut driver = Driver::new(clock2, sim);
+                for core in cores {
+                    driver.spawn(Box::new(NodeTask::new(core)));
+                }
+                driver.run();
+            })
+            .expect("spawn multiplexed driver thread");
+        Self {
+            driver: Some(driver),
+        }
+    }
+}
+
+impl Drop for MultiplexedRuntime {
+    fn drop(&mut self) {
+        if let Some(driver) = self.driver.take() {
+            let _ = driver.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Split-wait building blocks shared by the worker state machines.
+// ---------------------------------------------------------------------------
+
+/// Outcome of driving one split [`Tx::send`] forward.
+enum SendDrive {
+    /// Sleep until the tick, then drive again.
+    Wait(Tick),
+    /// Frame committed (enqueued with its delivery tick).
+    Sent,
+}
+
+/// Drive a begun frame ([`Tx::begin_send`] already called, `slot` holds the
+/// [`PendingSend`]) to its commit, mirroring the threaded `Tx::send` pace:
+/// sleep to `ready_at - pacing_slack`, then commit. Idempotent across
+/// spurious wakes — the deadline is re-checked on every call.
+fn drive_send(tx: &mut Tx, slot: &mut Option<PendingSend>, clock: &ClockHandle) -> anyhow::Result<SendDrive> {
+    let pending = slot.take().expect("drive_send without a begun frame");
+    if pending.paced() {
+        let wake = pending.ready_at.saturating_sub(clock.pacing_slack());
+        if wake > clock.now() {
+            *slot = Some(pending);
+            return Ok(SendDrive::Wait(wake));
+        }
+    }
+    tx.commit_send(pending)?;
+    Ok(SendDrive::Sent)
+}
+
+/// Outcome of driving one split [`Rx::recv`] forward.
+enum RecvDrive {
+    /// Sleep until the frame's delivery tick, then drive again.
+    Wait(Tick),
+    /// Nothing queued: park until the channel waker fires.
+    Channel,
+    /// The threaded `Rx::recv` return value: `Some(frame)` consumed at its
+    /// delivery tick (trace event emitted), `None` for a dropped sender.
+    Got(Option<Frame>),
+}
+
+/// Drive one frame receive: poll the queue, hold the frame in `stash`
+/// across the wait to its delivery tick, then emit the receive trace event
+/// exactly as the threaded path does.
+fn drive_recv(rx: &Rx, stash: &mut Option<(Tick, Frame)>, clock: &ClockHandle) -> RecvDrive {
+    if stash.is_none() {
+        match rx.poll() {
+            RxPoll::Ready(at, frame) => *stash = Some((at, frame)),
+            RxPoll::Empty => return RecvDrive::Channel,
+            RxPoll::Disconnected => return RecvDrive::Got(None),
+        }
+    }
+    let (at, frame) = stash.take().expect("stash just filled");
+    if at > clock.now() {
+        *stash = Some((at, frame));
+        return RecvDrive::Wait(at);
+    }
+    rx.note_recvd(at, &frame);
+    RecvDrive::Got(Some(frame))
+}
+
+/// A [`CpuMeter::charge_reserve`] whose completion wait is owed to the
+/// driver (the task twin of the sleep inside `CpuMeter::charge`).
+#[derive(Default)]
+struct ChargeWait(Option<Tick>);
+
+impl ChargeWait {
+    /// Price and reserve `work`, accumulating the charged compute time.
+    fn begin(&mut self, cpu: &CpuMeter, work: &GfWork, compute: &mut Tick) {
+        let (cost, done) = cpu.charge_reserve(work);
+        *compute += cost;
+        self.0 = done;
+    }
+
+    /// `Some(t)`: keep sleeping until `t`. `None`: the charge is complete.
+    fn pending(&mut self, clock: &ClockHandle) -> Option<Tick> {
+        match self.0 {
+            Some(t) if t > clock.now() => Some(t),
+            _ => {
+                self.0 = None;
+                None
+            }
+        }
+    }
+}
+
+/// Per-worker clones of the node state the threaded `spawn_worker` closure
+/// captures, plus the completion protocol shared by all worker tasks.
+struct WorkerEnv {
+    clock: ClockHandle,
+    store: BlockStore,
+    cpu: Arc<CpuMeter>,
+    inflight: Arc<std::sync::atomic::AtomicUsize>,
+    loopback: clock::Sender<Msg>,
+    failed: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl WorkerEnv {
+    /// Worker epilogue, in the exact threaded order: stamp and send the
+    /// result, release the inflight slot, hand the worker slot back to the
+    /// node loop (which may already be gone — ignored, as in the threaded
+    /// runtime).
+    fn complete(&self, done: &clock::Sender<StepResult>, r: StepResult) {
+        let _ = done.send(stamp_finished(r, &self.clock));
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        let _ = self.loopback.send(Msg::WorkerDone);
+    }
+}
+
+/// Build the worker task for a data-plane command (the task twin of
+/// `run_dataplane`'s dispatch).
+fn worker_task(env: WorkerEnv, cmd: Command) -> Box<dyn Task> {
+    match cmd {
+        Command::Upload {
+            key,
+            tx,
+            buf_bytes,
+            done,
+        } => Box::new(UploadTask {
+            env,
+            key,
+            tx,
+            buf_bytes,
+            done,
+            payload: None,
+            off: 0,
+            end_sent: false,
+            pending: None,
+        }),
+        Command::Receive {
+            key,
+            rx,
+            expect_bytes,
+            done,
+        } => Box::new(ReceiveTask {
+            env,
+            key,
+            rx,
+            done,
+            data: Vec::with_capacity(expect_bytes),
+            stash: None,
+            streamed: false,
+            charged: false,
+            charge: ChargeWait::default(),
+            compute: Tick::ZERO,
+        }),
+        Command::PipelineStage {
+            width,
+            locals,
+            psi,
+            xi,
+            prev,
+            next,
+            out_key,
+            buf_bytes,
+            backend,
+            done,
+        } => Box::new(PipelineStageTask {
+            env,
+            width,
+            locals,
+            psi,
+            xi,
+            prev,
+            next,
+            out_key,
+            buf_bytes,
+            backend,
+            done,
+            state: StageState::Recv,
+            init: None,
+            out: Vec::new(),
+            frame_no: 0,
+            compute: Tick::ZERO,
+            offset: 0,
+            stash: None,
+            pending: None,
+            charge: ChargeWait::default(),
+            fold: None,
+            fwd: None,
+            fwd_idx: 0,
+            close_idx: 0,
+        }),
+        Command::ClassicalEncode {
+            width,
+            sources,
+            parity_rows,
+            dests,
+            buf_bytes,
+            block_bytes,
+            backend,
+            done,
+        } => Box::new(ClassicalEncodeTask {
+            env,
+            width,
+            sources,
+            parity_rows,
+            dests,
+            buf_bytes,
+            block_bytes,
+            backend,
+            done,
+            started: false,
+            local_blocks: Vec::new(),
+            local_acc: Vec::new(),
+            compute: Tick::ZERO,
+            offset: 0,
+            frame_no: 0,
+            state: EncState::Gather,
+            row: Vec::new(),
+            src_idx: 0,
+            stash: None,
+            pending: None,
+            charge: ChargeWait::default(),
+            parity: Vec::new(),
+            dest_idx: 0,
+            drain_idx: 0,
+            final_idx: 0,
+            final_store: None,
+        }),
+        Command::Put { .. } | Command::Peek { .. } | Command::Delete { .. } | Command::Shutdown => {
+            unreachable!("control-plane command on data plane")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Node command loop.
+// ---------------------------------------------------------------------------
+
+/// The task twin of `node_loop`: identical queueing, stall-overflow
+/// backoff, crash-flush and trace behaviour, but worker "threads" are
+/// tasks pushed onto the driver.
+struct NodeTask {
+    core: NodeCore,
+    clock: ClockHandle,
+    pending_cmds: VecDeque<Command>,
+    active: usize,
+    stall: Duration,
+    stall_deadline: Option<Tick>,
+}
+
+impl NodeTask {
+    fn new(core: NodeCore) -> Self {
+        let clock = core.cpu.clock().clone();
+        Self {
+            core,
+            clock,
+            pending_cmds: VecDeque::new(),
+            active: 0,
+            stall: QUEUE_STALL_OVERFLOW,
+            stall_deadline: None,
+        }
+    }
+
+    fn spawn_worker(&self, cmd: Command, spawn: &mut Vec<Box<dyn Task>>) {
+        let env = WorkerEnv {
+            clock: self.clock.clone(),
+            store: self.core.store.clone(),
+            cpu: self.core.cpu.clone(),
+            inflight: self.core.inflight.clone(),
+            loopback: self.core.loopback.clone(),
+            failed: self.core.failed.clone(),
+        };
+        spawn.push(worker_task(env, cmd));
+    }
+}
+
+impl Task for NodeTask {
+    fn register(&self, waker: TaskWaker) {
+        self.core.rx.set_waker(waker);
+    }
+
+    fn poll(&mut self, spawn: &mut Vec<Box<dyn Task>>) -> TaskPoll {
+        let max_stall = QUEUE_STALL_OVERFLOW * 20;
+        loop {
+            // Crash-flush, exactly as in `node_loop` (see the comments
+            // there): reject everything queued, keep running workers going.
+            if self.core.failed.load(Ordering::SeqCst) {
+                let flushed = !self.pending_cmds.is_empty();
+                while let Some(cmd) = self.pending_cmds.pop_front() {
+                    self.core.inflight.fetch_sub(1, Ordering::Relaxed);
+                    reject(self.core.id, cmd);
+                }
+                if flushed {
+                    crate::trace_emit!(self.clock, self.core.id, EventKind::QueueDepth {
+                        depth: self.active
+                    });
+                }
+                self.stall_deadline = None;
+            }
+            let msg = if self.pending_cmds.is_empty() {
+                self.stall_deadline = None;
+                match self.core.rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => return TaskPoll::Park,
+                    Err(TryRecvError::Disconnected) => return TaskPoll::Done,
+                }
+            } else {
+                // Stall-overflow deadline, anchored to the last progress
+                // event — the task analogue of `recv_deadline`.
+                let deadline = match self.stall_deadline {
+                    Some(d) => d,
+                    None => {
+                        let d = self.clock.now() + self.stall;
+                        self.stall_deadline = Some(d);
+                        d
+                    }
+                };
+                if self.clock.now() >= deadline {
+                    if let Some(cmd) = self.pending_cmds.pop_front() {
+                        self.active += 1;
+                        self.spawn_worker(cmd, spawn);
+                    }
+                    self.stall = (self.stall * 2).min(max_stall);
+                    self.stall_deadline = Some(self.clock.now() + self.stall);
+                    continue;
+                }
+                match self.core.rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => return TaskPoll::Sleep(deadline),
+                    Err(TryRecvError::Disconnected) => return TaskPoll::Done,
+                }
+            };
+            match msg {
+                Msg::Cmd(cmd)
+                    if self.core.failed.load(Ordering::SeqCst)
+                        && !matches!(cmd, Command::Shutdown) =>
+                {
+                    reject(self.core.id, cmd);
+                }
+                Msg::WorkerDone => {
+                    self.stall = QUEUE_STALL_OVERFLOW;
+                    self.stall_deadline = None;
+                    self.active -= 1;
+                    if self.active < self.core.max_workers {
+                        if let Some(cmd) = self.pending_cmds.pop_front() {
+                            self.active += 1;
+                            self.spawn_worker(cmd, spawn);
+                        }
+                    }
+                    crate::trace_emit!(self.clock, self.core.id, EventKind::QueueDepth {
+                        depth: self.active + self.pending_cmds.len()
+                    });
+                }
+                Msg::Cmd(Command::Shutdown) => {
+                    // Flush the queue (briefly exceeding the cap) so every
+                    // dispatched command still completes and signals `done`.
+                    while let Some(cmd) = self.pending_cmds.pop_front() {
+                        self.spawn_worker(cmd, spawn);
+                    }
+                    return TaskPoll::Done;
+                }
+                Msg::Cmd(Command::Put { key, data, done }) => {
+                    self.core.store.put(key, data);
+                    let _ = done.send(Ok(()));
+                }
+                Msg::Cmd(Command::Peek { key, reply }) => {
+                    let _ = reply.send(self.core.store.get(&key));
+                }
+                Msg::Cmd(Command::Delete { key, done }) => {
+                    let _ = done.send(self.core.store.delete(&key));
+                }
+                Msg::Cmd(other) => {
+                    self.core.inflight.fetch_add(1, Ordering::Relaxed);
+                    if self.active < self.core.max_workers {
+                        self.active += 1;
+                        self.spawn_worker(other, spawn);
+                    } else {
+                        self.pending_cmds.push_back(other);
+                    }
+                    crate::trace_emit!(self.clock, self.core.id, EventKind::QueueDepth {
+                        depth: self.active + self.pending_cmds.len()
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker state machines (one per data-plane command kind).
+// ---------------------------------------------------------------------------
+
+/// Task twin of `do_upload`.
+struct UploadTask {
+    env: WorkerEnv,
+    key: BlockKey,
+    tx: Tx,
+    buf_bytes: usize,
+    done: clock::Sender<StepResult>,
+    payload: Option<Payload>,
+    off: usize,
+    end_sent: bool,
+    pending: Option<PendingSend>,
+}
+
+impl UploadTask {
+    fn drive(&mut self) -> anyhow::Result<Option<Tick>> {
+        if self.payload.is_none() {
+            let key = self.key;
+            let data = self
+                .env
+                .store
+                .get(&key)
+                .ok_or_else(|| anyhow::anyhow!("upload: missing block {key:?}"))?;
+            self.payload = Some(Payload::from_shared(data));
+        }
+        loop {
+            if self.pending.is_none() {
+                let payload = self.payload.as_ref().expect("payload fetched above");
+                let total = payload.len();
+                if self.off < total {
+                    let end = (self.off + self.buf_bytes).min(total);
+                    let frame = Frame::Data(payload.slice(self.off, end));
+                    self.off = end;
+                    self.pending = Some(self.tx.begin_send(frame)?);
+                } else if !self.end_sent {
+                    self.end_sent = true;
+                    self.pending = Some(self.tx.begin_send(Frame::End)?);
+                } else {
+                    return Ok(None);
+                }
+            }
+            match drive_send(&mut self.tx, &mut self.pending, &self.env.clock)? {
+                SendDrive::Wait(at) => return Ok(Some(at)),
+                SendDrive::Sent => {}
+            }
+        }
+    }
+}
+
+impl Task for UploadTask {
+    fn register(&self, _waker: TaskWaker) {}
+
+    fn poll(&mut self, _spawn: &mut Vec<Box<dyn Task>>) -> TaskPoll {
+        match self.drive() {
+            Ok(Some(at)) => TaskPoll::Sleep(at),
+            Ok(None) => {
+                self.env.complete(&self.done, Ok(StepStats::default()));
+                TaskPoll::Done
+            }
+            Err(e) => {
+                self.env.complete(&self.done, Err(e));
+                TaskPoll::Done
+            }
+        }
+    }
+}
+
+/// Task twin of `do_receive`.
+struct ReceiveTask {
+    env: WorkerEnv,
+    key: BlockKey,
+    rx: Rx,
+    done: clock::Sender<StepResult>,
+    data: Vec<u8>,
+    stash: Option<(Tick, Frame)>,
+    streamed: bool,
+    charged: bool,
+    charge: ChargeWait,
+    compute: Tick,
+}
+
+impl ReceiveTask {
+    fn drive(&mut self) -> anyhow::Result<Option<TaskPoll>> {
+        while !self.streamed {
+            match drive_recv(&self.rx, &mut self.stash, &self.env.clock) {
+                RecvDrive::Channel => return Ok(Some(TaskPoll::Park)),
+                RecvDrive::Wait(at) => return Ok(Some(TaskPoll::Sleep(at))),
+                RecvDrive::Got(Some(Frame::Data(d))) => self.data.extend_from_slice(&d),
+                RecvDrive::Got(Some(Frame::End)) => self.streamed = true,
+                RecvDrive::Got(None) => anyhow::bail!("stream ended without End frame"),
+            }
+        }
+        if !self.charged {
+            self.charged = true;
+            self.charge.begin(
+                &self.env.cpu,
+                &GfWork::store(self.data.len()),
+                &mut self.compute,
+            );
+        }
+        if let Some(at) = self.charge.pending(&self.env.clock) {
+            return Ok(Some(TaskPoll::Sleep(at)));
+        }
+        let bytes = self.data.len();
+        anyhow::ensure!(
+            self.env
+                .store
+                .put_unless(self.key, mem::take(&mut self.data), &self.env.failed),
+            "receive aborted: node has failed"
+        );
+        crate::trace_emit!(
+            self.env.cpu.clock(),
+            self.env.cpu.node(),
+            EventKind::StoreDone {
+                object: self.key.object.0,
+                index: self.key.index,
+                bytes
+            }
+        );
+        Ok(None)
+    }
+}
+
+impl Task for ReceiveTask {
+    fn register(&self, waker: TaskWaker) {
+        self.rx.set_waker(waker);
+    }
+
+    fn poll(&mut self, _spawn: &mut Vec<Box<dyn Task>>) -> TaskPoll {
+        match self.drive() {
+            Ok(Some(wait)) => wait,
+            Ok(None) => {
+                self.env.complete(
+                    &self.done,
+                    Ok(StepStats {
+                        compute: self.compute,
+                        ..Default::default()
+                    }),
+                );
+                TaskPoll::Done
+            }
+            Err(e) => {
+                self.env.complete(&self.done, Err(e));
+                TaskPoll::Done
+            }
+        }
+    }
+}
+
+enum StageState {
+    /// Waiting for (or synthesizing) the next incoming buffer.
+    Recv,
+    /// GF work charged; waiting out the lane reservation.
+    Fold,
+    /// Forwarding `x_out` to the children, one send at a time.
+    Forward,
+    /// Incoming stream ended: close downstream streams.
+    Close,
+    /// Store-charge wait before landing the accumulated output block.
+    Store,
+}
+
+/// Task twin of `do_pipeline_stage`.
+struct PipelineStageTask {
+    env: WorkerEnv,
+    width: Width,
+    locals: Vec<BlockKey>,
+    psi: Vec<u32>,
+    xi: Vec<u32>,
+    prev: Option<Rx>,
+    next: Vec<Tx>,
+    out_key: Option<BlockKey>,
+    buf_bytes: usize,
+    backend: BackendHandle,
+    done: clock::Sender<StepResult>,
+    state: StageState,
+    /// `(local_blocks, block_bytes)`, fetched on the first poll.
+    init: Option<(Vec<Arc<Vec<u8>>>, usize)>,
+    out: Vec<u8>,
+    frame_no: usize,
+    compute: Tick,
+    offset: usize,
+    stash: Option<(Tick, Frame)>,
+    pending: Option<PendingSend>,
+    charge: ChargeWait,
+    /// `(x_out, c, len)` held across the fold-charge wait.
+    fold: Option<(Vec<u8>, Vec<u8>, usize)>,
+    /// `(frame, len)` held across the fan-out sends.
+    fwd: Option<(Payload, usize)>,
+    fwd_idx: usize,
+    close_idx: usize,
+}
+
+impl PipelineStageTask {
+    fn trace_identity(&self) -> (Option<u64>, Option<usize>) {
+        match &self.out_key {
+            Some(k) => (Some(k.object.0), Some(k.index)),
+            None => (None, None),
+        }
+    }
+
+    fn drive(&mut self) -> anyhow::Result<Option<TaskPoll>> {
+        if self.init.is_none() {
+            let local_blocks: Vec<Arc<Vec<u8>>> = self
+                .locals
+                .iter()
+                .map(|k| {
+                    self.env.store.get(k).ok_or_else(|| {
+                        anyhow::anyhow!("pipeline stage: missing local block {k:?}")
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let block_bytes = local_blocks
+                .first()
+                .map(|b| b.len())
+                .ok_or_else(|| anyhow::anyhow!("pipeline stage with no local blocks"))?;
+            anyhow::ensure!(
+                local_blocks.iter().all(|b| b.len() == block_bytes),
+                "local blocks of unequal size"
+            );
+            self.out = Vec::with_capacity(if self.out_key.is_some() { block_bytes } else { 0 });
+            self.init = Some((local_blocks, block_bytes));
+        }
+        let block_bytes = self.init.as_ref().expect("init set above").1;
+        let (trace_obj, trace_idx) = self.trace_identity();
+        loop {
+            match self.state {
+                StageState::Recv => {
+                    let x_in: Payload = match &self.prev {
+                        Some(rx) => match drive_recv(rx, &mut self.stash, &self.env.clock) {
+                            RecvDrive::Channel => return Ok(Some(TaskPoll::Park)),
+                            RecvDrive::Wait(at) => return Ok(Some(TaskPoll::Sleep(at))),
+                            RecvDrive::Got(Some(Frame::Data(d))) => d,
+                            RecvDrive::Got(Some(Frame::End)) => {
+                                self.state = StageState::Close;
+                                continue;
+                            }
+                            RecvDrive::Got(None) => {
+                                anyhow::bail!("upstream link dropped mid-stream")
+                            }
+                        },
+                        None => {
+                            if self.offset >= block_bytes {
+                                self.state = StageState::Close;
+                                continue;
+                            }
+                            Payload::new(vec![0u8; self.buf_bytes.min(block_bytes - self.offset)])
+                        }
+                    };
+                    let len = x_in.len();
+                    anyhow::ensure!(
+                        self.offset + len <= block_bytes,
+                        "incoming stream longer than local blocks"
+                    );
+                    let local_blocks = &self.init.as_ref().expect("init set above").0;
+                    let loc_slices: Vec<&[u8]> = local_blocks
+                        .iter()
+                        .map(|b| &b[self.offset..self.offset + len])
+                        .collect();
+                    crate::trace_emit!(
+                        self.env.cpu.clock(),
+                        self.env.cpu.node(),
+                        EventKind::FoldStart {
+                            object: trace_obj,
+                            index: trace_idx,
+                            frame: self.frame_no
+                        }
+                    );
+                    let (x_out, c) =
+                        self.backend
+                            .pipeline_step(self.width, &x_in, &loc_slices, &self.psi, &self.xi)?;
+                    let mut work = GfWork::pipeline_step(&self.psi, &self.xi, len);
+                    if self.next.len() > 1 {
+                        work += GfWork::xor((self.next.len() - 1) * len);
+                    }
+                    self.charge.begin(&self.env.cpu, &work, &mut self.compute);
+                    self.fold = Some((x_out, c, len));
+                    self.state = StageState::Fold;
+                }
+                StageState::Fold => {
+                    if let Some(at) = self.charge.pending(&self.env.clock) {
+                        return Ok(Some(TaskPoll::Sleep(at)));
+                    }
+                    let (x_out, c, len) = self.fold.take().expect("fold state without frame");
+                    crate::trace_emit!(
+                        self.env.cpu.clock(),
+                        self.env.cpu.node(),
+                        EventKind::FoldEnd {
+                            object: trace_obj,
+                            index: trace_idx,
+                            frame: self.frame_no
+                        }
+                    );
+                    self.frame_no += 1;
+                    if self.out_key.is_some() {
+                        self.out.extend_from_slice(&c);
+                    }
+                    if self.next.is_empty() {
+                        self.offset += len;
+                        self.state = StageState::Recv;
+                    } else {
+                        self.fwd = Some((Payload::new(x_out), len));
+                        self.fwd_idx = 0;
+                        self.state = StageState::Forward;
+                    }
+                }
+                StageState::Forward => {
+                    if self.fwd_idx >= self.next.len() {
+                        let (_, len) = self.fwd.take().expect("forward state without frame");
+                        self.offset += len;
+                        self.state = StageState::Recv;
+                        continue;
+                    }
+                    if self.pending.is_none() {
+                        let frame = Frame::Data(
+                            self.fwd.as_ref().expect("forward state without frame").0.clone(),
+                        );
+                        self.pending = Some(self.next[self.fwd_idx].begin_send(frame)?);
+                    }
+                    match drive_send(
+                        &mut self.next[self.fwd_idx],
+                        &mut self.pending,
+                        &self.env.clock,
+                    )? {
+                        SendDrive::Wait(at) => return Ok(Some(TaskPoll::Sleep(at))),
+                        SendDrive::Sent => self.fwd_idx += 1,
+                    }
+                }
+                StageState::Close => {
+                    if self.close_idx < self.next.len() {
+                        if self.pending.is_none() {
+                            self.pending = Some(self.next[self.close_idx].begin_send(Frame::End)?);
+                        }
+                        match drive_send(
+                            &mut self.next[self.close_idx],
+                            &mut self.pending,
+                            &self.env.clock,
+                        )? {
+                            SendDrive::Wait(at) => return Ok(Some(TaskPoll::Sleep(at))),
+                            SendDrive::Sent => self.close_idx += 1,
+                        }
+                        continue;
+                    }
+                    anyhow::ensure!(self.offset == block_bytes, "stream/block length mismatch");
+                    if self.out_key.is_none() {
+                        return Ok(None);
+                    }
+                    self.charge.begin(
+                        &self.env.cpu,
+                        &GfWork::store(self.out.len()),
+                        &mut self.compute,
+                    );
+                    self.state = StageState::Store;
+                }
+                StageState::Store => {
+                    if let Some(at) = self.charge.pending(&self.env.clock) {
+                        return Ok(Some(TaskPoll::Sleep(at)));
+                    }
+                    let key = self.out_key.expect("store state without out_key");
+                    let bytes = self.out.len();
+                    anyhow::ensure!(
+                        self.env
+                            .store
+                            .put_unless(key, mem::take(&mut self.out), &self.env.failed),
+                        "pipeline stage aborted: node has failed"
+                    );
+                    crate::trace_emit!(
+                        self.env.cpu.clock(),
+                        self.env.cpu.node(),
+                        EventKind::StoreDone {
+                            object: key.object.0,
+                            index: key.index,
+                            bytes
+                        }
+                    );
+                    return Ok(None);
+                }
+            }
+        }
+    }
+}
+
+impl Task for PipelineStageTask {
+    fn register(&self, waker: TaskWaker) {
+        if let Some(rx) = &self.prev {
+            rx.set_waker(waker);
+        }
+    }
+
+    fn poll(&mut self, _spawn: &mut Vec<Box<dyn Task>>) -> TaskPoll {
+        match self.drive() {
+            Ok(Some(wait)) => wait,
+            Ok(None) => {
+                self.env.complete(
+                    &self.done,
+                    Ok(StepStats {
+                        compute: self.compute,
+                        ..Default::default()
+                    }),
+                );
+                TaskPoll::Done
+            }
+            Err(e) => {
+                self.env.complete(&self.done, Err(e));
+                TaskPoll::Done
+            }
+        }
+    }
+}
+
+enum EncState {
+    /// Collecting one row of k source buffers.
+    Gather,
+    /// Gemm charged; waiting out the lane reservation.
+    Gemm,
+    /// Shipping/accumulating the m parity buffers, one dest at a time.
+    Ship,
+    /// All rows folded: drain the `End` frame of every remote source.
+    Drain,
+    /// Closing parity streams / landing local parities, one at a time.
+    Final,
+    /// Store-charge wait for one locally-kept parity.
+    FinalStore,
+}
+
+/// Task twin of `do_classical_encode`.
+struct ClassicalEncodeTask {
+    env: WorkerEnv,
+    width: Width,
+    sources: Vec<SourceStream>,
+    parity_rows: Vec<Vec<u32>>,
+    dests: Vec<ParityDest>,
+    buf_bytes: usize,
+    block_bytes: usize,
+    backend: BackendHandle,
+    done: clock::Sender<StepResult>,
+    started: bool,
+    local_blocks: Vec<Option<Arc<Vec<u8>>>>,
+    local_acc: Vec<Vec<u8>>,
+    compute: Tick,
+    offset: usize,
+    frame_no: usize,
+    state: EncState,
+    row: Vec<Payload>,
+    src_idx: usize,
+    stash: Option<(Tick, Frame)>,
+    pending: Option<PendingSend>,
+    charge: ChargeWait,
+    /// The current row's parity buffers, consumed by `Ship`.
+    parity: Vec<Vec<u8>>,
+    dest_idx: usize,
+    drain_idx: usize,
+    final_idx: usize,
+    /// `(key, accumulated block)` held across the final store-charge wait.
+    final_store: Option<(BlockKey, Vec<u8>)>,
+}
+
+impl ClassicalEncodeTask {
+    fn drive(&mut self) -> anyhow::Result<Option<TaskPoll>> {
+        let k = self.sources.len();
+        let m = self.parity_rows.len();
+        if !self.started {
+            self.started = true;
+            anyhow::ensure!(self.dests.len() == m, "dests/parity arity mismatch");
+            anyhow::ensure!(
+                self.parity_rows.iter().all(|r| r.len() == k),
+                "parity row arity mismatch"
+            );
+            self.local_blocks = self
+                .sources
+                .iter()
+                .map(|s| match s {
+                    SourceStream::Local(key) => {
+                        self.env.store.get(key).map(Some).ok_or_else(|| {
+                            anyhow::anyhow!("classical encode: missing local source {key:?}")
+                        })
+                    }
+                    SourceStream::Remote(_) => Ok(None),
+                })
+                .collect::<anyhow::Result<_>>()?;
+            self.local_acc = self
+                .dests
+                .iter()
+                .map(|d| match d {
+                    ParityDest::Store(_) => Vec::with_capacity(self.block_bytes),
+                    ParityDest::Stream(_) => Vec::new(),
+                })
+                .collect();
+        }
+        loop {
+            match self.state {
+                EncState::Gather => {
+                    if self.offset >= self.block_bytes {
+                        self.state = EncState::Drain;
+                        continue;
+                    }
+                    let len = self.buf_bytes.min(self.block_bytes - self.offset);
+                    while self.src_idx < k {
+                        let j = self.src_idx;
+                        match &self.sources[j] {
+                            SourceStream::Remote(rx) => {
+                                match drive_recv(rx, &mut self.stash, &self.env.clock) {
+                                    RecvDrive::Channel => return Ok(Some(TaskPoll::Park)),
+                                    RecvDrive::Wait(at) => return Ok(Some(TaskPoll::Sleep(at))),
+                                    RecvDrive::Got(Some(Frame::Data(buf))) => {
+                                        anyhow::ensure!(
+                                            buf.len() == len,
+                                            "source {j} frame size mismatch"
+                                        );
+                                        self.row.push(buf);
+                                        self.src_idx += 1;
+                                    }
+                                    RecvDrive::Got(other) => {
+                                        anyhow::bail!("source {j} stream broke: {other:?}")
+                                    }
+                                }
+                            }
+                            SourceStream::Local(_) => {
+                                let b = self.local_blocks[j]
+                                    .as_ref()
+                                    .expect("local source fetched at start");
+                                let view = Payload::from_shared(b.clone())
+                                    .slice(self.offset, self.offset + len);
+                                self.row.push(view);
+                                self.src_idx += 1;
+                            }
+                        }
+                    }
+                    let row_refs: Vec<&[u8]> = self.row.iter().map(|b| b.as_slice()).collect();
+                    crate::trace_emit!(
+                        self.env.cpu.clock(),
+                        self.env.cpu.node(),
+                        EventKind::GemmStart {
+                            rows: m,
+                            frame: self.frame_no
+                        }
+                    );
+                    self.parity = self.backend.gemm(self.width, &self.parity_rows, &row_refs)?;
+                    self.charge.begin(
+                        &self.env.cpu,
+                        &GfWork::gemm(&self.parity_rows, len),
+                        &mut self.compute,
+                    );
+                    self.state = EncState::Gemm;
+                }
+                EncState::Gemm => {
+                    if let Some(at) = self.charge.pending(&self.env.clock) {
+                        return Ok(Some(TaskPoll::Sleep(at)));
+                    }
+                    crate::trace_emit!(
+                        self.env.cpu.clock(),
+                        self.env.cpu.node(),
+                        EventKind::GemmEnd {
+                            rows: m,
+                            frame: self.frame_no
+                        }
+                    );
+                    self.frame_no += 1;
+                    self.dest_idx = 0;
+                    self.state = EncState::Ship;
+                }
+                EncState::Ship => {
+                    if self.dest_idx < m {
+                        let i = self.dest_idx;
+                        match &mut self.dests[i] {
+                            ParityDest::Stream(tx) => {
+                                if self.pending.is_none() {
+                                    let pb = mem::take(&mut self.parity[i]);
+                                    self.pending =
+                                        Some(tx.begin_send(Frame::Data(Payload::new(pb)))?);
+                                }
+                                match drive_send(tx, &mut self.pending, &self.env.clock)? {
+                                    SendDrive::Wait(at) => return Ok(Some(TaskPoll::Sleep(at))),
+                                    SendDrive::Sent => self.dest_idx += 1,
+                                }
+                            }
+                            ParityDest::Store(_) => {
+                                let pb = mem::take(&mut self.parity[i]);
+                                self.local_acc[i].extend_from_slice(&pb);
+                                self.dest_idx += 1;
+                            }
+                        }
+                        continue;
+                    }
+                    let len = self.buf_bytes.min(self.block_bytes - self.offset);
+                    self.offset += len;
+                    self.row.clear();
+                    self.src_idx = 0;
+                    self.state = EncState::Gather;
+                }
+                EncState::Drain => {
+                    while self.drain_idx < k {
+                        let j = self.drain_idx;
+                        if let SourceStream::Remote(rx) = &self.sources[j] {
+                            match drive_recv(rx, &mut self.stash, &self.env.clock) {
+                                RecvDrive::Channel => return Ok(Some(TaskPoll::Park)),
+                                RecvDrive::Wait(at) => return Ok(Some(TaskPoll::Sleep(at))),
+                                RecvDrive::Got(Some(Frame::End)) => self.drain_idx += 1,
+                                RecvDrive::Got(other) => {
+                                    anyhow::bail!("source stream missing End: {other:?}")
+                                }
+                            }
+                        } else {
+                            self.drain_idx += 1;
+                        }
+                    }
+                    self.final_idx = 0;
+                    self.state = EncState::Final;
+                }
+                EncState::Final => {
+                    if self.final_idx >= self.dests.len() {
+                        return Ok(None);
+                    }
+                    let i = self.final_idx;
+                    match &mut self.dests[i] {
+                        ParityDest::Stream(tx) => {
+                            if self.pending.is_none() {
+                                self.pending = Some(tx.begin_send(Frame::End)?);
+                            }
+                            match drive_send(tx, &mut self.pending, &self.env.clock)? {
+                                SendDrive::Wait(at) => return Ok(Some(TaskPoll::Sleep(at))),
+                                SendDrive::Sent => self.final_idx += 1,
+                            }
+                        }
+                        ParityDest::Store(key) => {
+                            let key = *key;
+                            let acc = mem::take(&mut self.local_acc[i]);
+                            self.charge.begin(
+                                &self.env.cpu,
+                                &GfWork::store(acc.len()),
+                                &mut self.compute,
+                            );
+                            self.final_store = Some((key, acc));
+                            self.state = EncState::FinalStore;
+                        }
+                    }
+                }
+                EncState::FinalStore => {
+                    if let Some(at) = self.charge.pending(&self.env.clock) {
+                        return Ok(Some(TaskPoll::Sleep(at)));
+                    }
+                    let (key, acc) = self
+                        .final_store
+                        .take()
+                        .expect("final-store state without block");
+                    let bytes = acc.len();
+                    anyhow::ensure!(
+                        self.env.store.put_unless(key, acc, &self.env.failed),
+                        "classical encode aborted: node has failed"
+                    );
+                    crate::trace_emit!(
+                        self.env.cpu.clock(),
+                        self.env.cpu.node(),
+                        EventKind::StoreDone {
+                            object: key.object.0,
+                            index: key.index,
+                            bytes
+                        }
+                    );
+                    self.final_idx += 1;
+                    self.state = EncState::Final;
+                }
+            }
+        }
+    }
+}
+
+impl Task for ClassicalEncodeTask {
+    fn register(&self, waker: TaskWaker) {
+        for s in &self.sources {
+            if let SourceStream::Remote(rx) = s {
+                rx.set_waker(waker.clone());
+            }
+        }
+    }
+
+    fn poll(&mut self, _spawn: &mut Vec<Box<dyn Task>>) -> TaskPoll {
+        match self.drive() {
+            Ok(Some(wait)) => wait,
+            Ok(None) => {
+                self.env.complete(
+                    &self.done,
+                    Ok(StepStats {
+                        compute: self.compute,
+                        ..Default::default()
+                    }),
+                );
+                TaskPoll::Done
+            }
+            Err(e) => {
+                self.env.complete(&self.done, Err(e));
+                TaskPoll::Done
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::link::{link, LinkSpec};
+    use crate::cluster::nic::RateLimiter;
+    use crate::cluster::node::{NodeHandle, DEFAULT_MAX_WORKERS};
+    use crate::resources::{UniformCost, ZeroCost};
+    use crate::storage::ObjectId;
+
+    fn nic(clock: &ClockHandle, rate: f64) -> Arc<RateLimiter> {
+        Arc::new(RateLimiter::new(clock.clone(), rate))
+    }
+
+    fn meter(clock: &ClockHandle, id: super::super::NodeId, priced: bool) -> Arc<CpuMeter> {
+        let model = if priced {
+            UniformCost::handle()
+        } else {
+            ZeroCost::handle()
+        };
+        Arc::new(CpuMeter::new(clock.clone(), model, id))
+    }
+
+    #[test]
+    fn multiplexed_control_plane_roundtrip() {
+        let clock = SimClock::handle();
+        let (node, core) = NodeHandle::multiplexed(
+            0,
+            nic(&clock, 1e9),
+            nic(&clock, 1e9),
+            meter(&clock, 0, false),
+            DEFAULT_MAX_WORKERS,
+        );
+        let rt = MultiplexedRuntime::launch(&clock, vec![core]);
+        let key = BlockKey::source(ObjectId(1), 0);
+        node.put(key, vec![1, 2, 3]).unwrap();
+        assert_eq!(*node.peek(key).unwrap().unwrap(), vec![1, 2, 3]);
+        assert!(node.delete(key).unwrap());
+        assert!(node.peek(key).unwrap().is_none());
+        drop(node); // sends Shutdown: the driver may now exit
+        drop(rt); // joins the driver
+    }
+
+    /// One rate-limited upload→receive transfer, identical under both
+    /// runtimes: same bytes, same final virtual tick.
+    fn transfer(multiplexed: bool) -> (Vec<u8>, Tick) {
+        let clock = SimClock::handle();
+        let mk = |id: usize| {
+            (
+                nic(&clock, 10_000_000.0),
+                nic(&clock, 1e9),
+                meter(&clock, id, true),
+            )
+        };
+        let (a, b, rt) = if multiplexed {
+            let (u, d, c) = mk(0);
+            let (a, ca) = NodeHandle::multiplexed(0, u, d, c, DEFAULT_MAX_WORKERS);
+            let (u, d, c) = mk(1);
+            let (b, cb) = NodeHandle::multiplexed(1, u, d, c, DEFAULT_MAX_WORKERS);
+            let rt = MultiplexedRuntime::launch(&clock, vec![ca, cb]);
+            (a, b, Some(rt))
+        } else {
+            let (u, d, c) = mk(0);
+            let a = NodeHandle::spawn(0, u, d, c, DEFAULT_MAX_WORKERS);
+            let (u, d, c) = mk(1);
+            let b = NodeHandle::spawn(1, u, d, c, DEFAULT_MAX_WORKERS);
+            (a, b, None)
+        };
+        let src = BlockKey::source(ObjectId(1), 0);
+        let dst = BlockKey::source(ObjectId(1), 1);
+        let data: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        a.put(src, data.clone()).unwrap();
+        let spec = LinkSpec {
+            latency: Duration::from_millis(1),
+            jitter: Duration::from_micros(50),
+        };
+        let (tx, rx) = link(a.up.clone(), b.down.clone(), spec, 7);
+        let (d1, w1) = clock::channel(&clock);
+        let (d2, w2) = clock::channel(&clock);
+        b.send(Command::Receive {
+            key: dst,
+            rx,
+            expect_bytes: data.len(),
+            done: d1,
+        })
+        .unwrap();
+        a.send(Command::Upload {
+            key: src,
+            tx,
+            buf_bytes: 16_384,
+            done: d2,
+        })
+        .unwrap();
+        w2.recv().unwrap().unwrap();
+        w1.recv().unwrap().unwrap();
+        let out = b.peek(dst).unwrap().unwrap().to_vec();
+        let end = clock.now();
+        drop(a);
+        drop(b);
+        drop(rt);
+        (out, end)
+    }
+
+    #[test]
+    fn upload_receive_tick_parity_with_threaded() {
+        let (bytes_t, end_t) = transfer(false);
+        let (bytes_m, end_m) = transfer(true);
+        assert_eq!(bytes_t, bytes_m, "payload bytes diverged across runtimes");
+        assert_eq!(end_t, end_m, "virtual end tick diverged across runtimes");
+        assert!(end_t > Duration::from_millis(20), "transfer was not paced");
+    }
+
+    #[test]
+    fn multiplexed_queue_overflows_past_cap() {
+        // cap 1, two concurrent receives: the second command queues, then
+        // runs after the first completes (WorkerDone refill) — exercising
+        // the node task's queue/refill path end to end.
+        let clock = SimClock::handle();
+        let (src, csrc) = NodeHandle::multiplexed(
+            0,
+            nic(&clock, 1e9),
+            nic(&clock, 1e9),
+            meter(&clock, 0, false),
+            DEFAULT_MAX_WORKERS,
+        );
+        let (dst, cdst) = NodeHandle::multiplexed(
+            1,
+            nic(&clock, 1e9),
+            nic(&clock, 1e9),
+            meter(&clock, 1, false),
+            1,
+        );
+        let rt = MultiplexedRuntime::launch(&clock, vec![csrc, cdst]);
+        let k0 = BlockKey::source(ObjectId(1), 0);
+        let k1 = BlockKey::source(ObjectId(1), 1);
+        src.put(k0, vec![7u8; 4096]).unwrap();
+        src.put(k1, vec![9u8; 4096]).unwrap();
+        let mut waits = Vec::new();
+        for (i, k) in [k0, k1].into_iter().enumerate() {
+            let (tx, rx) = link(
+                src.up.clone(),
+                dst.down.clone(),
+                LinkSpec::instant(),
+                40 + i as u64,
+            );
+            let (d1, w1) = clock::channel(&clock);
+            let (d2, w2) = clock::channel(&clock);
+            dst.send(Command::Receive {
+                key: k,
+                rx,
+                expect_bytes: 4096,
+                done: d1,
+            })
+            .unwrap();
+            src.send(Command::Upload {
+                key: k,
+                tx,
+                buf_bytes: 1024,
+                done: d2,
+            })
+            .unwrap();
+            waits.push(w1);
+            waits.push(w2);
+        }
+        for w in waits {
+            w.recv().unwrap().unwrap();
+        }
+        assert_eq!(*dst.peek(k0).unwrap().unwrap(), vec![7u8; 4096]);
+        assert_eq!(*dst.peek(k1).unwrap().unwrap(), vec![9u8; 4096]);
+        drop(src);
+        drop(dst);
+        drop(rt);
+    }
+}

@@ -243,63 +243,65 @@ impl<'a> PlanExecutor<'a> {
             inflight.push(InFlight { span, wait });
         }
 
-        // Collect completions on one blocking collector thread per step
-        // (std mpsc has no select; OS threads are this simulator's
-        // currency), so each span closes at its step's true completion
-        // instant with no polling skew. Collectors are clock participants
-        // and spawn BEFORE anything is dispatched: their busy tokens pin
-        // virtual time until every collector is parked on its completion
-        // channel, and from then on each completion signal re-counts its
-        // collector as busy at the send instant — so every span's end tick
-        // is read before virtual time can move past it. Broken links
-        // propagate failure to every dependent step, so every receiver
-        // completes even on error; the first error in step order is
-        // reported after all finish.
-        let results: Vec<anyhow::Result<()>> = std::thread::scope(|scope| {
-            let collectors: Vec<_> = inflight
-                .into_iter()
-                .enumerate()
-                .map(|(i, f)| {
-                    let token = BusyToken::new(clock);
-                    scope.spawn(move || {
-                        let _busy = token.bind();
-                        let res = f.wait.recv().unwrap_or_else(|_| {
-                            Err(anyhow::anyhow!("plan step {i} worker vanished"))
-                        });
-                        // The worker reports its charged compute ticks; the
-                        // span splits them out from transfer occupancy.
-                        let compute = res
-                            .as_ref()
-                            .map(|stats| stats.compute)
-                            .unwrap_or_default();
-                        f.span.finish_split(compute);
-                        res.map(|_| ())
-                    })
-                })
-                .collect();
-            // Dispatch only now. On a dispatch error the remaining
-            // commands (and their `done` senders) are dropped, so every
-            // already-spawned collector still unblocks via disconnect and
-            // the scope's implicit join cannot deadlock.
-            let dispatch: anyhow::Result<()> = cmds
-                .into_iter()
-                .try_for_each(|(node, cmd)| self.cluster.node(node).send(cmd));
-            let step_results: Vec<anyhow::Result<()>> = collectors
-                .into_iter()
-                .map(|c| match c.join() {
-                    Ok(res) => res,
-                    Err(_) => Err(anyhow::anyhow!("plan collector thread panicked")),
-                })
-                .collect();
-            dispatch.map(|()| step_results)
-        })?;
-        for r in results {
-            r?;
+        // Dispatch everything, then collect completions from this thread,
+        // in step order — no collector threads (the old engine burned one
+        // OS thread per step, which a 2,000-node multiplexed run cannot
+        // afford). Two invariants make single-threaded collection exact:
+        //
+        //  * The engine binds itself as a clock participant for the whole
+        //    dispatch+collect phase, so virtual time is pinned while
+        //    commands are lowered (no node can race ahead mid-dispatch —
+        //    the job the collectors' pre-dispatch busy tokens used to do),
+        //    and the clock-channel recv protocol releases the slot while
+        //    parked on each completion channel.
+        //  * Every span closes at its worker's self-stamped completion tick
+        //    ([`StepStats::finished_at`]), not at collection time, so the
+        //    recorded stage times don't depend on when this thread gets
+        //    around to reading a result that was sent while it was parked
+        //    on an earlier step — and are identical across the threaded and
+        //    multiplexed runtimes.
+        //
+        // Broken links propagate failure to every dependent step, so every
+        // channel completes (or disconnects) even on error; a dispatch
+        // error is reported first, then the first step error in step order,
+        // always after every step has been drained.
+        let _engine = BusyToken::new(clock).bind();
+        let dispatch: anyhow::Result<()> = cmds
+            .into_iter()
+            .try_for_each(|(node, cmd)| self.cluster.node(node).send(cmd));
+        let mut end = start;
+        let mut step_err: Option<anyhow::Error> = None;
+        for (i, f) in inflight.into_iter().enumerate() {
+            let res = f
+                .wait
+                .recv()
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("plan step {i} worker vanished")));
+            match res {
+                Ok(stats) => {
+                    end = end.max(stats.finished_at);
+                    // The worker reports its charged compute ticks; the
+                    // span splits them out from transfer occupancy.
+                    f.span.finish_split_at(stats.finished_at, stats.compute);
+                }
+                Err(e) => {
+                    // no completion stamp to trust: close at the current tick
+                    f.span.finish_split(Duration::ZERO);
+                    if step_err.is_none() {
+                        step_err = Some(e);
+                    }
+                }
+            }
         }
-        let makespan = clock.now().saturating_sub(start);
+        dispatch?;
+        if let Some(e) = step_err {
+            return Err(e);
+        }
+        let makespan = end.saturating_sub(start);
         // Only successful plans close their bracket; a failed plan leaves
-        // an unmatched PlanStart, which the analyzer skips.
+        // an unmatched PlanStart, which the analyzer skips. Emitted at the
+        // last step's completion tick (time may already have moved on).
         crate::trace_emit!(
+            @at end,
             clock,
             None::<NodeId>,
             crate::trace::EventKind::PlanEnd {

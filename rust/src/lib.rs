@@ -29,7 +29,7 @@
 //! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops (work-reporting), matrices, Gauss; [`gf::simd`] runtime-dispatched kernels (scalar / SSSE3 / AVX2 / NEON split-nibble `PSHUFB`/`TBL`, forced via `RAPIDRAID_FORCE_SCALAR` / `RAPIDRAID_KERNEL`) |
 //! | [`codes`] | classical Cauchy Reed-Solomon + RapidRAID code constructions, coefficient search, dependency census; [`codes::topology`] composes a schedule over any rooted shape into its generator (`TopologyShape`/`TopologyCode`), and `CodeView` is the generator-level surface decode/repair consume |
 //! | [`reliability`] | static resilience (probability of data loss, "number of 9's") |
-//! | [`cluster`] | simulated storage cluster: nodes, rate-limited links (zero-copy `Payload` frames — `Arc`-backed views, fan-out without memcpy), congestion, crash-stop failure injection (`fail_node`/`revive_node`); everything timed on the spec's clock |
+//! | [`cluster`] | simulated storage cluster: nodes, rate-limited links (zero-copy `Payload` frames — `Arc`-backed views, fan-out without memcpy), congestion, crash-stop failure injection (`fail_node`/`revive_node`); everything timed on the spec's clock. Pluggable execution runtimes (`RuntimeKind`): thread-per-node vs a multiplexed single-driver cooperative scheduler for thousands of SimClock nodes, `Auto`-resolved from the clock, observably identical (byte/tick/trace parity) |
 //! | [`storage`] | objects, blocks, replica placement, block stores |
 //! | [`coordinator`] | the archival system: ArchivalPlan IR + PlanExecutor engine, with classical/pipelined/batch/decode/migration as plan builders; degraded reads via `decode::survey_coded` |
 //! | [`coordinator::topology`] | first-class pipeline shapes: `Topology` (`Chain`/`Tree`/`Hybrid`) expanded to ordered shapes, encode/aggregate lowerings onto the plan IR, and shape-aware `PlacementPolicy` placement (`FifoPolicy`/`CongestionAwarePolicy`/`LoadAwarePolicy`, slot-weighted binding) |
@@ -38,7 +38,7 @@
 //! | [`backend`] | pluggable GF compute: native Rust vs PJRT artifacts |
 //! | [`metrics`] | clock-timed spans ([`metrics::Span`], with compute/transfer splits), percentile candles, report emitters, `BENCH_*.json` output (self-describing: `schema_version` + preset param) and a serde-free JSON parser ([`metrics::json::parse_json`], `BenchJson::from_json`) |
 //! | [`trace`] | deterministic dataplane tracing: typed [`trace::Event`] bus behind the zero-cost [`trace_emit!`] macro (frames, NIC stalls, CPU charges, fold/gemm spans, queue gauges, failure/repair/plan/epoch lifecycle), ring/JSONL sinks, Chrome-trace/Perfetto export, derived per-node/link counters and critical-path makespan attribution |
-//! | [`workload`] | long-run workload harness: seeded crash/revive/congestion/CPU-churn schedules over batch archival + repair (with CPU profile mixes and any pipeline topology), thousands of virtual seconds per wall second under `SimClock`; [`workload::sweep`] grids triggers × policies × cost profiles × topologies |
+//! | [`workload`] | long-run workload harness: seeded crash/revive/congestion/CPU-churn schedules over batch archival + repair (with CPU profile mixes and any pipeline topology), thousands of virtual seconds per wall second under `SimClock`; [`workload::sweep`] grids triggers × policies × cost profiles × topologies; the `scale-sim` preset ([`bench_scenarios`]) drives 2,048 nodes through a virtual day on the multiplexed runtime |
 //! | [`util`] | deterministic PRNG, mini property-test harness, bench timer |
 //!
 //! ## Quickstart

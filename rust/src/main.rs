@@ -17,6 +17,12 @@
 //! rapidraid bench-topo-sim [--block-kib 512] [--seed 5]       # pipeline-shape shootout:
 //!                                                             # chain vs tree vs hybrid ×
 //!                                                             # uniform/ec2-mix cost, SimClock
+//! rapidraid bench-scale-sim [--smoke] [--nodes 2048] [--rack 32]
+//!                        [--virtual-secs 86400] [--epoch-secs 1200]
+//!                        [--objects-per-epoch 32] [--block-kib 8]
+//!                        [--seed N]                           # one virtual day of rack-local
+//!                                                             # archival on 2,048 multiplexed
+//!                                                             # SimClock nodes
 //! rapidraid sim-longrun  [--virtual-secs 1000] [--epoch-secs 10]
 //!                        [--nodes 50] [--objects 8] [--seed N]
 //!                        [--topology chain|tree:F|hybrid:P:F]
@@ -27,7 +33,7 @@
 //! ```
 //!
 //! The SimClock presets (`bench-table2-sim`, `bench-topo-sim`,
-//! `sim-longrun`) additionally accept:
+//! `bench-scale-sim`, `sim-longrun`) additionally accept:
 //!
 //! ```text
 //! --trace <out.jsonl|out.perfetto.json>   record the dataplane event trace:
@@ -36,6 +42,11 @@
 //!                                         `trace-report`), any other path a
 //!                                         Chrome-trace/Perfetto timeline for
 //!                                         ui.perfetto.dev
+//! --trace-cap <events>                    bound the recorder: keep only the
+//!                                         newest N events in memory (default
+//!                                         2^20; env RAPIDRAID_TRACE_CAP) —
+//!                                         scale presets emit more events
+//!                                         than fit in RAM
 //! --calibration <BENCH_gf-hotpath.json>   price compute with rates measured
 //!                                         by `cargo bench gf_hotpath` on THIS
 //!                                         machine instead of the built-in
@@ -85,6 +96,7 @@ fn main() {
         Some("bench-repair") => cmd_bench_repair(&opts),
         Some("bench-table2-sim") => cmd_bench_table2_sim(&opts),
         Some("bench-topo-sim") => cmd_bench_topo_sim(&opts),
+        Some("bench-scale-sim") => cmd_bench_scale_sim(&opts),
         Some("sim-longrun") => cmd_sim_longrun(&opts),
         Some("trace-report") => cmd_trace_report(&opts),
         Some("sweep") => cmd_sweep(&opts),
@@ -117,6 +129,8 @@ fn usage() {
          \x20 bench-repair      single-block repair, star vs pipelined\n\
          \x20 bench-table2-sim  Table II on the SimClock, CPU cost models charged\n\
          \x20 bench-topo-sim    pipeline-shape shootout: chain vs tree vs hybrid\n\
+         \x20 bench-scale-sim   2,048-node virtual-day archival on the\n\
+         \x20                   multiplexed runtime\n\
          \x20 sim-longrun       long-run crash/repair trace on the SimClock\n\
          \x20 sweep             repair triggers x policies x cost profiles x\n\
          \x20                   pipeline topologies (chain + tree:2) grid\n\
@@ -241,10 +255,19 @@ fn calibration_from(
     Ok(Some(rates))
 }
 
-/// An installed `--trace` recording session: a process-global JSONL sink
-/// plus the output path it flushes to when finished.
+/// Default `--trace` ring capacity: one million events (~100 MB retained
+/// worst-case) — far beyond a paper-scale scenario, small enough that a
+/// scale_sim run over millions of objects cannot exhaust memory.
+const TRACE_CAP_DEFAULT: usize = 1 << 20;
+
+/// An installed `--trace` recording session: a process-global *bounded*
+/// ring (capacity `--trace-cap` / `RAPIDRAID_TRACE_CAP`) plus the output
+/// path its newest events flush to when finished. Bounding the recorder
+/// keeps `--trace` usable on scale-preset runs whose full event streams
+/// would not fit in memory; until the ring overflows the flushed JSONL is
+/// byte-identical to the old unbounded recording.
 struct TraceSession {
-    sink: std::sync::Arc<rapidraid::trace::JsonlSink>,
+    sink: std::sync::Arc<rapidraid::trace::RingSink>,
     guard: rapidraid::trace::TraceGuard,
     path: std::path::PathBuf,
 }
@@ -252,7 +275,13 @@ struct TraceSession {
 /// Install a process-global trace recorder when `--trace <path>` is given.
 fn trace_from(opts: &HashMap<String, String>) -> Option<TraceSession> {
     let path = std::path::PathBuf::from(opts.get("trace")?);
-    let sink = rapidraid::trace::JsonlSink::shared();
+    let cap = opts
+        .get("trace-cap")
+        .cloned()
+        .or_else(|| std::env::var("RAPIDRAID_TRACE_CAP").ok())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(TRACE_CAP_DEFAULT);
+    let sink = rapidraid::trace::RingSink::shared(cap);
     let guard = rapidraid::trace::install_global(sink.clone());
     Some(TraceSession { sink, guard, path })
 }
@@ -266,14 +295,21 @@ fn finish_trace(
 ) -> anyhow::Result<()> {
     let Some(t) = trace else { return Ok(()) };
     drop(t.guard);
+    if t.sink.overflowed() {
+        println!(
+            "# trace ring overflowed: kept the newest {} of {} events \
+             (raise --trace-cap / RAPIDRAID_TRACE_CAP for a full recording)",
+            t.sink.snapshot().len(),
+            t.sink.recorded()
+        );
+    }
+    let events = rapidraid::trace::canonical_order(t.sink.snapshot());
     if let Some(r) = report {
-        let events = t.sink.events();
         rapidraid::trace::derive_counters(&events).fold_into(r);
     }
     if t.path.extension().and_then(|e| e.to_str()) == Some("jsonl") {
         t.sink.write_jsonl(&t.path)?;
     } else {
-        let events = t.sink.events();
         std::fs::write(&t.path, rapidraid::trace::chrome_trace(&events))
             .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", t.path.display()))?;
     }
@@ -373,6 +409,36 @@ fn cmd_bench_topo_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     )?;
     finish_trace(trace, Some(&mut report))?;
     emit_json(&report)
+}
+
+fn cmd_bench_scale_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    use rapidraid::bench_scenarios::{scale_sim, ScaleSimConfig};
+    let mut cfg = if opts.contains_key("smoke") {
+        ScaleSimConfig::smoke()
+    } else {
+        ScaleSimConfig::paper_scale()
+    };
+    cfg.nodes = get(opts, "nodes", cfg.nodes);
+    cfg.rack = get(opts, "rack", cfg.rack);
+    cfg.virtual_secs = get(opts, "virtual-secs", cfg.virtual_secs);
+    cfg.epoch_secs = get(opts, "epoch-secs", cfg.epoch_secs);
+    cfg.objects_per_epoch = get(opts, "objects-per-epoch", cfg.objects_per_epoch);
+    cfg.block_bytes = get::<usize>(opts, "block-kib", cfg.block_bytes >> 10) << 10;
+    cfg.seed = get(opts, "seed", cfg.seed);
+    let be = backend(opts)?;
+    let trace = trace_from(opts);
+    let (report, mut bench) = {
+        let out = &mut std::io::stdout().lock();
+        scale_sim(&cfg, &be, out)?
+    };
+    finish_trace(trace, Some(&mut bench))?;
+    anyhow::ensure!(
+        report.verified == report.epochs as usize,
+        "scale-sim: {}/{} epochs verified",
+        report.verified,
+        report.epochs
+    );
+    emit_json(&bench)
 }
 
 fn cmd_sweep(opts: &HashMap<String, String>) -> anyhow::Result<()> {

@@ -155,7 +155,18 @@ impl<'a> Span<'a> {
     /// latency, upstream waits). Zero-compute runs therefore produce
     /// reports byte-identical to the pre-resource-model ones.
     pub fn finish_split(self, compute: Duration) -> Duration {
-        let dt = self.clock.now().saturating_sub(self.t0);
+        let end = self.clock.now();
+        self.finish_split_at(end, compute)
+    }
+
+    /// [`Span::finish_split`] against an explicit end tick instead of the
+    /// clock's current instant. The plan executor uses this: each step's
+    /// completion tick is stamped by the worker that finished it, so the
+    /// recorded stage time is identical whether the result is collected by
+    /// a dedicated thread (threaded runtime) or read later by the
+    /// dispatching thread (multiplexed runtime).
+    pub fn finish_split_at(self, end: Tick, compute: Duration) -> Duration {
+        let dt = end.saturating_sub(self.t0);
         if let Some(rec) = self.rec {
             rec.record(&self.series, dt);
             if !compute.is_zero() {

@@ -95,11 +95,25 @@ impl CpuMeter {
     /// the reservation ends. Returns the compute time charged — `ZERO`
     /// charges are free and do not serialize.
     pub fn charge(&self, work: &GfWork) -> Tick {
+        let (cost, done) = self.charge_reserve(work);
+        if let Some(done) = done {
+            self.clock.sleep_until(done);
+        }
+        cost
+    }
+
+    /// [`CpuMeter::charge`] without the sleep: price, emit and reserve the
+    /// lane, returning `(cost, completion tick)`. The caller owes the wait
+    /// until the completion tick (`None` for free charges) — this is the
+    /// primitive cooperatively-scheduled tasks use, where "sleep" means
+    /// yielding to the driver with a deadline instead of blocking a
+    /// thread.
+    pub fn charge_reserve(&self, work: &GfWork) -> (Tick, Option<Tick>) {
         let cost = self.model.cost(self.node, work);
         if cost.is_zero() {
             // zero charges stay emit-free too: a ZeroCost run's trace (and
             // tick schedule) is identical to the pre-resource-model one
-            return Tick::ZERO;
+            return (Tick::ZERO, None);
         }
         crate::trace_emit!(
             self.clock,
@@ -118,8 +132,7 @@ impl CpuMeter {
             lanes[lane] = done;
             done
         };
-        self.clock.sleep_until(done);
-        cost
+        (cost, Some(done))
     }
 }
 

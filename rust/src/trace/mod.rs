@@ -46,7 +46,7 @@ pub use counters::{derive_counters, LinkCounters, NodeCounters, TraceCounters};
 pub use critical::{attribute_plans, render_attribution, PlanAttribution, SlotAttribution};
 pub use perfetto::chrome_trace;
 pub use reader::{parse_event, parse_jsonl};
-pub use sink::{JsonlSink, RingSink};
+pub use sink::{canonical_order, to_canonical_jsonl, JsonlSink, RingSink};
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};

@@ -16,6 +16,32 @@ use std::sync::{Arc, Mutex};
 
 use super::{Event, TraceSink};
 
+/// Sort `events` into canonical order: by `(tick, serialized line)`. The
+/// result is a pure function of the event *multiset* — the order both
+/// sinks serialize in, independent of the OS interleaving that recorded
+/// same-tick events.
+pub fn canonical_order(events: Vec<Event>) -> Vec<Event> {
+    let mut keyed: Vec<(String, Event)> = events
+        .into_iter()
+        .map(|e| (e.to_json_line(), e))
+        .collect();
+    keyed.sort_by(|a, b| a.1.at.cmp(&b.1.at).then_with(|| a.0.cmp(&b.0)));
+    keyed.into_iter().map(|(_, e)| e).collect()
+}
+
+/// Serialize `events` as the canonical JSONL document (one event per line,
+/// trailing newline; empty string for no events). Sorts internally — the
+/// input order does not matter.
+pub fn to_canonical_jsonl(events: Vec<Event>) -> String {
+    let events = canonical_order(events);
+    let mut out = String::new();
+    for e in &events {
+        out.push_str(&e.to_json_line());
+        out.push('\n');
+    }
+    out
+}
+
 /// Bounded in-memory ring keeping the newest `capacity` events.
 #[derive(Debug)]
 pub struct RingSink {
@@ -63,6 +89,25 @@ impl RingSink {
         }
         out
     }
+
+    /// True iff events were overwritten: more than `capacity` recorded, so
+    /// [`RingSink::snapshot`] no longer holds the full multiset.
+    pub fn overflowed(&self) -> bool {
+        self.recorded() > self.slots.len()
+    }
+
+    /// The retained events serialized as canonical JSONL (sorted by
+    /// `(tick, line)` — byte-identical to a [`JsonlSink`] of the same
+    /// multiset whenever the ring did not overflow).
+    pub fn to_jsonl(&self) -> String {
+        to_canonical_jsonl(self.snapshot())
+    }
+
+    /// Write the retained events as canonical JSONL to `path`.
+    pub fn write_jsonl(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))
+    }
 }
 
 impl TraceSink for RingSink {
@@ -103,25 +148,13 @@ impl JsonlSink {
     /// This is the order [`JsonlSink::to_jsonl`] writes, independent of the
     /// OS interleaving that produced same-tick events.
     pub fn events(&self) -> Vec<Event> {
-        let events = self.events.lock().unwrap().clone();
-        let mut keyed: Vec<(String, Event)> = events
-            .into_iter()
-            .map(|e| (e.to_json_line(), e))
-            .collect();
-        keyed.sort_by(|a, b| a.1.at.cmp(&b.1.at).then_with(|| a.0.cmp(&b.0)));
-        keyed.into_iter().map(|(_, e)| e).collect()
+        canonical_order(self.events.lock().unwrap().clone())
     }
 
     /// The canonical JSONL document (one event per line, trailing newline;
     /// empty string when no events were recorded).
     pub fn to_jsonl(&self) -> String {
-        let events = self.events();
-        let mut out = String::new();
-        for e in &events {
-            out.push_str(&e.to_json_line());
-            out.push('\n');
-        }
-        out
+        to_canonical_jsonl(self.events.lock().unwrap().clone())
     }
 
     /// Write the canonical JSONL document to `path`.
@@ -198,6 +231,25 @@ mod tests {
         assert!(lines[2].contains("\"t\":20"));
         // same-tick tie broken by line text, deterministically
         assert!(lines[0] < lines[1]);
+    }
+
+    #[test]
+    fn ring_jsonl_matches_unbounded_sink_until_overflow() {
+        let ring = RingSink::new(8);
+        let full = JsonlSink::new();
+        let events = [ev(20, 1, 0), ev(10, 0, 0), ev(10, 2, 3), ev(15, 1, 1)];
+        for e in &events {
+            ring.record(e);
+            full.record(e);
+        }
+        assert!(!ring.overflowed());
+        assert_eq!(ring.to_jsonl(), full.to_jsonl());
+        // overflow: oldest events drop, flag flips
+        for i in 0..8 {
+            ring.record(&ev(30 + i, 3, 0));
+        }
+        assert!(ring.overflowed());
+        assert_eq!(ring.snapshot().len(), 8);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! in the same "candle" form the paper's Fig. 4 uses (median, 25–75%
 //! percentiles, min–max whiskers).
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::clock::{Clock, RealClock};
 
 /// Summary statistics over repeated runs of a benchmark body.
 #[derive(Clone, Debug)]
@@ -71,16 +73,19 @@ impl Candle {
     }
 }
 
-/// Run `body` `samples` times after `warmup` unmeasured runs.
+/// Run `body` `samples` times after `warmup` unmeasured runs. Wall time is
+/// read through a [`RealClock`] — the only sanctioned wall-time source
+/// (`util/` sits inside the no_wallclock grep perimeter).
 pub fn bench(name: &str, warmup: usize, samples: usize, mut body: impl FnMut()) -> Candle {
+    let wall = RealClock::handle();
     for _ in 0..warmup {
         body();
     }
     let mut out = Vec::with_capacity(samples);
     for _ in 0..samples {
-        let t0 = Instant::now();
+        let t0 = wall.now();
         body();
-        out.push(t0.elapsed());
+        out.push(wall.now().saturating_sub(t0));
     }
     out.sort_unstable();
     Candle {
@@ -91,11 +96,12 @@ pub fn bench(name: &str, warmup: usize, samples: usize, mut body: impl FnMut()) 
 
 /// Measure a single run (for long end-to-end scenarios).
 pub fn once(name: &str, body: impl FnOnce()) -> Candle {
-    let t0 = Instant::now();
+    let wall = RealClock::handle();
+    let t0 = wall.now();
     body();
     Candle {
         name: name.to_string(),
-        samples: vec![t0.elapsed()],
+        samples: vec![wall.now().saturating_sub(t0)],
     }
 }
 

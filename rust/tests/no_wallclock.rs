@@ -1,11 +1,13 @@
 //! Grep-enforcement of the virtual-time refactor: no wall-clock primitive
-//! may appear in `cluster/`, `coordinator/`, `repair/`, `resources/` or
-//! `workload/` — all time goes through the `Clock` trait, whose only wall
-//! implementation lives in `clock/` (RealClock). A reintroduced
+//! may appear in `cluster/`, `coordinator/`, `repair/`, `resources/`,
+//! `util/` or `workload/` — all time goes through the `Clock` trait, whose
+//! only wall implementation lives in `clock/` (RealClock). A reintroduced
 //! `Instant::now()` or `thread::sleep` would silently break SimClock
 //! determinism, so this test fails the build instead. (`resources/` is in
 //! scope because the `CpuMeter` must charge compute on the cluster clock;
-//! `workload/` because its traces are the determinism acceptance surface.)
+//! `workload/` because its traces are the determinism acceptance surface;
+//! `util/` because the bench timer and watchdog sit on the measurement
+//! path and must read wall time through `RealClock` only.)
 
 use std::path::{Path, PathBuf};
 
@@ -20,6 +22,7 @@ const DIRS: &[&str] = &[
     "rust/src/repair",
     "rust/src/resources",
     "rust/src/trace",
+    "rust/src/util",
     "rust/src/workload",
 ];
 

@@ -1,0 +1,216 @@
+//! The multiplexed runtime's two contracts:
+//!
+//! 1. **Parity** — same seed ⇒ byte-identical coded blocks, tick-identical
+//!    virtual durations/spans AND a byte-identical event trace, whether the
+//!    dataplane runs thread-per-node (`RuntimeKind::Threaded`) or
+//!    cooperatively scheduled on one driver (`RuntimeKind::Multiplexed`).
+//!    The runtime is an execution strategy, never an observable.
+//! 2. **Scale** — a cluster far past thread-per-node size (≥ 2,000 nodes)
+//!    lives through at least one virtual day of archival in wall-clock
+//!    seconds.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::bench_scenarios::{scale_sim, ScaleSimConfig};
+use rapidraid::clock::{Clock, RealClock, SimClock};
+use rapidraid::cluster::{Cluster, ClusterSpec, RuntimeKind};
+use rapidraid::codes::rapidraid::RapidRaidCode;
+use rapidraid::codes::TopologyCode;
+use rapidraid::coordinator::batch::{pipeline_jobs, run_batch};
+use rapidraid::coordinator::{
+    ingest_object, survey_coded, PipelineJob, PlanExecutor, Topology,
+};
+use rapidraid::gf::Gf256;
+use rapidraid::metrics::Recorder;
+use rapidraid::repair::{PipelinedRepairJob, RepairJob};
+use rapidraid::storage::{BlockKey, ObjectId, ReplicaPlacement};
+use rapidraid::util::with_timeout;
+
+const N: usize = 16;
+const K: usize = 11;
+const BLOCK: usize = 64 * 1024;
+const BUF: usize = 16 * 1024;
+
+struct RunOutcome {
+    /// Every coded block byte, in chain order (position N-1 repaired).
+    coded: Vec<Vec<u8>>,
+    /// End-to-end virtual durations: [archival, repair].
+    durations: Vec<Duration>,
+    /// Per-stage span series: (name, sorted samples).
+    spans: Vec<(String, Vec<Duration>)>,
+    /// Canonical JSONL of every dataplane event this run's clock stamped.
+    trace: String,
+}
+
+/// One archival + tail-crash + pipelined repair on a fresh SimClock
+/// cluster pinned to `kind`, with a per-clock trace sink recording every
+/// event (per-clock install: parallel tests can't pollute each other).
+fn run_once(kind: RuntimeKind, topology: Topology, code_seed: u64) -> RunOutcome {
+    let clock = SimClock::handle();
+    let sink = rapidraid::trace::JsonlSink::shared();
+    let guard = rapidraid::trace::install(&clock, sink.clone());
+    let cluster = Cluster::start(
+        ClusterSpec::tpc(N + 1)
+            .with_clock(clock.clone())
+            .with_runtime(kind),
+    );
+    assert_eq!(cluster.runtime_kind(), kind);
+    let object = ObjectId(77_000 + code_seed);
+    let placement = ReplicaPlacement::new(object, K, (0..N).collect()).unwrap();
+    ingest_object(&cluster, &placement, BLOCK).unwrap();
+    let code = RapidRaidCode::<Gf256>::with_seed(N, K, code_seed).unwrap();
+    let tcode = TopologyCode::new(code.clone(), topology.shape(N).unwrap()).unwrap();
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+
+    let rec = Recorder::new();
+    let exec = PlanExecutor::new(&cluster, backend.clone()).with_spans(&rec, "rr/");
+    let job =
+        PipelineJob::from_code_with_topology(&code, &placement, topology, BUF, BLOCK).unwrap();
+    let t_archive = exec.run(&job.plan().unwrap()).unwrap();
+
+    let lost = N - 1;
+    cluster.fail_node(lost);
+    let (avail, bb) = survey_coded(&cluster, &placement.chain, object);
+    let rjob =
+        RepairJob::from_code(&tcode, object, &placement.chain, lost, N, &avail, BUF, bb).unwrap();
+    let t_repair = exec
+        .run(&PipelinedRepairJob::with_topology(rjob, topology).plan().unwrap())
+        .unwrap();
+
+    let mut coded = Vec::with_capacity(N);
+    for pos in 0..N {
+        let holder = if pos == lost { N } else { placement.chain[pos] };
+        let block = cluster
+            .node(holder)
+            .peek(BlockKey::coded(object, pos))
+            .unwrap()
+            .unwrap();
+        coded.push((*block).clone());
+    }
+    let spans = rec
+        .candles()
+        .into_iter()
+        .map(|c| (c.name.clone(), c.samples))
+        .collect();
+    // shut the cluster down before reading the sink so late drop-path
+    // events (if any) are in both runtimes' traces alike
+    drop(exec);
+    drop(cluster);
+    drop(guard);
+    RunOutcome {
+        coded,
+        durations: vec![t_archive, t_repair],
+        spans,
+        trace: sink.to_jsonl(),
+    }
+}
+
+fn assert_parity(topology: Topology, code_seed: u64) {
+    let threaded = run_once(RuntimeKind::Threaded, topology, code_seed);
+    let multiplexed = run_once(RuntimeKind::Multiplexed, topology, code_seed);
+    let tag = format!("{topology} / seed {code_seed}");
+    assert_eq!(
+        threaded.coded, multiplexed.coded,
+        "{tag}: coded blocks diverged across runtimes"
+    );
+    assert_eq!(
+        threaded.durations, multiplexed.durations,
+        "{tag}: virtual end-to-end times diverged across runtimes"
+    );
+    assert_eq!(
+        threaded.spans, multiplexed.spans,
+        "{tag}: per-stage virtual spans diverged across runtimes"
+    );
+    assert_eq!(
+        threaded.trace, multiplexed.trace,
+        "{tag}: event traces diverged across runtimes"
+    );
+    // sanity: real measurements and a real trace, not trivial equalities
+    assert!(threaded.durations.iter().all(|d| *d > Duration::ZERO));
+    assert!(!threaded.trace.is_empty(), "{tag}: empty trace");
+}
+
+#[test]
+fn chain_parity_across_runtimes_seed_5() {
+    with_timeout(240, || assert_parity(Topology::Chain, 5));
+}
+
+#[test]
+fn chain_parity_across_runtimes_seed_12() {
+    with_timeout(240, || assert_parity(Topology::Chain, 12));
+}
+
+#[test]
+fn tree_parity_across_runtimes_seed_5() {
+    with_timeout(240, || assert_parity(Topology::Tree { fanout: 2 }, 5));
+}
+
+#[test]
+fn tree_parity_across_runtimes_seed_12() {
+    with_timeout(240, || assert_parity(Topology::Tree { fanout: 2 }, 12));
+}
+
+#[test]
+fn concurrent_batch_ticks_match_across_runtimes() {
+    // run_many's dispatch threads + the engine's collection phase must not
+    // observe the runtime either: a 4-object concurrent batch lands on the
+    // same virtual times under both.
+    let batch = |kind: RuntimeKind| -> Vec<Duration> {
+        let cluster = Cluster::start(
+            ClusterSpec::tpc(24)
+                .with_clock(SimClock::handle())
+                .with_runtime(kind),
+        );
+        let code = RapidRaidCode::<Gf256>::with_seed(N, K, 5).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let mut placements = Vec::new();
+        for i in 0..4usize {
+            let object = ObjectId(88_000 + i as u64);
+            let chain: Vec<usize> = (0..N).map(|j| (i * 5 + j) % 24).collect();
+            let placement = ReplicaPlacement::new(object, K, chain).unwrap();
+            ingest_object(&cluster, &placement, 16 * 1024).unwrap();
+            placements.push(placement);
+        }
+        let jobs =
+            pipeline_jobs(&code, &placements, Topology::Chain, 4 * 1024, 16 * 1024).unwrap();
+        run_batch(&cluster, &backend, &jobs).unwrap()
+    };
+    let (threaded, multiplexed) = with_timeout(240, || {
+        (batch(RuntimeKind::Threaded), batch(RuntimeKind::Multiplexed))
+    });
+    assert_eq!(threaded, multiplexed, "batch virtual times diverged");
+    assert!(threaded.iter().all(|d| *d > Duration::ZERO));
+}
+
+#[test]
+fn scale_acceptance_2048_nodes_one_virtual_day_in_wall_seconds() {
+    // The floors of the scale contract (≥ 2,000 nodes, ≥ 1 virtual day,
+    // < 60 s wall) at a work level a debug test build handles comfortably;
+    // `cargo bench --bench scale_sim` runs the full-throughput preset.
+    let wall = RealClock::new();
+    let cfg = ScaleSimConfig {
+        objects_per_epoch: 2,
+        block_bytes: 2 * 1024,
+        buf_bytes: 1024,
+        epoch_secs: 14_400, // 6 epochs over the virtual day
+        ..ScaleSimConfig::paper_scale()
+    };
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let (report, bench) = scale_sim(&cfg, &backend, &mut Vec::<u8>::new()).unwrap();
+    assert!(report.nodes >= 2000, "scale floor: {} nodes", report.nodes);
+    assert!(
+        report.virtual_elapsed >= Duration::from_secs(86_400),
+        "virtual-day floor: {:?}",
+        report.virtual_elapsed
+    );
+    assert_eq!(report.verified, report.epochs as usize);
+    assert_eq!(report.objects_archived, 12);
+    assert_eq!(bench.get_param("runtime"), Some("Multiplexed"));
+    let elapsed = wall.now();
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "wall budget blown: {elapsed:?}"
+    );
+}
