@@ -9,10 +9,18 @@
 //! `BENCH_gf-hotpath.json` are exactly what
 //! `UniformCost::from_measured(&BenchJson)` consumes.
 //!
+//! Two multi-output series ride along: `fused/…` compares the relay
+//! stage's two-accumulator kernel (`mul2_xor8/16`, one source read) to
+//! the two-pass decomposition it replaced, and `gemm_rows/…` compares the
+//! row-batched L1-chunked GEMM schedule to one dispatched pass per matrix
+//! cell. Their headline params are `fused_vs_two_pass_speedup` and
+//! `gemm_batched_vs_per_cell_speedup`.
+//!
 //! Run: `cargo bench --bench gf_hotpath`
 //! Env: SAMPLES (default 15, smoke 5), SEED (default 1), SMOKE=1 (small
 //! buffers — the CI configuration), REQUIRE_SPEEDUP=1 (assert the ≥ 4×
-//! GF(2^8) mul_slice_xor acceptance bar when a SIMD kernel is active).
+//! GF(2^8) mul_slice_xor acceptance bar, and the ≥ 1.5× fused-vs-two-pass
+//! bar, when a SIMD kernel is active).
 //! Writes BENCH_gf-hotpath.json.
 
 use std::sync::Arc;
@@ -113,6 +121,137 @@ fn main() {
             "acceptance: expected >= 4x for gf8 mul_slice_xor on {active}, got {speedup:.2}x"
         );
     }
+
+    // --- fused relay stage: one-pass mul2 vs the two-pass decomposition
+    // Extra accumulator so the fused kernels get two distinct outputs.
+    let mut acc2 = vec![0u8; largest];
+    rng.fill_bytes(&mut acc2);
+    let q8: u8 = 0x8E;
+    let q16: u16 = 0x8001;
+    let mut fused8_medians: Vec<(Kernel, bool, std::time::Duration)> = Vec::new();
+    for &size in sizes {
+        for &k in &kernels {
+            let iters = (target_bytes / size).max(1);
+            for one_pass in [false, true] {
+                for (wname, w16) in [("gf8", false), ("gf16", true)] {
+                    let variant = if one_pass { "one_pass" } else { "two_pass" };
+                    let name =
+                        format!("fused/{wname}/{variant}/{}/{}KiB", k.name(), size >> 10);
+                    let c = bench(&name, 1, samples, || {
+                        for _ in 0..iters {
+                            match (one_pass, w16) {
+                                (true, false) => simd::mul2_xor8(
+                                    k,
+                                    C8,
+                                    q8,
+                                    &src[..size],
+                                    &mut dst[..size],
+                                    &mut acc2[..size],
+                                ),
+                                (true, true) => simd::mul2_xor16(
+                                    k,
+                                    C16,
+                                    q16,
+                                    &src[..size],
+                                    &mut dst[..size],
+                                    &mut acc2[..size],
+                                ),
+                                (false, false) => {
+                                    simd::mul_xor8(k, C8, &src[..size], &mut dst[..size]);
+                                    simd::mul_xor8(k, q8, &src[..size], &mut acc2[..size]);
+                                }
+                                (false, true) => {
+                                    simd::mul_xor16(k, C16, &src[..size], &mut dst[..size]);
+                                    simd::mul_xor16(k, q16, &src[..size], &mut acc2[..size]);
+                                }
+                            }
+                        }
+                        std::hint::black_box((&dst, &acc2));
+                    });
+                    let mibs = throughput_mib_s(size * iters, c.median());
+                    println!("{name:<44} {mibs:>10.1} MiB/s");
+                    if !w16 && size == largest {
+                        fused8_medians.push((k, one_pass, c.median()));
+                    }
+                    report.series.push(c);
+                }
+            }
+        }
+    }
+    let fused_median_of = |k: Kernel, one_pass: bool| {
+        fused8_medians
+            .iter()
+            .find(|(mk, mo, _)| *mk == k && *mo == one_pass)
+            .map(|(_, _, d)| d.as_secs_f64())
+            .expect("fused sweep covered the kernel")
+    };
+    let fused_speedup = fused_median_of(active, false) / fused_median_of(active, true);
+    println!(
+        "# gf8 fused relay stage: one pass is {fused_speedup:.2}x two-pass on {active} at {}KiB",
+        largest >> 10
+    );
+    report = report.param("fused_vs_two_pass_speedup", format!("{fused_speedup:.3}"));
+    if env_u64("REQUIRE_SPEEDUP", 0) == 1 && active != Kernel::Scalar {
+        assert!(
+            fused_speedup >= 1.5,
+            "acceptance: expected >= 1.5x for the fused relay stage on {active}, got {fused_speedup:.2}x"
+        );
+    }
+
+    // --- row-batched GEMM vs one dispatched pass per matrix cell -------
+    let gemm_len: usize = if smoke { 16 << 10 } else { 256 << 10 };
+    let gemm_m = 4usize;
+    let gemm_k = 8usize;
+    let gemm_data_own: Vec<Vec<u8>> = (0..gemm_k)
+        .map(|_| {
+            let mut d = vec![0u8; gemm_len];
+            rng.fill_bytes(&mut d);
+            d
+        })
+        .collect();
+    let gemm_data: Vec<&[u8]> = gemm_data_own.iter().map(|d| d.as_slice()).collect();
+    // All-general coefficients: every cell is a real MAC in both schedules.
+    let gemm_mat: Vec<Vec<u32>> = (0..gemm_m)
+        .map(|r| (0..gemm_k).map(|c| (2 + r * gemm_k + c) as u32).collect())
+        .collect();
+    report = report
+        .param("gemm_rows_m", gemm_m)
+        .param("gemm_rows_k", gemm_k)
+        .param("gemm_rows_len", gemm_len);
+    let mut gemm_medians: Vec<(Kernel, bool, std::time::Duration)> = Vec::new();
+    for &k in &kernels {
+        for batched in [false, true] {
+            let variant = if batched { "batched" } else { "per_cell" };
+            let name = format!("gemm_rows/{variant}/{}", k.name());
+            let c = bench(&name, 1, samples, || {
+                let mut out = vec![vec![0u8; gemm_len]; gemm_m];
+                if batched {
+                    simd::gemm_rows8(k, &gemm_mat, &gemm_data, &mut out);
+                } else {
+                    for (row, o) in gemm_mat.iter().zip(out.iter_mut()) {
+                        for (&cf, d) in row.iter().zip(&gemm_data) {
+                            simd::mul_xor8(k, cf as u8, d, o);
+                        }
+                    }
+                }
+                std::hint::black_box(&out);
+            });
+            let mibs = throughput_mib_s(gemm_len * gemm_m * gemm_k, c.median());
+            println!("{name:<44} {mibs:>10.1} MiB/s (matrix bytes)");
+            gemm_medians.push((k, batched, c.median()));
+            report.series.push(c);
+        }
+    }
+    let gemm_median_of = |k: Kernel, batched: bool| {
+        gemm_medians
+            .iter()
+            .find(|(mk, mb, _)| *mk == k && *mb == batched)
+            .map(|(_, _, d)| d.as_secs_f64())
+            .expect("gemm sweep covered the kernel")
+    };
+    let gemm_speedup = gemm_median_of(active, false) / gemm_median_of(active, true);
+    println!("# gemm: batched rows are {gemm_speedup:.2}x per-cell on {active}");
+    report = report.param("gemm_batched_vs_per_cell_speedup", format!("{gemm_speedup:.3}"));
 
     // --- calibration series (one pass per sample, so rate = work/median)
     let cal_bytes: usize = if smoke { 64 << 10 } else { 1 << 20 };

@@ -2,7 +2,6 @@
 //! Jerasure-equivalent baseline the paper's implementation uses.
 
 use super::{EncodeBackend, Width};
-use crate::gf::field::{Gf65536, GfElem};
 use crate::gf::simd::{self, Kernel};
 
 /// Pure-Rust GF compute (no PJRT).
@@ -20,8 +19,8 @@ impl NativeBackend {
 ///
 /// Works on unaligned `&[u8]` (payloads come straight off network frames);
 /// streams through the process-wide [`Kernel`] — split-nibble vector
-/// shuffles where the CPU has them, the two-256-entry-table scalar pass
-/// otherwise.
+/// shuffles where the CPU has them, GFNI affine products on the widest
+/// tier, the two-256-entry-table scalar pass otherwise.
 fn mul_slice_xor16_bytes(c: u16, src: &[u8], dst: &mut [u8]) {
     assert_eq!(src.len(), dst.len());
     assert_eq!(src.len() % 2, 0, "GF(2^16) payload must have even length");
@@ -52,61 +51,20 @@ pub fn mul_xor_bytes(w: Width, c: u32, src: &[u8], dst: &mut [u8]) {
     }
 }
 
-/// Fused dual product table pass for GF(2^8): one read of each local byte
-/// feeds BOTH the ψ and ξ lookups (`x ^= tp[s]; c ^= tq[s]`) — mirrors the
-/// fused Pallas `pipeline_step` kernel and halves memory traffic vs two
-/// `mul_slice_xor` passes (§Perf: 440 → ~900 MiB/s on the bench host).
-fn fused_step8(p: u8, q: u8, loc: &[u8], x_out: &mut [u8], c: &mut [u8]) {
-    let t8 = crate::gf::field::Gf256::tables();
-    let build = |coef: u8| -> [u8; 256] {
-        let mut t = [0u8; 256];
-        if coef != 0 {
-            let lc = t8.log[coef as usize];
-            for (s, slot) in t.iter_mut().enumerate().skip(1) {
-                *slot = t8.exp[(lc + t8.log[s]) as usize] as u8;
-            }
-        }
-        t
-    };
-    let tp = build(p);
-    let tq = build(q);
-    for ((l, x), cc) in loc.iter().zip(x_out.iter_mut()).zip(c.iter_mut()) {
-        let s = *l as usize;
-        *x ^= tp[s];
-        *cc ^= tq[s];
-    }
-}
-
-/// Fused dual split-table pass for GF(2^16) (two 256-entry tables per
-/// coefficient; one read of each 16-bit word feeds both products).
-fn fused_step16(p: u16, q: u16, loc: &[u8], x_out: &mut [u8], c: &mut [u8]) {
-    let t16 = Gf65536::tables();
-    let build = |coef: u16| -> ([u16; 256], [u16; 256]) {
-        let mut lo = [0u16; 256];
-        let mut hi = [0u16; 256];
-        if coef != 0 {
-            let lc = t16.log[coef as usize];
-            for b in 1usize..256 {
-                lo[b] = t16.exp[(lc + t16.log[b]) as usize] as u16;
-                hi[b] = t16.exp[(lc + t16.log[b << 8]) as usize] as u16;
-            }
-        }
-        (lo, hi)
-    };
-    let (plo, phi) = build(p);
-    let (qlo, qhi) = build(q);
-    for ((l, x), cc) in loc
-        .chunks_exact(2)
-        .zip(x_out.chunks_exact_mut(2))
-        .zip(c.chunks_exact_mut(2))
-    {
-        let (b0, b1) = (l[0] as usize, l[1] as usize);
-        let xp = plo[b0] ^ phi[b1];
-        let xq = qlo[b0] ^ qhi[b1];
-        let xv = u16::from_le_bytes([x[0], x[1]]) ^ xp;
-        x.copy_from_slice(&xv.to_le_bytes());
-        let cv = u16::from_le_bytes([cc[0], cc[1]]) ^ xq;
-        cc.copy_from_slice(&cv.to_le_bytes());
+/// Fused `x ^= p·src, c ^= q·src` dispatched on width: a zero coefficient
+/// degenerates to the single-output path (so the other accumulator still
+/// gets a one-read pass), everything else takes the two-accumulator
+/// kernels — one read of each source byte feeds both products on EVERY
+/// kernel, scalar and vector alike.
+fn mul2_xor_bytes(w: Width, p: u32, q: u32, src: &[u8], x: &mut [u8], c: &mut [u8]) {
+    match (p, q) {
+        (0, 0) => {}
+        (_, 0) => mul_xor_bytes(w, p, src, x),
+        (0, _) => mul_xor_bytes(w, q, src, c),
+        _ => match w {
+            Width::W8 => simd::mul2_xor8(Kernel::active(), p as u8, q as u8, src, x, c),
+            Width::W16 => simd::mul2_xor16(Kernel::active(), p as u16, q as u16, src, x, c),
+        },
     }
 }
 
@@ -125,28 +83,12 @@ impl EncodeBackend for NativeBackend {
         );
         let mut x_out = x_in.to_vec();
         let mut c = x_in.to_vec();
-        // On the scalar kernel the fused dual-table pass wins (one read of
-        // each local byte feeds both products); on a SIMD kernel two
-        // vector passes per local beat it comfortably, so dispatch there.
-        let fused = Kernel::active() == Kernel::Scalar;
         for (j, loc) in locals.iter().enumerate() {
             anyhow::ensure!(loc.len() == x_in.len(), "local block length mismatch");
-            match w {
-                Width::W8 if fused => {
-                    fused_step8(psi[j] as u8, xi[j] as u8, loc, &mut x_out, &mut c)
-                }
-                Width::W16 if fused => {
-                    anyhow::ensure!(loc.len() % 2 == 0, "GF(2^16) length must be even");
-                    fused_step16(psi[j] as u16, xi[j] as u16, loc, &mut x_out, &mut c)
-                }
-                _ => {
-                    if w == Width::W16 {
-                        anyhow::ensure!(loc.len() % 2 == 0, "GF(2^16) length must be even");
-                    }
-                    mul_xor_bytes(w, psi[j], loc, &mut x_out);
-                    mul_xor_bytes(w, xi[j], loc, &mut c);
-                }
+            if w == Width::W16 {
+                anyhow::ensure!(loc.len() % 2 == 0, "GF(2^16) length must be even");
             }
+            mul2_xor_bytes(w, psi[j], xi[j], loc, &mut x_out, &mut c);
         }
         Ok((x_out, c))
     }
@@ -159,9 +101,17 @@ impl EncodeBackend for NativeBackend {
         parity: &mut [Vec<u8>],
     ) -> anyhow::Result<()> {
         anyhow::ensure!(coeffs.len() == parity.len(), "coefficient arity mismatch");
-        for (c, p) in coeffs.iter().zip(parity.iter_mut()) {
+        for p in parity.iter() {
             anyhow::ensure!(p.len() == src.len(), "parity buffer length mismatch");
-            mul_xor_bytes(w, *c, src, p);
+        }
+        // Parity rows fold in PAIRS so each pair shares one pass over the
+        // source block.
+        for (cs, ps) in coeffs.chunks(2).zip(parity.chunks_mut(2)) {
+            match ps {
+                [p0, p1] => mul2_xor_bytes(w, cs[0], cs[1], src, p0, p1),
+                [p0] => mul_xor_bytes(w, cs[0], src, p0),
+                _ => unreachable!("chunks(2) yields 1- or 2-row groups"),
+            }
         }
         Ok(())
     }
@@ -172,52 +122,15 @@ impl EncodeBackend for NativeBackend {
         let len = data.first().map_or(0, |d| d.len());
         anyhow::ensure!(data.iter().all(|d| d.len() == len), "ragged data blocks");
         let mut out = vec![vec![0u8; len]; mat.len()];
+        // Row-batched schedule on every kernel: L1-sized chunks of each
+        // source feed output rows in pairs (one read per pair via the
+        // fused kernels) and the chunk accumulators stay cache-hot across
+        // all k sources — see `gf::simd::gemm_rows8/16`.
         match w {
-            // Row-fused GF(2^8) path (§Perf): per output row, keep the k
-            // product tables L1-resident and accumulate in a register —
-            // one write per output byte instead of k read-modify-writes.
-            // Only worth it on the scalar kernel; the vector shuffles are
-            // faster as one dispatched pass per matrix cell.
-            Width::W8 if Kernel::active() == Kernel::Scalar => {
-                for (row, o) in mat.iter().zip(out.iter_mut()) {
-                    let t8 = crate::gf::field::Gf256::tables();
-                    let tables: Vec<[u8; 256]> = row
-                        .iter()
-                        .map(|&coef| {
-                            let mut t = [0u8; 256];
-                            if coef != 0 {
-                                let lc = t8.log[coef as usize];
-                                for (s, slot) in t.iter_mut().enumerate().skip(1) {
-                                    *slot = t8.exp[(lc + t8.log[s]) as usize] as u8;
-                                }
-                            }
-                            t
-                        })
-                        .collect();
-                    // L1-blocked accumulation: per 4 KiB chunk, one
-                    // sequential table pass per source keeps the chunk
-                    // accumulator cache-hot and lets the compiler elide
-                    // bounds checks on the zipped slices.
-                    const CHUNK: usize = 4096;
-                    let mut start = 0;
-                    while start < len {
-                        let end = (start + CHUNK).min(len);
-                        let oc = &mut o[start..end];
-                        for (t, d) in tables.iter().zip(data) {
-                            for (ob, s) in oc.iter_mut().zip(&d[start..end]) {
-                                *ob ^= t[*s as usize];
-                            }
-                        }
-                        start = end;
-                    }
-                }
-            }
-            _ => {
-                for (row, o) in mat.iter().zip(out.iter_mut()) {
-                    for (c, d) in row.iter().zip(data) {
-                        mul_xor_bytes(w, *c, d, o);
-                    }
-                }
+            Width::W8 => simd::gemm_rows8(Kernel::active(), mat, data, &mut out),
+            Width::W16 => {
+                anyhow::ensure!(len % 2 == 0, "GF(2^16) length must be even");
+                simd::gemm_rows16(Kernel::active(), mat, data, &mut out);
             }
         }
         Ok(out)
@@ -271,5 +184,20 @@ mod tests {
         be.fold_parity(Width::W16, &[1, 0], &src, &mut parity).unwrap();
         assert_eq!(parity[0], src);
         assert_eq!(parity[1], vec![0x11; 64]);
+    }
+
+    #[test]
+    fn fold_parity_odd_row_count_pairs_correctly() {
+        // 3 rows → one fused pair + one single; must equal per-row folds.
+        let be = NativeBackend::new();
+        let src: Vec<u8> = (0..96u32).map(|i| (i * 7 + 3) as u8).collect();
+        let coeffs = [3u32, 5, 9];
+        let mut parity = vec![vec![0x22u8; 96]; 3];
+        be.fold_parity(Width::W8, &coeffs, &src, &mut parity).unwrap();
+        for (c, p) in coeffs.iter().zip(&parity) {
+            let mut expect = vec![0x22u8; 96];
+            mul_xor_bytes(Width::W8, *c, &src, &mut expect);
+            assert_eq!(p, &expect, "c={c}");
+        }
     }
 }

@@ -735,6 +735,32 @@ fn do_receive(
     })
 }
 
+/// One pipeline-stage frame fold, shared by BOTH dataplane runtimes (the
+/// thread-per-node loop below and the multiplexed state machine in
+/// `cluster::runtime`): price the frame's [`GfWork`] from coefficient
+/// class + length BEFORE dispatching the fused backend step, so the two
+/// runtimes charge byte-identical work no matter which SIMD kernel runs
+/// underneath. Fan-out to extra children is *priced* as one XOR pass per
+/// extra child (the modeled duplication cost) even though the forwarded
+/// frames are refcounted views of one buffer.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fold_frame(
+    backend: &BackendHandle,
+    width: Width,
+    x_in: &[u8],
+    locals: &[&[u8]],
+    psi: &[u32],
+    xi: &[u32],
+    fanout: usize,
+) -> anyhow::Result<(Vec<u8>, Vec<u8>, GfWork)> {
+    let mut work = GfWork::pipeline_step(psi, xi, x_in.len());
+    if fanout > 1 {
+        work += GfWork::xor((fanout - 1) * x_in.len());
+    }
+    let (x_out, c) = backend.pipeline_step(width, x_in, locals, psi, xi)?;
+    Ok((x_out, c, work))
+}
+
 #[allow(clippy::too_many_arguments)]
 fn do_pipeline_stage(
     store: &BlockStore,
@@ -811,17 +837,10 @@ fn do_pipeline_stage(
                 frame: frame_no
             }
         );
-        let (x_out, c) = backend.pipeline_step(width, &x_in, &loc_slices, psi, xi)?;
         // Charge the frame's GF work BEFORE forwarding: the compute delay
         // paces the whole downstream pipeline, exactly like a slow CPU
-        // would. Fan-out to extra children is still *priced* as one XOR
-        // pass per extra child (the modeled duplication cost) even though
-        // the frames below are refcounted views of one buffer — the model
-        // charges it, the data plane no longer memcpys it.
-        let mut work = GfWork::pipeline_step(psi, xi, len);
-        if next.len() > 1 {
-            work += GfWork::xor((next.len() - 1) * len);
-        }
+        // would.
+        let (x_out, c, work) = fold_frame(backend, width, &x_in, &loc_slices, psi, xi, next.len())?;
         compute += cpu.charge(&work);
         crate::trace_emit!(
             cpu.clock(),

@@ -43,8 +43,8 @@ use std::time::Duration;
 
 use super::link::{Frame, Payload, PendingSend, Rx, RxPoll, Tx};
 use super::node::{
-    reject, stamp_finished, Command, Msg, NodeCore, ParityDest, SourceStream, StepResult,
-    StepStats, QUEUE_STALL_OVERFLOW,
+    fold_frame, reject, stamp_finished, Command, Msg, NodeCore, ParityDest, SourceStream,
+    StepResult, StepStats, QUEUE_STALL_OVERFLOW,
 };
 use crate::backend::{BackendHandle, Width};
 use crate::clock::chan::TryRecvError;
@@ -946,13 +946,15 @@ impl PipelineStageTask {
                             frame: self.frame_no
                         }
                     );
-                    let (x_out, c) =
-                        self.backend
-                            .pipeline_step(self.width, &x_in, &loc_slices, &self.psi, &self.xi)?;
-                    let mut work = GfWork::pipeline_step(&self.psi, &self.xi, len);
-                    if self.next.len() > 1 {
-                        work += GfWork::xor((self.next.len() - 1) * len);
-                    }
+                    let (x_out, c, work) = fold_frame(
+                        &self.backend,
+                        self.width,
+                        &x_in,
+                        &loc_slices,
+                        &self.psi,
+                        &self.xi,
+                        self.next.len(),
+                    )?;
                     self.charge.begin(&self.env.cpu, &work, &mut self.compute);
                     self.fold = Some((x_out, c, len));
                     self.state = StageState::Fold;

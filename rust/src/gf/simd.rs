@@ -18,12 +18,30 @@
 //! tables, stored as separate low/high byte planes for the shuffles) and
 //! de/re-interleaves the byte pairs around the lookup.
 //!
+//! On CPUs with GFNI (Ice Lake and newer) there is a still-wider tier:
+//! `GF2P8AFFINEQB` applies an arbitrary 8×8 GF(2) bit-matrix to every
+//! byte of a vector, and multiplication by a fixed coefficient is exactly
+//! such a linear map — one instruction replaces both nibble shuffles (and
+//! a 2×2 block of four matrices handles GF(2^16) on the deinterleaved
+//! byte planes). See [`affine_matrix8`]/[`affine_matrices16`].
+//!
+//! Beyond the single-coefficient ops, two *multi-output* entry points
+//! exist so the hottest loops read their source bytes once:
+//!
+//! * [`mul2_xor8`]/[`mul2_xor16`] — the fused RapidRAID relay stage
+//!   `x ^= p·s, c ^= q·s`: one source load feeds both coefficient
+//!   lookups, with both accumulators updated in registers.
+//! * [`gemm_rows8`]/[`gemm_rows16`] — row-batched GEMM: output rows are
+//!   processed in pairs per L1-blocked source pass via the fused
+//!   kernels, halving source reads vs one pass per matrix cell.
+//!
 //! Dispatch rules:
 //!
 //! * [`Kernel::active`] picks the widest runtime-detected kernel once per
 //!   process (`is_x86_feature_detected!` / NEON detection), overridable
-//!   with `RAPIDRAID_FORCE_SCALAR=1` (CI runs the whole suite a second
-//!   time this way) or `RAPIDRAID_KERNEL=<name>` for a specific backend.
+//!   with `RAPIDRAID_FORCE_SCALAR=1` or `RAPIDRAID_KERNEL=<name>` for a
+//!   specific backend (CI's tier-1 job is a forced-kernel matrix over
+//!   scalar/ssse3/avx2 plus a detection-default leg).
 //! * A requested kernel that is not available on the running CPU silently
 //!   degrades to [`Kernel::Scalar`] — the dispatch functions re-check
 //!   availability before entering any `unsafe` block, so a hand-built
@@ -45,6 +63,7 @@
 use std::sync::OnceLock;
 
 use super::field::{Gf256, Gf65536, GfElem};
+use super::tables::mul_bitwise;
 
 // The byte views used by both the scalar GF(2^16) pass and the SIMD
 // kernels assume little-endian symbol layout (as does the rest of the
@@ -63,6 +82,11 @@ pub enum Kernel {
     Avx2,
     /// aarch64 128-bit split-nibble shuffles (`TBL`).
     Neon,
+    /// x86-64 256-bit Galois-field affine instructions (`GF2P8AFFINEQB`)
+    /// — coefficients encoded as 8×8 GF(2) bit-matrices, one instruction
+    /// per 32 products. Requires GFNI *and* AVX2 (every GFNI CPU has
+    /// both).
+    Gfni,
 }
 
 fn detect_ssse3() -> bool {
@@ -98,6 +122,19 @@ fn detect_neon() -> bool {
     }
 }
 
+fn detect_gfni() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // The tier uses the 256-bit VEX form exclusively, so it needs
+        // AVX2 alongside GFNI (true of every GFNI part shipped to date).
+        std::is_x86_feature_detected!("gfni") && std::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
 /// Pure kernel-selection rule (extracted so tests can drive it without
 /// touching process environment): forced scalar wins, then an explicitly
 /// requested available kernel, then the widest detected one.
@@ -117,7 +154,13 @@ fn resolve(force_scalar: bool, requested: Option<&str>) -> Kernel {
 
 impl Kernel {
     /// Every kernel, widest last (sweep order for benches).
-    pub const ALL: [Kernel; 4] = [Kernel::Scalar, Kernel::Ssse3, Kernel::Avx2, Kernel::Neon];
+    pub const ALL: [Kernel; 5] = [
+        Kernel::Scalar,
+        Kernel::Ssse3,
+        Kernel::Avx2,
+        Kernel::Neon,
+        Kernel::Gfni,
+    ];
 
     /// Stable lowercase label (also the `RAPIDRAID_KERNEL` spelling).
     pub fn name(self) -> &'static str {
@@ -126,6 +169,7 @@ impl Kernel {
             Kernel::Ssse3 => "ssse3",
             Kernel::Avx2 => "avx2",
             Kernel::Neon => "neon",
+            Kernel::Gfni => "gfni",
         }
     }
 
@@ -141,12 +185,15 @@ impl Kernel {
             Kernel::Ssse3 => detect_ssse3(),
             Kernel::Avx2 => detect_avx2(),
             Kernel::Neon => detect_neon(),
+            Kernel::Gfni => detect_gfni(),
         }
     }
 
     /// The widest kernel the running CPU supports.
     pub fn detect() -> Kernel {
-        if detect_avx2() {
+        if detect_gfni() {
+            Kernel::Gfni
+        } else if detect_avx2() {
             Kernel::Avx2
         } else if detect_ssse3() {
             Kernel::Ssse3
@@ -246,46 +293,63 @@ fn nib_mul16(t: &[[u16; 16]; 4], x: u16) -> u16 {
 }
 
 // ---------------------------------------------------------------------------
+// GFNI affine-matrix encoding
+// ---------------------------------------------------------------------------
+
+/// Encode multiply-by-`c` over GF(2^8)/0x11D as the 8×8 GF(2) bit-matrix
+/// `GF2P8AFFINEQB` consumes.
+///
+/// The instruction computes `dst.bit[i] = parity(matrix.byte[7-i] & src)`
+/// per byte, i.e. qword byte `7-i` holds the row producing output bit `i`,
+/// and bit `k` of that row multiplies source bit `k`. Multiplication by a
+/// constant is GF(2)-linear, so row `i`, column `k` is bit `i` of
+/// `c·x^k mod 0x11D`.
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+fn affine_matrix8(c: u8) -> u64 {
+    let mut rows = [0u8; 8]; // rows[j] = matrix qword byte j
+    for k in 0..8u32 {
+        let prod = mul_bitwise(c as u32, 1 << k, 8);
+        for i in 0..8usize {
+            if prod >> i & 1 != 0 {
+                rows[7 - i] |= 1 << k;
+            }
+        }
+    }
+    u64::from_le_bytes(rows)
+}
+
+/// The four 8×8 quadrants `[ll, lh, hl, hh]` of the 16×16 GF(2) matrix
+/// for multiply-by-`c` over GF(2^16)/0x1100B, each in `GF2P8AFFINEQB`
+/// layout: on the deinterleaved little-endian byte planes,
+/// `lo' = ll·lo ⊕ lh·hi` and `hi' = hl·lo ⊕ hh·hi`.
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+fn affine_matrices16(c: u16) -> [u64; 4] {
+    let mut rows = [[0u8; 8]; 4]; // ll, lh, hl, hh
+    for k in 0..16u32 {
+        let prod = mul_bitwise(c as u32, 1 << k, 16);
+        for i in 0..16usize {
+            if prod >> i & 1 != 0 {
+                // output bits 0..7 are the lo plane (quadrants ll/lh),
+                // 8..15 the hi plane (hl/hh); input bit k picks the column
+                // plane the same way.
+                let q = 2 * (i / 8) + (k as usize) / 8;
+                rows[q][7 - (i % 8)] |= 1 << (k % 8);
+            }
+        }
+    }
+    rows.map(u64::from_le_bytes)
+}
+
+// ---------------------------------------------------------------------------
 // Scalar kernels (the always-available fallback)
 // ---------------------------------------------------------------------------
 
 mod scalar {
-    use crate::gf::field::{Gf256, Gf65536, GfElem};
-
-    /// 256-entry product table for a GF(2^8) coefficient.
-    fn table256(c: u8) -> [u8; 256] {
-        let mut t = [0u8; 256];
-        if c == 0 {
-            return t;
-        }
-        let tabs = Gf256::tables();
-        let lc = tabs.log[c as usize];
-        for (x, slot) in t.iter_mut().enumerate().skip(1) {
-            *slot = tabs.exp[(lc + tabs.log[x]) as usize] as u8;
-        }
-        t
-    }
-
-    /// Two 256-entry split-byte tables for a GF(2^16) coefficient:
-    /// `lo[b] = c·b`, `hi[b] = c·(b << 8)`.
-    fn tables65536(c: u16) -> ([u16; 256], [u16; 256]) {
-        let mut lo = [0u16; 256];
-        let mut hi = [0u16; 256];
-        if c == 0 {
-            return (lo, hi);
-        }
-        let tabs = Gf65536::tables();
-        let lc = tabs.log[c as usize];
-        for b in 1usize..256 {
-            lo[b] = tabs.exp[(lc + tabs.log[b]) as usize] as u16;
-            hi[b] = tabs.exp[(lc + tabs.log[b << 8]) as usize] as u16;
-        }
-        (lo, hi)
-    }
+    use crate::gf::tables::{product_table8, product_tables16};
 
     /// `dst ^= c·src` (XOR=true) / `dst = c·src` (XOR=false) over GF(2^8).
     pub fn mul8<const XOR: bool>(c: u8, src: &[u8], dst: &mut [u8]) {
-        let t = table256(c);
+        let t = product_table8(c);
         // 8-way unroll: keeps the table-lookup pipeline full on one core.
         let n = src.len();
         let chunks = n / 8 * 8;
@@ -322,7 +386,7 @@ mod scalar {
     /// `dst ^= c·src` / `dst = c·src` over GF(2^16) on little-endian byte
     /// pairs (length must be even; the dispatcher checks).
     pub fn mul16<const XOR: bool>(c: u16, src: &[u8], dst: &mut [u8]) {
-        let (lo, hi) = tables65536(c);
+        let (lo, hi) = product_tables16(c);
         for (d, s) in dst.chunks_exact_mut(2).zip(src.chunks_exact(2)) {
             let p = lo[s[0] as usize] ^ hi[s[1] as usize];
             let v = if XOR {
@@ -331,6 +395,36 @@ mod scalar {
                 p
             };
             d.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Fused dual-table GF(2^8) pass: `x ^= p·s, c ^= q·s` with one read
+    /// of every source byte (the former `backend::native::fused_step8`).
+    pub fn mul2_8(p: u8, q: u8, src: &[u8], x_dst: &mut [u8], c_dst: &mut [u8]) {
+        let tp = product_table8(p);
+        let tq = product_table8(q);
+        for ((s, x), c) in src.iter().zip(x_dst.iter_mut()).zip(c_dst.iter_mut()) {
+            let si = *s as usize;
+            *x ^= tp[si];
+            *c ^= tq[si];
+        }
+    }
+
+    /// Fused dual split-table GF(2^16) pass: one read of each word feeds
+    /// both products (the former `backend::native::fused_step16`).
+    pub fn mul2_16(p: u16, q: u16, src: &[u8], x_dst: &mut [u8], c_dst: &mut [u8]) {
+        let (plo, phi) = product_tables16(p);
+        let (qlo, qhi) = product_tables16(q);
+        for ((s, x), c) in src
+            .chunks_exact(2)
+            .zip(x_dst.chunks_exact_mut(2))
+            .zip(c_dst.chunks_exact_mut(2))
+        {
+            let (b0, b1) = (s[0] as usize, s[1] as usize);
+            let xv = u16::from_le_bytes([x[0], x[1]]) ^ plo[b0] ^ phi[b1];
+            x.copy_from_slice(&xv.to_le_bytes());
+            let cv = u16::from_le_bytes([c[0], c[1]]) ^ qlo[b0] ^ qhi[b1];
+            c.copy_from_slice(&cv.to_le_bytes());
         }
     }
 
@@ -557,6 +651,423 @@ mod x86 {
         i
     }
 
+    /// Fused GF(2^8) split-nibble pass: `x ^= p·s, c ^= q·s`, 16 bytes
+    /// per step — one source load feeds both coefficients' shuffles.
+    /// Returns bytes done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified SSSE3 support.
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn mul2_8_ssse3(
+        tp: (&[u8; 16], &[u8; 16]),
+        tq: (&[u8; 16], &[u8; 16]),
+        src: &[u8],
+        x_dst: &mut [u8],
+        c_dst: &mut [u8],
+    ) -> usize {
+        let plo = _mm_loadu_si128(tp.0.as_ptr() as *const __m128i);
+        let phi = _mm_loadu_si128(tp.1.as_ptr() as *const __m128i);
+        let qlo = _mm_loadu_si128(tq.0.as_ptr() as *const __m128i);
+        let qhi = _mm_loadu_si128(tq.1.as_ptr() as *const __m128i);
+        let nib = _mm_set1_epi8(0x0F);
+        let n = src.len().min(x_dst.len()).min(c_dst.len());
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let s = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let ln = _mm_and_si128(s, nib);
+            let hn = _mm_and_si128(_mm_srli_epi64::<4>(s), nib);
+            let px = _mm_xor_si128(_mm_shuffle_epi8(plo, ln), _mm_shuffle_epi8(phi, hn));
+            let qx = _mm_xor_si128(_mm_shuffle_epi8(qlo, ln), _mm_shuffle_epi8(qhi, hn));
+            let x = _mm_xor_si128(px, _mm_loadu_si128(x_dst.as_ptr().add(i) as *const __m128i));
+            let c = _mm_xor_si128(qx, _mm_loadu_si128(c_dst.as_ptr().add(i) as *const __m128i));
+            _mm_storeu_si128(x_dst.as_mut_ptr().add(i) as *mut __m128i, x);
+            _mm_storeu_si128(c_dst.as_mut_ptr().add(i) as *mut __m128i, c);
+            i += 16;
+        }
+        i
+    }
+
+    /// Fused GF(2^8) split-nibble pass, 32 bytes per step. Returns bytes
+    /// done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul2_8_avx2(
+        tp: (&[u8; 16], &[u8; 16]),
+        tq: (&[u8; 16], &[u8; 16]),
+        src: &[u8],
+        x_dst: &mut [u8],
+        c_dst: &mut [u8],
+    ) -> usize {
+        let plo = _mm256_broadcastsi128_si256(_mm_loadu_si128(tp.0.as_ptr() as *const __m128i));
+        let phi = _mm256_broadcastsi128_si256(_mm_loadu_si128(tp.1.as_ptr() as *const __m128i));
+        let qlo = _mm256_broadcastsi128_si256(_mm_loadu_si128(tq.0.as_ptr() as *const __m128i));
+        let qhi = _mm256_broadcastsi128_si256(_mm_loadu_si128(tq.1.as_ptr() as *const __m128i));
+        let nib = _mm256_set1_epi8(0x0F);
+        let n = src.len().min(x_dst.len()).min(c_dst.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let ln = _mm256_and_si256(s, nib);
+            let hn = _mm256_and_si256(_mm256_srli_epi64::<4>(s), nib);
+            let px =
+                _mm256_xor_si256(_mm256_shuffle_epi8(plo, ln), _mm256_shuffle_epi8(phi, hn));
+            let qx =
+                _mm256_xor_si256(_mm256_shuffle_epi8(qlo, ln), _mm256_shuffle_epi8(qhi, hn));
+            let x = _mm256_xor_si256(
+                px,
+                _mm256_loadu_si256(x_dst.as_ptr().add(i) as *const __m256i),
+            );
+            let c = _mm256_xor_si256(
+                qx,
+                _mm256_loadu_si256(c_dst.as_ptr().add(i) as *const __m256i),
+            );
+            _mm256_storeu_si256(x_dst.as_mut_ptr().add(i) as *mut __m256i, x);
+            _mm256_storeu_si256(c_dst.as_mut_ptr().add(i) as *mut __m256i, c);
+            i += 32;
+        }
+        i
+    }
+
+    /// Fused GF(2^16) four-nibble pass: deinterleave each 32-byte group
+    /// of source words ONCE, feed both coefficients' byte-plane shuffles,
+    /// update both destination accumulators. Returns bytes done (a
+    /// multiple of 32).
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified SSSE3 support.
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn mul2_16_ssse3(
+        tp: (&[[u8; 16]; 4], &[[u8; 16]; 4]),
+        tq: (&[[u8; 16]; 4], &[[u8; 16]; 4]),
+        src: &[u8],
+        x_dst: &mut [u8],
+        c_dst: &mut [u8],
+    ) -> usize {
+        let load4 = |p: &[[u8; 16]; 4]| -> [__m128i; 4] {
+            [
+                _mm_loadu_si128(p[0].as_ptr() as *const __m128i),
+                _mm_loadu_si128(p[1].as_ptr() as *const __m128i),
+                _mm_loadu_si128(p[2].as_ptr() as *const __m128i),
+                _mm_loadu_si128(p[3].as_ptr() as *const __m128i),
+            ]
+        };
+        let (pt, pu) = (load4(tp.0), load4(tp.1));
+        let (qt, qu) = (load4(tq.0), load4(tq.1));
+        let nib = _mm_set1_epi8(0x0F);
+        let bytemask = _mm_set1_epi16(0x00FF);
+        let n = src.len().min(x_dst.len()).min(c_dst.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let v0 = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let v1 = _mm_loadu_si128(src.as_ptr().add(i + 16) as *const __m128i);
+            let lo = _mm_packus_epi16(_mm_and_si128(v0, bytemask), _mm_and_si128(v1, bytemask));
+            let hi = _mm_packus_epi16(_mm_srli_epi16::<8>(v0), _mm_srli_epi16::<8>(v1));
+            let n0 = _mm_and_si128(lo, nib);
+            let n1 = _mm_and_si128(_mm_srli_epi64::<4>(lo), nib);
+            let n2 = _mm_and_si128(hi, nib);
+            let n3 = _mm_and_si128(_mm_srli_epi64::<4>(hi), nib);
+            let plane = |t: &[__m128i; 4]| {
+                _mm_xor_si128(
+                    _mm_xor_si128(_mm_shuffle_epi8(t[0], n0), _mm_shuffle_epi8(t[1], n1)),
+                    _mm_xor_si128(_mm_shuffle_epi8(t[2], n2), _mm_shuffle_epi8(t[3], n3)),
+                )
+            };
+            let (prlo, prhi) = (plane(&pt), plane(&pu));
+            let (qrlo, qrhi) = (plane(&qt), plane(&qu));
+            let px0 = _mm_unpacklo_epi8(prlo, prhi);
+            let px1 = _mm_unpackhi_epi8(prlo, prhi);
+            let qx0 = _mm_unpacklo_epi8(qrlo, qrhi);
+            let qx1 = _mm_unpackhi_epi8(qrlo, qrhi);
+            let x0 = _mm_xor_si128(px0, _mm_loadu_si128(x_dst.as_ptr().add(i) as *const __m128i));
+            let x1 = _mm_xor_si128(
+                px1,
+                _mm_loadu_si128(x_dst.as_ptr().add(i + 16) as *const __m128i),
+            );
+            let c0 = _mm_xor_si128(qx0, _mm_loadu_si128(c_dst.as_ptr().add(i) as *const __m128i));
+            let c1 = _mm_xor_si128(
+                qx1,
+                _mm_loadu_si128(c_dst.as_ptr().add(i + 16) as *const __m128i),
+            );
+            _mm_storeu_si128(x_dst.as_mut_ptr().add(i) as *mut __m128i, x0);
+            _mm_storeu_si128(x_dst.as_mut_ptr().add(i + 16) as *mut __m128i, x1);
+            _mm_storeu_si128(c_dst.as_mut_ptr().add(i) as *mut __m128i, c0);
+            _mm_storeu_si128(c_dst.as_mut_ptr().add(i + 16) as *mut __m128i, c1);
+            i += 32;
+        }
+        i
+    }
+
+    /// Fused GF(2^16) four-nibble pass, 64 bytes per step (lane-consistent
+    /// pack → shuffle → unpack as in `mul16_avx2`). Returns bytes done (a
+    /// multiple of 64).
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul2_16_avx2(
+        tp: (&[[u8; 16]; 4], &[[u8; 16]; 4]),
+        tq: (&[[u8; 16]; 4], &[[u8; 16]; 4]),
+        src: &[u8],
+        x_dst: &mut [u8],
+        c_dst: &mut [u8],
+    ) -> usize {
+        let load4 = |p: &[[u8; 16]; 4]| -> [__m256i; 4] {
+            [
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(p[0].as_ptr() as *const __m128i)),
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(p[1].as_ptr() as *const __m128i)),
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(p[2].as_ptr() as *const __m128i)),
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(p[3].as_ptr() as *const __m128i)),
+            ]
+        };
+        let (pt, pu) = (load4(tp.0), load4(tp.1));
+        let (qt, qu) = (load4(tq.0), load4(tq.1));
+        let nib = _mm256_set1_epi8(0x0F);
+        let bytemask = _mm256_set1_epi16(0x00FF);
+        let n = src.len().min(x_dst.len()).min(c_dst.len());
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let v0 = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let v1 = _mm256_loadu_si256(src.as_ptr().add(i + 32) as *const __m256i);
+            let lo = _mm256_packus_epi16(
+                _mm256_and_si256(v0, bytemask),
+                _mm256_and_si256(v1, bytemask),
+            );
+            let hi = _mm256_packus_epi16(_mm256_srli_epi16::<8>(v0), _mm256_srli_epi16::<8>(v1));
+            let n0 = _mm256_and_si256(lo, nib);
+            let n1 = _mm256_and_si256(_mm256_srli_epi64::<4>(lo), nib);
+            let n2 = _mm256_and_si256(hi, nib);
+            let n3 = _mm256_and_si256(_mm256_srli_epi64::<4>(hi), nib);
+            let plane = |t: &[__m256i; 4]| {
+                _mm256_xor_si256(
+                    _mm256_xor_si256(
+                        _mm256_shuffle_epi8(t[0], n0),
+                        _mm256_shuffle_epi8(t[1], n1),
+                    ),
+                    _mm256_xor_si256(
+                        _mm256_shuffle_epi8(t[2], n2),
+                        _mm256_shuffle_epi8(t[3], n3),
+                    ),
+                )
+            };
+            let (prlo, prhi) = (plane(&pt), plane(&pu));
+            let (qrlo, qrhi) = (plane(&qt), plane(&qu));
+            let px0 = _mm256_unpacklo_epi8(prlo, prhi);
+            let px1 = _mm256_unpackhi_epi8(prlo, prhi);
+            let qx0 = _mm256_unpacklo_epi8(qrlo, qrhi);
+            let qx1 = _mm256_unpackhi_epi8(qrlo, qrhi);
+            let x0 = _mm256_xor_si256(
+                px0,
+                _mm256_loadu_si256(x_dst.as_ptr().add(i) as *const __m256i),
+            );
+            let x1 = _mm256_xor_si256(
+                px1,
+                _mm256_loadu_si256(x_dst.as_ptr().add(i + 32) as *const __m256i),
+            );
+            let c0 = _mm256_xor_si256(
+                qx0,
+                _mm256_loadu_si256(c_dst.as_ptr().add(i) as *const __m256i),
+            );
+            let c1 = _mm256_xor_si256(
+                qx1,
+                _mm256_loadu_si256(c_dst.as_ptr().add(i + 32) as *const __m256i),
+            );
+            _mm256_storeu_si256(x_dst.as_mut_ptr().add(i) as *mut __m256i, x0);
+            _mm256_storeu_si256(x_dst.as_mut_ptr().add(i + 32) as *mut __m256i, x1);
+            _mm256_storeu_si256(c_dst.as_mut_ptr().add(i) as *mut __m256i, c0);
+            _mm256_storeu_si256(c_dst.as_mut_ptr().add(i + 32) as *mut __m256i, c1);
+            i += 64;
+        }
+        i
+    }
+
+    /// GF(2^8) product via `GF2P8AFFINEQB`, 32 bytes per step: one affine
+    /// instruction applies the coefficient's 8×8 bit-matrix to every
+    /// byte. Returns bytes done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified GFNI + AVX2 support.
+    #[target_feature(enable = "gfni,avx2")]
+    pub unsafe fn mul8_gfni<const XOR: bool>(m: u64, src: &[u8], dst: &mut [u8]) -> usize {
+        let a = _mm256_set1_epi64x(m as i64);
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let mut p = _mm256_gf2p8affine_epi64_epi8::<0>(s, a);
+            if XOR {
+                p = _mm256_xor_si256(
+                    p,
+                    _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i),
+                );
+            }
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, p);
+            i += 32;
+        }
+        i
+    }
+
+    /// GF(2^16) product via `GF2P8AFFINEQB`, 64 bytes per step: the
+    /// 16×16 coefficient matrix `[ll, lh, hl, hh]` acts blockwise on the
+    /// deinterleaved lo/hi byte planes (`lo' = ll·lo ⊕ lh·hi`,
+    /// `hi' = hl·lo ⊕ hh·hi`), four affines per 32 words. Returns bytes
+    /// done (a multiple of 64).
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified GFNI + AVX2 support.
+    #[target_feature(enable = "gfni,avx2")]
+    pub unsafe fn mul16_gfni<const XOR: bool>(m: &[u64; 4], src: &[u8], dst: &mut [u8]) -> usize {
+        let all = _mm256_set1_epi64x(m[0] as i64);
+        let alh = _mm256_set1_epi64x(m[1] as i64);
+        let ahl = _mm256_set1_epi64x(m[2] as i64);
+        let ahh = _mm256_set1_epi64x(m[3] as i64);
+        let bytemask = _mm256_set1_epi16(0x00FF);
+        let n = src.len().min(dst.len());
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let v0 = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let v1 = _mm256_loadu_si256(src.as_ptr().add(i + 32) as *const __m256i);
+            let lo = _mm256_packus_epi16(
+                _mm256_and_si256(v0, bytemask),
+                _mm256_and_si256(v1, bytemask),
+            );
+            let hi = _mm256_packus_epi16(_mm256_srli_epi16::<8>(v0), _mm256_srli_epi16::<8>(v1));
+            let rlo = _mm256_xor_si256(
+                _mm256_gf2p8affine_epi64_epi8::<0>(lo, all),
+                _mm256_gf2p8affine_epi64_epi8::<0>(hi, alh),
+            );
+            let rhi = _mm256_xor_si256(
+                _mm256_gf2p8affine_epi64_epi8::<0>(lo, ahl),
+                _mm256_gf2p8affine_epi64_epi8::<0>(hi, ahh),
+            );
+            let mut p0 = _mm256_unpacklo_epi8(rlo, rhi);
+            let mut p1 = _mm256_unpackhi_epi8(rlo, rhi);
+            if XOR {
+                p0 = _mm256_xor_si256(
+                    p0,
+                    _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i),
+                );
+                p1 = _mm256_xor_si256(
+                    p1,
+                    _mm256_loadu_si256(dst.as_ptr().add(i + 32) as *const __m256i),
+                );
+            }
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, p0);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i + 32) as *mut __m256i, p1);
+            i += 64;
+        }
+        i
+    }
+
+    /// Fused GF(2^8) `GF2P8AFFINEQB` pass: one source load, two affine
+    /// products, both accumulators updated. Returns bytes done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified GFNI + AVX2 support.
+    #[target_feature(enable = "gfni,avx2")]
+    pub unsafe fn mul2_8_gfni(
+        mp: u64,
+        mq: u64,
+        src: &[u8],
+        x_dst: &mut [u8],
+        c_dst: &mut [u8],
+    ) -> usize {
+        let ap = _mm256_set1_epi64x(mp as i64);
+        let aq = _mm256_set1_epi64x(mq as i64);
+        let n = src.len().min(x_dst.len()).min(c_dst.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let x = _mm256_xor_si256(
+                _mm256_gf2p8affine_epi64_epi8::<0>(s, ap),
+                _mm256_loadu_si256(x_dst.as_ptr().add(i) as *const __m256i),
+            );
+            let c = _mm256_xor_si256(
+                _mm256_gf2p8affine_epi64_epi8::<0>(s, aq),
+                _mm256_loadu_si256(c_dst.as_ptr().add(i) as *const __m256i),
+            );
+            _mm256_storeu_si256(x_dst.as_mut_ptr().add(i) as *mut __m256i, x);
+            _mm256_storeu_si256(c_dst.as_mut_ptr().add(i) as *mut __m256i, c);
+            i += 32;
+        }
+        i
+    }
+
+    /// Fused GF(2^16) `GF2P8AFFINEQB` pass: deinterleave once, apply both
+    /// coefficients' quadrant matrices, update both accumulators. Returns
+    /// bytes done (a multiple of 64).
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified GFNI + AVX2 support.
+    #[target_feature(enable = "gfni,avx2")]
+    pub unsafe fn mul2_16_gfni(
+        mp: &[u64; 4],
+        mq: &[u64; 4],
+        src: &[u8],
+        x_dst: &mut [u8],
+        c_dst: &mut [u8],
+    ) -> usize {
+        let load4 = |m: &[u64; 4]| -> [__m256i; 4] {
+            [
+                _mm256_set1_epi64x(m[0] as i64),
+                _mm256_set1_epi64x(m[1] as i64),
+                _mm256_set1_epi64x(m[2] as i64),
+                _mm256_set1_epi64x(m[3] as i64),
+            ]
+        };
+        let p = load4(mp);
+        let q = load4(mq);
+        let bytemask = _mm256_set1_epi16(0x00FF);
+        let n = src.len().min(x_dst.len()).min(c_dst.len());
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let v0 = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let v1 = _mm256_loadu_si256(src.as_ptr().add(i + 32) as *const __m256i);
+            let lo = _mm256_packus_epi16(
+                _mm256_and_si256(v0, bytemask),
+                _mm256_and_si256(v1, bytemask),
+            );
+            let hi = _mm256_packus_epi16(_mm256_srli_epi16::<8>(v0), _mm256_srli_epi16::<8>(v1));
+            let planes = |a: &[__m256i; 4]| {
+                (
+                    _mm256_xor_si256(
+                        _mm256_gf2p8affine_epi64_epi8::<0>(lo, a[0]),
+                        _mm256_gf2p8affine_epi64_epi8::<0>(hi, a[1]),
+                    ),
+                    _mm256_xor_si256(
+                        _mm256_gf2p8affine_epi64_epi8::<0>(lo, a[2]),
+                        _mm256_gf2p8affine_epi64_epi8::<0>(hi, a[3]),
+                    ),
+                )
+            };
+            let (prlo, prhi) = planes(&p);
+            let (qrlo, qrhi) = planes(&q);
+            let x0 = _mm256_xor_si256(
+                _mm256_unpacklo_epi8(prlo, prhi),
+                _mm256_loadu_si256(x_dst.as_ptr().add(i) as *const __m256i),
+            );
+            let x1 = _mm256_xor_si256(
+                _mm256_unpackhi_epi8(prlo, prhi),
+                _mm256_loadu_si256(x_dst.as_ptr().add(i + 32) as *const __m256i),
+            );
+            let c0 = _mm256_xor_si256(
+                _mm256_unpacklo_epi8(qrlo, qrhi),
+                _mm256_loadu_si256(c_dst.as_ptr().add(i) as *const __m256i),
+            );
+            let c1 = _mm256_xor_si256(
+                _mm256_unpackhi_epi8(qrlo, qrhi),
+                _mm256_loadu_si256(c_dst.as_ptr().add(i + 32) as *const __m256i),
+            );
+            _mm256_storeu_si256(x_dst.as_mut_ptr().add(i) as *mut __m256i, x0);
+            _mm256_storeu_si256(x_dst.as_mut_ptr().add(i + 32) as *mut __m256i, x1);
+            _mm256_storeu_si256(c_dst.as_mut_ptr().add(i) as *mut __m256i, c0);
+            _mm256_storeu_si256(c_dst.as_mut_ptr().add(i + 32) as *mut __m256i, c1);
+            i += 64;
+        }
+        i
+    }
+
     /// `dst ^= src`, 16 bytes per step (SSE2 is x86-64 baseline). Returns
     /// bytes done.
     ///
@@ -692,6 +1203,109 @@ mod neon {
         i
     }
 
+    /// Fused GF(2^8) split-nibble pass: `x ^= p·s, c ^= q·s`, 16 bytes
+    /// per step — one `TBL` source load feeds both coefficients. Returns
+    /// bytes done.
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified NEON support.
+    pub unsafe fn mul2_8_neon(
+        tp: (&[u8; 16], &[u8; 16]),
+        tq: (&[u8; 16], &[u8; 16]),
+        src: &[u8],
+        x_dst: &mut [u8],
+        c_dst: &mut [u8],
+    ) -> usize {
+        let plo = vld1q_u8(tp.0.as_ptr());
+        let phi = vld1q_u8(tp.1.as_ptr());
+        let qlo = vld1q_u8(tq.0.as_ptr());
+        let qhi = vld1q_u8(tq.1.as_ptr());
+        let nib = vdupq_n_u8(0x0F);
+        let n = src.len().min(x_dst.len()).min(c_dst.len());
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let s = vld1q_u8(src.as_ptr().add(i));
+            let ln = vandq_u8(s, nib);
+            let hn = vshrq_n_u8::<4>(s);
+            let px = veorq_u8(vqtbl1q_u8(plo, ln), vqtbl1q_u8(phi, hn));
+            let qx = veorq_u8(vqtbl1q_u8(qlo, ln), vqtbl1q_u8(qhi, hn));
+            vst1q_u8(
+                x_dst.as_mut_ptr().add(i),
+                veorq_u8(px, vld1q_u8(x_dst.as_ptr().add(i))),
+            );
+            vst1q_u8(
+                c_dst.as_mut_ptr().add(i),
+                veorq_u8(qx, vld1q_u8(c_dst.as_ptr().add(i))),
+            );
+            i += 16;
+        }
+        i
+    }
+
+    /// Fused GF(2^16) four-nibble pass: `UZP`-deinterleave the 16 source
+    /// words once, feed both coefficients' byte-plane `TBL`s, update both
+    /// accumulators. Returns bytes done (a multiple of 32).
+    ///
+    /// # Safety
+    /// Caller must have runtime-verified NEON support.
+    pub unsafe fn mul2_16_neon(
+        tp: (&[[u8; 16]; 4], &[[u8; 16]; 4]),
+        tq: (&[[u8; 16]; 4], &[[u8; 16]; 4]),
+        src: &[u8],
+        x_dst: &mut [u8],
+        c_dst: &mut [u8],
+    ) -> usize {
+        let load4 = |p: &[[u8; 16]; 4]| -> [uint8x16_t; 4] {
+            [
+                vld1q_u8(p[0].as_ptr()),
+                vld1q_u8(p[1].as_ptr()),
+                vld1q_u8(p[2].as_ptr()),
+                vld1q_u8(p[3].as_ptr()),
+            ]
+        };
+        let (pt, pu) = (load4(tp.0), load4(tp.1));
+        let (qt, qu) = (load4(tq.0), load4(tq.1));
+        let nib = vdupq_n_u8(0x0F);
+        let n = src.len().min(x_dst.len()).min(c_dst.len());
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let v0 = vld1q_u8(src.as_ptr().add(i));
+            let v1 = vld1q_u8(src.as_ptr().add(i + 16));
+            let lo = vuzp1q_u8(v0, v1);
+            let hi = vuzp2q_u8(v0, v1);
+            let n0 = vandq_u8(lo, nib);
+            let n1 = vshrq_n_u8::<4>(lo);
+            let n2 = vandq_u8(hi, nib);
+            let n3 = vshrq_n_u8::<4>(hi);
+            let plane = |t: &[uint8x16_t; 4]| {
+                veorq_u8(
+                    veorq_u8(vqtbl1q_u8(t[0], n0), vqtbl1q_u8(t[1], n1)),
+                    veorq_u8(vqtbl1q_u8(t[2], n2), vqtbl1q_u8(t[3], n3)),
+                )
+            };
+            let (prlo, prhi) = (plane(&pt), plane(&pu));
+            let (qrlo, qrhi) = (plane(&qt), plane(&qu));
+            vst1q_u8(
+                x_dst.as_mut_ptr().add(i),
+                veorq_u8(vzip1q_u8(prlo, prhi), vld1q_u8(x_dst.as_ptr().add(i))),
+            );
+            vst1q_u8(
+                x_dst.as_mut_ptr().add(i + 16),
+                veorq_u8(vzip2q_u8(prlo, prhi), vld1q_u8(x_dst.as_ptr().add(i + 16))),
+            );
+            vst1q_u8(
+                c_dst.as_mut_ptr().add(i),
+                veorq_u8(vzip1q_u8(qrlo, qrhi), vld1q_u8(c_dst.as_ptr().add(i))),
+            );
+            vst1q_u8(
+                c_dst.as_mut_ptr().add(i + 16),
+                veorq_u8(vzip2q_u8(qrlo, qrhi), vld1q_u8(c_dst.as_ptr().add(i + 16))),
+            );
+            i += 32;
+        }
+        i
+    }
+
     /// `dst ^= src`, 16 bytes per step. Returns bytes done.
     ///
     /// # Safety
@@ -739,6 +1353,9 @@ fn mul8_dispatch<const XOR: bool>(k: Kernel, c: u8, src: &[u8], dst: &mut [u8]) 
         #[cfg(target_arch = "x86_64")]
         // SAFETY: as above.
         Kernel::Avx2 => unsafe { x86::mul8_avx2::<XOR>(&tlo, &thi, src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above (GFNI + AVX2 both verified).
+        Kernel::Gfni => unsafe { x86::mul8_gfni::<XOR>(affine_matrix8(c), src, dst) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: as above.
         Kernel::Neon => unsafe { neon::mul8_neon::<XOR>(&tlo, &thi, src, dst) },
@@ -773,6 +1390,9 @@ fn mul16_dispatch<const XOR: bool>(k: Kernel, c: u16, src: &[u8], dst: &mut [u8]
         #[cfg(target_arch = "x86_64")]
         // SAFETY: as above.
         Kernel::Avx2 => unsafe { x86::mul16_avx2::<XOR>(&plo, &phi, src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above (GFNI + AVX2 both verified).
+        Kernel::Gfni => unsafe { x86::mul16_gfni::<XOR>(&affine_matrices16(c), src, dst) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: as above.
         Kernel::Neon => unsafe { neon::mul16_neon::<XOR>(&plo, &phi, src, dst) },
@@ -830,8 +1450,8 @@ pub fn xor_bytes(k: Kernel, src: &[u8], dst: &mut [u8]) {
         // SAFETY: plain slices; SSE2 is x86-64 baseline.
         Kernel::Ssse3 => unsafe { x86::xor_sse2(src, dst) },
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: `usable` verified AVX2 at runtime.
-        Kernel::Avx2 => unsafe { x86::xor_avx2(src, dst) },
+        // SAFETY: `usable` verified AVX2 at runtime (Gfni implies AVX2).
+        Kernel::Avx2 | Kernel::Gfni => unsafe { x86::xor_avx2(src, dst) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: `usable` verified NEON at runtime.
         Kernel::Neon => unsafe { neon::xor_neon(src, dst) },
@@ -839,6 +1459,207 @@ pub fn xor_bytes(k: Kernel, src: &[u8], dst: &mut [u8]) {
     };
     for i in done..src.len() {
         dst[i] ^= src[i];
+    }
+}
+
+/// Fused two-coefficient pass over GF(2^8):
+/// `x_dst[i] ^= p·src[i], c_dst[i] ^= q·src[i]` in ONE read of each
+/// source byte — the RapidRAID relay stage (`x_out = x_in ⊕ ψ·loc,
+/// c ⊕= ξ·loc`) as a single kernel. Handles every coefficient (0 and 1
+/// included — their product tables degenerate correctly); callers may
+/// still decompose those classes earlier for work accounting.
+pub fn mul2_xor8(k: Kernel, p: u8, q: u8, src: &[u8], x_dst: &mut [u8], c_dst: &mut [u8]) {
+    assert_eq!(src.len(), x_dst.len());
+    assert_eq!(src.len(), c_dst.len());
+    let k = usable(k);
+    if k == Kernel::Scalar {
+        scalar::mul2_8(p, q, src, x_dst, c_dst);
+        return;
+    }
+    let (plo, phi) = nib_tables8(p);
+    let (qlo, qhi) = nib_tables8(q);
+    let done = match k {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `usable` verified the feature at runtime.
+        Kernel::Ssse3 => unsafe {
+            x86::mul2_8_ssse3((&plo, &phi), (&qlo, &qhi), src, x_dst, c_dst)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Kernel::Avx2 => unsafe { x86::mul2_8_avx2((&plo, &phi), (&qlo, &qhi), src, x_dst, c_dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above (GFNI + AVX2 both verified).
+        Kernel::Gfni => unsafe {
+            x86::mul2_8_gfni(affine_matrix8(p), affine_matrix8(q), src, x_dst, c_dst)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Kernel::Neon => unsafe { neon::mul2_8_neon((&plo, &phi), (&qlo, &qhi), src, x_dst, c_dst) },
+        _ => 0,
+    };
+    for i in done..src.len() {
+        let s = src[i];
+        x_dst[i] ^= plo[(s & 0x0F) as usize] ^ phi[(s >> 4) as usize];
+        c_dst[i] ^= qlo[(s & 0x0F) as usize] ^ qhi[(s >> 4) as usize];
+    }
+}
+
+/// Fused two-coefficient pass over GF(2^16) little-endian byte pairs
+/// (length must be even): `x_dst ^= p·src, c_dst ^= q·src` in one source
+/// read. Works on any byte alignment.
+pub fn mul2_xor16(k: Kernel, p: u16, q: u16, src: &[u8], x_dst: &mut [u8], c_dst: &mut [u8]) {
+    assert_eq!(src.len(), x_dst.len());
+    assert_eq!(src.len(), c_dst.len());
+    assert_eq!(src.len() % 2, 0, "GF(2^16) payload must have even length");
+    let k = usable(k);
+    if k == Kernel::Scalar {
+        scalar::mul2_16(p, q, src, x_dst, c_dst);
+        return;
+    }
+    let tp = nib_tables16(p);
+    let tq = nib_tables16(q);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    let (pp, ph) = planes16(&tp);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    let (qp, qh) = planes16(&tq);
+    let done = match k {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `usable` verified the feature at runtime.
+        Kernel::Ssse3 => unsafe { x86::mul2_16_ssse3((&pp, &ph), (&qp, &qh), src, x_dst, c_dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Kernel::Avx2 => unsafe { x86::mul2_16_avx2((&pp, &ph), (&qp, &qh), src, x_dst, c_dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above (GFNI + AVX2 both verified).
+        Kernel::Gfni => unsafe {
+            x86::mul2_16_gfni(&affine_matrices16(p), &affine_matrices16(q), src, x_dst, c_dst)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Kernel::Neon => unsafe { neon::mul2_16_neon((&pp, &ph), (&qp, &qh), src, x_dst, c_dst) },
+        _ => 0,
+    };
+    let n = src.len();
+    let mut i = done;
+    while i < n {
+        let s = u16::from_le_bytes([src[i], src[i + 1]]);
+        let xv = u16::from_le_bytes([x_dst[i], x_dst[i + 1]]) ^ nib_mul16(&tp, s);
+        x_dst[i..i + 2].copy_from_slice(&xv.to_le_bytes());
+        let cv = u16::from_le_bytes([c_dst[i], c_dst[i + 1]]) ^ nib_mul16(&tq, s);
+        c_dst[i..i + 2].copy_from_slice(&cv.to_le_bytes());
+        i += 2;
+    }
+}
+
+/// L1 block size for the row-batched GEMM: each chunk's accumulators stay
+/// cache-hot across the k source passes.
+const GEMM_CHUNK: usize = 4096;
+
+/// One GF(2^8) matrix cell: `dst ^= c·src` with the coefficient-class
+/// shortcuts (0 → skip, 1 → XOR) applied at the cell level.
+fn gemm_cell8(k: Kernel, c: u8, src: &[u8], dst: &mut [u8]) {
+    match c {
+        0 => {}
+        1 => xor_bytes(k, src, dst),
+        _ => mul_xor8(k, c, src, dst),
+    }
+}
+
+fn gemm_cell16(k: Kernel, c: u16, src: &[u8], dst: &mut [u8]) {
+    match c {
+        0 => {}
+        1 => xor_bytes(k, src, dst),
+        _ => mul_xor16(k, c, src, dst),
+    }
+}
+
+/// Row-batched GF(2^8) GEMM: `out[r] ^= Σ_j mat[r][j]·data[j]`, walking
+/// the sources in L1-sized chunks with output rows interleaved in PAIRS —
+/// each chunk of each source is read once per row pair (via
+/// [`mul2_xor8`]) instead of once per row, and the chunk accumulators
+/// stay cache-resident across all k sources. Shapes must agree
+/// (`mat[r].len() == data.len()`, all blocks the same length as every
+/// `out[r]`); accumulates into `out` (callers zero-fill for a plain
+/// product).
+pub fn gemm_rows8(k: Kernel, mat: &[Vec<u32>], data: &[&[u8]], out: &mut [Vec<u8>]) {
+    assert_eq!(mat.len(), out.len());
+    let len = out.first().map_or(0, |o| o.len());
+    let mut start = 0usize;
+    while start < len {
+        let end = (start + GEMM_CHUNK).min(len);
+        for (rows, outs) in mat.chunks(2).zip(out.chunks_mut(2)) {
+            match outs {
+                [o0, o1] => {
+                    for (j, d) in data.iter().enumerate() {
+                        let (p, q) = (rows[0][j] as u8, rows[1][j] as u8);
+                        let src = &d[start..end];
+                        match (p, q) {
+                            (0, 0) => {}
+                            (_, 0) => gemm_cell8(k, p, src, &mut o0[start..end]),
+                            (0, _) => gemm_cell8(k, q, src, &mut o1[start..end]),
+                            _ => mul2_xor8(
+                                k,
+                                p,
+                                q,
+                                src,
+                                &mut o0[start..end],
+                                &mut o1[start..end],
+                            ),
+                        }
+                    }
+                }
+                [o0] => {
+                    for (j, d) in data.iter().enumerate() {
+                        gemm_cell8(k, rows[0][j] as u8, &d[start..end], &mut o0[start..end]);
+                    }
+                }
+                _ => unreachable!("chunks(2) yields 1- or 2-row groups"),
+            }
+        }
+        start = end;
+    }
+}
+
+/// Row-batched GF(2^16) GEMM over little-endian byte pairs — same
+/// pair-of-rows, L1-chunked schedule as [`gemm_rows8`]. Block length must
+/// be even.
+pub fn gemm_rows16(k: Kernel, mat: &[Vec<u32>], data: &[&[u8]], out: &mut [Vec<u8>]) {
+    assert_eq!(mat.len(), out.len());
+    let len = out.first().map_or(0, |o| o.len());
+    assert_eq!(len % 2, 0, "GF(2^16) payload must have even length");
+    let mut start = 0usize;
+    while start < len {
+        let end = (start + GEMM_CHUNK).min(len);
+        for (rows, outs) in mat.chunks(2).zip(out.chunks_mut(2)) {
+            match outs {
+                [o0, o1] => {
+                    for (j, d) in data.iter().enumerate() {
+                        let (p, q) = (rows[0][j] as u16, rows[1][j] as u16);
+                        let src = &d[start..end];
+                        match (p, q) {
+                            (0, 0) => {}
+                            (_, 0) => gemm_cell16(k, p, src, &mut o0[start..end]),
+                            (0, _) => gemm_cell16(k, q, src, &mut o1[start..end]),
+                            _ => mul2_xor16(
+                                k,
+                                p,
+                                q,
+                                src,
+                                &mut o0[start..end],
+                                &mut o1[start..end],
+                            ),
+                        }
+                    }
+                }
+                [o0] => {
+                    for (j, d) in data.iter().enumerate() {
+                        gemm_cell16(k, rows[0][j] as u16, &d[start..end], &mut o0[start..end]);
+                    }
+                }
+                _ => unreachable!("chunks(2) yields 1- or 2-row groups"),
+            }
+        }
+        start = end;
     }
 }
 
@@ -1020,6 +1841,142 @@ mod tests {
         let t = nib_tables16(0x1234);
         for x in [0u32, 1, 0xFF, 0x100, 0xABCD, 0xFFFF] {
             assert_eq!(nib_mul16(&t, x as u16) as u32, mul_bitwise(0x1234, x, 16), "x={x}");
+        }
+    }
+
+    /// Scalar reference for the affine encoding: apply the 8×8 bit-matrix
+    /// exactly as `GF2P8AFFINEQB` does (row i in qword byte 7-i,
+    /// `dst.bit[i] = parity(row & src)`).
+    fn affine_apply8(m: u64, x: u8) -> u8 {
+        let rows = m.to_le_bytes();
+        let mut out = 0u8;
+        for (i, row) in rows.iter().enumerate() {
+            if (row & x).count_ones() & 1 != 0 {
+                out |= 1 << (7 - i);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn affine_matrix8_encodes_the_product() {
+        for c in [0u8, 1, 2, 3, 0x53, 0x8E, 255] {
+            let m = affine_matrix8(c);
+            for x in 0u32..256 {
+                assert_eq!(
+                    affine_apply8(m, x as u8) as u32,
+                    mul_bitwise(c as u32, x, 8),
+                    "c={c} x={x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affine_matrices16_encode_the_product_blockwise() {
+        for c in [0u16, 1, 2, 0x1234, 0x8001, 0xFFFF] {
+            let [ll, lh, hl, hh] = affine_matrices16(c);
+            for x in [0u32, 1, 0xFF, 0x100, 0xABCD, 0x8000, 0xFFFF] {
+                let (xlo, xhi) = (x as u8, (x >> 8) as u8);
+                let rlo = affine_apply8(ll, xlo) ^ affine_apply8(lh, xhi);
+                let rhi = affine_apply8(hl, xlo) ^ affine_apply8(hh, xhi);
+                let got = u16::from_le_bytes([rlo, rhi]) as u32;
+                assert_eq!(got, mul_bitwise(c as u32, x, 16), "c={c:#x} x={x:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul2_xor8_matches_two_single_passes() {
+        let mut rng = SplitMix64::new(21);
+        let base_src: Vec<u8> = (0..600).map(|_| rng.next_u64() as u8).collect();
+        let base_x: Vec<u8> = (0..600).map(|_| rng.next_u64() as u8).collect();
+        let base_c: Vec<u8> = (0..600).map(|_| rng.next_u64() as u8).collect();
+        for k in Kernel::available_kernels() {
+            for (p, q) in [(0u8, 0u8), (1, 0x53), (0x53, 1), (0x8E, 0xF0), (255, 2)] {
+                for len in LENS {
+                    for off in 0..3usize {
+                        let src = &base_src[off..off + len];
+                        let mut x = base_x[off..off + len].to_vec();
+                        let mut c = base_c[off..off + len].to_vec();
+                        mul2_xor8(k, p, q, src, &mut x, &mut c);
+                        let mut ex = base_x[off..off + len].to_vec();
+                        let mut ec = base_c[off..off + len].to_vec();
+                        mul_xor8(Kernel::Scalar, p, src, &mut ex);
+                        mul_xor8(Kernel::Scalar, q, src, &mut ec);
+                        assert_eq!(x, ex, "x: k={k} p={p} q={q} len={len} off={off}");
+                        assert_eq!(c, ec, "c: k={k} p={p} q={q} len={len} off={off}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul2_xor16_matches_two_single_passes() {
+        let mut rng = SplitMix64::new(22);
+        let base_src: Vec<u8> = (0..800).map(|_| rng.next_u64() as u8).collect();
+        let base_x: Vec<u8> = (0..800).map(|_| rng.next_u64() as u8).collect();
+        let base_c: Vec<u8> = (0..800).map(|_| rng.next_u64() as u8).collect();
+        for k in Kernel::available_kernels() {
+            for (p, q) in [(0u16, 0u16), (1, 0x1234), (0x1234, 1), (0x8001, 0xFFFF)] {
+                for len in LENS.map(|l| l / 2 * 2) {
+                    for off in [0usize, 1, 2, 3] {
+                        let src = &base_src[off..off + len];
+                        let mut x = base_x[off..off + len].to_vec();
+                        let mut c = base_c[off..off + len].to_vec();
+                        mul2_xor16(k, p, q, src, &mut x, &mut c);
+                        let mut ex = base_x[off..off + len].to_vec();
+                        let mut ec = base_c[off..off + len].to_vec();
+                        mul_xor16(Kernel::Scalar, p, src, &mut ex);
+                        mul_xor16(Kernel::Scalar, q, src, &mut ec);
+                        assert_eq!(x, ex, "x: k={k} p={p:#x} q={q:#x} len={len} off={off}");
+                        assert_eq!(c, ec, "c: k={k} p={p:#x} q={q:#x} len={len} off={off}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_rows_match_per_cell_reference() {
+        let mut rng = SplitMix64::new(23);
+        // 5 output rows (odd → exercises the unpaired-row arm), 3 sources,
+        // length straddling one GEMM_CHUNK boundary.
+        let len = GEMM_CHUNK + 130;
+        let data_own: Vec<Vec<u8>> =
+            (0..3).map(|_| (0..len).map(|_| rng.next_u64() as u8).collect()).collect();
+        let data: Vec<&[u8]> = data_own.iter().map(|d| d.as_slice()).collect();
+        let mat: Vec<Vec<u32>> = vec![
+            vec![0, 0, 0],
+            vec![1, 0, 2],
+            vec![0x53, 1, 0],
+            vec![7, 0x8E, 255],
+            vec![0, 1, 1],
+        ];
+        for k in Kernel::available_kernels() {
+            for w in [8u32, 16] {
+                let mut out = vec![vec![0u8; len]; mat.len()];
+                if w == 8 {
+                    gemm_rows8(k, &mat, &data, &mut out);
+                } else {
+                    gemm_rows16(k, &mat, &data, &mut out);
+                }
+                for (row, o) in mat.iter().zip(&out) {
+                    let mut expect = vec![0u8; len];
+                    for (&c, d) in row.iter().zip(&data) {
+                        if c == 0 {
+                            continue;
+                        }
+                        if w == 8 {
+                            mul_xor8(Kernel::Scalar, c as u8, d, &mut expect);
+                        } else {
+                            mul_xor16(Kernel::Scalar, c as u16, d, &mut expect);
+                        }
+                    }
+                    assert_eq!(o, &expect, "k={k} w={w} row={row:?}");
+                }
+            }
         }
     }
 }

@@ -63,6 +63,42 @@ fn build(w: u32) -> Tables {
     Tables { log, exp, order }
 }
 
+/// 256-entry product table for one GF(2^8) coefficient: `t[x] = c·x`.
+///
+/// The single shared constructor behind every scalar bulk pass (the
+/// scalar kernel, the fused two-output stage, the row-batched GEMM) —
+/// built per call, cheap relative to the slice pass it feeds.
+pub fn product_table8(c: u8) -> [u8; 256] {
+    let mut t = [0u8; 256];
+    if c == 0 {
+        return t;
+    }
+    let tabs = tables8();
+    let lc = tabs.log[c as usize];
+    for (x, slot) in t.iter_mut().enumerate().skip(1) {
+        *slot = tabs.exp[(lc + tabs.log[x]) as usize] as u8;
+    }
+    t
+}
+
+/// Two 256-entry split-byte product tables for one GF(2^16) coefficient:
+/// `lo[b] = c·b`, `hi[b] = c·(b << 8)`, so
+/// `c·x = lo[x & 0xFF] ⊕ hi[x >> 8]`.
+pub fn product_tables16(c: u16) -> ([u16; 256], [u16; 256]) {
+    let mut lo = [0u16; 256];
+    let mut hi = [0u16; 256];
+    if c == 0 {
+        return (lo, hi);
+    }
+    let tabs = tables16();
+    let lc = tabs.log[c as usize];
+    for b in 1usize..256 {
+        lo[b] = tabs.exp[(lc + tabs.log[b]) as usize] as u16;
+        hi[b] = tabs.exp[(lc + tabs.log[b << 8]) as usize] as u16;
+    }
+    (lo, hi)
+}
+
 static TABLES8_CELL: OnceLock<Tables> = OnceLock::new();
 static TABLES16_CELL: OnceLock<Tables> = OnceLock::new();
 
@@ -126,6 +162,23 @@ mod tests {
         }
         assert!(seen[1..].iter().all(|&s| s));
         assert!(!seen[0]);
+    }
+
+    #[test]
+    fn product_tables_match_bitwise() {
+        for c in [0u8, 1, 2, 0x53, 0xFF] {
+            let t = product_table8(c);
+            for x in 0u32..256 {
+                assert_eq!(t[x as usize] as u32, mul_bitwise(c as u32, x, 8), "c={c} x={x}");
+            }
+        }
+        for c in [0u16, 1, 0x1234, 0xFFFF] {
+            let (lo, hi) = product_tables16(c);
+            for x in [0u32, 1, 0xFF, 0x100, 0xABCD, 0xFFFF] {
+                let got = lo[(x & 0xFF) as usize] ^ hi[(x >> 8) as usize];
+                assert_eq!(got as u32, mul_bitwise(c as u32, x, 16), "c={c} x={x}");
+            }
+        }
     }
 
     #[test]

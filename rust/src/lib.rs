@@ -26,7 +26,7 @@
 //! |---|---|
 //! | [`clock`] | pluggable time: `RealClock` (wall time) vs `SimClock` (deterministic discrete-event virtual time), clock channels, participant accounting |
 //! | [`resources`] | unified resource model: `GfWork` units, `CostModel` (`ZeroCost`/`UniformCost`/`ProfileCost` + per-node multi-core `NodeProfile`s, runtime re-profiling), per-node `CpuMeter` charging compute in virtual time over core lanes (`backlog()` is the placement load signal) |
-//! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables, bulk slice ops (work-reporting), matrices, Gauss; [`gf::simd`] runtime-dispatched kernels (scalar / SSSE3 / AVX2 / NEON split-nibble `PSHUFB`/`TBL`, forced via `RAPIDRAID_FORCE_SCALAR` / `RAPIDRAID_KERNEL`) |
+//! | [`gf`] | GF(2^8)/GF(2^16) arithmetic: tables (incl. shared `product_table8`/`product_tables16` constructors), bulk slice ops (work-reporting), matrices, Gauss; [`gf::simd`] runtime-dispatched kernels — scalar / SSSE3 / AVX2 / NEON split-nibble `PSHUFB`/`TBL` plus a GFNI `GF2P8AFFINEQB` tier, single-coefficient ops, fused two-output `mul2_xor8/16` and row-batched `gemm_rows8/16`, forced via `RAPIDRAID_FORCE_SCALAR` / `RAPIDRAID_KERNEL` |
 //! | [`codes`] | classical Cauchy Reed-Solomon + RapidRAID code constructions, coefficient search, dependency census; [`codes::topology`] composes a schedule over any rooted shape into its generator (`TopologyShape`/`TopologyCode`), and `CodeView` is the generator-level surface decode/repair consume |
 //! | [`reliability`] | static resilience (probability of data loss, "number of 9's") |
 //! | [`cluster`] | simulated storage cluster: nodes, rate-limited links (zero-copy `Payload` frames — `Arc`-backed views, fan-out without memcpy), congestion, crash-stop failure injection (`fail_node`/`revive_node`); everything timed on the spec's clock. Pluggable execution runtimes (`RuntimeKind`): thread-per-node vs a multiplexed single-driver cooperative scheduler for thousands of SimClock nodes, `Auto`-resolved from the clock, observably identical (byte/tick/trace parity) |

@@ -5,10 +5,12 @@
 //! unaligned buffer offsets — and the `GfWork` a slice op reports must not
 //! depend on which backend executed it.
 //!
-//! CI runs the whole suite twice — once as-is and once under
-//! `RAPIDRAID_FORCE_SCALAR=1` — so both the dispatcher's chosen kernel and
-//! the forced-scalar path face the same assertions.
+//! CI runs the whole suite as a forced-kernel matrix
+//! (`RAPIDRAID_KERNEL=scalar|ssse3|avx2` plus a detection-default leg),
+//! so each dispatchable kernel faces the same assertions in its own
+//! process — the cross-process half of the byte-identity contract.
 
+use rapidraid::backend::{EncodeBackend, NativeBackend, Width};
 use rapidraid::gf::tables::mul_bitwise;
 use rapidraid::gf::{
     bytes_as_gf256, bytes_as_gf65536, mul_slice, mul_slice_xor, simd, xor_slice, Gf256, Gf65536,
@@ -242,4 +244,289 @@ fn active_kernel_slice_ops_match_forced_scalar() {
     }
     let expect: Vec<Gf256> = bytes_as_gf256(&via_scalar).to_vec();
     assert_eq!(via_slice, expect);
+}
+
+// ---------------------------------------------------------------------------
+// Fused two-output kernels (mul2_slice_xor)
+// ---------------------------------------------------------------------------
+
+/// Coefficient classes {0, 1, general} for the fused pass — the full
+/// cross-product, because the fused kernels must degenerate correctly
+/// when either (or both) coefficients are trivial.
+const CLASSES8: &[u8] = &[0, 1, 0x53];
+const CLASSES16: &[u16] = &[0, 1, 0x1234];
+
+#[test]
+fn gf8_fused_mul2_matches_bitwise_ground_truth() {
+    let kernels = Kernel::available_kernels();
+    for &seed in SEEDS {
+        let mut rng = SplitMix64::new(seed);
+        let mut src = vec![0u8; 1024 + 8];
+        let mut x0 = vec![0u8; 1024 + 8];
+        let mut c0 = vec![0u8; 1024 + 8];
+        rng.fill_bytes(&mut src);
+        rng.fill_bytes(&mut x0);
+        rng.fill_bytes(&mut c0);
+        for &p in CLASSES8 {
+            for &q in CLASSES8 {
+                for &len in LENS {
+                    for &off in OFFSETS {
+                        let s = &src[off..off + len];
+                        let expect_x: Vec<u8> = s
+                            .iter()
+                            .zip(&x0[off..off + len])
+                            .map(|(&v, &d)| ref_mul8(p, v) ^ d)
+                            .collect();
+                        let expect_c: Vec<u8> = s
+                            .iter()
+                            .zip(&c0[off..off + len])
+                            .map(|(&v, &d)| ref_mul8(q, v) ^ d)
+                            .collect();
+                        for &k in &kernels {
+                            let mut x = x0.clone();
+                            let mut c = c0.clone();
+                            simd::mul2_xor8(k, p, q, s, &mut x[off..off + len], &mut c[off..off + len]);
+                            assert_eq!(
+                                x[off..off + len],
+                                expect_x[..],
+                                "mul2 x: {k} p={p:#x} q={q:#x} len={len} off={off} seed={seed}"
+                            );
+                            assert_eq!(
+                                c[off..off + len],
+                                expect_c[..],
+                                "mul2 c: {k} p={p:#x} q={q:#x} len={len} off={off} seed={seed}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gf16_fused_mul2_matches_bitwise_ground_truth() {
+    let kernels = Kernel::available_kernels();
+    for &seed in SEEDS {
+        let mut rng = SplitMix64::new(seed.wrapping_add(99));
+        let mut src = vec![0u8; 1024 + 8];
+        let mut x0 = vec![0u8; 1024 + 8];
+        let mut c0 = vec![0u8; 1024 + 8];
+        rng.fill_bytes(&mut src);
+        rng.fill_bytes(&mut x0);
+        rng.fill_bytes(&mut c0);
+        for &p in CLASSES16 {
+            for &q in CLASSES16 {
+                for &raw_len in LENS {
+                    let len = raw_len & !1;
+                    for &off in OFFSETS {
+                        let s = &src[off..off + len];
+                        let expect = |coef: u16, d0: &[u8]| -> Vec<u8> {
+                            let mut out = Vec::with_capacity(len);
+                            for (sp, dp) in s.chunks_exact(2).zip(d0.chunks_exact(2)) {
+                                let v = u16::from_le_bytes([sp[0], sp[1]]);
+                                let r = ref_mul16(coef, v) ^ u16::from_le_bytes([dp[0], dp[1]]);
+                                out.extend_from_slice(&r.to_le_bytes());
+                            }
+                            out
+                        };
+                        let expect_x = expect(p, &x0[off..off + len]);
+                        let expect_c = expect(q, &c0[off..off + len]);
+                        for &k in &kernels {
+                            let mut x = x0.clone();
+                            let mut c = c0.clone();
+                            simd::mul2_xor16(k, p, q, s, &mut x[off..off + len], &mut c[off..off + len]);
+                            assert_eq!(
+                                x[off..off + len],
+                                expect_x[..],
+                                "mul2 x: {k} p={p:#x} q={q:#x} len={len} off={off} seed={seed}"
+                            );
+                            assert_eq!(
+                                c[off..off + len],
+                                expect_c[..],
+                                "mul2 c: {k} p={p:#x} q={q:#x} len={len} off={off} seed={seed}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row-batched GEMM
+// ---------------------------------------------------------------------------
+
+/// The row-batched GEMM schedule (pairs of output rows per L1-chunked
+/// source pass) must be byte-identical to the naive one-pass-per-cell
+/// reference on every kernel — including matrices with zero/identity
+/// cells, an odd row count, and lengths straddling the chunk size.
+#[test]
+fn gemm_rows_match_per_cell_ground_truth() {
+    let kernels = Kernel::available_kernels();
+    let mut rng = SplitMix64::new(0xBADC_0FFE);
+    for &len in &[0usize, 2, 34, 4096, 4098, 8192 + 130] {
+        let data_own: Vec<Vec<u8>> = (0..4)
+            .map(|_| {
+                let mut d = vec![0u8; len];
+                rng.fill_bytes(&mut d);
+                d
+            })
+            .collect();
+        let data: Vec<&[u8]> = data_own.iter().map(|d| d.as_slice()).collect();
+        let mat: Vec<Vec<u32>> = vec![
+            vec![0, 0, 0, 0],
+            vec![1, 0, 2, 0x53],
+            vec![0x8E, 1, 0, 255],
+            vec![7, 9, 1, 1],
+            vec![0, 0, 0, 3],
+        ];
+        for &k in &kernels {
+            for w in [Width::W8, Width::W16] {
+                let mut out = vec![vec![0u8; len]; mat.len()];
+                match w {
+                    Width::W8 => simd::gemm_rows8(k, &mat, &data, &mut out),
+                    Width::W16 => simd::gemm_rows16(k, &mat, &data, &mut out),
+                }
+                for (row, o) in mat.iter().zip(&out) {
+                    let mut expect = vec![0u8; len];
+                    for (&c, d) in row.iter().zip(&data) {
+                        match w {
+                            Width::W8 => simd::mul_xor8(Kernel::Scalar, c as u8, d, &mut expect),
+                            Width::W16 => simd::mul_xor16(Kernel::Scalar, c as u16, d, &mut expect),
+                        }
+                    }
+                    assert_eq!(o, &expect, "gemm_rows {k} {w} len={len} row={row:?}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GFNI tier
+// ---------------------------------------------------------------------------
+
+/// Explicit GFNI coverage beyond the shared `available_kernels()` sweeps:
+/// the affine-encoded products must match the carry-less ground truth for
+/// a dense coefficient sample at both widths. Skips (trivially passes) on
+/// hosts without GFNI — the forced-kernel CI matrix documents which legs
+/// actually exercised it.
+#[test]
+fn gfni_matches_bitwise_ground_truth_when_available() {
+    if !Kernel::Gfni.is_available() {
+        return;
+    }
+    let mut rng = SplitMix64::new(0x6F41);
+    let mut src = vec![0u8; 777];
+    rng.fill_bytes(&mut src);
+    for c in (0u32..256).step_by(17).chain([1, 2, 255]) {
+        let mut dst = vec![0u8; src.len()];
+        simd::mul8(Kernel::Gfni, c as u8, &src, &mut dst);
+        for (i, (&s, &d)) in src.iter().zip(&dst).enumerate() {
+            assert_eq!(d as u32, mul_bitwise(c, s as u32, 8), "c={c} i={i}");
+        }
+    }
+    let even = src.len() & !1;
+    for c in [1u32, 2, 0x1234, 0x8001, 0xFFFF, 0x100B] {
+        let mut dst = vec![0u8; even];
+        simd::mul16(Kernel::Gfni, c as u16, &src[..even], &mut dst);
+        for (i, (sp, dp)) in src[..even].chunks_exact(2).zip(dst.chunks_exact(2)).enumerate() {
+            let s = u16::from_le_bytes([sp[0], sp[1]]) as u32;
+            let d = u16::from_le_bytes([dp[0], dp[1]]) as u32;
+            assert_eq!(d, mul_bitwise(c, s, 16), "c={c:#x} word={i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend routing + work accounting
+// ---------------------------------------------------------------------------
+
+/// The native backend's fused `pipeline_step` / paired `fold_parity` /
+/// row-batched `gemm` must equal a naive scalar-kernel reference on
+/// whatever kernel `Kernel::active()` resolved to — the in-process half
+/// of the byte-identical-across-kernels acceptance bar (the forced-kernel
+/// CI matrix covers the cross-process half).
+#[test]
+fn backend_entry_points_match_scalar_reference() {
+    let be = NativeBackend::new();
+    let mut rng = SplitMix64::new(0x5EED);
+    let len = 4096 + 130; // straddles the GEMM chunk, even for W16
+    let blocks: Vec<Vec<u8>> = (0..3)
+        .map(|_| {
+            let mut b = vec![0u8; len];
+            rng.fill_bytes(&mut b);
+            b
+        })
+        .collect();
+    let mut x_in = vec![0u8; len];
+    rng.fill_bytes(&mut x_in);
+    let locals: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
+    let psi = [0u32, 1, 0x53];
+    let xi = [7u32, 0, 1];
+    for w in [Width::W8, Width::W16] {
+        let (x_out, c) = be.pipeline_step(w, &x_in, &locals, &psi, &xi).unwrap();
+        let mut ex = x_in.clone();
+        let mut ec = x_in.clone();
+        for (j, loc) in locals.iter().enumerate() {
+            let mul_xor: fn(Kernel, u32, &[u8], &mut [u8]) = match w {
+                Width::W8 => |k, c, s, d| simd::mul_xor8(k, c as u8, s, d),
+                Width::W16 => |k, c, s, d| simd::mul_xor16(k, c as u16, s, d),
+            };
+            if psi[j] != 0 {
+                mul_xor(Kernel::Scalar, psi[j], loc, &mut ex);
+            }
+            if xi[j] != 0 {
+                mul_xor(Kernel::Scalar, xi[j], loc, &mut ec);
+            }
+        }
+        assert_eq!(x_out, ex, "pipeline_step x_out {w}");
+        assert_eq!(c, ec, "pipeline_step c {w}");
+
+        // fold_parity with an odd row count (fused pair + single row).
+        let coeffs = [3u32, 1, 0x53];
+        let mut parity = vec![vec![0x11u8; len]; 3];
+        be.fold_parity(w, &coeffs, &x_in, &mut parity).unwrap();
+        for (cf, p) in coeffs.iter().zip(&parity) {
+            let mut expect = vec![0x11u8; len];
+            match w {
+                Width::W8 => simd::mul_xor8(Kernel::Scalar, *cf as u8, &x_in, &mut expect),
+                Width::W16 => simd::mul_xor16(Kernel::Scalar, *cf as u16, &x_in, &mut expect),
+            }
+            assert_eq!(p, &expect, "fold_parity {w} c={cf}");
+        }
+
+        // gemm through the backend (routes to the row-batched schedule).
+        let mat = vec![vec![1u32, 0, 2], vec![0x53, 1, 0], vec![0, 0, 0]];
+        let out = be.gemm(w, &mat, &locals).unwrap();
+        for (row, o) in mat.iter().zip(&out) {
+            let mut expect = vec![0u8; len];
+            for (&cf, d) in row.iter().zip(&locals) {
+                match w {
+                    Width::W8 => simd::mul_xor8(Kernel::Scalar, cf as u8, d, &mut expect),
+                    Width::W16 => simd::mul_xor16(Kernel::Scalar, cf as u16, d, &mut expect),
+                }
+            }
+            assert_eq!(o, &expect, "gemm {w} row={row:?}");
+        }
+    }
+}
+
+/// `GfWork::pipeline_step` is a pure function of the coefficient classes
+/// and the frame length — the charge a relay stage books is decided
+/// before any kernel dispatch, so every kernel (Gfni included) books the
+/// same virtual time for the same frame.
+#[test]
+fn pipeline_step_work_is_kernel_independent() {
+    let psi = [0u32, 1, 0x53];
+    let xi = [7u32, 0, 1];
+    let len = 1500usize;
+    let expect = GfWork::xor(2 * len) // x_out and c both start as x_in copies
+        + GfWork::xor(len)            // psi[1] == 1
+        + GfWork::mac(len)            // psi[2]
+        + GfWork::mac(len)            // xi[0]
+        + GfWork::xor(len); // xi[2] == 1
+    assert_eq!(GfWork::pipeline_step(&psi, &xi, len), expect);
 }
