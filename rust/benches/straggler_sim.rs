@@ -1,0 +1,57 @@
+//! Bench: the `straggler-sim` preset — the adaptive control plane against
+//! every static pipeline shape (chain, tree:2, hybrid:4:2) on a
+//! straggler-seeded SimClock pool (ec2-mix compute, two NICs clamped 10x,
+//! one thinclient CPU, all inside the identity placement's first n ids).
+//! The adaptive cell places, shapes and re-ranks from plan-boundary load
+//! snapshots; its makespan must beat every static cell for both code
+//! sizes.
+//!
+//! Run: `cargo bench --bench straggler_sim`
+//! Env: BLOCK_KIB (default 256), SEED (default 5), SMOKE=1 (64 KiB
+//! blocks — the CI configuration). Writes BENCH_straggler-sim.json.
+
+use std::sync::Arc;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::bench_scenarios::straggler_sim;
+use rapidraid::cluster::RuntimeKind;
+use rapidraid::util::bench::env_u64;
+
+fn main() {
+    let block_kib = if std::env::var("SMOKE").is_ok() {
+        64
+    } else {
+        env_u64("BLOCK_KIB", 256) as usize
+    };
+    let seed = env_u64("SEED", 5);
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let (rows, report) = straggler_sim(
+        &backend,
+        block_kib << 10,
+        seed,
+        RuntimeKind::Auto,
+        &mut std::io::stdout().lock(),
+    )
+    .expect("straggler-sim");
+    assert_eq!(rows.len(), 8, "2 code sizes x (3 static shapes + adaptive)");
+    // acceptance gate: the closed loop beats every static shape per size
+    for (n, k) in [(11usize, 8usize), (22, 16)] {
+        let adaptive = rows
+            .iter()
+            .find(|r| r.n == n && r.adaptive)
+            .expect("adaptive cell")
+            .makespan;
+        for r in rows.iter().filter(|r| r.n == n && !r.adaptive) {
+            assert!(
+                adaptive < r.makespan,
+                "(n={n},k={k}) adaptive {adaptive:?} lost to static {} at {:?}",
+                r.cell,
+                r.makespan
+            );
+        }
+    }
+    let path = report
+        .write_to_dir(std::path::Path::new("."))
+        .expect("write BENCH json");
+    println!("# wrote {}", path.display());
+}

@@ -35,8 +35,8 @@ use crate::cluster::{Cluster, ClusterSpec, CongestionSpec, RuntimeKind};
 use crate::codes::rapidraid::RapidRaidCode;
 use crate::codes::{ClassicalCode, TopologyCode};
 use crate::coordinator::batch::{
-    pipeline_jobs, place_and_build_pipeline_jobs, rotated_chain, run_batch, run_batch_recorded,
-    BatchJob,
+    pipeline_jobs, place_and_build_pipeline_jobs, rotated_chain, run_batch, run_batch_adaptive,
+    run_batch_recorded, BatchJob,
 };
 use crate::coordinator::topology::{LoadAwarePolicy, Topology};
 use crate::coordinator::{ingest_object, object_bytes, reconstruct, ClassicalJob, PipelineJob};
@@ -273,7 +273,7 @@ pub fn table2_sim(
     seed: u64,
     out: &mut dyn Write,
 ) -> anyhow::Result<(Vec<Table2SimRow>, BenchJson)> {
-    table2_sim_calibrated(backend, block_bytes, seed, None, out)
+    table2_sim_calibrated(backend, block_bytes, seed, None, RuntimeKind::Auto, out)
 }
 
 /// [`table2_sim`] with the compute baseline swapped for measured rates
@@ -281,12 +281,17 @@ pub fn table2_sim(
 /// the built-in [`UniformCost::calibrated`] constants, `Some(rates)` —
 /// typically [`UniformCost::from_measured`] over a `gf-hotpath` report —
 /// prices both cost models over this machine's throughput. The report
-/// records which baseline ran under the `calibration` param.
+/// records which baseline ran under the `calibration` param. `runtime`
+/// picks the dataplane execution runtime (`--runtime` on the CLI; `Auto`
+/// resolves to the multiplexed driver on these SimClock presets) and is
+/// recorded under the `runtime` param — the virtual timeline is
+/// runtime-invariant, so this is a parity axis, not a result axis.
 pub fn table2_sim_calibrated(
     backend: &BackendHandle,
     block_bytes: usize,
     seed: u64,
     calibration: Option<UniformCost>,
+    runtime: RuntimeKind,
     out: &mut dyn Write,
 ) -> anyhow::Result<(Vec<Table2SimRow>, BenchJson)> {
     let wall = RealClock::new();
@@ -296,6 +301,7 @@ pub fn table2_sim_calibrated(
     let mut report = BenchJson::new("table2-sim")
         .param("block_bytes", block_bytes)
         .param("seed", seed)
+        .param("runtime", runtime.name())
         .param(
             "calibration",
             if calibration.is_some() { "measured" } else { "builtin" },
@@ -318,7 +324,7 @@ pub fn table2_sim_calibrated(
 
     // Fresh per-run cluster: virtual timelines must not share NIC state.
     let sim_cluster = |n: usize, cost: CostModelHandle| -> Cluster {
-        let mut spec = ClusterSpec::tpc(n).sim().with_cost(cost);
+        let mut spec = ClusterSpec::tpc(n).sim().with_cost(cost).with_runtime(runtime);
         // Table II isolates compute: jitter off keeps the discrete-event
         // timeline an exact function of the inputs.
         spec.jitter = Duration::ZERO;
@@ -470,16 +476,18 @@ pub fn topo_sim(
     seed: u64,
     out: &mut dyn Write,
 ) -> anyhow::Result<(Vec<TopoSimRow>, BenchJson)> {
-    topo_sim_calibrated(backend, block_bytes, seed, None, out)
+    topo_sim_calibrated(backend, block_bytes, seed, None, RuntimeKind::Auto, out)
 }
 
-/// [`topo_sim`] with the compute baseline swapped for measured rates —
-/// same contract as [`table2_sim_calibrated`].
+/// [`topo_sim`] with the compute baseline swapped for measured rates and
+/// the execution runtime selectable — same contract as
+/// [`table2_sim_calibrated`].
 pub fn topo_sim_calibrated(
     backend: &BackendHandle,
     block_bytes: usize,
     seed: u64,
     calibration: Option<UniformCost>,
+    runtime: RuntimeKind,
     out: &mut dyn Write,
 ) -> anyhow::Result<(Vec<TopoSimRow>, BenchJson)> {
     let wall = RealClock::new();
@@ -489,6 +497,7 @@ pub fn topo_sim_calibrated(
     let mut report = BenchJson::new("topo-sim")
         .param("block_bytes", block_bytes)
         .param("seed", seed)
+        .param("runtime", runtime.name())
         .param(
             "calibration",
             if calibration.is_some() { "measured" } else { "builtin" },
@@ -512,7 +521,7 @@ pub fn topo_sim_calibrated(
     // Fresh per-cell cluster: virtual timelines must not share NIC or
     // meter state.
     let sim_cluster = |n: usize, cost: CostModelHandle| -> Cluster {
-        let mut spec = ClusterSpec::tpc(n).sim().with_cost(cost);
+        let mut spec = ClusterSpec::tpc(n).sim().with_cost(cost).with_runtime(runtime);
         spec.jitter = Duration::ZERO;
         Cluster::start(spec)
     };
@@ -671,6 +680,261 @@ pub fn topo_sim_calibrated(
         writeln!(out, "# {}", c.report())?;
     }
     report.spans = stages.candles();
+    report.wall = wall.now();
+    Ok((rows, report))
+}
+
+// ---------------------------------------------------------------------------
+// straggler-sim — static shapes vs the adaptive control plane
+// ---------------------------------------------------------------------------
+
+/// One cell of the `straggler-sim` comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerSimRow {
+    /// Code length.
+    pub n: usize,
+    /// Message length.
+    pub k: usize,
+    /// Cell label: a static shape (`chain` / `tree:2` / `hybrid:4:2`) or
+    /// `adaptive`.
+    pub cell: String,
+    /// True for the adaptive (control-plane) cell.
+    pub adaptive: bool,
+    /// End-to-end virtual makespan of the cell's whole batch (ingest
+    /// through last store, read off the cluster clock).
+    pub makespan: Duration,
+}
+
+/// Spare nodes beyond `n` in every straggler-sim pool — the headroom the
+/// adaptive policy can route into; the static cells ignore them.
+pub const STRAGGLER_SIM_SPARES: usize = 5;
+/// Objects archived per cell (window 1 on the adaptive cell, so every
+/// object re-ranks against the load the previous wave left behind).
+pub const STRAGGLER_SIM_OBJECTS: usize = 3;
+/// Node ids whose NICs get the 10x congestion clamp. Both sit inside the
+/// first `n` ids for both code sizes, so the identity-placed static cells
+/// always eat them.
+const STRAGGLER_NET: [usize; 2] = [1, 4];
+/// Node id re-priced as a `THINCLIENT`-class CPU straggler (the long-run
+/// harness's CPU-churn mechanism, applied statically here so the timeline
+/// stays a pure function of the config).
+const STRAGGLER_CPU: usize = 2;
+
+/// The `straggler-sim` preset: the adaptive control plane against every
+/// static pipeline shape on a deliberately lopsided cluster. For each code
+/// size (k=8/n=11 and k=16/n=22) the pool is `n + 5` nodes on a jitter-free
+/// `SimClock` TPC topology with heterogeneous [`NodeProfile::ec2_mix`]
+/// compute, two NICs clamped to a tenth and one node re-priced
+/// `THINCLIENT` — all three stragglers inside the first `n` ids. The three
+/// static cells (`chain`, `tree:2`, `hybrid:4:2`) archive
+/// [`STRAGGLER_SIM_OBJECTS`] objects on the identity placement `0..n`
+/// (stragglers included, as a placement-blind coordinator would); the
+/// adaptive cell runs the same objects through
+/// [`run_batch_adaptive`] with [`LoadAwarePolicy::adaptive`], whose
+/// plan-boundary [`LoadSnapshot`](crate::control::LoadSnapshot)s rank the
+/// stragglers out of the selection and pick the predicted-fastest shape.
+/// Every cell decode-verifies each object through the topology-composed
+/// generator before its makespan counts. Deterministic: same
+/// `(block_bytes, seed)` ⇒ tick-identical rows on either runtime.
+pub fn straggler_sim(
+    backend: &BackendHandle,
+    block_bytes: usize,
+    seed: u64,
+    runtime: RuntimeKind,
+    out: &mut dyn Write,
+) -> anyhow::Result<(Vec<StragglerSimRow>, BenchJson)> {
+    straggler_sim_calibrated(backend, block_bytes, seed, None, runtime, out)
+}
+
+/// [`straggler_sim`] with the compute baseline swapped for measured rates —
+/// same contract as [`table2_sim_calibrated`].
+pub fn straggler_sim_calibrated(
+    backend: &BackendHandle,
+    block_bytes: usize,
+    seed: u64,
+    calibration: Option<UniformCost>,
+    runtime: RuntimeKind,
+    out: &mut dyn Write,
+) -> anyhow::Result<(Vec<StragglerSimRow>, BenchJson)> {
+    let wall = RealClock::new();
+    let base_rates = calibration
+        .clone()
+        .unwrap_or_else(UniformCost::calibrated);
+    let mut report = BenchJson::new("straggler-sim")
+        .param("block_bytes", block_bytes)
+        .param("seed", seed)
+        .param("objects", STRAGGLER_SIM_OBJECTS)
+        .param("spares", STRAGGLER_SIM_SPARES)
+        .param("runtime", runtime.name())
+        .param(
+            "calibration",
+            if calibration.is_some() { "measured" } else { "builtin" },
+        );
+    writeln!(
+        out,
+        "# straggler-sim — adaptive control plane vs static shapes on a lopsided cluster"
+    )?;
+    writeln!(
+        out,
+        "# SimClock TPC (jitter off), ec2-mix compute, NIC clamp on {STRAGGLER_NET:?}, \
+         thinclient CPU on {STRAGGLER_CPU}, block={} KiB, seed {seed}, runtime={}",
+        block_bytes >> 10,
+        runtime.name()
+    )?;
+    writeln!(
+        out,
+        "{:>3} {:>3} {:>12} {:>12} {:>9}",
+        "n", "k", "cell", "makespan_s", "vs_best"
+    )?;
+
+    // Fresh cluster (and fresh cost model — `set_profile` is stateful) per
+    // cell: virtual timelines must not share NIC, meter or profile state.
+    let clamp = CongestionSpec {
+        bytes_per_sec: 12.5e6,
+        extra_latency: Duration::ZERO,
+        jitter: Duration::ZERO,
+    };
+    let lopsided_cluster = |pool: usize| -> anyhow::Result<(Cluster, crate::clock::ClockHandle)> {
+        let cost = std::sync::Arc::new(ProfileCost::new(
+            base_rates.clone(),
+            NodeProfile::ec2_mix(),
+        )?);
+        cost.set_profile(STRAGGLER_CPU, NodeProfile::THINCLIENT);
+        let clock = SimClock::handle();
+        let mut spec = ClusterSpec::tpc(pool)
+            .with_clock(clock.clone())
+            .with_cost(cost)
+            .with_runtime(runtime);
+        spec.jitter = Duration::ZERO;
+        let cluster = Cluster::start(spec);
+        for &node in &STRAGGLER_NET {
+            cluster.congest(node, &clamp);
+        }
+        Ok((cluster, clock))
+    };
+
+    let mut rows: Vec<StragglerSimRow> = Vec::new();
+    let mut id = 0u64;
+    for (n, k) in [(11usize, 8usize), (22, 16)] {
+        let pool = n + STRAGGLER_SIM_SPARES;
+        let code = RapidRaidCode::<Gf256>::with_seed(n, k, seed)?;
+        let mut size_rows: Vec<StragglerSimRow> = Vec::new();
+
+        // Static cells: identity placement 0..n (stragglers included).
+        for topo in topo_sim_topologies() {
+            let (cluster, clock) = lopsided_cluster(pool)?;
+            let t0 = clock.now();
+            let mut placements = Vec::with_capacity(STRAGGLER_SIM_OBJECTS);
+            let mut expected = Vec::with_capacity(STRAGGLER_SIM_OBJECTS);
+            for _ in 0..STRAGGLER_SIM_OBJECTS {
+                id += 1;
+                let placement =
+                    ReplicaPlacement::new(ObjectId(0x57A6_0000 + id), k, (0..n).collect())?;
+                expected.push(ingest_object(&cluster, &placement, block_bytes)?);
+                placements.push(placement);
+            }
+            let jobs = pipeline_jobs(&code, &placements, topo, BUF_BYTES, block_bytes)?;
+            run_batch(&cluster, backend, &jobs)?;
+            let makespan = clock.now().saturating_sub(t0);
+            let tcode = TopologyCode::new(code.clone(), topo.shape(n)?)?;
+            for (p, blocks) in placements.iter().zip(&expected) {
+                let rec = reconstruct(&cluster, &tcode, &p.chain, p.object, backend)?;
+                anyhow::ensure!(
+                    rec == *blocks,
+                    "straggler-sim n{n}k{k}/{topo}: decode mismatch for {:?}",
+                    p.object
+                );
+            }
+            size_rows.push(StragglerSimRow {
+                n,
+                k,
+                cell: topo.to_string(),
+                adaptive: false,
+                makespan,
+            });
+        }
+
+        // Adaptive cell: same objects' worth of work, but the control plane
+        // places, shapes and re-ranks wave by wave.
+        let (cluster, clock) = lopsided_cluster(pool)?;
+        let objects: Vec<ObjectId> = (0..STRAGGLER_SIM_OBJECTS)
+            .map(|_| {
+                id += 1;
+                ObjectId(0x57A6_0000 + id)
+            })
+            .collect();
+        let t0 = clock.now();
+        let runs = run_batch_adaptive(
+            &cluster,
+            backend,
+            &LoadAwarePolicy::adaptive(),
+            &code,
+            &objects,
+            Topology::Chain,
+            BUF_BYTES,
+            block_bytes,
+            1,
+        )?;
+        let makespan = clock.now().saturating_sub(t0);
+        for run in &runs {
+            let expect: Vec<Vec<u8>> = (0..k)
+                .map(|i| object_bytes(run.placement.object, i, block_bytes))
+                .collect();
+            let tcode = TopologyCode::new(code.clone(), run.topology.shape(n)?)?;
+            let rec =
+                reconstruct(&cluster, &tcode, &run.placement.chain, run.placement.object, backend)?;
+            anyhow::ensure!(
+                rec == expect,
+                "straggler-sim n{n}k{k}/adaptive: decode mismatch for {:?}",
+                run.placement.object
+            );
+        }
+        size_rows.push(StragglerSimRow {
+            n,
+            k,
+            cell: "adaptive".into(),
+            adaptive: true,
+            makespan,
+        });
+
+        let best = size_rows
+            .iter()
+            .map(|r| r.makespan)
+            .min()
+            .expect("non-empty cells");
+        for r in &size_rows {
+            writeln!(
+                out,
+                "{:>3} {:>3} {:>12} {:>12.4} {:>8.2}x",
+                r.n,
+                r.k,
+                r.cell,
+                r.makespan.as_secs_f64(),
+                r.makespan.as_secs_f64() / best.as_secs_f64()
+            )?;
+            report.series.push(Candle {
+                name: format!("n{n}k{k}/{}", r.cell),
+                samples: vec![r.makespan],
+            });
+        }
+        let best_static = size_rows
+            .iter()
+            .filter(|r| !r.adaptive)
+            .map(|r| r.makespan)
+            .min()
+            .expect("three static cells");
+        let adaptive = size_rows
+            .iter()
+            .find(|r| r.adaptive)
+            .expect("one adaptive cell")
+            .makespan;
+        writeln!(
+            out,
+            "# n{n}k{k}: adaptive {:.2}x vs best static",
+            best_static.as_secs_f64() / adaptive.as_secs_f64()
+        )?;
+        rows.extend(size_rows);
+    }
     report.wall = wall.now();
     Ok((rows, report))
 }
@@ -1067,6 +1331,10 @@ pub struct ScaleSimConfig {
     pub epoch_secs: u64,
     /// Seed of the per-epoch verification sampling.
     pub seed: u64,
+    /// Dataplane execution runtime (`Auto` resolves to the multiplexed
+    /// driver on the preset's SimClock; `Threaded` forces thread-per-node
+    /// — only sensible at small `nodes`).
+    pub runtime: RuntimeKind,
 }
 
 impl ScaleSimConfig {
@@ -1087,6 +1355,7 @@ impl ScaleSimConfig {
             virtual_secs: 86_400,
             epoch_secs: 1200,
             seed: 0xACE5_CA1E,
+            runtime: RuntimeKind::Auto,
         }
     }
 
@@ -1149,12 +1418,16 @@ pub fn scale_sim(
 
     let wall = RealClock::new();
     let clock = SimClock::handle();
-    let mut spec = ClusterSpec::tpc(cfg.nodes).with_clock(clock.clone());
+    let mut spec = ClusterSpec::tpc(cfg.nodes)
+        .with_clock(clock.clone())
+        .with_runtime(cfg.runtime);
     spec.jitter = Duration::ZERO;
+    let expected_runtime = spec.resolved_runtime();
     let cluster = Cluster::start(spec);
     anyhow::ensure!(
-        cluster.runtime_kind() == RuntimeKind::Multiplexed,
-        "scale-sim needs the multiplexed runtime (SimClock presets resolve to it)"
+        cluster.runtime_kind() == expected_runtime,
+        "scale-sim cluster came up on {:?}, spec resolved to {expected_runtime:?}",
+        cluster.runtime_kind()
     );
     let code = RapidRaidCode::<Gf256>::with_seed(cfg.n, cfg.k, cfg.code_seed)?;
     let tcode = TopologyCode::new(code.clone(), Topology::Chain.shape(cfg.n)?)?;
@@ -1438,6 +1711,47 @@ mod tests {
     }
 
     #[test]
+    fn straggler_sim_adaptive_beats_every_static_cell() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let mut out = Vec::new();
+        let (rows, report) =
+            straggler_sim(&be, 32 * 1024, 5, RuntimeKind::Auto, &mut out).unwrap();
+        // 2 code sizes × (3 static shapes + 1 adaptive)
+        assert_eq!(rows.len(), 8);
+        for (n, k) in [(11usize, 8usize), (22, 16)] {
+            let adaptive = rows
+                .iter()
+                .find(|r| r.n == n && r.adaptive)
+                .expect("adaptive cell")
+                .makespan;
+            for r in rows.iter().filter(|r| r.n == n && !r.adaptive) {
+                assert!(
+                    adaptive < r.makespan,
+                    "(n={n},k={k}) adaptive {adaptive:?} did not beat static {} at {:?}",
+                    r.cell,
+                    r.makespan
+                );
+            }
+        }
+        assert_eq!(report.preset, "straggler-sim");
+        assert_eq!(report.get_param("runtime"), Some("auto"));
+        assert_eq!(report.series.len(), 8);
+        assert!(report.series.iter().any(|c| c.name == "n11k8/adaptive"));
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("adaptive") && text.contains("hybrid:4:2"), "{text}");
+    }
+
+    #[test]
+    fn straggler_sim_is_deterministic_per_seed() {
+        let be: BackendHandle = Arc::new(NativeBackend::new());
+        let (a, _) =
+            straggler_sim(&be, 16 * 1024, 5, RuntimeKind::Auto, &mut Vec::<u8>::new()).unwrap();
+        let (b, _) =
+            straggler_sim(&be, 16 * 1024, 5, RuntimeKind::Auto, &mut Vec::<u8>::new()).unwrap();
+        assert_eq!(a, b, "straggler-sim rows diverged between identical runs");
+    }
+
+    #[test]
     fn scale_sim_tiny_archives_verifies_and_bounds_memory() {
         let be: BackendHandle = Arc::new(NativeBackend::new());
         let cfg = ScaleSimConfig {
@@ -1452,6 +1766,7 @@ mod tests {
             virtual_secs: 60,
             epoch_secs: 20,
             seed: 11,
+            runtime: RuntimeKind::Auto,
         };
         let mut out = Vec::new();
         let (report, bench) = scale_sim(&cfg, &be, &mut out).unwrap();

@@ -81,6 +81,17 @@ impl RateLimiter {
         self.state.lock().unwrap().bytes_per_sec
     }
 
+    /// How long a new reservation would queue behind the ones already
+    /// booked — the NIC twin of
+    /// [`CpuMeter::backlog`](crate::resources::CpuMeter::backlog), and the
+    /// link-load signal the adaptive control plane snapshots at plan
+    /// boundaries (`ZERO` on an idle or drained NIC). Pure state read: no
+    /// reservation, no sleep, no trace emit.
+    pub fn backlog(&self) -> Tick {
+        let s = self.state.lock().unwrap();
+        s.next_free.saturating_sub(self.clock.now())
+    }
+
     /// Reserve NIC time for `bytes`, pace the caller, and return the
     /// (virtual) completion tick.
     ///
@@ -182,6 +193,24 @@ mod tests {
         let done = l.reserve(10_000); // would be 10 s
         assert_eq!(clock.now(), Duration::ZERO, "reserve must not block");
         assert_eq!(done, Duration::from_secs(10));
+    }
+
+    #[test]
+    fn backlog_reports_booked_wire_time_without_reserving() {
+        let clock = SimClock::handle();
+        let l = RateLimiter::new(clock.clone(), 1_000_000.0); // 1 MB/s
+        assert_eq!(l.backlog(), Duration::ZERO, "idle NIC has no backlog");
+        l.reserve(500_000); // books 500 ms of wire time
+        assert_eq!(l.backlog(), Duration::from_millis(500));
+        l.reserve(250_000); // cumulative: 750 ms booked
+        assert_eq!(l.backlog(), Duration::from_millis(750));
+        // reading the backlog reserves nothing
+        assert_eq!(l.backlog(), Duration::from_millis(750));
+        assert_eq!(clock.now(), Duration::ZERO, "backlog must not sleep");
+        // once an acquire paces past the booked time the backlog drains
+        l.acquire(250_000); // sleeps to the 1 s mark
+        assert_eq!(clock.now(), Duration::from_secs(1));
+        assert_eq!(l.backlog(), Duration::ZERO);
     }
 
     #[test]

@@ -87,6 +87,33 @@ impl RuntimeKind {
             k => k,
         }
     }
+
+    /// Parse a CLI label (`auto` | `threaded` | `multiplexed`).
+    pub fn parse(s: &str) -> anyhow::Result<RuntimeKind> {
+        match s {
+            "auto" => Ok(RuntimeKind::Auto),
+            "threaded" => Ok(RuntimeKind::Threaded),
+            "multiplexed" => Ok(RuntimeKind::Multiplexed),
+            other => {
+                anyhow::bail!("unknown runtime {other:?} (auto | threaded | multiplexed)")
+            }
+        }
+    }
+
+    /// Short label for report tables (the inverse of [`RuntimeKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            RuntimeKind::Auto => "auto",
+            RuntimeKind::Threaded => "threaded",
+            RuntimeKind::Multiplexed => "multiplexed",
+        }
+    }
+}
+
+impl std::fmt::Display for RuntimeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 /// What a task reports back to the driver from one poll.

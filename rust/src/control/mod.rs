@@ -1,0 +1,503 @@
+//! Adaptive control plane: measured per-node load folded into placement,
+//! shape and repair-sourcing decisions.
+//!
+//! The paper's EC2 numbers (and Li et al.'s repair-pipelining analysis)
+//! show the pipelined makespan is hostage to the slowest participant.
+//! This module closes the loop from the observability the dataplane
+//! already exposes to the decisions the coordinator makes:
+//!
+//! * [`LoadSnapshot::take`] freezes every node's load signals at a **plan
+//!   boundary** on the cluster clock: in-flight command count
+//!   ([`NodeHandle::inflight`](crate::cluster::NodeHandle)), queued
+//!   compute ([`CpuMeter::backlog`](crate::resources::CpuMeter::backlog)),
+//!   booked NIC wire time in both directions
+//!   ([`RateLimiter::backlog`](crate::cluster::RateLimiter::backlog)),
+//!   the current NIC rates, and the node's effective GF throughput priced
+//!   through the cluster's own [`CostModel`](crate::resources::CostModel).
+//!   All of it is pure state reads — no reservation, no sleep, no trace
+//!   emit — so taking a snapshot never perturbs the virtual timeline, and
+//!   because it happens between dispatches (never concurrently with
+//!   workers) the values are a deterministic function of the seed.
+//! * [`LoadSnapshot::rank`] orders candidate nodes best-first from those
+//!   signals with node-id ascending as the final tie-break, so equal
+//!   loads always rank identically across runs and runtimes.
+//! * [`LoadSnapshot::predict_makespan`] is the small analytic cost model
+//!   behind fanout auto-tuning and straggler-aware repair sourcing: for a
+//!   candidate shape + slot binding it walks every root-to-leaf path,
+//!   accumulating buffer-granular fill latency plus queued-backlog
+//!   start-up delay per hop, and drains the block through the path's
+//!   bottleneck seconds-per-byte (NIC direction shared across the slot's
+//!   fan streams, or the priced CPU MAC rate, whichever is slower). It is
+//!   the same structure `trace::critical` attributes measured makespans
+//!   into (per-slot compute / transfer / upstream-wait), which is how the
+//!   predictor's weights can be validated against recorded traces.
+//! * [`LoadSnapshot::choose_topology`] evaluates candidate shapes
+//!   ([`candidate_shapes`]) over the snapshot-ranked pool — slots bound
+//!   heaviest-subtree-first via
+//!   [`assign_slots`](crate::coordinator::topology::assign_slots), so
+//!   measured stragglers sink to leaf slots — and returns the predicted
+//!   argmin (first candidate wins ties).
+//!
+//! [`Adaptation`] gates every consumer: `Off` (the default) must leave
+//! the pre-control-plane code paths **bit-for-bit** intact — no snapshot
+//! is taken, no ranking changes, byte-identical blocks and tick-identical
+//! spans (locked in by `tests/determinism.rs`). `On` runs are themselves
+//! deterministic per seed across both execution runtimes, because every
+//! snapshot read happens at a quiescent plan boundary.
+
+use std::time::Duration;
+
+use crate::clock::{Clock, Tick};
+use crate::cluster::{Cluster, NodeId};
+use crate::codes::TopologyShape;
+use crate::coordinator::topology::{assign_slots, Topology};
+use crate::resources::GfWork;
+
+/// Whether a consumer runs its closed-loop adaptive path or the static
+/// pre-control-plane behavior.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum Adaptation {
+    /// Static behavior: bit-for-bit the pre-control-plane code path (no
+    /// snapshots taken, nothing re-ranked).
+    #[default]
+    Off,
+    /// Closed-loop: snapshot at plan boundaries, re-rank, re-shape.
+    On,
+}
+
+impl Adaptation {
+    /// True for [`Adaptation::On`].
+    pub fn is_on(self) -> bool {
+        self == Adaptation::On
+    }
+
+    /// Parse a report/CLI label (`static`/`off` or `adaptive`/`on`).
+    pub fn parse(s: &str) -> anyhow::Result<Adaptation> {
+        match s {
+            "static" | "off" => Ok(Adaptation::Off),
+            "adaptive" | "on" => Ok(Adaptation::On),
+            other => anyhow::bail!("unknown adaptation {other:?} (static | adaptive)"),
+        }
+    }
+
+    /// Short label for report tables (`static` / `adaptive`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Adaptation::Off => "static",
+            Adaptation::On => "adaptive",
+        }
+    }
+}
+
+impl std::fmt::Display for Adaptation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Reference MAC pass used to price a node's effective GF throughput
+/// through the cluster's cost model (1 MiB keeps integer-nanosecond
+/// rounding negligible).
+const REF_MAC_BYTES: usize = 1 << 20;
+
+/// Nominal sizes the shape predictor uses when the caller has no
+/// job-specific ones at hand (shape *ranking* is insensitive to the exact
+/// scale; these match the benchmark presets' order of magnitude).
+pub const REF_BLOCK_BYTES: usize = 1 << 20;
+/// Nominal pipeline buffer size companion of [`REF_BLOCK_BYTES`].
+pub const REF_BUF_BYTES: usize = 64 << 10;
+
+/// One node's load signals at the snapshot instant.
+#[derive(Clone, Debug)]
+pub struct NodeLoad {
+    /// The node this row describes.
+    pub node: NodeId,
+    /// False while the node is crashed (never rank a dead node).
+    pub alive: bool,
+    /// Data-plane commands currently queued or executing on the node.
+    pub inflight: usize,
+    /// Queued compute ahead of a new charge ([`crate::resources::CpuMeter::backlog`]).
+    pub cpu_backlog: Tick,
+    /// Booked uplink wire time ([`crate::cluster::RateLimiter::backlog`]).
+    pub up_backlog: Tick,
+    /// Booked downlink wire time.
+    pub down_backlog: Tick,
+    /// Current uplink rate, bytes/second (congestion-clamped).
+    pub up_rate: f64,
+    /// Current downlink rate, bytes/second.
+    pub down_rate: f64,
+    /// Effective GF multiply-accumulate throughput in bytes/second, priced
+    /// through the cluster's cost model (`f64::INFINITY` under `ZeroCost`:
+    /// free compute never bottlenecks a prediction).
+    pub mac_bytes_per_sec: f64,
+}
+
+impl NodeLoad {
+    /// Total queued time ahead of new work on this node (CPU + both NIC
+    /// directions) — the "how far behind is this node already" signal.
+    pub fn queued(&self) -> Tick {
+        self.cpu_backlog + self.up_backlog + self.down_backlog
+    }
+
+    /// The slowest of the node's three rates — what throttles a pipeline
+    /// hop placed on it.
+    pub fn effective_rate(&self) -> f64 {
+        self.up_rate.min(self.down_rate).min(self.mac_bytes_per_sec)
+    }
+}
+
+/// All nodes' load signals, frozen at one plan boundary.
+#[derive(Clone, Debug)]
+pub struct LoadSnapshot {
+    /// Cluster-clock tick the snapshot was taken at.
+    pub taken_at: Tick,
+    loads: Vec<NodeLoad>,
+}
+
+impl LoadSnapshot {
+    /// Snapshot every node of `cluster` at the current clock tick. Call
+    /// only at plan boundaries (before dispatching, or after a batch
+    /// completion) — concurrent workers would make the reads racy under
+    /// the threaded runtime and non-deterministic across runtimes.
+    pub fn take(cluster: &Cluster) -> LoadSnapshot {
+        let model = cluster.cost();
+        let ref_work = GfWork::mac(REF_MAC_BYTES);
+        let loads = (0..cluster.len())
+            .map(|id| {
+                let node = cluster.node(id);
+                let priced = model.cost(id, &ref_work);
+                let mac_bytes_per_sec = if priced.is_zero() {
+                    f64::INFINITY
+                } else {
+                    REF_MAC_BYTES as f64 / priced.as_secs_f64()
+                };
+                NodeLoad {
+                    node: id,
+                    alive: !node.is_failed(),
+                    inflight: node.inflight(),
+                    cpu_backlog: node.cpu.backlog(),
+                    up_backlog: node.up.backlog(),
+                    down_backlog: node.down.backlog(),
+                    up_rate: node.up.rate(),
+                    down_rate: node.down.rate(),
+                    mac_bytes_per_sec,
+                }
+            })
+            .collect();
+        LoadSnapshot {
+            taken_at: cluster.clock().now(),
+            loads,
+        }
+    }
+
+    /// The load row for `node`.
+    pub fn load(&self, node: NodeId) -> &NodeLoad {
+        &self.loads[node]
+    }
+
+    /// Number of nodes in the snapshot.
+    pub fn len(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// True when the snapshot holds no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.loads.is_empty()
+    }
+
+    /// Order `candidates` best-first: alive before crashed, then fewest
+    /// in-flight commands, then least queued backlog, then fastest
+    /// effective rate, then ascending node id — the deterministic
+    /// tie-break that keeps equal-load rankings identical across runs and
+    /// runtimes.
+    pub fn rank(&self, candidates: &[NodeId]) -> Vec<NodeId> {
+        let mut out: Vec<NodeId> = candidates.to_vec();
+        out.sort_by(|&a, &b| {
+            let (la, lb) = (&self.loads[a], &self.loads[b]);
+            lb.alive
+                .cmp(&la.alive)
+                .then(la.inflight.cmp(&lb.inflight))
+                .then(la.queued().cmp(&lb.queued()))
+                .then(lb.effective_rate().total_cmp(&la.effective_rate()))
+                .then(a.cmp(&b))
+        });
+        out
+    }
+
+    /// Predicted makespan of a pipeline over `shape` with `slots[i]`
+    /// running position i: the worst root-to-leaf path's fill latency
+    /// (one buffer through each hop's bottleneck, plus that slot's queued
+    /// backlog) plus the block draining through the path's bottleneck
+    /// seconds-per-byte. A slot's bottleneck is the slowest of its shared
+    /// NIC directions (fan-in/fan-out streams divide the direction's
+    /// rate) and its priced CPU MAC rate.
+    pub fn predict_makespan(
+        &self,
+        shape: &TopologyShape,
+        slots: &[NodeId],
+        flow: Flow,
+        block_bytes: usize,
+        buf_bytes: usize,
+    ) -> Duration {
+        let n = shape.n();
+        assert_eq!(slots.len(), n, "need exactly one node per slot");
+        let children = shape.children();
+        let buf = buf_bytes.min(block_bytes).max(1) as f64;
+        let block = block_bytes.max(1) as f64;
+        // positions are topologically ordered (parent index < child index
+        // in every Topology expansion), so one forward pass accumulates
+        // root-to-slot fill latency and the path bottleneck
+        let mut fill = vec![0f64; n];
+        let mut bottleneck = vec![0f64; n];
+        let mut worst = 0f64;
+        for i in 0..n {
+            let l = self.load(slots[i]);
+            let (in_streams, out_streams) = match flow {
+                Flow::Diffusion => (usize::from(shape.parent(i).is_some()), children[i].len()),
+                Flow::Aggregation => (children[i].len(), 1),
+            };
+            let down_spb = if in_streams > 0 { in_streams as f64 / l.down_rate } else { 0.0 };
+            let up_spb = if out_streams > 0 { out_streams as f64 / l.up_rate } else { 0.0 };
+            let cpu_spb = 1.0 / l.mac_bytes_per_sec; // 0.0 under ZeroCost
+            let per_byte = down_spb.max(up_spb).max(cpu_spb);
+            let (parent_fill, parent_bn) = match shape.parent(i) {
+                Some(p) => (fill[p], bottleneck[p]),
+                None => (0.0, 0.0),
+            };
+            fill[i] = parent_fill + l.queued().as_secs_f64() + per_byte * buf;
+            bottleneck[i] = parent_bn.max(per_byte);
+            worst = worst.max(fill[i] + bottleneck[i] * block);
+        }
+        Duration::from_secs_f64(worst)
+    }
+
+    /// Pick the predicted-fastest shape for an n-position pipeline over
+    /// `pool`: ranks the pool, binds the top n to each candidate's slots
+    /// (heaviest subtree first, so measured stragglers sink to leaves),
+    /// and returns the argmin with its binding and predicted makespan.
+    /// Ties keep the earliest candidate — deterministic by construction.
+    pub fn choose_topology(
+        &self,
+        pool: &[NodeId],
+        n: usize,
+        candidates: &[Topology],
+        flow: Flow,
+        block_bytes: usize,
+        buf_bytes: usize,
+    ) -> anyhow::Result<(Topology, Vec<NodeId>, Duration)> {
+        anyhow::ensure!(
+            pool.len() >= n,
+            "need {n} pipeline nodes, only {} candidates",
+            pool.len()
+        );
+        anyhow::ensure!(!candidates.is_empty(), "no candidate shapes to choose from");
+        let ranked = self.rank(pool);
+        let top = &ranked[..n];
+        let mut best: Option<(Topology, Vec<NodeId>, Duration)> = None;
+        for &topo in candidates {
+            let shape = topo.shape(n)?;
+            let slots = assign_slots(&shape, top);
+            let predicted = self.predict_makespan(&shape, &slots, flow, block_bytes, buf_bytes);
+            if best.as_ref().is_none_or(|(_, _, t)| predicted < *t) {
+                best = Some((topo, slots, predicted));
+            }
+        }
+        Ok(best.expect("candidates is non-empty"))
+    }
+}
+
+/// Which way payload moves through a shape — encode pipelines diffuse
+/// from the root outward (interior slots fan *out*), repair aggregation
+/// flows leaf-to-root (interior slots fan *in*).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Flow {
+    /// Encode: root sources, every slot forwards to its children.
+    Diffusion,
+    /// Repair: leaves source, every slot combines its children's streams.
+    Aggregation,
+}
+
+/// The shape families the auto-tuner weighs against each other: the
+/// traffic-optimal chain, a fanout-f tree (short tail, duplicated
+/// uplinks) and the half-chain hybrid between them. Degenerate n keeps
+/// just the chain.
+pub fn candidate_shapes(n: usize, fanout: usize) -> Vec<Topology> {
+    let mut shapes = vec![Topology::Chain];
+    if n >= 3 {
+        shapes.push(Topology::Tree {
+            fanout: fanout.max(1),
+        });
+        shapes.push(Topology::Hybrid {
+            chain_prefix: (n / 2).max(1),
+            tree_fanout: fanout.max(1),
+        });
+    }
+    shapes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, CongestionSpec};
+    use crate::resources::NodeProfile;
+
+    fn sim_cluster(nodes: usize) -> Cluster {
+        Cluster::start(ClusterSpec::test(nodes).sim())
+    }
+
+    #[test]
+    fn snapshot_of_idle_cluster_is_uniform_and_ranks_by_id() {
+        let cluster = sim_cluster(5);
+        let snap = LoadSnapshot::take(&cluster);
+        assert_eq!(snap.len(), 5);
+        assert_eq!(snap.taken_at, Tick::ZERO);
+        for id in 0..5 {
+            let l = snap.load(id);
+            assert!(l.alive);
+            assert_eq!(l.inflight, 0);
+            assert_eq!(l.queued(), Tick::ZERO);
+            assert_eq!(l.mac_bytes_per_sec, f64::INFINITY, "ZeroCost prices free");
+        }
+        // equal loads: the node-id tie-break keeps ranking deterministic
+        assert_eq!(snap.rank(&[4, 2, 0, 3, 1]), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rank_sinks_congested_crashed_and_slow_nodes() {
+        let spec = ClusterSpec::test(6)
+            .sim()
+            .with_profiles(vec![
+                NodeProfile::EC2_SMALL,
+                NodeProfile::EC2_SMALL,
+                NodeProfile::EC2_SMALL,
+                NodeProfile::THINCLIENT, // node 3: slow CPU
+                NodeProfile::EC2_SMALL,
+                NodeProfile::EC2_SMALL,
+            ])
+            .unwrap();
+        let cluster = Cluster::start(spec);
+        cluster.congest(
+            1,
+            &CongestionSpec {
+                bytes_per_sec: 1e6,
+                extra_latency: Duration::ZERO,
+                jitter: Duration::ZERO,
+            },
+        );
+        cluster.fail_node(4);
+        let snap = LoadSnapshot::take(&cluster);
+        let ranked = snap.rank(&[0, 1, 2, 3, 4, 5]);
+        assert_eq!(ranked[5], 4, "crashed node ranks dead last");
+        assert!(!snap.load(4).alive);
+        let pos = |id: NodeId| ranked.iter().position(|&r| r == id).unwrap();
+        assert!(pos(1) > pos(0), "congested node sinks below clean ones");
+        assert!(pos(3) > pos(0), "slow-CPU node sinks below clean ones");
+        assert!(
+            snap.load(3).mac_bytes_per_sec < snap.load(0).mac_bytes_per_sec,
+            "THINCLIENT prices slower through the cost model"
+        );
+    }
+
+    #[test]
+    fn predictor_prefers_chain_on_uniform_pool() {
+        let cluster = sim_cluster(8);
+        let snap = LoadSnapshot::take(&cluster);
+        let pool: Vec<NodeId> = (0..8).collect();
+        let (topo, slots, predicted) = snap
+            .choose_topology(
+                &pool,
+                8,
+                &candidate_shapes(8, 2),
+                Flow::Diffusion,
+                REF_BLOCK_BYTES,
+                REF_BUF_BYTES,
+            )
+            .unwrap();
+        assert_eq!(
+            topo,
+            Topology::Chain,
+            "uniform idle pool keeps the traffic-optimal chain"
+        );
+        assert_eq!(slots, pool);
+        assert!(predicted > Duration::ZERO);
+    }
+
+    #[test]
+    fn predictor_switches_shape_and_sinks_straggler_when_pool_is_tight() {
+        let cluster = sim_cluster(8);
+        // node 6 clamped 20x: with pool == n it cannot be avoided, so the
+        // tuner should pick a branching shape and leaf the straggler
+        cluster.congest(
+            6,
+            &CongestionSpec {
+                bytes_per_sec: 5e7,
+                extra_latency: Duration::ZERO,
+                jitter: Duration::ZERO,
+            },
+        );
+        let snap = LoadSnapshot::take(&cluster);
+        let pool: Vec<NodeId> = (0..8).collect();
+        let shapes = candidate_shapes(8, 2);
+        let (topo, slots, _) = snap
+            .choose_topology(&pool, 8, &shapes, Flow::Diffusion, REF_BLOCK_BYTES, REF_BUF_BYTES)
+            .unwrap();
+        assert_ne!(topo, Topology::Chain, "tight pool with a straggler must branch");
+        let shape = topo.shape(8).unwrap();
+        let slot = slots.iter().position(|&v| v == 6).unwrap();
+        assert!(
+            shape.children()[slot].is_empty(),
+            "the clamped node must sit on a leaf slot: {slots:?}"
+        );
+        // and the chain prediction is strictly worse than the winner's
+        let chain_shape = Topology::Chain.shape(8).unwrap();
+        let ranked = snap.rank(&pool);
+        let chain_t = snap.predict_makespan(
+            &chain_shape,
+            &assign_slots(&chain_shape, &ranked[..8]),
+            Flow::Diffusion,
+            REF_BLOCK_BYTES,
+            REF_BUF_BYTES,
+        );
+        let win_t =
+            snap.predict_makespan(&shape, &slots, Flow::Diffusion, REF_BLOCK_BYTES, REF_BUF_BYTES);
+        assert!(win_t < chain_t, "winner {win_t:?} must beat chain {chain_t:?}");
+    }
+
+    #[test]
+    fn prediction_is_a_pure_function_of_the_snapshot() {
+        let cluster = sim_cluster(6);
+        cluster.congest(
+            2,
+            &CongestionSpec {
+                bytes_per_sec: 1e7,
+                extra_latency: Duration::ZERO,
+                jitter: Duration::ZERO,
+            },
+        );
+        let snap = LoadSnapshot::take(&cluster);
+        let pool: Vec<NodeId> = (0..6).collect();
+        let shapes = candidate_shapes(6, 2);
+        let a = snap
+            .choose_topology(&pool, 6, &shapes, Flow::Aggregation, 1 << 20, 1 << 16)
+            .unwrap();
+        let b = snap
+            .choose_topology(&pool, 6, &shapes, Flow::Aggregation, 1 << 20, 1 << 16)
+            .unwrap();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn adaptation_labels_roundtrip() {
+        assert_eq!(Adaptation::default(), Adaptation::Off);
+        assert!(!Adaptation::Off.is_on());
+        assert!(Adaptation::On.is_on());
+        for a in [Adaptation::Off, Adaptation::On] {
+            assert_eq!(Adaptation::parse(a.name()).unwrap(), a);
+        }
+        assert_eq!(Adaptation::parse("on").unwrap(), Adaptation::On);
+        assert_eq!(Adaptation::parse("off").unwrap(), Adaptation::Off);
+        assert!(Adaptation::parse("maybe").is_err());
+    }
+}

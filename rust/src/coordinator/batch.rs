@@ -128,6 +128,76 @@ pub fn place_and_build_pipeline_jobs<F: GfElem + SliceOps>(
     Ok(out)
 }
 
+/// One object's outcome from [`run_batch_adaptive`]: which nodes got which
+/// slot, which shape the policy settled on, and the measured makespan.
+/// Callers need all three to verify decode — different shapes compose
+/// different generators, so the coded bytes differ per shape.
+#[derive(Clone, Debug)]
+pub struct AdaptiveRun {
+    /// The per-slot node binding the policy chose.
+    pub placement: ReplicaPlacement,
+    /// The shape the policy settled on for this object.
+    pub topology: Topology,
+    /// Dispatch-to-last-store time for this object's wave.
+    pub makespan: Duration,
+}
+
+/// Mid-batch re-shaping: archive `objects` in waves of `window`, placing
+/// each wave at a quiescent plan boundary — the placement policy ranks the
+/// then-alive nodes against the load state earlier waves left behind
+/// (residual NIC/CPU backlog, in-flight commands, churned rates and
+/// profiles), so nodes whose measured load grew sink to leaf slots or out
+/// of the selection entirely, and the shape choice tracks the cluster as
+/// it degrades. `window == 1` re-ranks after every completion; larger
+/// windows trade re-ranking granularity for intra-wave concurrency.
+///
+/// Snapshots are taken only between waves (inside
+/// [`place_and_build_pipeline_jobs`], before anything from the new wave is
+/// dispatched), never mid-flight — that is what keeps an adaptive run
+/// deterministic per seed: the load state at a plan boundary is a pure
+/// function of the schedule so far. With a static policy this degenerates
+/// to a windowed [`run_batch`] over the same placements.
+#[allow(clippy::too_many_arguments)]
+pub fn run_batch_adaptive<F: GfElem + SliceOps>(
+    cluster: &Cluster,
+    backend: &BackendHandle,
+    policy: &dyn PlacementPolicy,
+    code: &RapidRaidCode<F>,
+    objects: &[ObjectId],
+    requested: Topology,
+    buf_bytes: usize,
+    block_bytes: usize,
+    window: usize,
+) -> anyhow::Result<Vec<AdaptiveRun>> {
+    let window = window.max(1);
+    let mut out = Vec::with_capacity(objects.len());
+    for wave in objects.chunks(window) {
+        let placed = place_and_build_pipeline_jobs(
+            cluster,
+            policy,
+            code,
+            wave,
+            requested,
+            buf_bytes,
+            block_bytes,
+        )?;
+        let jobs: Vec<BatchJob> = placed.iter().map(|(_, j)| j.clone()).collect();
+        let times = run_batch(cluster, backend, &jobs)?;
+        for ((placement, job), makespan) in placed.into_iter().zip(times) {
+            let topology = match &job {
+                BatchJob::Pipeline(p) => p.topology,
+                BatchJob::Classical(_) => unreachable!("builder emits pipeline jobs"),
+            };
+            out.push(AdaptiveRun {
+                placement,
+                topology,
+                makespan,
+            });
+        }
+    }
+    Ok(out)
+}
+
 /// Rotate a chain of `n` positions over `nodes` starting at `offset`
 /// (object i in the 16-object experiment uses offset i).
 pub fn rotated_chain(nodes: usize, n: usize, offset: usize) -> Vec<usize> {
@@ -246,6 +316,60 @@ mod tests {
                         .is_some(),
                     "object {} block {pos} missing on node {node}",
                     placement.object
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_batch_reranks_each_wave_and_archives_everything() {
+        use crate::cluster::CongestionSpec;
+        use crate::coordinator::topology::{LoadAwarePolicy, Topology};
+        // 11-node pool for an 8-slot pipeline, one straggler clamped 100x:
+        // the adaptive driver must keep it out of every wave's placement
+        // (spares exist) while all objects archive and decode-verifiably
+        // land. window=1 re-places at every completion boundary.
+        let cluster = Cluster::start(ClusterSpec::test(11).sim());
+        cluster.congest(
+            1,
+            &CongestionSpec {
+                bytes_per_sec: 1e7,
+                extra_latency: std::time::Duration::ZERO,
+                jitter: std::time::Duration::ZERO,
+            },
+        );
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let objects: Vec<ObjectId> = (0..3).map(|i| ObjectId(500 + i)).collect();
+        let runs = run_batch_adaptive(
+            &cluster,
+            &backend,
+            &LoadAwarePolicy::adaptive(),
+            &code,
+            &objects,
+            Topology::Chain,
+            2048,
+            8 * 1024,
+            1,
+        )
+        .unwrap();
+        assert_eq!(runs.len(), 3);
+        for run in &runs {
+            assert!(
+                !run.placement.chain.contains(&1),
+                "straggler placed: {:?}",
+                run.placement.chain
+            );
+            assert!(run.makespan > Duration::ZERO);
+            for (pos, &node) in run.placement.chain.iter().enumerate() {
+                assert!(
+                    cluster
+                        .node(node)
+                        .peek(BlockKey::coded(run.placement.object, pos))
+                        .unwrap()
+                        .is_some(),
+                    "object {} block {pos} missing on node {node}",
+                    run.placement.object
                 );
             }
         }

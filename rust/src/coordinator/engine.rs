@@ -24,8 +24,14 @@
 //! caller's order; [`CongestionAwarePolicy`] ranks candidate nodes by
 //! current load (queued + running data-plane commands), CPU-meter backlog
 //! and NIC rate; [`super::topology::LoadAwarePolicy`] additionally picks
-//! the pipeline *shape* per object. Policies live in
-//! `coordinator::topology::policy`; the engine only consumes them.
+//! the pipeline *shape* per object — and in its
+//! [`adaptive`](super::topology::LoadAwarePolicy::adaptive) variant does
+//! both from a plan-boundary [`LoadSnapshot`](crate::control::LoadSnapshot)
+//! plus the analytic makespan predictor (the closed-loop control plane;
+//! see [`crate::control`] and the wave-placing
+//! [`run_batch_adaptive`](super::batch::run_batch_adaptive) driver).
+//! Policies live in `coordinator::topology::policy`; the engine only
+//! consumes them.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -44,7 +44,9 @@ pub mod pipeline_decode;
 pub mod plan;
 pub mod topology;
 
-pub use batch::{pipeline_jobs, run_batch, run_batch_recorded, BatchJob};
+pub use batch::{
+    pipeline_jobs, run_batch, run_batch_adaptive, run_batch_recorded, AdaptiveRun, BatchJob,
+};
 pub use classical::{archive_classical, ClassicalJob};
 pub use decode::{reconstruct, survey_coded};
 pub use engine::{

@@ -21,6 +21,9 @@ use std::sync::Arc;
 use crate::clock::Tick;
 use crate::cluster::{Cluster, NodeId};
 use crate::codes::TopologyShape;
+use crate::control::{
+    candidate_shapes, Adaptation, Flow, LoadSnapshot, REF_BLOCK_BYTES, REF_BUF_BYTES,
+};
 
 use super::Topology;
 
@@ -141,20 +144,48 @@ impl PlacementPolicy for CongestionAwarePolicy {
 /// [`Topology::Chain`]; visible CPU backlog or a wide rate spread switches
 /// to a tree (stragglers land on leaf slots where they pace only
 /// themselves); a moderate spread takes the hybrid middle ground.
+///
+/// With [`Adaptation::On`] (see [`LoadAwarePolicy::adaptive`]) the static
+/// threshold heuristic is replaced by the control plane's closed loop: a
+/// plan-boundary [`LoadSnapshot`] ranks the candidates by measured
+/// CPU/NIC backlog, in-flight load and priced GF throughput, and the
+/// analytic predictor picks the candidate shape with the smallest
+/// predicted makespan ([`LoadSnapshot::choose_topology`]). `Off` (the
+/// default) is bit-for-bit the static behavior — no snapshot is taken.
 pub struct LoadAwarePolicy {
     /// Fanout used for the tree/hybrid shapes this policy picks.
     pub tree_fanout: usize,
+    /// Gate for the snapshot-predicted closed loop (default [`Adaptation::Off`]).
+    pub adaptation: Adaptation,
 }
 
 impl Default for LoadAwarePolicy {
     fn default() -> Self {
-        Self { tree_fanout: 2 }
+        Self {
+            tree_fanout: 2,
+            adaptation: Adaptation::Off,
+        }
+    }
+}
+
+impl LoadAwarePolicy {
+    /// The closed-loop variant: snapshot-ranked placement and
+    /// predicted-makespan shape choice ([`Adaptation::On`]).
+    pub fn adaptive() -> Self {
+        Self {
+            adaptation: Adaptation::On,
+            ..Self::default()
+        }
     }
 }
 
 impl PlacementPolicy for LoadAwarePolicy {
     fn rank(&self, cluster: &Cluster, candidates: &[NodeId]) -> Vec<NodeId> {
-        CongestionAwarePolicy.rank(cluster, candidates)
+        if self.adaptation.is_on() {
+            LoadSnapshot::take(cluster).rank(candidates)
+        } else {
+            CongestionAwarePolicy.rank(cluster, candidates)
+        }
     }
 
     fn choose_topology(
@@ -164,6 +195,24 @@ impl PlacementPolicy for LoadAwarePolicy {
         n: usize,
         _requested: Topology,
     ) -> Topology {
+        if self.adaptation.is_on() {
+            // Closed loop: predict each candidate shape's makespan from a
+            // fresh plan-boundary snapshot (same quiescent state `rank`
+            // read — nothing dispatched in between) and keep the argmin.
+            let snap = LoadSnapshot::take(cluster);
+            let shapes = candidate_shapes(n, self.tree_fanout);
+            if let Ok((topology, _, _)) = snap.choose_topology(
+                ranked,
+                n,
+                &shapes,
+                Flow::Diffusion,
+                REF_BLOCK_BYTES,
+                REF_BUF_BYTES,
+            ) {
+                return topology;
+            }
+            // degenerate pools fall through to the static heuristic
+        }
         // Signals over the n best-ranked candidates (the nodes the shape
         // will actually run on), all deterministic reads of cluster state.
         let pool = &ranked[..n.min(ranked.len())];
@@ -207,6 +256,10 @@ pub enum PolicyKind {
     CongestionAware,
     /// Shape-choosing placement ([`LoadAwarePolicy`], fanout 2).
     LoadAware,
+    /// The closed-loop control plane ([`LoadAwarePolicy::adaptive`]):
+    /// snapshot-ranked placement, predicted-makespan shape choice, and —
+    /// where the consumer supports it — straggler-aware repair sourcing.
+    Adaptive,
 }
 
 impl PolicyKind {
@@ -216,6 +269,16 @@ impl PolicyKind {
             PolicyKind::Fifo => Arc::new(FifoPolicy),
             PolicyKind::CongestionAware => Arc::new(CongestionAwarePolicy),
             PolicyKind::LoadAware => Arc::new(LoadAwarePolicy::default()),
+            PolicyKind::Adaptive => Arc::new(LoadAwarePolicy::adaptive()),
+        }
+    }
+
+    /// The adaptation gate this policy choice implies for consumers that
+    /// carry one (the repair scheduler, the adaptive batch driver).
+    pub fn adaptation(&self) -> Adaptation {
+        match self {
+            PolicyKind::Adaptive => Adaptation::On,
+            _ => Adaptation::Off,
         }
     }
 
@@ -225,6 +288,7 @@ impl PolicyKind {
             PolicyKind::Fifo => "fifo",
             PolicyKind::CongestionAware => "congestion-aware",
             PolicyKind::LoadAware => "load-aware",
+            PolicyKind::Adaptive => "adaptive",
         }
     }
 }
@@ -305,6 +369,72 @@ mod tests {
             shape.children()[slot_of_congested].is_empty(),
             "straggler must sit on a leaf: {:?}",
             sel.nodes
+        );
+    }
+
+    #[test]
+    fn adaptive_policy_keeps_chain_on_idle_uniform_cluster() {
+        let cluster = Cluster::start(ClusterSpec::test(8).sim());
+        let policy = LoadAwarePolicy::adaptive();
+        let sel = policy
+            .select_topology(&cluster, &(0..8).collect::<Vec<_>>(), 8, Topology::Chain)
+            .unwrap();
+        assert_eq!(sel.topology, Topology::Chain);
+        assert_eq!(sel.nodes, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn adaptive_policy_routes_around_stragglers_given_spare_nodes() {
+        // 8-slot pipeline over a 12-node pool with two clamped nodes: the
+        // snapshot ranking must keep both stragglers out of the selection
+        // entirely (the static heuristic can only re-shape, not avoid).
+        let cluster = Cluster::start(ClusterSpec::test(12).sim());
+        for id in [2, 5] {
+            cluster.congest(
+                id,
+                &CongestionSpec {
+                    bytes_per_sec: 1e7,
+                    extra_latency: std::time::Duration::ZERO,
+                    jitter: std::time::Duration::ZERO,
+                },
+            );
+        }
+        let policy = LoadAwarePolicy::adaptive();
+        let sel = policy
+            .select_topology(&cluster, &(0..12).collect::<Vec<_>>(), 8, Topology::Chain)
+            .unwrap();
+        assert!(
+            !sel.nodes.contains(&2) && !sel.nodes.contains(&5),
+            "stragglers must not be placed: {:?}",
+            sel.nodes
+        );
+    }
+
+    #[test]
+    fn off_mode_is_the_static_heuristic() {
+        // Adaptation::Off must produce exactly the pre-control-plane
+        // selection — same ranking, same shape — on any cluster state.
+        let cluster = Cluster::start(ClusterSpec::test(8).sim());
+        cluster.congest(
+            3,
+            &CongestionSpec {
+                bytes_per_sec: 1e8,
+                extra_latency: std::time::Duration::ZERO,
+                jitter: std::time::Duration::ZERO,
+            },
+        );
+        let off = LoadAwarePolicy::default();
+        assert_eq!(off.adaptation, Adaptation::Off);
+        let candidates: Vec<NodeId> = (0..8).collect();
+        let sel = off
+            .select_topology(&cluster, &candidates, 8, Topology::Chain)
+            .unwrap();
+        // the static heuristic's documented outputs, unchanged
+        assert_eq!(sel.topology, Topology::Tree { fanout: 2 });
+        assert_eq!(
+            off.rank(&cluster, &candidates),
+            CongestionAwarePolicy.rank(&cluster, &candidates),
+            "Off-mode ranking must be the CongestionAware ranking"
         );
     }
 

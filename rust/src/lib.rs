@@ -33,6 +33,7 @@
 //! | [`storage`] | objects, blocks, replica placement, block stores |
 //! | [`coordinator`] | the archival system: ArchivalPlan IR + PlanExecutor engine, with classical/pipelined/batch/decode/migration as plan builders; degraded reads via `decode::survey_coded` |
 //! | [`coordinator::topology`] | first-class pipeline shapes: `Topology` (`Chain`/`Tree`/`Hybrid`) expanded to ordered shapes, encode/aggregate lowerings onto the plan IR, and shape-aware `PlacementPolicy` placement (`FifoPolicy`/`CongestionAwarePolicy`/`LoadAwarePolicy`, slot-weighted binding) |
+//! | [`control`] | adaptive control plane: plan-boundary [`control::LoadSnapshot`]s of measured per-node load (CPU/NIC backlogs, in-flight commands, rates, priced GF throughput), deterministic node ranking, the analytic shape-makespan predictor behind fanout auto-tuning and straggler-aware repair sourcing, all gated by [`control::Adaptation`] (`Off` is bit-for-bit the static behavior) |
 //! | [`repair`] | failure repair as plan builders: star vs topology-shaped pipelined (Li et al. 2019) single-block repair, repair coefficients from the generator, eager/lazy/reliability-budget scheduler |
 //! | [`runtime`] | PJRT executor loading the AOT artifacts (`artifacts/*.hlo.txt`); stubbed without the `pjrt` feature |
 //! | [`backend`] | pluggable GF compute: native Rust vs PJRT artifacts |
@@ -61,6 +62,7 @@ pub mod bench_scenarios;
 pub mod clock;
 pub mod cluster;
 pub mod codes;
+pub mod control;
 pub mod coordinator;
 pub mod gf;
 pub mod metrics;

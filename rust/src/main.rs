@@ -17,6 +17,9 @@
 //! rapidraid bench-topo-sim [--block-kib 512] [--seed 5]       # pipeline-shape shootout:
 //!                                                             # chain vs tree vs hybrid ×
 //!                                                             # uniform/ec2-mix cost, SimClock
+//! rapidraid bench-straggler-sim [--block-kib 256] [--seed 5]  # adaptive control plane vs
+//!                                                             # every static shape on a
+//!                                                             # straggler-seeded SimClock pool
 //! rapidraid bench-scale-sim [--smoke] [--nodes 2048] [--rack 32]
 //!                        [--virtual-secs 86400] [--epoch-secs 1200]
 //!                        [--objects-per-epoch 32] [--block-kib 8]
@@ -33,9 +36,15 @@
 //! ```
 //!
 //! The SimClock presets (`bench-table2-sim`, `bench-topo-sim`,
-//! `bench-scale-sim`, `sim-longrun`) additionally accept:
+//! `bench-straggler-sim`, `bench-scale-sim`, `sim-longrun`) additionally
+//! accept:
 //!
 //! ```text
+//! --runtime auto|threaded|multiplexed     dataplane execution runtime
+//!                                         (default auto: SimClock specs
+//!                                         resolve to the multiplexed
+//!                                         single-driver scheduler; virtual
+//!                                         timelines are runtime-invariant)
 //! --trace <out.jsonl|out.perfetto.json>   record the dataplane event trace:
 //!                                         a `.jsonl` path gets the canonical
 //!                                         deterministic event log (input of
@@ -96,6 +105,7 @@ fn main() {
         Some("bench-repair") => cmd_bench_repair(&opts),
         Some("bench-table2-sim") => cmd_bench_table2_sim(&opts),
         Some("bench-topo-sim") => cmd_bench_topo_sim(&opts),
+        Some("bench-straggler-sim") => cmd_bench_straggler_sim(&opts),
         Some("bench-scale-sim") => cmd_bench_scale_sim(&opts),
         Some("sim-longrun") => cmd_sim_longrun(&opts),
         Some("trace-report") => cmd_trace_report(&opts),
@@ -129,6 +139,8 @@ fn usage() {
          \x20 bench-repair      single-block repair, star vs pipelined\n\
          \x20 bench-table2-sim  Table II on the SimClock, CPU cost models charged\n\
          \x20 bench-topo-sim    pipeline-shape shootout: chain vs tree vs hybrid\n\
+         \x20 bench-straggler-sim adaptive control plane vs static shapes on a\n\
+         \x20                   straggler-seeded pool\n\
          \x20 bench-scale-sim   2,048-node virtual-day archival on the\n\
          \x20                   multiplexed runtime\n\
          \x20 sim-longrun       long-run crash/repair trace on the SimClock\n\
@@ -253,6 +265,16 @@ fn calibration_from(
     let rates = rapidraid::resources::UniformCost::from_measured(&bench)?;
     println!("# calibration: measured GF rates from {path}");
     Ok(Some(rates))
+}
+
+/// `--runtime auto|threaded|multiplexed` (default `auto`) for the SimClock
+/// presets — picks the dataplane execution runtime; virtual timelines are
+/// runtime-invariant, so this swaps the engine, not the results.
+fn runtime_from(opts: &HashMap<String, String>) -> anyhow::Result<rapidraid::cluster::RuntimeKind> {
+    match opts.get("runtime") {
+        Some(s) => rapidraid::cluster::RuntimeKind::parse(s),
+        None => Ok(rapidraid::cluster::RuntimeKind::Auto),
+    }
 }
 
 /// Default `--trace` ring capacity: one million events (~100 MB retained
@@ -388,6 +410,7 @@ fn cmd_bench_table2_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         block_kib << 10,
         seed,
         calibration,
+        runtime_from(opts)?,
         &mut std::io::stdout().lock(),
     )?;
     finish_trace(trace, Some(&mut report))?;
@@ -405,9 +428,44 @@ fn cmd_bench_topo_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         block_kib << 10,
         seed,
         calibration,
+        runtime_from(opts)?,
         &mut std::io::stdout().lock(),
     )?;
     finish_trace(trace, Some(&mut report))?;
+    emit_json(&report)
+}
+
+fn cmd_bench_straggler_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let block_kib: usize = get(opts, "block-kib", 256);
+    let seed: u64 = get(opts, "seed", 5);
+    let be = backend(opts)?;
+    let calibration = calibration_from(opts)?;
+    let trace = trace_from(opts);
+    let (rows, mut report) = scenarios::straggler_sim_calibrated(
+        &be,
+        block_kib << 10,
+        seed,
+        calibration,
+        runtime_from(opts)?,
+        &mut std::io::stdout().lock(),
+    )?;
+    finish_trace(trace, Some(&mut report))?;
+    // The preset's reason to exist: the closed loop must win on this pool.
+    for (n, k) in [(11usize, 8usize), (22, 16)] {
+        let adaptive = rows
+            .iter()
+            .find(|r| r.n == n && r.adaptive)
+            .map(|r| r.makespan)
+            .ok_or_else(|| anyhow::anyhow!("no adaptive cell for n={n}"))?;
+        for r in rows.iter().filter(|r| r.n == n && !r.adaptive) {
+            anyhow::ensure!(
+                adaptive <= r.makespan,
+                "(n={n},k={k}) adaptive {adaptive:?} lost to static {} at {:?}",
+                r.cell,
+                r.makespan
+            );
+        }
+    }
     emit_json(&report)
 }
 
@@ -425,6 +483,7 @@ fn cmd_bench_scale_sim(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     cfg.objects_per_epoch = get(opts, "objects-per-epoch", cfg.objects_per_epoch);
     cfg.block_bytes = get::<usize>(opts, "block-kib", cfg.block_bytes >> 10) << 10;
     cfg.seed = get(opts, "seed", cfg.seed);
+    cfg.runtime = runtime_from(opts)?;
     let be = backend(opts)?;
     let trace = trace_from(opts);
     let (report, mut bench) = {
@@ -484,6 +543,7 @@ fn cmd_sim_longrun(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(t) = opts.get("topology") {
         cfg.topology = rapidraid::coordinator::Topology::parse(t)?;
     }
+    cfg.runtime = runtime_from(opts)?;
     cfg.calibration = calibration_from(opts)?;
     let be = backend(opts)?;
     let trace = trace_from(opts);

@@ -22,6 +22,7 @@ use std::time::Duration;
 use crate::backend::BackendHandle;
 use crate::cluster::{Cluster, NodeId};
 use crate::codes::CodeView;
+use crate::control::{candidate_shapes, Adaptation, Flow, LoadSnapshot};
 use crate::coordinator::decode::survey_coded;
 use crate::coordinator::engine::{ChainPolicy, PlanExecutor};
 use crate::coordinator::plan::ArchivalPlan;
@@ -126,8 +127,17 @@ pub struct RepairScheduler {
     /// (`PlanExecutor::run_many_bounded`).
     pub max_concurrent: usize,
     /// Aggregation shape pipelined repairs are lowered through (ignored by
-    /// the star planner).
+    /// the star planner, overridden per object when `adaptation` is on).
     pub topology: Topology,
+    /// Straggler-aware repair sourcing gate: with [`Adaptation::On`] each
+    /// pass snapshots the cluster once at its plan boundary
+    /// ([`LoadSnapshot::take`]), orders every object's survivors by their
+    /// holders' measured load before the independent k-subset is picked —
+    /// so repairs source from fast, idle survivors — and replaces the
+    /// fixed `topology` with the predicted-critical-path aggregation
+    /// shape per repair. [`Adaptation::Off`] (the default) is bit-for-bit
+    /// the static scheduler: no snapshot, survivor order untouched.
+    pub adaptation: Adaptation,
 }
 
 impl RepairScheduler {
@@ -139,6 +149,7 @@ impl RepairScheduler {
             trigger,
             max_concurrent: 4,
             topology: Topology::Chain,
+            adaptation: Adaptation::Off,
         }
     }
 
@@ -151,6 +162,13 @@ impl RepairScheduler {
     /// Substitute the aggregation shape pipelined repairs use.
     pub fn with_topology(mut self, topology: Topology) -> Self {
         self.topology = topology;
+        self
+    }
+
+    /// Gate the closed-loop straggler-aware sourcing (see
+    /// [`RepairScheduler::adaptation`]).
+    pub fn with_adaptation(mut self, adaptation: Adaptation) -> Self {
+        self.adaptation = adaptation;
         self
     }
 
@@ -173,6 +191,13 @@ impl RepairScheduler {
         let mut report = RepairReport::default();
         let mut plans: Vec<ArchivalPlan> = Vec::new();
         let mut pending: Vec<(usize, RepairAction)> = Vec::new();
+        // One snapshot per pass: planning happens entirely before the
+        // batch dispatch, so the whole pass is one plan boundary and every
+        // object's sourcing decision reads the same frozen load state.
+        let snapshot = self
+            .adaptation
+            .is_on()
+            .then(|| LoadSnapshot::take(cluster));
 
         for (pi, p) in placements.iter().enumerate() {
             let (avail, block_bytes) = survey_coded(cluster, &p.chain, p.object);
@@ -202,6 +227,7 @@ impl RepairScheduler {
                 policy,
                 self.strategy,
                 self.topology,
+                snapshot.as_ref(),
                 p,
                 &avail,
                 &missing,
@@ -257,8 +283,13 @@ impl RepairScheduler {
 
 /// Plan every missing-block repair of one object: choose a newcomer per
 /// lost block (in place when the holder survived, otherwise the policy's
-/// best alive off-chain node) and lower it with `strategy`. Any error here
-/// makes the *object* unschedulable; it never aborts the pass.
+/// best alive off-chain node) and lower it with `strategy`. With a
+/// `snapshot` the survivor order — and through it the greedy independent
+/// k-subset [`CodeView::repair_coefficients`] settles on — prefers the
+/// holders with the least measured load, and each pipelined repair's
+/// aggregation shape is the predicted-critical-path argmin over its
+/// actual sources. Any error here makes the *object* unschedulable; it
+/// never aborts the pass.
 #[allow(clippy::too_many_arguments)]
 fn plan_object<F: GfElem + SliceOps, C: CodeView<F>>(
     cluster: &Cluster,
@@ -266,6 +297,7 @@ fn plan_object<F: GfElem + SliceOps, C: CodeView<F>>(
     policy: &dyn ChainPolicy,
     strategy: RepairStrategy,
     topology: Topology,
+    snapshot: Option<&LoadSnapshot>,
     p: &ReplicaPlacement,
     avail: &[usize],
     missing: &[usize],
@@ -277,6 +309,32 @@ fn plan_object<F: GfElem + SliceOps, C: CodeView<F>>(
         "object {}: no surviving coded blocks to repair from",
         p.object
     );
+    // Straggler-aware sourcing: the greedy subset search keeps survivor
+    // positions in `avail` order whenever their rows are independent, so
+    // sorting positions by their holders' snapshot rank steers every
+    // repair toward fast, idle survivors. Any independent k-subset
+    // regenerates the same lost block, so the repaired bytes are
+    // identical either way — only the sourcing (and its critical path)
+    // changes. `None` leaves the survey order untouched (the static
+    // path, byte-for-byte).
+    let reordered: Vec<usize>;
+    let avail: &[usize] = match snapshot {
+        Some(snap) => {
+            let holders: Vec<NodeId> = avail.iter().map(|&pos| p.chain[pos]).collect();
+            let ranked = snap.rank(&holders);
+            let goodness = |pos: usize| {
+                ranked
+                    .iter()
+                    .position(|&n| n == p.chain[pos])
+                    .expect("rank is a permutation of the holders")
+            };
+            let mut v = avail.to_vec();
+            v.sort_by_key(|&pos| (goodness(pos), pos));
+            reordered = v;
+            &reordered
+        }
+        None => avail,
+    };
     // Nodes that will hold a block of this object post-repair: survivors
     // keep theirs, each repair claims one more.
     let mut taken: HashSet<NodeId> = avail.iter().map(|&pos| p.chain[pos]).collect();
@@ -310,7 +368,32 @@ fn plan_object<F: GfElem + SliceOps, C: CodeView<F>>(
         let plan = match strategy {
             RepairStrategy::Star => StarRepairJob::new(job).plan()?,
             RepairStrategy::Pipelined => {
-                PipelinedRepairJob::with_topology(job, topology).plan()?
+                // Fanout auto-tuning over the aggregation: predict each
+                // candidate shape's critical path over the repair's actual
+                // sources and take the argmin (sources are already ranked
+                // best-first, matching the heaviest-subtree-first slot
+                // binding the predictor assumes). Degenerate source sets
+                // keep the configured shape.
+                let shape = match snapshot {
+                    Some(snap) => {
+                        let holders: Vec<NodeId> =
+                            job.sources.iter().map(|&(n, _)| n).collect();
+                        let shapes = candidate_shapes(holders.len(), 2);
+                        match snap.choose_topology(
+                            &holders,
+                            holders.len(),
+                            &shapes,
+                            Flow::Aggregation,
+                            block_bytes,
+                            buf_bytes,
+                        ) {
+                            Ok((topo, _, _)) => topo,
+                            Err(_) => topology,
+                        }
+                    }
+                    None => topology,
+                };
+                PipelinedRepairJob::with_topology(job, shape).plan()?
             }
         };
         planned.push((
@@ -527,6 +610,62 @@ mod tests {
             )
             .unwrap();
         assert_eq!(report.actions[0].new_node, 9, "{:?}", report.actions);
+    }
+
+    #[test]
+    fn adaptive_sourcing_beats_static_on_congested_survivors() {
+        // (8,4) archived on nodes 0..8 of a 10-node sim cluster; survivors
+        // 1 and 2 then get clamped 100x and node 3 crashes. The static
+        // scheduler sources from the first independent subset of the
+        // survey order — which includes the clamped survivors — while the
+        // adaptive pass ranks them last and repairs entirely from clean
+        // nodes. Same regenerated bytes, much shorter critical path.
+        let run = |adaptation: Adaptation| -> (Duration, Vec<u8>) {
+            let object = ObjectId(308);
+            let cluster = Cluster::start(ClusterSpec::test(10).sim());
+            let placement = ReplicaPlacement::new(object, 4, (0..8).collect()).unwrap();
+            ingest_object(&cluster, &placement, 8 * 1024).unwrap();
+            let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+            let backend: BackendHandle = Arc::new(NativeBackend::new());
+            let job = PipelineJob::from_code(&code, &placement, 2048, 8 * 1024).unwrap();
+            archive_pipeline(&cluster, &backend, &job).unwrap();
+            for id in [1usize, 2] {
+                cluster.congest(
+                    id,
+                    &crate::cluster::CongestionSpec {
+                        bytes_per_sec: 1e7,
+                        extra_latency: Duration::ZERO,
+                        jitter: Duration::ZERO,
+                    },
+                );
+            }
+            cluster.fail_node(3);
+            let mut placements = [placement];
+            let sched = RepairScheduler::new(RepairStrategy::Pipelined, RepairTrigger::Eager)
+                .with_adaptation(adaptation);
+            let report = sched
+                .repair(&cluster, &code, &mut placements, &backend, &FifoPolicy, 2048)
+                .unwrap();
+            assert_eq!(report.actions.len(), 1, "{:?}", report.unschedulable);
+            let a = report.actions[0];
+            assert_eq!((a.object, a.position), (object, 3));
+            let rebuilt = cluster
+                .node(a.new_node)
+                .peek(BlockKey::coded(object, 3))
+                .unwrap()
+                .unwrap();
+            (report.times[0], (*rebuilt).clone())
+        };
+        let (t_static, b_static) = run(Adaptation::Off);
+        let (t_adaptive, b_adaptive) = run(Adaptation::On);
+        assert_eq!(
+            b_static, b_adaptive,
+            "every independent k-subset regenerates the same lost block"
+        );
+        assert!(
+            t_adaptive < t_static,
+            "adaptive {t_adaptive:?} must beat static {t_static:?}"
+        );
     }
 
     #[test]

@@ -257,4 +257,24 @@ mod tests {
         // after the charge completes the lane frees exactly at `now`
         assert_eq!(m.backlog(), Duration::ZERO);
     }
+
+    #[test]
+    fn backlog_sees_reserved_but_unslept_charges() {
+        // charge_reserve books the lane without sleeping — exactly the
+        // state a plan-boundary LoadSnapshot reads on a busy node.
+        let clock = SimClock::handle();
+        let m = CpuMeter::new(clock.clone(), UniformCost::handle(), 0);
+        let (cost, done) = m.charge_reserve(&GfWork::mac(250_000_000)); // 1 s
+        assert_eq!(cost, Duration::from_secs(1));
+        assert_eq!(done, Some(Duration::from_secs(1)));
+        assert_eq!(m.backlog(), Duration::from_secs(1));
+        // a second reservation queues FIFO behind the first
+        m.charge_reserve(&GfWork::mac(125_000_000)); // +0.5 s
+        assert_eq!(m.backlog(), Duration::from_millis(1500));
+        assert_eq!(clock.now(), Duration::ZERO, "backlog must not sleep");
+        // zero-priced charges never touch the lanes
+        let z = CpuMeter::new(clock, ZeroCost::handle(), 1);
+        z.charge_reserve(&GfWork::mac(1 << 30));
+        assert_eq!(z.backlog(), Duration::ZERO);
+    }
 }

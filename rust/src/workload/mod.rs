@@ -29,7 +29,7 @@ use std::sync::Arc;
 
 use crate::backend::BackendHandle;
 use crate::clock::{Clock, SimClock};
-use crate::cluster::{Cluster, ClusterSpec, CongestionSpec, NodeId};
+use crate::cluster::{Cluster, ClusterSpec, CongestionSpec, NodeId, RuntimeKind};
 use crate::codes::rapidraid::RapidRaidCode;
 use crate::codes::{CodeView, TopologyCode};
 use crate::coordinator::batch::{pipeline_jobs, rotated_chain, run_batch};
@@ -89,7 +89,10 @@ pub struct LongRunConfig {
     /// Concurrent-repair bound of the scheduler.
     pub max_concurrent_repairs: usize,
     /// Chain/newcomer ranking policy (ingest placement is fixed by the
-    /// rotated layout; this drives repair newcomer selection).
+    /// rotated layout; this drives repair newcomer selection —
+    /// [`PolicyKind::Adaptive`] additionally turns on the scheduler's
+    /// straggler-aware repair sourcing, see
+    /// [`RepairScheduler::adaptation`](crate::repair::RepairScheduler)).
     pub policy: PolicyKind,
     /// Per-node CPU profiles: empty = free compute (`ZeroCost`, the PR 3
     /// behavior); one entry = uniform hardware at that speed; several =
@@ -117,6 +120,11 @@ pub struct LongRunConfig {
     /// throughput, both as the uniform model and as the baseline profiles
     /// scale over.
     pub calibration: Option<UniformCost>,
+    /// Execution runtime the cluster is driven with
+    /// ([`RuntimeKind::Auto`] resolves to the multiplexed fast path under
+    /// the trace's `SimClock`; `Threaded` forces the thread-per-node
+    /// dataplane for parity runs).
+    pub runtime: RuntimeKind,
 }
 
 impl LongRunConfig {
@@ -147,6 +155,7 @@ impl LongRunConfig {
             p_cpu_churn: 0.25,
             topology: Topology::Chain,
             calibration: None,
+            runtime: RuntimeKind::Auto,
         }
     }
 
@@ -180,6 +189,12 @@ impl LongRunConfig {
     /// [`LongRunConfig::calibration`]).
     pub fn with_calibration(mut self, rates: UniformCost) -> Self {
         self.calibration = Some(rates);
+        self
+    }
+
+    /// Substitute the execution runtime (see [`LongRunConfig::runtime`]).
+    pub fn with_runtime(mut self, runtime: RuntimeKind) -> Self {
+        self.runtime = runtime;
         self
     }
 }
@@ -289,7 +304,9 @@ pub fn run_long_run(
     cfg.topology.validate()?;
 
     let clock = SimClock::handle();
-    let mut spec = ClusterSpec::tpc(cfg.nodes).with_clock(clock.clone());
+    let mut spec = ClusterSpec::tpc(cfg.nodes)
+        .with_clock(clock.clone())
+        .with_runtime(cfg.runtime);
     // Baseline rates the cost model scales over: measured calibration when
     // provided, the EC2-era constants otherwise.
     let base_rates = cfg
@@ -347,7 +364,8 @@ pub fn run_long_run(
 
     let sched = RepairScheduler::new(cfg.strategy, cfg.trigger)
         .with_max_concurrent(cfg.max_concurrent_repairs)
-        .with_topology(cfg.topology);
+        .with_topology(cfg.topology)
+        .with_adaptation(cfg.policy.adaptation());
     let mut rng = SplitMix64::new(cfg.seed);
     let mut down: Vec<(NodeId, u64)> = Vec::new(); // (node, revive epoch)
     let mut congested: Option<NodeId> = None;
@@ -551,7 +569,33 @@ mod tests {
             p_cpu_churn: 0.0,
             topology: Topology::Chain,
             calibration: None,
+            runtime: RuntimeKind::Auto,
         }
+    }
+
+    #[test]
+    fn adaptive_policy_trace_repairs_and_stays_decodable() {
+        // The adaptive axis end to end: snapshot-ranked newcomers plus
+        // straggler-aware repair sourcing, with congestion churn on, must
+        // still regenerate every block byte-identically — and twice the
+        // same seed must follow the identical schedule.
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let mut cfg = tiny().with_profiles(NodeProfile::ec2_mix());
+        cfg.policy = PolicyKind::Adaptive;
+        cfg.p_cpu_churn = 1.0;
+        let a = run_long_run(&cfg, &backend, None).unwrap();
+        assert!(a.crashes_total >= 1);
+        assert!(a.repairs_total >= 1, "{}", a.summary());
+        assert!(a.all_decodable(), "{}", a.summary());
+        let b = run_long_run(&cfg, &backend, None).unwrap();
+        let shape = |r: &LongRunReport| {
+            r.epochs
+                .iter()
+                .map(|e| (e.epoch, e.crashed.clone(), e.revived.clone(), e.repaired))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(shape(&a), shape(&b), "adaptive trace must be seed-deterministic");
+        assert_eq!(a.virtual_elapsed, b.virtual_elapsed);
     }
 
     #[test]

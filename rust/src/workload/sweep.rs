@@ -44,8 +44,11 @@ pub struct SweepConfig {
 
 impl SweepConfig {
     /// The full default grid: Eager / Lazy(2) / ReliabilityBudget(2×9)
-    /// triggers × Fifo / CongestionAware policies × free / uniform /
-    /// heterogeneous compute × chain / tree:2 shapes — 36 traces.
+    /// triggers × Fifo / CongestionAware / Adaptive policies × free /
+    /// uniform / heterogeneous compute × chain / tree:2 shapes — 54
+    /// traces. The Adaptive column is the control-plane axis: same
+    /// schedule as its static neighbors, but newcomer ranking and repair
+    /// sourcing read plan-boundary [`LoadSnapshot`](crate::control::LoadSnapshot)s.
     pub fn default_grid(base: LongRunConfig) -> Self {
         Self {
             base,
@@ -57,7 +60,11 @@ impl SweepConfig {
                     p_node: 0.05,
                 },
             ],
-            policies: vec![PolicyKind::Fifo, PolicyKind::CongestionAware],
+            policies: vec![
+                PolicyKind::Fifo,
+                PolicyKind::CongestionAware,
+                PolicyKind::Adaptive,
+            ],
             profiles: vec![
                 ("free", Vec::new()),
                 ("uniform", vec![NodeProfile::EC2_SMALL]),
@@ -67,8 +74,9 @@ impl SweepConfig {
         }
     }
 
-    /// CI smoke grid: one trigger, both policies, free vs heterogeneous
-    /// compute, chain vs tree — 8 short traces.
+    /// CI smoke grid: one trigger, all three policies (static pair +
+    /// adaptive), free vs heterogeneous compute, chain vs tree — 12 short
+    /// traces.
     pub fn smoke() -> Self {
         let mut grid = Self::default_grid(LongRunConfig::smoke());
         grid.triggers = vec![RepairTrigger::Eager];
@@ -112,12 +120,20 @@ pub fn run_sweep(
     let wall = RealClock::new();
     let cells =
         cfg.triggers.len() * cfg.policies.len() * cfg.profiles.len() * cfg.topologies.len();
+    let policies = cfg
+        .policies
+        .iter()
+        .map(|p| p.name())
+        .collect::<Vec<_>>()
+        .join(",");
     let mut json = BenchJson::new("sweep")
         .param("nodes", cfg.base.nodes)
         .param("objects", cfg.base.objects)
         .param("virtual_secs", cfg.base.virtual_secs)
         .param("seed", cfg.base.seed)
-        .param("cells", cells);
+        .param("cells", cells)
+        .param("policies", policies)
+        .param("runtime", cfg.base.runtime.name());
     writeln!(
         out,
         "# sweep — {} nodes, {} objects, {} virtual secs per cell, seed {}",
@@ -209,6 +225,7 @@ mod tests {
             p_cpu_churn: 0.0,
             topology: Topology::Chain,
             calibration: None,
+            runtime: crate::cluster::RuntimeKind::Auto,
         }
     }
 
@@ -216,20 +233,26 @@ mod tests {
     fn tiny_grid_covers_every_cell_losslessly() {
         let backend: BackendHandle = Arc::new(NativeBackend::new());
         let mut grid = SweepConfig::default_grid(tiny_base());
-        // keep the test quick: 1 trigger × 2 policies × 2 costs × 2 shapes
+        // keep the test quick: 1 trigger × 3 policies × 2 costs × 2 shapes
         grid.triggers = vec![RepairTrigger::Eager];
         grid.profiles = vec![("free", Vec::new()), ("ec2-mix", NodeProfile::ec2_mix())];
         let mut out = Vec::new();
         let (rows, json) = run_sweep(&grid, &backend, &mut out).unwrap();
-        assert_eq!(rows.len(), 8);
+        assert_eq!(rows.len(), 12);
         for r in &rows {
             assert!(r.report.all_decodable(), "{}", r.report.summary());
             assert!(r.report.crashes_total >= 1);
         }
         assert!(rows.iter().any(|r| r.topology == Topology::Tree { fanout: 2 }));
-        assert_eq!(json.series.len(), 8);
+        assert!(rows.iter().any(|r| r.policy == PolicyKind::Adaptive));
+        assert_eq!(json.series.len(), 12);
+        assert!(json
+            .params
+            .iter()
+            .any(|(k, v)| k == "policies" && v.contains("adaptive")));
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("eager") && text.contains("congestion-aware"), "{text}");
+        assert!(text.contains("adaptive"), "{text}");
         assert!(text.contains("ec2-mix"));
         assert!(text.contains("tree:2") && text.contains("chain"), "{text}");
     }

@@ -14,11 +14,13 @@ use std::time::Duration;
 
 use rapidraid::backend::{BackendHandle, NativeBackend};
 use rapidraid::clock::SimClock;
-use rapidraid::cluster::{Cluster, ClusterSpec};
+use rapidraid::cluster::{Cluster, ClusterSpec, CongestionSpec};
 use rapidraid::codes::rapidraid::RapidRaidCode;
 use rapidraid::codes::TopologyCode;
+use rapidraid::coordinator::batch::place_and_build_pipeline_jobs;
 use rapidraid::coordinator::{
-    ingest_object, survey_coded, PipelineJob, PlanExecutor, Topology,
+    ingest_object, run_batch, run_batch_adaptive, survey_coded, LoadAwarePolicy, PipelineJob,
+    PlanExecutor, Topology,
 };
 use rapidraid::gf::Gf256;
 use rapidraid::metrics::Recorder;
@@ -155,6 +157,143 @@ fn traced_run_is_tick_and_byte_identical_to_untraced() {
         "tracing shifted virtual end-to-end times"
     );
     assert_eq!(base.spans, traced.spans, "tracing shifted per-stage spans");
+}
+
+#[test]
+fn adaptation_off_driver_is_bit_identical_to_static_batch() {
+    // `Adaptation::Off` is a hard identity, not an approximation: the
+    // adaptive batch driver run with an Off policy must produce the same
+    // placements, the same virtual times and the same coded bytes as the
+    // explicit place-then-run static path — no snapshots, no re-ranking,
+    // not one tick moved.
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+    let objects = [ObjectId(931), ObjectId(932)];
+    let block = 32 * 1024;
+    let coded_bytes = |cluster: &Cluster, chain: &[usize], object: ObjectId| -> Vec<Vec<u8>> {
+        chain
+            .iter()
+            .enumerate()
+            .map(|(pos, &node)| {
+                (*cluster
+                    .node(node)
+                    .peek(BlockKey::coded(object, pos))
+                    .unwrap()
+                    .unwrap())
+                .clone()
+            })
+            .collect()
+    };
+
+    let (static_meta, adaptive_meta) = with_timeout(240, || {
+        // static path: place, then run, as PR 9 callers do
+        let cluster = Cluster::start(ClusterSpec::tpc(12).with_clock(SimClock::handle()));
+        let policy = LoadAwarePolicy::default(); // Adaptation::Off
+        let placed = place_and_build_pipeline_jobs(
+            &cluster,
+            &policy,
+            &code,
+            &objects,
+            Topology::Chain,
+            BUF,
+            block,
+        )
+        .unwrap();
+        let jobs: Vec<_> = placed.iter().map(|(_, j)| j.clone()).collect();
+        let times = run_batch(&cluster, &backend, &jobs).unwrap();
+        let static_meta: Vec<(Vec<usize>, Duration, Vec<Vec<u8>>)> = placed
+            .iter()
+            .zip(&times)
+            .map(|((p, _), &t)| (p.chain.clone(), t, coded_bytes(&cluster, &p.chain, p.object)))
+            .collect();
+
+        // Off-mode adaptive driver, one wave spanning the whole batch
+        let cluster = Cluster::start(ClusterSpec::tpc(12).with_clock(SimClock::handle()));
+        let runs = run_batch_adaptive(
+            &cluster,
+            &backend,
+            &LoadAwarePolicy::default(),
+            &code,
+            &objects,
+            Topology::Chain,
+            BUF,
+            block,
+            objects.len(),
+        )
+        .unwrap();
+        let adaptive_meta: Vec<(Vec<usize>, Duration, Vec<Vec<u8>>)> = runs
+            .iter()
+            .map(|r| {
+                (
+                    r.placement.chain.clone(),
+                    r.makespan,
+                    coded_bytes(&cluster, &r.placement.chain, r.placement.object),
+                )
+            })
+            .collect();
+        (static_meta, adaptive_meta)
+    });
+    assert_eq!(
+        static_meta, adaptive_meta,
+        "Off-mode adaptive driver diverged from the static path"
+    );
+}
+
+#[test]
+fn adaptive_run_same_seed_same_bytes_and_same_virtual_times() {
+    // With the loop closed (snapshots, re-ranking, shape auto-tuning) the
+    // run must still be a pure function of the seed: same congested
+    // cluster, same objects, twice ⇒ identical placements, shapes,
+    // makespans and coded bytes.
+    let run = || -> (Vec<(Vec<usize>, String, Duration)>, Vec<Vec<u8>>) {
+        let cluster = Cluster::start(ClusterSpec::tpc(12).with_clock(SimClock::handle()));
+        cluster.congest(
+            1,
+            &CongestionSpec {
+                bytes_per_sec: 12.5e6,
+                extra_latency: Duration::ZERO,
+                jitter: Duration::ZERO,
+            },
+        );
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let objects = [ObjectId(941), ObjectId(942)];
+        let runs = run_batch_adaptive(
+            &cluster,
+            &backend,
+            &LoadAwarePolicy::adaptive(),
+            &code,
+            &objects,
+            Topology::Chain,
+            BUF,
+            32 * 1024,
+            1, // re-rank between the two waves
+        )
+        .unwrap();
+        let mut meta = Vec::new();
+        let mut coded = Vec::new();
+        for r in &runs {
+            meta.push((r.placement.chain.clone(), r.topology.to_string(), r.makespan));
+            for (pos, &node) in r.placement.chain.iter().enumerate() {
+                let block = cluster
+                    .node(node)
+                    .peek(BlockKey::coded(r.placement.object, pos))
+                    .unwrap()
+                    .unwrap();
+                coded.push((*block).clone());
+            }
+        }
+        (meta, coded)
+    };
+    let (a, b) = with_timeout(240, || (run(), run()));
+    assert_eq!(a.0, b.0, "adaptive placements/shapes/times diverged");
+    assert_eq!(a.1, b.1, "adaptive coded bytes diverged");
+    // the congested node must not host any slot (spares exist)
+    assert!(
+        a.0.iter().all(|(chain, _, _)| !chain.contains(&1)),
+        "straggler placed: {:?}",
+        a.0
+    );
 }
 
 #[test]

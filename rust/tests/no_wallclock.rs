@@ -17,6 +17,7 @@ const FORBIDDEN: &[&str] = &["Instant::now", "thread::sleep", "SystemTime"];
 // it ever moves out of the coordinator tree.
 const DIRS: &[&str] = &[
     "rust/src/cluster",
+    "rust/src/control",
     "rust/src/coordinator",
     "rust/src/coordinator/topology",
     "rust/src/repair",

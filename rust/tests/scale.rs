@@ -185,6 +185,60 @@ fn concurrent_batch_ticks_match_across_runtimes() {
 }
 
 #[test]
+fn adaptive_batch_ticks_match_across_runtimes() {
+    // The closed control loop reads NIC/CPU state at plan boundaries; those
+    // reads — and hence every ranking, shape choice, placement and virtual
+    // makespan — must be runtime-invariant like every other observable.
+    use rapidraid::cluster::CongestionSpec;
+    use rapidraid::coordinator::{run_batch_adaptive, LoadAwarePolicy};
+    let run = |kind: RuntimeKind| -> Vec<(Vec<usize>, String, Duration)> {
+        let cluster = Cluster::start(
+            ClusterSpec::tpc(12)
+                .with_clock(SimClock::handle())
+                .with_runtime(kind),
+        );
+        cluster.congest(
+            1,
+            &CongestionSpec {
+                bytes_per_sec: 12.5e6,
+                extra_latency: Duration::ZERO,
+                jitter: Duration::ZERO,
+            },
+        );
+        let code = RapidRaidCode::<Gf256>::with_seed(8, 4, 7).unwrap();
+        let backend: BackendHandle = Arc::new(NativeBackend::new());
+        let objects = [ObjectId(89_000), ObjectId(89_001), ObjectId(89_002)];
+        run_batch_adaptive(
+            &cluster,
+            &backend,
+            &LoadAwarePolicy::adaptive(),
+            &code,
+            &objects,
+            Topology::Chain,
+            4 * 1024,
+            16 * 1024,
+            1, // re-rank between every wave
+        )
+        .unwrap()
+        .iter()
+        .map(|r| (r.placement.chain.clone(), r.topology.to_string(), r.makespan))
+        .collect()
+    };
+    let (threaded, multiplexed) = with_timeout(240, || {
+        (run(RuntimeKind::Threaded), run(RuntimeKind::Multiplexed))
+    });
+    assert_eq!(
+        threaded, multiplexed,
+        "adaptive batch placements/shapes/ticks diverged across runtimes"
+    );
+    assert!(threaded.iter().all(|(_, _, d)| *d > Duration::ZERO));
+    assert!(
+        threaded.iter().all(|(chain, _, _)| !chain.contains(&1)),
+        "straggler placed: {threaded:?}"
+    );
+}
+
+#[test]
 fn scale_acceptance_2048_nodes_one_virtual_day_in_wall_seconds() {
     // The floors of the scale contract (≥ 2,000 nodes, ≥ 1 virtual day,
     // < 60 s wall) at a work level a debug test build handles comfortably;

@@ -1,0 +1,70 @@
+//! Acceptance for the adaptive control plane on the `straggler-sim`
+//! preset: on a deliberately lopsided pool (ec2-mix compute, two NICs
+//! clamped 10x, one thinclient CPU — all inside the identity placement)
+//! the closed loop must beat **every** static pipeline shape for both
+//! paper code sizes, and the whole comparison must be a pure function of
+//! `(block_bytes, seed)` — run it twice, get tick-identical rows.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapidraid::backend::{BackendHandle, NativeBackend};
+use rapidraid::bench_scenarios::{straggler_sim, StragglerSimRow};
+use rapidraid::cluster::RuntimeKind;
+use rapidraid::util::with_timeout;
+
+const BLOCK: usize = 32 * 1024;
+const SEED: u64 = 5;
+
+fn run(runtime: RuntimeKind) -> Vec<StragglerSimRow> {
+    let backend: BackendHandle = Arc::new(NativeBackend::new());
+    let (rows, _report) =
+        straggler_sim(&backend, BLOCK, SEED, runtime, &mut Vec::<u8>::new()).unwrap();
+    rows
+}
+
+#[test]
+fn adaptive_beats_every_static_shape_for_both_code_sizes() {
+    let rows = with_timeout(240, || run(RuntimeKind::Auto));
+    // 2 code sizes × (chain + tree:2 + hybrid:4:2 + adaptive)
+    assert_eq!(rows.len(), 8);
+    for (n, k) in [(11usize, 8usize), (22, 16)] {
+        let adaptive = rows
+            .iter()
+            .find(|r| r.n == n && r.adaptive)
+            .expect("adaptive cell")
+            .makespan;
+        assert!(adaptive > Duration::ZERO);
+        let statics: Vec<&StragglerSimRow> =
+            rows.iter().filter(|r| r.n == n && !r.adaptive).collect();
+        assert_eq!(statics.len(), 3, "chain, tree:2, hybrid:4:2");
+        for r in statics {
+            assert!(
+                adaptive < r.makespan,
+                "(n={n},k={k}) adaptive {adaptive:?} did not beat static {} at {:?}",
+                r.cell,
+                r.makespan
+            );
+        }
+    }
+}
+
+#[test]
+fn straggler_sim_rows_are_deterministic_per_seed() {
+    let (a, b) = with_timeout(240, || (run(RuntimeKind::Auto), run(RuntimeKind::Auto)));
+    assert_eq!(a, b, "straggler-sim rows diverged between identical runs");
+}
+
+#[test]
+fn straggler_sim_rows_agree_across_runtimes() {
+    // The adaptive loop reads load snapshots at plan boundaries; those
+    // boundaries — and hence every ranking, shape choice and makespan —
+    // must be runtime-invariant like the rest of the virtual timeline.
+    let (threaded, multiplexed) = with_timeout(360, || {
+        (run(RuntimeKind::Threaded), run(RuntimeKind::Multiplexed))
+    });
+    assert_eq!(
+        threaded, multiplexed,
+        "straggler-sim rows diverged across runtimes"
+    );
+}
